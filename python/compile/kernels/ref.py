@@ -1,0 +1,56 @@
+"""Pure-jnp correctness oracles for the Pallas kernels and the L2 model.
+
+Everything here is the *reference semantics*: no Pallas, no tiling — the
+tests assert the kernels match these to float tolerance.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def matmul_ref(a, b):
+    """f32-accumulated matmul reference."""
+    out_dtype = jnp.promote_types(a.dtype, b.dtype)
+    return jnp.dot(
+        a.astype(jnp.float32), b.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(out_dtype)
+
+
+def im2col(x, kh, kw, stride):
+    """Extract conv patches: (B, H, W, C) -> (B*OH*OW, C*kh*kw), SAME pad."""
+    b, h, w, c = x.shape
+    patches = lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    oh, ow = patches.shape[1], patches.shape[2]
+    # conv_general_dilated_patches yields channel-major (C*kh*kw) features.
+    return patches.reshape(b * oh * ow, c * kh * kw), (oh, ow)
+
+
+def conv2d_ref(x, w, stride):
+    """SAME-padded conv reference: x (B,H,W,C), w (kh,kw,C,OC)."""
+    return lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def group_lasso(w):
+    """PruneTrain channel regularizer: sum of per-output-channel L2 norms
+    of a conv weight (kh,kw,C,OC)."""
+    flat = w.reshape(-1, w.shape[-1])
+    return jnp.sum(jnp.sqrt(jnp.sum(flat * flat, axis=0) + 1e-12))
+
+
+def channel_l2(w):
+    """Per-output-channel L2 norms (the pruning signal)."""
+    flat = w.reshape(-1, w.shape[-1])
+    return jnp.sqrt(jnp.sum(flat * flat, axis=0) + 1e-12)

@@ -1,0 +1,141 @@
+"""L2 — PruneTrain in JAX: a small CNN with group-lasso channel
+regularization whose convolutions run through the L1 FlexSA Pallas kernel
+(im2col + systolic-wave GEMM).
+
+This is the build-time half of the end-to-end driver: ``aot.py`` lowers
+``train_step`` / ``infer_step`` / ``channel_norms`` to HLO text once, and
+the rust trainer (rust/src/trainer) executes them through PJRT for a few
+hundred steps on synthetic data, pruning channels at intervals from the
+``channel_norms`` signal — producing a *real* prune-while-train channel
+trajectory for the simulator. Python never runs at that point.
+
+Architecture (input 16x16x3, NHWC):
+    conv1 3x3/1  -> C1    conv2 3x3/2 -> C2   conv3 3x3/1 -> C3
+    conv4 3x3/2  -> C4    global avg pool     fc -> 10 classes
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import flexsa_gemm, ref
+
+# Channel widths (prunable groups) and strides of the four conv layers.
+CHANNELS = (32, 64, 64, 128)
+STRIDES = (1, 2, 1, 2)
+INPUT_HW = 16
+INPUT_C = 3
+NUM_CLASSES = 10
+# PruneTrain group-lasso strength, applied as a *proximal* shrinkage
+# operator after each SGD step (w <- w * max(0, 1 - lr*LASSO/||w||_ch)).
+# The proximal form zeroes doomed channels exactly, which is what lets a
+# few-hundred-step end-to-end run exhibit real channel pruning.
+LASSO = 0.1
+MOMENTUM = 0.9
+
+
+def param_shapes():
+    """Ordered (name, shape) list — the rust trainer mirrors this order."""
+    shapes = []
+    cin = INPUT_C
+    for i, (c, _) in enumerate(zip(CHANNELS, STRIDES)):
+        shapes.append((f"conv{i}_w", (3, 3, cin, c)))
+        shapes.append((f"conv{i}_b", (c,)))
+        cin = c
+    shapes.append(("fc_w", (CHANNELS[-1], NUM_CLASSES)))
+    shapes.append(("fc_b", (NUM_CLASSES,)))
+    return shapes
+
+
+def init_params(seed=0):
+    """He-initialized parameter list (plain list of arrays, AOT-friendly)."""
+    rng = jax.random.PRNGKey(seed)
+    params = []
+    for _, shape in param_shapes():
+        rng, sub = jax.random.split(rng)
+        if len(shape) > 1:
+            fan_in = 1
+            for d in shape[:-1]:
+                fan_in *= d
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32)
+                * jnp.sqrt(2.0 / fan_in)
+            )
+        else:
+            params.append(jnp.zeros(shape, jnp.float32))
+    return params
+
+
+def conv_pallas(x, w, b, stride):
+    """SAME conv through im2col + the FlexSA wave GEMM."""
+    kh, kw, cin, cout = w.shape
+    cols, (oh, ow) = ref.im2col(x, kh, kw, stride)
+    # conv_general_dilated_patches emits channel-major (C, kh, kw) features.
+    wm = w.transpose(2, 0, 1, 3).reshape(cin * kh * kw, cout)
+    out = flexsa_gemm.matmul(cols, wm)
+    return out.reshape(x.shape[0], oh, ow, cout) + b
+
+
+def forward(params, x):
+    """Logits for a batch of NHWC images."""
+    h = x
+    for i, stride in enumerate(STRIDES):
+        w, b = params[2 * i], params[2 * i + 1]
+        h = jax.nn.relu(conv_pallas(h, w, b, stride))
+    h = jnp.mean(h, axis=(1, 2))  # global average pool
+    fc_w, fc_b = params[-2], params[-1]
+    return flexsa_gemm.matmul(h, fc_w) + fc_b
+
+
+def loss_fn(params, x, y):
+    """Cross-entropy (the group lasso is applied proximally in
+    `train_step`, not through the gradient)."""
+    logits = forward(params, x)
+    return -jnp.mean(
+        jnp.sum(jax.nn.log_softmax(logits) * jax.nn.one_hot(y, NUM_CLASSES), axis=-1)
+    )
+
+
+def prox_group_lasso(w, shrink):
+    """Proximal operator of `shrink * sum_ch ||w_ch||`: scale each output
+    channel by max(0, 1 - shrink/||w_ch||) — exact zeros for dead channels."""
+    norms = ref.channel_l2(w)
+    scale = jnp.maximum(0.0, 1.0 - shrink / norms)
+    return w * scale
+
+
+def train_step(params, momentum, x, y, lr):
+    """One SGD-with-momentum step. Returns (params', momentum', loss).
+
+    Flat signatures (lists of arrays) keep the AOT interface simple for
+    the rust runtime: inputs = params + momentum + [x, y, lr].
+    """
+    loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+    new_m = [MOMENTUM * m + g for m, g in zip(momentum, grads)]
+    new_p = [p - lr * m for p, m in zip(params, new_m)]
+    # PruneTrain regularization: proximal group-lasso shrink on the conv
+    # weights' output channels.
+    for i in range(len(STRIDES)):
+        new_p[2 * i] = prox_group_lasso(new_p[2 * i], lr * LASSO)
+    return new_p, new_m, loss
+
+
+def infer_step(params, x):
+    """Logits only (serving-style entry point)."""
+    return forward(params, x)
+
+
+def channel_norms(params):
+    """Concatenated per-output-channel L2 norms of all conv layers — the
+    pruning signal the rust trainer thresholds at each pruning interval."""
+    return jnp.concatenate([ref.channel_l2(params[2 * i]) for i in range(len(STRIDES))])
+
+
+def synth_batch(seed, batch):
+    """Synthetic classification data with learnable class structure:
+    class-dependent mean patterns + noise (loss can actually decrease)."""
+    rng = jax.random.PRNGKey(seed)
+    r1, r2, r3 = jax.random.split(rng, 3)
+    y = jax.random.randint(r1, (batch,), 0, NUM_CLASSES)
+    protos = jax.random.normal(r2, (NUM_CLASSES, INPUT_HW, INPUT_HW, INPUT_C))
+    x = protos[y] + 0.5 * jax.random.normal(r3, (batch, INPUT_HW, INPUT_HW, INPUT_C))
+    return x.astype(jnp.float32), y.astype(jnp.int32)

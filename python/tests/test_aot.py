@@ -1,0 +1,65 @@
+"""AOT path: lowering produces parseable HLO text with the agreed
+entry-point contract (input/output arity), and meta.txt matches."""
+
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+def test_train_step_lowers_to_hlo_text():
+    text = aot.to_hlo_text(aot.lower_train_step())
+    assert text.startswith("HloModule")
+    n = len(model.param_shapes())
+    # 2n params+momenta in, plus x, y, lr.
+    assert f"parameter({2 * n + 2})" in text
+    assert "parameter(0)" in text
+
+
+def test_infer_and_norms_lower():
+    for lowered in [aot.lower_infer_step(), aot.lower_channel_norms()]:
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule")
+        assert "ROOT" in text
+
+
+def test_gemm_fw_lowering_contains_loop():
+    # interpret-mode pallas lowers the wave grid to an HLO while loop.
+    text = aot.to_hlo_text(aot.lower_gemm_fw(512, 256, 384))
+    assert text.startswith("HloModule")
+    assert "while" in text
+
+
+def test_meta_file_contract(tmp_path):
+    aot.write_meta(str(tmp_path))
+    meta = (tmp_path / "meta.txt").read_text().splitlines()
+    kv = {}
+    params = []
+    for line in meta:
+        parts = line.split()
+        if parts[0] == "param":
+            params.append((parts[1], tuple(int(d) for d in parts[2:])))
+        else:
+            kv[parts[0]] = parts[1:]
+    assert int(kv["batch"][0]) == aot.BATCH
+    assert int(kv["input_hw"][0]) == model.INPUT_HW
+    assert params == [(n, tuple(s)) for n, s in model.param_shapes()]
+
+
+@pytest.mark.slow
+def test_artifacts_dir_when_built():
+    # When `make artifacts` has run, the contract files must all exist.
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    if not os.path.isdir(art):
+        pytest.skip("artifacts not built")
+    for f in [
+        "train_step.hlo.txt",
+        "infer_step.hlo.txt",
+        "channel_norms.hlo.txt",
+        "gemm_fw.hlo.txt",
+        "meta.txt",
+    ]:
+        path = os.path.join(art, f)
+        assert os.path.isfile(path), f
+        assert os.path.getsize(path) > 0, f

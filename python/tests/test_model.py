@@ -1,0 +1,92 @@
+"""L2 model correctness: conv-through-kernel parity, shapes, training
+dynamics (loss decreases; group lasso shrinks channel norms)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def test_param_shapes_consistent():
+    shapes = model.param_shapes()
+    params = model.init_params(0)
+    assert len(params) == len(shapes)
+    for p, (_, s) in zip(params, shapes):
+        assert p.shape == s
+    # 4 convs x (w, b) + fc (w, b)
+    assert len(shapes) == 2 * len(model.STRIDES) + 2
+
+
+def test_conv_pallas_matches_lax_conv():
+    rng = np.random.RandomState(0)
+    x = rng.randn(2, 16, 16, 3).astype(np.float32)
+    w = rng.randn(3, 3, 3, 8).astype(np.float32)
+    for stride in (1, 2):
+        got = model.conv_pallas(jnp.array(x), jnp.array(w), jnp.zeros(8), stride)
+        want = ref.conv2d_ref(x, w, stride)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_forward_shapes():
+    params = model.init_params(0)
+    x, y = model.synth_batch(0, 8)
+    logits = model.forward(params, x)
+    assert logits.shape == (8, model.NUM_CLASSES)
+    assert np.all(np.isfinite(np.asarray(logits)))
+    del y
+
+
+def test_loss_finite_and_grads_nonzero():
+    params = model.init_params(0)
+    x, y = model.synth_batch(1, 8)
+    loss, grads = jax.value_and_grad(model.loss_fn)(params, x, y)
+    assert np.isfinite(float(loss))
+    total = sum(float(jnp.sum(jnp.abs(g))) for g in grads)
+    assert total > 0.0
+
+
+@pytest.mark.slow
+def test_training_reduces_loss():
+    params = model.init_params(0)
+    momentum = [jnp.zeros_like(p) for p in params]
+    step = jax.jit(model.train_step)
+    losses = []
+    for s in range(12):
+        x, y = model.synth_batch(s % 4, 32)
+        params, momentum, loss = step(params, momentum, x, y, jnp.float32(0.05))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+
+
+@pytest.mark.slow
+def test_group_lasso_shrinks_channel_norms():
+    # With a large lasso weight and zero-information data, channel norms
+    # must decay — the mechanism PruneTrain uses to select channels.
+    params = model.init_params(1)
+    momentum = [jnp.zeros_like(p) for p in params]
+    before = np.asarray(model.channel_norms(params))
+
+    orig = model.LASSO
+    model.LASSO = 5e-2
+    try:
+        step = jax.jit(model.train_step)
+        x = jnp.zeros((16, model.INPUT_HW, model.INPUT_HW, model.INPUT_C))
+        y = jnp.zeros((16,), jnp.int32)
+        for _ in range(10):
+            params, momentum, _ = step(params, momentum, x, y, jnp.float32(0.05))
+    finally:
+        model.LASSO = orig
+    after = np.asarray(model.channel_norms(params))
+    assert after.mean() < before.mean()
+    assert after.shape == (sum(model.CHANNELS),)
+
+
+def test_synth_batch_deterministic_and_classy():
+    x1, y1 = model.synth_batch(7, 16)
+    x2, y2 = model.synth_batch(7, 16)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    np.testing.assert_allclose(np.asarray(x1), np.asarray(x2))
+    assert int(y1.min()) >= 0 and int(y1.max()) < model.NUM_CLASSES

@@ -1,0 +1,20 @@
+//! Bench + regeneration of paper Fig 3: ResNet50 prune-while-train
+//! timeline on 1G1C (both strengths). Prints the figure rows and times the
+//! full pipeline (schedule generation + 10 iteration simulations).
+
+use flexsa::bench_harness::Bencher;
+use flexsa::pruning::Strength;
+use flexsa::report::figures;
+
+fn main() {
+    let threads = flexsa::coordinator::default_threads();
+    for strength in Strength::BOTH {
+        let r = Bencher::quick().run(&format!("fig3/{}", strength.name()), || {
+            figures::fig3(strength, threads)
+        });
+        println!("{}", r.report());
+    }
+    println!();
+    println!("{}", figures::fig3(Strength::Low, threads).render());
+    println!("{}", figures::fig3(Strength::High, threads).render());
+}

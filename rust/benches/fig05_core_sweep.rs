@@ -1,0 +1,13 @@
+//! Bench + regeneration of paper Fig 5: naive core-size sweep (PE
+//! utilization and GBUF->LBUF traffic vs core granularity, ResNet50).
+
+use flexsa::bench_harness::Bencher;
+use flexsa::report::figures;
+
+fn main() {
+    let threads = flexsa::coordinator::default_threads();
+    let r = Bencher::quick().run("fig5/core_sweep", || figures::fig5(threads));
+    println!("{}", r.report());
+    println!();
+    println!("{}", figures::fig5(threads).render());
+}

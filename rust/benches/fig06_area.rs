@@ -1,0 +1,13 @@
+//! Bench + regeneration of paper Fig 6 and SEC V-B: area overheads of
+//! naive splitting, and FlexSA's itemized ~1% overhead.
+
+use flexsa::bench_harness::Bencher;
+use flexsa::report::figures;
+
+fn main() {
+    let r = Bencher::default().run("fig6/area_model", figures::fig6);
+    println!("{}", r.report());
+    println!();
+    println!("{}", figures::fig6().render());
+    println!("{}", figures::area_flexsa().render());
+}

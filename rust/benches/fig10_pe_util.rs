@@ -1,0 +1,25 @@
+//! Bench + regeneration of paper Fig 10 (a: ideal-DRAM PE utilization,
+//! b: HBM2 utilization + speedups) over the full evaluation grid
+//! (3 models x 2 schedules x 5 configs x 10 trajectory points).
+
+use flexsa::bench_harness::{black_box, Bencher};
+use flexsa::report::figures::{self, EvalGrid};
+use std::time::Instant;
+
+fn main() {
+    let threads = flexsa::coordinator::default_threads();
+    let t0 = Instant::now();
+    let grid = EvalGrid::compute(threads);
+    println!(
+        "grid/compute {:>37}   (600 iteration sims, {threads} threads)",
+        flexsa::util::fmt::seconds(t0.elapsed().as_secs_f64())
+    );
+    let r = Bencher::default().run("fig10/extract", || {
+        black_box((figures::fig10(&grid, true), figures::fig10(&grid, false)))
+    });
+    println!("{}", r.report());
+    println!();
+    println!("{}", figures::fig10(&grid, true).render());
+    println!("{}", figures::fig10(&grid, false).render());
+    println!("{}", figures::e2e_layers(&grid).render());
+}

@@ -1,0 +1,14 @@
+//! Bench + regeneration of paper Fig 11: on-chip (GBUF->LBUF) traffic of
+//! every configuration, normalized to 1G1C.
+
+use flexsa::bench_harness::{black_box, Bencher};
+use flexsa::report::figures::{self, EvalGrid};
+
+fn main() {
+    let threads = flexsa::coordinator::default_threads();
+    let grid = EvalGrid::compute(threads);
+    let r = Bencher::default().run("fig11/extract", || black_box(figures::fig11(&grid)));
+    println!("{}", r.report());
+    println!();
+    println!("{}", figures::fig11(&grid).render());
+}

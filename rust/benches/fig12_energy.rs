@@ -1,0 +1,14 @@
+//! Bench + regeneration of paper Fig 12: per-iteration dynamic energy
+//! breakdown (COMP / LBUF / GBUF / DRAM / OverCore) per configuration.
+
+use flexsa::bench_harness::{black_box, Bencher};
+use flexsa::report::figures::{self, EvalGrid};
+
+fn main() {
+    let threads = flexsa::coordinator::default_threads();
+    let grid = EvalGrid::compute(threads);
+    let r = Bencher::default().run("fig12/extract", || black_box(figures::fig12(&grid)));
+    println!("{}", r.report());
+    println!();
+    println!("{}", figures::fig12(&grid).render());
+}

@@ -1,0 +1,14 @@
+//! Bench + regeneration of paper Fig 13: FlexSA operating-mode breakdown
+//! (FW/VSW/HSW/ISW wave fractions) on 1G1F and 4G1F.
+
+use flexsa::bench_harness::{black_box, Bencher};
+use flexsa::report::figures::{self, EvalGrid};
+
+fn main() {
+    let threads = flexsa::coordinator::default_threads();
+    let grid = EvalGrid::compute(threads);
+    let r = Bencher::default().run("fig13/extract", || black_box(figures::fig13(&grid)));
+    println!("{}", r.report());
+    println!();
+    println!("{}", figures::fig13(&grid).render());
+}

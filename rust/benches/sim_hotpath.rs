@@ -1,0 +1,46 @@
+//! Hot-path microbenchmarks: the compile+simulate pipeline per GEMM and
+//! per whole-model iteration — the simulator throughput targets of
+//! EXPERIMENTS.md SEC Perf.
+
+use flexsa::bench_harness::{black_box, Bencher};
+use flexsa::compiler::compile_gemm;
+use flexsa::config::preset;
+use flexsa::gemm::{GemmShape, Phase};
+use flexsa::models::{resnet50, ChannelCounts};
+use flexsa::sim::{simulate_gemm, simulate_gemm_shape, simulate_model_epoch, SimOptions};
+
+fn main() {
+    let b = Bencher::default();
+    let opts = SimOptions::hbm2();
+
+    // Single-GEMM pipeline on all Table-I configs: materialized programs
+    // vs the streaming compile+simulate hot path (SEC Perf).
+    for name in ["1G1C", "1G4C", "4G4C", "1G1F", "4G1F"] {
+        let cfg = preset(name).unwrap();
+        let shape = GemmShape::new(100_352, 256, 1152); // resnet50-scale fwd
+        let mut waves = 0u64;
+        let r = b.run(&format!("gemm_sim_materialized/{name}"), || {
+            let c = compile_gemm(&cfg, shape, Phase::Forward);
+            let s = simulate_gemm(&cfg, &c, &opts);
+            waves = s.waves_by_mode.values().sum();
+            black_box(s.cycles)
+        });
+        println!("{}", r.report_throughput(waves as f64, "waves"));
+        let r = b.run(&format!("gemm_sim_streaming/{name}"), || {
+            black_box(simulate_gemm_shape(&cfg, shape, Phase::Forward, &opts).cycles)
+        });
+        println!("{}", r.report_throughput(waves as f64, "waves"));
+    }
+
+    // Whole-iteration simulation (161 GEMMs of ResNet50 at batch 32).
+    let model = resnet50();
+    let counts = ChannelCounts::baseline(&model);
+    for name in ["1G1C", "1G1F"] {
+        let cfg = preset(name).unwrap();
+        let n_gemms = model.gemms(model.default_batch, &counts).len();
+        let r = b.run(&format!("iter_sim/resnet50/{name}"), || {
+            black_box(simulate_model_epoch(&cfg, &model, &counts, &opts).gemm_cycles)
+        });
+        println!("{}", r.report_throughput(n_gemms as f64, "gemms"));
+    }
+}

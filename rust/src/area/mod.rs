@@ -1,0 +1,198 @@
+//! Area model (paper Fig 6 and §V-B), CACTI-lite at 32 nm.
+//!
+//! Components: PE array (mixed-precision FMA units), SRAM buffers (GBUF,
+//! LBUFs, OBUFs), and GBUF→LBUF datapath wiring. The paper's wiring method
+//! is followed: buses are spread over 5 metal layers at a 0.22 µm pitch and
+//! conservatively assumed not to overlap logic (DaDianNao's estimate).
+//! Splitting buffers duplicates decode/repeater logic per part.
+//!
+//! The FlexSA-specific overhead (§V-B) is itemized exactly as published:
+//! 1:2 path switches (0.03 mm²), the FMA upgrade of the top PE row of the
+//! lower cores (0.32 mm²), signal repeaters (0.25 mm²), and the 0.09 mm of
+//! added core width for the vertical output wires.
+
+use crate::config::{AcceleratorConfig, UnitKind};
+
+/// 32 nm technology constants.
+#[derive(Debug, Clone, Copy)]
+pub struct AreaModel {
+    /// Mixed-precision FMA PE, mm² (Zhang et al. ISCAS'18 scale).
+    pub pe_mm2: f64,
+    /// SRAM, mm² per MiB (incl. array overheads).
+    pub sram_mm2_per_mib: f64,
+    /// Decode/repeater duplication cost coefficient for splitting an SRAM
+    /// macro into parts (cost = frac × area × (√parts − 1); smaller parts
+    /// have proportionally cheaper decoders).
+    pub sram_split_frac: f64,
+    /// Wire pitch, µm (paper: 0.22).
+    pub wire_pitch_um: f64,
+    /// Metal layers available for buses (paper: 5).
+    pub wire_layers: f64,
+    /// Fixed non-core area (SIMD array, controllers, PHY), mm².
+    pub uncore_mm2: f64,
+}
+
+impl Default for AreaModel {
+    fn default() -> Self {
+        Self {
+            pe_mm2: 1.7e-3,
+            sram_mm2_per_mib: 2.0,
+            sram_split_frac: 0.13,
+            wire_pitch_um: 0.22,
+            wire_layers: 5.0,
+            uncore_mm2: 10.0,
+        }
+    }
+}
+
+/// Area breakdown of a configuration, mm².
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AreaBreakdown {
+    pub pe_mm2: f64,
+    pub sram_mm2: f64,
+    /// Extra decode/repeater logic from splitting buffers into parts.
+    pub split_logic_mm2: f64,
+    pub datapath_mm2: f64,
+    pub flexsa_extra_mm2: f64,
+    pub uncore_mm2: f64,
+}
+
+impl AreaBreakdown {
+    pub fn total_mm2(&self) -> f64 {
+        self.pe_mm2
+            + self.sram_mm2
+            + self.split_logic_mm2
+            + self.datapath_mm2
+            + self.flexsa_extra_mm2
+            + self.uncore_mm2
+    }
+}
+
+/// Total LBUF+OBUF bytes per unit (double-buffered pairs).
+fn unit_lbuf_bytes(cfg: &AcceleratorConfig) -> f64 {
+    use crate::gemm::{ACC_BYTES, ELEM_BYTES};
+    let stationary = 2 * cfg.lbuf_stationary_elems * ELEM_BYTES;
+    let horizontal = 2 * cfg.lbuf_horizontal_elems * ELEM_BYTES;
+    let obuf = 2 * cfg.blk_m() * cfg.unit.cols * ACC_BYTES;
+    (stationary + horizontal + obuf) as f64
+}
+
+/// Compute the area of a configuration.
+pub fn area_of(cfg: &AcceleratorConfig, m: &AreaModel) -> AreaBreakdown {
+    let mib = 1024.0 * 1024.0;
+    let total_units = (cfg.groups * cfg.units_per_group) as f64;
+    let pe = cfg.total_pes() as f64 * m.pe_mm2;
+
+    // SRAM: GBUF + per-unit local buffers.
+    let gbuf_mib = cfg.gbuf_total_bytes as f64 / mib;
+    let lbuf_mib = total_units * unit_lbuf_bytes(cfg) / mib;
+    let sram = (gbuf_mib + lbuf_mib) * m.sram_mm2_per_mib;
+
+    // Buffer splitting: the GBUF is divided across groups, and each unit's
+    // LBUF set is a separate macro — splitting costs duplicated
+    // decoders/repeaters, sublinear in the part count (smaller parts have
+    // proportionally smaller periphery).
+    let gbuf_parts = cfg.groups as f64;
+    let split_logic = (gbuf_parts.sqrt() - 1.0)
+        * m.sram_split_frac
+        * gbuf_mib
+        * m.sram_mm2_per_mib
+        + (total_units.sqrt() - 1.0) * m.sram_split_frac * lbuf_mib * m.sram_mm2_per_mib;
+
+    // Datapath: each unit needs an input bus (stationary + horizontal,
+    // 2 × cols × 16 b) and an output bus (cols × 16 b) from its group GBUF.
+    let die_guess = (pe + sram + m.uncore_mm2).sqrt(); // edge length, mm
+    // FlexSA is built on the naive four-core substrate (Fig 7): each of the
+    // four sub-cores keeps its own GBUF→LBUF buses.
+    let bits_per_unit = match cfg.kind {
+        UnitKind::Monolithic => 3.0 * cfg.unit.cols as f64 * 16.0,
+        UnitKind::FlexSa => 4.0 * 3.0 * cfg.subcore().cols as f64 * 16.0,
+    };
+    let bus_mm = total_units * bits_per_unit * m.wire_pitch_um * 1e-3 / m.wire_layers;
+    let datapath = bus_mm * die_guess;
+
+    // FlexSA extras (§V-B), per FlexSA unit.
+    let flexsa_extra = if cfg.kind == UnitKind::FlexSa {
+        let per_unit_logic = 0.03 + 0.32 + 0.25; // switches + FMA row + repeaters
+        let vertical_wires = 0.09 * die_guess / 2.0; // added core width x core height
+        total_units * (per_unit_logic * (cfg.unit.cols as f64 / 128.0) + vertical_wires)
+    } else {
+        0.0
+    };
+
+    AreaBreakdown {
+        pe_mm2: pe,
+        sram_mm2: sram,
+        split_logic_mm2: split_logic,
+        datapath_mm2: datapath,
+        flexsa_extra_mm2: flexsa_extra,
+        uncore_mm2: m.uncore_mm2,
+    }
+}
+
+/// Fig 6: overhead of a configuration relative to the 1×(128×128) design
+/// (split-logic + datapath beyond the baseline's own).
+pub fn overhead_vs_1g1c(cfg: &AcceleratorConfig, m: &AreaModel) -> f64 {
+    let base = area_of(&crate::config::preset("1G1C").unwrap(), m);
+    let this = area_of(cfg, m);
+    (this.total_mm2() - base.total_mm2()) / base.total_mm2()
+}
+
+/// §V-B: FlexSA area overhead relative to the naive four-small-core design
+/// with the same geometry. Returns (conservative, wires-over-PE) fractions.
+pub fn flexsa_overhead_vs_naive(m: &AreaModel) -> (f64, f64) {
+    let naive = area_of(&crate::config::preset("1G4C").unwrap(), m);
+    let flexsa = area_of(&crate::config::preset("1G1F").unwrap(), m);
+    let conservative = (flexsa.total_mm2() - naive.total_mm2()) / naive.total_mm2();
+    // Optimistic: vertical wires routed over the PE array (the paper's
+    // "can effectively hide the wiring area overhead").
+    let die_guess = (flexsa.pe_mm2 + flexsa.sram_mm2 + m.uncore_mm2).sqrt();
+    let wires = 0.09 * die_guess / 2.0;
+    let optimistic = (flexsa.total_mm2() - wires - naive.total_mm2()) / naive.total_mm2();
+    (conservative, optimistic)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+
+    #[test]
+    fn baseline_die_is_plausible_32nm() {
+        let a = area_of(&preset("1G1C").unwrap(), &AreaModel::default());
+        // 16K PEs + 10 MiB SRAM at 32 nm: tens of mm².
+        assert!((40.0..100.0).contains(&a.total_mm2()), "{}", a.total_mm2());
+        assert!(a.pe_mm2 > 20.0);
+        assert!(a.sram_mm2 > 15.0);
+    }
+
+    #[test]
+    fn split_overhead_grows_with_core_count_fig6() {
+        let m = AreaModel::default();
+        let o4 = overhead_vs_1g1c(&preset("1G4C").unwrap(), &m);
+        let o16 = overhead_vs_1g1c(&preset("16C-SWEEP").unwrap(), &m);
+        let o64 = overhead_vs_1g1c(&preset("4G16C").unwrap(), &m);
+        // Paper Fig 6: ~4%, ~13%, ~23%; monotone growth is the key shape.
+        assert!(o4 < o16 && o16 < o64, "{o4} {o16} {o64}");
+        assert!((0.005..0.09).contains(&o4), "o4={o4}");
+        assert!((0.05..0.20).contains(&o16), "o16={o16}");
+        assert!((0.12..0.35).contains(&o64), "o64={o64}");
+    }
+
+    #[test]
+    fn flexsa_overhead_is_about_one_percent() {
+        let (conservative, optimistic) = flexsa_overhead_vs_naive(&AreaModel::default());
+        assert!(conservative < 0.035, "conservative={conservative}");
+        assert!(optimistic < 0.015, "optimistic={optimistic}");
+        assert!(optimistic > 0.0);
+    }
+
+    #[test]
+    fn breakdown_sums() {
+        let a = area_of(&preset("4G1F").unwrap(), &AreaModel::default());
+        let sum = a.pe_mm2 + a.sram_mm2 + a.split_logic_mm2 + a.datapath_mm2
+            + a.flexsa_extra_mm2 + a.uncore_mm2;
+        assert!((a.total_mm2() - sum).abs() < 1e-12);
+        assert!(a.flexsa_extra_mm2 > 0.0);
+    }
+}

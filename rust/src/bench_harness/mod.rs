@@ -1,0 +1,127 @@
+//! Minimal criterion-style benchmark harness (criterion is not in the
+//! offline vendor set). Used by `rust/benches/*.rs` with `harness = false`.
+//!
+//! Protocol: warm up, then run timed iterations until both a minimum
+//! iteration count and a minimum wall time are reached; report
+//! mean/stddev/min/max and optional throughput.
+
+use crate::util::Summary;
+use std::time::{Duration, Instant};
+
+/// One benchmark's timing results.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>12}/iter  (+/- {:>10}, min {:>10}, {} iters)",
+            self.name,
+            crate::util::fmt::seconds(self.mean.as_secs_f64()),
+            crate::util::fmt::seconds(self.stddev.as_secs_f64()),
+            crate::util::fmt::seconds(self.min.as_secs_f64()),
+            self.iters
+        )
+    }
+
+    /// Report with an items/sec throughput line.
+    pub fn report_throughput(&self, items_per_iter: f64, unit: &str) -> String {
+        let rate = items_per_iter / self.mean.as_secs_f64();
+        format!("{}  [{} {unit}/s]", self.report(), crate::util::fmt::ops(rate))
+    }
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Bencher {
+    pub warmup_iters: u64,
+    pub min_iters: u64,
+    pub min_time: Duration,
+    pub max_iters: u64,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 2,
+            min_iters: 5,
+            min_time: Duration::from_millis(300),
+            max_iters: 1000,
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick profile for expensive end-to-end benches.
+    pub fn quick() -> Self {
+        Self { warmup_iters: 1, min_iters: 3, min_time: Duration::from_millis(100), max_iters: 20 }
+    }
+
+    /// Run `f` repeatedly and collect timing statistics. The closure's
+    /// return value is black-boxed to keep the optimizer honest.
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        let mut s = Summary::new();
+        let started = Instant::now();
+        let mut iters = 0u64;
+        while iters < self.max_iters
+            && (iters < self.min_iters || started.elapsed() < self.min_time)
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            s.add(t0.elapsed().as_secs_f64());
+            iters += 1;
+        }
+        BenchResult {
+            name: name.to_string(),
+            iters,
+            mean: Duration::from_secs_f64(s.mean()),
+            stddev: Duration::from_secs_f64(s.stddev()),
+            min: Duration::from_secs_f64(s.min()),
+            max: Duration::from_secs_f64(s.max()),
+        }
+    }
+}
+
+/// Optimizer barrier (std::hint::black_box wrapper for older call sites).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let b = Bencher {
+            warmup_iters: 1,
+            min_iters: 3,
+            min_time: Duration::from_millis(1),
+            max_iters: 10,
+        };
+        let r = b.run("noop", || 1 + 1);
+        assert!(r.iters >= 3);
+        assert!(r.report().contains("noop"));
+        assert!(r.mean <= r.max);
+        assert!(r.min <= r.mean);
+    }
+
+    #[test]
+    fn throughput_report_contains_rate() {
+        let b = Bencher::quick();
+        let r = b.run("t", || std::thread::sleep(Duration::from_micros(100)));
+        let line = r.report_throughput(1000.0, "waves");
+        assert!(line.contains("waves/s"), "{line}");
+    }
+}

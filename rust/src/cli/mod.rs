@@ -1,0 +1,110 @@
+//! Minimal command-line parsing (clap is not in the offline vendor set).
+//!
+//! Grammar: `flexsa <command> [positional...] [--flag] [--key value]`.
+
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    flags: HashMap<String, Option<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        out.command = it.next().unwrap_or_else(|| "help".to_string());
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("bare `--` not supported".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), Some(v.to_string()));
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.flags.insert(name.to_string(), Some(it.next().unwrap()));
+                } else {
+                    out.flags.insert(name.to_string(), None);
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse from the process arguments.
+    pub fn from_env() -> Result<Args, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, flag: &str) -> bool {
+        self.flags.contains_key(flag)
+    }
+
+    pub fn get(&self, flag: &str) -> Option<&str> {
+        self.flags.get(flag).and_then(|v| v.as_deref())
+    }
+
+    pub fn get_usize(&self, flag: &str, default: usize) -> Result<usize, String> {
+        match self.get(flag) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{flag}: {e}")),
+        }
+    }
+
+    pub fn get_u64(&self, flag: &str, default: u64) -> Result<u64, String> {
+        match self.get(flag) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{flag}: {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn basic_command_and_positionals() {
+        let a = parse("simulate 512 256 128");
+        assert_eq!(a.command, "simulate");
+        assert_eq!(a.positional, vec!["512", "256", "128"]);
+    }
+
+    #[test]
+    fn flags_with_values_and_bools() {
+        let a = parse("fig10 --threads 8 --ideal --out=/tmp/x.csv");
+        assert_eq!(a.get("threads"), Some("8"));
+        assert!(a.has("ideal"));
+        assert_eq!(a.get("out"), Some("/tmp/x.csv"));
+        assert_eq!(a.get_usize("threads", 1).unwrap(), 8);
+    }
+
+    #[test]
+    fn flag_before_positional() {
+        let a = parse("compile --config 1G1F 128 128 128");
+        assert_eq!(a.get("config"), Some("1G1F"));
+        assert_eq!(a.positional.len(), 3);
+    }
+
+    #[test]
+    fn missing_command_is_help() {
+        let a = Args::parse(Vec::<String>::new()).unwrap();
+        assert_eq!(a.command, "help");
+    }
+
+    #[test]
+    fn bad_usize_reports_flag() {
+        let a = parse("x --threads abc");
+        assert!(a.get_usize("threads", 1).unwrap_err().contains("threads"));
+    }
+}

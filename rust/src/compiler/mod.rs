@@ -1,0 +1,182 @@
+//! The FlexSA compiler: GEMM partitioning, 2-level GBUF blocking, and the
+//! compile-time wave-tiling heuristic of paper §VI (Algorithm 1).
+//!
+//! Pipeline for one GEMM:
+//!
+//! 1. **Group partitioning** (§VII): forward/data-grad GEMMs are tall and
+//!    skinny, so they are split across core groups along M; weight-grad
+//!    GEMMs have a large accumulation dimension, so they split along K
+//!    (each group then produces partial sums that are reduced through
+//!    memory).
+//! 2. **GBUF blocking**: within a group, panels of the two inputs are
+//!    blocked into the group's GBUF slice; the resulting compulsory DRAM
+//!    traffic is computed analytically (the simulator turns it into time).
+//! 3. **Wave tiling + mode selection** (Algorithm 1): the partition is cut
+//!    into systolic waves of at most `blk_K × blk_N = rows × cols` and
+//!    `blk_M` rows; each wave picks the FlexSA mode with the highest reuse
+//!    that does not waste PEs: `FW > HSW = VSW > ISW`.
+//! 4. **Instruction emission**: per-group [`Program`]s of `LdLBUF_V/H`,
+//!    `ShiftV`, `ExecGEMM`, `StLBUF`, `sync`.
+
+mod blocking;
+mod tiling;
+
+pub use blocking::{gbuf_blocking, DramPlan};
+pub use tiling::{select_mode, tile_partition, tile_partition_visit, tiling_summary, TilingStats};
+
+use crate::config::AcceleratorConfig;
+use crate::gemm::{GemmShape, Phase};
+use crate::isa::Program;
+
+/// A compiled GEMM: one instruction program per core group + DRAM plan.
+#[derive(Debug, Clone)]
+pub struct CompiledGemm {
+    pub shape: GemmShape,
+    pub phase: Phase,
+    /// One entry per group that received work.
+    pub groups: Vec<GroupPlan>,
+    /// Whether outputs are partial sums needing a cross-group reduction
+    /// (K-partitioned weight-gradient GEMMs).
+    pub k_partitioned: bool,
+}
+
+/// Per-group compilation result.
+#[derive(Debug, Clone)]
+pub struct GroupPlan {
+    /// This group's share of the GEMM.
+    pub partition: GemmShape,
+    pub program: Program,
+    pub dram: DramPlan,
+}
+
+/// How a GEMM is split across core groups (paper §VII).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionDim {
+    M,
+    K,
+    None,
+}
+
+/// Choose the partition dimension for a phase (§VII: M for forward and
+/// data-grad, K for weight-grad).
+pub fn partition_dim(phase: Phase, groups: usize) -> PartitionDim {
+    if groups <= 1 {
+        PartitionDim::None
+    } else if phase == Phase::WeightGrad {
+        PartitionDim::K
+    } else {
+        PartitionDim::M
+    }
+}
+
+/// Split `total` into at most `parts` near-equal chunks (empty chunks are
+/// dropped; a tiny GEMM may occupy fewer groups than exist).
+fn split_even(total: usize, parts: usize) -> Vec<usize> {
+    let chunk = crate::util::ceil_div(total, parts);
+    let mut out = Vec::with_capacity(parts);
+    let mut rem = total;
+    while rem > 0 {
+        let c = chunk.min(rem);
+        out.push(c);
+        rem -= c;
+    }
+    out
+}
+
+/// Split a GEMM into per-group partitions (returns the partitions and
+/// whether K was partitioned). Shared by the materializing and streaming
+/// compile paths.
+pub fn partitions(
+    cfg: &AcceleratorConfig,
+    shape: GemmShape,
+    phase: Phase,
+) -> (Vec<GemmShape>, bool) {
+    let pdim = partition_dim(phase, cfg.groups);
+    let parts: Vec<GemmShape> = match pdim {
+        PartitionDim::None => vec![shape],
+        PartitionDim::M => split_even(shape.m, cfg.groups)
+            .into_iter()
+            .map(|m| GemmShape::new(m, shape.n, shape.k))
+            .collect(),
+        PartitionDim::K => split_even(shape.k, cfg.groups)
+            .into_iter()
+            .map(|k| GemmShape::new(shape.m, shape.n, k))
+            .collect(),
+    };
+    let k_partitioned = pdim == PartitionDim::K && parts.len() > 1;
+    (parts, k_partitioned)
+}
+
+/// Compile one GEMM for an accelerator configuration.
+pub fn compile_gemm(cfg: &AcceleratorConfig, shape: GemmShape, phase: Phase) -> CompiledGemm {
+    assert!(!shape.is_empty(), "cannot compile empty GEMM {shape}");
+    let (parts, k_partitioned) = partitions(cfg, shape, phase);
+    // Shared (N-dimension) inputs are replicated across groups when
+    // M-partitioning (§VII) — accounted inside gbuf_blocking via `parts`.
+    let groups = parts
+        .iter()
+        .map(|&p| {
+            let dram = gbuf_blocking(cfg, p, phase, k_partitioned);
+            let program = tile_partition(cfg, p, k_partitioned);
+            GroupPlan { partition: p, program, dram }
+        })
+        .collect();
+    CompiledGemm { shape, phase, groups, k_partitioned }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+    use crate::isa::Inst;
+
+    #[test]
+    fn partition_dims_follow_paper() {
+        assert_eq!(partition_dim(Phase::Forward, 4), PartitionDim::M);
+        assert_eq!(partition_dim(Phase::DataGrad, 4), PartitionDim::M);
+        assert_eq!(partition_dim(Phase::WeightGrad, 4), PartitionDim::K);
+        assert_eq!(partition_dim(Phase::Forward, 1), PartitionDim::None);
+    }
+
+    #[test]
+    fn split_even_covers_total() {
+        assert_eq!(split_even(100, 4), vec![25, 25, 25, 25]);
+        assert_eq!(split_even(10, 4), vec![3, 3, 3, 1]);
+        assert_eq!(split_even(2, 4), vec![1, 1]); // fewer groups used
+    }
+
+    #[test]
+    fn compiled_macs_match_gemm() {
+        // Invariant: the sum of ExecGEMM MACs across groups equals m*n*k.
+        for name in ["1G1C", "1G4C", "4G4C", "1G1F", "4G1F"] {
+            let cfg = preset(name).unwrap();
+            for (m, n, k) in [(512, 256, 384), (100, 71, 300), (32, 1000, 2048), (1, 1, 1)] {
+                let shape = GemmShape::new(m, n, k);
+                for phase in Phase::ALL {
+                    let c = compile_gemm(&cfg, shape, phase);
+                    let macs: u64 = c.groups.iter().map(|g| g.program.stats().macs).sum();
+                    assert_eq!(macs, shape.macs(), "{name} {shape} {phase:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_group_program_ends_with_sync() {
+        let cfg = preset("4G1F").unwrap();
+        let c = compile_gemm(&cfg, GemmShape::new(2048, 512, 1024), Phase::Forward);
+        assert_eq!(c.groups.len(), 4);
+        for g in &c.groups {
+            assert!(matches!(g.program.insts.last(), Some(Inst::Sync { .. })));
+        }
+    }
+
+    #[test]
+    fn wgrad_is_k_partitioned() {
+        let cfg = preset("4G4C").unwrap();
+        let c = compile_gemm(&cfg, GemmShape::new(256, 576, 100352), Phase::WeightGrad);
+        assert!(c.k_partitioned);
+        let ksum: usize = c.groups.iter().map(|g| g.partition.k).sum();
+        assert_eq!(ksum, 100352);
+    }
+}

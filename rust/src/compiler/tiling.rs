@@ -1,0 +1,330 @@
+//! Wave tiling and FlexSA mode selection (paper §VI-A, Algorithm 1).
+//!
+//! A GEMM partition is cut into **tile columns** (`blk_N = cols`), each
+//! column into **tile jobs** (`blk_M`-row slabs that accumulate over the
+//! whole K loop in the OBUF), and each job into **waves** (`blk_K = rows`
+//! slices). The FlexSA mode of a wave follows the paper's heuristic:
+//!
+//! | `n ≤ cols/2` | `k ≤ rows/2` | mode |
+//! |--------------|--------------|------|
+//! | no           | no           | FW   |
+//! | no           | yes          | HSW  |
+//! | yes          | no           | VSW  |
+//! | yes          | yes          | ISW  |
+//!
+//! Sub-array modes pack 2 (VSW/HSW) or 4 (ISW) m-slabs into one issue,
+//! sharing the stationary tile via the local-broadcast datapaths — the
+//! source of FlexSA's reuse advantage over naive small cores.
+
+use crate::config::{AcceleratorConfig, UnitKind};
+use crate::gemm::GemmShape;
+use crate::isa::{Buf, Inst, Mode, Program};
+use crate::util::ceil_div;
+
+/// Select the FlexSA operating mode for a wave of `n_size × k_size`
+/// (paper `GetFlexSAMode(wide_wave, tall_wave)`).
+pub fn select_mode(cfg: &AcceleratorConfig, n_size: usize, k_size: usize) -> Mode {
+    match cfg.kind {
+        UnitKind::Monolithic => Mode::Mono,
+        UnitKind::FlexSa => {
+            let sub = cfg.subcore();
+            let wide = n_size <= sub.cols; // skinny tile: fits half width
+            let tall = k_size <= sub.rows; // fat tile: fits half height
+            match (wide, tall) {
+                (false, false) => Mode::Fw,
+                (false, true) => Mode::Hsw,
+                (true, false) => Mode::Vsw,
+                (true, true) => Mode::Isw,
+            }
+        }
+    }
+}
+
+/// Maximum m-slab size for a wave: the horizontal LBUF holds the
+/// non-stationary inputs of all parallel sub-waves (`parallel × m × k`
+/// elements), capped by the paper's `blk_M` rule.
+fn m_allowed(cfg: &AcceleratorConfig, mode: Mode, k_size: usize) -> usize {
+    let cap = cfg.lbuf_horizontal_elems / (mode.parallel_waves() * k_size.max(1));
+    cap.clamp(1, cfg.blk_m())
+}
+
+/// Split `total` into chunks of `quantum` (last chunk smaller).
+fn chunks(total: usize, quantum: usize) -> Vec<usize> {
+    let mut out = Vec::with_capacity(ceil_div(total, quantum));
+    let mut rem = total;
+    while rem > 0 {
+        let c = quantum.min(rem);
+        out.push(c);
+        rem -= c;
+    }
+    out
+}
+
+/// Summary of one partition's tiling (used by tests and reports).
+#[derive(Debug, Clone, Default)]
+pub struct TilingStats {
+    pub tile_columns: usize,
+    pub tile_jobs: usize,
+    pub wave_issues: usize,
+}
+
+/// Tile one group partition into a [`Program`] (paper Algorithm 1).
+///
+/// Loop order follows the paper: `n` (tile column) → `m` (tile job, OBUF
+/// accumulation scope) → `k` (wave). Tile jobs rotate round-robin across
+/// the group's units.
+pub fn tile_partition(cfg: &AcceleratorConfig, p: GemmShape, k_partitioned: bool) -> Program {
+    let mut prog = Program::new();
+    tile_partition_visit(cfg, p, k_partitioned, &mut |inst| prog.push(inst));
+    prog
+}
+
+/// Streaming variant of [`tile_partition`]: emit each instruction to a
+/// sink instead of materializing a [`Program`]. The simulator's hot path
+/// uses this to avoid allocating multi-million-instruction vectors
+/// (EXPERIMENTS.md §Perf).
+pub fn tile_partition_visit(
+    cfg: &AcceleratorConfig,
+    p: GemmShape,
+    _k_partitioned: bool,
+    sink: &mut impl FnMut(Inst),
+) {
+    if p.is_empty() {
+        return;
+    }
+    let rows = cfg.unit.rows;
+    let cols = cfg.unit.cols;
+    let n_chunks = chunks(p.n, cols);
+    let k_chunks = chunks(p.k, rows);
+    let units = cfg.units_per_group;
+    let mut rr_unit = 0usize;
+
+    let prog = sink; // emit through the sink
+    for &n_size in &n_chunks {
+        // Mode per k-chunk is fixed within a column; the column's m quantum
+        // must satisfy the tightest LBUF constraint among its waves.
+        let modes: Vec<Mode> =
+            k_chunks.iter().map(|&k| select_mode(cfg, n_size, k)).collect();
+        let col_m = k_chunks
+            .iter()
+            .zip(&modes)
+            .map(|(&k, &mode)| m_allowed(cfg, mode, k))
+            .min()
+            .unwrap_or(cfg.blk_m());
+        let m_chunks = chunks(p.m, col_m);
+        // Batch m-slabs so sub-array modes can pack parallel sub-waves.
+        let batch = modes.iter().map(|m| m.parallel_waves()).max().unwrap_or(1);
+
+        for mb in m_chunks.chunks(batch) {
+            let unit = rr_unit % units;
+            rr_unit += 1;
+            // K loop: waves accumulate into the OBUF of this tile job.
+            for (&k_size, &mode) in k_chunks.iter().zip(&modes) {
+                let par = mode.parallel_waves();
+                // Issue waves over the batch, `par` sub-waves at a time.
+                for issue in mb.chunks(par) {
+                    let bcast = issue.len() > 1;
+                    prog(Inst::LdLbufV {
+                        unit,
+                        subwave: 0,
+                        k: k_size,
+                        n: n_size,
+                        broadcast: bcast,
+                    });
+                    prog(Inst::ShiftV { unit, subwave: 0, k: k_size, n: n_size });
+                    // All of the issue's loads precede its ExecGEMMs: the
+                    // parallel sub-waves launch together once every input
+                    // is resident (double-buffered behind the previous
+                    // issue's execution).
+                    for (w, &m_size) in issue.iter().enumerate() {
+                        prog(Inst::LdLbufH {
+                            unit,
+                            subwave: w,
+                            k: k_size,
+                            m: m_size,
+                            shared: mode == Mode::Hsw,
+                        });
+                    }
+                    for (w, &m_size) in issue.iter().enumerate() {
+                        prog(Inst::ExecGemm {
+                            unit,
+                            mode,
+                            subwave: w,
+                            m: m_size,
+                            n: n_size,
+                            k: k_size,
+                        });
+                    }
+                }
+            }
+            // Job complete: outputs leave the OBUF.
+            for &m_size in mb {
+                prog(Inst::StLbuf { unit, subwave: 0, m: m_size, n: n_size, dst: Buf::Gbuf });
+            }
+        }
+    }
+    for unit in 0..units {
+        prog(Inst::Sync { unit });
+    }
+}
+
+/// Compute tiling summary statistics for a partition (without emitting).
+pub fn tiling_summary(cfg: &AcceleratorConfig, p: GemmShape) -> TilingStats {
+    let n_chunks = chunks(p.n, cfg.unit.cols);
+    let k_chunks = chunks(p.k, cfg.unit.rows);
+    let mut s = TilingStats { tile_columns: n_chunks.len(), ..Default::default() };
+    for &n_size in &n_chunks {
+        let modes: Vec<Mode> =
+            k_chunks.iter().map(|&k| select_mode(cfg, n_size, k)).collect();
+        let col_m = k_chunks
+            .iter()
+            .zip(&modes)
+            .map(|(&k, &m)| m_allowed(cfg, m, k))
+            .min()
+            .unwrap_or(cfg.blk_m());
+        let m_chunks = chunks(p.m, col_m);
+        let batch = modes.iter().map(|m| m.parallel_waves()).max().unwrap_or(1);
+        s.tile_jobs += ceil_div(m_chunks.len(), batch);
+        for &mode in &modes {
+            s.wave_issues += ceil_div(m_chunks.len(), mode.parallel_waves().min(batch));
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+
+    #[test]
+    fn mode_selection_matches_paper_table() {
+        let cfg = preset("1G1F").unwrap(); // 128x128 unit, 64x64 sub-cores
+        assert_eq!(select_mode(&cfg, 128, 128), Mode::Fw);
+        assert_eq!(select_mode(&cfg, 128, 64), Mode::Hsw);
+        assert_eq!(select_mode(&cfg, 64, 128), Mode::Vsw);
+        assert_eq!(select_mode(&cfg, 64, 64), Mode::Isw);
+        assert_eq!(select_mode(&cfg, 65, 65), Mode::Fw);
+        assert_eq!(select_mode(&cfg, 1, 1), Mode::Isw);
+    }
+
+    #[test]
+    fn mono_configs_have_no_modes() {
+        let cfg = preset("1G4C").unwrap();
+        assert_eq!(select_mode(&cfg, 1, 1), Mode::Mono);
+    }
+
+    #[test]
+    fn full_tiles_use_fw_only() {
+        let cfg = preset("1G1F").unwrap();
+        // 1024x512x1024: all dims multiples of 128 -> pure FW.
+        let prog = tile_partition(&cfg, GemmShape::new(1024, 512, 1024), false);
+        let stats = prog.stats();
+        assert_eq!(stats.waves_by_mode.len(), 1);
+        assert!(stats.waves_by_mode.contains_key(&Mode::Fw));
+    }
+
+    #[test]
+    fn skinny_gemm_uses_vsw() {
+        let cfg = preset("1G1F").unwrap();
+        // n = 48 <= 64, k = 256 (two full-height waves) -> VSW.
+        let prog = tile_partition(&cfg, GemmShape::new(1024, 48, 256), false);
+        let stats = prog.stats();
+        assert!(stats.waves_by_mode.contains_key(&Mode::Vsw), "{:?}", stats.waves_by_mode);
+        assert!(!stats.waves_by_mode.contains_key(&Mode::Fw));
+    }
+
+    #[test]
+    fn fat_gemm_uses_hsw() {
+        let cfg = preset("1G1F").unwrap();
+        // n = 128, k = 48 <= 64 -> HSW.
+        let prog = tile_partition(&cfg, GemmShape::new(1024, 128, 48), false);
+        let stats = prog.stats();
+        assert!(stats.waves_by_mode.contains_key(&Mode::Hsw), "{:?}", stats.waves_by_mode);
+    }
+
+    #[test]
+    fn tiny_gemm_uses_isw() {
+        let cfg = preset("1G1F").unwrap();
+        let prog = tile_partition(&cfg, GemmShape::new(512, 32, 32), false);
+        let stats = prog.stats();
+        assert_eq!(stats.waves_by_mode.len(), 1);
+        assert!(stats.waves_by_mode.contains_key(&Mode::Isw));
+    }
+
+    #[test]
+    fn edge_column_mixes_vsw_then_isw() {
+        // Paper Fig 9.c -> 9.d: a skinny column whose K has a sub-height
+        // tail runs VSW for the full-height waves and ISW for the tail.
+        let cfg = preset("1G1F").unwrap();
+        let prog = tile_partition(&cfg, GemmShape::new(512, 40, 160), false);
+        let stats = prog.stats();
+        assert!(stats.waves_by_mode.contains_key(&Mode::Vsw), "{:?}", stats.waves_by_mode);
+        assert!(stats.waves_by_mode.contains_key(&Mode::Isw), "{:?}", stats.waves_by_mode);
+    }
+
+    #[test]
+    fn macs_preserved_exactly() {
+        for name in ["1G1C", "1G4C", "4G4C", "1G1F", "4G1F"] {
+            let cfg = preset(name).unwrap();
+            for shape in [
+                GemmShape::new(100_352, 64, 576),
+                GemmShape::new(3, 71, 53),
+                GemmShape::new(257, 129, 127),
+                GemmShape::new(1, 1, 100_000),
+            ] {
+                let prog = tile_partition(&cfg, shape, false);
+                assert_eq!(prog.stats().macs, shape.macs(), "{name} {shape}");
+            }
+        }
+    }
+
+    #[test]
+    fn broadcast_flag_set_for_shared_stationary() {
+        let cfg = preset("1G1F").unwrap();
+        let prog = tile_partition(&cfg, GemmShape::new(512, 32, 32), false);
+        let bcasts = prog
+            .insts
+            .iter()
+            .filter(|i| matches!(i, Inst::LdLbufV { broadcast: true, .. }))
+            .count();
+        assert!(bcasts > 0);
+    }
+
+    #[test]
+    fn jobs_round_robin_across_units() {
+        let cfg = preset("1G4C").unwrap();
+        let prog = tile_partition(&cfg, GemmShape::new(4096, 512, 64), false);
+        let mut units: Vec<usize> = prog
+            .insts
+            .iter()
+            .filter_map(|i| match i {
+                Inst::ExecGemm { unit, .. } => Some(*unit),
+                _ => None,
+            })
+            .collect();
+        units.sort_unstable();
+        units.dedup();
+        assert_eq!(units, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn m_allowed_respects_lbuf_capacity() {
+        let cfg = preset("1G1F").unwrap();
+        // VSW with full-height k=128: two sub-waves share the horizontal
+        // LBUF -> m per sub-wave halves (256 -> 128).
+        assert_eq!(m_allowed(&cfg, Mode::Vsw, 128), 128);
+        assert_eq!(m_allowed(&cfg, Mode::Fw, 128), 256);
+        assert_eq!(m_allowed(&cfg, Mode::Hsw, 64), 256);
+        assert_eq!(m_allowed(&cfg, Mode::Isw, 64), 128);
+    }
+
+    #[test]
+    fn summary_counts_are_consistent() {
+        let cfg = preset("1G1F").unwrap();
+        let shape = GemmShape::new(2048, 300, 500);
+        let s = tiling_summary(&cfg, shape);
+        assert!(s.tile_columns == 3); // 300 / 128 -> 128,128,44
+        assert!(s.tile_jobs > 0 && s.wave_issues >= s.tile_jobs);
+    }
+}

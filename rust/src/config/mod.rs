@@ -1,0 +1,263 @@
+//! Accelerator configuration system.
+//!
+//! A configuration describes the whole training accelerator: how many core
+//! *groups* share a global buffer (GBUF), how many *units* each group holds,
+//! each unit's PE geometry, and whether units are monolithic systolic arrays
+//! or FlexSA units (2×2 reconfigurable sub-cores). The five configurations
+//! of the paper's Table I ship as presets; arbitrary configurations can be
+//! described in a small `key = value` text format (`parse`).
+
+mod parse;
+mod presets;
+
+pub use parse::parse_config;
+pub use presets::{preset, preset_names, PRESETS};
+
+use crate::gemm::ELEM_BYTES;
+
+/// Kind of compute unit inside a group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnitKind {
+    /// A single rigid systolic array (`rows × cols`).
+    Monolithic,
+    /// A FlexSA unit: 2×2 sub-cores of `rows/2 × cols/2` PEs each, with the
+    /// inter-core datapaths that enable FW/VSW/HSW/ISW modes (§V).
+    FlexSa,
+}
+
+/// Geometry of one compute unit.
+///
+/// `rows` is the accumulation-depth (K) dimension — stationary inputs are
+/// shifted down `rows` PEs; `cols` is the output-width (N) dimension.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct UnitGeometry {
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl UnitGeometry {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Self { rows, cols }
+    }
+
+    pub fn pes(&self) -> usize {
+        self.rows * self.cols
+    }
+}
+
+/// Full accelerator configuration.
+#[derive(Debug, Clone)]
+pub struct AcceleratorConfig {
+    /// Short name used in reports (e.g. `1G1F`).
+    pub name: String,
+    /// Number of core groups; each group has a private GBUF slice.
+    pub groups: usize,
+    /// Compute units per group.
+    pub units_per_group: usize,
+    /// Geometry of each unit (for FlexSA this is the *full* unit, i.e. all
+    /// four sub-cores together).
+    pub unit: UnitGeometry,
+    pub kind: UnitKind,
+    /// Total on-chip global buffer capacity in bytes (divided evenly across
+    /// groups). The paper uses 10 MB (WaveCore).
+    pub gbuf_total_bytes: usize,
+    /// Core clock in GHz (paper: 0.7).
+    pub clock_ghz: f64,
+    /// Off-chip DRAM bandwidth in GB/s shared by all groups (paper: one
+    /// HBM2 stack, 270 GB/s).
+    pub dram_gbps: f64,
+    /// SIMD array throughput for non-GEMM layers, GFLOPS (paper: 500).
+    pub simd_gflops: f64,
+    /// Stationary-input LBUF capacity per unit, in elements, per buffer of
+    /// the double-buffer pair. Defaults to one full stationary tile
+    /// (`rows × cols`).
+    pub lbuf_stationary_elems: usize,
+    /// Horizontally-shifted-input LBUF capacity per unit, in elements, per
+    /// buffer. The paper sizes this at 2× the stationary buffer.
+    pub lbuf_horizontal_elems: usize,
+}
+
+impl AcceleratorConfig {
+    /// Construct with the paper's derived buffer sizing rules.
+    pub fn new(
+        name: impl Into<String>,
+        groups: usize,
+        units_per_group: usize,
+        unit: UnitGeometry,
+        kind: UnitKind,
+    ) -> Self {
+        let stationary = unit.rows * unit.cols;
+        Self {
+            name: name.into(),
+            groups,
+            units_per_group,
+            unit,
+            kind,
+            gbuf_total_bytes: 10 * 1024 * 1024,
+            clock_ghz: 0.7,
+            dram_gbps: 270.0,
+            simd_gflops: 500.0,
+            lbuf_stationary_elems: stationary,
+            lbuf_horizontal_elems: 2 * stationary,
+        }
+    }
+
+    /// Total PE count across the chip.
+    pub fn total_pes(&self) -> usize {
+        self.groups * self.units_per_group * self.unit.pes()
+    }
+
+    /// Peak throughput in TFLOPS (2 FLOPs per PE per cycle).
+    pub fn peak_tflops(&self) -> f64 {
+        self.total_pes() as f64 * 2.0 * self.clock_ghz / 1e3
+    }
+
+    /// GBUF capacity per group in bytes.
+    pub fn gbuf_group_bytes(&self) -> usize {
+        self.gbuf_total_bytes / self.groups
+    }
+
+    /// Sustained GBUF→LBUF bandwidth per *unit*, bytes per core cycle.
+    ///
+    /// A unit consuming horizontally-shifted inputs at full rate needs
+    /// `cols` elements/cycle plus stationary preload; we provision 2×.
+    /// Aggregate group bandwidth is `units_per_group ×` this, which
+    /// reproduces the paper's "4× more cores ⇒ 2× peak on-chip BW"
+    /// observation (4 half-width cores = 2× one full-width core).
+    pub fn onchip_bytes_per_cycle_per_unit(&self) -> f64 {
+        2.0 * self.unit.cols as f64 * ELEM_BYTES as f64
+    }
+
+    /// `blk_M`: systolic-wave M granularity — horizontal LBUF capacity
+    /// divided by the unit height (paper §VI-A).
+    pub fn blk_m(&self) -> usize {
+        (self.lbuf_horizontal_elems / self.unit.rows).max(1)
+    }
+
+    /// Sub-core geometry for FlexSA units (half each dimension).
+    pub fn subcore(&self) -> UnitGeometry {
+        match self.kind {
+            UnitKind::FlexSa => UnitGeometry::new(self.unit.rows / 2, self.unit.cols / 2),
+            UnitKind::Monolithic => self.unit,
+        }
+    }
+
+    /// DRAM bytes per core cycle (for the simulator's bandwidth model).
+    pub fn dram_bytes_per_cycle(&self) -> f64 {
+        self.dram_gbps * 1e9 / (self.clock_ghz * 1e9)
+    }
+
+    /// Validate internal consistency; returns a description of the first
+    /// problem found.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.groups == 0 || self.units_per_group == 0 {
+            return Err("groups and units_per_group must be > 0".into());
+        }
+        if self.unit.rows == 0 || self.unit.cols == 0 {
+            return Err("unit geometry must be non-zero".into());
+        }
+        if self.kind == UnitKind::FlexSa && (self.unit.rows % 2 != 0 || self.unit.cols % 2 != 0) {
+            return Err(format!(
+                "FlexSA unit must have even geometry, got {}x{}",
+                self.unit.rows, self.unit.cols
+            ));
+        }
+        if self.lbuf_stationary_elems < self.unit.rows * self.unit.cols {
+            return Err("stationary LBUF smaller than one stationary tile".into());
+        }
+        if self.blk_m() == 0 {
+            return Err("horizontal LBUF too small for one wave row".into());
+        }
+        if self.clock_ghz <= 0.0 || self.dram_gbps <= 0.0 {
+            return Err("clock and DRAM bandwidth must be positive".into());
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Display for AcceleratorConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let kind = match self.kind {
+            UnitKind::Monolithic => "core",
+            UnitKind::FlexSa => "FlexSA",
+        };
+        write!(
+            f,
+            "{}: {} group(s) x {} {}(s) of {}x{} ({} PEs, {:.1} TFLOPS)",
+            self.name,
+            self.groups,
+            self.units_per_group,
+            kind,
+            self.unit.rows,
+            self.unit.cols,
+            self.total_pes(),
+            self.peak_tflops()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_presets_have_equal_pe_count_and_23_tflops() {
+        // Table I: every configuration keeps 23 TFLOPS at 0.7 GHz.
+        for name in preset_names() {
+            let c = preset(name).unwrap();
+            assert_eq!(c.total_pes(), 128 * 128, "{name}");
+            assert!((c.peak_tflops() - 22.9).abs() < 0.1, "{name}: {}", c.peak_tflops());
+            c.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn blk_m_matches_paper_rule() {
+        // 128x128 unit, horizontal LBUF = 2 x stationary tile => blk_M = 256.
+        let c = preset("1G1C").unwrap();
+        assert_eq!(c.blk_m(), 256);
+        let c = preset("1G4C").unwrap();
+        assert_eq!(c.blk_m(), 128); // 64x64 cores
+    }
+
+    #[test]
+    fn flexsa_subcore_is_half_geometry() {
+        let c = preset("1G1F").unwrap();
+        assert_eq!(c.unit, UnitGeometry::new(128, 128));
+        assert_eq!(c.subcore(), UnitGeometry::new(64, 64));
+        let c = preset("4G1F").unwrap();
+        assert_eq!(c.unit, UnitGeometry::new(64, 64));
+        assert_eq!(c.subcore(), UnitGeometry::new(32, 32));
+    }
+
+    #[test]
+    fn onchip_bw_scaling_matches_paper() {
+        // 4x more (half-width) cores => 2x aggregate on-chip bandwidth.
+        let big = preset("1G1C").unwrap();
+        let split = preset("1G4C").unwrap();
+        let bw_big = big.onchip_bytes_per_cycle_per_unit() * big.units_per_group as f64;
+        let bw_split = split.onchip_bytes_per_cycle_per_unit()
+            * (split.units_per_group * split.groups) as f64;
+        assert!((bw_split / bw_big - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut c = preset("1G1C").unwrap();
+        c.groups = 0;
+        assert!(c.validate().is_err());
+        let mut c = preset("1G1F").unwrap();
+        c.unit = UnitGeometry::new(127, 128);
+        assert!(c.validate().is_err());
+        let mut c = preset("1G1C").unwrap();
+        c.lbuf_stationary_elems = 10;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn dram_bytes_per_cycle() {
+        let c = preset("1G1C").unwrap();
+        // 270 GB/s at 0.7 GHz = ~385.7 B/cycle.
+        assert!((c.dram_bytes_per_cycle() - 270.0 / 0.7).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,150 @@
+//! Minimal `key = value` config-file parser (no serde facade in the offline
+//! vendor set). Lines starting with `#` or `;` are comments. Unknown keys
+//! are errors — silent typos in accelerator configs produce wrong science.
+//!
+//! Example:
+//! ```text
+//! name = my4f
+//! groups = 4
+//! units_per_group = 1
+//! unit_rows = 64
+//! unit_cols = 64
+//! kind = flexsa           # or "monolithic"
+//! gbuf_total_mib = 10
+//! clock_ghz = 0.7
+//! dram_gbps = 270
+//! simd_gflops = 500
+//! ```
+
+use super::{AcceleratorConfig, UnitGeometry, UnitKind};
+
+/// Parse an accelerator configuration from `key = value` text.
+pub fn parse_config(text: &str) -> Result<AcceleratorConfig, String> {
+    let mut name = String::from("custom");
+    let mut groups = 1usize;
+    let mut units = 1usize;
+    let mut rows = 128usize;
+    let mut cols = 128usize;
+    let mut kind = UnitKind::Monolithic;
+    let mut gbuf_mib = 10.0f64;
+    let mut clock = 0.7f64;
+    let mut dram = 270.0f64;
+    let mut simd = 500.0f64;
+    let mut lbuf_stationary: Option<usize> = None;
+    let mut lbuf_horizontal: Option<usize> = None;
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split(['#', ';']).next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected `key = value`, got `{raw}`", lineno + 1))?;
+        let key = key.trim();
+        let value = value.trim();
+        let bad = |e: &str| format!("line {}: key `{key}`: {e}", lineno + 1);
+        match key {
+            "name" => name = value.to_string(),
+            "groups" => groups = parse_num(value).map_err(|e| bad(&e))?,
+            "units_per_group" => units = parse_num(value).map_err(|e| bad(&e))?,
+            "unit_rows" => rows = parse_num(value).map_err(|e| bad(&e))?,
+            "unit_cols" => cols = parse_num(value).map_err(|e| bad(&e))?,
+            "kind" => {
+                kind = match value.to_ascii_lowercase().as_str() {
+                    "monolithic" | "core" => UnitKind::Monolithic,
+                    "flexsa" | "flex" => UnitKind::FlexSa,
+                    other => return Err(bad(&format!("unknown kind `{other}`"))),
+                }
+            }
+            "gbuf_total_mib" => gbuf_mib = parse_f64(value).map_err(|e| bad(&e))?,
+            "clock_ghz" => clock = parse_f64(value).map_err(|e| bad(&e))?,
+            "dram_gbps" => dram = parse_f64(value).map_err(|e| bad(&e))?,
+            "simd_gflops" => simd = parse_f64(value).map_err(|e| bad(&e))?,
+            "lbuf_stationary_elems" => {
+                lbuf_stationary = Some(parse_num(value).map_err(|e| bad(&e))?)
+            }
+            "lbuf_horizontal_elems" => {
+                lbuf_horizontal = Some(parse_num(value).map_err(|e| bad(&e))?)
+            }
+            other => return Err(format!("line {}: unknown key `{other}`", lineno + 1)),
+        }
+    }
+
+    let mut c = AcceleratorConfig::new(name, groups, units, UnitGeometry::new(rows, cols), kind);
+    c.gbuf_total_bytes = (gbuf_mib * 1024.0 * 1024.0) as usize;
+    c.clock_ghz = clock;
+    c.dram_gbps = dram;
+    c.simd_gflops = simd;
+    if let Some(s) = lbuf_stationary {
+        c.lbuf_stationary_elems = s;
+    }
+    if let Some(h) = lbuf_horizontal {
+        c.lbuf_horizontal_elems = h;
+    }
+    c.validate()?;
+    Ok(c)
+}
+
+fn parse_num(s: &str) -> Result<usize, String> {
+    s.replace('_', "")
+        .parse::<usize>()
+        .map_err(|e| format!("bad integer `{s}`: {e}"))
+}
+
+fn parse_f64(s: &str) -> Result<f64, String> {
+    s.parse::<f64>().map_err(|e| format!("bad number `{s}`: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_config() {
+        let c = parse_config(
+            "# a FlexSA config\nname = my4f\ngroups = 4\nunits_per_group = 1\n\
+             unit_rows = 64\nunit_cols = 64\nkind = flexsa\ngbuf_total_mib = 10\n\
+             clock_ghz = 0.7\ndram_gbps = 270\nsimd_gflops = 500\n",
+        )
+        .unwrap();
+        assert_eq!(c.name, "my4f");
+        assert_eq!(c.groups, 4);
+        assert_eq!(c.kind, UnitKind::FlexSa);
+        assert_eq!(c.unit.rows, 64);
+        assert_eq!(c.total_pes(), 4 * 64 * 64);
+    }
+
+    #[test]
+    fn defaults_applied() {
+        let c = parse_config("name = d\n").unwrap();
+        assert_eq!(c.groups, 1);
+        assert_eq!(c.unit.rows, 128);
+        assert!((c.dram_gbps - 270.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let e = parse_config("grups = 4\n").unwrap_err();
+        assert!(e.contains("unknown key"), "{e}");
+    }
+
+    #[test]
+    fn bad_value_rejected_with_line() {
+        let e = parse_config("\ngroups = four\n").unwrap_err();
+        assert!(e.contains("line 2"), "{e}");
+    }
+
+    #[test]
+    fn invalid_geometry_rejected_via_validate() {
+        let e = parse_config("kind = flexsa\nunit_rows = 127\n").unwrap_err();
+        assert!(e.contains("even geometry"), "{e}");
+    }
+
+    #[test]
+    fn comments_and_underscores() {
+        let c = parse_config("groups = 2 # two groups\nlbuf_horizontal_elems = 32_768\n").unwrap();
+        assert_eq!(c.groups, 2);
+        assert_eq!(c.lbuf_horizontal_elems, 32_768);
+    }
+}

@@ -1,0 +1,128 @@
+//! The five accelerator configurations of the paper's Table I, plus the
+//! extra sweep points of Fig 5 (16×(32×32) and 64×(16×16) naive splits).
+
+use super::{AcceleratorConfig, UnitGeometry, UnitKind};
+
+/// Names of the Table I presets, in the paper's order.
+pub const PRESETS: [&str; 5] = ["1G1C", "1G4C", "4G4C", "1G1F", "4G1F"];
+
+/// All preset names this module can build (Table I + Fig 5 sweep points).
+pub fn preset_names() -> Vec<&'static str> {
+    vec!["1G1C", "1G4C", "4G4C", "1G1F", "4G1F", "16G4C", "4G16C", "64C", "16C-SWEEP", "1G16C", "1G64C"]
+}
+
+/// Build a named preset. Returns `None` for unknown names.
+///
+/// Table I:
+/// - `1G1C`: 1 group × 1 monolithic 128×128 core (WaveCore / TPU-v3-like).
+/// - `1G4C`: 1 group × 4 monolithic 64×64 cores sharing one GBUF.
+/// - `4G4C`: 4 groups × 4 monolithic 32×32 cores (GBUF split in four).
+/// - `1G1F`: 1 group × 1 FlexSA unit = 4 reconfigurable 64×64 sub-cores.
+/// - `4G1F`: 4 groups × 1 FlexSA unit each = 4×(4 × 32×32 sub-cores).
+///
+/// Fig 5 sweep extras (naive splits with matched total PEs):
+/// - `4G16C` / `16G4C`: 64 × (16×16) cores in two grouping styles.
+pub fn preset(name: &str) -> Option<AcceleratorConfig> {
+    let c = match name {
+        "1G1C" => AcceleratorConfig::new(
+            "1G1C",
+            1,
+            1,
+            UnitGeometry::new(128, 128),
+            UnitKind::Monolithic,
+        ),
+        "1G4C" => AcceleratorConfig::new(
+            "1G4C",
+            1,
+            4,
+            UnitGeometry::new(64, 64),
+            UnitKind::Monolithic,
+        ),
+        "4G4C" => AcceleratorConfig::new(
+            "4G4C",
+            4,
+            4,
+            UnitGeometry::new(32, 32),
+            UnitKind::Monolithic,
+        ),
+        "1G1F" => AcceleratorConfig::new(
+            "1G1F",
+            1,
+            1,
+            UnitGeometry::new(128, 128),
+            UnitKind::FlexSa,
+        ),
+        "4G1F" => AcceleratorConfig::new(
+            "4G1F",
+            4,
+            1,
+            UnitGeometry::new(64, 64),
+            UnitKind::FlexSa,
+        ),
+        // Fig 5 extra sweep points: 64 x (16x16) naive cores.
+        "16G4C" => AcceleratorConfig::new(
+            "16G4C",
+            16,
+            4,
+            UnitGeometry::new(16, 16),
+            UnitKind::Monolithic,
+        ),
+        "4G16C" | "64C" => AcceleratorConfig::new(
+            "4G16C",
+            4,
+            16,
+            UnitGeometry::new(16, 16),
+            UnitKind::Monolithic,
+        ),
+        // 16 x (32x32) as a single-GBUF variant, used in ablations.
+        "16C-SWEEP" | "1G16C" => AcceleratorConfig::new(
+            "1G16C",
+            1,
+            16,
+            UnitGeometry::new(32, 32),
+            UnitKind::Monolithic,
+        ),
+        // 64 x (16x16) with one shared GBUF (Fig 5 sweep end point).
+        "1G64C" => AcceleratorConfig::new(
+            "1G64C",
+            1,
+            64,
+            UnitGeometry::new(16, 16),
+            UnitKind::Monolithic,
+        ),
+        _ => return None,
+    };
+    Some(c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_presets_exist() {
+        for name in PRESETS {
+            let c = preset(name).expect(name);
+            assert_eq!(c.name, name);
+        }
+    }
+
+    #[test]
+    fn unknown_preset_is_none() {
+        assert!(preset("bogus").is_none());
+    }
+
+    #[test]
+    fn fig5_sweep_points_keep_pe_count() {
+        for name in ["16G4C", "4G16C", "16C-SWEEP"] {
+            assert_eq!(preset(name).unwrap().total_pes(), 128 * 128, "{name}");
+        }
+    }
+
+    #[test]
+    fn flexsa_presets_are_flexsa() {
+        assert_eq!(preset("1G1F").unwrap().kind, UnitKind::FlexSa);
+        assert_eq!(preset("4G1F").unwrap().kind, UnitKind::FlexSa);
+        assert_eq!(preset("1G1C").unwrap().kind, UnitKind::Monolithic);
+    }
+}

@@ -1,0 +1,205 @@
+//! Threaded sweep coordinator (the L3 orchestration layer).
+//!
+//! Figure regeneration sweeps the space `configs × models × pruning
+//! strengths × pruning intervals`; every cell is an independent
+//! whole-iteration simulation. The coordinator fans the cells out over a
+//! worker pool (std threads — tokio is not in the offline vendor set),
+//! preserves deterministic result order, and aggregates utilization /
+//! traffic / energy with epoch weighting.
+
+mod service;
+mod workloads;
+
+pub use service::{BatchPolicy, Request, Response, ServiceStats, SimService};
+pub use workloads::{paper_workloads, point_weights, ScheduleKind, Workload};
+
+use crate::config::AcceleratorConfig;
+use crate::models::{ChannelCounts, Model};
+use crate::sim::{simulate_model_epoch, IterationSim, SimOptions};
+use std::sync::{Arc, Mutex};
+
+/// One sweep cell: simulate `model` at `counts` on `cfg`.
+#[derive(Clone)]
+pub struct SweepJob {
+    pub cfg: Arc<AcceleratorConfig>,
+    pub model: Arc<Model>,
+    pub counts: ChannelCounts,
+    /// Epoch weight of this point in trajectory averages.
+    pub weight: f64,
+    pub opts: SimOptions,
+}
+
+/// Result of one sweep cell (same index as the submitted job).
+pub struct JobResult {
+    pub job: SweepJob,
+    pub sim: IterationSim,
+}
+
+/// Run all jobs across `threads` workers; results are returned in job
+/// order regardless of completion order.
+pub fn run_sweep(jobs: Vec<SweepJob>, threads: usize) -> Vec<JobResult> {
+    let threads = threads.max(1).min(jobs.len().max(1));
+    let n = jobs.len();
+    let jobs = Arc::new(jobs);
+    let next = Arc::new(Mutex::new(0usize));
+    let results: Arc<Mutex<Vec<Option<JobResult>>>> =
+        Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            let jobs = Arc::clone(&jobs);
+            let next = Arc::clone(&next);
+            let results = Arc::clone(&results);
+            s.spawn(move || loop {
+                let i = {
+                    let mut g = next.lock().unwrap();
+                    if *g >= jobs.len() {
+                        return;
+                    }
+                    let i = *g;
+                    *g += 1;
+                    i
+                };
+                let job = jobs[i].clone();
+                let sim = simulate_model_epoch(&job.cfg, &job.model, &job.counts, &job.opts);
+                results.lock().unwrap()[i] = Some(JobResult { job, sim });
+            });
+        }
+    });
+
+    Arc::try_unwrap(results)
+        .unwrap_or_else(|_| panic!("workers leaked results"))
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("job skipped"))
+        .collect()
+}
+
+/// Default worker-pool width.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Trajectory-averaged metrics for one (config, schedule) pair.
+#[derive(Debug, Clone, Default)]
+pub struct TrajectoryAverage {
+    /// Epoch-weighted average PE utilization (MAC-weighted, as in the
+    /// paper: total useful MACs over total PE-cycles of the run).
+    pub pe_utilization: f64,
+    /// Epoch-weighted mean GEMM cycles per iteration.
+    pub gemm_cycles: f64,
+    /// Epoch-weighted mean total (GEMM + SIMD) cycles per iteration.
+    pub total_cycles: f64,
+    /// Epoch-weighted mean GBUF→LBUF bytes per iteration.
+    pub onchip_traffic: f64,
+    /// Wave-mode histogram accumulated over the trajectory.
+    pub waves_by_mode: std::collections::BTreeMap<crate::isa::Mode, u64>,
+    /// Epoch-weighted mean useful MACs per iteration.
+    pub busy_macs: f64,
+    /// Epoch-weighted mean traffic counters.
+    pub traffic: crate::sim::Traffic,
+    pub weight_sum: f64,
+}
+
+/// Aggregate job results (all belonging to one (config, schedule) pair)
+/// into trajectory averages.
+pub fn aggregate(results: &[&JobResult]) -> TrajectoryAverage {
+    let mut a = TrajectoryAverage::default();
+    let mut busy = 0.0f64;
+    let mut cyc = 0.0f64;
+    let mut pes = 0.0f64;
+    let mut traffic_acc = [0.0f64; 5];
+    for r in results {
+        let w = r.job.weight;
+        a.weight_sum += w;
+        busy += r.sim.busy_macs as f64 * w;
+        cyc += r.sim.gemm_cycles * w;
+        pes = r.job.cfg.total_pes() as f64;
+        a.gemm_cycles += r.sim.gemm_cycles * w;
+        a.total_cycles += r.sim.total_cycles() * w;
+        a.onchip_traffic += r.sim.traffic.gbuf_to_lbuf as f64 * w;
+        a.busy_macs += r.sim.busy_macs as f64 * w;
+        traffic_acc[0] += r.sim.traffic.gbuf_to_lbuf as f64 * w;
+        traffic_acc[1] += r.sim.traffic.obuf_to_gbuf as f64 * w;
+        traffic_acc[2] += r.sim.traffic.dram_read as f64 * w;
+        traffic_acc[3] += r.sim.traffic.dram_write as f64 * w;
+        traffic_acc[4] += r.sim.traffic.overcore as f64 * w;
+        for (m, c) in &r.sim.waves_by_mode {
+            *a.waves_by_mode.entry(*m).or_insert(0) += (*c as f64 * w) as u64;
+        }
+    }
+    if a.weight_sum > 0.0 {
+        let w = a.weight_sum;
+        a.pe_utilization = busy / (pes * cyc.max(1e-12));
+        a.gemm_cycles /= w;
+        a.total_cycles /= w;
+        a.onchip_traffic /= w;
+        a.busy_macs /= w;
+        a.traffic = crate::sim::Traffic {
+            gbuf_to_lbuf: (traffic_acc[0] / w) as u64,
+            obuf_to_gbuf: (traffic_acc[1] / w) as u64,
+            dram_read: (traffic_acc[2] / w) as u64,
+            dram_write: (traffic_acc[3] / w) as u64,
+            overcore: (traffic_acc[4] / w) as u64,
+        };
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+    use crate::models::resnet50;
+
+    #[test]
+    fn sweep_matches_serial_execution() {
+        let cfg = Arc::new(preset("1G1C").unwrap());
+        let model = Arc::new(resnet50());
+        let counts = ChannelCounts::baseline(&model);
+        let jobs: Vec<SweepJob> = (0..4)
+            .map(|_| SweepJob {
+                cfg: Arc::clone(&cfg),
+                model: Arc::clone(&model),
+                counts: counts.clone(),
+                weight: 1.0,
+                opts: SimOptions::ideal(),
+            })
+            .collect();
+        let serial = simulate_model_epoch(&cfg, &model, &counts, &SimOptions::ideal());
+        let results = run_sweep(jobs, 4);
+        assert_eq!(results.len(), 4);
+        for r in &results {
+            assert_eq!(r.sim.busy_macs, serial.busy_macs);
+            assert!((r.sim.gemm_cycles - serial.gemm_cycles).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn aggregate_weights_epochs() {
+        let cfg = Arc::new(preset("1G1C").unwrap());
+        let model = Arc::new(resnet50());
+        let counts = ChannelCounts::baseline(&model);
+        let mk = |w: f64| SweepJob {
+            cfg: Arc::clone(&cfg),
+            model: Arc::clone(&model),
+            counts: counts.clone(),
+            weight: w,
+            opts: SimOptions::ideal(),
+        };
+        let results = run_sweep(vec![mk(1.0), mk(3.0)], 2);
+        let refs: Vec<&JobResult> = results.iter().collect();
+        let a = aggregate(&refs);
+        assert!((a.weight_sum - 4.0).abs() < 1e-12);
+        // Same sims => average equals the single value.
+        assert!((a.gemm_cycles - results[0].sim.gemm_cycles).abs() < 1.0);
+        assert!(a.pe_utilization > 0.5);
+    }
+
+    #[test]
+    fn empty_sweep_is_fine() {
+        let results = run_sweep(vec![], 8);
+        assert!(results.is_empty());
+    }
+}

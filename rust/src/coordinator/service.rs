@@ -1,0 +1,273 @@
+//! Long-running simulation service: the "what-if" engine an architecture
+//! team would park behind a design-space-exploration UI.
+//!
+//! Clients submit GEMM (or whole-model) simulation requests over a
+//! channel; the leader thread batches pending requests (dynamic batching
+//! with a size/latency threshold, vLLM-router style), routes each batch to
+//! the worker pool, and returns responses out of band. Deterministic: the
+//! same request always yields the same result regardless of batching.
+
+use crate::config::AcceleratorConfig;
+use crate::gemm::{GemmShape, Phase};
+use crate::sim::{simulate_gemm_shape, GemmSim, SimOptions};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// One simulation request.
+#[derive(Clone)]
+pub struct Request {
+    pub id: u64,
+    pub cfg: Arc<AcceleratorConfig>,
+    pub shape: GemmShape,
+    pub phase: Phase,
+    pub opts: SimOptions,
+}
+
+/// The service's answer to a request.
+pub struct Response {
+    pub id: u64,
+    pub sim: GemmSim,
+}
+
+/// Batching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Dispatch as soon as this many requests are pending.
+    pub max_batch: usize,
+    /// ... or when the oldest pending request has waited this long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 16, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Handle to a running service; dropping it shuts the service down.
+pub struct SimService {
+    tx: Option<Sender<Request>>,
+    rx: Receiver<Response>,
+    next_id: AtomicU64,
+    handle: Option<std::thread::JoinHandle<ServiceStats>>,
+}
+
+/// Counters the leader reports at shutdown.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServiceStats {
+    pub requests: u64,
+    pub batches: u64,
+    /// Batches dispatched because they hit `max_batch` (vs timing out).
+    pub full_batches: u64,
+}
+
+impl SimService {
+    /// Start the leader + `workers` simulation threads.
+    pub fn start(workers: usize, policy: BatchPolicy) -> SimService {
+        let (req_tx, req_rx) = channel::<Request>();
+        let (resp_tx, resp_rx) = channel::<Response>();
+        let handle = std::thread::spawn(move || leader(req_rx, resp_tx, workers, policy));
+        SimService {
+            tx: Some(req_tx),
+            rx: resp_rx,
+            next_id: AtomicU64::new(1),
+            handle: Some(handle),
+        }
+    }
+
+    /// Submit a request; returns its id.
+    pub fn submit(
+        &self,
+        cfg: &Arc<AcceleratorConfig>,
+        shape: GemmShape,
+        phase: Phase,
+        opts: SimOptions,
+    ) -> u64 {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .as_ref()
+            .expect("service shut down")
+            .send(Request { id, cfg: Arc::clone(cfg), shape, phase, opts })
+            .expect("service down");
+        id
+    }
+
+    /// Blocking receive of the next completed response (any order).
+    pub fn recv(&self) -> Option<Response> {
+        self.rx.recv().ok()
+    }
+
+    /// Shut down and collect stats.
+    pub fn shutdown(mut self) -> ServiceStats {
+        drop(self.tx.take());
+        // Drain remaining responses so the leader can exit.
+        while self.rx.try_recv().is_ok() {}
+        self.handle.take().map(|h| h.join().unwrap()).unwrap_or_default()
+    }
+}
+
+impl Drop for SimService {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Leader loop: accumulate → batch → fan out → respond.
+fn leader(
+    req_rx: Receiver<Request>,
+    resp_tx: Sender<Response>,
+    workers: usize,
+    policy: BatchPolicy,
+) -> ServiceStats {
+    let mut stats = ServiceStats::default();
+    let mut pending: Vec<Request> = Vec::new();
+    let mut oldest: Option<Instant> = None;
+    let mut closed = false;
+
+    loop {
+        // Pull requests without blocking past the batching deadline.
+        loop {
+            match req_rx.try_recv() {
+                Ok(r) => {
+                    if pending.is_empty() {
+                        oldest = Some(Instant::now());
+                    }
+                    pending.push(r);
+                    if pending.len() >= policy.max_batch {
+                        break;
+                    }
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    closed = true;
+                    break;
+                }
+            }
+        }
+
+        let due = pending.len() >= policy.max_batch
+            || (!pending.is_empty()
+                && oldest.map(|t| t.elapsed() >= policy.max_wait).unwrap_or(false))
+            || (closed && !pending.is_empty());
+
+        if due {
+            stats.batches += 1;
+            if pending.len() >= policy.max_batch {
+                stats.full_batches += 1;
+            }
+            stats.requests += pending.len() as u64;
+            let batch = std::mem::take(&mut pending);
+            oldest = None;
+            dispatch(batch, &resp_tx, workers);
+        } else if closed {
+            return stats;
+        } else if pending.is_empty() {
+            // Idle: block for the next request.
+            match req_rx.recv() {
+                Ok(r) => {
+                    oldest = Some(Instant::now());
+                    pending.push(r);
+                }
+                Err(_) => closed = true,
+            }
+        } else {
+            std::thread::sleep(Duration::from_micros(100));
+        }
+    }
+}
+
+/// Simulate a batch across scoped worker threads.
+fn dispatch(batch: Vec<Request>, resp_tx: &Sender<Response>, workers: usize) {
+    let workers = workers.max(1).min(batch.len());
+    let batch = Arc::new(batch);
+    let next = Arc::new(AtomicU64::new(0));
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            let batch = Arc::clone(&batch);
+            let next = Arc::clone(&next);
+            let tx = resp_tx.clone();
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed) as usize;
+                if i >= batch.len() {
+                    return;
+                }
+                let r = &batch[i];
+                let sim = simulate_gemm_shape(&r.cfg, r.shape, r.phase, &r.opts);
+                let _ = tx.send(Response { id: r.id, sim });
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+
+    #[test]
+    fn service_answers_all_requests() {
+        let svc = SimService::start(2, BatchPolicy::default());
+        let cfg = Arc::new(preset("1G1F").unwrap());
+        let mut ids = Vec::new();
+        for i in 0..20usize {
+            ids.push(svc.submit(
+                &cfg,
+                GemmShape::new(256 + i, 64, 128),
+                Phase::Forward,
+                SimOptions::ideal(),
+            ));
+        }
+        let mut got = Vec::new();
+        for _ in 0..20 {
+            got.push(svc.recv().expect("response").id);
+        }
+        got.sort_unstable();
+        ids.sort_unstable();
+        assert_eq!(got, ids);
+        let stats = svc.shutdown();
+        assert_eq!(stats.requests, 20);
+        assert!(stats.batches >= 1);
+    }
+
+    #[test]
+    fn batched_results_match_direct_simulation() {
+        let svc = SimService::start(3, BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) });
+        let cfg = Arc::new(preset("4G1F").unwrap());
+        let shape = GemmShape::new(1000, 71, 333);
+        let id = svc.submit(&cfg, shape, Phase::WeightGrad, SimOptions::hbm2());
+        let resp = svc.recv().unwrap();
+        assert_eq!(resp.id, id);
+        let direct = simulate_gemm_shape(&cfg, shape, Phase::WeightGrad, &SimOptions::hbm2());
+        assert_eq!(resp.sim.cycles, direct.cycles);
+        assert_eq!(resp.sim.busy_macs, direct.busy_macs);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn shutdown_with_no_requests_is_clean() {
+        let svc = SimService::start(1, BatchPolicy::default());
+        let stats = svc.shutdown();
+        assert_eq!(stats.requests, 0);
+    }
+
+    #[test]
+    fn full_batches_trigger_on_size() {
+        let policy = BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(10) };
+        let svc = SimService::start(1, policy);
+        let cfg = Arc::new(preset("1G1C").unwrap());
+        for _ in 0..4 {
+            svc.submit(&cfg, GemmShape::new(64, 64, 64), Phase::Forward, SimOptions::ideal());
+        }
+        for _ in 0..4 {
+            svc.recv().unwrap();
+        }
+        let stats = svc.shutdown();
+        assert_eq!(stats.requests, 4);
+        assert!(stats.full_batches >= 1, "{stats:?}");
+    }
+}

@@ -1,0 +1,156 @@
+//! The paper's evaluation workloads (§VII): three CNNs with their pruning
+//! trajectories, packaged for the sweep coordinator and figure harnesses.
+
+use crate::models::{inception_v4, mobilenet_v2, mobilenet_v2_width, resnet50, Model};
+use crate::pruning::{prunetrain_schedule, transfer_schedule, PruneSchedule, Strength};
+use std::sync::Arc;
+
+/// How a model's trajectory was produced.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScheduleKind {
+    /// PruneTrain while training (ResNet50).
+    PruneTrain(Strength),
+    /// ResNet50 statistics transferred by depth (Inception v4, §VII).
+    Transferred(Strength),
+    /// Static width variant (MobileNet v2: baseline vs 0.75×).
+    Static,
+}
+
+impl ScheduleKind {
+    pub fn strength(&self) -> Option<Strength> {
+        match self {
+            ScheduleKind::PruneTrain(s) | ScheduleKind::Transferred(s) => Some(*s),
+            ScheduleKind::Static => None,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            ScheduleKind::PruneTrain(s) => format!("prunetrain-{}", s.name()),
+            ScheduleKind::Transferred(s) => format!("transferred-{}", s.name()),
+            ScheduleKind::Static => "static".into(),
+        }
+    }
+}
+
+/// One evaluation model with its pruning trajectories.
+pub struct Workload {
+    pub model: Arc<Model>,
+    pub schedules: Vec<(ScheduleKind, PruneSchedule)>,
+}
+
+/// Build the three paper workloads (§VII):
+///
+/// - **ResNet50**: PruneTrain at low & high strength, 90 epochs, interval 10;
+/// - **Inception v4**: the ResNet50 statistics transferred by depth;
+/// - **MobileNet v2**: baseline and the statically pruned 0.75× variant
+///   (its "schedule" holds the two static widths; figures that prune by
+///   strength treat width 0.75 as both strengths, as in the paper).
+pub fn paper_workloads(epochs: usize, interval: usize, seed: u64) -> Vec<Workload> {
+    let resnet = Arc::new(resnet50());
+    let r_low = prunetrain_schedule(&resnet, Strength::Low, epochs, interval, seed);
+    let r_high = prunetrain_schedule(&resnet, Strength::High, epochs, interval, seed);
+
+    let inception = Arc::new(inception_v4());
+    let i_low = transfer_schedule(&r_low, &resnet, &inception);
+    let i_high = transfer_schedule(&r_high, &resnet, &inception);
+
+    let mobilenet = Arc::new(mobilenet_v2());
+    let m_base = PruneSchedule::static_baseline(&mobilenet, epochs);
+    // Width 0.75 re-expressed as counts on the width-1.0 group structure.
+    let slim = mobilenet_v2_width(0.75);
+    let slim_counts = crate::models::ChannelCounts(
+        slim.groups.iter().map(|g| g.base).collect(),
+    );
+    let m_slim = {
+        let base = mobilenet.total_macs(
+            mobilenet.default_batch,
+            &crate::models::ChannelCounts::baseline(&mobilenet),
+        ) as f64;
+        let macs = mobilenet.total_macs(mobilenet.default_batch, &slim_counts) as f64;
+        PruneSchedule {
+            model_name: mobilenet.name.clone(),
+            epochs,
+            interval: epochs,
+            points: vec![crate::pruning::PrunePoint {
+                epoch: 0,
+                counts: slim_counts,
+                macs_ratio: macs / base,
+            }],
+        }
+    };
+
+    vec![
+        Workload {
+            model: resnet,
+            schedules: vec![
+                (ScheduleKind::PruneTrain(Strength::Low), r_low),
+                (ScheduleKind::PruneTrain(Strength::High), r_high),
+            ],
+        },
+        Workload {
+            model: inception,
+            schedules: vec![
+                (ScheduleKind::Transferred(Strength::Low), i_low),
+                (ScheduleKind::Transferred(Strength::High), i_high),
+            ],
+        },
+        Workload {
+            model: mobilenet,
+            schedules: vec![(ScheduleKind::Static, m_base), (ScheduleKind::Static, m_slim)],
+        },
+    ]
+}
+
+/// Epoch weights for the points of a schedule (time each point's counts
+/// are in effect during the run; the final point gets one interval).
+pub fn point_weights(s: &PruneSchedule) -> Vec<f64> {
+    let n = s.points.len();
+    (0..n)
+        .map(|i| {
+            let start = s.points[i].epoch;
+            let end = if i + 1 < n { s.points[i + 1].epoch } else { start + s.interval };
+            (end - start) as f64
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn three_workloads_with_two_schedules_each() {
+        let ws = paper_workloads(90, 10, 42);
+        assert_eq!(ws.len(), 3);
+        for w in &ws {
+            assert_eq!(w.schedules.len(), 2);
+            for (_, s) in &w.schedules {
+                s.validate(&w.model).unwrap();
+            }
+        }
+        assert_eq!(ws[0].model.name, "resnet50");
+        assert_eq!(ws[1].model.name, "inception_v4");
+        assert_eq!(ws[2].model.name, "mobilenet_v2");
+    }
+
+    #[test]
+    fn mobilenet_slim_ratio_near_q56pct() {
+        // 0.75 width => MACs ~ 0.75^2 = 0.56 of baseline for pointwise-
+        // dominated compute.
+        let ws = paper_workloads(90, 10, 42);
+        let slim = &ws[2].schedules[1].1;
+        let r = slim.final_ratio();
+        assert!((0.4..0.75).contains(&r), "ratio={r}");
+    }
+
+    #[test]
+    fn point_weights_sum_to_run_length() {
+        let ws = paper_workloads(90, 10, 42);
+        let s = &ws[0].schedules[0].1;
+        let w = point_weights(s);
+        let sum: f64 = w.iter().sum();
+        assert!((sum - 100.0).abs() < 1e-9); // 10 points x 10 epochs
+        assert!(w.iter().all(|&x| (x - 10.0).abs() < 1e-9));
+    }
+}

@@ -1,0 +1,199 @@
+//! Dynamic-energy model (paper Fig 12), CACTI-lite.
+//!
+//! Per-access energies at 32 nm, calibrated to published figures
+//! (Horowitz ISSCC'14 energy table; HBM2 ≈ 3.9 pJ/bit; mixed-precision
+//! FMA unit of Zhang et al. ISCAS'18). SRAM energy per byte scales with
+//! the square root of the macro capacity (bank word/bit-line growth) —
+//! this is what makes the paper's distributed-GBUF observation come out:
+//! 4G4C moves more bytes but each access touches a 4× smaller GBUF slice.
+
+use crate::config::AcceleratorConfig;
+use crate::sim::{IterationSim, Traffic};
+
+/// Energy model constants.
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyModel {
+    /// bf16 multiply + f32 accumulate, pJ per MAC.
+    pub mac_pj: f64,
+    /// Local (KB-scale) buffer access, pJ/B.
+    pub lbuf_pj_per_byte: f64,
+    /// GBUF access at the 10 MiB reference capacity, pJ/B.
+    pub gbuf_pj_per_byte_10mib: f64,
+    /// HBM2 access, pJ/B.
+    pub dram_pj_per_byte: f64,
+    /// Over-core repeatered wire transfer, pJ/B.
+    pub overcore_pj_per_byte: f64,
+    /// SIMD array op energy, pJ per FLOP.
+    pub simd_pj_per_flop: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        Self {
+            mac_pj: 0.5,
+            lbuf_pj_per_byte: 0.6,
+            gbuf_pj_per_byte_10mib: 8.0,
+            dram_pj_per_byte: 31.2, // 3.9 pJ/bit
+            overcore_pj_per_byte: 0.4,
+            simd_pj_per_flop: 0.8,
+        }
+    }
+}
+
+impl EnergyModel {
+    /// GBUF access energy for a slice of `bytes` capacity (√-capacity
+    /// scaling, floored at the LBUF energy).
+    pub fn gbuf_pj_per_byte(&self, slice_bytes: usize) -> f64 {
+        let ref_cap = 10.0 * 1024.0 * 1024.0;
+        let e = self.gbuf_pj_per_byte_10mib * (slice_bytes as f64 / ref_cap).sqrt();
+        e.max(self.lbuf_pj_per_byte)
+    }
+}
+
+/// Energy breakdown per training iteration, in millijoules (Fig 12's
+/// categories).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    pub comp_mj: f64,
+    pub lbuf_mj: f64,
+    pub gbuf_mj: f64,
+    pub dram_mj: f64,
+    pub overcore_mj: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_mj(&self) -> f64 {
+        self.comp_mj + self.lbuf_mj + self.gbuf_mj + self.dram_mj + self.overcore_mj
+    }
+
+    pub fn add(&mut self, o: &EnergyBreakdown) {
+        self.comp_mj += o.comp_mj;
+        self.lbuf_mj += o.lbuf_mj;
+        self.gbuf_mj += o.gbuf_mj;
+        self.dram_mj += o.dram_mj;
+        self.overcore_mj += o.overcore_mj;
+    }
+}
+
+/// GBUF byte-accesses implied by the traffic counters: LBUF fills read the
+/// GBUF, OBUF drains write it, DRAM refills write it, writebacks read it.
+fn gbuf_accesses(t: &Traffic) -> u64 {
+    t.gbuf_to_lbuf + t.obuf_to_gbuf + t.dram_read + t.dram_write
+}
+
+/// LBUF byte-accesses: each loaded byte is written once into the LBUF and
+/// read once into the PE array; OBUF bytes are written by the array and
+/// read by the store engine.
+fn lbuf_accesses(t: &Traffic) -> u64 {
+    2 * t.gbuf_to_lbuf + 2 * t.obuf_to_gbuf
+}
+
+/// Energy of one simulated training iteration (GEMM phase; add
+/// [`simd_energy`] for the §VIII end-to-end view).
+pub fn iteration_energy(
+    cfg: &AcceleratorConfig,
+    model: &EnergyModel,
+    sim: &IterationSim,
+) -> EnergyBreakdown {
+    let t = &sim.traffic;
+    let gbuf_pj = model.gbuf_pj_per_byte(cfg.gbuf_group_bytes());
+    EnergyBreakdown {
+        comp_mj: sim.busy_macs as f64 * model.mac_pj * 1e-9,
+        lbuf_mj: lbuf_accesses(t) as f64 * model.lbuf_pj_per_byte * 1e-9,
+        gbuf_mj: gbuf_accesses(t) as f64 * gbuf_pj * 1e-9,
+        dram_mj: t.dram() as f64 * model.dram_pj_per_byte * 1e-9,
+        overcore_mj: t.overcore as f64 * model.overcore_pj_per_byte * 1e-9,
+    }
+}
+
+/// Energy from aggregated counters (used by trajectory-averaged figures).
+pub fn energy_from_parts(
+    cfg: &AcceleratorConfig,
+    model: &EnergyModel,
+    busy_macs: f64,
+    t: &Traffic,
+) -> EnergyBreakdown {
+    let gbuf_pj = model.gbuf_pj_per_byte(cfg.gbuf_group_bytes());
+    EnergyBreakdown {
+        comp_mj: busy_macs * model.mac_pj * 1e-9,
+        lbuf_mj: lbuf_accesses(t) as f64 * model.lbuf_pj_per_byte * 1e-9,
+        gbuf_mj: gbuf_accesses(t) as f64 * gbuf_pj * 1e-9,
+        dram_mj: t.dram() as f64 * model.dram_pj_per_byte * 1e-9,
+        overcore_mj: t.overcore as f64 * model.overcore_pj_per_byte * 1e-9,
+    }
+}
+
+/// Energy of the SIMD (non-GEMM) layers of an iteration.
+pub fn simd_energy(model: &EnergyModel, sim: &IterationSim) -> EnergyBreakdown {
+    EnergyBreakdown {
+        comp_mj: sim.simd.flops * model.simd_pj_per_flop * 1e-9,
+        dram_mj: sim.simd.dram_bytes * model.dram_pj_per_byte * 1e-9,
+        ..Default::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+    use crate::models::{resnet50, ChannelCounts};
+    use crate::sim::{simulate_model_epoch, SimOptions};
+
+    fn energy_for(cfg_name: &str) -> EnergyBreakdown {
+        let cfg = preset(cfg_name).unwrap();
+        let m = resnet50();
+        let counts = ChannelCounts::baseline(&m);
+        let s = simulate_model_epoch(&cfg, &m, &counts, &SimOptions::hbm2());
+        iteration_energy(&cfg, &EnergyModel::default(), &s)
+    }
+
+    #[test]
+    fn gbuf_energy_scales_with_capacity() {
+        let e = EnergyModel::default();
+        let big = e.gbuf_pj_per_byte(10 * 1024 * 1024);
+        let quarter = e.gbuf_pj_per_byte(10 * 1024 * 1024 / 4);
+        assert!((big - 8.0).abs() < 1e-9);
+        assert!((quarter - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn naive_split_costs_energy() {
+        // Paper Fig 12: 1G4C consumes >~20% more than 1G1C/FlexSA on
+        // ResNet50 due to lost in-core reuse.
+        let base = energy_for("1G1C");
+        let split = energy_for("1G4C");
+        let flexsa = energy_for("1G1F");
+        assert!(split.total_mj() > 1.10 * base.total_mj(),
+            "split={} base={}", split.total_mj(), base.total_mj());
+        assert!(flexsa.total_mj() < split.total_mj());
+        // FlexSA stays within a few percent of the large core.
+        assert!((flexsa.total_mj() - base.total_mj()).abs() / base.total_mj() < 0.08,
+            "flexsa={} base={}", flexsa.total_mj(), base.total_mj());
+    }
+
+    #[test]
+    fn distributed_gbuf_cheaper_per_access() {
+        // 4G4C has more traffic than 1G4C but similar energy (paper §VIII):
+        // each access hits a quarter-size GBUF slice.
+        let g1 = energy_for("1G4C");
+        let g4 = energy_for("4G4C");
+        let ratio = g4.total_mj() / g1.total_mj();
+        assert!((0.8..1.4).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn overcore_energy_is_small() {
+        // Paper: "the additional energy consumed by over-core data
+        // transmission is very small".
+        let f = energy_for("1G1F");
+        assert!(f.overcore_mj < 0.05 * f.total_mj(), "{f:?}");
+    }
+
+    #[test]
+    fn breakdown_total_is_sum() {
+        let e = energy_for("1G1C");
+        let sum = e.comp_mj + e.lbuf_mj + e.gbuf_mj + e.dram_mj + e.overcore_mj;
+        assert!((e.total_mj() - sum).abs() < 1e-12);
+        assert!(e.comp_mj > 0.0 && e.gbuf_mj > 0.0 && e.dram_mj > 0.0);
+    }
+}

@@ -1,0 +1,144 @@
+//! GEMM workload descriptions.
+//!
+//! Everything the FlexSA compiler and simulator consume is ultimately a
+//! [`Gemm`]: `C[M×N] += A[M×K] · B[K×N]` with 2-byte (mixed-precision bf16)
+//! elements, tagged with provenance (which layer, which training phase).
+
+/// Bytes per matrix element (mixed-precision training: bf16 inputs).
+pub const ELEM_BYTES: usize = 2;
+/// Bytes per accumulator element (f32 partial sums spilled through OBUF).
+pub const ACC_BYTES: usize = 4;
+
+/// The three GEMM execution phases of a conv/FC layer in training (§VII).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// Forward propagation: `M = B·H·W` (large), `N = C_out`, `K = C_in·k²`.
+    Forward,
+    /// Input ("data") gradient: `M = B·H·W`, `N = C_in`, `K = C_out·k²`.
+    DataGrad,
+    /// Weight gradient: `M = C_out`, `N = C_in·k²` (both small),
+    /// `K = B·H·W` (large accumulation depth).
+    WeightGrad,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 3] = [Phase::Forward, Phase::DataGrad, Phase::WeightGrad];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Forward => "fwd",
+            Phase::DataGrad => "dgrad",
+            Phase::WeightGrad => "wgrad",
+        }
+    }
+}
+
+/// A single GEMM: `C[m×n] += A[m×k] · B[k×n]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GemmShape {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+impl GemmShape {
+    pub fn new(m: usize, n: usize, k: usize) -> Self {
+        Self { m, n, k }
+    }
+
+    /// Multiply-accumulate count (1 MAC = 2 FLOPs).
+    pub fn macs(&self) -> u64 {
+        self.m as u64 * self.n as u64 * self.k as u64
+    }
+
+    pub fn flops(&self) -> u64 {
+        2 * self.macs()
+    }
+
+    /// Input A bytes.
+    pub fn a_bytes(&self) -> u64 {
+        (self.m * self.k * ELEM_BYTES) as u64
+    }
+
+    /// Input B bytes.
+    pub fn b_bytes(&self) -> u64 {
+        (self.k * self.n * ELEM_BYTES) as u64
+    }
+
+    /// Output C bytes (stored at input precision).
+    pub fn c_bytes(&self) -> u64 {
+        (self.m * self.n * ELEM_BYTES) as u64
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.m == 0 || self.n == 0 || self.k == 0
+    }
+
+    /// Arithmetic intensity (MACs per input+output byte) — used by the
+    /// scheduler to decide DRAM-boundedness.
+    pub fn arithmetic_intensity(&self) -> f64 {
+        let bytes = self.a_bytes() + self.b_bytes() + self.c_bytes();
+        if bytes == 0 { 0.0 } else { self.macs() as f64 / bytes as f64 }
+    }
+}
+
+impl std::fmt::Display for GemmShape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}x{}x{}]", self.m, self.n, self.k)
+    }
+}
+
+/// A GEMM tagged with provenance for reporting.
+#[derive(Debug, Clone)]
+pub struct Gemm {
+    pub shape: GemmShape,
+    pub phase: Phase,
+    /// Index of the originating layer in the model description.
+    pub layer: usize,
+    /// Human-readable layer name (e.g. `res3a_branch2b`).
+    pub name: String,
+}
+
+impl Gemm {
+    pub fn new(shape: GemmShape, phase: Phase, layer: usize, name: impl Into<String>) -> Self {
+        Self { shape, phase, layer, name: name.into() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn macs_and_flops() {
+        let g = GemmShape::new(4, 8, 16);
+        assert_eq!(g.macs(), 4 * 8 * 16);
+        assert_eq!(g.flops(), 2 * 4 * 8 * 16);
+    }
+
+    #[test]
+    fn byte_counts_bf16() {
+        let g = GemmShape::new(10, 20, 30);
+        assert_eq!(g.a_bytes(), 10 * 30 * 2);
+        assert_eq!(g.b_bytes(), 30 * 20 * 2);
+        assert_eq!(g.c_bytes(), 10 * 20 * 2);
+    }
+
+    #[test]
+    fn empty_detection() {
+        assert!(GemmShape::new(0, 5, 5).is_empty());
+        assert!(!GemmShape::new(1, 1, 1).is_empty());
+    }
+
+    #[test]
+    fn intensity_grows_with_k_reuse() {
+        let small = GemmShape::new(64, 64, 64);
+        let big = GemmShape::new(1024, 1024, 1024);
+        assert!(big.arithmetic_intensity() > small.arithmetic_intensity());
+    }
+
+    #[test]
+    fn display_round_trip_readable() {
+        assert_eq!(GemmShape::new(1, 2, 3).to_string(), "[1x2x3]");
+    }
+}

@@ -1,0 +1,281 @@
+//! The FlexSA instruction set (paper §VI-B).
+//!
+//! The compiler communicates with the FlexSA micro-architecture through a
+//! small instruction set: vector loads between GBUF and LBUFs, stationary
+//! input shifting, wave execution under an operating mode, output store,
+//! and a sync barrier. Programs are per-group instruction streams consumed
+//! by the simulator; a text round-trip (`encode`/`parse`) supports trace
+//! dumps and diffing in tests.
+
+mod program;
+
+pub use program::{Program, ProgramStats};
+
+/// FlexSA operating modes (paper Fig 8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Mode {
+    /// Full wave: all four sub-cores as one large systolic array.
+    Fw,
+    /// Vertical sub-wave: two vertical (half-width, full-height) sub-arrays.
+    Vsw,
+    /// Horizontal sub-wave: two horizontal (full-width, half-height)
+    /// sub-arrays.
+    Hsw,
+    /// Independent sub-wave: four independent sub-cores.
+    Isw,
+    /// Monolithic array of a non-FlexSA core (no sub-array modes).
+    Mono,
+}
+
+impl Mode {
+    pub const FLEXSA_MODES: [Mode; 4] = [Mode::Fw, Mode::Vsw, Mode::Hsw, Mode::Isw];
+
+    /// Dense index (for fixed-size counters on the simulator hot path).
+    #[inline]
+    pub fn index(&self) -> usize {
+        match self {
+            Mode::Fw => 0,
+            Mode::Vsw => 1,
+            Mode::Hsw => 2,
+            Mode::Isw => 3,
+            Mode::Mono => 4,
+        }
+    }
+
+    /// Inverse of [`Mode::index`].
+    pub fn from_index(i: usize) -> Mode {
+        [Mode::Fw, Mode::Vsw, Mode::Hsw, Mode::Isw, Mode::Mono][i]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mode::Fw => "FW",
+            Mode::Vsw => "VSW",
+            Mode::Hsw => "HSW",
+            Mode::Isw => "ISW",
+            Mode::Mono => "MONO",
+        }
+    }
+
+    /// Number of independent waves this mode executes in parallel on one
+    /// FlexSA unit.
+    pub fn parallel_waves(&self) -> usize {
+        match self {
+            Mode::Fw | Mode::Mono => 1,
+            Mode::Vsw | Mode::Hsw => 2,
+            Mode::Isw => 4,
+        }
+    }
+
+    /// Inter-core (high-reuse) mode? ISW is the only intra-core FlexSA mode.
+    pub fn is_inter_core(&self) -> bool {
+        matches!(self, Mode::Fw | Mode::Vsw | Mode::Hsw)
+    }
+
+    pub fn parse(s: &str) -> Option<Mode> {
+        Some(match s {
+            "FW" => Mode::Fw,
+            "VSW" => Mode::Vsw,
+            "HSW" => Mode::Hsw,
+            "ISW" => Mode::Isw,
+            "MONO" => Mode::Mono,
+            _ => return None,
+        })
+    }
+}
+
+impl std::fmt::Display for Mode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// On-chip buffer identifiers for load/store instructions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Buf {
+    /// Global buffer of the unit's group.
+    Gbuf,
+    /// Stationary-input local buffer (top of the array).
+    LbufV,
+    /// Horizontally-shifted-input local buffer (left of the array).
+    LbufH,
+    /// Output buffer (bottom of the array).
+    Obuf,
+    /// Off-chip DRAM.
+    Dram,
+}
+
+impl Buf {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Buf::Gbuf => "GBUF",
+            Buf::LbufV => "LBUF_V",
+            Buf::LbufH => "LBUF_H",
+            Buf::Obuf => "OBUF",
+            Buf::Dram => "DRAM",
+        }
+    }
+}
+
+/// One FlexSA instruction (paper Algorithm 1 and §VI-B).
+///
+/// Sizes are in elements; `unit` selects the target unit inside the group;
+/// `subwave` selects the sub-array for VSW/HSW/ISW (0..parallel_waves).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Inst {
+    /// `LdLBUF_V(gbuf_ptr, lbuf_ptr, k, n)` — load stationary inputs.
+    /// `broadcast` marks the local-broadcast datapath (③/④ in Fig 7): the
+    /// data is loaded from GBUF once and mirrored into the paired
+    /// sub-array's LBUF without extra GBUF traffic.
+    LdLbufV { unit: usize, subwave: usize, k: usize, n: usize, broadcast: bool },
+    /// `LdLBUF_H(gbuf_ptr, lbuf_ptr, k, m)` — load horizontally-shifted
+    /// inputs. `shared` marks HSW's row-pair reuse (the stream passes
+    /// through both cores of a row).
+    LdLbufH { unit: usize, subwave: usize, k: usize, m: usize, shared: bool },
+    /// `ShiftV(k, n)` — shift pre-loaded stationary inputs into the PEs.
+    ShiftV { unit: usize, subwave: usize, k: usize, n: usize },
+    /// `ExecGEMM(mode, m, n, k)` — execute one systolic wave (per-sub-wave
+    /// sizes for VSW/HSW/ISW).
+    ExecGemm { unit: usize, mode: Mode, subwave: usize, m: usize, n: usize, k: usize },
+    /// `StLBUF(obuf_ptr, dst_ptr)` — store accumulated outputs (m×n
+    /// elements) from OBUF to GBUF or DRAM.
+    StLbuf { unit: usize, subwave: usize, m: usize, n: usize, dst: Buf },
+    /// Barrier: all preceding instructions of this unit complete.
+    Sync { unit: usize },
+}
+
+impl Inst {
+    pub fn unit(&self) -> usize {
+        match self {
+            Inst::LdLbufV { unit, .. }
+            | Inst::LdLbufH { unit, .. }
+            | Inst::ShiftV { unit, .. }
+            | Inst::ExecGemm { unit, .. }
+            | Inst::StLbuf { unit, .. }
+            | Inst::Sync { unit } => *unit,
+        }
+    }
+
+    /// Text encoding (one line per instruction), stable for trace diffing.
+    pub fn encode(&self) -> String {
+        match self {
+            Inst::LdLbufV { unit, subwave, k, n, broadcast } => {
+                format!("u{unit}.w{subwave} LdLBUF_V k={k} n={n} bcast={}", *broadcast as u8)
+            }
+            Inst::LdLbufH { unit, subwave, k, m, shared } => {
+                format!("u{unit}.w{subwave} LdLBUF_H k={k} m={m} shared={}", *shared as u8)
+            }
+            Inst::ShiftV { unit, subwave, k, n } => {
+                format!("u{unit}.w{subwave} ShiftV k={k} n={n}")
+            }
+            Inst::ExecGemm { unit, mode, subwave, m, n, k } => {
+                format!("u{unit}.w{subwave} ExecGEMM mode={} m={m} n={n} k={k}", mode.name())
+            }
+            Inst::StLbuf { unit, subwave, m, n, dst } => {
+                format!("u{unit}.w{subwave} StLBUF m={m} n={n} dst={}", dst.name())
+            }
+            Inst::Sync { unit } => format!("u{unit} sync"),
+        }
+    }
+
+    /// Parse the `encode` format back. Returns `None` on malformed input.
+    pub fn parse(line: &str) -> Option<Inst> {
+        let mut it = line.split_whitespace();
+        let head = it.next()?;
+        let op = it.next()?;
+        let kv: std::collections::HashMap<&str, &str> =
+            it.filter_map(|t| t.split_once('=')).collect();
+        let get = |key: &str| -> Option<usize> { kv.get(key)?.parse().ok() };
+
+        if op == "sync" {
+            let unit = head.strip_prefix('u')?.parse().ok()?;
+            return Some(Inst::Sync { unit });
+        }
+        let (u, w) = head.split_once('.')?;
+        let unit = u.strip_prefix('u')?.parse().ok()?;
+        let subwave = w.strip_prefix('w')?.parse().ok()?;
+        Some(match op {
+            "LdLBUF_V" => Inst::LdLbufV {
+                unit,
+                subwave,
+                k: get("k")?,
+                n: get("n")?,
+                broadcast: get("bcast")? != 0,
+            },
+            "LdLBUF_H" => Inst::LdLbufH {
+                unit,
+                subwave,
+                k: get("k")?,
+                m: get("m")?,
+                shared: get("shared")? != 0,
+            },
+            "ShiftV" => Inst::ShiftV { unit, subwave, k: get("k")?, n: get("n")? },
+            "ExecGEMM" => Inst::ExecGemm {
+                unit,
+                subwave,
+                mode: Mode::parse(kv.get("mode")?)?,
+                m: get("m")?,
+                n: get("n")?,
+                k: get("k")?,
+            },
+            "StLBUF" => Inst::StLbuf {
+                unit,
+                subwave,
+                m: get("m")?,
+                n: get("n")?,
+                dst: match *kv.get("dst")? {
+                    "GBUF" => Buf::Gbuf,
+                    "DRAM" => Buf::Dram,
+                    _ => return None,
+                },
+            },
+            _ => return None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_properties() {
+        assert_eq!(Mode::Fw.parallel_waves(), 1);
+        assert_eq!(Mode::Vsw.parallel_waves(), 2);
+        assert_eq!(Mode::Isw.parallel_waves(), 4);
+        assert!(Mode::Fw.is_inter_core());
+        assert!(!Mode::Isw.is_inter_core());
+    }
+
+    #[test]
+    fn encode_parse_round_trip() {
+        let insts = vec![
+            Inst::LdLbufV { unit: 0, subwave: 1, k: 64, n: 128, broadcast: true },
+            Inst::LdLbufH { unit: 2, subwave: 0, k: 128, m: 256, shared: false },
+            Inst::ShiftV { unit: 0, subwave: 0, k: 128, n: 128 },
+            Inst::ExecGemm { unit: 1, mode: Mode::Hsw, subwave: 1, m: 256, n: 128, k: 64 },
+            Inst::StLbuf { unit: 0, subwave: 0, m: 256, n: 128, dst: Buf::Gbuf },
+            Inst::Sync { unit: 3 },
+        ];
+        for i in &insts {
+            let line = i.encode();
+            let back = Inst::parse(&line).unwrap_or_else(|| panic!("parse `{line}`"));
+            assert_eq!(&back, i, "{line}");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Inst::parse("").is_none());
+        assert!(Inst::parse("u0.w0 Frobnicate m=1").is_none());
+        assert!(Inst::parse("u0.w0 ExecGEMM mode=XX m=1 n=1 k=1").is_none());
+        assert!(Inst::parse("u0.w0 LdLBUF_V k=64").is_none()); // missing n
+    }
+
+    #[test]
+    fn mode_name_round_trip() {
+        for m in Mode::FLEXSA_MODES {
+            assert_eq!(Mode::parse(m.name()), Some(m));
+        }
+    }
+}

@@ -1,0 +1,171 @@
+//! Instruction program container: the compiler's output for one core group.
+
+use super::{Inst, Mode};
+
+/// An instruction stream for one core group, plus summary statistics the
+/// figure harnesses consume (mode breakdown, MAC counts).
+#[derive(Debug, Clone, Default)]
+pub struct Program {
+    pub insts: Vec<Inst>,
+}
+
+/// Aggregated statistics of a program.
+#[derive(Debug, Clone, Default)]
+pub struct ProgramStats {
+    /// ExecGEMM count per mode (each parallel sub-wave counted once).
+    pub waves_by_mode: std::collections::BTreeMap<Mode, u64>,
+    /// Total useful MACs.
+    pub macs: u64,
+    pub loads_v: u64,
+    pub loads_h: u64,
+    pub stores: u64,
+    pub syncs: u64,
+}
+
+impl ProgramStats {
+    /// Fraction of waves executed in inter-core (high-reuse) modes.
+    pub fn inter_core_fraction(&self) -> f64 {
+        let total: u64 = self.waves_by_mode.values().sum();
+        if total == 0 {
+            return f64::NAN;
+        }
+        let inter: u64 = self
+            .waves_by_mode
+            .iter()
+            .filter(|(m, _)| m.is_inter_core())
+            .map(|(_, c)| c)
+            .sum();
+        inter as f64 / total as f64
+    }
+
+    /// Wave-count fraction per mode, in FW/VSW/HSW/ISW order (Fig 13).
+    pub fn mode_fractions(&self) -> Vec<(Mode, f64)> {
+        let total: u64 = self.waves_by_mode.values().sum();
+        Mode::FLEXSA_MODES
+            .iter()
+            .map(|m| {
+                let c = self.waves_by_mode.get(m).copied().unwrap_or(0);
+                (*m, if total == 0 { 0.0 } else { c as f64 / total as f64 })
+            })
+            .collect()
+    }
+}
+
+impl Program {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, inst: Inst) {
+        self.insts.push(inst);
+    }
+
+    pub fn len(&self) -> usize {
+        self.insts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.insts.is_empty()
+    }
+
+    /// Compute summary statistics.
+    pub fn stats(&self) -> ProgramStats {
+        let mut s = ProgramStats::default();
+        for i in &self.insts {
+            match i {
+                Inst::ExecGemm { mode, m, n, k, .. } => {
+                    *s.waves_by_mode.entry(*mode).or_insert(0) += 1;
+                    s.macs += (*m as u64) * (*n as u64) * (*k as u64);
+                }
+                Inst::LdLbufV { .. } => s.loads_v += 1,
+                Inst::LdLbufH { .. } => s.loads_h += 1,
+                Inst::StLbuf { .. } => s.stores += 1,
+                Inst::Sync { .. } => s.syncs += 1,
+                Inst::ShiftV { .. } => {}
+            }
+        }
+        s
+    }
+
+    /// Dump the program as text, one instruction per line.
+    pub fn encode(&self) -> String {
+        let mut out = String::with_capacity(self.insts.len() * 40);
+        for i in &self.insts {
+            out.push_str(&i.encode());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Parse a text dump back into a program.
+    pub fn parse(text: &str) -> Result<Program, String> {
+        let mut p = Program::new();
+        for (no, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let inst =
+                Inst::parse(line).ok_or_else(|| format!("line {}: bad inst `{line}`", no + 1))?;
+            p.push(inst);
+        }
+        Ok(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Buf;
+
+    fn sample() -> Program {
+        let mut p = Program::new();
+        p.push(Inst::LdLbufV { unit: 0, subwave: 0, k: 128, n: 128, broadcast: false });
+        p.push(Inst::ShiftV { unit: 0, subwave: 0, k: 128, n: 128 });
+        p.push(Inst::LdLbufH { unit: 0, subwave: 0, k: 128, m: 256, shared: false });
+        p.push(Inst::ExecGemm { unit: 0, mode: Mode::Fw, subwave: 0, m: 256, n: 128, k: 128 });
+        p.push(Inst::ExecGemm { unit: 0, mode: Mode::Isw, subwave: 0, m: 64, n: 32, k: 32 });
+        p.push(Inst::StLbuf { unit: 0, subwave: 0, m: 256, n: 128, dst: Buf::Gbuf });
+        p.push(Inst::Sync { unit: 0 });
+        p
+    }
+
+    #[test]
+    fn stats_counts() {
+        let s = sample().stats();
+        assert_eq!(s.waves_by_mode[&Mode::Fw], 1);
+        assert_eq!(s.waves_by_mode[&Mode::Isw], 1);
+        assert_eq!(s.macs, 256 * 128 * 128 + 64 * 32 * 32);
+        assert_eq!(s.loads_v, 1);
+        assert_eq!(s.loads_h, 1);
+        assert_eq!(s.stores, 1);
+        assert_eq!(s.syncs, 1);
+    }
+
+    #[test]
+    fn inter_core_fraction() {
+        let s = sample().stats();
+        assert!((s.inter_core_fraction() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn program_text_round_trip() {
+        let p = sample();
+        let text = p.encode();
+        let q = Program::parse(&text).unwrap();
+        assert_eq!(p.insts, q.insts);
+    }
+
+    #[test]
+    fn parse_reports_bad_line() {
+        let e = Program::parse("u0.w0 ExecGEMM mode=FW m=1 n=1 k=1\njunk\n").unwrap_err();
+        assert!(e.contains("line 2"), "{e}");
+    }
+
+    #[test]
+    fn mode_fractions_sum_to_one() {
+        let f = sample().stats().mode_fractions();
+        let sum: f64 = f.iter().map(|(_, v)| v).sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+    }
+}

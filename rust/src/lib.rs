@@ -1,0 +1,40 @@
+//! # FlexSA — Flexible Systolic Array Architecture (full-system reproduction)
+//!
+//! Reproduction of *FlexSA: Flexible Systolic Array Architecture for
+//! Efficient Pruned DNN Model Training* (Lym & Erez, 2020) as a three-layer
+//! rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)** — the paper's systems contribution: accelerator
+//!   configuration ([`config`]), CNN model zoo and GEMM extraction
+//!   ([`models`]), PruneTrain-style pruning substrate ([`pruning`]), the
+//!   FlexSA ISA ([`isa`]), the compile-time GEMM tiling heuristic
+//!   ([`compiler`]), the instruction-level simulator ([`sim`]), energy and
+//!   area models ([`energy`], [`area`]), figure/report harnesses
+//!   ([`report`]), the PJRT runtime bridge ([`runtime`]), the end-to-end
+//!   prune-while-train driver ([`trainer`]) and the threaded sweep
+//!   coordinator ([`coordinator`]).
+//! - **L2/L1 (python, build-time only)** — a JAX PruneTrain model whose
+//!   convolutions call a Pallas systolic-wave GEMM kernel; AOT-lowered to
+//!   HLO text consumed by [`runtime`]. Python never runs on the request
+//!   path.
+//!
+//! See `DESIGN.md` for the experiment index and modeling decisions, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod area;
+pub mod bench_harness;
+pub mod cli;
+pub mod compiler;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod gemm;
+pub mod isa;
+pub mod models;
+pub mod proptest;
+pub mod pruning;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod trainer;
+pub mod util;

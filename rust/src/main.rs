@@ -1,0 +1,210 @@
+//! `flexsa` — leader binary: figure regeneration, trace dumps, one-off
+//! simulations, and the end-to-end prune-while-train driver.
+
+use flexsa::cli::Args;
+use flexsa::compiler::compile_gemm;
+use flexsa::config::{parse_config, preset, preset_names};
+use flexsa::coordinator::default_threads;
+use flexsa::gemm::{GemmShape, Phase};
+use flexsa::pruning::Strength;
+use flexsa::report::figures as fig;
+use flexsa::sim::{simulate_gemm, SimOptions};
+
+const USAGE: &str = "\
+flexsa — FlexSA (Lym & Erez 2020) full-system reproduction
+
+USAGE: flexsa <command> [args] [--flags]
+
+figure regeneration (paper-vs-measured):
+  report [--threads N] [--csv DIR]           all tables and figures
+  table1                                     Table I configurations
+  fig3 [--strength low|high]                 pruning timeline on 1G1C
+  fig5                                       naive core-size sweep
+  fig6                                       splitting area overhead
+  fig10 [--ideal]                            PE utilization / speedup
+  fig11                                      on-chip traffic
+  fig12                                      energy breakdown
+  fig13                                      FlexSA mode breakdown
+  area                                       FlexSA area itemization (SecV-B)
+  ablate                                     ShiftV/ramp modeling ablations
+  e2e-layers                                 end-to-end incl SIMD layers
+
+tools:
+  configs                                    list presets
+  simulate M N K [--config NAME] [--phase fwd|dgrad|wgrad] [--ideal]
+  compile M N K [--config NAME] [--phase ..] dump the instruction trace
+  schedule [--model resnet50] [--strength low|high] [--seed S]
+  train [--steps N] [--artifacts DIR]        end-to-end prune-while-train
+                                             via PJRT (python never on path)
+
+common flags: --threads N (default: all cores), --config NAME|@FILE
+";
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn load_config(args: &Args) -> Result<flexsa::config::AcceleratorConfig, String> {
+    let name = args.get("config").unwrap_or("1G1C");
+    if let Some(path) = name.strip_prefix('@') {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        parse_config(&text)
+    } else {
+        preset(name).ok_or_else(|| {
+            format!("unknown preset `{name}` (have: {})", preset_names().join(", "))
+        })
+    }
+}
+
+fn parse_phase(args: &Args) -> Result<Phase, String> {
+    Ok(match args.get("phase").unwrap_or("fwd") {
+        "fwd" => Phase::Forward,
+        "dgrad" => Phase::DataGrad,
+        "wgrad" => Phase::WeightGrad,
+        other => return Err(format!("unknown phase `{other}`")),
+    })
+}
+
+fn parse_strength(args: &Args) -> Result<Strength, String> {
+    Ok(match args.get("strength").unwrap_or("low") {
+        "low" => Strength::Low,
+        "high" => Strength::High,
+        other => return Err(format!("unknown strength `{other}`")),
+    })
+}
+
+fn parse_mnk(args: &Args) -> Result<GemmShape, String> {
+    if args.positional.len() != 3 {
+        return Err("expected: M N K".into());
+    }
+    let p: Result<Vec<usize>, _> = args.positional.iter().map(|s| s.parse()).collect();
+    let p = p.map_err(|e| format!("bad dimension: {e}"))?;
+    Ok(GemmShape::new(p[0], p[1], p[2]))
+}
+
+fn emit(report: &fig::FigureReport, csv_dir: Option<&str>) -> Result<(), String> {
+    println!("{}", report.render());
+    if let Some(dir) = csv_dir {
+        std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+        let path = format!("{dir}/{}.csv", report.id.to_lowercase());
+        std::fs::write(&path, report.table.to_csv()).map_err(|e| e.to_string())?;
+        println!("wrote {path}\n");
+    }
+    Ok(())
+}
+
+fn run(args: &Args) -> Result<(), String> {
+    let threads = args.get_usize("threads", default_threads())?;
+    let csv = args.get("csv");
+    match args.command.as_str() {
+        "help" | "--help" | "-h" => println!("{USAGE}"),
+        "configs" => {
+            for name in preset_names() {
+                if let Some(c) = preset(name) {
+                    println!("{c}");
+                }
+            }
+        }
+        "table1" => emit(&fig::table1(), csv)?,
+        "fig3" => {
+            let s = parse_strength(args)?;
+            emit(&fig::fig3(s, threads), csv)?;
+        }
+        "fig5" => emit(&fig::fig5(threads), csv)?,
+        "fig6" => emit(&fig::fig6(), csv)?,
+        "area" => emit(&fig::area_flexsa(), csv)?,
+        "ablate" => emit(&fig::ablations(threads), csv)?,
+        "fig10" | "fig11" | "fig12" | "fig13" | "e2e-layers" => {
+            eprintln!("# computing evaluation grid ({threads} threads)...");
+            let grid = fig::EvalGrid::compute(threads);
+            match args.command.as_str() {
+                "fig10" => {
+                    if args.has("ideal") {
+                        emit(&fig::fig10(&grid, true), csv)?;
+                    } else {
+                        emit(&fig::fig10(&grid, true), csv)?;
+                        emit(&fig::fig10(&grid, false), csv)?;
+                    }
+                }
+                "fig11" => emit(&fig::fig11(&grid), csv)?,
+                "fig12" => emit(&fig::fig12(&grid), csv)?,
+                "fig13" => emit(&fig::fig13(&grid), csv)?,
+                _ => emit(&fig::e2e_layers(&grid), csv)?,
+            }
+        }
+        "report" => {
+            emit(&fig::table1(), csv)?;
+            emit(&fig::fig3(Strength::Low, threads), csv)?;
+            emit(&fig::fig3(Strength::High, threads), csv)?;
+            emit(&fig::fig5(threads), csv)?;
+            emit(&fig::fig6(), csv)?;
+            emit(&fig::area_flexsa(), csv)?;
+            emit(&fig::ablations(threads), csv)?;
+            eprintln!("# computing evaluation grid ({threads} threads)...");
+            let grid = fig::EvalGrid::compute(threads);
+            emit(&fig::fig10(&grid, true), csv)?;
+            emit(&fig::fig10(&grid, false), csv)?;
+            emit(&fig::fig11(&grid), csv)?;
+            emit(&fig::fig12(&grid), csv)?;
+            emit(&fig::fig13(&grid), csv)?;
+            emit(&fig::e2e_layers(&grid), csv)?;
+        }
+        "simulate" => {
+            let cfg = load_config(args)?;
+            let shape = parse_mnk(args)?;
+            let phase = parse_phase(args)?;
+            let opts = if args.has("ideal") { SimOptions::ideal() } else { SimOptions::hbm2() };
+            let compiled = compile_gemm(&cfg, shape, phase);
+            let sim = simulate_gemm(&cfg, &compiled, &opts);
+            println!("config    : {cfg}");
+            println!("gemm      : {shape} ({:?})", phase);
+            println!("cycles    : {:.0} (compute {:.0}, dram {:.0})",
+                sim.cycles, sim.compute_cycles, sim.dram_cycles);
+            println!("time      : {}", flexsa::util::fmt::seconds(sim.cycles / (cfg.clock_ghz * 1e9)));
+            println!("PE util   : {}", flexsa::util::fmt::pct(sim.pe_utilization(&cfg)));
+            println!("traffic   : gbuf->lbuf {}, obuf->gbuf {}, overcore {}, dram {}",
+                flexsa::util::fmt::bytes(sim.traffic.gbuf_to_lbuf as f64),
+                flexsa::util::fmt::bytes(sim.traffic.obuf_to_gbuf as f64),
+                flexsa::util::fmt::bytes(sim.traffic.overcore as f64),
+                flexsa::util::fmt::bytes(sim.traffic.dram() as f64));
+            println!("waves     : {:?}", sim.waves_by_mode);
+        }
+        "compile" => {
+            let cfg = load_config(args)?;
+            let shape = parse_mnk(args)?;
+            let phase = parse_phase(args)?;
+            let compiled = compile_gemm(&cfg, shape, phase);
+            for (gi, g) in compiled.groups.iter().enumerate() {
+                println!("# group {gi}: partition {} dram_read={} dram_write={}",
+                    g.partition, g.dram.read_bytes, g.dram.write_bytes);
+                print!("{}", g.program.encode());
+            }
+        }
+        "schedule" => {
+            let name = args.get("model").unwrap_or("resnet50");
+            let model = flexsa::models::by_name(name)
+                .ok_or_else(|| format!("unknown model `{name}`"))?;
+            let s = parse_strength(args)?;
+            let seed = args.get_u64("seed", 42)?;
+            let sched = flexsa::pruning::prunetrain_schedule(&model, s, 90, 10, seed);
+            print!("{}", sched.encode_trace());
+        }
+        "train" => {
+            flexsa::trainer::run_from_args(args)?;
+        }
+        other => {
+            return Err(format!("unknown command `{other}`\n{USAGE}"));
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,245 @@
+//! Fluent builder used by the model zoo.
+//!
+//! The builder tracks the "current tensor" (spatial size + symbolic channel
+//! count) so that layer chains read like the network definition; branches
+//! (inception) save/restore the cursor explicitly.
+
+use super::{ChRef, Layer, LayerKind, Model, PruneGroup, SimdKind};
+
+/// Builder state.
+pub struct ModelBuilder {
+    name: String,
+    layers: Vec<Layer>,
+    groups: Vec<PruneGroup>,
+    cur_ch: ChRef,
+    cur_hw: usize,
+    batch: usize,
+    emitted_first: bool,
+}
+
+impl ModelBuilder {
+    /// Start a model with the given input tensor (`hw × hw × in_ch`).
+    pub fn new(name: &str, input_hw: usize, in_ch: usize, batch: usize) -> Self {
+        Self {
+            name: name.to_string(),
+            layers: Vec::new(),
+            groups: Vec::new(),
+            cur_ch: ChRef::Fixed(in_ch),
+            cur_hw: input_hw,
+            batch,
+            emitted_first: false,
+        }
+    }
+
+    /// Register a new prunable channel group and return a reference to it.
+    pub fn group(&mut self, name: &str, base: usize) -> ChRef {
+        self.groups.push(PruneGroup { name: name.to_string(), base });
+        ChRef::Group(self.groups.len() - 1)
+    }
+
+    /// Current tensor channel reference.
+    pub fn cursor_ch(&self) -> ChRef {
+        self.cur_ch.clone()
+    }
+
+    /// Current spatial size.
+    pub fn cursor_hw(&self) -> usize {
+        self.cur_hw
+    }
+
+    /// Reposition the cursor (used when re-joining branches).
+    pub fn set_cursor(&mut self, ch: ChRef, hw: usize) {
+        self.cur_ch = ch;
+        self.cur_hw = hw;
+    }
+
+    fn out_hw(&self, kernel: usize, stride: usize, pad_same: bool) -> usize {
+        if pad_same {
+            // "same" padding, as used throughout the zoo.
+            (self.cur_hw + stride - 1) / stride
+        } else {
+            // valid padding (inception stem uses a few of these).
+            (self.cur_hw - kernel) / stride + 1
+        }
+    }
+
+    /// Convolution with "same" padding producing channels `out`.
+    pub fn conv(&mut self, name: &str, out: ChRef, kernel: usize, stride: usize) -> &mut Self {
+        self.conv_pad(name, out, kernel, stride, true)
+    }
+
+    /// Asymmetric (kh×kw) convolution, "same" padding, stride 1
+    /// (inception's 1×7 / 7×1 factorized convolutions).
+    pub fn conv_rect(&mut self, name: &str, out: ChRef, kh: usize, kw: usize) -> &mut Self {
+        self.conv_impl(name, out, kh, kw, 1, true)
+    }
+
+    /// Convolution with explicit padding mode.
+    pub fn conv_pad(
+        &mut self,
+        name: &str,
+        out: ChRef,
+        kernel: usize,
+        stride: usize,
+        pad_same: bool,
+    ) -> &mut Self {
+        self.conv_impl(name, out, kernel, kernel, stride, pad_same)
+    }
+
+    fn conv_impl(
+        &mut self,
+        name: &str,
+        out: ChRef,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        pad_same: bool,
+    ) -> &mut Self {
+        let out_hw = self.out_hw(kh.max(kw), stride, pad_same);
+        let first = !self.emitted_first;
+        self.emitted_first = true;
+        self.layers.push(Layer {
+            name: name.to_string(),
+            kind: LayerKind::Conv { kh, kw, stride },
+            in_ch: self.cur_ch.clone(),
+            out_ch: out.clone(),
+            in_hw: self.cur_hw,
+            out_hw,
+            first,
+        });
+        self.cur_ch = out;
+        self.cur_hw = out_hw;
+        // Every conv is followed by BN + ReLU in all three models.
+        self.bn_relu(name)
+    }
+
+    /// Depthwise conv (channels preserved), "same" padding.
+    pub fn dwconv(&mut self, name: &str, kernel: usize, stride: usize) -> &mut Self {
+        let out_hw = self.out_hw(kernel, stride, true);
+        self.layers.push(Layer {
+            name: name.to_string(),
+            kind: LayerKind::DepthwiseConv { kernel, stride },
+            in_ch: self.cur_ch.clone(),
+            out_ch: self.cur_ch.clone(),
+            in_hw: self.cur_hw,
+            out_hw,
+            first: false,
+        });
+        self.cur_hw = out_hw;
+        self.bn_relu(name)
+    }
+
+    /// Fully-connected layer.
+    pub fn fc(&mut self, name: &str, out: ChRef) -> &mut Self {
+        assert_eq!(self.cur_hw, 1, "fc expects a pooled 1x1 tensor");
+        self.layers.push(Layer {
+            name: name.to_string(),
+            kind: LayerKind::Fc,
+            in_ch: self.cur_ch.clone(),
+            out_ch: out.clone(),
+            in_hw: 1,
+            out_hw: 1,
+            first: false,
+        });
+        self.cur_ch = out;
+        self
+    }
+
+    /// BatchNorm + ReLU pair (SIMD work; ~10 fwd+bwd FLOPs/element).
+    pub fn bn_relu(&mut self, name: &str) -> &mut Self {
+        self.simd(&format!("{name}.bnrelu"), SimdKind::BatchNorm, 10.0)
+    }
+
+    /// Residual/element-wise addition.
+    pub fn add(&mut self, name: &str) -> &mut Self {
+        self.simd(name, SimdKind::Add, 2.0)
+    }
+
+    /// Pooling layer with spatial reduction.
+    pub fn pool(&mut self, name: &str, kernel: usize, stride: usize) -> &mut Self {
+        let out_hw = self.out_hw(kernel, stride, true);
+        self.cur_hw = out_hw;
+        self.simd(name, SimdKind::Pool, (kernel * kernel) as f64)
+    }
+
+    /// Global average pool to 1×1.
+    pub fn global_pool(&mut self, name: &str) -> &mut Self {
+        let k = self.cur_hw;
+        self.cur_hw = 1;
+        self.simd(name, SimdKind::Pool, (k * k) as f64)
+    }
+
+    fn simd(&mut self, name: &str, kind: SimdKind, flops_per_elem: f64) -> &mut Self {
+        self.layers.push(Layer {
+            name: name.to_string(),
+            kind: LayerKind::Simd { kind, flops_per_elem },
+            in_ch: self.cur_ch.clone(),
+            out_ch: self.cur_ch.clone(),
+            in_hw: self.cur_hw,
+            out_hw: self.cur_hw,
+            first: false,
+        });
+        self
+    }
+
+    pub fn build(self) -> Model {
+        let m = Model {
+            name: self.name,
+            layers: self.layers,
+            groups: self.groups,
+            default_batch: self.batch,
+        };
+        m.validate().expect("builder produced invalid model");
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::Phase;
+    use crate::models::ChannelCounts;
+
+    #[test]
+    fn builder_tracks_spatial_dims() {
+        let mut b = ModelBuilder::new("t", 224, 3, 32);
+        let g = b.group("c1", 64);
+        b.conv("conv1", g, 7, 2);
+        assert_eq!(b.cursor_hw(), 112);
+        b.pool("pool", 3, 2);
+        assert_eq!(b.cursor_hw(), 56);
+    }
+
+    #[test]
+    fn first_conv_flagged() {
+        let mut b = ModelBuilder::new("t", 32, 3, 8);
+        let g1 = b.group("a", 16);
+        let g2 = b.group("b", 16);
+        b.conv("c1", g1, 3, 1).conv("c2", g2, 3, 1);
+        let m = b.build();
+        let counts = ChannelCounts::baseline(&m);
+        let convs: Vec<_> = m.layers.iter().filter(|l| l.is_gemm()).collect();
+        assert!(convs[0].first);
+        assert!(!convs[1].first);
+        assert!(convs[0].gemm(Phase::DataGrad, 8, &counts).is_none());
+        assert!(convs[1].gemm(Phase::DataGrad, 8, &counts).is_some());
+    }
+
+    #[test]
+    fn valid_padding_math() {
+        let mut b = ModelBuilder::new("t", 299, 3, 32);
+        let g = b.group("s", 32);
+        b.conv_pad("stem1", g, 3, 2, false); // (299-3)/2+1 = 149
+        assert_eq!(b.cursor_hw(), 149);
+    }
+
+    #[test]
+    fn dwconv_preserves_channels() {
+        let mut b = ModelBuilder::new("t", 56, 3, 8);
+        let g = b.group("g", 32);
+        b.conv("pw", g.clone(), 1, 1);
+        b.dwconv("dw", 3, 2);
+        assert_eq!(b.cursor_ch(), g);
+        assert_eq!(b.cursor_hw(), 28);
+    }
+}

@@ -1,0 +1,290 @@
+//! Inception v4 (Szegedy et al., AAAI'17) for 299×299 inputs.
+//!
+//! Every conv gets its own prune group; the paper prunes Inception v4
+//! "artificially by applying the same pruning statistics of ResNet50"
+//! (§VII), which the pruning substrate implements by mapping survival
+//! fractions onto these per-conv groups by relative depth.
+
+use super::{ChRef, Model, ModelBuilder};
+
+/// Build Inception v4 at the paper's mini-batch of 32.
+pub fn inception_v4() -> Model {
+    let mut b = ModelBuilder::new("inception_v4", 299, 3, 32);
+    let mut gid = 0usize;
+    // Fresh prune-group helper: every conv output is its own group.
+    macro_rules! g {
+        ($b:expr, $base:expr) => {{
+            gid += 1;
+            $b.group(&format!("g{gid}"), $base)
+        }};
+    }
+
+    // ---- Stem (299x299x3 -> 35x35x384) ----
+    let c = g!(b, 32);
+    b.conv_pad("stem.conv1", c, 3, 2, false); // 149
+    let c = g!(b, 32);
+    b.conv_pad("stem.conv2", c, 3, 1, false); // 147
+    let c = g!(b, 64);
+    b.conv("stem.conv3", c, 3, 1); // 147
+    // branch: maxpool/2 vs conv 3x3/2 96, concat.
+    let (ch0, hw0) = (b.cursor_ch(), b.cursor_hw());
+    b.pool("stem.pool1", 3, 2);
+    b.set_cursor(ch0.clone(), hw0);
+    // valid 3x3/2: 147 -> 73
+    let p = g!(b, 96);
+    b.conv_pad("stem.conv4", p.clone(), 3, 2, false);
+    let hw = b.cursor_hw();
+    let cat = ChRef::Concat(vec![ch0, p]);
+    b.set_cursor(cat, hw); // 73, 64+96=160
+
+    // branch A: 1x1 64 -> 3x3 V 96; branch B: 1x1 64 -> 7x1 -> 1x7 -> 3x3 V 96.
+    let (ch1, hw1) = (b.cursor_ch(), b.cursor_hw());
+    let a1 = g!(b, 64);
+    let a2 = g!(b, 96);
+    b.conv("stem.a1", a1, 1, 1).conv_pad("stem.a2", a2.clone(), 3, 1, false); // 71
+    let hw_a = b.cursor_hw();
+    b.set_cursor(ch1, hw1);
+    let b1 = g!(b, 64);
+    let b2 = g!(b, 64);
+    let b3 = g!(b, 64);
+    let b4 = g!(b, 96);
+    b.conv("stem.b1", b1, 1, 1)
+        .conv_rect("stem.b2", b2, 7, 1)
+        .conv_rect("stem.b3", b3, 1, 7)
+        .conv_pad("stem.b4", b4.clone(), 3, 1, false); // 71
+    let cat = ChRef::Concat(vec![a2, b4]);
+    b.set_cursor(cat, hw_a); // 71, 192
+
+    // branch: conv 3x3/2 V 192 vs maxpool/2, concat -> 35, 384.
+    let (ch2, hw2) = (b.cursor_ch(), b.cursor_hw());
+    let c1 = g!(b, 192);
+    b.conv_pad("stem.c1", c1.clone(), 3, 2, false); // 35
+    let hw_c = b.cursor_hw();
+    b.set_cursor(ch2.clone(), hw2);
+    b.pool("stem.pool2", 3, 2);
+    let cat = ChRef::Concat(vec![c1, ch2]);
+    b.set_cursor(cat, hw_c); // 35, 384
+
+    // ---- 4 x Inception-A (35x35, out 384) ----
+    for i in 0..4 {
+        let t = format!("incA{i}");
+        let (input, hw) = (b.cursor_ch(), b.cursor_hw());
+        // b1: avgpool + 1x1 96
+        b.pool(&format!("{t}.pool"), 3, 1);
+        let p1 = g!(b, 96);
+        b.conv(&format!("{t}.b1"), p1.clone(), 1, 1);
+        // b2: 1x1 96
+        b.set_cursor(input.clone(), hw);
+        let p2 = g!(b, 96);
+        b.conv(&format!("{t}.b2"), p2.clone(), 1, 1);
+        // b3: 1x1 64 -> 3x3 96
+        b.set_cursor(input.clone(), hw);
+        let p3a = g!(b, 64);
+        let p3 = g!(b, 96);
+        b.conv(&format!("{t}.b3a"), p3a, 1, 1).conv(&format!("{t}.b3b"), p3.clone(), 3, 1);
+        // b4: 1x1 64 -> 3x3 96 -> 3x3 96
+        b.set_cursor(input.clone(), hw);
+        let p4a = g!(b, 64);
+        let p4b = g!(b, 96);
+        let p4 = g!(b, 96);
+        b.conv(&format!("{t}.b4a"), p4a, 1, 1)
+            .conv(&format!("{t}.b4b"), p4b, 3, 1)
+            .conv(&format!("{t}.b4c"), p4.clone(), 3, 1);
+        b.set_cursor(ChRef::Concat(vec![p1, p2, p3, p4]), hw);
+    }
+
+    // ---- Reduction-A (35 -> 17, out 1024) ----
+    {
+        let (input, hw) = (b.cursor_ch(), b.cursor_hw());
+        // b1: maxpool/2 (valid) — channels pass through.
+        // b2: 3x3/2 V 384.
+        let r1 = g!(b, 384);
+        b.conv_pad("redA.b2", r1.clone(), 3, 2, false); // 17
+        let hw_out = b.cursor_hw();
+        // b3: 1x1 192 -> 3x3 224 -> 3x3/2 V 256.
+        b.set_cursor(input.clone(), hw);
+        let r2a = g!(b, 192);
+        let r2b = g!(b, 224);
+        let r2 = g!(b, 256);
+        b.conv("redA.b3a", r2a, 1, 1)
+            .conv("redA.b3b", r2b, 3, 1)
+            .conv_pad("redA.b3c", r2.clone(), 3, 2, false);
+        b.set_cursor(input.clone(), hw);
+        b.pool("redA.pool", 3, 2);
+        b.set_cursor(ChRef::Concat(vec![input, r1, r2]), hw_out); // 384+384+256=1024
+    }
+
+    // ---- 7 x Inception-B (17x17, out 1024) ----
+    for i in 0..7 {
+        let t = format!("incB{i}");
+        let (input, hw) = (b.cursor_ch(), b.cursor_hw());
+        b.pool(&format!("{t}.pool"), 3, 1);
+        let p1 = g!(b, 128);
+        b.conv(&format!("{t}.b1"), p1.clone(), 1, 1);
+        b.set_cursor(input.clone(), hw);
+        let p2 = g!(b, 384);
+        b.conv(&format!("{t}.b2"), p2.clone(), 1, 1);
+        // b3: 1x1 192 -> 1x7 224 -> 7x1 256
+        b.set_cursor(input.clone(), hw);
+        let p3a = g!(b, 192);
+        let p3b = g!(b, 224);
+        let p3 = g!(b, 256);
+        b.conv(&format!("{t}.b3a"), p3a, 1, 1)
+            .conv_rect(&format!("{t}.b3b"), p3b, 1, 7)
+            .conv_rect(&format!("{t}.b3c"), p3.clone(), 7, 1);
+        // b4: 1x1 192 -> 1x7 192 -> 7x1 224 -> 1x7 224 -> 7x1 256
+        b.set_cursor(input.clone(), hw);
+        let p4a = g!(b, 192);
+        let p4b = g!(b, 192);
+        let p4c = g!(b, 224);
+        let p4d = g!(b, 224);
+        let p4 = g!(b, 256);
+        b.conv(&format!("{t}.b4a"), p4a, 1, 1)
+            .conv_rect(&format!("{t}.b4b"), p4b, 1, 7)
+            .conv_rect(&format!("{t}.b4c"), p4c, 7, 1)
+            .conv_rect(&format!("{t}.b4d"), p4d, 1, 7)
+            .conv_rect(&format!("{t}.b4e"), p4.clone(), 7, 1);
+        b.set_cursor(ChRef::Concat(vec![p1, p2, p3, p4]), hw);
+    }
+
+    // ---- Reduction-B (17 -> 8, out 1536) ----
+    {
+        let (input, hw) = (b.cursor_ch(), b.cursor_hw());
+        // b2: 1x1 192 -> 3x3/2 V 192
+        let r1a = g!(b, 192);
+        let r1 = g!(b, 192);
+        b.conv("redB.b2a", r1a, 1, 1).conv_pad("redB.b2b", r1.clone(), 3, 2, false);
+        let hw_out = b.cursor_hw();
+        // b3: 1x1 256 -> 1x7 256 -> 7x1 320 -> 3x3/2 V 320
+        b.set_cursor(input.clone(), hw);
+        let r2a = g!(b, 256);
+        let r2b = g!(b, 256);
+        let r2c = g!(b, 320);
+        let r2 = g!(b, 320);
+        b.conv("redB.b3a", r2a, 1, 1)
+            .conv_rect("redB.b3b", r2b, 1, 7)
+            .conv_rect("redB.b3c", r2c, 7, 1)
+            .conv_pad("redB.b3d", r2.clone(), 3, 2, false);
+        b.set_cursor(input.clone(), hw);
+        b.pool("redB.pool", 3, 2);
+        b.set_cursor(ChRef::Concat(vec![input, r1, r2]), hw_out); // 1024+192+320=1536
+    }
+
+    // ---- 3 x Inception-C (8x8, out 1536) ----
+    for i in 0..3 {
+        let t = format!("incC{i}");
+        let (input, hw) = (b.cursor_ch(), b.cursor_hw());
+        b.pool(&format!("{t}.pool"), 3, 1);
+        let p1 = g!(b, 256);
+        b.conv(&format!("{t}.b1"), p1.clone(), 1, 1);
+        b.set_cursor(input.clone(), hw);
+        let p2 = g!(b, 256);
+        b.conv(&format!("{t}.b2"), p2.clone(), 1, 1);
+        // b3: 1x1 384 -> {1x3 256, 3x1 256}
+        b.set_cursor(input.clone(), hw);
+        let p3a = g!(b, 384);
+        b.conv(&format!("{t}.b3a"), p3a.clone(), 1, 1);
+        let (split_ch, split_hw) = (b.cursor_ch(), b.cursor_hw());
+        let p3l = g!(b, 256);
+        b.conv_rect(&format!("{t}.b3l"), p3l.clone(), 1, 3);
+        b.set_cursor(split_ch, split_hw);
+        let p3r = g!(b, 256);
+        b.conv_rect(&format!("{t}.b3r"), p3r.clone(), 3, 1);
+        // b4: 1x1 384 -> 1x3 448 -> 3x1 512 -> {3x1 256, 1x3 256}
+        b.set_cursor(input.clone(), hw);
+        let p4a = g!(b, 384);
+        let p4b = g!(b, 448);
+        let p4c = g!(b, 512);
+        b.conv(&format!("{t}.b4a"), p4a, 1, 1)
+            .conv_rect(&format!("{t}.b4b"), p4b, 1, 3)
+            .conv_rect(&format!("{t}.b4c"), p4c, 3, 1);
+        let (split_ch, split_hw) = (b.cursor_ch(), b.cursor_hw());
+        let p4l = g!(b, 256);
+        b.conv_rect(&format!("{t}.b4l"), p4l.clone(), 3, 1);
+        b.set_cursor(split_ch, split_hw);
+        let p4r = g!(b, 256);
+        b.conv_rect(&format!("{t}.b4r"), p4r.clone(), 1, 3);
+        b.set_cursor(ChRef::Concat(vec![p1, p2, p3l, p3r, p4l, p4r]), hw);
+    }
+
+    b.global_pool("pool.global");
+    b.fc("fc1000", ChRef::Fixed(1000));
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{ChannelCounts, LayerKind};
+
+    #[test]
+    fn inception_builds_and_validates() {
+        let m = inception_v4();
+        m.validate().unwrap();
+        let convs = m
+            .layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Conv { .. }))
+            .count();
+        // 11 stem + 4x7 A + 4 redA + 7x10 B + 6 redB + 3x10 C = 149 convs.
+        assert_eq!(convs, 149);
+    }
+
+    #[test]
+    fn inception_params_near_42m() {
+        let m = inception_v4();
+        let counts = ChannelCounts::baseline(&m);
+        let p = m.param_count(&counts);
+        // ~42.7M conv+fc weights.
+        assert!((38_000_000..46_000_000).contains(&p), "params={p}");
+    }
+
+    #[test]
+    fn final_feature_is_8x8x1536() {
+        let m = inception_v4();
+        let counts = ChannelCounts::baseline(&m);
+        let fc = m.layers.iter().find(|l| matches!(l.kind, LayerKind::Fc)).unwrap();
+        assert_eq!(fc.in_ch.resolve(&counts), 1536);
+        let last_conv = m
+            .layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Conv { .. }))
+            .next_back()
+            .unwrap();
+        assert_eq!(last_conv.out_hw, 8);
+    }
+
+    #[test]
+    fn stage_channel_sums() {
+        let m = inception_v4();
+        let counts = ChannelCounts::baseline(&m);
+        // First Inception-A input is the 384-ch stem output.
+        let a0 = m.layers.iter().find(|l| l.name == "incA0.b2").unwrap();
+        assert_eq!(a0.in_ch.resolve(&counts), 384);
+        let b0 = m.layers.iter().find(|l| l.name == "incB0.b2").unwrap();
+        assert_eq!(b0.in_ch.resolve(&counts), 1024);
+        let c0 = m.layers.iter().find(|l| l.name == "incC0.b2").unwrap();
+        assert_eq!(c0.in_ch.resolve(&counts), 1536);
+    }
+
+    #[test]
+    fn many_layers_have_sub128_channels() {
+        // The paper attributes Inception v4's low PE utilization to its many
+        // small-channel convolutions — verify the premise holds here.
+        let m = inception_v4();
+        let counts = ChannelCounts::baseline(&m);
+        let convs: Vec<_> = m
+            .layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Conv { .. }))
+            .collect();
+        let small = convs
+            .iter()
+            .filter(|l| l.out_ch.resolve(&counts) < 128)
+            .count();
+        // ~38/149 convs are narrower than the 128-wide core; together with
+        // the many non-multiple-of-128 widths (224, 256, 384) these drive the
+        // paper's reported low utilization.
+        assert!(small * 4 > convs.len(), "{small}/{}", convs.len());
+    }
+}

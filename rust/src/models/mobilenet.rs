@@ -1,0 +1,145 @@
+//! MobileNet v2 (Sandler et al., CVPR'18) for 224×224 inputs.
+//!
+//! The paper evaluates the baseline (width 1.0) against the statically
+//! pruned width-0.75 variant from the original proposal (§VII). Inverted
+//! residual blocks: 1×1 expand (×6) → 3×3 depthwise → 1×1 linear project.
+//! Depthwise convs run on the SIMD array (see DESIGN.md §5); the pointwise
+//! convs are the systolic GEMM work.
+
+use super::{ChRef, Model, ModelBuilder};
+
+/// Round channels to the nearest multiple of 8 (the reference
+/// implementation's `_make_divisible`), never dropping below 90%.
+fn make_divisible(ch: f64) -> usize {
+    let div = 8.0f64;
+    let rounded = (((ch + div / 2.0) / div).floor() * div).max(div);
+    if rounded < 0.9 * ch { (rounded + div) as usize } else { rounded as usize }
+}
+
+/// Build MobileNet v2 at width multiplier 1.0 (paper mini-batch 128).
+pub fn mobilenet_v2() -> Model {
+    mobilenet_v2_width(1.0)
+}
+
+/// Build MobileNet v2 at an arbitrary width multiplier (0.75 for the
+/// paper's statically pruned variant).
+pub fn mobilenet_v2_width(width: f64) -> Model {
+    let name = if (width - 1.0).abs() < 1e-9 {
+        "mobilenet_v2".to_string()
+    } else {
+        format!("mobilenet_v2_w{width:.2}")
+    };
+    let mut b = ModelBuilder::new(&name, 224, 3, 128);
+    let scale = |c: usize| make_divisible(c as f64 * width);
+
+    // Stem conv 3x3/2 32.
+    let mut in_base = scale(32);
+    let stem = b.group("stem", in_base);
+    b.conv("conv1", stem, 3, 2); // 112
+
+    // Inverted residual setting: (expansion t, out channels c, repeats n, stride s).
+    let table: [(usize, usize, usize, usize); 7] = [
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+
+    for (si, (t, c, n, s)) in table.into_iter().enumerate() {
+        // Residual adds within a stage force a shared output group.
+        let out_base = scale(c);
+        let stage_out = b.group(&format!("ir{si}_out"), out_base);
+        for bi in 0..n {
+            let stride = if bi == 0 { s } else { 1 };
+            let tag = format!("ir{si}_{bi}");
+            if t != 1 {
+                // Expansion width is t x the block's *input* base width
+                // (its own prune group, regularized independently).
+                let exp = b.group(&format!("{tag}_exp"), t * in_base);
+                b.conv(&format!("{tag}.expand"), exp, 1, 1);
+            }
+            b.dwconv(&format!("{tag}.dw"), 3, stride);
+            b.conv(&format!("{tag}.project"), stage_out.clone(), 1, 1);
+            if bi > 0 {
+                b.add(&format!("{tag}.add"));
+            }
+            in_base = out_base;
+        }
+    }
+
+    // Head: 1x1 conv to 1280 (not width-scaled below 1.0 in the reference).
+    let head_ch = if width > 1.0 { scale(1280) } else { 1280 };
+    let head = b.group("head", head_ch);
+    b.conv("conv_head", head, 1, 1);
+    b.global_pool("pool");
+    b.fc("fc1000", ChRef::Fixed(1000));
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{ChannelCounts, LayerKind};
+
+    #[test]
+    fn mobilenet_builds() {
+        let m = mobilenet_v2();
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn mobilenet_params_near_3_4m() {
+        let m = mobilenet_v2();
+        let counts = ChannelCounts::baseline(&m);
+        let p = m.param_count(&counts);
+        assert!((3_000_000..4_000_000).contains(&p), "params={p}");
+    }
+
+    #[test]
+    fn width_075_shrinks_channels() {
+        let full = mobilenet_v2();
+        let slim = mobilenet_v2_width(0.75);
+        let cf = ChannelCounts::baseline(&full);
+        let cs = ChannelCounts::baseline(&slim);
+        assert!(slim.param_count(&cs) < full.param_count(&cf));
+        // Stem channels scale: 32 -> 24 at width 0.75.
+        assert_eq!(slim.groups[0].base, 24);
+    }
+
+    #[test]
+    fn depthwise_layers_are_simd_not_gemm() {
+        let m = mobilenet_v2();
+        let dw = m
+            .layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::DepthwiseConv { .. }))
+            .count();
+        assert_eq!(dw, 17); // one per inverted-residual block.
+        for l in &m.layers {
+            if matches!(l.kind, LayerKind::DepthwiseConv { .. }) {
+                assert!(!l.is_gemm());
+            }
+        }
+    }
+
+    #[test]
+    fn expansion_is_6x_input_width() {
+        let m = mobilenet_v2();
+        let counts = ChannelCounts::baseline(&m);
+        let exp = m.layers.iter().find(|l| l.name == "ir1_0.expand").unwrap();
+        // ir1 block 0 input = ir0 output (16 ch) -> hidden = 96.
+        assert_eq!(exp.out_ch.resolve(&counts), 96);
+        assert_eq!(exp.in_ch.resolve(&counts), 16);
+    }
+
+    #[test]
+    fn make_divisible_matches_reference() {
+        assert_eq!(make_divisible(32.0 * 0.75), 24);
+        assert_eq!(make_divisible(16.0 * 0.75), 16); // 12 rounds up: 8 < 0.9*12
+        assert_eq!(make_divisible(320.0 * 0.75), 240);
+        assert_eq!(make_divisible(96.0 * 0.75), 72);
+    }
+}

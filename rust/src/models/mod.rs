@@ -1,0 +1,362 @@
+//! CNN model zoo and layer→GEMM conversion.
+//!
+//! The simulator consumes GEMMs, not frameworks' graphs, so a model here is
+//! a flat list of layers with *symbolic* channel counts: every prunable
+//! tensor references a **prune group**, and a concrete assignment of channel
+//! counts to groups (a [`ChannelCounts`]) instantiates the (possibly
+//! pruned) model. This mirrors how PruneTrain prunes: channels are removed
+//! per semantic group, and residual/concat topology constrains which tensors
+//! must shrink together.
+//!
+//! Three models are provided, matching the paper's evaluation (§VII):
+//! ResNet50 (224²), Inception v4 (299²), MobileNet v2 (224², width 1.0 and
+//! the paper's static 0.75 variant).
+
+mod builder;
+pub mod extra;
+mod inception;
+mod mobilenet;
+mod resnet;
+
+pub use builder::ModelBuilder;
+pub use extra::by_name;
+pub use inception::inception_v4;
+pub use mobilenet::{mobilenet_v2, mobilenet_v2_width};
+pub use resnet::resnet50;
+
+use crate::gemm::{Gemm, GemmShape, Phase};
+
+/// Symbolic channel count: fixed, a prunable group, or a concatenation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ChRef {
+    /// Not prunable (e.g. RGB input = 3, classifier output = 1000).
+    Fixed(usize),
+    /// Index into [`Model::groups`].
+    Group(usize),
+    /// Channel concatenation (inception branches).
+    Concat(Vec<ChRef>),
+}
+
+impl ChRef {
+    /// Resolve to a concrete channel count under `counts`.
+    pub fn resolve(&self, counts: &ChannelCounts) -> usize {
+        match self {
+            ChRef::Fixed(c) => *c,
+            ChRef::Group(g) => counts.0[*g],
+            ChRef::Concat(parts) => parts.iter().map(|p| p.resolve(counts)).sum(),
+        }
+    }
+
+    /// Resolve with every group at its unpruned base width.
+    pub fn base(&self, model: &Model) -> usize {
+        match self {
+            ChRef::Fixed(c) => *c,
+            ChRef::Group(g) => model.groups[*g].base,
+            ChRef::Concat(parts) => parts.iter().map(|p| p.base(model)).sum(),
+        }
+    }
+}
+
+/// A prunable channel group (one regularization group in PruneTrain terms).
+#[derive(Debug, Clone)]
+pub struct PruneGroup {
+    pub name: String,
+    /// Unpruned channel count.
+    pub base: usize,
+}
+
+/// Concrete channel counts, one per prune group. Produced by the pruning
+/// substrate ([`crate::pruning`]) or taken from a real training run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChannelCounts(pub Vec<usize>);
+
+impl ChannelCounts {
+    /// All groups at base (unpruned) width.
+    pub fn baseline(model: &Model) -> Self {
+        Self(model.groups.iter().map(|g| g.base).collect())
+    }
+}
+
+/// One layer of a model.
+#[derive(Debug, Clone)]
+pub enum LayerKind {
+    /// Standard (possibly 1×1 "pointwise" or asymmetric 1×7/7×1)
+    /// convolution, executed as GEMM on the systolic cores.
+    Conv { kh: usize, kw: usize, stride: usize },
+    /// Depthwise convolution: each output channel convolves only its own
+    /// input channel — it cannot batch channels along the systolic N
+    /// dimension, so it executes on the SIMD array (see DESIGN.md §5).
+    DepthwiseConv { kernel: usize, stride: usize },
+    /// Fully-connected layer (GEMM).
+    Fc,
+    /// Memory-bound element-wise / normalization work on the SIMD array.
+    /// `flops_per_elem` covers forward+backward per output element.
+    Simd { kind: SimdKind, flops_per_elem: f64 },
+}
+
+/// Category of SIMD (non-GEMM) work, for the energy/time breakdown.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdKind {
+    BatchNorm,
+    Relu,
+    Add,
+    Pool,
+}
+
+/// A layer: kind + symbolic channel shape + spatial dims.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    pub in_ch: ChRef,
+    pub out_ch: ChRef,
+    /// Input spatial size (square feature maps throughout the zoo).
+    pub in_hw: usize,
+    /// Output spatial size.
+    pub out_hw: usize,
+    /// First layer of the network needs no data-gradient GEMM.
+    pub first: bool,
+}
+
+impl Layer {
+    /// Is this layer executed as GEMM on the systolic cores?
+    pub fn is_gemm(&self) -> bool {
+        matches!(self.kind, LayerKind::Conv { .. } | LayerKind::Fc)
+    }
+
+    /// GEMM shape for one training phase at `batch`, under `counts`.
+    /// Returns `None` for SIMD layers, empty shapes, or fwd-only cases.
+    pub fn gemm(&self, phase: Phase, batch: usize, counts: &ChannelCounts) -> Option<GemmShape> {
+        let cin = self.in_ch.resolve(counts);
+        let cout = self.out_ch.resolve(counts);
+        if cin == 0 || cout == 0 {
+            return None;
+        }
+        let shape = match &self.kind {
+            LayerKind::Conv { kh, kw, .. } => {
+                let kk = kh * kw;
+                let m_out = batch * self.out_hw * self.out_hw;
+                match phase {
+                    Phase::Forward => GemmShape::new(m_out, cout, cin * kk),
+                    Phase::DataGrad => {
+                        if self.first {
+                            return None;
+                        }
+                        GemmShape::new(batch * self.in_hw * self.in_hw, cin, cout * kk)
+                    }
+                    Phase::WeightGrad => GemmShape::new(cout, cin * kk, m_out),
+                }
+            }
+            LayerKind::Fc => match phase {
+                Phase::Forward => GemmShape::new(batch, cout, cin),
+                Phase::DataGrad => GemmShape::new(batch, cin, cout),
+                Phase::WeightGrad => GemmShape::new(cout, cin, batch),
+            },
+            _ => return None,
+        };
+        if shape.is_empty() { None } else { Some(shape) }
+    }
+
+    /// Output elements per sample (for SIMD time/energy modeling).
+    pub fn out_elems(&self, batch: usize, counts: &ChannelCounts) -> u64 {
+        (batch * self.out_hw * self.out_hw) as u64 * self.out_ch.resolve(counts) as u64
+    }
+
+    /// SIMD FLOPs (forward + backward) for non-GEMM work, including
+    /// depthwise convolutions.
+    pub fn simd_flops(&self, batch: usize, counts: &ChannelCounts) -> f64 {
+        match &self.kind {
+            LayerKind::Simd { flops_per_elem, .. } => {
+                self.out_elems(batch, counts) as f64 * flops_per_elem
+            }
+            LayerKind::DepthwiseConv { kernel, .. } => {
+                // fwd + dgrad + wgrad, 2 FLOPs per MAC each.
+                self.out_elems(batch, counts) as f64 * (kernel * kernel) as f64 * 2.0 * 3.0
+            }
+            _ => 0.0,
+        }
+    }
+
+    /// Bytes moved by SIMD work (reads input + writes output, fwd+bwd),
+    /// for the memory-bound SIMD model.
+    pub fn simd_bytes(&self, batch: usize, counts: &ChannelCounts) -> f64 {
+        match &self.kind {
+            LayerKind::Simd { .. } | LayerKind::DepthwiseConv { .. } => {
+                // in + out in fwd, grad-in + grad-out in bwd; 2 B elements.
+                self.out_elems(batch, counts) as f64 * 2.0 * 4.0
+            }
+            _ => 0.0,
+        }
+    }
+}
+
+/// A whole network.
+#[derive(Debug, Clone)]
+pub struct Model {
+    pub name: String,
+    pub layers: Vec<Layer>,
+    pub groups: Vec<PruneGroup>,
+    /// Paper's mini-batch for this model (§VII): 32 for ResNet50 and
+    /// Inception v4, 128 for MobileNet v2.
+    pub default_batch: usize,
+}
+
+impl Model {
+    /// All GEMMs of one training iteration (fwd + dgrad + wgrad) under
+    /// the given channel counts.
+    pub fn gemms(&self, batch: usize, counts: &ChannelCounts) -> Vec<Gemm> {
+        assert_eq!(
+            counts.0.len(),
+            self.groups.len(),
+            "channel counts do not match model {}",
+            self.name
+        );
+        let mut out = Vec::new();
+        for (i, layer) in self.layers.iter().enumerate() {
+            for phase in Phase::ALL {
+                if let Some(shape) = layer.gemm(phase, batch, counts) {
+                    out.push(Gemm::new(shape, phase, i, layer.name.clone()));
+                }
+            }
+        }
+        out
+    }
+
+    /// Total GEMM MACs of one training iteration.
+    pub fn total_macs(&self, batch: usize, counts: &ChannelCounts) -> u64 {
+        self.gemms(batch, counts).iter().map(|g| g.shape.macs()).sum()
+    }
+
+    /// Total SIMD FLOPs (non-GEMM layers) of one training iteration.
+    pub fn total_simd_flops(&self, batch: usize, counts: &ChannelCounts) -> f64 {
+        self.layers.iter().map(|l| l.simd_flops(batch, counts)).sum()
+    }
+
+    /// Total SIMD bytes of one training iteration.
+    pub fn total_simd_bytes(&self, batch: usize, counts: &ChannelCounts) -> f64 {
+        self.layers.iter().map(|l| l.simd_bytes(batch, counts)).sum()
+    }
+
+    /// Weight-parameter count (conv + fc) under the given channel counts.
+    pub fn param_count(&self, counts: &ChannelCounts) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| {
+                let cin = l.in_ch.resolve(counts) as u64;
+                let cout = l.out_ch.resolve(counts) as u64;
+                match &l.kind {
+                    LayerKind::Conv { kh, kw, .. } => cin * cout * (kh * kw) as u64,
+                    LayerKind::DepthwiseConv { kernel, .. } => cout * (kernel * kernel) as u64,
+                    LayerKind::Fc => cin * cout,
+                    LayerKind::Simd { .. } => 0,
+                }
+            })
+            .sum()
+    }
+
+    /// Sanity checks: spatial dims chain correctly, groups referenced exist.
+    pub fn validate(&self) -> Result<(), String> {
+        fn check_ref(r: &ChRef, n: usize, layer: &str) -> Result<(), String> {
+            match r {
+                ChRef::Fixed(_) => Ok(()),
+                ChRef::Group(g) if *g < n => Ok(()),
+                ChRef::Group(g) => Err(format!("{layer}: group {g} out of range")),
+                ChRef::Concat(parts) => parts.iter().try_for_each(|p| check_ref(p, n, layer)),
+            }
+        }
+        for l in &self.layers {
+            check_ref(&l.in_ch, self.groups.len(), &l.name)?;
+            check_ref(&l.out_ch, self.groups.len(), &l.name)?;
+            if l.in_hw == 0 || l.out_hw == 0 {
+                return Err(format!("{}: zero spatial dim", l.name));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The paper's three evaluation models at their §VII mini-batches.
+pub fn evaluation_models() -> Vec<Model> {
+    vec![resnet50(), inception_v4(), mobilenet_v2()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chref_resolution() {
+        let counts = ChannelCounts(vec![10, 20]);
+        assert_eq!(ChRef::Fixed(3).resolve(&counts), 3);
+        assert_eq!(ChRef::Group(1).resolve(&counts), 20);
+        assert_eq!(
+            ChRef::Concat(vec![ChRef::Group(0), ChRef::Fixed(5)]).resolve(&counts),
+            15
+        );
+    }
+
+    #[test]
+    fn conv_gemm_shapes_match_im2col() {
+        let l = Layer {
+            name: "c".into(),
+            kind: LayerKind::Conv { kh: 3, kw: 3, stride: 1 },
+            in_ch: ChRef::Fixed(64),
+            out_ch: ChRef::Fixed(128),
+            in_hw: 56,
+            out_hw: 56,
+            first: false,
+        };
+        let counts = ChannelCounts(vec![]);
+        let f = l.gemm(Phase::Forward, 32, &counts).unwrap();
+        assert_eq!(f, GemmShape::new(32 * 56 * 56, 128, 64 * 9));
+        let d = l.gemm(Phase::DataGrad, 32, &counts).unwrap();
+        assert_eq!(d, GemmShape::new(32 * 56 * 56, 64, 128 * 9));
+        let w = l.gemm(Phase::WeightGrad, 32, &counts).unwrap();
+        assert_eq!(w, GemmShape::new(128, 64 * 9, 32 * 56 * 56));
+    }
+
+    #[test]
+    fn first_layer_skips_dgrad() {
+        let l = Layer {
+            name: "conv1".into(),
+            kind: LayerKind::Conv { kh: 7, kw: 7, stride: 2 },
+            in_ch: ChRef::Fixed(3),
+            out_ch: ChRef::Fixed(64),
+            in_hw: 224,
+            out_hw: 112,
+            first: true,
+        };
+        assert!(l.gemm(Phase::DataGrad, 32, &ChannelCounts(vec![])).is_none());
+        assert!(l.gemm(Phase::Forward, 32, &ChannelCounts(vec![])).is_some());
+    }
+
+    #[test]
+    fn zero_channels_produce_no_gemm() {
+        let l = Layer {
+            name: "c".into(),
+            kind: LayerKind::Conv { kh: 1, kw: 1, stride: 1 },
+            in_ch: ChRef::Group(0),
+            out_ch: ChRef::Fixed(16),
+            in_hw: 7,
+            out_hw: 7,
+            first: false,
+        };
+        let counts = ChannelCounts(vec![0]);
+        assert!(l.gemm(Phase::Forward, 8, &counts).is_none());
+    }
+
+    #[test]
+    fn fc_wgrad_accumulates_over_batch() {
+        let l = Layer {
+            name: "fc".into(),
+            kind: LayerKind::Fc,
+            in_ch: ChRef::Fixed(2048),
+            out_ch: ChRef::Fixed(1000),
+            in_hw: 1,
+            out_hw: 1,
+            first: false,
+        };
+        let w = l.gemm(Phase::WeightGrad, 32, &ChannelCounts(vec![])).unwrap();
+        assert_eq!(w, GemmShape::new(1000, 2048, 32));
+    }
+}

@@ -1,0 +1,127 @@
+//! ResNet50 (He et al., CVPR'16) for 224×224 inputs, expressed with
+//! PruneTrain-compatible channel groups:
+//!
+//! - every bottleneck's two internal convs (1×1 reduce, 3×3) get their own
+//!   prune groups — these are where PruneTrain removes most channels;
+//! - all residual-connected tensors of a stage share one group (the 1×1
+//!   expand convs and the stage's downsample projection must keep matching
+//!   widths for the element-wise adds), matching PruneTrain's grouping.
+
+use super::{ChRef, Model, ModelBuilder};
+
+/// Build ResNet50 at the paper's mini-batch of 32.
+pub fn resnet50() -> Model {
+    let mut b = ModelBuilder::new("resnet50", 224, 3, 32);
+
+    // conv1: 7x7/2 64, then 3x3/2 max-pool.
+    let conv1 = b.group("conv1", 64);
+    b.conv("conv1", conv1, 7, 2);
+    b.pool("pool1", 3, 2);
+
+    // (blocks, internal width, stage output width, first-block stride)
+    let stages: [(usize, usize, usize, usize); 4] =
+        [(3, 64, 256, 1), (4, 128, 512, 2), (6, 256, 1024, 2), (3, 512, 2048, 2)];
+
+    for (si, (blocks, width, out_width, stride)) in stages.into_iter().enumerate() {
+        let stage_out = b.group(&format!("res{}_out", si + 2), out_width);
+        for bi in 0..blocks {
+            let stride = if bi == 0 { stride } else { 1 };
+            let tag = format!("res{}{}", si + 2, (b'a' + bi as u8) as char);
+            let entry_ch = b.cursor_ch();
+            let entry_hw = b.cursor_hw();
+
+            // Branch 2: 1x1 reduce -> 3x3 (stride here, v1.5) -> 1x1 expand.
+            let g1 = b.group(&format!("{tag}_2a"), width);
+            let g2 = b.group(&format!("{tag}_2b"), width);
+            b.conv(&format!("{tag}_branch2a"), g1, 1, 1);
+            b.conv(&format!("{tag}_branch2b"), g2, 3, stride);
+            b.conv(&format!("{tag}_branch2c"), stage_out.clone(), 1, 1);
+            let main_hw = b.cursor_hw();
+
+            // Branch 1 (projection shortcut) only on the first block.
+            if bi == 0 {
+                b.set_cursor(entry_ch, entry_hw);
+                b.conv(&format!("{tag}_branch1"), stage_out.clone(), 1, stride);
+            }
+            b.set_cursor(stage_out.clone(), main_hw);
+            b.add(&format!("{tag}.add"));
+        }
+    }
+
+    b.global_pool("pool5");
+    b.fc("fc1000", ChRef::Fixed(1000));
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{ChannelCounts, LayerKind};
+
+    #[test]
+    fn resnet50_conv_count() {
+        let m = resnet50();
+        // 1 stem + 16 blocks x 3 + 4 projections = 53 convs, + 1 FC.
+        let convs = m
+            .layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Conv { .. }))
+            .count();
+        assert_eq!(convs, 53);
+        let fcs = m.layers.iter().filter(|l| matches!(l.kind, LayerKind::Fc)).count();
+        assert_eq!(fcs, 1);
+    }
+
+    #[test]
+    fn resnet50_param_count_near_25m() {
+        let m = resnet50();
+        let counts = ChannelCounts::baseline(&m);
+        let p = m.param_count(&counts);
+        // 25.5M (conv+fc weights; BN params excluded).
+        assert!((24_000_000..27_000_000).contains(&p), "params={p}");
+    }
+
+    #[test]
+    fn resnet50_flops_near_4gflops_inference() {
+        let m = resnet50();
+        let counts = ChannelCounts::baseline(&m);
+        // Forward-only MACs at batch 1 ~= 4.1 G multiply-adds (the
+        // literature's "4.1 GFLOPs"; v1.5 stride placement gives ~4.09G).
+        let fwd: u64 = m
+            .gemms(1, &counts)
+            .iter()
+            .filter(|g| g.phase == crate::gemm::Phase::Forward)
+            .map(|g| g.shape.macs())
+            .sum();
+        assert!(
+            (3_500_000_000..4_600_000_000).contains(&fwd),
+            "fwd macs={fwd}"
+        );
+    }
+
+    #[test]
+    fn stage_outputs_share_groups() {
+        let m = resnet50();
+        // All three res2 expand convs write the same group.
+        let outs: Vec<_> = m
+            .layers
+            .iter()
+            .filter(|l| l.is_gemm() && l.name.contains("branch2c") && l.name.starts_with("res2"))
+            .map(|l| l.out_ch.clone())
+            .collect();
+        assert_eq!(outs.len(), 3);
+        assert!(outs.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn spatial_dims_end_at_7() {
+        let m = resnet50();
+        let last_conv = m
+            .layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Conv { .. }))
+            .next_back()
+            .unwrap();
+        assert_eq!(last_conv.out_hw, 7);
+    }
+}

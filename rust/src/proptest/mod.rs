@@ -1,0 +1,149 @@
+//! Mini property-testing framework (proptest is not in the offline vendor
+//! set): seeded generators + a runner with halving-based shrinking for
+//! `usize` tuples. Used by `rust/tests/prop_*.rs` for compiler/simulator
+//! invariants.
+
+use crate::util::Lcg64;
+
+/// Number of cases per property by default.
+pub const DEFAULT_CASES: usize = 128;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: DEFAULT_CASES, seed: 0xF1E55A, max_shrink_steps: 64 }
+    }
+}
+
+/// Outcome of a property check on one value.
+pub type CheckResult = Result<(), String>;
+
+/// Run a property over generated values; panics with the (shrunk) minimal
+/// failing case.
+///
+/// `gen` draws a value from the RNG; `shrink` proposes smaller candidates
+/// (may return empty); `check` is the property.
+pub fn forall<T: Clone + std::fmt::Debug>(
+    cfg: &Config,
+    mut gen: impl FnMut(&mut Lcg64) -> T,
+    shrink: impl Fn(&T) -> Vec<T>,
+    check: impl Fn(&T) -> CheckResult,
+) {
+    let mut rng = Lcg64::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let value = gen(&mut rng);
+        if let Err(msg) = check(&value) {
+            // Shrink: greedily accept any smaller failing candidate.
+            let mut cur = value;
+            let mut cur_msg = msg;
+            let mut steps = 0;
+            'outer: while steps < cfg.max_shrink_steps {
+                for cand in shrink(&cur) {
+                    steps += 1;
+                    if let Err(m) = check(&cand) {
+                        cur = cand;
+                        cur_msg = m;
+                        continue 'outer;
+                    }
+                    if steps >= cfg.max_shrink_steps {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case}, seed {:#x}):\n  value: {cur:?}\n  error: {cur_msg}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Shrinker for a `(usize, usize, usize)` dimension triple: halve each
+/// coordinate toward 1.
+pub fn shrink_dims3(d: &(usize, usize, usize)) -> Vec<(usize, usize, usize)> {
+    let &(a, b, c) = d;
+    let mut out = Vec::new();
+    for (na, nb, nc) in [(a / 2, b, c), (a, b / 2, c), (a, b, c / 2), (1, b, c), (a, 1, c), (a, b, 1)]
+    {
+        if na >= 1 && nb >= 1 && nc >= 1 && (na, nb, nc) != (a, b, c) {
+            out.push((na, nb, nc));
+        }
+    }
+    out.dedup();
+    out
+}
+
+/// Draw a GEMM-ish dimension, biased toward the interesting boundaries
+/// (1, sub-core, core, core±1, large).
+pub fn gemm_dim(rng: &mut Lcg64) -> usize {
+    match rng.next_below(8) {
+        0 => 1,
+        1 => rng.range(2, 16),
+        2 => rng.range(17, 63),
+        3 => 64,
+        4 => rng.range(65, 127),
+        5 => 128,
+        6 => rng.range(129, 513),
+        _ => rng.range(514, 5000),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        forall(
+            &Config { cases: 50, ..Default::default() },
+            |rng| (gemm_dim(rng), gemm_dim(rng), gemm_dim(rng)),
+            shrink_dims3,
+            |&(a, b, c)| {
+                if a * b * c > 0 { Ok(()) } else { Err("zero".into()) }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_shrunk_case() {
+        forall(
+            &Config { cases: 200, ..Default::default() },
+            |rng| (gemm_dim(rng), gemm_dim(rng), gemm_dim(rng)),
+            shrink_dims3,
+            |&(a, _, _)| if a < 100 { Ok(()) } else { Err(format!("a={a} too big")) },
+        );
+    }
+
+    #[test]
+    fn shrinker_reduces() {
+        let cands = shrink_dims3(&(100, 50, 2));
+        assert!(cands.iter().all(|&(a, b, c)| a * b * c < 100 * 50 * 2 || (a, b, c) != (100, 50, 2)));
+        assert!(!cands.is_empty());
+    }
+
+    #[test]
+    fn gemm_dim_hits_boundaries() {
+        let mut rng = Lcg64::new(3);
+        let mut seen_one = false;
+        let mut seen_64 = false;
+        let mut seen_128 = false;
+        for _ in 0..500 {
+            match gemm_dim(&mut rng) {
+                1 => seen_one = true,
+                64 => seen_64 = true,
+                128 => seen_128 = true,
+                _ => {}
+            }
+        }
+        assert!(seen_one && seen_64 && seen_128);
+    }
+}

@@ -1,0 +1,170 @@
+//! PruneTrain-style channel-pruning substrate.
+//!
+//! The paper prunes ResNet50 *while training* with PruneTrain (group-lasso
+//! regularization, pruning interval of 10 epochs, 90 epochs total) at two
+//! strengths: **low** (final FLOPs ≈ 48% of baseline) and **high** (≈ 25%).
+//! We do not have the authors' GPU-months of training, so this module
+//! synthesizes channel-count trajectories with the properties that matter
+//! to the simulator (see DESIGN.md §5):
+//!
+//! - FLOPs decay gradually across pruning intervals to the published final
+//!   ratio (calibrated by bisection on the real GEMM MAC count);
+//! - per-layer channel counts become *irregular* (e.g. 71, 53) — the whole
+//!   reason large systolic arrays lose utilization;
+//! - later layers are pruned more than early ones and residual-shared
+//!   dimensions less than block-internal ones, as PruneTrain reports.
+//!
+//! Real trajectories from the end-to-end JAX/PJRT run (`trainer`) can be
+//! ingested via [`PruneSchedule::parse_trace`] and used interchangeably.
+
+mod schedule;
+mod trace;
+
+pub use schedule::{prunetrain_schedule, transfer_schedule};
+
+use crate::models::{ChannelCounts, Model};
+
+/// Pruning strength (paper §III / §VII).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Strength {
+    /// Few channels removed, small accuracy loss: final FLOPs ≈ 48%.
+    Low,
+    /// Aggressive: final FLOPs ≈ 25%.
+    High,
+}
+
+impl Strength {
+    pub const BOTH: [Strength; 2] = [Strength::Low, Strength::High];
+
+    /// Final GEMM-FLOPs ratio vs the unpruned baseline (paper §III).
+    pub fn target_flops_ratio(&self) -> f64 {
+        match self {
+            Strength::Low => 0.48,
+            Strength::High => 0.25,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strength::Low => "low",
+            Strength::High => "high",
+        }
+    }
+}
+
+/// Channel counts at one pruning interval.
+#[derive(Debug, Clone)]
+pub struct PrunePoint {
+    /// Epoch at which these counts take effect.
+    pub epoch: usize,
+    pub counts: ChannelCounts,
+    /// GEMM MACs relative to the unpruned baseline (at default batch).
+    pub macs_ratio: f64,
+}
+
+/// A full pruning-while-training trajectory for one model.
+#[derive(Debug, Clone)]
+pub struct PruneSchedule {
+    pub model_name: String,
+    pub epochs: usize,
+    pub interval: usize,
+    pub points: Vec<PrunePoint>,
+}
+
+impl PruneSchedule {
+    /// The counts in effect at `epoch` (last point with `p.epoch <= epoch`).
+    pub fn counts_at(&self, epoch: usize) -> &ChannelCounts {
+        let mut cur = &self.points[0];
+        for p in &self.points {
+            if p.epoch <= epoch {
+                cur = p;
+            } else {
+                break;
+            }
+        }
+        &cur.counts
+    }
+
+    /// Final MACs ratio.
+    pub fn final_ratio(&self) -> f64 {
+        self.points.last().map(|p| p.macs_ratio).unwrap_or(1.0)
+    }
+
+    /// A static (no pruning) schedule at baseline widths.
+    pub fn static_baseline(model: &Model, epochs: usize) -> Self {
+        Self {
+            model_name: model.name.clone(),
+            epochs,
+            interval: epochs,
+            points: vec![PrunePoint {
+                epoch: 0,
+                counts: ChannelCounts::baseline(model),
+                macs_ratio: 1.0,
+            }],
+        }
+    }
+
+    /// Validate against a model: counts length matches groups, counts are
+    /// monotonically non-increasing, ratios in (0, 1].
+    pub fn validate(&self, model: &Model) -> Result<(), String> {
+        if self.points.is_empty() {
+            return Err("empty schedule".into());
+        }
+        for p in &self.points {
+            if p.counts.0.len() != model.groups.len() {
+                return Err(format!(
+                    "point at epoch {}: {} counts for {} groups",
+                    p.epoch,
+                    p.counts.0.len(),
+                    model.groups.len()
+                ));
+            }
+            if !(0.0..=1.0 + 1e-9).contains(&p.macs_ratio) {
+                return Err(format!("bad macs_ratio {}", p.macs_ratio));
+            }
+        }
+        for w in self.points.windows(2) {
+            if w[1].epoch <= w[0].epoch {
+                return Err("points not strictly increasing in epoch".into());
+            }
+            for (a, b) in w[0].counts.0.iter().zip(&w[1].counts.0) {
+                if b > a {
+                    return Err(format!("channel count grew: {a} -> {b}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::resnet50;
+
+    #[test]
+    fn counts_at_picks_latest_point() {
+        let m = resnet50();
+        let s = prunetrain_schedule(&m, Strength::Low, 90, 10, 1);
+        let c0 = s.counts_at(0);
+        let c5 = s.counts_at(5); // still the epoch-0 point
+        assert_eq!(c0, c5);
+        let c89 = s.counts_at(89);
+        assert!(c89.0.iter().sum::<usize>() < c0.0.iter().sum::<usize>());
+    }
+
+    #[test]
+    fn static_baseline_is_flat() {
+        let m = resnet50();
+        let s = PruneSchedule::static_baseline(&m, 90);
+        assert_eq!(s.points.len(), 1);
+        assert!((s.final_ratio() - 1.0).abs() < 1e-12);
+        s.validate(&m).unwrap();
+    }
+
+    #[test]
+    fn strengths_have_published_targets() {
+        assert!((Strength::Low.target_flops_ratio() - 0.48).abs() < 1e-12);
+        assert!((Strength::High.target_flops_ratio() - 0.25).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,245 @@
+//! Synthetic PruneTrain trajectory generation (see module docs in `mod.rs`).
+
+use super::{PrunePoint, PruneSchedule, Strength};
+use crate::models::{ChannelCounts, Model};
+use crate::util::Lcg64;
+
+/// Per-group pruning sensitivity: how strongly PruneTrain's group-lasso
+/// regularizer bites this group, in `[0, 1]`.
+///
+/// - grows with depth (later layers hold more redundancy — PruneTrain §5),
+/// - residual-shared dimensions (`*_out` groups and the stem) are pruned
+///   about half as hard (they feed many consumers),
+/// - deterministic per-group jitter produces the irregular counts (71, 53,
+///   ...) that cause tile quantization.
+fn sensitivities(model: &Model, rng: &mut Lcg64) -> Vec<f64> {
+    let n = model.groups.len().max(2);
+    model
+        .groups
+        .iter()
+        .enumerate()
+        .map(|(i, g)| {
+            let depth = i as f64 / (n - 1) as f64;
+            let mut s = 0.35 + 0.75 * depth;
+            if g.name.ends_with("_out") || g.name.starts_with("conv1") || g.name == "stem" {
+                s *= 0.5;
+            }
+            s += 0.20 * (rng.next_f64() - 0.5);
+            s.clamp(0.05, 1.0)
+        })
+        .collect()
+}
+
+/// Channel counts when the global pruning intensity is `theta`.
+fn counts_for_theta(model: &Model, sens: &[f64], theta: f64) -> ChannelCounts {
+    ChannelCounts(
+        model
+            .groups
+            .iter()
+            .zip(sens)
+            .map(|(g, s)| {
+                let survival = (1.0 - theta * s).clamp(0.02, 1.0);
+                ((g.base as f64 * survival).round() as usize).max(1)
+            })
+            .collect(),
+    )
+}
+
+/// Generate a PruneTrain-style schedule calibrated so that the *final*
+/// GEMM-MACs ratio hits the strength's published target (±0.5%).
+///
+/// `interval` is the pruning interval in epochs (paper: 10); points are
+/// emitted at epochs `0, interval, 2·interval, …` with epoch 0 unpruned.
+pub fn prunetrain_schedule(
+    model: &Model,
+    strength: Strength,
+    epochs: usize,
+    interval: usize,
+    seed: u64,
+) -> PruneSchedule {
+    assert!(interval > 0 && epochs >= interval);
+    let mut rng = Lcg64::new(seed ^ 0xF1E_C5A);
+    let sens = sensitivities(model, &mut rng);
+    let batch = model.default_batch;
+    let base_macs = model.total_macs(batch, &ChannelCounts::baseline(model)) as f64;
+    let target = strength.target_flops_ratio();
+
+    // Bisection on the final pruning intensity theta: MACs shrink
+    // monotonically in theta (quadratically where both sides of a layer
+    // are pruned), so this converges fast.
+    let ratio_at = |theta: f64| -> f64 {
+        model.total_macs(batch, &counts_for_theta(model, &sens, theta)) as f64 / base_macs
+    };
+    let (mut lo, mut hi) = (0.0f64, 1.0f64);
+    for _ in 0..48 {
+        let mid = 0.5 * (lo + hi);
+        if ratio_at(mid) > target {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    let theta_final = 0.5 * (lo + hi);
+
+    // Pruning progress over intervals: PruneTrain removes more channels in
+    // early intervals (regularization bites hardest on the fresh model);
+    // progress(t) = t^0.75 front-loads the decay as in the paper's Fig 3.
+    let n_points = epochs / interval; // intervals after epoch 0
+    let mut points = Vec::with_capacity(n_points + 1);
+    let mut prev = ChannelCounts::baseline(model);
+    points.push(PrunePoint { epoch: 0, counts: prev.clone(), macs_ratio: 1.0 });
+    for i in 1..=n_points {
+        let progress = (i as f64 / n_points as f64).powf(0.75);
+        let theta = theta_final * progress;
+        let mut c = counts_for_theta(model, &sens, theta);
+        // Monotonic non-increase (rounding could otherwise wiggle up).
+        for (cur, last) in c.0.iter_mut().zip(&prev.counts_at_ref()) {
+            *cur = (*cur).min(**last);
+        }
+        let ratio = model.total_macs(batch, &c) as f64 / base_macs;
+        points.push(PrunePoint { epoch: i * interval, counts: c.clone(), macs_ratio: ratio });
+        prev = c;
+    }
+
+    let s = PruneSchedule {
+        model_name: model.name.clone(),
+        epochs,
+        interval,
+        points,
+    };
+    debug_assert!(s.validate(model).is_ok());
+    s
+}
+
+// Small helper so the monotonic clamp reads cleanly.
+trait CountsRef {
+    fn counts_at_ref(&self) -> Vec<&usize>;
+}
+
+impl CountsRef for ChannelCounts {
+    fn counts_at_ref(&self) -> Vec<&usize> {
+        self.0.iter().collect()
+    }
+}
+
+/// Transfer a schedule's *survival fractions* onto another model by
+/// relative group depth — the paper's method for Inception v4 ("artificially
+/// pruned by applying the same pruning statistics of ResNet50", §VII).
+pub fn transfer_schedule(src: &PruneSchedule, src_model: &Model, dst: &Model) -> PruneSchedule {
+    let src_n = src_model.groups.len().max(2);
+    let dst_n = dst.groups.len().max(2);
+    let batch = dst.default_batch;
+    let base_macs = dst.total_macs(batch, &ChannelCounts::baseline(dst)) as f64;
+
+    let points = src
+        .points
+        .iter()
+        .map(|p| {
+            // Survival fraction by source-depth lookup.
+            let counts = ChannelCounts(
+                dst.groups
+                    .iter()
+                    .enumerate()
+                    .map(|(i, g)| {
+                        let depth = i as f64 / (dst_n - 1) as f64;
+                        let j = ((depth * (src_n - 1) as f64).round() as usize)
+                            .min(src_model.groups.len() - 1);
+                        let surv = p.counts.0[j] as f64 / src_model.groups[j].base as f64;
+                        ((g.base as f64 * surv).round() as usize).max(1)
+                    })
+                    .collect(),
+            );
+            let ratio = dst.total_macs(batch, &counts) as f64 / base_macs;
+            PrunePoint { epoch: p.epoch, counts, macs_ratio: ratio }
+        })
+        .collect();
+
+    PruneSchedule {
+        model_name: dst.name.clone(),
+        epochs: src.epochs,
+        interval: src.interval,
+        points,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{inception_v4, resnet50};
+
+    #[test]
+    fn final_ratio_hits_target_low() {
+        let m = resnet50();
+        let s = prunetrain_schedule(&m, Strength::Low, 90, 10, 42);
+        assert!((s.final_ratio() - 0.48).abs() < 0.02, "{}", s.final_ratio());
+        s.validate(&m).unwrap();
+    }
+
+    #[test]
+    fn final_ratio_hits_target_high() {
+        let m = resnet50();
+        let s = prunetrain_schedule(&m, Strength::High, 90, 10, 42);
+        assert!((s.final_ratio() - 0.25).abs() < 0.02, "{}", s.final_ratio());
+        s.validate(&m).unwrap();
+    }
+
+    #[test]
+    fn schedule_has_interval_points() {
+        let m = resnet50();
+        let s = prunetrain_schedule(&m, Strength::Low, 90, 10, 7);
+        assert_eq!(s.points.len(), 10); // epoch 0 + 9 intervals
+        assert_eq!(s.points[1].epoch, 10);
+        assert_eq!(s.points.last().unwrap().epoch, 90);
+    }
+
+    #[test]
+    fn counts_become_irregular() {
+        // The whole point: pruned channel counts are not powers of two.
+        let m = resnet50();
+        let s = prunetrain_schedule(&m, Strength::High, 90, 10, 3);
+        let final_counts = &s.points.last().unwrap().counts;
+        let irregular = final_counts
+            .0
+            .iter()
+            .filter(|&&c| c > 4 && !c.is_power_of_two() && c % 32 != 0)
+            .count();
+        assert!(
+            irregular * 2 > final_counts.0.len(),
+            "{irregular}/{}",
+            final_counts.0.len()
+        );
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let m = resnet50();
+        let a = prunetrain_schedule(&m, Strength::Low, 90, 10, 9);
+        let b = prunetrain_schedule(&m, Strength::Low, 90, 10, 9);
+        for (x, y) in a.points.iter().zip(&b.points) {
+            assert_eq!(x.counts, y.counts);
+        }
+    }
+
+    #[test]
+    fn decay_is_front_loaded() {
+        let m = resnet50();
+        let s = prunetrain_schedule(&m, Strength::High, 90, 10, 11);
+        // More MACs removed in the first half of training than the second.
+        let mid = s.points[s.points.len() / 2].macs_ratio;
+        let first_half = 1.0 - mid;
+        let second_half = mid - s.final_ratio();
+        assert!(first_half > second_half, "{first_half} vs {second_half}");
+    }
+
+    #[test]
+    fn transfer_to_inception_tracks_ratio() {
+        let r = resnet50();
+        let i = inception_v4();
+        let s = prunetrain_schedule(&r, Strength::Low, 90, 10, 42);
+        let t = transfer_schedule(&s, &r, &i);
+        t.validate(&i).unwrap();
+        assert_eq!(t.points.len(), s.points.len());
+        // Transferred final ratio should be in the same regime (±0.15).
+        assert!((t.final_ratio() - s.final_ratio()).abs() < 0.15, "{}", t.final_ratio());
+    }
+}

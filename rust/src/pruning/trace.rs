@@ -1,0 +1,136 @@
+//! Channel-trajectory trace I/O.
+//!
+//! The end-to-end trainer (`crate::trainer`) runs real group-lasso pruning
+//! through the AOT JAX path and emits its measured channel counts in this
+//! format; figure harnesses can replay them through the simulator in place
+//! of the synthetic schedule.
+//!
+//! Format (one point per line, `#` comments allowed):
+//! ```text
+//! # model=resnet50 epochs=90 interval=10
+//! epoch 0: 64 64 64 256 ...
+//! epoch 10: 61 58 64 250 ...
+//! ```
+
+use super::{PrunePoint, PruneSchedule};
+use crate::models::{ChannelCounts, Model};
+
+impl PruneSchedule {
+    /// Serialize to the trace text format.
+    pub fn encode_trace(&self) -> String {
+        let mut out = format!(
+            "# model={} epochs={} interval={}\n",
+            self.model_name, self.epochs, self.interval
+        );
+        for p in &self.points {
+            out.push_str(&format!("epoch {}:", p.epoch));
+            for c in &p.counts.0 {
+                out.push_str(&format!(" {c}"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Parse a trace. `model` is used to recompute MAC ratios and validate.
+    pub fn parse_trace(text: &str, model: &Model) -> Result<PruneSchedule, String> {
+        let mut model_name = model.name.clone();
+        let mut epochs = 0usize;
+        let mut interval = 1usize;
+        let mut points: Vec<PrunePoint> = Vec::new();
+        let base =
+            model.total_macs(model.default_batch, &ChannelCounts::baseline(model)) as f64;
+
+        for (no, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(meta) = line.strip_prefix('#') {
+                for tok in meta.split_whitespace() {
+                    if let Some((k, v)) = tok.split_once('=') {
+                        match k {
+                            "model" => model_name = v.to_string(),
+                            "epochs" => epochs = v.parse().map_err(|e| format!("{e}"))?,
+                            "interval" => interval = v.parse().map_err(|e| format!("{e}"))?,
+                            _ => {}
+                        }
+                    }
+                }
+                continue;
+            }
+            let (head, rest) = line
+                .split_once(':')
+                .ok_or_else(|| format!("line {}: missing `:`", no + 1))?;
+            let epoch: usize = head
+                .trim()
+                .strip_prefix("epoch")
+                .ok_or_else(|| format!("line {}: expected `epoch N:`", no + 1))?
+                .trim()
+                .parse()
+                .map_err(|e| format!("line {}: {e}", no + 1))?;
+            let counts: Result<Vec<usize>, _> =
+                rest.split_whitespace().map(|t| t.parse::<usize>()).collect();
+            let counts = ChannelCounts(counts.map_err(|e| format!("line {}: {e}", no + 1))?);
+            if counts.0.len() != model.groups.len() {
+                return Err(format!(
+                    "line {}: {} counts but model {} has {} groups",
+                    no + 1,
+                    counts.0.len(),
+                    model.name,
+                    model.groups.len()
+                ));
+            }
+            let ratio = model.total_macs(model.default_batch, &counts) as f64 / base;
+            points.push(PrunePoint { epoch, counts, macs_ratio: ratio });
+        }
+
+        if points.is_empty() {
+            return Err("trace contains no points".into());
+        }
+        if epochs == 0 {
+            epochs = points.last().unwrap().epoch.max(1);
+        }
+        let s = PruneSchedule { model_name, epochs, interval, points };
+        s.validate(model)?;
+        Ok(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::resnet50;
+    use crate::pruning::{prunetrain_schedule, Strength};
+
+    #[test]
+    fn trace_round_trip() {
+        let m = resnet50();
+        let s = prunetrain_schedule(&m, Strength::Low, 90, 10, 42);
+        let text = s.encode_trace();
+        let t = PruneSchedule::parse_trace(&text, &m).unwrap();
+        assert_eq!(t.points.len(), s.points.len());
+        for (a, b) in s.points.iter().zip(&t.points) {
+            assert_eq!(a.epoch, b.epoch);
+            assert_eq!(a.counts, b.counts);
+            assert!((a.macs_ratio - b.macs_ratio).abs() < 1e-12);
+        }
+        assert_eq!(t.epochs, 90);
+        assert_eq!(t.interval, 10);
+    }
+
+    #[test]
+    fn wrong_group_count_rejected() {
+        let m = resnet50();
+        let e = PruneSchedule::parse_trace("epoch 0: 1 2 3\n", &m).unwrap_err();
+        assert!(e.contains("groups"), "{e}");
+    }
+
+    #[test]
+    fn malformed_lines_rejected() {
+        let m = resnet50();
+        assert!(PruneSchedule::parse_trace("epoch zero: 1\n", &m).is_err());
+        assert!(PruneSchedule::parse_trace("0: 1 2\n", &m).is_err());
+        assert!(PruneSchedule::parse_trace("", &m).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Figure/table regeneration harnesses.
+//!
+//! One function per table and figure of the paper's evaluation (§III–§VIII).
+//! Each returns structured rows; `render` prints them side by side with the
+//! paper's published values (embedded in [`paper`]) so EXPERIMENTS.md can
+//! record paper-vs-measured at a glance. CSV emitters support plotting.
+
+pub mod figures;
+pub mod paper;
+pub mod table;
+
+pub use figures::*;
+pub use table::{csv_escape, TextTable};

@@ -1,0 +1,143 @@
+//! Artifact metadata contract (`artifacts/meta.txt`), written by
+//! `python/compile/aot.py` and parsed here. It pins the parameter order
+//! and shapes the flat `train_step` signature relies on.
+
+/// Parsed metadata for the AOT model.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelMeta {
+    pub batch: usize,
+    pub input_hw: usize,
+    pub input_c: usize,
+    pub classes: usize,
+    pub strides: Vec<usize>,
+    pub channels: Vec<usize>,
+    /// (name, shape) in the exact flat-signature order.
+    pub params: Vec<(String, Vec<usize>)>,
+    /// Example GEMM dims of the standalone kernel artifact (m, n, k).
+    pub gemm_fw: (usize, usize, usize),
+}
+
+impl ModelMeta {
+    pub fn parse(text: &str) -> Result<ModelMeta, String> {
+        let mut batch = 0;
+        let mut input_hw = 0;
+        let mut input_c = 0;
+        let mut classes = 0;
+        let mut strides = Vec::new();
+        let mut channels = Vec::new();
+        let mut params = Vec::new();
+        let mut gemm_fw = (0, 0, 0);
+
+        for (no, line) in text.lines().enumerate() {
+            let mut it = line.split_whitespace();
+            let Some(key) = it.next() else { continue };
+            let rest: Vec<&str> = it.collect();
+            let nums = |rest: &[&str]| -> Result<Vec<usize>, String> {
+                rest.iter()
+                    .map(|t| t.parse().map_err(|e| format!("line {}: {e}", no + 1)))
+                    .collect()
+            };
+            match key {
+                "batch" => batch = nums(&rest)?[0],
+                "input_hw" => input_hw = nums(&rest)?[0],
+                "input_c" => input_c = nums(&rest)?[0],
+                "classes" => classes = nums(&rest)?[0],
+                "strides" => strides = nums(&rest)?,
+                "channels" => channels = nums(&rest)?,
+                "param" => {
+                    let name = rest.first().ok_or("param needs a name")?.to_string();
+                    params.push((name, nums(&rest[1..])?));
+                }
+                "gemm_fw" => {
+                    let v = nums(&rest)?;
+                    gemm_fw = (v[0], v[1], v[2]);
+                }
+                other => return Err(format!("line {}: unknown key `{other}`", no + 1)),
+            }
+        }
+        if batch == 0 || params.is_empty() {
+            return Err("meta.txt missing batch or params".into());
+        }
+        if strides.len() != channels.len() {
+            return Err("strides/channels length mismatch".into());
+        }
+        Ok(ModelMeta { batch, input_hw, input_c, classes, strides, channels, params, gemm_fw })
+    }
+
+    /// Number of learnable tensors (== momentum tensor count).
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Element count of parameter `i`.
+    pub fn param_elems(&self, i: usize) -> usize {
+        self.params[i].1.iter().product()
+    }
+
+    /// Total parameter count of the model.
+    pub fn total_params(&self) -> usize {
+        (0..self.n_params()).map(|i| self.param_elems(i)).sum()
+    }
+
+    /// Build the equivalent rust-side [`crate::models::Model`] so the
+    /// measured pruning trajectory can be fed to the simulator.
+    pub fn as_sim_model(&self) -> crate::models::Model {
+        use crate::models::{ChRef, ModelBuilder};
+        let mut b = ModelBuilder::new("prunecnn", self.input_hw, self.input_c, self.batch);
+        for (i, (&c, &s)) in self.channels.iter().zip(&self.strides).enumerate() {
+            let g = b.group(&format!("conv{i}"), c);
+            b.conv(&format!("conv{i}"), g, 3, s);
+        }
+        b.global_pool("pool");
+        b.fc("fc", ChRef::Fixed(self.classes));
+        b.build()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+batch 32
+input_hw 16
+input_c 3
+classes 10
+strides 1 2 1 2
+channels 32 64 64 128
+param conv0_w 3 3 3 32
+param conv0_b 32
+param fc_w 128 10
+param fc_b 10
+gemm_fw 512 256 384
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = ModelMeta::parse(SAMPLE).unwrap();
+        assert_eq!(m.batch, 32);
+        assert_eq!(m.channels, vec![32, 64, 64, 128]);
+        assert_eq!(m.params.len(), 4);
+        assert_eq!(m.params[0], ("conv0_w".to_string(), vec![3, 3, 3, 32]));
+        assert_eq!(m.gemm_fw, (512, 256, 384));
+        assert_eq!(m.param_elems(0), 3 * 3 * 3 * 32);
+        assert_eq!(m.total_params(), 864 + 32 + 1280 + 10);
+    }
+
+    #[test]
+    fn sim_model_matches_architecture() {
+        let m = ModelMeta::parse(SAMPLE).unwrap();
+        let sim = m.as_sim_model();
+        assert_eq!(sim.groups.len(), 4);
+        assert_eq!(sim.default_batch, 32);
+        let counts = crate::models::ChannelCounts::baseline(&sim);
+        assert!(sim.total_macs(32, &counts) > 0);
+    }
+
+    #[test]
+    fn rejects_bad_meta() {
+        assert!(ModelMeta::parse("").is_err());
+        assert!(ModelMeta::parse("bogus 1\n").is_err());
+        assert!(ModelMeta::parse("batch 32\nstrides 1\nchannels 1 2\nparam p 1\n").is_err());
+    }
+}

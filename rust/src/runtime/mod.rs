@@ -1,0 +1,125 @@
+//! PJRT runtime bridge: load AOT HLO-text artifacts, compile once, execute
+//! from rust. Python is never on this path — `make artifacts` ran at build
+//! time.
+//!
+//! Interchange is HLO *text* (see `python/compile/aot.py` and
+//! /opt/xla-example): jax ≥ 0.5 emits HloModuleProtos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids and round-trips cleanly.
+
+mod meta;
+
+pub use meta::ModelMeta;
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// A PJRT CPU client plus the artifact directory it loads from.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts: PathBuf,
+}
+
+/// A compiled executable (one HLO artifact).
+pub struct LoadedModule {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at an artifact directory.
+    pub fn cpu(artifacts: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("PjRtClient::cpu")?;
+        Ok(Self { client, artifacts: artifacts.as_ref().to_path_buf() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load `<artifacts>/<name>.hlo.txt` and compile it.
+    pub fn load(&self, name: &str) -> Result<LoadedModule> {
+        let path = self.artifacts.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parse {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compile {name}"))?;
+        Ok(LoadedModule { exe, name: name.to_string() })
+    }
+
+    /// Parse the artifact metadata contract.
+    pub fn meta(&self) -> Result<ModelMeta> {
+        let path = self.artifacts.join("meta.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        ModelMeta::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+    }
+
+    /// Do the artifacts exist (i.e. has `make artifacts` run)?
+    pub fn artifacts_ready(dir: impl AsRef<Path>) -> bool {
+        dir.as_ref().join("meta.txt").is_file()
+            && dir.as_ref().join("train_step.hlo.txt").is_file()
+    }
+}
+
+impl LoadedModule {
+    /// Execute with literal inputs; unwraps the (return_tuple=True) result
+    /// into its elements.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(inputs)
+            .with_context(|| format!("execute {}", self.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetch {} result", self.name))?;
+        tuple.to_tuple().with_context(|| format!("untuple {} result", self.name))
+    }
+}
+
+/// Helpers to build literals from rust vectors.
+pub mod lit {
+    use anyhow::Result;
+
+    /// f32 tensor literal with the given dims.
+    pub fn f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+        let n: usize = dims.iter().product();
+        anyhow::ensure!(n == data.len(), "literal size {} != dims {:?}", data.len(), dims);
+        let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(data).reshape(&dims)?)
+    }
+
+    /// i32 tensor literal.
+    pub fn i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+        let n: usize = dims.iter().product();
+        anyhow::ensure!(n == data.len(), "literal size {} != dims {:?}", data.len(), dims);
+        let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(data).reshape(&dims)?)
+    }
+
+    /// f32 scalar literal.
+    pub fn scalar_f32(v: f32) -> xla::Literal {
+        xla::Literal::scalar(v)
+    }
+
+    /// Extract an f32 vector from a literal.
+    pub fn to_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+        Ok(l.to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT integration tests live in rust/tests/runtime_integration.rs
+    // (they need built artifacts); here we only test path plumbing.
+    use super::*;
+
+    #[test]
+    fn artifacts_ready_detects_missing() {
+        assert!(!Runtime::artifacts_ready("/nonexistent/path"));
+    }
+
+    #[test]
+    fn literal_size_checked() {
+        assert!(lit::f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(lit::f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).is_ok());
+    }
+}

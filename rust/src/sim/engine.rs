@@ -1,0 +1,416 @@
+//! Per-GEMM event-driven execution of compiled programs.
+
+use super::{RampMode, SimOptions};
+use crate::compiler::CompiledGemm;
+use crate::config::AcceleratorConfig;
+use crate::gemm::{ACC_BYTES, ELEM_BYTES};
+use crate::isa::{Inst, Mode};
+
+/// Traffic counters in bytes.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Traffic {
+    /// GBUF reads feeding LBUFs (stationary + horizontal inputs).
+    pub gbuf_to_lbuf: u64,
+    /// OBUF results written back to GBUF.
+    pub obuf_to_gbuf: u64,
+    /// DRAM reads (GBUF refills).
+    pub dram_read: u64,
+    /// DRAM writes (outputs, partial sums, reductions).
+    pub dram_write: u64,
+    /// Inter-core (over-core) transfers inside FlexSA units: pass-through
+    /// inputs, broadcast stationaries, partial-sum forwarding (Fig 7 ①–④).
+    pub overcore: u64,
+}
+
+impl Traffic {
+    pub fn onchip(&self) -> u64 {
+        self.gbuf_to_lbuf + self.obuf_to_gbuf
+    }
+
+    pub fn dram(&self) -> u64 {
+        self.dram_read + self.dram_write
+    }
+
+    pub fn add(&mut self, o: &Traffic) {
+        self.gbuf_to_lbuf += o.gbuf_to_lbuf;
+        self.obuf_to_gbuf += o.obuf_to_gbuf;
+        self.dram_read += o.dram_read;
+        self.dram_write += o.dram_write;
+        self.overcore += o.overcore;
+    }
+}
+
+/// Result of simulating one GEMM.
+#[derive(Debug, Clone, Default)]
+pub struct GemmSim {
+    /// Wall-clock cycles for the GEMM (max over groups, DRAM-bounded).
+    pub cycles: f64,
+    /// Compute-only cycles (max over groups, ignoring DRAM).
+    pub compute_cycles: f64,
+    /// DRAM-transfer cycles implied by the blocking plan.
+    pub dram_cycles: f64,
+    /// Useful MACs executed.
+    pub busy_macs: u64,
+    pub traffic: Traffic,
+    /// ExecGEMM issues per mode (for Fig 13).
+    pub waves_by_mode: std::collections::BTreeMap<Mode, u64>,
+}
+
+impl GemmSim {
+    /// PE utilization: useful MACs / (all PEs × cycles).
+    pub fn pe_utilization(&self, cfg: &AcceleratorConfig) -> f64 {
+        if self.cycles == 0.0 {
+            return 0.0;
+        }
+        self.busy_macs as f64 / (cfg.total_pes() as f64 * self.cycles)
+    }
+}
+
+/// Per-unit engine state during program execution.
+#[derive(Debug, Clone, Copy, Default)]
+struct UnitState {
+    /// When the LBUF load engine frees up.
+    load_free: f64,
+    /// When the systolic array frees up.
+    exec_free: f64,
+    /// When the OBUF store engine frees up.
+    store_free: f64,
+    /// Loads issued since the last ExecGEMM complete at this time; the next
+    /// ExecGEMM waits for them.
+    pending_load_done: f64,
+    /// Pending (non-overlapped) ShiftV cycles to charge on the next exec.
+    pending_shift: f64,
+    /// The next ExecGEMM starts a new tile job (charge the ramp).
+    job_start: bool,
+    /// No ExecGEMM has run yet on this unit for this GEMM.
+    first_issue: bool,
+    /// Common launch time of the current issue's parallel sub-waves.
+    issue_gate: f64,
+    /// Fill/drain ramp of the current issue.
+    issue_ramp: f64,
+}
+
+/// Per-group instruction executor: consumes instructions (from a
+/// materialized [`Program`] or streamed straight out of the compiler) and
+/// advances the unit timing machines and traffic counters.
+pub struct GroupExecutor {
+    units: Vec<UnitState>,
+    traffic: Traffic,
+    busy_macs: u64,
+    /// Wave counts indexed by [`Mode::index`] (BTreeMap was 10%+ of the
+    /// hot path; see EXPERIMENTS.md SEC Perf).
+    waves: [u64; 5],
+    bw: f64,
+    opts: SimOptions,
+    k_partitioned: bool,
+}
+
+impl GroupExecutor {
+    pub fn new(cfg: &AcceleratorConfig, opts: SimOptions, k_partitioned: bool) -> Self {
+        Self {
+            units: vec![
+                UnitState { job_start: true, first_issue: true, ..Default::default() };
+                cfg.units_per_group
+            ],
+            traffic: Traffic::default(),
+            busy_macs: 0,
+            waves: [0; 5],
+            bw: cfg.onchip_bytes_per_cycle_per_unit(),
+            opts,
+            k_partitioned,
+        }
+    }
+
+    /// Execute one instruction.
+    #[inline]
+    pub fn exec(&mut self, inst: &Inst) {
+        let t = &mut self.traffic;
+        let u = &mut self.units[inst.unit()];
+        match *inst {
+            Inst::LdLbufV { k, n, broadcast, .. } => {
+                let bytes = (k * n * ELEM_BYTES) as u64;
+                t.gbuf_to_lbuf += bytes;
+                if broadcast {
+                    // Local broadcast datapath 3/4: the mirrored copy
+                    // crosses the core boundary, not the GBUF port.
+                    t.overcore += bytes;
+                }
+                u.load_free += bytes as f64 / self.bw;
+                u.pending_load_done = u.pending_load_done.max(u.load_free);
+            }
+            Inst::LdLbufH { k, m, .. } => {
+                let bytes = (k * m * ELEM_BYTES) as u64;
+                t.gbuf_to_lbuf += bytes;
+                u.load_free += bytes as f64 / self.bw;
+                u.pending_load_done = u.pending_load_done.max(u.load_free);
+            }
+            Inst::ShiftV { k, .. } => {
+                if !self.opts.shiftv_overlap {
+                    u.pending_shift += k as f64;
+                }
+            }
+            Inst::ExecGemm { mode, subwave, m, n, k, .. } => {
+                self.waves[mode.index()] += 1;
+                self.busy_macs += (m as u64) * (n as u64) * (k as u64);
+                overcore_for_mode(t, mode, m, n, k);
+                // Sub-waves of one issue launch together on disjoint
+                // sub-arrays once all the issue's loads are resident; the
+                // issue occupies the unit until its longest sub-wave
+                // (max m_i) drains.
+                if subwave == 0 {
+                    u.issue_gate = u.exec_free.max(u.pending_load_done) + u.pending_shift;
+                    u.pending_shift = 0.0;
+                    let charge = match self.opts.ramp {
+                        RampMode::PerIssue => true,
+                        RampMode::PerJob => u.job_start,
+                        RampMode::PerGemm => u.first_issue,
+                    };
+                    u.issue_ramp = if charge { (k + n) as f64 } else { 0.0 };
+                    u.job_start = false;
+                    u.first_issue = false;
+                }
+                let done = u.issue_gate + m as f64 + u.issue_ramp;
+                u.exec_free = u.exec_free.max(done);
+            }
+            Inst::StLbuf { m, n, .. } => {
+                let bytes =
+                    (m * n * if self.k_partitioned { ACC_BYTES } else { ELEM_BYTES }) as u64;
+                t.obuf_to_gbuf += bytes;
+                // OBUF is double buffered: the store engine drains while
+                // the next job computes.
+                let start = u.store_free.max(u.exec_free);
+                u.store_free = start + bytes as f64 / self.bw;
+                u.job_start = true;
+            }
+            Inst::Sync { .. } => {}
+        }
+    }
+
+    /// Group completion time (all units' loads, execs, stores drained).
+    pub fn finish(&self) -> f64 {
+        self.units
+            .iter()
+            .map(|u| u.exec_free.max(u.store_free).max(u.load_free))
+            .fold(0.0f64, f64::max)
+    }
+
+    /// Fold this group's counters into a [`GemmSim`]; returns group time.
+    fn drain_into(self, out: &mut GemmSim) -> f64 {
+        let done = self.finish();
+        out.traffic.add(&self.traffic);
+        out.busy_macs += self.busy_macs;
+        for (i, c) in self.waves.into_iter().enumerate() {
+            if c > 0 {
+                *out.waves_by_mode.entry(Mode::from_index(i)).or_insert(0) += c;
+            }
+        }
+        done
+    }
+}
+
+/// Simulate one compiled GEMM on the accelerator.
+pub fn simulate_gemm(cfg: &AcceleratorConfig, c: &CompiledGemm, opts: &SimOptions) -> GemmSim {
+    let mut out = GemmSim::default();
+    let mut group_max = 0.0f64;
+    let mut dram_bytes = 0u64;
+
+    for plan in &c.groups {
+        let mut ex = GroupExecutor::new(cfg, *opts, c.k_partitioned);
+        for inst in &plan.program.insts {
+            ex.exec(inst);
+        }
+        group_max = group_max.max(ex.drain_into(&mut out));
+        dram_bytes += plan.dram.total_bytes();
+        out.traffic.dram_read += plan.dram.read_bytes;
+        out.traffic.dram_write += plan.dram.write_bytes + plan.dram.reduce_bytes;
+    }
+    finish_gemm(cfg, opts, &mut out, group_max, dram_bytes);
+    out
+}
+
+/// Streaming compile+simulate: identical results to
+/// `simulate_gemm(compile_gemm(..))` without materializing the multi-
+/// million-instruction programs (the SEC Perf hot path).
+pub fn simulate_gemm_shape(
+    cfg: &AcceleratorConfig,
+    shape: crate::gemm::GemmShape,
+    phase: crate::gemm::Phase,
+    opts: &SimOptions,
+) -> GemmSim {
+    use crate::compiler::{gbuf_blocking, partitions, tile_partition_visit};
+    let (parts, k_partitioned) = partitions(cfg, shape, phase);
+    let mut out = GemmSim::default();
+    let mut group_max = 0.0f64;
+    let mut dram_bytes = 0u64;
+    for p in parts {
+        let dram = gbuf_blocking(cfg, p, phase, k_partitioned);
+        let mut ex = GroupExecutor::new(cfg, *opts, k_partitioned);
+        tile_partition_visit(cfg, p, k_partitioned, &mut |inst| ex.exec(&inst));
+        group_max = group_max.max(ex.drain_into(&mut out));
+        dram_bytes += dram.total_bytes();
+        out.traffic.dram_read += dram.read_bytes;
+        out.traffic.dram_write += dram.write_bytes + dram.reduce_bytes;
+    }
+    finish_gemm(cfg, opts, &mut out, group_max, dram_bytes);
+    out
+}
+
+fn finish_gemm(
+    cfg: &AcceleratorConfig,
+    opts: &SimOptions,
+    out: &mut GemmSim,
+    group_max: f64,
+    dram_bytes: u64,
+) {
+    out.compute_cycles = group_max;
+    out.dram_cycles = if opts.ideal_dram {
+        0.0
+    } else {
+        dram_bytes as f64 / cfg.dram_bytes_per_cycle()
+    };
+    // Double-buffered GBUF panels overlap DRAM transfers with compute; the
+    // slower of the two bounds the GEMM.
+    out.cycles = out.compute_cycles.max(out.dram_cycles);
+}
+
+/// Over-core (inter-sub-core) traffic per wave issue, by mode (Fig 7/8).
+fn overcore_for_mode(t: &mut Traffic, mode: Mode, m: usize, n: usize, k: usize) {
+    match mode {
+        Mode::Fw => {
+            // Horizontally shifted inputs pass from left to right cores ①,
+            // partial sums flow from top to bottom cores ② (f32).
+            t.overcore += (m * k * ELEM_BYTES / 2) as u64;
+            t.overcore += (m * n * ACC_BYTES / 2) as u64;
+        }
+        Mode::Hsw => {
+            // The A stream traverses the row pair (half crosses the seam).
+            t.overcore += (m * k * ELEM_BYTES / 2) as u64;
+        }
+        Mode::Vsw | Mode::Isw => {
+            // Outputs of upper cores forwarded to lower OBUFs ②.
+            t.overcore += (m * n * ACC_BYTES / 2) as u64;
+        }
+        Mode::Mono => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::compile_gemm;
+    use crate::config::preset;
+    use crate::gemm::{GemmShape, Phase};
+
+    fn sim(cfg_name: &str, m: usize, n: usize, k: usize, opts: &SimOptions) -> GemmSim {
+        let cfg = preset(cfg_name).unwrap();
+        let c = compile_gemm(&cfg, GemmShape::new(m, n, k), Phase::Forward);
+        simulate_gemm(&cfg, &c, opts)
+    }
+
+    #[test]
+    fn perfect_tiles_reach_high_utilization() {
+        // Steady state: blk_M=256-row jobs with a k+n=256 fill/drain ramp
+        // per job bound utilization at 2048/2304 ~ 0.889 for k=1024.
+        let cfg = preset("1G1C").unwrap();
+        let s = sim("1G1C", 128 * 1024, 512, 1024, &SimOptions::ideal());
+        let u = s.pe_utilization(&cfg);
+        assert!(u > 0.85, "util={u}");
+        // Deeper K loops amortize the ramp further.
+        let s2 = sim("1G1C", 128 * 1024, 512, 8192, &SimOptions::ideal());
+        let u2 = s2.pe_utilization(&cfg);
+        assert!(u2 > u, "u2={u2} u={u}");
+    }
+
+    #[test]
+    fn busy_macs_equal_gemm_macs() {
+        for name in ["1G1C", "1G4C", "4G4C", "1G1F", "4G1F"] {
+            let s = sim(name, 1000, 300, 700, &SimOptions::ideal());
+            assert_eq!(s.busy_macs, 1000 * 300 * 700, "{name}");
+        }
+    }
+
+    #[test]
+    fn skinny_gemm_flexsa_beats_large_core() {
+        // n = 40 wastes 70% of a 128-wide monolithic core; FlexSA's VSW
+        // runs two m-slabs in parallel on the half-width sub-arrays.
+        let cfg_c = preset("1G1C").unwrap();
+        let cfg_f = preset("1G1F").unwrap();
+        let opts = SimOptions::ideal();
+        let sc = sim("1G1C", 16384, 40, 256, &opts);
+        let sf = sim("1G1F", 16384, 40, 256, &opts);
+        let uc = sc.pe_utilization(&cfg_c);
+        let uf = sf.pe_utilization(&cfg_f);
+        assert!(uf > 1.5 * uc, "flexsa={uf} mono={uc}");
+        assert!(sf.cycles < sc.cycles);
+    }
+
+    #[test]
+    fn flexsa_matches_small_cores_on_small_tiles() {
+        // ISW should recover (nearly) the PE utilization of independent
+        // small cores on tiny tiles.
+        let cfg_f = preset("1G1F").unwrap();
+        let cfg_s = preset("1G4C").unwrap();
+        let opts = SimOptions::ideal();
+        let sf = sim("1G1F", 8192, 48, 48, &opts);
+        let ss = sim("1G4C", 8192, 48, 48, &opts);
+        let uf = sf.pe_utilization(&cfg_f);
+        let us = ss.pe_utilization(&cfg_s);
+        assert!((uf - us).abs() / us < 0.25, "flexsa={uf} small={us}");
+    }
+
+    #[test]
+    fn flexsa_traffic_below_naive_split() {
+        // Paper §VIII: FlexSA ~1.7x less GBUF->LBUF traffic than naive
+        // 4-core on large GEMMs (FW reuse == large core).
+        let opts = SimOptions::ideal();
+        let sf = sim("1G1F", 16384, 512, 1024, &opts);
+        let ss = sim("1G4C", 16384, 512, 1024, &opts);
+        let ratio = ss.traffic.gbuf_to_lbuf as f64 / sf.traffic.gbuf_to_lbuf as f64;
+        assert!(ratio > 1.4, "ratio={ratio}");
+    }
+
+    #[test]
+    fn large_core_and_fw_have_equal_onchip_traffic() {
+        let opts = SimOptions::ideal();
+        let sc = sim("1G1C", 16384, 512, 1024, &opts);
+        let sf = sim("1G1F", 16384, 512, 1024, &opts);
+        let a = sc.traffic.gbuf_to_lbuf as f64;
+        let b = sf.traffic.gbuf_to_lbuf as f64;
+        assert!((a - b).abs() / a < 0.05, "{a} vs {b}");
+    }
+
+    #[test]
+    fn dram_bound_when_blocking_thrashes() {
+        // On 1G4C the GBUF is shared by four independent working sets
+        // (effective 1.25 MiB each); a GEMM whose resident panel far
+        // exceeds that re-streams inputs and becomes DRAM-bound.
+        let s = sim("1G4C", 512, 16_384, 16_384, &SimOptions::hbm2());
+        assert!(s.dram_cycles > s.compute_cycles, "dram={} compute={}", s.dram_cycles, s.compute_cycles);
+        assert!((s.cycles - s.dram_cycles).abs() < 1.0);
+    }
+
+    #[test]
+    fn ideal_dram_ignores_memory() {
+        let s = sim("1G4C", 512, 16_384, 16_384, &SimOptions::ideal());
+        assert_eq!(s.dram_cycles, 0.0);
+        assert!((s.cycles - s.compute_cycles).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shiftv_serialization_costs_cycles() {
+        let mut no_overlap = SimOptions::ideal();
+        no_overlap.shiftv_overlap = false;
+        let fast = sim("1G1C", 4096, 512, 1024, &SimOptions::ideal());
+        let slow = sim("1G1C", 4096, 512, 1024, &no_overlap);
+        assert!(slow.cycles > fast.cycles, "{} vs {}", slow.cycles, fast.cycles);
+    }
+
+    #[test]
+    fn overcore_traffic_only_on_flexsa() {
+        let opts = SimOptions::ideal();
+        let sc = sim("1G1C", 4096, 512, 512, &opts);
+        let sf = sim("1G1F", 4096, 512, 512, &opts);
+        assert_eq!(sc.traffic.overcore, 0);
+        assert!(sf.traffic.overcore > 0);
+    }
+}

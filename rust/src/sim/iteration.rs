@@ -1,0 +1,191 @@
+//! Whole-training-iteration simulation: all GEMMs of a model (layer-serial,
+//! as in the paper's evaluation) plus the SIMD-array time of non-GEMM
+//! layers (§VIII "Performance and Energy Impact of Other Layers", evaluated
+//! without layer fusion).
+
+use super::{engine::simulate_gemm_shape, SimOptions, Traffic};
+use crate::config::AcceleratorConfig;
+use crate::gemm::Gemm;
+use crate::isa::Mode;
+use crate::models::{ChannelCounts, Model};
+use std::collections::BTreeMap;
+
+/// SIMD-array (non-GEMM) work of an iteration.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SimdSim {
+    pub cycles: f64,
+    pub flops: f64,
+    pub dram_bytes: f64,
+}
+
+/// Aggregated result of one training iteration.
+#[derive(Debug, Clone, Default)]
+pub struct IterationSim {
+    /// Wall cycles of all GEMM layers (layer-serial).
+    pub gemm_cycles: f64,
+    /// Cycles at 100% PE utilization (`MACs / total PEs`) — the paper's
+    /// IDEAL bars in Fig 3.
+    pub ideal_gemm_cycles: f64,
+    pub busy_macs: u64,
+    pub traffic: Traffic,
+    pub waves_by_mode: BTreeMap<Mode, u64>,
+    pub simd: SimdSim,
+}
+
+impl IterationSim {
+    /// GEMM-phase PE utilization (the paper's headline metric).
+    pub fn pe_utilization(&self, cfg: &AcceleratorConfig) -> f64 {
+        if self.gemm_cycles == 0.0 {
+            return 0.0;
+        }
+        self.busy_macs as f64 / (cfg.total_pes() as f64 * self.gemm_cycles)
+    }
+
+    /// End-to-end cycles including the SIMD layers (no fusion).
+    pub fn total_cycles(&self) -> f64 {
+        self.gemm_cycles + self.simd.cycles
+    }
+
+    /// Wall-clock seconds at the configured core clock.
+    pub fn seconds(&self, cfg: &AcceleratorConfig) -> f64 {
+        self.total_cycles() / (cfg.clock_ghz * 1e9)
+    }
+
+    /// Fraction of wave issues using inter-core modes (FW/VSW/HSW).
+    pub fn inter_core_fraction(&self) -> f64 {
+        let total: u64 = self.waves_by_mode.values().sum();
+        if total == 0 {
+            return f64::NAN;
+        }
+        let ic: u64 = self
+            .waves_by_mode
+            .iter()
+            .filter(|(m, _)| m.is_inter_core())
+            .map(|(_, c)| *c)
+            .sum();
+        ic as f64 / total as f64
+    }
+}
+
+/// Simulate all GEMMs of one training iteration, layer-serial.
+pub fn simulate_iteration(
+    cfg: &AcceleratorConfig,
+    gemms: &[Gemm],
+    opts: &SimOptions,
+) -> IterationSim {
+    let mut out = IterationSim::default();
+    for g in gemms {
+        let s = simulate_gemm_shape(cfg, g.shape, g.phase, opts);
+        out.gemm_cycles += s.cycles;
+        out.busy_macs += s.busy_macs;
+        out.traffic.add(&s.traffic);
+        for (m, c) in s.waves_by_mode {
+            *out.waves_by_mode.entry(m).or_insert(0) += c;
+        }
+    }
+    out.ideal_gemm_cycles = out.busy_macs as f64 / cfg.total_pes() as f64;
+    out
+}
+
+/// End-to-end time under aggressive layer fusion (the paper's §VIII
+/// extension: "many of memory-bound math layers can be executed while
+/// executing GEMMs"): SIMD work overlaps the GEMM phase, exposing only
+/// whichever is longer, plus any DRAM contention the overlap creates.
+pub fn fused_total_cycles(sim: &IterationSim) -> f64 {
+    sim.gemm_cycles.max(sim.simd.cycles)
+}
+
+/// Simulate one full training iteration of a model at the given channel
+/// counts: GEMM layers on the systolic cores, everything else (including
+/// depthwise convolutions) on the SIMD array.
+pub fn simulate_model_epoch(
+    cfg: &AcceleratorConfig,
+    model: &Model,
+    counts: &ChannelCounts,
+    opts: &SimOptions,
+) -> IterationSim {
+    let batch = model.default_batch;
+    let gemms = model.gemms(batch, counts);
+    let mut out = simulate_iteration(cfg, &gemms, opts);
+
+    let flops = model.total_simd_flops(batch, counts);
+    let bytes = model.total_simd_bytes(batch, counts);
+    let flops_per_cycle = cfg.simd_gflops / cfg.clock_ghz; // GF/s over Gcyc/s
+    let compute = flops / flops_per_cycle;
+    let mem = if opts.ideal_dram { 0.0 } else { bytes / cfg.dram_bytes_per_cycle() };
+    out.simd = SimdSim { cycles: compute.max(mem), flops, dram_bytes: bytes };
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+    use crate::models::{mobilenet_v2, resnet50};
+
+    #[test]
+    fn resnet_baseline_utilization_in_paper_range() {
+        // Paper Fig 3: unpruned ResNet50 on 1G1C at ideal memory ~ 83%.
+        let cfg = preset("1G1C").unwrap();
+        let m = resnet50();
+        let counts = ChannelCounts::baseline(&m);
+        let s = simulate_model_epoch(&cfg, &m, &counts, &SimOptions::ideal());
+        let u = s.pe_utilization(&cfg);
+        assert!((0.70..0.92).contains(&u), "util={u}");
+    }
+
+    #[test]
+    fn flexsa_not_worse_than_large_core() {
+        let m = resnet50();
+        let counts = ChannelCounts::baseline(&m);
+        let c1 = preset("1G1C").unwrap();
+        let f1 = preset("1G1F").unwrap();
+        let sc = simulate_model_epoch(&c1, &m, &counts, &SimOptions::ideal());
+        let sf = simulate_model_epoch(&f1, &m, &counts, &SimOptions::ideal());
+        assert!(sf.gemm_cycles <= sc.gemm_cycles * 1.02);
+    }
+
+    #[test]
+    fn ideal_cycles_lower_bound() {
+        let cfg = preset("4G1F").unwrap();
+        let m = resnet50();
+        let counts = ChannelCounts::baseline(&m);
+        let s = simulate_model_epoch(&cfg, &m, &counts, &SimOptions::ideal());
+        assert!(s.gemm_cycles >= s.ideal_gemm_cycles);
+    }
+
+    #[test]
+    fn mobilenet_is_memory_bound_on_simd() {
+        // Depthwise + BN/ReLU work of MobileNet v2 at batch 128 is DRAM
+        // bound (paper: "highly memory BW-bound with little reuse").
+        let cfg = preset("1G1C").unwrap();
+        let m = mobilenet_v2();
+        let counts = ChannelCounts::baseline(&m);
+        let s = simulate_model_epoch(&cfg, &m, &counts, &SimOptions::hbm2());
+        let mem_cycles = s.simd.dram_bytes / cfg.dram_bytes_per_cycle();
+        let compute_cycles = s.simd.flops / (cfg.simd_gflops / cfg.clock_ghz);
+        assert!(mem_cycles > 0.0 && compute_cycles > 0.0);
+        assert!(s.simd.cycles >= mem_cycles.max(compute_cycles) - 1.0);
+    }
+
+    #[test]
+    fn fusion_hides_simd_up_to_gemm_time() {
+        let cfg = preset("1G1C").unwrap();
+        let m = resnet50();
+        let counts = ChannelCounts::baseline(&m);
+        let s = simulate_model_epoch(&cfg, &m, &counts, &SimOptions::hbm2());
+        let fused = fused_total_cycles(&s);
+        assert!(fused <= s.total_cycles());
+        assert!(fused >= s.gemm_cycles.max(s.simd.cycles) - 1.0);
+    }
+
+    #[test]
+    fn hbm2_never_faster_than_ideal() {
+        let cfg = preset("1G4C").unwrap();
+        let m = resnet50();
+        let counts = ChannelCounts::baseline(&m);
+        let si = simulate_model_epoch(&cfg, &m, &counts, &SimOptions::ideal());
+        let sh = simulate_model_epoch(&cfg, &m, &counts, &SimOptions::hbm2());
+        assert!(sh.gemm_cycles >= si.gemm_cycles);
+    }
+}

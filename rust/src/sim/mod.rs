@@ -1,0 +1,73 @@
+//! Instruction-level simulator.
+//!
+//! Executes compiled per-group [`Program`]s on the configured accelerator,
+//! modeling:
+//!
+//! - per-unit double-buffered LBUF loads gated by the GBUF→LBUF bandwidth
+//!   (a wave cannot start until its inputs are resident; the next wave's
+//!   loads overlap the current wave's execution);
+//! - decoupled `ShiftV` stationary preload (paper §VI-B) — overlapped with
+//!   LBUF loads by default, serialized when `shiftv_overlap` is off
+//!   (ablation);
+//! - wave pipeline timing: `max(mᵢ)` streaming cycles per issue plus a
+//!   fill/drain ramp (`k + n`) charged once per tile job (consecutive
+//!   waves of a job stream back-to-back behind shadow-loaded stationaries);
+//! - per-resource traffic counters (GBUF→LBUF, OBUF→GBUF, over-core,
+//!   DRAM) feeding the energy model;
+//! - a shared-DRAM bandwidth bound from the compiler's [`DramPlan`]s.
+//!
+//! PE utilization here is the paper's metric: useful MACs over
+//! `total PEs × cycles`.
+
+mod engine;
+mod iteration;
+
+pub use engine::{simulate_gemm, simulate_gemm_shape, GemmSim, GroupExecutor, Traffic};
+
+/// Where the pipeline fill/drain ramp (`k + n` cycles) is charged.
+///
+/// With the decoupled `ShiftV` preload (paper §VI-B) and double-buffered
+/// LBUF/OBUF, a wave's inputs can stream in immediately behind the previous
+/// wave's, shadow-loading the next stationary set — so in steady state only
+/// the first fill and last drain of a *run* of back-to-back waves is
+/// exposed. `PerGemm` models that (the default); `PerJob` exposes a ramp at
+/// every OBUF turnover; `PerIssue` is the fully serialized worst case
+/// (ablation for the ISA-decoupling claim).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RampMode {
+    PerGemm,
+    PerJob,
+    PerIssue,
+}
+pub use iteration::{fused_total_cycles, simulate_iteration, simulate_model_epoch, IterationSim, SimdSim};
+
+/// Simulator knobs (modeling ablations; defaults follow the paper).
+#[derive(Debug, Clone, Copy)]
+pub struct SimOptions {
+    /// Infinite DRAM bandwidth (paper Fig 3/5/10a isolate PE-utilization
+    /// effects this way).
+    pub ideal_dram: bool,
+    /// `ShiftV` overlaps LBUF loads / previous execution (paper's design);
+    /// disable to measure the serialization the ISA change removed.
+    pub shiftv_overlap: bool,
+    /// Fill/drain ramp granularity (see [`RampMode`]).
+    pub ramp: RampMode,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        Self { ideal_dram: false, shiftv_overlap: true, ramp: RampMode::PerGemm }
+    }
+}
+
+impl SimOptions {
+    /// The paper's ideal-memory setup.
+    pub fn ideal() -> Self {
+        Self { ideal_dram: true, ..Self::default() }
+    }
+
+    /// The paper's HBM2 setup (270 GB/s, from the config).
+    pub fn hbm2() -> Self {
+        Self::default()
+    }
+}

@@ -1,0 +1,103 @@
+//! Synthetic classification data for the end-to-end driver: class-
+//! prototype images plus Gaussian noise (same construction as the python
+//! `synth_batch`, so the loss genuinely decreases), generated in rust so
+//! the request path stays python-free.
+
+use crate::runtime::ModelMeta;
+use crate::util::Lcg64;
+
+/// Deterministic synthetic dataset.
+pub struct SynthData {
+    protos: Vec<Vec<f32>>, // one prototype image per class
+    batch: usize,
+    elems: usize,
+    classes: usize,
+    seed: u64,
+}
+
+impl SynthData {
+    pub fn new(meta: &ModelMeta, seed: u64) -> Self {
+        let elems = meta.input_hw * meta.input_hw * meta.input_c;
+        let mut rng = Lcg64::new(seed);
+        let protos = (0..meta.classes)
+            .map(|_| (0..elems).map(|_| rng.next_gaussian() as f32).collect())
+            .collect();
+        Self { protos, batch: meta.batch, elems, classes: meta.classes, seed }
+    }
+
+    /// Batch `step`: (x flattened NHWC, labels).
+    pub fn batch(&self, step: u64) -> (Vec<f32>, Vec<i32>) {
+        let mut rng = Lcg64::new(self.seed ^ step.wrapping_mul(0x9E37_79B9));
+        let mut x = Vec::with_capacity(self.batch * self.elems);
+        let mut y = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            let cls = rng.next_below(self.classes as u64) as usize;
+            y.push(cls as i32);
+            let proto = &self.protos[cls];
+            for &p in proto {
+                x.push(p + 0.5 * rng.next_gaussian() as f32);
+            }
+        }
+        (x, y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> ModelMeta {
+        ModelMeta::parse(
+            "batch 8\ninput_hw 4\ninput_c 3\nclasses 10\nstrides 1\nchannels 8\n\
+             param w 3 3 3 8\ngemm_fw 8 8 8\n",
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn batches_are_deterministic_per_step() {
+        let d = SynthData::new(&meta(), 1);
+        let (x1, y1) = d.batch(5);
+        let (x2, y2) = d.batch(5);
+        assert_eq!(x1, x2);
+        assert_eq!(y1, y2);
+        let (_, y3) = d.batch(6);
+        assert_ne!(y1, y3);
+    }
+
+    #[test]
+    fn labels_in_range_and_shapes() {
+        let d = SynthData::new(&meta(), 2);
+        let (x, y) = d.batch(0);
+        assert_eq!(x.len(), 8 * 4 * 4 * 3);
+        assert_eq!(y.len(), 8);
+        assert!(y.iter().all(|&c| (0..10).contains(&c)));
+    }
+
+    #[test]
+    fn same_class_shares_prototype_signal() {
+        let d = SynthData::new(&meta(), 3);
+        let (x, y) = d.batch(1);
+        let elems = 4 * 4 * 3;
+        // Find two samples of the same class; their correlation must be
+        // higher than that of two samples of different classes on average.
+        let mut same = Vec::new();
+        let mut diff = Vec::new();
+        for i in 0..8 {
+            for j in (i + 1)..8 {
+                let a = &x[i * elems..(i + 1) * elems];
+                let b = &x[j * elems..(j + 1) * elems];
+                let dot: f32 = a.iter().zip(b).map(|(p, q)| p * q).sum();
+                if y[i] == y[j] {
+                    same.push(dot);
+                } else {
+                    diff.push(dot);
+                }
+            }
+        }
+        if !same.is_empty() && !diff.is_empty() {
+            let avg = |v: &[f32]| v.iter().sum::<f32>() / v.len() as f32;
+            assert!(avg(&same) > avg(&diff));
+        }
+    }
+}

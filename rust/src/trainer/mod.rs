@@ -1,0 +1,278 @@
+//! End-to-end prune-while-train driver (the repo's proof that all three
+//! layers compose).
+//!
+//! Runs the AOT-compiled JAX PruneTrain step (whose convolutions are the
+//! L1 Pallas wave kernel) through PJRT from rust, on synthetic data;
+//! applies group-lasso channel pruning at intervals by thresholding the
+//! `channel_norms` artifact's output; records the **measured** channel
+//! trajectory and loss curve; then replays the trajectory through the L3
+//! instruction-level simulator to report the paper's headline metric (PE
+//! utilization / speedup of FlexSA vs a large monolithic core) on a real
+//! prune-while-train run. Python never executes here.
+
+mod data;
+mod pruner;
+
+pub use data::SynthData;
+pub use pruner::{ChannelMask, Pruner};
+
+use crate::cli::Args;
+use crate::config::preset;
+use crate::models::ChannelCounts;
+use crate::pruning::{PrunePoint, PruneSchedule};
+use crate::runtime::{lit, ModelMeta, Runtime};
+use crate::sim::{simulate_model_epoch, SimOptions};
+use anyhow::{Context, Result};
+
+/// Trainer configuration (CLI-driven).
+#[derive(Debug, Clone)]
+pub struct TrainerConfig {
+    pub artifacts: String,
+    pub steps: usize,
+    pub lr: f32,
+    /// Steps between pruning events.
+    pub prune_interval: usize,
+    /// Channels with norm below `threshold × median(norms)` are pruned.
+    pub threshold: f32,
+    pub seed: u64,
+    /// Where to write the trace/loss outputs (None = skip).
+    pub out_dir: Option<String>,
+}
+
+impl Default for TrainerConfig {
+    fn default() -> Self {
+        Self {
+            artifacts: "artifacts".into(),
+            steps: 300,
+            lr: 0.08,
+            prune_interval: 50,
+            threshold: 0.45,
+            seed: 42,
+            out_dir: Some("artifacts".into()),
+        }
+    }
+}
+
+/// Results of an end-to-end run.
+pub struct TrainOutcome {
+    pub losses: Vec<f32>,
+    pub schedule: PruneSchedule,
+    /// (config name, trajectory-average PE utilization, avg cycles/iter).
+    pub sim_results: Vec<(String, f64, f64)>,
+}
+
+/// CLI entry for `flexsa train`.
+pub fn run_from_args(args: &Args) -> Result<(), String> {
+    let mut cfg = TrainerConfig::default();
+    if let Some(a) = args.get("artifacts") {
+        cfg.artifacts = a.to_string();
+    }
+    cfg.steps = args.get_usize("steps", cfg.steps)?;
+    cfg.prune_interval = args.get_usize("prune-interval", cfg.prune_interval)?;
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    if let Some(lr) = args.get("lr") {
+        cfg.lr = lr.parse().map_err(|e| format!("--lr: {e}"))?;
+    }
+    if let Some(o) = args.get("out") {
+        cfg.out_dir = Some(o.to_string());
+    }
+    let outcome = run(&cfg).map_err(|e| format!("{e:#}"))?;
+    println!("\nfinal loss: {:.4}", outcome.losses.last().copied().unwrap_or(f32::NAN));
+    Ok(())
+}
+
+/// Run the full end-to-end driver.
+pub fn run(cfg: &TrainerConfig) -> Result<TrainOutcome> {
+    anyhow::ensure!(
+        Runtime::artifacts_ready(&cfg.artifacts),
+        "artifacts missing in `{}` — run `make artifacts` first",
+        cfg.artifacts
+    );
+    let rt = Runtime::cpu(&cfg.artifacts)?;
+    println!("PJRT platform: {}", rt.platform());
+    let meta = rt.meta()?;
+    println!(
+        "model: {} params in {} tensors, batch {}, input {}x{}x{}",
+        meta.total_params(),
+        meta.n_params(),
+        meta.batch,
+        meta.input_hw,
+        meta.input_hw,
+        meta.input_c
+    );
+
+    let train = rt.load("train_step").context("load train_step")?;
+    let norms_fn = rt.load("channel_norms").context("load channel_norms")?;
+
+    // Parameter + momentum state as host vectors (literal round-trip per
+    // step; the model is small and CPU PJRT copies are cheap).
+    let mut state = init_state(&meta, cfg.seed);
+    let mut momentum: Vec<Vec<f32>> =
+        (0..meta.n_params()).map(|i| vec![0.0; meta.param_elems(i)]).collect();
+
+    let data = SynthData::new(&meta, cfg.seed ^ 0xDA7A);
+    let mut pruner = Pruner::new(&meta, cfg.threshold);
+    let mut losses = Vec::with_capacity(cfg.steps);
+    let mut trace_points: Vec<(usize, Vec<usize>)> =
+        vec![(0, meta.channels.clone())];
+
+    for step in 0..cfg.steps {
+        let (x, y) = data.batch(step as u64);
+        let mut inputs = Vec::with_capacity(2 * meta.n_params() + 3);
+        for (i, p) in state.iter().enumerate() {
+            inputs.push(lit::f32(p, &meta.params[i].1)?);
+        }
+        for (i, m) in momentum.iter().enumerate() {
+            inputs.push(lit::f32(m, &meta.params[i].1)?);
+        }
+        inputs.push(lit::f32(&x, &[meta.batch, meta.input_hw, meta.input_hw, meta.input_c])?);
+        inputs.push(lit::i32(&y, &[meta.batch])?);
+        inputs.push(lit::scalar_f32(cfg.lr));
+
+        let outputs = train.run(&inputs)?;
+        anyhow::ensure!(
+            outputs.len() == 2 * meta.n_params() + 1,
+            "train_step returned {} outputs",
+            outputs.len()
+        );
+        for i in 0..meta.n_params() {
+            state[i] = lit::to_f32(&outputs[i])?;
+            momentum[i] = lit::to_f32(&outputs[meta.n_params() + i])?;
+        }
+        let loss = lit::to_f32(&outputs[2 * meta.n_params()])?[0];
+        losses.push(loss);
+        // Keep pruned channels pruned (PruneTrain reconfigures the model;
+        // we mask, which is numerically equivalent for the trajectory).
+        pruner.apply_mask(&meta, &mut state, &mut momentum);
+
+        if (step + 1) % cfg.prune_interval == 0 {
+            let norm_inputs: Vec<xla::Literal> = state
+                .iter()
+                .enumerate()
+                .map(|(i, p)| lit::f32(p, &meta.params[i].1))
+                .collect::<Result<_>>()?;
+            let norms = lit::to_f32(&norms_fn.run(&norm_inputs)?[0])?;
+            let newly = pruner.update(&meta, &norms);
+            pruner.apply_mask(&meta, &mut state, &mut momentum);
+            let counts = pruner.surviving_counts(&meta);
+            println!(
+                "step {:>4}: loss {:.4}  pruned {} channels  counts {:?}",
+                step + 1,
+                loss,
+                newly,
+                counts
+            );
+            trace_points.push((step + 1, counts));
+        } else if step % 10 == 0 {
+            println!("step {:>4}: loss {:.4}", step, loss);
+        }
+    }
+
+    // Assemble the measured schedule and replay it through the simulator.
+    let sim_model = meta.as_sim_model();
+    let base_macs =
+        sim_model.total_macs(meta.batch, &ChannelCounts::baseline(&sim_model)) as f64;
+    let points: Vec<PrunePoint> = trace_points
+        .iter()
+        .map(|(step, counts)| {
+            let c = ChannelCounts(counts.clone());
+            let ratio = sim_model.total_macs(meta.batch, &c) as f64 / base_macs;
+            PrunePoint { epoch: *step, counts: c, macs_ratio: ratio }
+        })
+        .collect();
+    let schedule = PruneSchedule {
+        model_name: sim_model.name.clone(),
+        epochs: cfg.steps,
+        interval: cfg.prune_interval,
+        points,
+    };
+    schedule
+        .validate(&sim_model)
+        .map_err(|e| anyhow::anyhow!("measured schedule invalid: {e}"))?;
+
+    println!("\nmeasured channel trajectory (MACs ratio):");
+    for p in &schedule.points {
+        println!("  step {:>4}: {:.3}  {:?}", p.epoch, p.macs_ratio, p.counts.0);
+    }
+
+    // Simulate the measured trajectory on the paper's key configs.
+    let mut sim_results = Vec::new();
+    println!("\nsimulated PE utilization on the measured trajectory:");
+    for name in ["1G1C", "1G4C", "1G1F", "4G1F"] {
+        let acc = preset(name).unwrap();
+        let mut busy = 0.0;
+        let mut cycles = 0.0;
+        for p in &schedule.points {
+            let s = simulate_model_epoch(&acc, &sim_model, &p.counts, &SimOptions::ideal());
+            busy += s.busy_macs as f64;
+            cycles += s.gemm_cycles;
+        }
+        let util = busy / (acc.total_pes() as f64 * cycles);
+        let avg_cycles = cycles / schedule.points.len() as f64;
+        println!("  {name}: util {:.3}, avg {:.0} cycles/iter", util, avg_cycles);
+        sim_results.push((name.to_string(), util, avg_cycles));
+    }
+    let speedup = sim_results[0].2 / sim_results[2].2;
+    println!("headline: 1G1F speedup over 1G1C on measured trajectory = {speedup:.2}x");
+
+    if let Some(dir) = &cfg.out_dir {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(format!("{dir}/e2e_trace.txt"), schedule.encode_trace())?;
+        let mut csv = String::from("step,loss\n");
+        for (i, l) in losses.iter().enumerate() {
+            csv.push_str(&format!("{i},{l}\n"));
+        }
+        std::fs::write(format!("{dir}/e2e_loss.csv"), csv)?;
+        println!("wrote {dir}/e2e_trace.txt and {dir}/e2e_loss.csv");
+    }
+
+    Ok(TrainOutcome { losses, schedule, sim_results })
+}
+
+/// He-initialized parameters (matches the python init scheme; exact values
+/// differ, which is fine — the run is self-contained).
+fn init_state(meta: &ModelMeta, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = crate::util::Lcg64::new(seed);
+    meta.params
+        .iter()
+        .map(|(_, shape)| {
+            let n: usize = shape.iter().product();
+            if shape.len() > 1 {
+                let fan_in: usize = shape[..shape.len() - 1].iter().product();
+                let std = (2.0 / fan_in as f64).sqrt();
+                (0..n).map(|_| (rng.next_gaussian() * std) as f32).collect()
+            } else {
+                vec![0.0; n]
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_state_shapes_and_scale() {
+        let meta = ModelMeta::parse(
+            "batch 4\ninput_hw 8\ninput_c 3\nclasses 10\nstrides 1\nchannels 8\n\
+             param w 3 3 3 8\nparam b 8\ngemm_fw 8 8 8\n",
+        )
+        .unwrap();
+        let s = init_state(&meta, 7);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[0].len(), 216);
+        assert!(s[1].iter().all(|&v| v == 0.0));
+        // He std for fan_in 27 ~ 0.27; sample std should be in range.
+        let mean: f32 = s[0].iter().sum::<f32>() / 216.0;
+        let var: f32 = s[0].iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 215.0;
+        assert!((0.15..0.45).contains(&var.sqrt()), "std={}", var.sqrt());
+    }
+
+    #[test]
+    fn default_config_sane() {
+        let c = TrainerConfig::default();
+        assert!(c.steps >= c.prune_interval);
+        assert!(c.threshold > 0.0 && c.threshold < 1.0);
+    }
+}

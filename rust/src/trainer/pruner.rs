@@ -1,0 +1,221 @@
+//! Channel pruner for the end-to-end driver: PruneTrain-style thresholding
+//! of group-lasso channel norms, with persistent masking.
+//!
+//! PruneTrain physically reconfigures the model when channels die; with a
+//! fixed AOT executable we instead zero the dead channels' weights and
+//! momentum (numerically equivalent for the trajectory) and record the
+//! surviving counts for the simulator.
+
+use crate::runtime::ModelMeta;
+
+/// Per-conv-layer channel liveness.
+#[derive(Debug, Clone)]
+pub struct ChannelMask {
+    /// `alive[layer][channel]`.
+    pub alive: Vec<Vec<bool>>,
+}
+
+/// The pruning policy + state.
+pub struct Pruner {
+    mask: ChannelMask,
+    threshold: f32,
+    /// Never prune below this many channels per layer (keeps the network
+    /// trainable, as PruneTrain's per-layer floor does).
+    min_channels: usize,
+}
+
+impl Pruner {
+    pub fn new(meta: &ModelMeta, threshold: f32) -> Self {
+        let alive = meta.channels.iter().map(|&c| vec![true; c]).collect();
+        Self { mask: ChannelMask { alive }, threshold, min_channels: 4 }
+    }
+
+    /// Update the mask from the concatenated channel-norm vector (the
+    /// `channel_norms` artifact output). Returns how many channels were
+    /// newly pruned.
+    pub fn update(&mut self, meta: &ModelMeta, norms: &[f32]) -> usize {
+        assert_eq!(norms.len(), meta.channels.iter().sum::<usize>(), "norms length");
+        // Threshold relative to the median of *live* norms: group lasso
+        // drives doomed channels' norms far below the pack.
+        let mut live_norms: Vec<f32> = Vec::new();
+        let mut off = 0;
+        for (li, &c) in meta.channels.iter().enumerate() {
+            for ch in 0..c {
+                if self.mask.alive[li][ch] {
+                    live_norms.push(norms[off + ch]);
+                }
+            }
+            off += c;
+        }
+        if live_norms.is_empty() {
+            return 0;
+        }
+        live_norms.sort_by(|a, b| a.total_cmp(b));
+        let median = live_norms[live_norms.len() / 2];
+        let cut = self.threshold * median;
+
+        let mut newly = 0;
+        let mut off = 0;
+        for (li, &c) in meta.channels.iter().enumerate() {
+            // Respect the per-layer floor: prune weakest-first.
+            let mut candidates: Vec<(f32, usize)> = (0..c)
+                .filter(|&ch| self.mask.alive[li][ch] && norms[off + ch] < cut)
+                .map(|ch| (norms[off + ch], ch))
+                .collect();
+            candidates.sort_by(|a, b| a.0.total_cmp(&b.0));
+            let live = self.mask.alive[li].iter().filter(|&&a| a).count();
+            let can_kill = live.saturating_sub(self.min_channels);
+            for &(_, ch) in candidates.iter().take(can_kill) {
+                self.mask.alive[li][ch] = false;
+                newly += 1;
+            }
+            off += c;
+        }
+        newly
+    }
+
+    /// Surviving channel count per conv layer.
+    pub fn surviving_counts(&self, meta: &ModelMeta) -> Vec<usize> {
+        let _ = meta;
+        self.mask.alive.iter().map(|l| l.iter().filter(|&&a| a).count()).collect()
+    }
+
+    /// Zero pruned channels in weights and momentum:
+    /// - conv `i` weight (kh,kw,cin,cout): zero `cout` slices of dead
+    ///   channels and `cin` slices of channels dead in layer `i-1`;
+    /// - conv bias: zero dead entries;
+    /// - fc weight (C_last, classes): zero rows of dead last-layer channels.
+    pub fn apply_mask(&self, meta: &ModelMeta, state: &mut [Vec<f32>], momentum: &mut [Vec<f32>]) {
+        let n_convs = meta.channels.len();
+        for li in 0..n_convs {
+            let shape = &meta.params[2 * li].1; // conv weight
+            let (kh, kw, cin, cout) = (shape[0], shape[1], shape[2], shape[3]);
+            let dead_out: Vec<usize> = (0..cout).filter(|&c| !self.mask.alive[li][c]).collect();
+            let dead_in: Vec<usize> = if li > 0 {
+                (0..cin).filter(|&c| !self.mask.alive[li - 1][c]).collect()
+            } else {
+                Vec::new()
+            };
+            for buf in [&mut state[2 * li], &mut momentum[2 * li]] {
+                // layout: (kh, kw, cin, cout), row-major.
+                for s in 0..kh * kw {
+                    for ci in 0..cin {
+                        let base = (s * cin + ci) * cout;
+                        if dead_in.binary_search(&ci).is_ok() {
+                            buf[base..base + cout].fill(0.0);
+                        } else {
+                            for &co in &dead_out {
+                                buf[base + co] = 0.0;
+                            }
+                        }
+                    }
+                }
+            }
+            for buf in [&mut state[2 * li + 1], &mut momentum[2 * li + 1]] {
+                for &co in &dead_out {
+                    buf[co] = 0.0;
+                }
+            }
+        }
+        // FC weight rows for dead final-conv channels.
+        let fc_idx = 2 * n_convs;
+        let fc_shape = meta.params[fc_idx].1.clone();
+        let (rows, cols) = (fc_shape[0], fc_shape[1]);
+        let last = n_convs - 1;
+        for buf in [&mut state[fc_idx], &mut momentum[fc_idx]] {
+            for r in 0..rows {
+                if !self.mask.alive[last][r] {
+                    buf[r * cols..(r + 1) * cols].fill(0.0);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> ModelMeta {
+        ModelMeta::parse(
+            "batch 4\ninput_hw 8\ninput_c 3\nclasses 10\nstrides 1 2\nchannels 8 8\n\
+             param conv0_w 3 3 3 8\nparam conv0_b 8\n\
+             param conv1_w 3 3 8 8\nparam conv1_b 8\n\
+             param fc_w 8 10\nparam fc_b 10\ngemm_fw 8 8 8\n",
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn update_prunes_below_threshold() {
+        let m = meta();
+        let mut p = Pruner::new(&m, 0.5);
+        // Layer 0: two tiny norms; layer 1: all healthy.
+        let mut norms = vec![1.0f32; 16];
+        norms[0] = 0.01;
+        norms[3] = 0.02;
+        let newly = p.update(&m, &norms);
+        assert_eq!(newly, 2);
+        assert_eq!(p.surviving_counts(&m), vec![6, 8]);
+    }
+
+    #[test]
+    fn floor_prevents_layer_collapse() {
+        let m = meta();
+        let mut p = Pruner::new(&m, 0.5);
+        let norms = vec![1e-6f32; 16]; // everything "dead"
+        p.update(&m, &norms);
+        let counts = p.surviving_counts(&m);
+        assert!(counts.iter().all(|&c| c >= 4), "{counts:?}");
+    }
+
+    #[test]
+    fn mask_zeroes_weights_and_downstream_inputs() {
+        let m = meta();
+        let mut p = Pruner::new(&m, 0.5);
+        let mut norms = vec![1.0f32; 16];
+        norms[2] = 0.0; // kill layer-0 channel 2
+        p.update(&m, &norms);
+
+        let mut state: Vec<Vec<f32>> = m
+            .params
+            .iter()
+            .map(|(_, s)| vec![1.0f32; s.iter().product()])
+            .collect();
+        let mut momentum = state.clone();
+        p.apply_mask(&m, &mut state, &mut momentum);
+
+        // conv0 weight: cout=2 column zeroed everywhere.
+        let w0 = &state[0];
+        for s in 0..9 {
+            for ci in 0..3 {
+                assert_eq!(w0[(s * 3 + ci) * 8 + 2], 0.0);
+                assert_eq!(w0[(s * 3 + ci) * 8 + 1], 1.0);
+            }
+        }
+        // conv0 bias channel 2 zeroed.
+        assert_eq!(state[1][2], 0.0);
+        // conv1 weight: cin=2 rows zeroed (all couts).
+        let w1 = &state[2];
+        for s in 0..9 {
+            let base = (s * 8 + 2) * 8;
+            assert!(w1[base..base + 8].iter().all(|&v| v == 0.0));
+        }
+        // momentum masked identically.
+        assert_eq!(momentum[1][2], 0.0);
+    }
+
+    #[test]
+    fn pruning_is_monotonic() {
+        let m = meta();
+        let mut p = Pruner::new(&m, 0.5);
+        let mut norms = vec![1.0f32; 16];
+        norms[0] = 0.0;
+        p.update(&m, &norms);
+        let after_first = p.surviving_counts(&m);
+        // Second update with healthy norms must not resurrect channels.
+        let norms = vec![1.0f32; 16];
+        p.update(&m, &norms);
+        assert_eq!(p.surviving_counts(&m), after_first);
+    }
+}

@@ -1,0 +1,82 @@
+//! Human-readable formatting of byte counts, FLOP counts, cycle counts.
+
+/// Format a byte count with binary units.
+pub fn bytes(b: f64) -> String {
+    scaled(b, 1024.0, &["B", "KiB", "MiB", "GiB", "TiB"])
+}
+
+/// Format an operation count with SI units.
+pub fn ops(x: f64) -> String {
+    scaled(x, 1000.0, &["", "K", "M", "G", "T", "P"])
+}
+
+/// Format a cycle count.
+pub fn cycles(c: f64) -> String {
+    format!("{} cyc", ops(c))
+}
+
+/// Format seconds (auto ns/us/ms/s).
+pub fn seconds(s: f64) -> String {
+    if !s.is_finite() {
+        return format!("{s}");
+    }
+    let a = s.abs();
+    if a >= 1.0 {
+        format!("{s:.3} s")
+    } else if a >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if a >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Percentage with one decimal.
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", x * 100.0)
+}
+
+fn scaled(mut v: f64, base: f64, units: &[&str]) -> String {
+    let mut i = 0;
+    while v.abs() >= base && i + 1 < units.len() {
+        v /= base;
+        i += 1;
+    }
+    if i == 0 {
+        format!("{v:.0}{}", units[i])
+    } else {
+        format!("{v:.2}{}", units[i])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(bytes(512.0), "512B");
+        assert_eq!(bytes(2048.0), "2.00KiB");
+        assert_eq!(bytes(10.0 * 1024.0 * 1024.0), "10.00MiB");
+    }
+
+    #[test]
+    fn ops_units() {
+        assert_eq!(ops(999.0), "999");
+        assert_eq!(ops(1.5e9), "1.50G");
+    }
+
+    #[test]
+    fn seconds_units() {
+        assert_eq!(seconds(2.5), "2.500 s");
+        assert_eq!(seconds(2.5e-3), "2.500 ms");
+        assert_eq!(seconds(2.5e-6), "2.500 us");
+        assert_eq!(seconds(2.5e-9), "2.5 ns");
+    }
+
+    #[test]
+    fn pct_format() {
+        assert_eq!(pct(0.375), "37.5%");
+    }
+}

@@ -1,0 +1,155 @@
+//! Golden instruction traces: exact expected compiler output for small
+//! GEMMs on each configuration class. These pin the compiler's observable
+//! behavior — any change to tiling, mode selection, batching, or emission
+//! order shows up as a diff here.
+
+use flexsa::compiler::compile_gemm;
+use flexsa::config::preset;
+use flexsa::gemm::{GemmShape, Phase};
+
+fn trace(cfg: &str, m: usize, n: usize, k: usize, phase: Phase) -> String {
+    let cfg = preset(cfg).unwrap();
+    let c = compile_gemm(&cfg, GemmShape::new(m, n, k), phase);
+    c.groups
+        .iter()
+        .enumerate()
+        .map(|(i, g)| format!("# group {i} {}\n{}", g.partition, g.program.encode()))
+        .collect()
+}
+
+#[test]
+fn golden_mono_single_tile() {
+    // One tile on the monolithic core: load, shift, stream, store.
+    let got = trace("1G1C", 100, 64, 96, Phase::Forward);
+    let want = "\
+# group 0 [100x64x96]
+u0.w0 LdLBUF_V k=96 n=64 bcast=0
+u0.w0 ShiftV k=96 n=64
+u0.w0 LdLBUF_H k=96 m=100 shared=0
+u0.w0 ExecGEMM mode=MONO m=100 n=64 k=96
+u0.w0 StLBUF m=100 n=64 dst=GBUF
+u0 sync
+";
+    assert_eq!(got, want);
+}
+
+#[test]
+fn golden_flexsa_fw_two_waves() {
+    // 256x128x256 on FlexSA: one column, one job, K loop of two FW waves.
+    let got = trace("1G1F", 256, 128, 256, Phase::Forward);
+    let want = "\
+# group 0 [256x128x256]
+u0.w0 LdLBUF_V k=128 n=128 bcast=0
+u0.w0 ShiftV k=128 n=128
+u0.w0 LdLBUF_H k=128 m=256 shared=0
+u0.w0 ExecGEMM mode=FW m=256 n=128 k=128
+u0.w0 LdLBUF_V k=128 n=128 bcast=0
+u0.w0 ShiftV k=128 n=128
+u0.w0 LdLBUF_H k=128 m=256 shared=0
+u0.w0 ExecGEMM mode=FW m=256 n=128 k=128
+u0.w0 StLBUF m=256 n=128 dst=GBUF
+u0 sync
+";
+    assert_eq!(got, want);
+}
+
+#[test]
+fn golden_flexsa_vsw_pairs_m_slabs() {
+    // Skinny column (n=48 <= 64): VSW pairs two m-slabs per issue with a
+    // broadcast stationary load.
+    let got = trace("1G1F", 256, 48, 128, Phase::Forward);
+    let want = "\
+# group 0 [256x48x128]
+u0.w0 LdLBUF_V k=128 n=48 bcast=1
+u0.w0 ShiftV k=128 n=48
+u0.w0 LdLBUF_H k=128 m=128 shared=0
+u0.w1 LdLBUF_H k=128 m=128 shared=0
+u0.w0 ExecGEMM mode=VSW m=128 n=48 k=128
+u0.w1 ExecGEMM mode=VSW m=128 n=48 k=128
+u0.w0 StLBUF m=128 n=48 dst=GBUF
+u0.w0 StLBUF m=128 n=48 dst=GBUF
+u0 sync
+";
+    assert_eq!(got, want);
+}
+
+#[test]
+fn golden_flexsa_hsw_shared_stream() {
+    // Fat tile (k=32 <= 64): HSW with shared horizontal streams.
+    let got = trace("1G1F", 512, 128, 32, Phase::Forward);
+    let want = "\
+# group 0 [512x128x32]
+u0.w0 LdLBUF_V k=32 n=128 bcast=1
+u0.w0 ShiftV k=32 n=128
+u0.w0 LdLBUF_H k=32 m=256 shared=1
+u0.w1 LdLBUF_H k=32 m=256 shared=1
+u0.w0 ExecGEMM mode=HSW m=256 n=128 k=32
+u0.w1 ExecGEMM mode=HSW m=256 n=128 k=32
+u0.w0 StLBUF m=256 n=128 dst=GBUF
+u0.w0 StLBUF m=256 n=128 dst=GBUF
+u0 sync
+";
+    assert_eq!(got, want);
+}
+
+#[test]
+fn golden_flexsa_isw_quads() {
+    // Tiny tile (n,k <= 64): ISW packs four m-slabs behind one broadcast.
+    // m quantum = lbuf_horizontal / (4 parallel x k=48) = 170 (capacity
+    // rule, not the blk_M cap).
+    let got = trace("1G1F", 512, 32, 48, Phase::Forward);
+    let want = "\
+# group 0 [512x32x48]
+u0.w0 LdLBUF_V k=48 n=32 bcast=1
+u0.w0 ShiftV k=48 n=32
+u0.w0 LdLBUF_H k=48 m=170 shared=0
+u0.w1 LdLBUF_H k=48 m=170 shared=0
+u0.w2 LdLBUF_H k=48 m=170 shared=0
+u0.w3 LdLBUF_H k=48 m=2 shared=0
+u0.w0 ExecGEMM mode=ISW m=170 n=32 k=48
+u0.w1 ExecGEMM mode=ISW m=170 n=32 k=48
+u0.w2 ExecGEMM mode=ISW m=170 n=32 k=48
+u0.w3 ExecGEMM mode=ISW m=2 n=32 k=48
+u0.w0 StLBUF m=170 n=32 dst=GBUF
+u0.w0 StLBUF m=170 n=32 dst=GBUF
+u0.w0 StLBUF m=170 n=32 dst=GBUF
+u0.w0 StLBUF m=2 n=32 dst=GBUF
+u0 sync
+";
+    assert_eq!(got, want);
+}
+
+#[test]
+fn golden_vsw_then_isw_edge_column() {
+    // Paper Fig 9.c -> 9.d: skinny column whose K tail drops below the
+    // sub-core height switches VSW -> ISW mid-job.
+    let got = trace("1G1F", 256, 40, 160, Phase::Forward);
+    assert!(got.contains("mode=VSW"), "{got}");
+    assert!(got.contains("mode=ISW"), "{got}");
+    // VSW waves come before the ISW tail within the job (K order).
+    let vsw = got.find("mode=VSW").unwrap();
+    let isw = got.find("mode=ISW").unwrap();
+    assert!(vsw < isw);
+}
+
+#[test]
+fn golden_wgrad_k_partition_f32_stores() {
+    // Weight-grad on a 4-group config: K split in four, f32 partials.
+    let cfg = preset("4G1F").unwrap();
+    let c = compile_gemm(&cfg, GemmShape::new(64, 64, 4096), Phase::WeightGrad);
+    assert!(c.k_partitioned);
+    assert_eq!(c.groups.len(), 4);
+    for g in &c.groups {
+        assert_eq!(g.partition.k, 1024);
+        assert!(g.dram.reduce_bytes > 0);
+    }
+}
+
+#[test]
+fn golden_mono_round_robin_units() {
+    // Four tile jobs over four 64x64 cores: units 0..3 each get one.
+    let got = trace("1G4C", 512, 64, 64, Phase::Forward);
+    for u in 0..4 {
+        assert!(got.contains(&format!("u{u}.w0 ExecGEMM mode=MONO m=128 n=64 k=64")), "{got}");
+    }
+}

@@ -1,0 +1,158 @@
+//! Integration tests across modules: model zoo → pruning schedules →
+//! compiler → simulator → figures, asserting the paper's key *shape*
+//! claims end to end (who wins, by roughly what factor).
+
+use flexsa::config::preset;
+use flexsa::coordinator::{aggregate, paper_workloads, point_weights, run_sweep, SweepJob};
+use flexsa::models::{resnet50, ChannelCounts};
+use flexsa::pruning::{prunetrain_schedule, PruneSchedule, Strength};
+use flexsa::sim::{simulate_model_epoch, SimOptions};
+use std::sync::Arc;
+
+fn trajectory_util(cfg_name: &str, strength: Strength) -> f64 {
+    let model = Arc::new(resnet50());
+    let sched = prunetrain_schedule(&model, strength, 90, 10, 42);
+    let weights = point_weights(&sched);
+    let cfg = Arc::new(preset(cfg_name).unwrap());
+    let jobs: Vec<SweepJob> = sched
+        .points
+        .iter()
+        .zip(&weights)
+        .map(|(p, &w)| SweepJob {
+            cfg: Arc::clone(&cfg),
+            model: Arc::clone(&model),
+            counts: p.counts.clone(),
+            weight: w,
+            opts: SimOptions::ideal(),
+        })
+        .collect();
+    let results = run_sweep(jobs, 8);
+    let refs: Vec<_> = results.iter().collect();
+    aggregate(&refs).pe_utilization
+}
+
+#[test]
+fn pruning_degrades_monolithic_utilization() {
+    // Paper SEC III: utilization falls as pruning proceeds on 1G1C.
+    let model = resnet50();
+    let sched = prunetrain_schedule(&model, Strength::High, 90, 10, 42);
+    let cfg = preset("1G1C").unwrap();
+    let first = simulate_model_epoch(
+        &cfg,
+        &model,
+        &sched.points[0].counts,
+        &SimOptions::ideal(),
+    );
+    let last = simulate_model_epoch(
+        &cfg,
+        &model,
+        &sched.points.last().unwrap().counts,
+        &SimOptions::ideal(),
+    );
+    let u0 = first.pe_utilization(&cfg);
+    let u1 = last.pe_utilization(&cfg);
+    assert!(u1 < u0 - 0.2, "u0={u0} u1={u1}");
+}
+
+#[test]
+fn flexsa_recovers_utilization_on_pruned_trajectory() {
+    // Paper abstract: ~+37% compute-resource utilization vs 1G1C.
+    let mono = trajectory_util("1G1C", Strength::Low);
+    let flex = trajectory_util("1G1F", Strength::Low);
+    let gain = flex / mono;
+    assert!(gain > 1.15, "gain={gain} (mono={mono} flex={flex})");
+}
+
+#[test]
+fn flexsa_tracks_naive_split_utilization() {
+    // Paper Fig 10a: FlexSA within ~0.1% of the matching naive split
+    // (here: within a few points either way — our sim models round-robin
+    // imbalance the paper's ideal split does not pay).
+    let split = trajectory_util("1G4C", Strength::High);
+    let flex = trajectory_util("1G1F", Strength::High);
+    assert!((flex - split).abs() < 0.08, "split={split} flex={flex}");
+}
+
+#[test]
+fn paper_workloads_grid_headlines() {
+    // A reduced Fig-10/11 consistency check on ResNet50 only (fast).
+    let ws = paper_workloads(90, 10, 42);
+    let resnet = &ws[0];
+    let mut utils = std::collections::HashMap::new();
+    let mut traffic = std::collections::HashMap::new();
+    for name in ["1G1C", "1G4C", "1G1F"] {
+        let cfg = Arc::new(preset(name).unwrap());
+        let sched: &PruneSchedule = &resnet.schedules[0].1;
+        let weights = point_weights(sched);
+        let jobs: Vec<SweepJob> = sched
+            .points
+            .iter()
+            .zip(&weights)
+            .map(|(p, &w)| SweepJob {
+                cfg: Arc::clone(&cfg),
+                model: Arc::clone(&resnet.model),
+                counts: p.counts.clone(),
+                weight: w,
+                opts: SimOptions::hbm2(),
+            })
+            .collect();
+        let results = run_sweep(jobs, 8);
+        let refs: Vec<_> = results.iter().collect();
+        let a = aggregate(&refs);
+        utils.insert(name, a.pe_utilization);
+        traffic.insert(name, a.onchip_traffic);
+    }
+    // Fig 11 shape: naive split ~1.5-2x the on-chip traffic of 1G1C;
+    // FlexSA ~= 1G1C.
+    let r_split = traffic["1G4C"] / traffic["1G1C"];
+    let r_flex = traffic["1G1F"] / traffic["1G1C"];
+    assert!((1.3..2.3).contains(&r_split), "split traffic ratio {r_split}");
+    assert!((0.85..1.1).contains(&r_flex), "flexsa traffic ratio {r_flex}");
+    // Fig 10b shape: FlexSA >= both on utilization under HBM2.
+    assert!(utils["1G1F"] > utils["1G1C"], "{utils:?}");
+    assert!(utils["1G1F"] > utils["1G4C"] * 0.95, "{utils:?}");
+}
+
+#[test]
+fn schedules_transfer_and_remain_valid() {
+    let ws = paper_workloads(90, 10, 7);
+    for w in &ws {
+        for (kind, sched) in &w.schedules {
+            sched.validate(&w.model).unwrap_or_else(|e| {
+                panic!("{} {}: {e}", w.model.name, kind.label());
+            });
+        }
+    }
+}
+
+#[test]
+fn mobilenet_static_variant_reduces_cycles() {
+    let ws = paper_workloads(90, 10, 42);
+    let mobilenet = &ws[2];
+    let cfg = preset("1G1C").unwrap();
+    let base = simulate_model_epoch(
+        &cfg,
+        &mobilenet.model,
+        &mobilenet.schedules[0].1.points[0].counts,
+        &SimOptions::ideal(),
+    );
+    let slim = simulate_model_epoch(
+        &cfg,
+        &mobilenet.model,
+        &mobilenet.schedules[1].1.points[0].counts,
+        &SimOptions::ideal(),
+    );
+    assert!(slim.gemm_cycles < base.gemm_cycles);
+    assert!(slim.busy_macs < base.busy_macs);
+}
+
+#[test]
+fn baseline_counts_round_trip_through_trace() {
+    let model = resnet50();
+    let sched = prunetrain_schedule(&model, Strength::Low, 90, 10, 3);
+    let text = sched.encode_trace();
+    let parsed = PruneSchedule::parse_trace(&text, &model).unwrap();
+    assert_eq!(parsed.points.len(), sched.points.len());
+    let c = ChannelCounts::baseline(&model);
+    assert_eq!(parsed.points[0].counts, c);
+}

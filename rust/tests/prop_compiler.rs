@@ -1,0 +1,205 @@
+//! Property-based tests for the FlexSA compiler (mini-proptest framework):
+//! invariants that must hold for *every* GEMM shape on every configuration.
+
+use flexsa::compiler::{compile_gemm, select_mode};
+use flexsa::config::{preset, UnitKind, PRESETS};
+use flexsa::gemm::{GemmShape, Phase};
+use flexsa::isa::{Inst, Mode};
+use flexsa::proptest::{forall, gemm_dim, shrink_dims3, Config};
+
+fn shapes_config() -> Config {
+    Config { cases: 80, ..Default::default() }
+}
+
+#[test]
+fn macs_conserved_for_all_configs_and_phases() {
+    forall(
+        &shapes_config(),
+        |rng| (gemm_dim(rng), gemm_dim(rng), gemm_dim(rng)),
+        shrink_dims3,
+        |&(m, n, k)| {
+            let shape = GemmShape::new(m, n, k);
+            for name in PRESETS {
+                let cfg = preset(name).unwrap();
+                for phase in Phase::ALL {
+                    let c = compile_gemm(&cfg, shape, phase);
+                    let macs: u64 = c.groups.iter().map(|g| g.program.stats().macs).sum();
+                    if macs != shape.macs() {
+                        return Err(format!(
+                            "{name} {phase:?}: {macs} != {} for {shape}",
+                            shape.macs()
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn mode_selection_matches_wave_dims() {
+    // Every emitted ExecGEMM's mode must agree with the paper's heuristic
+    // applied to its own (n, k) — the compiler may never "downgrade".
+    forall(
+        &shapes_config(),
+        |rng| (gemm_dim(rng), gemm_dim(rng), gemm_dim(rng)),
+        shrink_dims3,
+        |&(m, n, k)| {
+            let cfg = preset("1G1F").unwrap();
+            let c = compile_gemm(&cfg, GemmShape::new(m, n, k), Phase::Forward);
+            for g in &c.groups {
+                for inst in &g.program.insts {
+                    if let Inst::ExecGemm { mode, n, k, .. } = inst {
+                        let want = select_mode(&cfg, *n, *k);
+                        if *mode != want {
+                            return Err(format!("wave n={n} k={k}: {mode} != {want}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn wave_dims_respect_unit_geometry_and_lbuf() {
+    forall(
+        &shapes_config(),
+        |rng| (gemm_dim(rng), gemm_dim(rng), gemm_dim(rng)),
+        shrink_dims3,
+        |&(m, n, k)| {
+            for name in PRESETS {
+                let cfg = preset(name).unwrap();
+                let c = compile_gemm(&cfg, GemmShape::new(m, n, k), Phase::Forward);
+                for g in &c.groups {
+                    // Track per-issue horizontal LBUF usage.
+                    let mut issue_elems = 0usize;
+                    let mut issue_mode = Mode::Mono;
+                    for inst in &g.program.insts {
+                        match inst {
+                            Inst::ExecGemm { mode, subwave, m, n, k, .. } => {
+                                if *n > cfg.unit.cols || *k > cfg.unit.rows {
+                                    return Err(format!(
+                                        "{name}: wave {m}x{n}x{k} exceeds unit geometry"
+                                    ));
+                                }
+                                if *subwave == 0 {
+                                    issue_elems = 0;
+                                    issue_mode = *mode;
+                                }
+                                if *subwave >= issue_mode.parallel_waves() {
+                                    return Err(format!(
+                                        "{name}: subwave {subwave} for {mode}"
+                                    ));
+                                }
+                                issue_elems += m * k;
+                                if issue_elems > cfg.lbuf_horizontal_elems {
+                                    return Err(format!(
+                                        "{name}: issue exceeds horizontal LBUF \
+                                         ({issue_elems} > {})",
+                                        cfg.lbuf_horizontal_elems
+                                    ));
+                                }
+                            }
+                            Inst::LdLbufV { k, n, .. } => {
+                                if k * n > cfg.lbuf_stationary_elems {
+                                    return Err(format!(
+                                        "{name}: stationary load {k}x{n} exceeds LBUF"
+                                    ));
+                                }
+                            }
+                            _ => {}
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn programs_are_well_formed() {
+    // Loads precede execs within an issue; every tile job ends with a
+    // store; the program ends with syncs for every unit.
+    forall(
+        &Config { cases: 60, ..Default::default() },
+        |rng| (gemm_dim(rng), gemm_dim(rng), gemm_dim(rng)),
+        shrink_dims3,
+        |&(m, n, k)| {
+            for name in ["1G1C", "1G4C", "1G1F"] {
+                let cfg = preset(name).unwrap();
+                let c = compile_gemm(&cfg, GemmShape::new(m, n, k), Phase::Forward);
+                for g in &c.groups {
+                    let stats = g.program.stats();
+                    let execs: u64 = stats.waves_by_mode.values().sum();
+                    if execs == 0 {
+                        return Err(format!("{name}: no waves emitted"));
+                    }
+                    if stats.loads_v == 0 || stats.loads_h == 0 || stats.stores == 0 {
+                        return Err(format!("{name}: missing loads/stores"));
+                    }
+                    if stats.syncs as usize != cfg.units_per_group {
+                        return Err(format!("{name}: sync count"));
+                    }
+                    // Horizontal loads == execs (one stream per sub-wave).
+                    if stats.loads_h != execs {
+                        return Err(format!(
+                            "{name}: {} horizontal loads for {execs} waves",
+                            stats.loads_h
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn monolithic_emits_only_mono_waves() {
+    forall(
+        &Config { cases: 40, ..Default::default() },
+        |rng| (gemm_dim(rng), gemm_dim(rng), gemm_dim(rng)),
+        shrink_dims3,
+        |&(m, n, k)| {
+            for name in ["1G1C", "1G4C", "4G4C"] {
+                let cfg = preset(name).unwrap();
+                let c = compile_gemm(&cfg, GemmShape::new(m, n, k), Phase::Forward);
+                for g in &c.groups {
+                    for (mode, _) in &g.program.stats().waves_by_mode {
+                        if *mode != Mode::Mono {
+                            return Err(format!("{name} emitted {mode}"));
+                        }
+                    }
+                }
+                assert_eq!(cfg.kind, UnitKind::Monolithic);
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn program_text_round_trips() {
+    forall(
+        &Config { cases: 30, ..Default::default() },
+        |rng| (gemm_dim(rng), gemm_dim(rng), gemm_dim(rng)),
+        shrink_dims3,
+        |&(m, n, k)| {
+            let cfg = preset("4G1F").unwrap();
+            let c = compile_gemm(&cfg, GemmShape::new(m, n, k), Phase::WeightGrad);
+            for g in &c.groups {
+                let text = g.program.encode();
+                let back = flexsa::isa::Program::parse(&text)
+                    .map_err(|e| format!("parse failed: {e}"))?;
+                if back.insts != g.program.insts {
+                    return Err("round-trip mismatch".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}

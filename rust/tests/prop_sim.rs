@@ -1,0 +1,196 @@
+//! Property-based tests for the simulator: timing, traffic, and energy
+//! invariants over random GEMM shapes and configurations.
+
+use flexsa::compiler::compile_gemm;
+use flexsa::config::{preset, PRESETS};
+use flexsa::energy::{iteration_energy, EnergyModel};
+use flexsa::gemm::{Gemm, GemmShape, Phase, ELEM_BYTES};
+use flexsa::proptest::{forall, gemm_dim, shrink_dims3, Config};
+use flexsa::sim::{simulate_gemm, simulate_iteration, SimOptions};
+
+fn cfg_cases() -> Config {
+    Config { cases: 60, ..Default::default() }
+}
+
+#[test]
+fn cycles_bounded_below_by_ideal() {
+    // No configuration can beat MACs / total-PEs cycles.
+    forall(
+        &cfg_cases(),
+        |rng| (gemm_dim(rng), gemm_dim(rng), gemm_dim(rng)),
+        shrink_dims3,
+        |&(m, n, k)| {
+            let shape = GemmShape::new(m, n, k);
+            for name in PRESETS {
+                let cfg = preset(name).unwrap();
+                let c = compile_gemm(&cfg, shape, Phase::Forward);
+                let s = simulate_gemm(&cfg, &c, &SimOptions::ideal());
+                let ideal = shape.macs() as f64 / cfg.total_pes() as f64;
+                if s.cycles < ideal - 1e-9 {
+                    return Err(format!("{name}: {} < ideal {ideal}", s.cycles));
+                }
+                let u = s.pe_utilization(&cfg);
+                if !(0.0..=1.0 + 1e-9).contains(&u) {
+                    return Err(format!("{name}: util {u}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn hbm2_never_faster_than_ideal_dram() {
+    forall(
+        &cfg_cases(),
+        |rng| (gemm_dim(rng), gemm_dim(rng), gemm_dim(rng)),
+        shrink_dims3,
+        |&(m, n, k)| {
+            let shape = GemmShape::new(m, n, k);
+            for name in ["1G1C", "4G4C", "4G1F"] {
+                let cfg = preset(name).unwrap();
+                let c = compile_gemm(&cfg, shape, Phase::Forward);
+                let ideal = simulate_gemm(&cfg, &c, &SimOptions::ideal());
+                let hbm = simulate_gemm(&cfg, &c, &SimOptions::hbm2());
+                if hbm.cycles + 1e-9 < ideal.cycles {
+                    return Err(format!("{name}: hbm {} < ideal {}", hbm.cycles, ideal.cycles));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn traffic_at_least_compulsory() {
+    // GBUF->LBUF traffic can never be below one copy of each input, and
+    // OBUF->GBUF never below one copy of the output.
+    forall(
+        &cfg_cases(),
+        |rng| (gemm_dim(rng), gemm_dim(rng), gemm_dim(rng)),
+        shrink_dims3,
+        |&(m, n, k)| {
+            let shape = GemmShape::new(m, n, k);
+            for name in PRESETS {
+                let cfg = preset(name).unwrap();
+                let c = compile_gemm(&cfg, shape, Phase::Forward);
+                let s = simulate_gemm(&cfg, &c, &SimOptions::ideal());
+                let min_in = shape.a_bytes() + shape.b_bytes();
+                if s.traffic.gbuf_to_lbuf < min_in {
+                    return Err(format!(
+                        "{name}: input traffic {} below compulsory {min_in}",
+                        s.traffic.gbuf_to_lbuf
+                    ));
+                }
+                if s.traffic.obuf_to_gbuf < shape.c_bytes() {
+                    return Err(format!("{name}: output traffic below compulsory"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn flexsa_traffic_never_exceeds_matching_naive_split() {
+    // The whole point of the FlexSA modes: reuse >= independent small
+    // cores with the same sub-core geometry.
+    forall(
+        &Config { cases: 50, ..Default::default() },
+        |rng| (gemm_dim(rng), gemm_dim(rng), gemm_dim(rng)),
+        shrink_dims3,
+        |&(m, n, k)| {
+            let shape = GemmShape::new(m, n, k);
+            let flex = preset("1G1F").unwrap();
+            let split = preset("1G4C").unwrap();
+            let sf = simulate_gemm(&flex, &compile_gemm(&flex, shape, Phase::Forward), &SimOptions::ideal());
+            let ss = simulate_gemm(&split, &compile_gemm(&split, shape, Phase::Forward), &SimOptions::ideal());
+            // Allow a tiny tolerance: edge tiles can make FW stationary
+            // loads slightly larger than four small cores' (same bytes,
+            // different quantization).
+            let slack = (shape.b_bytes() as f64 * 0.25) + (4 * 128 * 128 * ELEM_BYTES) as f64;
+            if sf.traffic.gbuf_to_lbuf as f64 > ss.traffic.gbuf_to_lbuf as f64 + slack {
+                return Err(format!(
+                    "flexsa {} > naive {}",
+                    sf.traffic.gbuf_to_lbuf, ss.traffic.gbuf_to_lbuf
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn energy_components_positive_and_sum() {
+    forall(
+        &Config { cases: 30, ..Default::default() },
+        |rng| (gemm_dim(rng), gemm_dim(rng), gemm_dim(rng)),
+        shrink_dims3,
+        |&(m, n, k)| {
+            let cfg = preset("4G1F").unwrap();
+            let gemms = vec![Gemm::new(GemmShape::new(m, n, k), Phase::Forward, 0, "g")];
+            let it = simulate_iteration(&cfg, &gemms, &SimOptions::hbm2());
+            let e = iteration_energy(&cfg, &EnergyModel::default(), &it);
+            if e.comp_mj <= 0.0 || e.gbuf_mj <= 0.0 || e.dram_mj <= 0.0 {
+                return Err(format!("non-positive component: {e:?}"));
+            }
+            let sum = e.comp_mj + e.lbuf_mj + e.gbuf_mj + e.dram_mj + e.overcore_mj;
+            if (e.total_mj() - sum).abs() > 1e-12 {
+                return Err("total != sum".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn determinism_across_repeats() {
+    forall(
+        &Config { cases: 20, ..Default::default() },
+        |rng| (gemm_dim(rng), gemm_dim(rng), gemm_dim(rng)),
+        shrink_dims3,
+        |&(m, n, k)| {
+            let cfg = preset("4G1F").unwrap();
+            let shape = GemmShape::new(m, n, k);
+            let c = compile_gemm(&cfg, shape, Phase::DataGrad);
+            let a = simulate_gemm(&cfg, &c, &SimOptions::hbm2());
+            let b = simulate_gemm(&cfg, &c, &SimOptions::hbm2());
+            if a.cycles != b.cycles || a.traffic != b.traffic {
+                return Err("non-deterministic simulation".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn streaming_sim_equals_materialized() {
+    // The SEC-Perf streaming path must be bit-identical to compiling a
+    // Program and simulating it.
+    use flexsa::sim::simulate_gemm_shape;
+    forall(
+        &Config { cases: 60, ..Default::default() },
+        |rng| (gemm_dim(rng), gemm_dim(rng), gemm_dim(rng)),
+        shrink_dims3,
+        |&(m, n, k)| {
+            let shape = GemmShape::new(m, n, k);
+            for name in PRESETS {
+                let cfg = preset(name).unwrap();
+                for phase in Phase::ALL {
+                    for opts in [SimOptions::ideal(), SimOptions::hbm2()] {
+                        let a = simulate_gemm(&cfg, &compile_gemm(&cfg, shape, phase), &opts);
+                        let b = simulate_gemm_shape(&cfg, shape, phase, &opts);
+                        if a.cycles != b.cycles
+                            || a.busy_macs != b.busy_macs
+                            || a.traffic != b.traffic
+                            || a.waves_by_mode != b.waves_by_mode
+                        {
+                            return Err(format!("{name} {phase:?}: paths diverge"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
