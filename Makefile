@@ -1,0 +1,18 @@
+# Convenience targets. The rust build needs no artifacts; `artifacts` is
+# only for the optional PJRT end-to-end path (DESIGN.md §6).
+
+.PHONY: artifacts test rust-test py-test
+
+# AOT-lower the L2 model + L1 kernel to HLO text (python runs once, at
+# build time; see python/compile/aot.py).
+artifacts:
+	cd python && python -m compile.aot --out ../artifacts
+
+# Tier-1 verify (ROADMAP.md).
+rust-test:
+	cd rust && cargo build --release && cargo test -q
+
+py-test:
+	cd python && python -m pytest tests -q
+
+test: rust-test py-test

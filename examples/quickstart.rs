@@ -5,9 +5,9 @@
 //!    inspect the selected operating modes.
 //! 3. Simulate it on a monolithic core vs a FlexSA unit and compare PE
 //!    utilization, traffic, and energy.
-//! 4. If `make artifacts` has run: load the AOT-lowered Pallas wave kernel
-//!    and execute it through PJRT from rust, checking the numerics —
-//!    proving the L1 (Pallas) → L3 (rust) path composes.
+//! 4. With the `pjrt` feature and `make artifacts`: load the AOT-lowered
+//!    Pallas wave kernel and execute it through PJRT from rust, checking
+//!    the numerics — proving the L1 (Pallas) → L3 (rust) path composes.
 //!
 //! Run: `cargo run --release --example quickstart`
 
@@ -15,11 +15,10 @@ use flexsa::compiler::compile_gemm;
 use flexsa::config::preset;
 use flexsa::energy::{iteration_energy, EnergyModel};
 use flexsa::gemm::{GemmShape, Phase};
-use flexsa::runtime::{lit, Runtime};
 use flexsa::sim::{simulate_gemm, simulate_iteration, SimOptions};
 use flexsa::util::fmt;
 
-fn main() -> anyhow::Result<()> {
+fn main() {
     // --- 1. configurations -------------------------------------------------
     let mono = preset("1G1C").unwrap();
     let flex = preset("1G1F").unwrap();
@@ -60,29 +59,45 @@ fn main() -> anyhow::Result<()> {
         flex.name, e.total_mj(), e.comp_mj, e.gbuf_mj, e.dram_mj);
 
     // --- 4. run the real Pallas kernel through PJRT ------------------------
-    if Runtime::artifacts_ready("artifacts") {
-        let rt = Runtime::cpu("artifacts")?;
-        let meta = rt.meta()?;
-        let (m, n, k) = meta.gemm_fw;
-        let module = rt.load("gemm_fw")?;
-        // a = ones, b = identity-ish: a @ b has a known answer.
-        let a = vec![1.0f32; m * k];
-        let mut b = vec![0.0f32; k * n];
-        for i in 0..k.min(n) {
-            b[i * n + i] = 2.0;
-        }
-        let out = module.run(&[lit::f32(&a, &[m, k])?, lit::f32(&b, &[k, n])?])?;
-        let y = lit::to_f32(&out[0])?;
-        assert_eq!(y.len(), m * n);
-        assert!((y[0] - 2.0).abs() < 1e-5, "kernel numerics: got {}", y[0]);
-        println!(
-            "\nPJRT: executed the AOT Pallas wave kernel ({m}x{n}x{k}) on {} — \
-             numerics OK (y[0]={})",
-            rt.platform(),
-            y[0]
-        );
-    } else {
+    pjrt_demo();
+}
+
+/// Execute the AOT Pallas wave kernel through PJRT (pjrt builds only).
+#[cfg(feature = "pjrt")]
+fn pjrt_demo() {
+    use flexsa::runtime::{artifacts_ready, lit, Runtime};
+    if !artifacts_ready("artifacts") {
         println!("\n(skip PJRT demo: run `make artifacts` first)");
+        return;
     }
-    Ok(())
+    let rt = Runtime::cpu("artifacts").expect("PJRT cpu client");
+    let meta = rt.meta().expect("meta.txt");
+    let (m, n, k) = meta.gemm_fw;
+    let module = rt.load("gemm_fw").expect("load gemm_fw");
+    // a = ones, b = identity-ish: a @ b has a known answer.
+    let a = vec![1.0f32; m * k];
+    let mut b = vec![0.0f32; k * n];
+    for i in 0..k.min(n) {
+        b[i * n + i] = 2.0;
+    }
+    let out = module
+        .run(&[lit::f32(&a, &[m, k]).unwrap(), lit::f32(&b, &[k, n]).unwrap()])
+        .expect("execute gemm_fw");
+    let y = lit::to_f32(&out[0]).unwrap();
+    assert_eq!(y.len(), m * n);
+    assert!((y[0] - 2.0).abs() < 1e-5, "kernel numerics: got {}", y[0]);
+    println!(
+        "\nPJRT: executed the AOT Pallas wave kernel ({m}x{n}x{k}) on {} — \
+         numerics OK (y[0]={})",
+        rt.platform(),
+        y[0]
+    );
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_demo() {
+    println!(
+        "\n(skip PJRT demo: rebuild with `--features pjrt` and run \
+         `make artifacts` — see DESIGN.md §6)"
+    );
 }

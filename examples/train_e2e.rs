@@ -10,24 +10,33 @@
 //!                      level simulator to report the paper's headline
 //!                      metric on real data.
 //!
-//! Run: `make artifacts && cargo run --release --example train_e2e`
+//! Requires the `pjrt` feature (see DESIGN.md §6); the example target is
+//! gated with `required-features` so default builds skip it.
+//!
+//! Run: `make artifacts && cargo run --release --features pjrt --example train_e2e`
 //! (use `-- --steps N --prune-interval K` to adjust; results land in
-//! `artifacts/e2e_trace.txt` + `artifacts/e2e_loss.csv` and EXPERIMENTS.md)
+//! `artifacts/e2e_trace.txt` + `artifacts/e2e_loss.csv` and EXPERIMENTS.md §E2E)
 
 use flexsa::cli::Args;
 use flexsa::trainer::{run, TrainerConfig};
 
-fn main() -> anyhow::Result<()> {
-    let args = Args::parse(std::env::args().skip(1)).map_err(|e| anyhow::anyhow!(e))?;
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<(), String> {
+    let args = Args::parse(std::env::args().skip(1))?;
     let mut cfg = TrainerConfig::default();
     // `Args::parse` treats the first token as a command; recover flags only.
-    cfg.steps = args.get_usize("steps", 300).map_err(|e| anyhow::anyhow!(e))?;
-    cfg.prune_interval =
-        args.get_usize("prune-interval", 50).map_err(|e| anyhow::anyhow!(e))?;
+    cfg.steps = args.get_usize("steps", 300)?;
+    cfg.prune_interval = args.get_usize("prune-interval", 50)?;
     if let Some(a) = args.get("artifacts") {
         cfg.artifacts = a.into();
     }
-    let outcome = run(&cfg)?;
+    let outcome = run(&cfg).map_err(|e| format!("{e:#}"))?;
 
     println!("\n=== end-to-end summary ===");
     println!(

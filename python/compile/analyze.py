@@ -69,7 +69,7 @@ def main():
             print(f"   analytic GEMM count (fwd+dgrad+wgrad): ~{want} "
                   f"(interpret-mode waves appear inside while loops)")
 
-    print("\nL1 kernel on real TPU (estimates, DESIGN.md SEC 8):")
+    print("\nL1 kernel on real TPU (estimates, DESIGN.md §8):")
     print(f"  {'GEMM':>16} {'blocks':>13} {'VMEM KiB':>9} {'wave eff':>9}")
     for gemm, blocks, kib, eff in kernel_vmem_report():
         print(f"  {gemm:>16} {blocks:>13} {kib:9.1f} {eff:9.2f}")

@@ -1,14 +1,14 @@
 """L1 — the FlexSA systolic-wave GEMM as a Pallas kernel.
 
 The kernel tiles exactly like the FlexSA compiler tiles waves (paper
-SEC VI-A): ``blk_N x blk_K`` stationary tiles (the 128x128 full-FlexSA
+§VI-A): ``blk_N x blk_K`` stationary tiles (the 128x128 full-FlexSA
 footprint), ``blk_M``-row horizontal slabs (the non-stationary LBUF
 capacity), and a K-grid that accumulates partial sums in an f32
 accumulator — the OBUF role. The Pallas grid plays the wave scheduler;
 BlockSpecs express the HBM<->VMEM (GBUF<->LBUF) movement that the rust
 simulator models cycle by cycle.
 
-TPU adaptation notes (DESIGN.md SEC 3): interpret=True is mandatory here —
+TPU adaptation notes (DESIGN.md §3): interpret=True is mandatory here —
 the CPU PJRT plugin cannot execute Mosaic custom-calls, and interpret
 mode lowers the kernel to plain HLO, which is what the rust runtime
 loads. On a real TPU the same BlockSpecs map the MXU: bf16 operands,
@@ -55,7 +55,7 @@ def _pad_to(x, m0, m1):
 
 
 def select_blocks(m, n, k):
-    """Block-size analog of the FlexSA mode heuristic (paper SEC VI-A):
+    """Block-size analog of the FlexSA mode heuristic (paper §VI-A):
     GEMMs whose N or K fit a 64-wide/64-tall *sub-core* take sub-core-sized
     blocks (the VSW/HSW/ISW modes); full-sized GEMMs take the FW tile.
     Keeps padded work proportional for the pruned, irregular shapes this

@@ -1,0 +1,83 @@
+"""Offline stand-in for the tiny slice of hypothesis the kernel tests use.
+
+The container/vendor set has no `hypothesis`; these tests only need
+``@given`` over integer ranges with a ``max_examples`` cap. The shim runs
+a deterministic boundary-biased sweep instead of random search: every
+range contributes its min, its max, and seeded uniform draws. Import it
+as a fallback:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ModuleNotFoundError:
+        from _hypothesis_compat import given, settings, st
+"""
+
+import itertools
+import zlib
+
+import numpy as np
+
+
+class _IntRange:
+    def __init__(self, min_value, max_value):
+        self.min_value = min_value
+        self.max_value = max_value
+
+    def draw(self, rng):
+        return int(rng.randint(self.min_value, self.max_value + 1))
+
+
+class st:  # noqa: N801 - mimics `hypothesis.strategies as st`
+    """Strategy namespace: only `integers` is needed here."""
+
+    @staticmethod
+    def integers(min_value=None, max_value=None):
+        return _IntRange(min_value, max_value)
+
+
+def settings(max_examples=25, deadline=None):
+    """Record the example budget on the wrapped test."""
+    del deadline  # no timing enforcement offline
+
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategies):
+    """Run the test over a deterministic sweep of the strategies."""
+    names = sorted(strategies)
+
+    def deco(fn):
+        # NOTE: no functools.wraps — it would copy fn's (m, n, k) signature
+        # and make pytest hunt for fixtures of those names.
+        def wrapper():
+            max_examples = getattr(wrapper, "_max_examples", 25)
+            # crc32, not hash(): str hashing is randomized per process and
+            # would make failing cases unreproducible.
+            seed = zlib.crc32(fn.__name__.encode())
+            rng = np.random.RandomState(seed)
+            cases = []
+            # Boundary cases first: all-min, all-max, min/max mixed.
+            lo = {n: strategies[n].min_value for n in names}
+            hi = {n: strategies[n].max_value for n in names}
+            cases.append(lo)
+            cases.append(hi)
+            for combo in itertools.islice(
+                itertools.product([True, False], repeat=len(names)), 2, 6
+            ):
+                cases.append(
+                    {n: (lo[n] if take_lo else hi[n]) for n, take_lo in zip(names, combo)}
+                )
+            while len(cases) < max_examples:
+                cases.append({n: strategies[n].draw(rng) for n in names})
+            for kwargs in cases[:max_examples]:
+                fn(**kwargs)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco

@@ -1,4 +1,4 @@
-//! Bench + regeneration of paper Fig 6 and SEC V-B: area overheads of
+//! Bench + regeneration of paper Fig 6 and §V-B: area overheads of
 //! naive splitting, and FlexSA's itemized ~1% overhead.
 
 use flexsa::bench_harness::Bencher;

@@ -1,6 +1,6 @@
 //! Hot-path microbenchmarks: the compile+simulate pipeline per GEMM and
 //! per whole-model iteration — the simulator throughput targets of
-//! EXPERIMENTS.md SEC Perf.
+//! EXPERIMENTS.md §Perf.
 
 use flexsa::bench_harness::{black_box, Bencher};
 use flexsa::compiler::compile_gemm;
@@ -14,7 +14,7 @@ fn main() {
     let opts = SimOptions::hbm2();
 
     // Single-GEMM pipeline on all Table-I configs: materialized programs
-    // vs the streaming compile+simulate hot path (SEC Perf).
+    // vs the streaming compile+simulate hot path (§Perf).
     for name in ["1G1C", "1G4C", "4G4C", "1G1F", "4G1F"] {
         let cfg = preset(name).unwrap();
         let shape = GemmShape::new(100_352, 256, 1152); // resnet50-scale fwd

@@ -48,16 +48,22 @@ impl Default for AreaModel {
 /// Area breakdown of a configuration, mm².
 #[derive(Debug, Clone, Copy, Default)]
 pub struct AreaBreakdown {
+    /// PE-array area.
     pub pe_mm2: f64,
+    /// SRAM (GBUF + LBUF/OBUF) area.
     pub sram_mm2: f64,
     /// Extra decode/repeater logic from splitting buffers into parts.
     pub split_logic_mm2: f64,
+    /// GBUF→LBUF bus wiring area.
     pub datapath_mm2: f64,
+    /// FlexSA-specific overhead (§V-B itemization).
     pub flexsa_extra_mm2: f64,
+    /// Fixed non-core area (SIMD array, controllers, PHY).
     pub uncore_mm2: f64,
 }
 
 impl AreaBreakdown {
+    /// Total die area, mm².
     pub fn total_mm2(&self) -> f64 {
         self.pe_mm2
             + self.sram_mm2

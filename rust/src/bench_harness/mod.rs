@@ -11,15 +11,22 @@ use std::time::{Duration, Instant};
 /// One benchmark's timing results.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Benchmark name.
     pub name: String,
+    /// Timed iterations executed.
     pub iters: u64,
+    /// Mean wall time per iteration.
     pub mean: Duration,
+    /// Sample standard deviation.
     pub stddev: Duration,
+    /// Fastest iteration.
     pub min: Duration,
+    /// Slowest iteration.
     pub max: Duration,
 }
 
 impl BenchResult {
+    /// One-line human-readable summary.
     pub fn report(&self) -> String {
         format!(
             "{:<40} {:>12}/iter  (+/- {:>10}, min {:>10}, {} iters)",
@@ -41,9 +48,13 @@ impl BenchResult {
 /// Harness configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct Bencher {
+    /// Untimed warm-up iterations.
     pub warmup_iters: u64,
+    /// Minimum timed iterations.
     pub min_iters: u64,
+    /// Keep iterating until at least this much wall time has passed.
     pub min_time: Duration,
+    /// Hard iteration cap.
     pub max_iters: u64,
 }
 

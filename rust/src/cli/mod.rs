@@ -7,7 +7,9 @@ use std::collections::HashMap;
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// The leading sub-command token (`help` if absent).
     pub command: String,
+    /// Non-flag arguments, in order.
     pub positional: Vec<String>,
     flags: HashMap<String, Option<String>>,
 }
@@ -42,14 +44,17 @@ impl Args {
         Self::parse(std::env::args().skip(1))
     }
 
+    /// Was `--flag` present (with or without a value)?
     pub fn has(&self, flag: &str) -> bool {
         self.flags.contains_key(flag)
     }
 
+    /// Value of `--flag value` / `--flag=value`, if present.
     pub fn get(&self, flag: &str) -> Option<&str> {
         self.flags.get(flag).and_then(|v| v.as_deref())
     }
 
+    /// Parse `--flag` as usize, with a default when absent.
     pub fn get_usize(&self, flag: &str, default: usize) -> Result<usize, String> {
         match self.get(flag) {
             None => Ok(default),
@@ -57,6 +62,7 @@ impl Args {
         }
     }
 
+    /// Parse `--flag` as u64, with a default when absent.
     pub fn get_u64(&self, flag: &str, default: u64) -> Result<u64, String> {
         match self.get(flag) {
             None => Ok(default),

@@ -29,6 +29,7 @@ pub struct DramPlan {
 }
 
 impl DramPlan {
+    /// All DRAM bytes moved for this partition (read + write + reduce).
     pub fn total_bytes(&self) -> u64 {
         self.read_bytes + self.write_bytes + self.reduce_bytes
     }

@@ -31,7 +31,9 @@ use crate::isa::Program;
 /// A compiled GEMM: one instruction program per core group + DRAM plan.
 #[derive(Debug, Clone)]
 pub struct CompiledGemm {
+    /// The uncompiled GEMM dimensions.
     pub shape: GemmShape,
+    /// Training phase (drives the partition dimension).
     pub phase: Phase,
     /// One entry per group that received work.
     pub groups: Vec<GroupPlan>,
@@ -45,15 +47,20 @@ pub struct CompiledGemm {
 pub struct GroupPlan {
     /// This group's share of the GEMM.
     pub partition: GemmShape,
+    /// The group's instruction stream.
     pub program: Program,
+    /// Analytic DRAM traffic of the group's blocking plan.
     pub dram: DramPlan,
 }
 
 /// How a GEMM is split across core groups (paper §VII).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PartitionDim {
+    /// Split along output rows (forward / data-grad).
     M,
+    /// Split along the accumulation depth (weight-grad).
     K,
+    /// Single group — no split.
     None,
 }
 

@@ -63,8 +63,11 @@ fn chunks(total: usize, quantum: usize) -> Vec<usize> {
 /// Summary of one partition's tiling (used by tests and reports).
 #[derive(Debug, Clone, Default)]
 pub struct TilingStats {
+    /// `ceil(N / cols)` tile columns.
     pub tile_columns: usize,
+    /// OBUF-accumulation-scope jobs across all columns.
     pub tile_jobs: usize,
+    /// Wave issues (an issue launches up to `parallel_waves` sub-waves).
     pub wave_issues: usize,
 }
 

@@ -31,15 +31,19 @@ pub enum UnitKind {
 /// shifted down `rows` PEs; `cols` is the output-width (N) dimension.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct UnitGeometry {
+    /// PE rows (the K / accumulation-depth dimension).
     pub rows: usize,
+    /// PE columns (the N / output-width dimension).
     pub cols: usize,
 }
 
 impl UnitGeometry {
+    /// Construct a `rows × cols` geometry.
     pub fn new(rows: usize, cols: usize) -> Self {
         Self { rows, cols }
     }
 
+    /// Total PE count of the unit.
     pub fn pes(&self) -> usize {
         self.rows * self.cols
     }
@@ -57,6 +61,7 @@ pub struct AcceleratorConfig {
     /// Geometry of each unit (for FlexSA this is the *full* unit, i.e. all
     /// four sub-cores together).
     pub unit: UnitGeometry,
+    /// Whether units are monolithic arrays or FlexSA (2×2 sub-core) units.
     pub kind: UnitKind,
     /// Total on-chip global buffer capacity in bytes (divided evenly across
     /// groups). The paper uses 10 MB (WaveCore).
@@ -172,6 +177,33 @@ impl AcceleratorConfig {
             return Err("clock and DRAM bandwidth must be positive".into());
         }
         Ok(())
+    }
+
+    /// Serialize to the `key = value` text format accepted by
+    /// [`parse_config`] — the inverse used by config files, sweep tooling,
+    /// and the preset round-trip tests.
+    pub fn to_config_text(&self) -> String {
+        let kind = match self.kind {
+            UnitKind::Monolithic => "monolithic",
+            UnitKind::FlexSa => "flexsa",
+        };
+        format!(
+            "name = {}\ngroups = {}\nunits_per_group = {}\nunit_rows = {}\n\
+             unit_cols = {}\nkind = {kind}\ngbuf_total_mib = {}\nclock_ghz = {}\n\
+             dram_gbps = {}\nsimd_gflops = {}\nlbuf_stationary_elems = {}\n\
+             lbuf_horizontal_elems = {}\n",
+            self.name,
+            self.groups,
+            self.units_per_group,
+            self.unit.rows,
+            self.unit.cols,
+            self.gbuf_total_bytes as f64 / (1024.0 * 1024.0),
+            self.clock_ghz,
+            self.dram_gbps,
+            self.simd_gflops,
+            self.lbuf_stationary_elems,
+            self.lbuf_horizontal_elems,
+        )
     }
 }
 

@@ -120,6 +120,30 @@ mod tests {
     }
 
     #[test]
+    fn table1_presets_round_trip_through_parse() {
+        // The bench/figure harnesses address configurations by these names
+        // (Table I); each must resolve AND survive a serialize → parse
+        // round trip unchanged, so `@file` configs can reproduce presets.
+        use crate::config::parse_config;
+        for name in ["1G1C", "1G4C", "4G4C", "1G1F", "4G1F"] {
+            let c = preset(name).unwrap_or_else(|| panic!("preset {name} missing"));
+            let parsed = parse_config(&c.to_config_text())
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(parsed.name, c.name, "{name}");
+            assert_eq!(parsed.groups, c.groups, "{name}");
+            assert_eq!(parsed.units_per_group, c.units_per_group, "{name}");
+            assert_eq!(parsed.unit, c.unit, "{name}");
+            assert_eq!(parsed.kind, c.kind, "{name}");
+            assert_eq!(parsed.gbuf_total_bytes, c.gbuf_total_bytes, "{name}");
+            assert_eq!(parsed.lbuf_stationary_elems, c.lbuf_stationary_elems, "{name}");
+            assert_eq!(parsed.lbuf_horizontal_elems, c.lbuf_horizontal_elems, "{name}");
+            assert!((parsed.clock_ghz - c.clock_ghz).abs() < 1e-12, "{name}");
+            assert!((parsed.dram_gbps - c.dram_gbps).abs() < 1e-12, "{name}");
+            assert!((parsed.simd_gflops - c.simd_gflops).abs() < 1e-12, "{name}");
+        }
+    }
+
+    #[test]
     fn flexsa_presets_are_flexsa() {
         assert_eq!(preset("1G1F").unwrap().kind, UnitKind::FlexSa);
         assert_eq!(preset("4G1F").unwrap().kind, UnitKind::FlexSa);

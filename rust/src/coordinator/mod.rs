@@ -21,17 +21,23 @@ use std::sync::{Arc, Mutex};
 /// One sweep cell: simulate `model` at `counts` on `cfg`.
 #[derive(Clone)]
 pub struct SweepJob {
+    /// Accelerator configuration to simulate on.
     pub cfg: Arc<AcceleratorConfig>,
+    /// Model whose iteration is simulated.
     pub model: Arc<Model>,
+    /// Channel counts (one pruning-trajectory point).
     pub counts: ChannelCounts,
     /// Epoch weight of this point in trajectory averages.
     pub weight: f64,
+    /// Simulator options (ideal vs HBM2, ablation knobs).
     pub opts: SimOptions,
 }
 
 /// Result of one sweep cell (same index as the submitted job).
 pub struct JobResult {
+    /// The job that produced this result.
     pub job: SweepJob,
+    /// The whole-iteration simulation output.
     pub sim: IterationSim,
 }
 
@@ -99,6 +105,7 @@ pub struct TrajectoryAverage {
     pub busy_macs: f64,
     /// Epoch-weighted mean traffic counters.
     pub traffic: crate::sim::Traffic,
+    /// Total epoch weight aggregated (normalizer).
     pub weight_sum: f64,
 }
 

@@ -18,16 +18,23 @@ use std::time::{Duration, Instant};
 /// One simulation request.
 #[derive(Clone)]
 pub struct Request {
+    /// Caller-visible request id (returned by `submit`).
     pub id: u64,
+    /// Accelerator configuration to simulate on.
     pub cfg: Arc<AcceleratorConfig>,
+    /// GEMM dimensions.
     pub shape: GemmShape,
+    /// Training phase (drives group partitioning).
     pub phase: Phase,
+    /// Simulator options.
     pub opts: SimOptions,
 }
 
 /// The service's answer to a request.
 pub struct Response {
+    /// Id of the request this answers.
     pub id: u64,
+    /// The simulation result.
     pub sim: GemmSim,
 }
 
@@ -57,7 +64,9 @@ pub struct SimService {
 /// Counters the leader reports at shutdown.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ServiceStats {
+    /// Total requests served.
     pub requests: u64,
+    /// Total batches dispatched.
     pub batches: u64,
     /// Batches dispatched because they hit `max_batch` (vs timing out).
     pub full_batches: u64,

@@ -17,6 +17,7 @@ pub enum ScheduleKind {
 }
 
 impl ScheduleKind {
+    /// The pruning strength, if the kind has one.
     pub fn strength(&self) -> Option<Strength> {
         match self {
             ScheduleKind::PruneTrain(s) | ScheduleKind::Transferred(s) => Some(*s),
@@ -24,6 +25,7 @@ impl ScheduleKind {
         }
     }
 
+    /// Human-readable label for reports (e.g. `prunetrain-low`).
     pub fn label(&self) -> String {
         match self {
             ScheduleKind::PruneTrain(s) => format!("prunetrain-{}", s.name()),
@@ -35,7 +37,9 @@ impl ScheduleKind {
 
 /// One evaluation model with its pruning trajectories.
 pub struct Workload {
+    /// The evaluation model.
     pub model: Arc<Model>,
+    /// Its two pruning trajectories (paper §VII).
     pub schedules: Vec<(ScheduleKind, PruneSchedule)>,
 }
 

@@ -54,18 +54,25 @@ impl EnergyModel {
 /// categories).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct EnergyBreakdown {
+    /// MAC (compute) energy.
     pub comp_mj: f64,
+    /// LBUF/OBUF access energy.
     pub lbuf_mj: f64,
+    /// GBUF access energy.
     pub gbuf_mj: f64,
+    /// DRAM access energy.
     pub dram_mj: f64,
+    /// Inter-sub-core (over-core) wire energy.
     pub overcore_mj: f64,
 }
 
 impl EnergyBreakdown {
+    /// Sum of all components, mJ.
     pub fn total_mj(&self) -> f64 {
         self.comp_mj + self.lbuf_mj + self.gbuf_mj + self.dram_mj + self.overcore_mj
     }
 
+    /// Accumulate another breakdown into this one.
     pub fn add(&mut self, o: &EnergyBreakdown) {
         self.comp_mj += o.comp_mj;
         self.lbuf_mj += o.lbuf_mj;

@@ -22,8 +22,10 @@ pub enum Phase {
 }
 
 impl Phase {
+    /// All three phases, in execution order.
     pub const ALL: [Phase; 3] = [Phase::Forward, Phase::DataGrad, Phase::WeightGrad];
 
+    /// Short lowercase label (`fwd` / `dgrad` / `wgrad`).
     pub fn name(&self) -> &'static str {
         match self {
             Phase::Forward => "fwd",
@@ -36,12 +38,16 @@ impl Phase {
 /// A single GEMM: `C[m×n] += A[m×k] · B[k×n]`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct GemmShape {
+    /// Output rows.
     pub m: usize,
+    /// Output columns.
     pub n: usize,
+    /// Accumulation (inner) dimension.
     pub k: usize,
 }
 
 impl GemmShape {
+    /// Construct an `m × n × k` GEMM shape.
     pub fn new(m: usize, n: usize, k: usize) -> Self {
         Self { m, n, k }
     }
@@ -51,6 +57,7 @@ impl GemmShape {
         self.m as u64 * self.n as u64 * self.k as u64
     }
 
+    /// FLOP count (2 FLOPs per MAC).
     pub fn flops(&self) -> u64 {
         2 * self.macs()
     }
@@ -70,6 +77,7 @@ impl GemmShape {
         (self.m * self.n * ELEM_BYTES) as u64
     }
 
+    /// Any dimension zero (no work)?
     pub fn is_empty(&self) -> bool {
         self.m == 0 || self.n == 0 || self.k == 0
     }
@@ -91,7 +99,9 @@ impl std::fmt::Display for GemmShape {
 /// A GEMM tagged with provenance for reporting.
 #[derive(Debug, Clone)]
 pub struct Gemm {
+    /// The GEMM dimensions.
     pub shape: GemmShape,
+    /// Which training phase produced it.
     pub phase: Phase,
     /// Index of the originating layer in the model description.
     pub layer: usize,
@@ -100,6 +110,7 @@ pub struct Gemm {
 }
 
 impl Gemm {
+    /// Tag a shape with its provenance.
     pub fn new(shape: GemmShape, phase: Phase, layer: usize, name: impl Into<String>) -> Self {
         Self { shape, phase, layer, name: name.into() }
     }

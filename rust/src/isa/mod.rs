@@ -28,6 +28,7 @@ pub enum Mode {
 }
 
 impl Mode {
+    /// The four FlexSA modes in FW/VSW/HSW/ISW (Fig 8) order.
     pub const FLEXSA_MODES: [Mode; 4] = [Mode::Fw, Mode::Vsw, Mode::Hsw, Mode::Isw];
 
     /// Dense index (for fixed-size counters on the simulator hot path).
@@ -47,6 +48,7 @@ impl Mode {
         [Mode::Fw, Mode::Vsw, Mode::Hsw, Mode::Isw, Mode::Mono][i]
     }
 
+    /// Canonical uppercase name, as used in instruction traces.
     pub fn name(&self) -> &'static str {
         match self {
             Mode::Fw => "FW",
@@ -72,6 +74,7 @@ impl Mode {
         matches!(self, Mode::Fw | Mode::Vsw | Mode::Hsw)
     }
 
+    /// Parse a [`Mode::name`] string back; `None` if unrecognized.
     pub fn parse(s: &str) -> Option<Mode> {
         Some(match s {
             "FW" => Mode::Fw,
@@ -106,6 +109,7 @@ pub enum Buf {
 }
 
 impl Buf {
+    /// Canonical name, as used in instruction traces.
     pub fn name(&self) -> &'static str {
         match self {
             Buf::Gbuf => "GBUF",
@@ -145,6 +149,7 @@ pub enum Inst {
 }
 
 impl Inst {
+    /// The target unit of this instruction within its group.
     pub fn unit(&self) -> usize {
         match self {
             Inst::LdLbufV { unit, .. }

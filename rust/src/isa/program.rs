@@ -6,6 +6,7 @@ use super::{Inst, Mode};
 /// figure harnesses consume (mode breakdown, MAC counts).
 #[derive(Debug, Clone, Default)]
 pub struct Program {
+    /// The instruction stream, in issue order.
     pub insts: Vec<Inst>,
 }
 
@@ -16,9 +17,13 @@ pub struct ProgramStats {
     pub waves_by_mode: std::collections::BTreeMap<Mode, u64>,
     /// Total useful MACs.
     pub macs: u64,
+    /// `LdLBUF_V` (stationary load) count.
     pub loads_v: u64,
+    /// `LdLBUF_H` (horizontal-stream load) count.
     pub loads_h: u64,
+    /// `StLBUF` (output store) count.
     pub stores: u64,
+    /// `sync` barrier count.
     pub syncs: u64,
 }
 
@@ -52,18 +57,22 @@ impl ProgramStats {
 }
 
 impl Program {
+    /// Empty program.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Append one instruction.
     pub fn push(&mut self, inst: Inst) {
         self.insts.push(inst);
     }
 
+    /// Instruction count.
     pub fn len(&self) -> usize {
         self.insts.len()
     }
 
+    /// Is the program empty?
     pub fn is_empty(&self) -> bool {
         self.insts.is_empty()
     }

@@ -21,6 +21,8 @@
 //! See `DESIGN.md` for the experiment index and modeling decisions, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
 
+#![warn(missing_docs)]
+
 pub mod area;
 pub mod bench_harness;
 pub mod cli;

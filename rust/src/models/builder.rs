@@ -182,6 +182,7 @@ impl ModelBuilder {
         self
     }
 
+    /// Finalize and validate the model.
     pub fn build(self) -> Model {
         let m = Model {
             name: self.name,

@@ -75,18 +75,22 @@ fn resnet_basic(name: &str, blocks: [usize; 4]) -> Model {
     b.build()
 }
 
+/// ResNet18 (basic blocks 2-2-2-2).
 pub fn resnet18() -> Model {
     resnet_basic("resnet18", [2, 2, 2, 2])
 }
 
+/// ResNet34 (basic blocks 3-4-6-3).
 pub fn resnet34() -> Model {
     resnet_basic("resnet34", [3, 4, 6, 3])
 }
 
+/// ResNet101 (bottleneck blocks 3-4-23-3).
 pub fn resnet101() -> Model {
     resnet_bottleneck("resnet101", [3, 4, 23, 3])
 }
 
+/// ResNet152 (bottleneck blocks 3-8-36-3).
 pub fn resnet152() -> Model {
     resnet_bottleneck("resnet152", [3, 8, 36, 3])
 }

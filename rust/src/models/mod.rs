@@ -60,6 +60,7 @@ impl ChRef {
 /// A prunable channel group (one regularization group in PruneTrain terms).
 #[derive(Debug, Clone)]
 pub struct PruneGroup {
+    /// Group label (layer-derived, e.g. `res3a_2b`).
     pub name: String,
     /// Unpruned channel count.
     pub base: usize,
@@ -97,18 +98,26 @@ pub enum LayerKind {
 /// Category of SIMD (non-GEMM) work, for the energy/time breakdown.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SimdKind {
+    /// Batch normalization (fused with the following activation).
     BatchNorm,
+    /// ReLU / other elementwise activation.
     Relu,
+    /// Residual element-wise addition.
     Add,
+    /// Max / average pooling.
     Pool,
 }
 
 /// A layer: kind + symbolic channel shape + spatial dims.
 #[derive(Debug, Clone)]
 pub struct Layer {
+    /// Layer name (mirrors the reference model's naming).
     pub name: String,
+    /// Operator kind (conv / depthwise / fc / SIMD work).
     pub kind: LayerKind,
+    /// Symbolic input-channel count.
     pub in_ch: ChRef,
+    /// Symbolic output-channel count.
     pub out_ch: ChRef,
     /// Input spatial size (square feature maps throughout the zoo).
     pub in_hw: usize,
@@ -193,8 +202,11 @@ impl Layer {
 /// A whole network.
 #[derive(Debug, Clone)]
 pub struct Model {
+    /// Model name (zoo key, e.g. `resnet50`).
     pub name: String,
+    /// Flat layer list in execution order.
     pub layers: Vec<Layer>,
+    /// Prunable channel groups referenced by the layers.
     pub groups: Vec<PruneGroup>,
     /// Paper's mini-batch for this model (§VII): 32 for ResNet50 and
     /// Inception v4, 128 for MobileNet v2.

@@ -11,8 +11,11 @@ pub const DEFAULT_CASES: usize = 128;
 /// Configuration for a property run.
 #[derive(Debug, Clone, Copy)]
 pub struct Config {
+    /// Generated cases per property.
     pub cases: usize,
+    /// PRNG seed (printed on failure for reproduction).
     pub seed: u64,
+    /// Cap on shrinking iterations.
     pub max_shrink_steps: usize,
 }
 

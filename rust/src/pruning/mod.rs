@@ -34,6 +34,7 @@ pub enum Strength {
 }
 
 impl Strength {
+    /// Both strengths, low first (the paper evaluates both).
     pub const BOTH: [Strength; 2] = [Strength::Low, Strength::High];
 
     /// Final GEMM-FLOPs ratio vs the unpruned baseline (paper §III).
@@ -44,6 +45,7 @@ impl Strength {
         }
     }
 
+    /// Lowercase label (`low` / `high`).
     pub fn name(&self) -> &'static str {
         match self {
             Strength::Low => "low",
@@ -57,6 +59,7 @@ impl Strength {
 pub struct PrunePoint {
     /// Epoch at which these counts take effect.
     pub epoch: usize,
+    /// Surviving channels per prune group.
     pub counts: ChannelCounts,
     /// GEMM MACs relative to the unpruned baseline (at default batch).
     pub macs_ratio: f64,
@@ -65,9 +68,13 @@ pub struct PrunePoint {
 /// A full pruning-while-training trajectory for one model.
 #[derive(Debug, Clone)]
 pub struct PruneSchedule {
+    /// Name of the model the trajectory belongs to.
     pub model_name: String,
+    /// Total training epochs of the run.
     pub epochs: usize,
+    /// Epochs between pruning events.
     pub interval: usize,
+    /// Channel counts per pruning interval, epoch-ascending.
     pub points: Vec<PrunePoint>,
 }
 

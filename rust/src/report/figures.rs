@@ -16,13 +16,18 @@ use std::sync::Arc;
 
 /// A rendered figure: title, data table, free-form notes.
 pub struct FigureReport {
+    /// Paper figure/table id (e.g. `Fig10a`).
     pub id: String,
+    /// Human-readable title.
     pub title: String,
+    /// The measured rows.
     pub table: TextTable,
+    /// Paper-vs-measured annotations.
     pub notes: Vec<String>,
 }
 
 impl FigureReport {
+    /// Render the report (title + aligned table + notes) as text.
     pub fn render(&self) -> String {
         let mut s = format!("== {} — {} ==\n{}", self.id, self.title, self.table.render());
         for n in &self.notes {
@@ -36,6 +41,7 @@ impl FigureReport {
 /// (3 models × 2 schedules × Table-I configs × {ideal, hbm2}); shared by
 /// Fig 10–13 and the end-to-end analysis.
 pub struct EvalGrid {
+    /// The three paper workloads the grid covers.
     pub workloads: Vec<Workload>,
     /// Key: (model_idx, sched_idx, cfg_name, ideal).
     cells: HashMap<(usize, usize, &'static str, bool), TrajectoryAverage>,
@@ -79,6 +85,7 @@ impl EvalGrid {
         Self { workloads, cells }
     }
 
+    /// Look up one grid cell (panics if out of range).
     pub fn get(&self, model: usize, sched: usize, cfg: &'static str, ideal: bool) -> &TrajectoryAverage {
         &self.cells[&(model, sched, cfg, ideal)]
     }

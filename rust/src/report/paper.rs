@@ -17,6 +17,7 @@ pub struct Headline {
     pub area_overhead: f64,
 }
 
+/// The abstract's headline numbers.
 pub const HEADLINE: Headline = Headline {
     flexsa_vs_1g1c_speedup: 1.37,
     flexsa4_vs_1g1c_speedup: 1.47,
@@ -35,6 +36,7 @@ pub struct Fig3Expected {
     pub baseline_util: f64,
 }
 
+/// Fig 3 expectations.
 pub const FIG3: Fig3Expected =
     Fig3Expected { final_flops: [0.48, 0.25], avg_util: [0.69, 0.58], baseline_util: 0.83 };
 
@@ -54,8 +56,11 @@ pub const FIG6: [(&str, f64); 3] =
 
 /// §VIII (Fig 10a): ideal-DRAM PE utilization averaged over the three CNNs.
 pub struct Fig10Expected {
+    /// Ideal-DRAM PE utilization of 1G1C (three-CNN average).
     pub ideal_util_1g1c: f64,
+    /// Ideal-DRAM PE utilization of 1G1F.
     pub ideal_util_1g1f: f64,
+    /// Ideal-DRAM PE utilization of 4G1F.
     pub ideal_util_4g1f: f64,
     /// FlexSA ideal util within this of the matching naive-split config.
     pub flexsa_vs_split_gap: f64,
@@ -65,6 +70,7 @@ pub struct Fig10Expected {
     pub speedup_vs_split: [f64; 2],
 }
 
+/// Fig 10 expectations.
 pub const FIG10: Fig10Expected = Fig10Expected {
     ideal_util_1g1c: 0.44,
     ideal_util_1g1f: 0.66,
@@ -76,14 +82,19 @@ pub const FIG10: Fig10Expected = Fig10Expected {
 
 /// §VIII (Fig 11): GBUF→LBUF traffic normalized to 1G1C.
 pub struct Fig11Expected {
+    /// 1G4C traffic multiplier vs 1G1C.
     pub traffic_1g4c: f64,
+    /// 4G4C traffic multiplier vs 1G1C.
     pub traffic_4g4c: f64,
-    /// 1G1F saves vs 1G4C / vs 1G1C.
+    /// Fractional traffic saving of 1G1F vs 1G4C.
     pub flexsa_vs_1g4c_saving: f64,
+    /// Fractional traffic saving of 1G1F vs 1G1C.
     pub flexsa_vs_1g1c_saving: f64,
+    /// Fractional traffic saving of 4G1F vs 4G4C.
     pub flexsa4_vs_4g4c_saving: f64,
 }
 
+/// Fig 11 expectations.
 pub const FIG11: Fig11Expected = Fig11Expected {
     traffic_1g4c: 1.5,
     traffic_4g4c: 2.7,
@@ -95,9 +106,11 @@ pub const FIG11: Fig11Expected = Fig11Expected {
 /// §VIII (Fig 12): naive splits burn >20% more energy than FlexSA on
 /// ResNet50/Inception v4; FlexSA ≈ 1G1C.
 pub struct Fig12Expected {
+    /// Minimum energy increase of naive splits over FlexSA.
     pub split_vs_flexsa_min_increase: f64,
 }
 
+/// Fig 12 expectations.
 pub const FIG12: Fig12Expected = Fig12Expected { split_vs_flexsa_min_increase: 0.20 };
 
 /// §VIII (Fig 13): inter-core (FW+VSW+HSW) wave fraction.
@@ -110,6 +123,7 @@ pub struct Fig13Expected {
     pub isw_share: [f64; 2],
 }
 
+/// Fig 13 expectations.
 pub const FIG13: Fig13Expected = Fig13Expected {
     inter_core_1g1f: [0.94, 0.66],
     inter_core_4g1f: [0.99, 0.85],

@@ -8,10 +8,12 @@ pub struct TextTable {
 }
 
 impl TextTable {
+    /// New table with the given column headers.
     pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
         Self { header: header.into_iter().map(Into::into).collect(), rows: Vec::new() }
     }
 
+    /// Append a row; panics if the width does not match the header.
     pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
         let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
         assert_eq!(cells.len(), self.header.len(), "row width mismatch");

@@ -5,11 +5,17 @@
 /// Parsed metadata for the AOT model.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ModelMeta {
+    /// Training mini-batch the artifacts were lowered for.
     pub batch: usize,
+    /// Square input spatial size.
     pub input_hw: usize,
+    /// Input channels (3 for RGB).
     pub input_c: usize,
+    /// Classifier output classes.
     pub classes: usize,
+    /// Per-conv-layer strides.
     pub strides: Vec<usize>,
+    /// Per-conv-layer (unpruned) channel widths.
     pub channels: Vec<usize>,
     /// (name, shape) in the exact flat-signature order.
     pub params: Vec<(String, Vec<usize>)>,
@@ -18,6 +24,7 @@ pub struct ModelMeta {
 }
 
 impl ModelMeta {
+    /// Parse the `meta.txt` contract written by `python/compile/aot.py`.
     pub fn parse(text: &str) -> Result<ModelMeta, String> {
         let mut batch = 0;
         let mut input_hw = 0;

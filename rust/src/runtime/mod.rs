@@ -2,121 +2,143 @@
 //! from rust. Python is never on this path — `make artifacts` ran at build
 //! time.
 //!
-//! Interchange is HLO *text* (see `python/compile/aot.py` and
-//! /opt/xla-example): jax ≥ 0.5 emits HloModuleProtos with 64-bit
-//! instruction ids that xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids and round-trips cleanly.
+//! Interchange is HLO *text* (see `python/compile/aot.py` and DESIGN.md §6):
+//! jax ≥ 0.5 emits HloModuleProtos with 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids and
+//! round-trips cleanly.
+//!
+//! The PJRT-backed half of this module (`Runtime`, `LoadedModule`,
+//! `lit`) needs the `xla` + `anyhow` crates and an XLA installation, so
+//! it is gated behind the `pjrt` cargo feature (off by default — the
+//! offline vendor set cannot build it; see DESIGN.md §6). The artifact
+//! *metadata* contract ([`ModelMeta`]) and artifact discovery
+//! ([`artifacts_ready`]) are pure std and always available: the simulator
+//! can replay a measured channel trajectory without PJRT.
 
 mod meta;
 
 pub use meta::ModelMeta;
 
-use anyhow::{Context, Result};
-use std::path::{Path, PathBuf};
+use std::path::Path;
 
-/// A PJRT CPU client plus the artifact directory it loads from.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    artifacts: PathBuf,
+/// Do the AOT artifacts exist (i.e. has `make artifacts` run)?
+pub fn artifacts_ready(dir: impl AsRef<Path>) -> bool {
+    dir.as_ref().join("meta.txt").is_file()
+        && dir.as_ref().join("train_step.hlo.txt").is_file()
 }
 
-/// A compiled executable (one HLO artifact).
-pub struct LoadedModule {
-    exe: xla::PjRtLoadedExecutable,
-    pub name: String,
-}
+#[cfg(feature = "pjrt")]
+pub use pjrt::{lit, LoadedModule, Runtime};
 
-impl Runtime {
-    /// Create a CPU PJRT client rooted at an artifact directory.
-    pub fn cpu(artifacts: impl AsRef<Path>) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("PjRtClient::cpu")?;
-        Ok(Self { client, artifacts: artifacts.as_ref().to_path_buf() })
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use super::ModelMeta;
+    use anyhow::{Context, Result};
+    use std::path::{Path, PathBuf};
+
+    /// A PJRT CPU client plus the artifact directory it loads from.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        artifacts: PathBuf,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// A compiled executable (one HLO artifact).
+    pub struct LoadedModule {
+        exe: xla::PjRtLoadedExecutable,
+        /// Artifact name this module was loaded from (e.g. `train_step`).
+        pub name: String,
     }
 
-    /// Load `<artifacts>/<name>.hlo.txt` and compile it.
-    pub fn load(&self, name: &str) -> Result<LoadedModule> {
-        let path = self.artifacts.join(format!("{name}.hlo.txt"));
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("parse {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).with_context(|| format!("compile {name}"))?;
-        Ok(LoadedModule { exe, name: name.to_string() })
+    impl Runtime {
+        /// Create a CPU PJRT client rooted at an artifact directory.
+        pub fn cpu(artifacts: impl AsRef<Path>) -> Result<Self> {
+            let client = xla::PjRtClient::cpu().context("PjRtClient::cpu")?;
+            Ok(Self { client, artifacts: artifacts.as_ref().to_path_buf() })
+        }
+
+        /// PJRT platform name (e.g. `cpu`).
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load `<artifacts>/<name>.hlo.txt` and compile it.
+        pub fn load(&self, name: &str) -> Result<LoadedModule> {
+            let path = self.artifacts.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parse {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).with_context(|| format!("compile {name}"))?;
+            Ok(LoadedModule { exe, name: name.to_string() })
+        }
+
+        /// Parse the artifact metadata contract.
+        pub fn meta(&self) -> Result<ModelMeta> {
+            let path = self.artifacts.join("meta.txt");
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("read {}", path.display()))?;
+            ModelMeta::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+        }
+
     }
 
-    /// Parse the artifact metadata contract.
-    pub fn meta(&self) -> Result<ModelMeta> {
-        let path = self.artifacts.join("meta.txt");
-        let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("read {}", path.display()))?;
-        ModelMeta::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+    impl LoadedModule {
+        /// Execute with literal inputs; unwraps the (return_tuple=True)
+        /// result into its elements.
+        pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+            let result = self.exe.execute::<xla::Literal>(inputs)
+                .with_context(|| format!("execute {}", self.name))?;
+            let tuple = result[0][0]
+                .to_literal_sync()
+                .with_context(|| format!("fetch {} result", self.name))?;
+            tuple.to_tuple().with_context(|| format!("untuple {} result", self.name))
+        }
     }
 
-    /// Do the artifacts exist (i.e. has `make artifacts` run)?
-    pub fn artifacts_ready(dir: impl AsRef<Path>) -> bool {
-        dir.as_ref().join("meta.txt").is_file()
-            && dir.as_ref().join("train_step.hlo.txt").is_file()
-    }
-}
+    /// Helpers to build literals from rust vectors.
+    pub mod lit {
+        use anyhow::Result;
 
-impl LoadedModule {
-    /// Execute with literal inputs; unwraps the (return_tuple=True) result
-    /// into its elements.
-    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let result = self.exe.execute::<xla::Literal>(inputs)
-            .with_context(|| format!("execute {}", self.name))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .with_context(|| format!("fetch {} result", self.name))?;
-        tuple.to_tuple().with_context(|| format!("untuple {} result", self.name))
-    }
-}
+        /// f32 tensor literal with the given dims.
+        pub fn f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+            let n: usize = dims.iter().product();
+            anyhow::ensure!(n == data.len(), "literal size {} != dims {:?}", data.len(), dims);
+            let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            Ok(xla::Literal::vec1(data).reshape(&dims)?)
+        }
 
-/// Helpers to build literals from rust vectors.
-pub mod lit {
-    use anyhow::Result;
+        /// i32 tensor literal.
+        pub fn i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+            let n: usize = dims.iter().product();
+            anyhow::ensure!(n == data.len(), "literal size {} != dims {:?}", data.len(), dims);
+            let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            Ok(xla::Literal::vec1(data).reshape(&dims)?)
+        }
 
-    /// f32 tensor literal with the given dims.
-    pub fn f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
-        let n: usize = dims.iter().product();
-        anyhow::ensure!(n == data.len(), "literal size {} != dims {:?}", data.len(), dims);
-        let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-        Ok(xla::Literal::vec1(data).reshape(&dims)?)
-    }
+        /// f32 scalar literal.
+        pub fn scalar_f32(v: f32) -> xla::Literal {
+            xla::Literal::scalar(v)
+        }
 
-    /// i32 tensor literal.
-    pub fn i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
-        let n: usize = dims.iter().product();
-        anyhow::ensure!(n == data.len(), "literal size {} != dims {:?}", data.len(), dims);
-        let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-        Ok(xla::Literal::vec1(data).reshape(&dims)?)
-    }
-
-    /// f32 scalar literal.
-    pub fn scalar_f32(v: f32) -> xla::Literal {
-        xla::Literal::scalar(v)
-    }
-
-    /// Extract an f32 vector from a literal.
-    pub fn to_f32(l: &xla::Literal) -> Result<Vec<f32>> {
-        Ok(l.to_vec::<f32>()?)
+        /// Extract an f32 vector from a literal.
+        pub fn to_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+            Ok(l.to_vec::<f32>()?)
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     // PJRT integration tests live in rust/tests/runtime_integration.rs
-    // (they need built artifacts); here we only test path plumbing.
+    // (they need built artifacts and the `pjrt` feature); here we only
+    // test path plumbing.
     use super::*;
 
     #[test]
     fn artifacts_ready_detects_missing() {
-        assert!(!Runtime::artifacts_ready("/nonexistent/path"));
+        assert!(!artifacts_ready("/nonexistent/path"));
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_size_checked() {
         assert!(lit::f32(&[1.0, 2.0], &[3]).is_err());

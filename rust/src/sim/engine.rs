@@ -23,14 +23,17 @@ pub struct Traffic {
 }
 
 impl Traffic {
+    /// All on-chip bytes (GBUF→LBUF + OBUF→GBUF).
     pub fn onchip(&self) -> u64 {
         self.gbuf_to_lbuf + self.obuf_to_gbuf
     }
 
+    /// All DRAM bytes (reads + writes).
     pub fn dram(&self) -> u64 {
         self.dram_read + self.dram_write
     }
 
+    /// Accumulate another counter set into this one.
     pub fn add(&mut self, o: &Traffic) {
         self.gbuf_to_lbuf += o.gbuf_to_lbuf;
         self.obuf_to_gbuf += o.obuf_to_gbuf;
@@ -51,6 +54,7 @@ pub struct GemmSim {
     pub dram_cycles: f64,
     /// Useful MACs executed.
     pub busy_macs: u64,
+    /// Byte counters accumulated over the GEMM.
     pub traffic: Traffic,
     /// ExecGEMM issues per mode (for Fig 13).
     pub waves_by_mode: std::collections::BTreeMap<Mode, u64>,
@@ -91,14 +95,15 @@ struct UnitState {
 }
 
 /// Per-group instruction executor: consumes instructions (from a
-/// materialized [`Program`] or streamed straight out of the compiler) and
+/// materialized [`crate::isa::Program`] or streamed straight out of the
+/// compiler) and
 /// advances the unit timing machines and traffic counters.
 pub struct GroupExecutor {
     units: Vec<UnitState>,
     traffic: Traffic,
     busy_macs: u64,
     /// Wave counts indexed by [`Mode::index`] (BTreeMap was 10%+ of the
-    /// hot path; see EXPERIMENTS.md SEC Perf).
+    /// hot path; see EXPERIMENTS.md §Perf).
     waves: [u64; 5],
     bw: f64,
     opts: SimOptions,
@@ -106,6 +111,7 @@ pub struct GroupExecutor {
 }
 
 impl GroupExecutor {
+    /// Fresh executor for one group of `cfg`.
     pub fn new(cfg: &AcceleratorConfig, opts: SimOptions, k_partitioned: bool) -> Self {
         Self {
             units: vec![
@@ -230,7 +236,7 @@ pub fn simulate_gemm(cfg: &AcceleratorConfig, c: &CompiledGemm, opts: &SimOption
 
 /// Streaming compile+simulate: identical results to
 /// `simulate_gemm(compile_gemm(..))` without materializing the multi-
-/// million-instruction programs (the SEC Perf hot path).
+/// million-instruction programs (the §Perf hot path).
 pub fn simulate_gemm_shape(
     cfg: &AcceleratorConfig,
     shape: crate::gemm::GemmShape,

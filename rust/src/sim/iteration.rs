@@ -13,8 +13,11 @@ use std::collections::BTreeMap;
 /// SIMD-array (non-GEMM) work of an iteration.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct SimdSim {
+    /// SIMD-phase cycles (max of compute and memory time).
     pub cycles: f64,
+    /// Total SIMD FLOPs.
     pub flops: f64,
+    /// Total SIMD DRAM bytes.
     pub dram_bytes: f64,
 }
 
@@ -26,9 +29,13 @@ pub struct IterationSim {
     /// Cycles at 100% PE utilization (`MACs / total PEs`) — the paper's
     /// IDEAL bars in Fig 3.
     pub ideal_gemm_cycles: f64,
+    /// Useful MACs of the iteration.
     pub busy_macs: u64,
+    /// Byte counters accumulated over all GEMMs.
     pub traffic: Traffic,
+    /// Wave issues per FlexSA mode.
     pub waves_by_mode: BTreeMap<Mode, u64>,
+    /// The non-GEMM (SIMD-array) phase.
     pub simd: SimdSim,
 }
 

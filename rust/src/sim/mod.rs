@@ -1,6 +1,7 @@
 //! Instruction-level simulator.
 //!
-//! Executes compiled per-group [`Program`]s on the configured accelerator,
+//! Executes compiled per-group [`crate::isa::Program`]s on the configured
+//! accelerator,
 //! modeling:
 //!
 //! - per-unit double-buffered LBUF loads gated by the GBUF→LBUF bandwidth
@@ -14,7 +15,8 @@
 //!   waves of a job stream back-to-back behind shadow-loaded stationaries);
 //! - per-resource traffic counters (GBUF→LBUF, OBUF→GBUF, over-core,
 //!   DRAM) feeding the energy model;
-//! - a shared-DRAM bandwidth bound from the compiler's [`DramPlan`]s.
+//! - a shared-DRAM bandwidth bound from the compiler's
+//!   [`crate::compiler::DramPlan`]s.
 //!
 //! PE utilization here is the paper's metric: useful MACs over
 //! `total PEs × cycles`.
@@ -35,8 +37,11 @@ pub use engine::{simulate_gemm, simulate_gemm_shape, GemmSim, GroupExecutor, Tra
 /// (ablation for the ISA-decoupling claim).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RampMode {
+    /// One fill + one drain per GEMM (steady-state streaming; default).
     PerGemm,
+    /// A ramp at every OBUF turnover (tile job).
     PerJob,
+    /// A ramp on every wave issue (fully serialized strawman).
     PerIssue,
 }
 pub use iteration::{fused_total_cycles, simulate_iteration, simulate_model_epoch, IterationSim, SimdSim};

@@ -16,6 +16,7 @@ pub struct SynthData {
 }
 
 impl SynthData {
+    /// Build class prototypes for the model described by `meta`.
     pub fn new(meta: &ModelMeta, seed: u64) -> Self {
         let elems = meta.input_hw * meta.input_hw * meta.input_c;
         let mut rng = Lcg64::new(seed);

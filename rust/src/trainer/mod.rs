@@ -9,6 +9,11 @@
 //! instruction-level simulator to report the paper's headline metric (PE
 //! utilization / speedup of FlexSA vs a large monolithic core) on a real
 //! prune-while-train run. Python never executes here.
+//!
+//! The PJRT execution path (`run`) requires the `pjrt` cargo feature
+//! (see DESIGN.md §6); everything else in this module — the synthetic
+//! dataset, the pruner, parameter initialization — is pure std and always
+//! compiled, so its logic stays under test in offline builds.
 
 mod data;
 mod pruner;
@@ -17,23 +22,23 @@ pub use data::SynthData;
 pub use pruner::{ChannelMask, Pruner};
 
 use crate::cli::Args;
-use crate::config::preset;
-use crate::models::ChannelCounts;
-use crate::pruning::{PrunePoint, PruneSchedule};
-use crate::runtime::{lit, ModelMeta, Runtime};
-use crate::sim::{simulate_model_epoch, SimOptions};
-use anyhow::{Context, Result};
+use crate::pruning::PruneSchedule;
+use crate::runtime::ModelMeta;
 
 /// Trainer configuration (CLI-driven).
 #[derive(Debug, Clone)]
 pub struct TrainerConfig {
+    /// Directory holding the AOT artifacts (`make artifacts` output).
     pub artifacts: String,
+    /// Number of SGD steps to run.
     pub steps: usize,
+    /// SGD learning rate.
     pub lr: f32,
     /// Steps between pruning events.
     pub prune_interval: usize,
     /// Channels with norm below `threshold × median(norms)` are pruned.
     pub threshold: f32,
+    /// PRNG seed for init + synthetic data.
     pub seed: u64,
     /// Where to write the trace/loss outputs (None = skip).
     pub out_dir: Option<String>,
@@ -55,7 +60,9 @@ impl Default for TrainerConfig {
 
 /// Results of an end-to-end run.
 pub struct TrainOutcome {
+    /// Per-step training loss.
     pub losses: Vec<f32>,
+    /// The measured channel trajectory.
     pub schedule: PruneSchedule,
     /// (config name, trajectory-average PE utilization, avg cycles/iter).
     pub sim_results: Vec<(String, f64, f64)>,
@@ -76,15 +83,38 @@ pub fn run_from_args(args: &Args) -> Result<(), String> {
     if let Some(o) = args.get("out") {
         cfg.out_dir = Some(o.to_string());
     }
-    let outcome = run(&cfg).map_err(|e| format!("{e:#}"))?;
+    dispatch(&cfg)
+}
+
+#[cfg(feature = "pjrt")]
+fn dispatch(cfg: &TrainerConfig) -> Result<(), String> {
+    let outcome = run(cfg).map_err(|e| format!("{e:#}"))?;
     println!("\nfinal loss: {:.4}", outcome.losses.last().copied().unwrap_or(f32::NAN));
     Ok(())
 }
 
-/// Run the full end-to-end driver.
-pub fn run(cfg: &TrainerConfig) -> Result<TrainOutcome> {
+#[cfg(not(feature = "pjrt"))]
+fn dispatch(cfg: &TrainerConfig) -> Result<(), String> {
+    let _ = cfg;
+    Err("the end-to-end trainer executes AOT artifacts through PJRT, which \
+         requires building with `--features pjrt` (plus the xla/anyhow \
+         dependencies — see DESIGN.md §6). The simulator-only pipeline \
+         (`flexsa report`, `flexsa simulate`, …) does not need it."
+        .into())
+}
+
+/// Run the full end-to-end driver (PJRT build only).
+#[cfg(feature = "pjrt")]
+pub fn run(cfg: &TrainerConfig) -> anyhow::Result<TrainOutcome> {
+    use crate::config::preset;
+    use crate::models::ChannelCounts;
+    use crate::pruning::PrunePoint;
+    use crate::runtime::{lit, Runtime};
+    use crate::sim::{simulate_model_epoch, SimOptions};
+    use anyhow::Context;
+
     anyhow::ensure!(
-        Runtime::artifacts_ready(&cfg.artifacts),
+        crate::runtime::artifacts_ready(&cfg.artifacts),
         "artifacts missing in `{}` — run `make artifacts` first",
         cfg.artifacts
     );
@@ -150,7 +180,7 @@ pub fn run(cfg: &TrainerConfig) -> Result<TrainOutcome> {
                 .iter()
                 .enumerate()
                 .map(|(i, p)| lit::f32(p, &meta.params[i].1))
-                .collect::<Result<_>>()?;
+                .collect::<anyhow::Result<_>>()?;
             let norms = lit::to_f32(&norms_fn.run(&norm_inputs)?[0])?;
             let newly = pruner.update(&meta, &norms);
             pruner.apply_mask(&meta, &mut state, &mut momentum);
@@ -231,7 +261,7 @@ pub fn run(cfg: &TrainerConfig) -> Result<TrainOutcome> {
 
 /// He-initialized parameters (matches the python init scheme; exact values
 /// differ, which is fine — the run is self-contained).
-fn init_state(meta: &ModelMeta, seed: u64) -> Vec<Vec<f32>> {
+pub fn init_state(meta: &ModelMeta, seed: u64) -> Vec<Vec<f32>> {
     let mut rng = crate::util::Lcg64::new(seed);
     meta.params
         .iter()
@@ -274,5 +304,18 @@ mod tests {
         let c = TrainerConfig::default();
         assert!(c.steps >= c.prune_interval);
         assert!(c.threshold > 0.0 && c.threshold < 1.0);
+    }
+
+    #[test]
+    fn run_from_args_without_pjrt_reports_feature() {
+        // In offline (default-feature) builds the trainer must fail with
+        // an actionable message, not a panic or a silent no-op.
+        if cfg!(feature = "pjrt") {
+            return;
+        }
+        let args =
+            Args::parse(["train".to_string(), "--steps".to_string(), "10".to_string()]).unwrap();
+        let e = run_from_args(&args).unwrap_err();
+        assert!(e.contains("pjrt"), "{e}");
     }
 }

@@ -25,6 +25,7 @@ pub struct Pruner {
 }
 
 impl Pruner {
+    /// All channels alive; prune at `threshold × median(live norms)`.
     pub fn new(meta: &ModelMeta, threshold: f32) -> Self {
         let alive = meta.channels.iter().map(|&c| vec![true; c]).collect();
         Self { mask: ChannelMask { alive }, threshold, min_channels: 4 }

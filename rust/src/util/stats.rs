@@ -12,6 +12,7 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// Empty accumulator.
     pub fn new() -> Self {
         Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
     }
@@ -26,10 +27,12 @@ impl Summary {
         self.max = self.max.max(x);
     }
 
+    /// Number of observations.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Arithmetic mean (NaN when empty).
     pub fn mean(&self) -> f64 {
         if self.n == 0 { f64::NAN } else { self.mean }
     }
@@ -39,10 +42,12 @@ impl Summary {
         if self.n < 2 { 0.0 } else { (self.m2 / (self.n - 1) as f64).sqrt() }
     }
 
+    /// Smallest observation.
     pub fn min(&self) -> f64 {
         self.min
     }
 
+    /// Largest observation.
     pub fn max(&self) -> f64 {
         self.max
     }
@@ -70,16 +75,20 @@ impl Summary {
 /// Weighted average helper: accumulates `value × weight` pairs.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Weighted {
+    /// Accumulated `value × weight`.
     pub num: f64,
+    /// Accumulated weight.
     pub den: f64,
 }
 
 impl Weighted {
+    /// Add one weighted observation.
     pub fn add(&mut self, value: f64, weight: f64) {
         self.num += value * weight;
         self.den += weight;
     }
 
+    /// The weighted average (NaN when no weight accumulated).
     pub fn value(&self) -> f64 {
         if self.den == 0.0 { f64::NAN } else { self.num / self.den }
     }

@@ -33,7 +33,7 @@ fn trajectory_util(cfg_name: &str, strength: Strength) -> f64 {
 
 #[test]
 fn pruning_degrades_monolithic_utilization() {
-    // Paper SEC III: utilization falls as pruning proceeds on 1G1C.
+    // Paper §III: utilization falls as pruning proceeds on 1G1C.
     let model = resnet50();
     let sched = prunetrain_schedule(&model, Strength::High, 90, 10, 42);
     let cfg = preset("1G1C").unwrap();

@@ -165,7 +165,7 @@ fn determinism_across_repeats() {
 
 #[test]
 fn streaming_sim_equals_materialized() {
-    // The SEC-Perf streaming path must be bit-identical to compiling a
+    // The §Perf streaming path must be bit-identical to compiling a
     // Program and simulating it.
     use flexsa::sim::simulate_gemm_shape;
     forall(

@@ -3,13 +3,17 @@
 //! a rust-side reference — the L1/L2 → L3 composition proof.
 //!
 //! Tests are skipped (not failed) when artifacts are absent so `cargo
-//! test` works on a fresh checkout.
+//! test` works on a fresh checkout, and the whole file is gated on the
+//! `pjrt` feature (default builds have no PJRT/xla dependency at all —
+//! see DESIGN.md §6).
 
-use flexsa::runtime::{lit, Runtime};
+#![cfg(feature = "pjrt")]
+
+use flexsa::runtime::{artifacts_ready, lit, Runtime};
 use flexsa::util::Lcg64;
 
 fn runtime() -> Option<Runtime> {
-    if !Runtime::artifacts_ready("../artifacts") {
+    if !artifacts_ready("../artifacts") {
         eprintln!("skipping: artifacts not built (run `make artifacts`)");
         return None;
     }
