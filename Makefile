@@ -1,7 +1,7 @@
 # Convenience targets. The rust build needs no artifacts; `artifacts` is
 # only for the optional PJRT end-to-end path (DESIGN.md §6).
 
-.PHONY: artifacts test rust-test py-test
+.PHONY: artifacts test rust-test py-test bench-smoke
 
 # AOT-lower the L2 model + L1 kernel to HLO text (python runs once, at
 # build time; see python/compile/aot.py).
@@ -14,5 +14,10 @@ rust-test:
 
 py-test:
 	cd python && python -m pytest tests -q
+
+# Run every bench once (1-iteration smoke profile) so bench bitrot is
+# caught on every PR without paying for stable timings.
+bench-smoke:
+	cd rust && FLEXSA_BENCH_SMOKE=1 cargo bench
 
 test: rust-test py-test

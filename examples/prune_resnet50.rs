@@ -9,6 +9,7 @@ use flexsa::config::preset;
 use flexsa::models::resnet50;
 use flexsa::pruning::{prunetrain_schedule, Strength};
 use flexsa::report::TextTable;
+use flexsa::session::SimSession;
 use flexsa::sim::{simulate_model_epoch, SimOptions};
 use flexsa::util::fmt;
 
@@ -40,9 +41,10 @@ fn main() {
     ]);
     let mut base_mono = None;
     let mut totals = (0.0f64, 0.0f64);
+    let session = SimSession::new();
     for p in &sched.points {
-        let sm = simulate_model_epoch(&mono, &model, &p.counts, &opts);
-        let sf = simulate_model_epoch(&flex, &model, &p.counts, &opts);
+        let sm = simulate_model_epoch(&mono, &model, &p.counts, &opts, &session);
+        let sf = simulate_model_epoch(&flex, &model, &p.counts, &opts, &session);
         let b = *base_mono.get_or_insert(sm.gemm_cycles);
         totals.0 += sm.gemm_cycles;
         totals.1 += sf.gemm_cycles;

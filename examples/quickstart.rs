@@ -15,6 +15,7 @@ use flexsa::compiler::compile_gemm;
 use flexsa::config::preset;
 use flexsa::energy::{iteration_energy, EnergyModel};
 use flexsa::gemm::{GemmShape, Phase};
+use flexsa::session::SimSession;
 use flexsa::sim::{simulate_gemm, simulate_iteration, SimOptions};
 use flexsa::util::fmt;
 
@@ -53,7 +54,7 @@ fn main() {
     // Energy for a whole (tiny) iteration of this one layer:
     let gemms =
         vec![flexsa::gemm::Gemm::new(shape, Phase::Forward, 0, "pruned_conv".to_string())];
-    let it = simulate_iteration(&flex, &gemms, &SimOptions::hbm2());
+    let it = simulate_iteration(&flex, &gemms, &SimOptions::hbm2(), &SimSession::new());
     let e = iteration_energy(&flex, &EnergyModel::default(), &it);
     println!("\nenergy on {}: {:.3} mJ (COMP {:.3}, GBUF {:.3}, DRAM {:.3})",
         flex.name, e.total_mj(), e.comp_mj, e.gbuf_mj, e.dram_mj);

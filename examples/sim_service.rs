@@ -53,10 +53,12 @@ fn main() {
     let stats = svc.shutdown();
 
     println!(
-        "\nanswered in {} ({} batches, {} full)",
+        "\nanswered in {} ({} batches, {} full; cache {} hits / {} misses)",
         flexsa::util::fmt::seconds(wall.as_secs_f64()),
         stats.batches,
-        stats.full_batches
+        stats.full_batches,
+        stats.cache_hits,
+        stats.cache_misses
     );
     for (ci, cfg) in configs.iter().enumerate() {
         let util = busy[ci] as f64 / (cfg.total_pes() as f64 * cycles[ci]);

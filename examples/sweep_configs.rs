@@ -11,6 +11,7 @@ use flexsa::coordinator::{aggregate, point_weights, run_sweep, SweepJob};
 use flexsa::models::by_name;
 use flexsa::pruning::{prunetrain_schedule, Strength};
 use flexsa::report::TextTable;
+use flexsa::session::SimSession;
 use flexsa::sim::SimOptions;
 use flexsa::util::fmt;
 use std::sync::Arc;
@@ -51,6 +52,9 @@ fn main() {
     let mut t = TextTable::new(vec![
         "config", "PE util", "cycles/iter", "gbuf->lbuf/iter", "dram/iter", "ms/iter",
     ]);
+    // One session for the whole sweep: trajectory points share unpruned
+    // layers and each iteration repeats block shapes.
+    let session = SimSession::new();
     for name in &args {
         let cfg = Arc::new(load(name));
         let jobs: Vec<SweepJob> = sched
@@ -65,7 +69,7 @@ fn main() {
                 opts: SimOptions::hbm2(),
             })
             .collect();
-        let results = run_sweep(jobs, threads);
+        let results = run_sweep(jobs, threads, &session);
         let refs: Vec<_> = results.iter().collect();
         let a = aggregate(&refs);
         t.row(vec![
@@ -78,4 +82,5 @@ fn main() {
         ]);
     }
     println!("{}", t.render());
+    println!("sim cache: {}", session.stats().summary());
 }

@@ -1,20 +1,24 @@
 //! Bench + regeneration of paper Fig 3: ResNet50 prune-while-train
 //! timeline on 1G1C (both strengths). Prints the figure rows and times the
-//! full pipeline (schedule generation + 10 iteration simulations).
+//! full pipeline (schedule generation + 10 iteration simulations) through
+//! one shared session, figure-harness style.
 
 use flexsa::bench_harness::Bencher;
 use flexsa::pruning::Strength;
 use flexsa::report::figures;
+use flexsa::session::SimSession;
 
 fn main() {
     let threads = flexsa::coordinator::default_threads();
+    let session = SimSession::new();
     for strength in Strength::BOTH {
-        let r = Bencher::quick().run(&format!("fig3/{}", strength.name()), || {
-            figures::fig3(strength, threads)
+        let r = Bencher::auto_quick().run(&format!("fig3/{}", strength.name()), || {
+            figures::fig3(strength, threads, &session)
         });
         println!("{}", r.report());
     }
     println!();
-    println!("{}", figures::fig3(Strength::Low, threads).render());
-    println!("{}", figures::fig3(Strength::High, threads).render());
+    println!("{}", figures::fig3(Strength::Low, threads, &session).render());
+    println!("{}", figures::fig3(Strength::High, threads, &session).render());
+    println!("sim cache: {}", session.stats().summary());
 }

@@ -3,11 +3,14 @@
 
 use flexsa::bench_harness::Bencher;
 use flexsa::report::figures;
+use flexsa::session::SimSession;
 
 fn main() {
     let threads = flexsa::coordinator::default_threads();
-    let r = Bencher::quick().run("fig5/core_sweep", || figures::fig5(threads));
+    let session = SimSession::new();
+    let r = Bencher::auto_quick().run("fig5/core_sweep", || figures::fig5(threads, &session));
     println!("{}", r.report());
     println!();
-    println!("{}", figures::fig5(threads).render());
+    println!("{}", figures::fig5(threads, &session).render());
+    println!("sim cache: {}", session.stats().summary());
 }

@@ -5,7 +5,7 @@ use flexsa::bench_harness::Bencher;
 use flexsa::report::figures;
 
 fn main() {
-    let r = Bencher::default().run("fig6/area_model", figures::fig6);
+    let r = Bencher::auto().run("fig6/area_model", figures::fig6);
     println!("{}", r.report());
     println!();
     println!("{}", figures::fig6().render());

@@ -2,19 +2,23 @@
 //! b: HBM2 utilization + speedups) over the full evaluation grid
 //! (3 models x 2 schedules x 5 configs x 10 trajectory points).
 
-use flexsa::bench_harness::{black_box, Bencher};
+use flexsa::bench_harness::{black_box, Bencher, SMOKE_ENV};
 use flexsa::report::figures::{self, EvalGrid};
+use flexsa::session::SimSession;
 use std::time::Instant;
 
 fn main() {
     let threads = flexsa::coordinator::default_threads();
+    let session = SimSession::new();
     let t0 = Instant::now();
-    let grid = EvalGrid::compute(threads);
+    let grid = EvalGrid::compute_auto(threads, &session);
     println!(
-        "grid/compute {:>37}   (600 iteration sims, {threads} threads)",
-        flexsa::util::fmt::seconds(t0.elapsed().as_secs_f64())
+        "grid/compute {:>37}   ({}, {threads} threads)",
+        flexsa::util::fmt::seconds(t0.elapsed().as_secs_f64()),
+        if std::env::var_os(SMOKE_ENV).is_some() { "smoke grid" } else { "600 iteration sims" }
     );
-    let r = Bencher::default().run("fig10/extract", || {
+    println!("grid sim cache: {}", session.stats().summary());
+    let r = Bencher::auto().run("fig10/extract", || {
         black_box((figures::fig10(&grid, true), figures::fig10(&grid, false)))
     });
     println!("{}", r.report());

@@ -3,11 +3,14 @@
 
 use flexsa::bench_harness::{black_box, Bencher};
 use flexsa::report::figures::{self, EvalGrid};
+use flexsa::session::SimSession;
 
 fn main() {
     let threads = flexsa::coordinator::default_threads();
-    let grid = EvalGrid::compute(threads);
-    let r = Bencher::default().run("fig11/extract", || black_box(figures::fig11(&grid)));
+    let session = SimSession::new();
+    let grid = EvalGrid::compute_auto(threads, &session);
+    println!("grid sim cache: {}", session.stats().summary());
+    let r = Bencher::auto().run("fig11/extract", || black_box(figures::fig11(&grid)));
     println!("{}", r.report());
     println!();
     println!("{}", figures::fig11(&grid).render());

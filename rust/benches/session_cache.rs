@@ -1,0 +1,82 @@
+//! Session-cache benchmark: the repeated-trajectory figure-grid workload
+//! (EXPERIMENTS.md §Perf). A pruning trajectory is replayed epoch by epoch
+//! — between pruning events every epoch re-simulates identical GEMMs, and
+//! within one iteration ResNet50's repeated residual blocks re-simulate
+//! identical shapes — with the [`SimSession`] cache off vs on. The cached
+//! replay must beat the uncached one by >= 2x; the hit rate is printed for
+//! the EXPERIMENTS.md §Perf table.
+
+use flexsa::bench_harness::{black_box, Bencher};
+use flexsa::config::preset;
+use flexsa::gemm::Gemm;
+use flexsa::models::resnet50;
+use flexsa::pruning::{prunetrain_schedule, Strength};
+use flexsa::session::SimSession;
+use flexsa::sim::{simulate_iteration, SimOptions};
+
+fn main() {
+    let b = Bencher::auto_quick();
+    let model = resnet50();
+    let epochs = 12usize;
+    let interval = 3usize;
+    let sched = prunetrain_schedule(&model, Strength::Low, epochs, interval, 42);
+    let cfg = preset("1G1F").unwrap();
+    let opts = SimOptions::hbm2();
+    let batch = 8;
+
+    // The GEMM list in effect at each epoch (channel counts change only at
+    // pruning events, so consecutive epochs repeat the same shapes).
+    let per_epoch: Vec<Vec<Gemm>> = (0..epochs)
+        .map(|e| {
+            let p = sched
+                .points
+                .iter()
+                .rev()
+                .find(|p| p.epoch <= e)
+                .unwrap_or(&sched.points[0]);
+            model.gemms(batch, &p.counts)
+        })
+        .collect();
+    let total_gemms: usize = per_epoch.iter().map(|g| g.len()).sum();
+    println!(
+        "workload: resnet50 x {epochs} epochs (prune interval {interval}), \
+         {total_gemms} GEMM sims per replay on {}\n",
+        cfg.name
+    );
+
+    let replay = |session: &SimSession| {
+        let mut cycles = 0.0f64;
+        for gemms in &per_epoch {
+            cycles += simulate_iteration(&cfg, gemms, &opts, session).gemm_cycles;
+        }
+        cycles
+    };
+
+    let cold = b.run("trajectory_replay/uncached", || {
+        black_box(replay(&SimSession::disabled()))
+    });
+    println!("{}", cold.report_throughput(total_gemms as f64, "gemms"));
+
+    // Fresh session per replay: the figure-harness shape (dedup within one
+    // harness run only).
+    let warm = b.run("trajectory_replay/cached", || {
+        black_box(replay(&SimSession::new()))
+    });
+    println!("{}", warm.report_throughput(total_gemms as f64, "gemms"));
+
+    // Persistent session across replays: the serving / trainer-replay
+    // shape (steady-state, everything hits).
+    let persistent = SimSession::new();
+    let hot = b.run("trajectory_replay/cached_persistent", || {
+        black_box(replay(&persistent))
+    });
+    println!("{}", hot.report_throughput(total_gemms as f64, "gemms"));
+
+    // Hit rate of a single cached replay, measured on its own session.
+    let fresh = SimSession::new();
+    black_box(replay(&fresh));
+    let stats = fresh.stats();
+    let speedup = cold.mean.as_secs_f64() / warm.mean.as_secs_f64();
+    println!("\nper-replay cache: {}", stats.summary());
+    println!("speedup cached vs uncached: {speedup:.2}x (acceptance target: >= 2x)");
+}

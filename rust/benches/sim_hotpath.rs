@@ -1,20 +1,22 @@
 //! Hot-path microbenchmarks: the compile+simulate pipeline per GEMM and
 //! per whole-model iteration — the simulator throughput targets of
-//! EXPERIMENTS.md §Perf.
+//! EXPERIMENTS.md §Perf — plus the session-cache hit path layered on top.
 
 use flexsa::bench_harness::{black_box, Bencher};
 use flexsa::compiler::compile_gemm;
 use flexsa::config::preset;
 use flexsa::gemm::{GemmShape, Phase};
 use flexsa::models::{resnet50, ChannelCounts};
+use flexsa::session::SimSession;
 use flexsa::sim::{simulate_gemm, simulate_gemm_shape, simulate_model_epoch, SimOptions};
 
 fn main() {
-    let b = Bencher::default();
+    let b = Bencher::auto();
     let opts = SimOptions::hbm2();
 
     // Single-GEMM pipeline on all Table-I configs: materialized programs
-    // vs the streaming compile+simulate hot path (§Perf).
+    // vs the streaming compile+simulate hot path (§Perf), vs a session-
+    // cache hit (pure fingerprint + lookup cost).
     for name in ["1G1C", "1G4C", "4G4C", "1G1F", "4G1F"] {
         let cfg = preset(name).unwrap();
         let shape = GemmShape::new(100_352, 256, 1152); // resnet50-scale fwd
@@ -30,16 +32,33 @@ fn main() {
             black_box(simulate_gemm_shape(&cfg, shape, Phase::Forward, &opts).cycles)
         });
         println!("{}", r.report_throughput(waves as f64, "waves"));
+        let session = SimSession::new();
+        let cfg_fp = cfg.fingerprint();
+        session.simulate(&cfg, shape, Phase::Forward, &opts); // warm the key
+        let r = b.run(&format!("gemm_sim_session_hit/{name}"), || {
+            black_box(
+                session.simulate_keyed(cfg_fp, &cfg, shape, Phase::Forward, &opts).cycles,
+            )
+        });
+        println!("{}", r.report_throughput(waves as f64, "waves"));
     }
 
-    // Whole-iteration simulation (161 GEMMs of ResNet50 at batch 32).
+    // Whole-iteration simulation (161 GEMMs of ResNet50 at batch 32),
+    // uncached (a disabled session is a pass-through) vs steady-state
+    // cached.
     let model = resnet50();
     let counts = ChannelCounts::baseline(&model);
     for name in ["1G1C", "1G1F"] {
         let cfg = preset(name).unwrap();
         let n_gemms = model.gemms(model.default_batch, &counts).len();
+        let cold = SimSession::disabled();
         let r = b.run(&format!("iter_sim/resnet50/{name}"), || {
-            black_box(simulate_model_epoch(&cfg, &model, &counts, &opts).gemm_cycles)
+            black_box(simulate_model_epoch(&cfg, &model, &counts, &opts, &cold).gemm_cycles)
+        });
+        println!("{}", r.report_throughput(n_gemms as f64, "gemms"));
+        let session = SimSession::new();
+        let r = b.run(&format!("iter_sim_cached/resnet50/{name}"), || {
+            black_box(simulate_model_epoch(&cfg, &model, &counts, &opts, &session).gemm_cycles)
         });
         println!("{}", r.report_throughput(n_gemms as f64, "gemms"));
     }

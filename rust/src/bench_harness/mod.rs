@@ -69,10 +69,41 @@ impl Default for Bencher {
     }
 }
 
+/// When this environment variable is set, [`Bencher::auto`] and
+/// [`Bencher::auto_quick`] run the 1-iteration smoke profile instead of a
+/// real measurement — `make bench-smoke` / CI use it to catch bench bitrot
+/// without paying for stable timings.
+pub const SMOKE_ENV: &str = "FLEXSA_BENCH_SMOKE";
+
 impl Bencher {
     /// Quick profile for expensive end-to-end benches.
     pub fn quick() -> Self {
         Self { warmup_iters: 1, min_iters: 3, min_time: Duration::from_millis(100), max_iters: 20 }
+    }
+
+    /// Single-iteration smoke profile (no warm-up, no minimum wall time):
+    /// proves the bench still runs, nothing more.
+    pub fn smoke() -> Self {
+        Self { warmup_iters: 0, min_iters: 1, min_time: Duration::ZERO, max_iters: 1 }
+    }
+
+    /// [`Bencher::default`], or [`Bencher::smoke`] when [`SMOKE_ENV`] is
+    /// set.
+    pub fn auto() -> Self {
+        if std::env::var_os(SMOKE_ENV).is_some() {
+            Self::smoke()
+        } else {
+            Self::default()
+        }
+    }
+
+    /// [`Bencher::quick`], or [`Bencher::smoke`] when [`SMOKE_ENV`] is set.
+    pub fn auto_quick() -> Self {
+        if std::env::var_os(SMOKE_ENV).is_some() {
+            Self::smoke()
+        } else {
+            Self::quick()
+        }
     }
 
     /// Run `f` repeatedly and collect timing statistics. The closure's
@@ -126,6 +157,14 @@ mod tests {
         assert!(r.report().contains("noop"));
         assert!(r.mean <= r.max);
         assert!(r.min <= r.mean);
+    }
+
+    #[test]
+    fn smoke_profile_runs_exactly_once() {
+        let mut calls = 0u64;
+        let r = Bencher::smoke().run("smoke", || calls += 1);
+        assert_eq!(r.iters, 1);
+        assert_eq!(calls, 1);
     }
 
     #[test]

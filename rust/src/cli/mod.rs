@@ -4,6 +4,11 @@
 
 use std::collections::HashMap;
 
+/// Flags that never take a value, so a following token stays positional
+/// (`flexsa simulate --no-cache 512 256 128` keeps three positionals).
+/// Flags not listed here greedily consume the next non-`--` token.
+const BOOLEAN_FLAGS: &[&str] = &["ideal", "no-cache", "help"];
+
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
@@ -27,7 +32,9 @@ impl Args {
                 }
                 if let Some((k, v)) = name.split_once('=') {
                     out.flags.insert(k.to_string(), Some(v.to_string()));
-                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                } else if !BOOLEAN_FLAGS.contains(&name)
+                    && it.peek().map(|n| !n.starts_with("--")).unwrap_or(false)
+                {
                     out.flags.insert(name.to_string(), Some(it.next().unwrap()));
                 } else {
                     out.flags.insert(name.to_string(), None);
@@ -98,6 +105,18 @@ mod tests {
     #[test]
     fn flag_before_positional() {
         let a = parse("compile --config 1G1F 128 128 128");
+        assert_eq!(a.get("config"), Some("1G1F"));
+        assert_eq!(a.positional.len(), 3);
+    }
+
+    #[test]
+    fn boolean_flags_do_not_swallow_positionals() {
+        let a = parse("simulate --no-cache 512 256 128");
+        assert!(a.has("no-cache"));
+        assert_eq!(a.get("no-cache"), None);
+        assert_eq!(a.positional, vec!["512", "256", "128"]);
+        let a = parse("simulate 512 256 128 --ideal --config 1G1F");
+        assert!(a.has("ideal"));
         assert_eq!(a.get("config"), Some("1G1F"));
         assert_eq!(a.positional.len(), 3);
     }

@@ -179,6 +179,17 @@ impl AcceleratorConfig {
         Ok(())
     }
 
+    /// Stable 64-bit content digest: FNV-1a over the canonical
+    /// [`Self::to_config_text`] serialization. This is the config half of
+    /// the session-cache key (`SimSession::fingerprint_keyed` folds it with
+    /// the shape, phase, and option bits) — hashing the canonical text
+    /// sidesteps the `#[derive(Hash)]`-on-floats footgun while staying
+    /// sensitive to every field, float or not (DESIGN.md §10). Callers
+    /// looping over many GEMMs of one config compute it once.
+    pub fn fingerprint(&self) -> u64 {
+        crate::util::fnv64(self.to_config_text().as_bytes())
+    }
+
     /// Serialize to the `key = value` text format accepted by
     /// [`parse_config`] — the inverse used by config files, sweep tooling,
     /// and the preset round-trip tests.
@@ -284,6 +295,18 @@ mod tests {
         let mut c = preset("1G1C").unwrap();
         c.lbuf_stationary_elems = 10;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn fingerprint_stable_and_sensitive_to_floats() {
+        let a = preset("1G1C").unwrap();
+        assert_eq!(a.fingerprint(), preset("1G1C").unwrap().fingerprint());
+        let mut b = a.clone();
+        b.dram_gbps = 271.0;
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        let mut c = a.clone();
+        c.clock_ghz = 0.71;
+        assert_ne!(a.fingerprint(), c.fingerprint());
     }
 
     #[test]

@@ -15,6 +15,7 @@ pub use workloads::{paper_workloads, point_weights, ScheduleKind, Workload};
 
 use crate::config::AcceleratorConfig;
 use crate::models::{ChannelCounts, Model};
+use crate::session::SimSession;
 use crate::sim::{simulate_model_epoch, IterationSim, SimOptions};
 use std::sync::{Arc, Mutex};
 
@@ -42,8 +43,11 @@ pub struct JobResult {
 }
 
 /// Run all jobs across `threads` workers; results are returned in job
-/// order regardless of completion order.
-pub fn run_sweep(jobs: Vec<SweepJob>, threads: usize) -> Vec<JobResult> {
+/// order regardless of completion order. All workers share `session`, so
+/// identical `(config, shape, phase, options)` GEMMs recurring across
+/// sweep cells (pruning trajectories, repeated blocks, figure grids) are
+/// simulated once.
+pub fn run_sweep(jobs: Vec<SweepJob>, threads: usize, session: &SimSession) -> Vec<JobResult> {
     let threads = threads.max(1).min(jobs.len().max(1));
     let n = jobs.len();
     let jobs = Arc::new(jobs);
@@ -67,7 +71,8 @@ pub fn run_sweep(jobs: Vec<SweepJob>, threads: usize) -> Vec<JobResult> {
                     i
                 };
                 let job = jobs[i].clone();
-                let sim = simulate_model_epoch(&job.cfg, &job.model, &job.counts, &job.opts);
+                let sim =
+                    simulate_model_epoch(&job.cfg, &job.model, &job.counts, &job.opts, session);
                 results.lock().unwrap()[i] = Some(JobResult { job, sim });
             });
         }
@@ -174,8 +179,9 @@ mod tests {
                 opts: SimOptions::ideal(),
             })
             .collect();
-        let serial = simulate_model_epoch(&cfg, &model, &counts, &SimOptions::ideal());
-        let results = run_sweep(jobs, 4);
+        let serial =
+            simulate_model_epoch(&cfg, &model, &counts, &SimOptions::ideal(), &SimSession::new());
+        let results = run_sweep(jobs, 4, &SimSession::new());
         assert_eq!(results.len(), 4);
         for r in &results {
             assert_eq!(r.sim.busy_macs, serial.busy_macs);
@@ -195,7 +201,7 @@ mod tests {
             weight: w,
             opts: SimOptions::ideal(),
         };
-        let results = run_sweep(vec![mk(1.0), mk(3.0)], 2);
+        let results = run_sweep(vec![mk(1.0), mk(3.0)], 2, &SimSession::new());
         let refs: Vec<&JobResult> = results.iter().collect();
         let a = aggregate(&refs);
         assert!((a.weight_sum - 4.0).abs() < 1e-12);
@@ -206,7 +212,32 @@ mod tests {
 
     #[test]
     fn empty_sweep_is_fine() {
-        let results = run_sweep(vec![], 8);
+        let results = run_sweep(vec![], 8, &SimSession::new());
         assert!(results.is_empty());
+    }
+
+    #[test]
+    fn shared_session_dedups_identical_jobs() {
+        let cfg = Arc::new(preset("1G1C").unwrap());
+        let model = Arc::new(resnet50());
+        let counts = ChannelCounts::baseline(&model);
+        let jobs: Vec<SweepJob> = (0..4)
+            .map(|_| SweepJob {
+                cfg: Arc::clone(&cfg),
+                model: Arc::clone(&model),
+                counts: counts.clone(),
+                weight: 1.0,
+                opts: SimOptions::ideal(),
+            })
+            .collect();
+        let session = SimSession::new();
+        let results = run_sweep(jobs, 2, &session);
+        assert_eq!(results.len(), 4);
+        let stats = session.stats();
+        // Four identical iterations: every distinct GEMM is inserted once;
+        // at least the three later iterations' lookups all hit (workers
+        // racing the very first iteration may duplicate a few computes).
+        assert!(stats.hits > stats.inserts, "{stats:?}");
+        assert_eq!(stats.entries, stats.inserts);
     }
 }

@@ -4,14 +4,19 @@
 //! Clients submit GEMM (or whole-model) simulation requests over a
 //! channel; the leader thread batches pending requests (dynamic batching
 //! with a size/latency threshold, vLLM-router style), routes each batch to
-//! the worker pool, and returns responses out of band. Deterministic: the
-//! same request always yields the same result regardless of batching.
+//! the worker pool, and returns responses out of band. All workers share
+//! one [`SimSession`], so repeated requests — the common case in
+//! design-space exploration, where the same pruned GEMM is probed on many
+//! configurations and epochs — are answered from the cache. Deterministic:
+//! the same request always yields the same (bit-identical) result
+//! regardless of batching or caching.
 
 use crate::config::AcceleratorConfig;
 use crate::gemm::{GemmShape, Phase};
-use crate::sim::{simulate_gemm_shape, GemmSim, SimOptions};
+use crate::session::SimSession;
+use crate::sim::{GemmSim, SimOptions};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -34,8 +39,8 @@ pub struct Request {
 pub struct Response {
     /// Id of the request this answers.
     pub id: u64,
-    /// The simulation result.
-    pub sim: GemmSim,
+    /// The simulation result (shared with the session cache).
+    pub sim: Arc<GemmSim>,
 }
 
 /// Batching policy.
@@ -59,6 +64,7 @@ pub struct SimService {
     rx: Receiver<Response>,
     next_id: AtomicU64,
     handle: Option<std::thread::JoinHandle<ServiceStats>>,
+    session: Arc<SimSession>,
 }
 
 /// Counters the leader reports at shutdown.
@@ -70,20 +76,50 @@ pub struct ServiceStats {
     pub batches: u64,
     /// Batches dispatched because they hit `max_batch` (vs timing out).
     pub full_batches: u64,
+    /// Responses that were computed but never received by the client
+    /// before shutdown (counted while draining; callers can use this to
+    /// detect dropped work).
+    pub drained: u64,
+    /// Session-cache hits at shutdown (whole-session counters: a session
+    /// shared with other components accumulates their lookups too).
+    pub cache_hits: u64,
+    /// Session-cache misses at shutdown.
+    pub cache_misses: u64,
+    /// Session-cache inserts at shutdown.
+    pub cache_inserts: u64,
 }
 
 impl SimService {
-    /// Start the leader + `workers` simulation threads.
+    /// Start the leader + `workers` simulation threads with a private
+    /// unbounded session cache.
     pub fn start(workers: usize, policy: BatchPolicy) -> SimService {
+        Self::start_with_session(workers, policy, SimSession::shared())
+    }
+
+    /// Start the service on an existing (possibly shared) session, so
+    /// cached results carry across services and other consumers.
+    pub fn start_with_session(
+        workers: usize,
+        policy: BatchPolicy,
+        session: Arc<SimSession>,
+    ) -> SimService {
         let (req_tx, req_rx) = channel::<Request>();
         let (resp_tx, resp_rx) = channel::<Response>();
-        let handle = std::thread::spawn(move || leader(req_rx, resp_tx, workers, policy));
+        let leader_session = Arc::clone(&session);
+        let handle =
+            std::thread::spawn(move || leader(req_rx, resp_tx, workers, policy, leader_session));
         SimService {
             tx: Some(req_tx),
             rx: resp_rx,
             next_id: AtomicU64::new(1),
             handle: Some(handle),
+            session,
         }
+    }
+
+    /// The session cache the workers simulate through.
+    pub fn session(&self) -> &Arc<SimSession> {
+        &self.session
     }
 
     /// Submit a request; returns its id.
@@ -108,12 +144,20 @@ impl SimService {
         self.rx.recv().ok()
     }
 
-    /// Shut down and collect stats.
+    /// Shut down and collect stats. Responses still in flight are drained
+    /// and counted in [`ServiceStats::drained`] rather than silently
+    /// discarded.
     pub fn shutdown(mut self) -> ServiceStats {
         drop(self.tx.take());
-        // Drain remaining responses so the leader can exit.
-        while self.rx.try_recv().is_ok() {}
-        self.handle.take().map(|h| h.join().unwrap()).unwrap_or_default()
+        let mut stats = self.handle.take().map(|h| h.join().unwrap()).unwrap_or_default();
+        while self.rx.try_recv().is_ok() {
+            stats.drained += 1;
+        }
+        let cache = self.session.stats();
+        stats.cache_hits = cache.hits;
+        stats.cache_misses = cache.misses;
+        stats.cache_inserts = cache.inserts;
+        stats
     }
 }
 
@@ -132,6 +176,7 @@ fn leader(
     resp_tx: Sender<Response>,
     workers: usize,
     policy: BatchPolicy,
+    session: Arc<SimSession>,
 ) -> ServiceStats {
     let mut stats = ServiceStats::default();
     let mut pending: Vec<Request> = Vec::new();
@@ -172,7 +217,7 @@ fn leader(
             stats.requests += pending.len() as u64;
             let batch = std::mem::take(&mut pending);
             oldest = None;
-            dispatch(batch, &resp_tx, workers);
+            dispatch(batch, &resp_tx, workers, &session);
         } else if closed {
             return stats;
         } else if pending.is_empty() {
@@ -185,20 +230,54 @@ fn leader(
                 Err(_) => closed = true,
             }
         } else {
-            std::thread::sleep(Duration::from_micros(100));
+            // A batch is forming: block until either another request
+            // arrives or the batching deadline passes (no busy-wait).
+            let deadline = oldest.expect("pending implies oldest") + policy.max_wait;
+            let wait = deadline.saturating_duration_since(Instant::now());
+            match req_rx.recv_timeout(wait) {
+                Ok(r) => pending.push(r),
+                Err(RecvTimeoutError::Timeout) => {} // batch is due next pass
+                Err(RecvTimeoutError::Disconnected) => closed = true,
+            }
         }
     }
 }
 
-/// Simulate a batch across scoped worker threads.
-fn dispatch(batch: Vec<Request>, resp_tx: &Sender<Response>, workers: usize) {
+/// Simulate a batch across scoped worker threads sharing the session.
+fn dispatch(
+    batch: Vec<Request>,
+    resp_tx: &Sender<Response>,
+    workers: usize,
+    session: &SimSession,
+) {
     let workers = workers.max(1).min(batch.len());
+    // One config digest per distinct config in the batch (requests share
+    // configs by `Arc`, so pointer identity dedups them): the workers' hit
+    // path then never re-serializes a config.
+    let digests: Vec<u64> = {
+        let mut seen: Vec<(*const AcceleratorConfig, u64)> = Vec::new();
+        batch
+            .iter()
+            .map(|r| {
+                let ptr = Arc::as_ptr(&r.cfg);
+                match seen.iter().find(|(p, _)| *p == ptr) {
+                    Some(&(_, fp)) => fp,
+                    None => {
+                        let fp = r.cfg.fingerprint();
+                        seen.push((ptr, fp));
+                        fp
+                    }
+                }
+            })
+            .collect()
+    };
     let batch = Arc::new(batch);
     let next = Arc::new(AtomicU64::new(0));
     std::thread::scope(|s| {
         for _ in 0..workers {
             let batch = Arc::clone(&batch);
             let next = Arc::clone(&next);
+            let digests = &digests;
             let tx = resp_tx.clone();
             s.spawn(move || loop {
                 let i = next.fetch_add(1, Ordering::Relaxed) as usize;
@@ -206,7 +285,7 @@ fn dispatch(batch: Vec<Request>, resp_tx: &Sender<Response>, workers: usize) {
                     return;
                 }
                 let r = &batch[i];
-                let sim = simulate_gemm_shape(&r.cfg, r.shape, r.phase, &r.opts);
+                let sim = session.simulate_keyed(digests[i], &r.cfg, r.shape, r.phase, &r.opts);
                 let _ = tx.send(Response { id: r.id, sim });
             });
         }
@@ -217,6 +296,7 @@ fn dispatch(batch: Vec<Request>, resp_tx: &Sender<Response>, workers: usize) {
 mod tests {
     use super::*;
     use crate::config::preset;
+    use crate::sim::simulate_gemm_shape;
 
     #[test]
     fn service_answers_all_requests() {
@@ -241,11 +321,13 @@ mod tests {
         let stats = svc.shutdown();
         assert_eq!(stats.requests, 20);
         assert!(stats.batches >= 1);
+        assert_eq!(stats.drained, 0);
     }
 
     #[test]
     fn batched_results_match_direct_simulation() {
-        let svc = SimService::start(3, BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) });
+        let svc =
+            SimService::start(3, BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) });
         let cfg = Arc::new(preset("4G1F").unwrap());
         let shape = GemmShape::new(1000, 71, 333);
         let id = svc.submit(&cfg, shape, Phase::WeightGrad, SimOptions::hbm2());
@@ -262,6 +344,7 @@ mod tests {
         let svc = SimService::start(1, BatchPolicy::default());
         let stats = svc.shutdown();
         assert_eq!(stats.requests, 0);
+        assert_eq!(stats.drained, 0);
     }
 
     #[test]
@@ -278,5 +361,60 @@ mod tests {
         let stats = svc.shutdown();
         assert_eq!(stats.requests, 4);
         assert!(stats.full_batches >= 1, "{stats:?}");
+    }
+
+    #[test]
+    fn shutdown_counts_unreceived_responses() {
+        let svc = SimService::start(2, BatchPolicy::default());
+        let cfg = Arc::new(preset("1G1C").unwrap());
+        for i in 0..7usize {
+            svc.submit(&cfg, GemmShape::new(128 + i, 32, 64), Phase::Forward, SimOptions::ideal());
+        }
+        // Receive some, abandon the rest: shutdown must report them.
+        for _ in 0..3 {
+            svc.recv().unwrap();
+        }
+        let stats = svc.shutdown();
+        assert_eq!(stats.requests, 7);
+        assert_eq!(stats.drained, 4, "{stats:?}");
+    }
+
+    #[test]
+    fn repeated_requests_hit_the_shared_cache() {
+        // One worker => strictly serial simulation: the first identical
+        // request misses, the remaining four must hit.
+        let policy = BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(1) };
+        let svc = SimService::start(1, policy);
+        let cfg = Arc::new(preset("1G1F").unwrap());
+        for _ in 0..5 {
+            svc.submit(&cfg, GemmShape::new(512, 40, 256), Phase::Forward, SimOptions::ideal());
+        }
+        for _ in 0..5 {
+            svc.recv().unwrap();
+        }
+        let stats = svc.shutdown();
+        assert_eq!(stats.cache_misses, 1, "{stats:?}");
+        assert_eq!(stats.cache_hits, 4, "{stats:?}");
+        assert_eq!(stats.cache_inserts, 1, "{stats:?}");
+    }
+
+    #[test]
+    fn services_share_an_external_session() {
+        let session = SimSession::shared();
+        let cfg = Arc::new(preset("1G4C").unwrap());
+        let shape = GemmShape::new(777, 33, 99);
+
+        let first = SimService::start_with_session(1, BatchPolicy::default(), Arc::clone(&session));
+        first.submit(&cfg, shape, Phase::DataGrad, SimOptions::hbm2());
+        first.recv().unwrap();
+        first.shutdown();
+
+        let second =
+            SimService::start_with_session(1, BatchPolicy::default(), Arc::clone(&session));
+        second.submit(&cfg, shape, Phase::DataGrad, SimOptions::hbm2());
+        second.recv().unwrap();
+        let stats = second.shutdown();
+        assert_eq!(stats.cache_hits, 1, "{stats:?}");
+        assert_eq!(stats.cache_misses, 1, "{stats:?}");
     }
 }

@@ -150,7 +150,13 @@ mod tests {
         let cfg = preset(cfg_name).unwrap();
         let m = resnet50();
         let counts = ChannelCounts::baseline(&m);
-        let s = simulate_model_epoch(&cfg, &m, &counts, &SimOptions::hbm2());
+        let s = simulate_model_epoch(
+            &cfg,
+            &m,
+            &counts,
+            &SimOptions::hbm2(),
+            &crate::session::SimSession::new(),
+        );
         iteration_energy(&cfg, &EnergyModel::default(), &s)
     }
 

@@ -33,6 +33,16 @@ impl Phase {
             Phase::WeightGrad => "wgrad",
         }
     }
+
+    /// Stable dense index (position in [`Phase::ALL`]); part of the
+    /// session-cache fingerprint encoding (DESIGN.md §10).
+    pub fn index(&self) -> usize {
+        match self {
+            Phase::Forward => 0,
+            Phase::DataGrad => 1,
+            Phase::WeightGrad => 2,
+        }
+    }
 }
 
 /// A single GEMM: `C[m×n] += A[m×k] · B[k×n]`.

@@ -11,8 +11,10 @@
 //!   ([`compiler`]), the instruction-level simulator ([`sim`]), energy and
 //!   area models ([`energy`], [`area`]), figure/report harnesses
 //!   ([`report`]), the PJRT runtime bridge ([`runtime`]), the end-to-end
-//!   prune-while-train driver ([`trainer`]) and the threaded sweep
-//!   coordinator ([`coordinator`]).
+//!   prune-while-train driver ([`trainer`]), the threaded sweep
+//!   coordinator ([`coordinator`]), and the shared content-addressed
+//!   simulation cache every compile→simulate path routes through
+//!   ([`session`]).
 //! - **L2/L1 (python, build-time only)** — a JAX PruneTrain model whose
 //!   convolutions call a Pallas systolic-wave GEMM kernel; AOT-lowered to
 //!   HLO text consumed by [`runtime`]. Python never runs on the request
@@ -37,6 +39,7 @@ pub mod proptest;
 pub mod pruning;
 pub mod report;
 pub mod runtime;
+pub mod session;
 pub mod sim;
 pub mod trainer;
 pub mod util;

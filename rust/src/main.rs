@@ -8,6 +8,7 @@ use flexsa::coordinator::default_threads;
 use flexsa::gemm::{GemmShape, Phase};
 use flexsa::pruning::Strength;
 use flexsa::report::figures as fig;
+use flexsa::session::SimSession;
 use flexsa::sim::{simulate_gemm, SimOptions};
 
 const USAGE: &str = "\
@@ -37,7 +38,8 @@ tools:
   train [--steps N] [--artifacts DIR]        end-to-end prune-while-train
                                              via PJRT (python never on path)
 
-common flags: --threads N (default: all cores), --config NAME|@FILE
+common flags: --threads N (default: all cores), --config NAME|@FILE,
+              --no-cache (disable the shared simulation session cache)
 ";
 
 fn main() {
@@ -103,9 +105,28 @@ fn emit(report: &fig::FigureReport, csv_dir: Option<&str>) -> Result<(), String>
     Ok(())
 }
 
+/// One session per CLI invocation: every figure harness and sweep below
+/// shares it, so recurring GEMMs dedup across figures (DESIGN.md §10).
+fn make_session(args: &Args) -> SimSession {
+    if args.has("no-cache") {
+        SimSession::disabled()
+    } else {
+        SimSession::new()
+    }
+}
+
+/// The CLI's hit-rate line (stderr, so CSV-ish stdout stays clean).
+fn print_cache_line(session: &SimSession) {
+    let stats = session.stats();
+    if stats.lookups() > 0 {
+        eprintln!("# sim cache: {}", stats.summary());
+    }
+}
+
 fn run(args: &Args) -> Result<(), String> {
     let threads = args.get_usize("threads", default_threads())?;
     let csv = args.get("csv");
+    let session = make_session(args);
     match args.command.as_str() {
         "help" | "--help" | "-h" => println!("{USAGE}"),
         "configs" => {
@@ -118,15 +139,22 @@ fn run(args: &Args) -> Result<(), String> {
         "table1" => emit(&fig::table1(), csv)?,
         "fig3" => {
             let s = parse_strength(args)?;
-            emit(&fig::fig3(s, threads), csv)?;
+            emit(&fig::fig3(s, threads, &session), csv)?;
+            print_cache_line(&session);
         }
-        "fig5" => emit(&fig::fig5(threads), csv)?,
+        "fig5" => {
+            emit(&fig::fig5(threads, &session), csv)?;
+            print_cache_line(&session);
+        }
         "fig6" => emit(&fig::fig6(), csv)?,
         "area" => emit(&fig::area_flexsa(), csv)?,
-        "ablate" => emit(&fig::ablations(threads), csv)?,
+        "ablate" => {
+            emit(&fig::ablations(threads, &session), csv)?;
+            print_cache_line(&session);
+        }
         "fig10" | "fig11" | "fig12" | "fig13" | "e2e-layers" => {
             eprintln!("# computing evaluation grid ({threads} threads)...");
-            let grid = fig::EvalGrid::compute(threads);
+            let grid = fig::EvalGrid::compute(threads, &session);
             match args.command.as_str() {
                 "fig10" => {
                     if args.has("ideal") {
@@ -141,23 +169,25 @@ fn run(args: &Args) -> Result<(), String> {
                 "fig13" => emit(&fig::fig13(&grid), csv)?,
                 _ => emit(&fig::e2e_layers(&grid), csv)?,
             }
+            print_cache_line(&session);
         }
         "report" => {
             emit(&fig::table1(), csv)?;
-            emit(&fig::fig3(Strength::Low, threads), csv)?;
-            emit(&fig::fig3(Strength::High, threads), csv)?;
-            emit(&fig::fig5(threads), csv)?;
+            emit(&fig::fig3(Strength::Low, threads, &session), csv)?;
+            emit(&fig::fig3(Strength::High, threads, &session), csv)?;
+            emit(&fig::fig5(threads, &session), csv)?;
             emit(&fig::fig6(), csv)?;
             emit(&fig::area_flexsa(), csv)?;
-            emit(&fig::ablations(threads), csv)?;
+            emit(&fig::ablations(threads, &session), csv)?;
             eprintln!("# computing evaluation grid ({threads} threads)...");
-            let grid = fig::EvalGrid::compute(threads);
+            let grid = fig::EvalGrid::compute(threads, &session);
             emit(&fig::fig10(&grid, true), csv)?;
             emit(&fig::fig10(&grid, false), csv)?;
             emit(&fig::fig11(&grid), csv)?;
             emit(&fig::fig12(&grid), csv)?;
             emit(&fig::fig13(&grid), csv)?;
             emit(&fig::e2e_layers(&grid), csv)?;
+            print_cache_line(&session);
         }
         "simulate" => {
             let cfg = load_config(args)?;

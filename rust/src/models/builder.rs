@@ -56,7 +56,7 @@ impl ModelBuilder {
     fn out_hw(&self, kernel: usize, stride: usize, pad_same: bool) -> usize {
         if pad_same {
             // "same" padding, as used throughout the zoo.
-            (self.cur_hw + stride - 1) / stride
+            self.cur_hw.div_ceil(stride)
         } else {
             // valid padding (inception stem uses a few of these).
             (self.cur_hw - kernel) / stride + 1

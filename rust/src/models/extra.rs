@@ -187,7 +187,13 @@ mod tests {
         let m = vgg16();
         let c = ChannelCounts::baseline(&m);
         let cfg = preset("1G1C").unwrap();
-        let s = simulate_model_epoch(&cfg, &m, &c, &SimOptions::ideal());
+        let s = simulate_model_epoch(
+            &cfg,
+            &m,
+            &c,
+            &SimOptions::ideal(),
+            &crate::session::SimSession::new(),
+        );
         assert!(s.pe_utilization(&cfg) > 0.80, "{}", s.pe_utilization(&cfg));
     }
 

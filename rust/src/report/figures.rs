@@ -10,6 +10,7 @@ use crate::coordinator::{
 use crate::energy::{energy_from_parts, EnergyModel};
 use crate::isa::Mode;
 use crate::pruning::{PruneSchedule, Strength};
+use crate::session::SimSession;
 use crate::sim::SimOptions;
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -48,9 +49,38 @@ pub struct EvalGrid {
 }
 
 impl EvalGrid {
-    /// Compute the grid with `threads` workers.
-    pub fn compute(threads: usize) -> Self {
-        let workloads = paper_workloads(90, 10, 42);
+    /// Compute the grid with `threads` workers sharing `session` — the 600
+    /// iteration simulations dedup their recurring GEMMs across strengths,
+    /// epochs, and memory models through it (EXPERIMENTS.md §Perf).
+    pub fn compute(threads: usize, session: &SimSession) -> Self {
+        Self::compute_workloads(threads, session, 90, 10, 42)
+    }
+
+    /// [`Self::compute`], or a reduced smoke grid (3 trajectory points)
+    /// when [`crate::bench_harness::SMOKE_ENV`] is set — the grid benches'
+    /// counterpart of [`crate::bench_harness::Bencher::auto`], so CI's
+    /// bench-smoke step proves the pipeline without paying for the full
+    /// 600-simulation grid.
+    pub fn compute_auto(threads: usize, session: &SimSession) -> Self {
+        if std::env::var_os(crate::bench_harness::SMOKE_ENV).is_some() {
+            Self::compute_workloads(threads, session, 10, 5, 42)
+        } else {
+            Self::compute(threads, session)
+        }
+    }
+
+    /// [`Self::compute`] with custom trajectory parameters. Figures always
+    /// use the paper's 90-epoch / interval-10 run; the bench-smoke path
+    /// computes a reduced grid (fewer trajectory points) just to prove the
+    /// pipeline still runs.
+    pub fn compute_workloads(
+        threads: usize,
+        session: &SimSession,
+        epochs: usize,
+        interval: usize,
+        seed: u64,
+    ) -> Self {
+        let workloads = paper_workloads(epochs, interval, seed);
         let mut jobs = Vec::new();
         let mut keys = Vec::new();
         for (wi, w) in workloads.iter().enumerate() {
@@ -76,7 +106,7 @@ impl EvalGrid {
                 }
             }
         }
-        let results = run_sweep(jobs, threads);
+        let results = run_sweep(jobs, threads, session);
         let mut cells = HashMap::new();
         for (key, range) in keys {
             let refs: Vec<_> = results[range].iter().collect();
@@ -132,7 +162,7 @@ pub fn table1() -> FigureReport {
 
 /// Fig 3: ResNet50 pruning-while-training timeline on 1G1C (IDEAL vs
 /// ACTUAL, normalized to the unpruned baseline; PE-utilization line).
-pub fn fig3(strength: Strength, threads: usize) -> FigureReport {
+pub fn fig3(strength: Strength, threads: usize, session: &SimSession) -> FigureReport {
     let model = Arc::new(crate::models::resnet50());
     let sched = crate::pruning::prunetrain_schedule(&model, strength, 90, 10, 42);
     let cfg = Arc::new(preset("1G1C").unwrap());
@@ -147,7 +177,7 @@ pub fn fig3(strength: Strength, threads: usize) -> FigureReport {
             opts: SimOptions::ideal(),
         })
         .collect();
-    let results = run_sweep(jobs, threads);
+    let results = run_sweep(jobs, threads, session);
     let base_cycles = results[0].sim.gemm_cycles;
 
     let mut t = TextTable::new(vec!["epoch", "FLOPs(IDEAL)", "ACTUAL time", "PE util"]);
@@ -183,7 +213,7 @@ pub fn fig3(strength: Strength, threads: usize) -> FigureReport {
 }
 
 /// Fig 5: naive core-size sweep — PE utilization and GBUF→LBUF traffic.
-pub fn fig5(threads: usize) -> FigureReport {
+pub fn fig5(threads: usize, session: &SimSession) -> FigureReport {
     let model = Arc::new(crate::models::resnet50());
     let sweep: [&'static str; 4] = ["1G1C", "1G4C", "1G16C", "1G64C"];
     let mut t = TextTable::new(vec![
@@ -212,7 +242,7 @@ pub fn fig5(threads: usize) -> FigureReport {
                     opts: SimOptions::ideal(),
                 })
                 .collect();
-            let results = run_sweep(jobs, threads);
+            let results = run_sweep(jobs, threads, session);
             let refs: Vec<_> = results.iter().collect();
             cells.insert((si, name), aggregate(&refs));
         }
@@ -602,7 +632,7 @@ mod tests {
 ///   serialization within a wave") vs serialized stationary shifts;
 /// - back-to-back wave streaming (shadow stationary load) vs exposing the
 ///   fill/drain ramp per tile job or per wave issue.
-pub fn ablations(_threads: usize) -> FigureReport {
+pub fn ablations(_threads: usize, session: &SimSession) -> FigureReport {
     use crate::sim::{simulate_model_epoch, RampMode};
     let model = crate::models::resnet50();
     let counts = crate::models::ChannelCounts::baseline(&model);
@@ -612,7 +642,7 @@ pub fn ablations(_threads: usize) -> FigureReport {
     for ramp in [RampMode::PerGemm, RampMode::PerJob, RampMode::PerIssue] {
         for overlap in [true, false] {
             let opts = SimOptions { ideal_dram: true, shiftv_overlap: overlap, ramp };
-            let s = simulate_model_epoch(&cfg, &model, &counts, &opts);
+            let s = simulate_model_epoch(&cfg, &model, &counts, &opts, session);
             let b = *base.get_or_insert(s.gemm_cycles);
             t.row(vec![
                 format!("{ramp:?}"),

@@ -1,0 +1,466 @@
+//! Shared, content-addressed simulation session cache.
+//!
+//! Every compile→simulate path in the crate — whole-iteration simulation
+//! ([`crate::sim::simulate_iteration`]), the figure harnesses
+//! ([`crate::report::figures`]), coordinator sweeps
+//! ([`crate::coordinator::run_sweep`]), the batching
+//! [`crate::coordinator::SimService`], the trainer's trace replay, and the
+//! CLI — funnels GEMM simulations through a [`SimSession`]: a sharded,
+//! thread-safe, content-addressed cache of [`GemmSim`] results keyed by a
+//! stable [`Fingerprint`] of `(AcceleratorConfig, GemmShape, Phase,
+//! SimOptions)`.
+//!
+//! Why this is sound (DESIGN.md §10): the streaming compile+simulate path
+//! is deterministic and bit-identical to materialized
+//! [`crate::isa::Program`]s (DESIGN.md §9, property-pinned by
+//! `tests/prop_sim.rs`), so memoizing on the full input fingerprint returns
+//! bit-identical results — property-pinned in turn by
+//! `tests/prop_session.rs`.
+//!
+//! The fingerprint deliberately avoids deriving `Hash` on float-carrying
+//! structs: the configuration is digested through its canonical
+//! [`AcceleratorConfig::to_config_text`] serialization (exact shortest
+//! round-trip float formatting; [`AcceleratorConfig::fingerprint`]), and
+//! [`SimOptions`] through an explicit bit pack
+//! ([`SimOptions::fingerprint`]). Per-GEMM loops precompute the config
+//! digest once ([`SimSession::simulate_keyed`]) so the hit path never
+//! re-serializes the config.
+
+use crate::config::AcceleratorConfig;
+use crate::gemm::{GemmShape, Phase};
+use crate::sim::{simulate_gemm_shape, GemmSim, SimOptions};
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Number of independently locked cache shards (fixed power of two; the
+/// low fingerprint bits pick the shard).
+const SHARDS: usize = 16;
+
+/// Stable 128-bit content address of one `(config, shape, phase, options)`
+/// simulation input (FNV-1a over the canonical encodings; see
+/// [`SimSession::fingerprint`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Fingerprint(pub u128);
+
+impl std::fmt::Display for Fingerprint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:032x}", self.0)
+    }
+}
+
+const FNV128_OFFSET: u128 = 0x6c62_272e_07bb_0142_62b8_2175_6295_c58d;
+const FNV128_PRIME: u128 = 0x0000_0000_0100_0000_0000_0000_0000_013b;
+
+/// Minimal FNV-1a/128 (no std `Hasher`: we need a stable, documented,
+/// cross-platform digest, not a per-process randomized one).
+struct Fnv128 {
+    state: u128,
+}
+
+impl Fnv128 {
+    fn new() -> Self {
+        Self { state: FNV128_OFFSET }
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state ^= b as u128;
+            self.state = self.state.wrapping_mul(FNV128_PRIME);
+        }
+    }
+
+    fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+}
+
+/// Counter snapshot of a [`SimSession`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SessionStats {
+    /// Lookups answered from the cache.
+    pub hits: u64,
+    /// Lookups that ran the simulator (includes all lookups on a disabled
+    /// session).
+    pub misses: u64,
+    /// Results inserted into the cache.
+    pub inserts: u64,
+    /// Entries dropped by the capacity bound.
+    pub evictions: u64,
+    /// Entries currently resident.
+    pub entries: u64,
+}
+
+impl SessionStats {
+    /// Total lookups (hits + misses).
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Fraction of lookups answered from the cache (0 when idle).
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups() as f64
+        }
+    }
+
+    /// One-line human-readable summary (the CLI's hit-rate line).
+    pub fn summary(&self) -> String {
+        format!(
+            "{} lookups, {} hits ({:.1}% hit rate), {} entries, {} evictions",
+            self.lookups(),
+            self.hits,
+            self.hit_rate() * 100.0,
+            self.entries,
+            self.evictions
+        )
+    }
+}
+
+#[derive(Default)]
+struct Shard {
+    /// Fingerprint → cached result. Keys are full 128-bit content
+    /// addresses, so a collision would require an FNV-1a/128 collision.
+    map: HashMap<u128, Arc<GemmSim>>,
+    /// Insertion order of `map`'s keys (deterministic FIFO eviction).
+    order: VecDeque<u128>,
+}
+
+/// A shared, thread-safe, content-addressed cache of GEMM simulation
+/// results.
+///
+/// Cheap to share by reference across scoped worker threads, or by
+/// [`Arc`] across detached ones. Misses simulate **outside** the shard
+/// lock: concurrent threads may duplicate work on the same key but never
+/// block each other; the first insert wins and later duplicates adopt the
+/// cached value, so every caller observes one canonical (bit-identical)
+/// result per key.
+pub struct SimSession {
+    shards: Vec<Mutex<Shard>>,
+    /// Per-shard entry bound (`None` = unbounded).
+    shard_capacity: Option<usize>,
+    /// `false` = pass-through (the CLI's `--no-cache` escape hatch).
+    enabled: bool,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    inserts: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl Default for SimSession {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SimSession {
+    fn build(capacity: Option<usize>, enabled: bool) -> Self {
+        Self {
+            shards: (0..SHARDS).map(|_| Mutex::new(Shard::default())).collect(),
+            shard_capacity: capacity.map(|c| c.div_ceil(SHARDS).max(1)),
+            enabled,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            inserts: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Unbounded caching session.
+    pub fn new() -> Self {
+        Self::build(None, true)
+    }
+
+    /// Caching session holding at most `capacity` entries (rounded up to a
+    /// multiple of the shard count; oldest-inserted entries are evicted
+    /// first, deterministically per shard).
+    pub fn with_capacity(capacity: usize) -> Self {
+        Self::build(Some(capacity), true)
+    }
+
+    /// Pass-through session: never caches, every lookup simulates
+    /// (`--no-cache`; also used by benches to measure the cold path).
+    pub fn disabled() -> Self {
+        Self::build(None, false)
+    }
+
+    /// Convenience: a fresh unbounded session behind an [`Arc`] (for
+    /// detached threads like [`crate::coordinator::SimService`]).
+    pub fn shared() -> Arc<Self> {
+        Arc::new(Self::new())
+    }
+
+    /// Whether lookups can be answered from the cache.
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Stable content address of one simulation input: FNV-1a/128 over the
+    /// config digest ([`AcceleratorConfig::fingerprint`], itself FNV-1a/64
+    /// over the canonical [`AcceleratorConfig::to_config_text`]), the GEMM
+    /// dims as little-endian `u64`, the phase index, and the [`SimOptions`]
+    /// bit pack. Identical inputs always map to the same fingerprint across
+    /// runs, platforms, and processes.
+    pub fn fingerprint(
+        cfg: &AcceleratorConfig,
+        shape: GemmShape,
+        phase: Phase,
+        opts: &SimOptions,
+    ) -> Fingerprint {
+        Self::fingerprint_keyed(cfg.fingerprint(), shape, phase, opts)
+    }
+
+    /// [`Self::fingerprint`] with the config digest precomputed: loops over
+    /// many GEMMs of one configuration serialize + hash the config once
+    /// instead of once per lookup (the session hit path's dominant cost
+    /// otherwise).
+    pub fn fingerprint_keyed(
+        cfg_fp: u64,
+        shape: GemmShape,
+        phase: Phase,
+        opts: &SimOptions,
+    ) -> Fingerprint {
+        let mut h = Fnv128::new();
+        h.write_u64(cfg_fp);
+        h.write_u64(shape.m as u64);
+        h.write_u64(shape.n as u64);
+        h.write_u64(shape.k as u64);
+        h.write(&[phase.index() as u8, opts.fingerprint() as u8]);
+        Fingerprint(h.state)
+    }
+
+    /// Simulate one GEMM through the cache: returns the cached result on a
+    /// hit, otherwise runs [`simulate_gemm_shape`] and caches it.
+    /// Bit-identical to calling [`simulate_gemm_shape`] directly.
+    pub fn simulate(
+        &self,
+        cfg: &AcceleratorConfig,
+        shape: GemmShape,
+        phase: Phase,
+        opts: &SimOptions,
+    ) -> Arc<GemmSim> {
+        if !self.enabled {
+            // Skip fingerprinting entirely: a disabled session is a pure
+            // pass-through.
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return Arc::new(simulate_gemm_shape(cfg, shape, phase, opts));
+        }
+        self.simulate_keyed(cfg.fingerprint(), cfg, shape, phase, opts)
+    }
+
+    /// [`Self::simulate`] with the config digest precomputed. `cfg_fp`
+    /// **must** equal `cfg.fingerprint()` — a mismatched digest would file
+    /// results under the wrong key (debug builds assert the contract).
+    pub fn simulate_keyed(
+        &self,
+        cfg_fp: u64,
+        cfg: &AcceleratorConfig,
+        shape: GemmShape,
+        phase: Phase,
+        opts: &SimOptions,
+    ) -> Arc<GemmSim> {
+        debug_assert_eq!(cfg_fp, cfg.fingerprint(), "stale config digest for {}", cfg.name);
+        if !self.enabled {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return Arc::new(simulate_gemm_shape(cfg, shape, phase, opts));
+        }
+        let fp = Self::fingerprint_keyed(cfg_fp, shape, phase, opts).0;
+        let shard = &self.shards[fp as usize % SHARDS];
+        let cached = shard.lock().unwrap().map.get(&fp).cloned();
+        if let Some(hit) = cached {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return hit;
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        // Simulate outside the lock (see the type-level docs).
+        let sim = Arc::new(simulate_gemm_shape(cfg, shape, phase, opts));
+        let mut guard = shard.lock().unwrap();
+        let s = &mut *guard;
+        if let Some(existing) = s.map.get(&fp) {
+            // Lost a duplicate-compute race: adopt the first insert so all
+            // callers observe one canonical Arc per key.
+            return Arc::clone(existing);
+        }
+        s.map.insert(fp, Arc::clone(&sim));
+        s.order.push_back(fp);
+        self.inserts.fetch_add(1, Ordering::Relaxed);
+        if let Some(cap) = self.shard_capacity {
+            while s.map.len() > cap {
+                match s.order.pop_front() {
+                    Some(old) => {
+                        s.map.remove(&old);
+                        self.evictions.fetch_add(1, Ordering::Relaxed);
+                    }
+                    None => break,
+                }
+            }
+        }
+        sim
+    }
+
+    /// Snapshot of the hit/miss/insert/eviction counters.
+    pub fn stats(&self) -> SessionStats {
+        SessionStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            inserts: self.inserts.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries: self.len() as u64,
+        }
+    }
+
+    /// Entries currently cached (sums all shards).
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
+    }
+
+    /// No entries cached?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop all cached entries (counters are kept).
+    pub fn clear(&self) {
+        for shard in &self.shards {
+            let mut g = shard.lock().unwrap();
+            g.map.clear();
+            g.order.clear();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+    use crate::sim::RampMode;
+
+    fn shape() -> GemmShape {
+        GemmShape::new(1000, 53, 300)
+    }
+
+    #[test]
+    fn hit_miss_insert_counters() {
+        let s = SimSession::new();
+        let cfg = preset("1G1F").unwrap();
+        let a = s.simulate(&cfg, shape(), Phase::Forward, &SimOptions::ideal());
+        let b = s.simulate(&cfg, shape(), Phase::Forward, &SimOptions::ideal());
+        assert_eq!(a.cycles.to_bits(), b.cycles.to_bits());
+        let st = s.stats();
+        assert_eq!((st.hits, st.misses, st.inserts, st.entries), (1, 1, 1, 1));
+        assert!((st.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn distinct_inputs_get_distinct_entries() {
+        let s = SimSession::new();
+        let cfg = preset("1G1C").unwrap();
+        let flex = preset("1G1F").unwrap();
+        s.simulate(&cfg, shape(), Phase::Forward, &SimOptions::ideal());
+        s.simulate(&cfg, shape(), Phase::DataGrad, &SimOptions::ideal());
+        s.simulate(&cfg, shape(), Phase::Forward, &SimOptions::hbm2());
+        s.simulate(&flex, shape(), Phase::Forward, &SimOptions::ideal());
+        s.simulate(&cfg, GemmShape::new(1000, 53, 301), Phase::Forward, &SimOptions::ideal());
+        let st = s.stats();
+        assert_eq!((st.hits, st.misses, st.entries), (0, 5, 5));
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_float_sensitive() {
+        let cfg = preset("1G1C").unwrap();
+        let opts = SimOptions::ideal();
+        let a = SimSession::fingerprint(&cfg, shape(), Phase::Forward, &opts);
+        let b = SimSession::fingerprint(&cfg.clone(), shape(), Phase::Forward, &opts);
+        assert_eq!(a, b);
+        // Changing a float field must change the fingerprint — the reason
+        // we hash the canonical text instead of deriving Hash on f64.
+        let mut faster = cfg.clone();
+        faster.clock_ghz = 0.8;
+        assert_ne!(a, SimSession::fingerprint(&faster, shape(), Phase::Forward, &opts));
+        // And every option bit must be visible.
+        for o in [
+            SimOptions::hbm2(),
+            SimOptions { shiftv_overlap: false, ..SimOptions::ideal() },
+            SimOptions { ramp: RampMode::PerJob, ..SimOptions::ideal() },
+            SimOptions { ramp: RampMode::PerIssue, ..SimOptions::ideal() },
+        ] {
+            assert_ne!(a, SimSession::fingerprint(&cfg, shape(), Phase::Forward, &o));
+        }
+    }
+
+    #[test]
+    fn capacity_bound_evicts_fifo() {
+        // Capacity 1 rounds to one entry per shard; re-inserting a key that
+        // hashes to an occupied shard must evict the older occupant.
+        let s = SimSession::with_capacity(1);
+        let cfg = preset("1G4C").unwrap();
+        // Generate shapes until two land in the same shard.
+        let mut by_shard: std::collections::HashMap<usize, Vec<GemmShape>> = Default::default();
+        let mut pair = None;
+        for k in 1..200usize {
+            let sh = GemmShape::new(64, 64, k);
+            let fp = SimSession::fingerprint(&cfg, sh, Phase::Forward, &SimOptions::ideal());
+            let bucket = by_shard.entry(fp.0 as usize % SHARDS).or_default();
+            bucket.push(sh);
+            if bucket.len() == 2 {
+                pair = Some((bucket[0], bucket[1]));
+                break;
+            }
+        }
+        let (first, second) = pair.expect("200 shapes must collide in 16 shards");
+        s.simulate(&cfg, first, Phase::Forward, &SimOptions::ideal());
+        s.simulate(&cfg, second, Phase::Forward, &SimOptions::ideal());
+        let st = s.stats();
+        assert_eq!(st.evictions, 1, "{st:?}");
+        // The evicted (older) key misses again; the survivor hits.
+        s.simulate(&cfg, second, Phase::Forward, &SimOptions::ideal());
+        assert_eq!(s.stats().hits, 1);
+        s.simulate(&cfg, first, Phase::Forward, &SimOptions::ideal());
+        assert_eq!(s.stats().misses, 3);
+    }
+
+    #[test]
+    fn disabled_session_never_caches() {
+        let s = SimSession::disabled();
+        let cfg = preset("1G1C").unwrap();
+        let a = s.simulate(&cfg, shape(), Phase::Forward, &SimOptions::ideal());
+        let b = s.simulate(&cfg, shape(), Phase::Forward, &SimOptions::ideal());
+        assert_eq!(a.cycles.to_bits(), b.cycles.to_bits());
+        let st = s.stats();
+        assert_eq!((st.hits, st.misses, st.entries), (0, 2, 0));
+        assert!(!s.is_enabled());
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn clear_drops_entries_but_keeps_counters() {
+        let s = SimSession::new();
+        let cfg = preset("1G1C").unwrap();
+        s.simulate(&cfg, shape(), Phase::Forward, &SimOptions::ideal());
+        assert_eq!(s.len(), 1);
+        s.clear();
+        assert!(s.is_empty());
+        assert_eq!(s.stats().misses, 1);
+    }
+
+    #[test]
+    fn keyed_and_unkeyed_fingerprints_agree() {
+        let cfg = preset("4G1F").unwrap();
+        let opts = SimOptions::hbm2();
+        assert_eq!(
+            SimSession::fingerprint(&cfg, shape(), Phase::DataGrad, &opts),
+            SimSession::fingerprint_keyed(cfg.fingerprint(), shape(), Phase::DataGrad, &opts),
+        );
+    }
+
+    #[test]
+    fn fingerprint_display_is_hex() {
+        let cfg = preset("1G1C").unwrap();
+        let fp = SimSession::fingerprint(&cfg, shape(), Phase::Forward, &SimOptions::ideal());
+        let text = fp.to_string();
+        assert_eq!(text.len(), 32);
+        assert!(text.chars().all(|c| c.is_ascii_hexdigit()));
+    }
+}

@@ -3,11 +3,12 @@
 //! layers (§VIII "Performance and Energy Impact of Other Layers", evaluated
 //! without layer fusion).
 
-use super::{engine::simulate_gemm_shape, SimOptions, Traffic};
+use super::{SimOptions, Traffic};
 use crate::config::AcceleratorConfig;
 use crate::gemm::Gemm;
 use crate::isa::Mode;
 use crate::models::{ChannelCounts, Model};
+use crate::session::SimSession;
 use std::collections::BTreeMap;
 
 /// SIMD-array (non-GEMM) work of an iteration.
@@ -74,19 +75,26 @@ impl IterationSim {
     }
 }
 
-/// Simulate all GEMMs of one training iteration, layer-serial.
+/// Simulate all GEMMs of one training iteration, layer-serial, through the
+/// shared `session` cache (pruned-trajectory iterations repeat many
+/// `(shape, phase)` GEMMs across residual blocks and epochs; see
+/// DESIGN.md §10).
 pub fn simulate_iteration(
     cfg: &AcceleratorConfig,
     gemms: &[Gemm],
     opts: &SimOptions,
+    session: &SimSession,
 ) -> IterationSim {
     let mut out = IterationSim::default();
+    // One config digest for the whole iteration: the session hit path then
+    // never re-serializes the config (161 GEMMs for ResNet50).
+    let cfg_fp = cfg.fingerprint();
     for g in gemms {
-        let s = simulate_gemm_shape(cfg, g.shape, g.phase, opts);
+        let s = session.simulate_keyed(cfg_fp, cfg, g.shape, g.phase, opts);
         out.gemm_cycles += s.cycles;
         out.busy_macs += s.busy_macs;
         out.traffic.add(&s.traffic);
-        for (m, c) in s.waves_by_mode {
+        for (&m, &c) in &s.waves_by_mode {
             *out.waves_by_mode.entry(m).or_insert(0) += c;
         }
     }
@@ -110,10 +118,11 @@ pub fn simulate_model_epoch(
     model: &Model,
     counts: &ChannelCounts,
     opts: &SimOptions,
+    session: &SimSession,
 ) -> IterationSim {
     let batch = model.default_batch;
     let gemms = model.gemms(batch, counts);
-    let mut out = simulate_iteration(cfg, &gemms, opts);
+    let mut out = simulate_iteration(cfg, &gemms, opts, session);
 
     let flops = model.total_simd_flops(batch, counts);
     let bytes = model.total_simd_bytes(batch, counts);
@@ -130,13 +139,17 @@ mod tests {
     use crate::config::preset;
     use crate::models::{mobilenet_v2, resnet50};
 
+    fn fresh() -> SimSession {
+        SimSession::new()
+    }
+
     #[test]
     fn resnet_baseline_utilization_in_paper_range() {
         // Paper Fig 3: unpruned ResNet50 on 1G1C at ideal memory ~ 83%.
         let cfg = preset("1G1C").unwrap();
         let m = resnet50();
         let counts = ChannelCounts::baseline(&m);
-        let s = simulate_model_epoch(&cfg, &m, &counts, &SimOptions::ideal());
+        let s = simulate_model_epoch(&cfg, &m, &counts, &SimOptions::ideal(), &fresh());
         let u = s.pe_utilization(&cfg);
         assert!((0.70..0.92).contains(&u), "util={u}");
     }
@@ -147,8 +160,8 @@ mod tests {
         let counts = ChannelCounts::baseline(&m);
         let c1 = preset("1G1C").unwrap();
         let f1 = preset("1G1F").unwrap();
-        let sc = simulate_model_epoch(&c1, &m, &counts, &SimOptions::ideal());
-        let sf = simulate_model_epoch(&f1, &m, &counts, &SimOptions::ideal());
+        let sc = simulate_model_epoch(&c1, &m, &counts, &SimOptions::ideal(), &fresh());
+        let sf = simulate_model_epoch(&f1, &m, &counts, &SimOptions::ideal(), &fresh());
         assert!(sf.gemm_cycles <= sc.gemm_cycles * 1.02);
     }
 
@@ -157,7 +170,7 @@ mod tests {
         let cfg = preset("4G1F").unwrap();
         let m = resnet50();
         let counts = ChannelCounts::baseline(&m);
-        let s = simulate_model_epoch(&cfg, &m, &counts, &SimOptions::ideal());
+        let s = simulate_model_epoch(&cfg, &m, &counts, &SimOptions::ideal(), &fresh());
         assert!(s.gemm_cycles >= s.ideal_gemm_cycles);
     }
 
@@ -168,7 +181,7 @@ mod tests {
         let cfg = preset("1G1C").unwrap();
         let m = mobilenet_v2();
         let counts = ChannelCounts::baseline(&m);
-        let s = simulate_model_epoch(&cfg, &m, &counts, &SimOptions::hbm2());
+        let s = simulate_model_epoch(&cfg, &m, &counts, &SimOptions::hbm2(), &fresh());
         let mem_cycles = s.simd.dram_bytes / cfg.dram_bytes_per_cycle();
         let compute_cycles = s.simd.flops / (cfg.simd_gflops / cfg.clock_ghz);
         assert!(mem_cycles > 0.0 && compute_cycles > 0.0);
@@ -180,7 +193,7 @@ mod tests {
         let cfg = preset("1G1C").unwrap();
         let m = resnet50();
         let counts = ChannelCounts::baseline(&m);
-        let s = simulate_model_epoch(&cfg, &m, &counts, &SimOptions::hbm2());
+        let s = simulate_model_epoch(&cfg, &m, &counts, &SimOptions::hbm2(), &fresh());
         let fused = fused_total_cycles(&s);
         assert!(fused <= s.total_cycles());
         assert!(fused >= s.gemm_cycles.max(s.simd.cycles) - 1.0);
@@ -191,8 +204,8 @@ mod tests {
         let cfg = preset("1G4C").unwrap();
         let m = resnet50();
         let counts = ChannelCounts::baseline(&m);
-        let si = simulate_model_epoch(&cfg, &m, &counts, &SimOptions::ideal());
-        let sh = simulate_model_epoch(&cfg, &m, &counts, &SimOptions::hbm2());
+        let si = simulate_model_epoch(&cfg, &m, &counts, &SimOptions::ideal(), &fresh());
+        let sh = simulate_model_epoch(&cfg, &m, &counts, &SimOptions::hbm2(), &fresh());
         assert!(sh.gemm_cycles >= si.gemm_cycles);
     }
 }

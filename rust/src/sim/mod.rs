@@ -44,6 +44,18 @@ pub enum RampMode {
     /// A ramp on every wave issue (fully serialized strawman).
     PerIssue,
 }
+
+impl RampMode {
+    /// Stable dense index; part of the session-cache fingerprint encoding
+    /// (DESIGN.md §10).
+    pub fn index(&self) -> usize {
+        match self {
+            RampMode::PerGemm => 0,
+            RampMode::PerJob => 1,
+            RampMode::PerIssue => 2,
+        }
+    }
+}
 pub use iteration::{fused_total_cycles, simulate_iteration, simulate_model_epoch, IterationSim, SimdSim};
 
 /// Simulator knobs (modeling ablations; defaults follow the paper).
@@ -74,5 +86,34 @@ impl SimOptions {
     /// The paper's HBM2 setup (270 GB/s, from the config).
     pub fn hbm2() -> Self {
         Self::default()
+    }
+
+    /// Canonical bit pack for the session-cache fingerprint (DESIGN.md
+    /// §10): bit 0 = `ideal_dram`, bit 1 = `shiftv_overlap`, bits 2–3 =
+    /// [`RampMode::index`]. Explicit instead of `#[derive(Hash)]` so the
+    /// encoding is stable across field reorders and compiler versions.
+    pub fn fingerprint(&self) -> u64 {
+        (self.ideal_dram as u64)
+            | ((self.shiftv_overlap as u64) << 1)
+            | ((self.ramp.index() as u64) << 2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn option_fingerprints_are_distinct() {
+        let mut seen = std::collections::BTreeSet::new();
+        for ideal_dram in [false, true] {
+            for shiftv_overlap in [false, true] {
+                for ramp in [RampMode::PerGemm, RampMode::PerJob, RampMode::PerIssue] {
+                    let o = SimOptions { ideal_dram, shiftv_overlap, ramp };
+                    assert!(seen.insert(o.fingerprint()), "duplicate for {o:?}");
+                }
+            }
+        }
+        assert_eq!(seen.len(), 12);
     }
 }

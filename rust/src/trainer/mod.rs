@@ -110,6 +110,7 @@ pub fn run(cfg: &TrainerConfig) -> anyhow::Result<TrainOutcome> {
     use crate::models::ChannelCounts;
     use crate::pruning::PrunePoint;
     use crate::runtime::{lit, Runtime};
+    use crate::session::SimSession;
     use crate::sim::{simulate_model_epoch, SimOptions};
     use anyhow::Context;
 
@@ -225,7 +226,10 @@ pub fn run(cfg: &TrainerConfig) -> anyhow::Result<TrainOutcome> {
         println!("  step {:>4}: {:.3}  {:?}", p.epoch, p.macs_ratio, p.counts.0);
     }
 
-    // Simulate the measured trajectory on the paper's key configs.
+    // Simulate the measured trajectory on the paper's key configs. One
+    // session for the whole replay: unpruned layers recur across trajectory
+    // points and repeated blocks recur within each iteration.
+    let session = SimSession::new();
     let mut sim_results = Vec::new();
     println!("\nsimulated PE utilization on the measured trajectory:");
     for name in ["1G1C", "1G4C", "1G1F", "4G1F"] {
@@ -233,7 +237,8 @@ pub fn run(cfg: &TrainerConfig) -> anyhow::Result<TrainOutcome> {
         let mut busy = 0.0;
         let mut cycles = 0.0;
         for p in &schedule.points {
-            let s = simulate_model_epoch(&acc, &sim_model, &p.counts, &SimOptions::ideal());
+            let s =
+                simulate_model_epoch(&acc, &sim_model, &p.counts, &SimOptions::ideal(), &session);
             busy += s.busy_macs as f64;
             cycles += s.gemm_cycles;
         }
@@ -244,6 +249,7 @@ pub fn run(cfg: &TrainerConfig) -> anyhow::Result<TrainOutcome> {
     }
     let speedup = sim_results[0].2 / sim_results[2].2;
     println!("headline: 1G1F speedup over 1G1C on measured trajectory = {speedup:.2}x");
+    println!("sim cache: {}", session.stats().summary());
 
     if let Some(dir) = &cfg.out_dir {
         std::fs::create_dir_all(dir)?;

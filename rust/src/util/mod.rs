@@ -8,11 +8,28 @@ pub mod fmt;
 pub use rng::Lcg64;
 pub use stats::Summary;
 
+/// FNV-1a/64 offset basis.
+const FNV64_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a/64 prime.
+const FNV64_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a/64 digest of a byte string. Stable across runs and platforms —
+/// the config half of the session-cache fingerprint (DESIGN.md §10); not
+/// a general-purpose hasher (use `std::hash` for in-process maps).
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h = FNV64_OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV64_PRIME);
+    }
+    h
+}
+
 /// Integer ceiling division.
 #[inline]
 pub fn ceil_div(a: usize, b: usize) -> usize {
     debug_assert!(b > 0);
-    (a + b - 1) / b
+    a.div_ceil(b)
 }
 
 /// Round `a` up to the next multiple of `b`.
@@ -41,5 +58,15 @@ mod tests {
         assert_eq!(round_up(1, 8), 8);
         assert_eq!(round_up(8, 8), 8);
         assert_eq!(round_up(9, 8), 16);
+    }
+
+    #[test]
+    fn fnv64_known_answer_vectors() {
+        // Published FNV-1a/64 test vectors (fingerprints must be stable
+        // across releases — a constant typo would silently re-key every
+        // persisted cache).
+        assert_eq!(fnv64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv64(b"foobar"), 0x8594_4171_f739_67e8);
     }
 }

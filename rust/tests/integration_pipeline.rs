@@ -6,6 +6,7 @@ use flexsa::config::preset;
 use flexsa::coordinator::{aggregate, paper_workloads, point_weights, run_sweep, SweepJob};
 use flexsa::models::{resnet50, ChannelCounts};
 use flexsa::pruning::{prunetrain_schedule, PruneSchedule, Strength};
+use flexsa::session::SimSession;
 use flexsa::sim::{simulate_model_epoch, SimOptions};
 use std::sync::Arc;
 
@@ -26,7 +27,7 @@ fn trajectory_util(cfg_name: &str, strength: Strength) -> f64 {
             opts: SimOptions::ideal(),
         })
         .collect();
-    let results = run_sweep(jobs, 8);
+    let results = run_sweep(jobs, 8, &SimSession::new());
     let refs: Vec<_> = results.iter().collect();
     aggregate(&refs).pe_utilization
 }
@@ -37,17 +38,20 @@ fn pruning_degrades_monolithic_utilization() {
     let model = resnet50();
     let sched = prunetrain_schedule(&model, Strength::High, 90, 10, 42);
     let cfg = preset("1G1C").unwrap();
+    let session = SimSession::new();
     let first = simulate_model_epoch(
         &cfg,
         &model,
         &sched.points[0].counts,
         &SimOptions::ideal(),
+        &session,
     );
     let last = simulate_model_epoch(
         &cfg,
         &model,
         &sched.points.last().unwrap().counts,
         &SimOptions::ideal(),
+        &session,
     );
     let u0 = first.pe_utilization(&cfg);
     let u1 = last.pe_utilization(&cfg);
@@ -80,6 +84,8 @@ fn paper_workloads_grid_headlines() {
     let resnet = &ws[0];
     let mut utils = std::collections::HashMap::new();
     let mut traffic = std::collections::HashMap::new();
+    // One shared session across the three configs, figure-harness style.
+    let session = SimSession::new();
     for name in ["1G1C", "1G4C", "1G1F"] {
         let cfg = Arc::new(preset(name).unwrap());
         let sched: &PruneSchedule = &resnet.schedules[0].1;
@@ -96,7 +102,7 @@ fn paper_workloads_grid_headlines() {
                 opts: SimOptions::hbm2(),
             })
             .collect();
-        let results = run_sweep(jobs, 8);
+        let results = run_sweep(jobs, 8, &session);
         let refs: Vec<_> = results.iter().collect();
         let a = aggregate(&refs);
         utils.insert(name, a.pe_utilization);
@@ -130,17 +136,20 @@ fn mobilenet_static_variant_reduces_cycles() {
     let ws = paper_workloads(90, 10, 42);
     let mobilenet = &ws[2];
     let cfg = preset("1G1C").unwrap();
+    let session = SimSession::new();
     let base = simulate_model_epoch(
         &cfg,
         &mobilenet.model,
         &mobilenet.schedules[0].1.points[0].counts,
         &SimOptions::ideal(),
+        &session,
     );
     let slim = simulate_model_epoch(
         &cfg,
         &mobilenet.model,
         &mobilenet.schedules[1].1.points[0].counts,
         &SimOptions::ideal(),
+        &session,
     );
     assert!(slim.gemm_cycles < base.gemm_cycles);
     assert!(slim.busy_macs < base.busy_macs);

@@ -1,0 +1,134 @@
+//! Property + concurrency tests for the session cache: cached results must
+//! be bit-identical to uncached [`simulate_gemm_shape`] under any mix of
+//! presets, phases, simulator options, and threads — the invariant that
+//! makes routing every compile→simulate path through [`SimSession`] sound
+//! (DESIGN.md §10).
+
+use flexsa::config::{preset, PRESETS};
+use flexsa::gemm::{GemmShape, Phase};
+use flexsa::proptest::{forall, gemm_dim, shrink_dims3, Config};
+use flexsa::session::SimSession;
+use flexsa::sim::{simulate_gemm_shape, GemmSim, RampMode, SimOptions};
+use std::sync::Arc;
+
+/// The six option points the figures exercise (both memory models, all
+/// ramp/overlap ablations).
+fn options(i: usize) -> SimOptions {
+    match i {
+        0 => SimOptions::ideal(),
+        1 => SimOptions::hbm2(),
+        2 => SimOptions { ideal_dram: true, shiftv_overlap: false, ramp: RampMode::PerGemm },
+        3 => SimOptions { ideal_dram: false, shiftv_overlap: true, ramp: RampMode::PerJob },
+        4 => SimOptions { ideal_dram: true, shiftv_overlap: true, ramp: RampMode::PerIssue },
+        _ => SimOptions { ideal_dram: false, shiftv_overlap: false, ramp: RampMode::PerIssue },
+    }
+}
+
+fn bit_identical(a: &GemmSim, b: &GemmSim) -> Result<(), String> {
+    if a.cycles.to_bits() != b.cycles.to_bits()
+        || a.compute_cycles.to_bits() != b.compute_cycles.to_bits()
+        || a.dram_cycles.to_bits() != b.dram_cycles.to_bits()
+        || a.busy_macs != b.busy_macs
+        || a.traffic != b.traffic
+        || a.waves_by_mode != b.waves_by_mode
+    {
+        return Err(format!(
+            "cached diverges from direct: cycles {} vs {}, macs {} vs {}",
+            a.cycles, b.cycles, a.busy_macs, b.busy_macs
+        ));
+    }
+    Ok(())
+}
+
+#[test]
+fn cached_results_bit_identical_to_uncached() {
+    // One session across all cases, so later cases exercise real hits
+    // against a populated, multi-config cache.
+    let session = SimSession::new();
+    forall(
+        &Config { cases: 40, ..Default::default() },
+        |rng| {
+            (
+                (gemm_dim(rng), gemm_dim(rng), gemm_dim(rng)),
+                rng.next_below(PRESETS.len() as u64) as usize,
+                rng.next_below(3) as usize,
+                rng.next_below(6) as usize,
+            )
+        },
+        |&(dims, ci, pi, oi)| {
+            shrink_dims3(&dims).into_iter().map(|d| (d, ci, pi, oi)).collect()
+        },
+        |&((m, n, k), ci, pi, oi)| {
+            let cfg = preset(PRESETS[ci]).unwrap();
+            let phase = Phase::ALL[pi];
+            let opts = options(oi);
+            let shape = GemmShape::new(m, n, k);
+            let direct = simulate_gemm_shape(&cfg, shape, phase, &opts);
+            // First lookup may miss, the second must hit; both bit-identical.
+            let first = session.simulate(&cfg, shape, phase, &opts);
+            let second = session.simulate(&cfg, shape, phase, &opts);
+            bit_identical(&first, &direct)?;
+            bit_identical(&second, &direct)
+        },
+    );
+    let stats = session.stats();
+    // Every case queried its key twice: at least half the lookups hit.
+    assert!(stats.hits >= stats.misses, "{stats:?}");
+    assert_eq!(stats.entries, stats.inserts, "unbounded session must not evict: {stats:?}");
+}
+
+#[test]
+fn bounded_session_stays_bit_identical_under_eviction() {
+    // A tiny capacity forces constant eviction and re-simulation; results
+    // must still match the direct path exactly.
+    let session = SimSession::with_capacity(8);
+    let cfg = preset("1G1F").unwrap();
+    for round in 0..3 {
+        for i in 0..40usize {
+            let shape = GemmShape::new(256 + 16 * i, 24 + i, 64 + 8 * i);
+            let phase = Phase::ALL[i % 3];
+            let got = session.simulate(&cfg, shape, phase, &SimOptions::ideal());
+            let want = simulate_gemm_shape(&cfg, shape, phase, &SimOptions::ideal());
+            bit_identical(&got, &want).unwrap_or_else(|e| panic!("round {round} i {i}: {e}"));
+        }
+    }
+    assert!(session.stats().evictions > 0, "{:?}", session.stats());
+}
+
+#[test]
+fn concurrent_sessions_never_return_wrong_keyed_results() {
+    // Eight threads hammer one session with overlapping working sets that
+    // differ per thread; every answer is checked against an uncached
+    // ground truth computed in the same thread. A wrong-keyed result (a
+    // fingerprint mix-up or a shard race) fails the assert.
+    let session = Arc::new(SimSession::new());
+    let names = ["1G1C", "1G4C", "1G1F", "4G1F"];
+    std::thread::scope(|scope| {
+        for t in 0..8usize {
+            let session = Arc::clone(&session);
+            scope.spawn(move || {
+                for round in 0..3usize {
+                    for i in 0..10usize {
+                        let cfg = preset(names[(t + i) % names.len()]).unwrap();
+                        let shape =
+                            GemmShape::new(64 + 32 * i, 16 + 8 * ((t + i) % 5), 96 + 16 * i);
+                        let phase = Phase::ALL[(t + i + round) % 3];
+                        let opts = if (t + i) % 2 == 0 {
+                            SimOptions::ideal()
+                        } else {
+                            SimOptions::hbm2()
+                        };
+                        let got = session.simulate(&cfg, shape, phase, &opts);
+                        let want = simulate_gemm_shape(&cfg, shape, phase, &opts);
+                        bit_identical(&got, &want).unwrap_or_else(|e| {
+                            panic!("thread {t} round {round} {shape}: {e}")
+                        });
+                    }
+                }
+            });
+        }
+    });
+    let stats = session.stats();
+    // Rounds repeat each thread's keys and threads overlap: hits must occur.
+    assert!(stats.hits > 0, "{stats:?}");
+}

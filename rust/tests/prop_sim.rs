@@ -6,6 +6,7 @@ use flexsa::config::{preset, PRESETS};
 use flexsa::energy::{iteration_energy, EnergyModel};
 use flexsa::gemm::{Gemm, GemmShape, Phase, ELEM_BYTES};
 use flexsa::proptest::{forall, gemm_dim, shrink_dims3, Config};
+use flexsa::session::SimSession;
 use flexsa::sim::{simulate_gemm, simulate_iteration, SimOptions};
 
 fn cfg_cases() -> Config {
@@ -129,7 +130,7 @@ fn energy_components_positive_and_sum() {
         |&(m, n, k)| {
             let cfg = preset("4G1F").unwrap();
             let gemms = vec![Gemm::new(GemmShape::new(m, n, k), Phase::Forward, 0, "g")];
-            let it = simulate_iteration(&cfg, &gemms, &SimOptions::hbm2());
+            let it = simulate_iteration(&cfg, &gemms, &SimOptions::hbm2(), &SimSession::new());
             let e = iteration_energy(&cfg, &EnergyModel::default(), &it);
             if e.comp_mj <= 0.0 || e.gbuf_mj <= 0.0 || e.dram_mj <= 0.0 {
                 return Err(format!("non-positive component: {e:?}"));
