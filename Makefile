@@ -1,7 +1,7 @@
 # Convenience targets. The rust build needs no artifacts; `artifacts` is
 # only for the optional PJRT end-to-end path (DESIGN.md §6).
 
-.PHONY: artifacts test rust-test py-test bench-smoke
+.PHONY: artifacts test rust-test py-test bench-smoke store-smoke
 
 # AOT-lower the L2 model + L1 kernel to HLO text (python runs once, at
 # build time; see python/compile/aot.py).
@@ -19,5 +19,17 @@ py-test:
 # caught on every PR without paying for stable timings.
 bench-smoke:
 	cd rust && FLEXSA_BENCH_SMOKE=1 cargo bench
+
+# Local mirror of CI's persistent-cache smoke: the second identical run
+# against a warm --cache-dir must report sims=0 on its store line
+# (DESIGN.md §11).
+store-smoke:
+	rm -rf /tmp/flexsa-store-smoke
+	cd rust && FLEXSA_BENCH_SMOKE=1 cargo run --release --quiet -- fig10 --cache-dir /tmp/flexsa-store-smoke >/dev/null
+	cd rust && FLEXSA_BENCH_SMOKE=1 cargo run --release --quiet -- fig10 --cache-dir /tmp/flexsa-store-smoke >/dev/null 2>/tmp/flexsa-store-smoke.log
+	@hits=$$(sed -n 's/.*store: hits=\([0-9]*\).*/\1/p' /tmp/flexsa-store-smoke.log | tail -n 1); \
+	 sims=$$(sed -n 's/.*sims=\([0-9]*\).*/\1/p' /tmp/flexsa-store-smoke.log | tail -n 1); \
+	 echo "warm run: store hits=$$hits sims=$$sims"; \
+	 test -n "$$hits" && test "$$hits" -gt 0 && test -n "$$sims" && test "$$sims" -eq 0
 
 test: rust-test py-test

@@ -4,14 +4,17 @@
 //! within one iteration ResNet50's repeated residual blocks re-simulate
 //! identical shapes — with the [`SimSession`] cache off vs on. The cached
 //! replay must beat the uncached one by >= 2x; the hit rate is printed for
-//! the EXPERIMENTS.md §Perf table.
+//! the EXPERIMENTS.md §Perf table. Two persistent-store rows
+//! (`store_cold_disk` / `store_warm_disk`) measure the on-disk second tier
+//! (DESIGN.md §11): cold includes codec + atomic-write overhead, warm
+//! replays against a populated cache dir with a fresh memory session.
 
 use flexsa::bench_harness::{black_box, Bencher};
 use flexsa::config::preset;
 use flexsa::gemm::Gemm;
 use flexsa::models::resnet50;
 use flexsa::pruning::{prunetrain_schedule, Strength};
-use flexsa::session::SimSession;
+use flexsa::session::{SimSession, SimStore};
 use flexsa::sim::{simulate_iteration, SimOptions};
 
 fn main() {
@@ -72,11 +75,46 @@ fn main() {
     });
     println!("{}", hot.report_throughput(total_gemms as f64, "gemms"));
 
+    // Persistent on-disk second tier (DESIGN.md §11): the repeated-CLI
+    // shape. Cold-disk pays codec + atomic-write overhead on every miss;
+    // warm-disk starts each replay with an empty memory cache but answers
+    // every memory miss from disk without simulating.
+    let base = std::env::temp_dir().join(format!("flexsa-bench-store-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    // Each cold iteration writes into its own fresh subdirectory so the
+    // timed region is exactly one cold replay (no teardown of the previous
+    // iteration's entries inside the measurement); everything is removed
+    // once at the end.
+    let mut cold_round = 0u32;
+    let cold_disk = b.run("trajectory_replay/store_cold_disk", || {
+        cold_round += 1;
+        let d = base.join(format!("cold-{cold_round}"));
+        black_box(replay(&SimSession::with_store(SimStore::open(d).expect("open bench store"))))
+    });
+    println!("{}", cold_disk.report_throughput(total_gemms as f64, "gemms"));
+
+    let dir = base.join("warm");
+    let store_session =
+        || SimSession::with_store(SimStore::open(&dir).expect("open bench store"));
+    black_box(replay(&store_session())); // prime the disk tier
+    let warm_disk = b.run("trajectory_replay/store_warm_disk", || {
+        black_box(replay(&store_session()))
+    });
+    println!("{}", warm_disk.report_throughput(total_gemms as f64, "gemms"));
+
+    // Store hit rate + simulation count of one warm-disk replay.
+    let probe = store_session();
+    black_box(replay(&probe));
+    let pstats = probe.stats();
+    let pstore = probe.store().expect("store attached").stats();
+    println!("\nwarm-disk store: {} (sims this replay: {})", pstore.summary(), pstats.sims());
+    let _ = std::fs::remove_dir_all(&base);
+
     // Hit rate of a single cached replay, measured on its own session.
     let fresh = SimSession::new();
     black_box(replay(&fresh));
     let stats = fresh.stats();
     let speedup = cold.mean.as_secs_f64() / warm.mean.as_secs_f64();
-    println!("\nper-replay cache: {}", stats.summary());
+    println!("per-replay cache: {}", stats.summary());
     println!("speedup cached vs uncached: {speedup:.2}x (acceptance target: >= 2x)");
 }

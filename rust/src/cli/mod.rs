@@ -7,7 +7,7 @@ use std::collections::HashMap;
 /// Flags that never take a value, so a following token stays positional
 /// (`flexsa simulate --no-cache 512 256 128` keeps three positionals).
 /// Flags not listed here greedily consume the next non-`--` token.
-const BOOLEAN_FLAGS: &[&str] = &["ideal", "no-cache", "help"];
+const BOOLEAN_FLAGS: &[&str] = &["ideal", "no-cache", "no-store", "help"];
 
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]
@@ -115,6 +115,10 @@ mod tests {
         assert!(a.has("no-cache"));
         assert_eq!(a.get("no-cache"), None);
         assert_eq!(a.positional, vec!["512", "256", "128"]);
+        let a = parse("report --no-store 8 --cache-dir /tmp/x");
+        assert!(a.has("no-store"));
+        assert_eq!(a.get("cache-dir"), Some("/tmp/x"));
+        assert_eq!(a.positional, vec!["8"]);
         let a = parse("simulate 512 256 128 --ideal --config 1G1F");
         assert!(a.has("ideal"));
         assert_eq!(a.get("config"), Some("1G1F"));

@@ -87,6 +87,13 @@ pub struct ServiceStats {
     pub cache_misses: u64,
     /// Session-cache inserts at shutdown.
     pub cache_inserts: u64,
+    /// Persistent-store hits at shutdown (0 unless the session has a
+    /// [`crate::session::SimStore`] second tier attached).
+    pub cache_store_hits: u64,
+    /// Persistent-store misses at shutdown.
+    pub cache_store_misses: u64,
+    /// Persistent-store writes at shutdown.
+    pub cache_store_writes: u64,
 }
 
 impl SimService {
@@ -157,6 +164,9 @@ impl SimService {
         stats.cache_hits = cache.hits;
         stats.cache_misses = cache.misses;
         stats.cache_inserts = cache.inserts;
+        stats.cache_store_hits = cache.store_hits;
+        stats.cache_store_misses = cache.store_misses;
+        stats.cache_store_writes = cache.store_writes;
         stats
     }
 }
@@ -416,5 +426,36 @@ mod tests {
         let stats = second.shutdown();
         assert_eq!(stats.cache_hits, 1, "{stats:?}");
         assert_eq!(stats.cache_misses, 1, "{stats:?}");
+    }
+
+    #[test]
+    fn store_backed_services_reuse_results_across_restarts() {
+        use crate::session::SimStore;
+        let dir = crate::proptest::scratch_dir("service-store");
+        let cfg = Arc::new(preset("1G1C").unwrap());
+        let shape = GemmShape::new(300, 40, 70);
+        let session_on = |dir: &std::path::Path| {
+            Arc::new(SimSession::with_store(SimStore::open(dir).unwrap()))
+        };
+
+        // First service: cold disk — simulates once and persists.
+        let first = SimService::start_with_session(1, BatchPolicy::default(), session_on(&dir));
+        first.submit(&cfg, shape, Phase::Forward, SimOptions::ideal());
+        let direct = first.recv().unwrap().sim;
+        let stats = first.shutdown();
+        assert_eq!(stats.cache_store_misses, 1, "{stats:?}");
+        assert_eq!(stats.cache_store_writes, 1, "{stats:?}");
+
+        // Second service, fresh session, same dir: answered from disk
+        // without simulating, bit-identically.
+        let second = SimService::start_with_session(1, BatchPolicy::default(), session_on(&dir));
+        second.submit(&cfg, shape, Phase::Forward, SimOptions::ideal());
+        let replayed = second.recv().unwrap().sim;
+        assert_eq!(replayed.cycles.to_bits(), direct.cycles.to_bits());
+        assert_eq!(replayed.busy_macs, direct.busy_macs);
+        let stats = second.shutdown();
+        assert_eq!(stats.cache_store_hits, 1, "{stats:?}");
+        assert_eq!(stats.cache_misses, 1, "memory still misses; disk answers");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

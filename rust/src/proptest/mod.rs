@@ -1,8 +1,11 @@
 //! Mini property-testing framework (proptest is not in the offline vendor
 //! set): seeded generators + a runner with halving-based shrinking for
-//! `usize` tuples. Used by `rust/tests/prop_*.rs` for compiler/simulator
-//! invariants.
+//! `usize` tuples, plus shared domain helpers (the figure option points, a
+//! bit-exact [`GemmSim`] comparison, scratch directories) so the session
+//! and store property suites test one domain instead of drifting copies.
+//! Used by `rust/tests/prop_*.rs` for compiler/simulator invariants.
 
+use crate::sim::{GemmSim, RampMode, SimOptions};
 use crate::util::Lcg64;
 
 /// Number of cases per property by default.
@@ -82,6 +85,54 @@ pub fn shrink_dims3(d: &(usize, usize, usize)) -> Vec<(usize, usize, usize)> {
     }
     out.dedup();
     out
+}
+
+/// Number of distinct points [`figure_options`] cycles through.
+pub const FIGURE_OPTION_POINTS: usize = 6;
+
+/// The six [`SimOptions`] points the figure harnesses exercise (both
+/// memory models plus every ShiftV/ramp ablation corner). Shared by
+/// `tests/prop_session.rs` and `tests/prop_store.rs` so the two property
+/// suites cannot silently test diverging option domains.
+pub fn figure_options(i: usize) -> SimOptions {
+    match i % FIGURE_OPTION_POINTS {
+        0 => SimOptions::ideal(),
+        1 => SimOptions::hbm2(),
+        2 => SimOptions { ideal_dram: true, shiftv_overlap: false, ramp: RampMode::PerGemm },
+        3 => SimOptions { ideal_dram: false, shiftv_overlap: true, ramp: RampMode::PerJob },
+        4 => SimOptions { ideal_dram: true, shiftv_overlap: true, ramp: RampMode::PerIssue },
+        _ => SimOptions { ideal_dram: false, shiftv_overlap: false, ramp: RampMode::PerIssue },
+    }
+}
+
+/// Bit-exact comparison of two simulation results (floats compared by bit
+/// pattern), as a property-check result. The single definition of "what
+/// bit-identical means for a [`GemmSim`]": extending the struct means
+/// extending this comparison once, and every cache/codec property suite
+/// picks it up.
+pub fn gemm_bit_identical(a: &GemmSim, b: &GemmSim) -> CheckResult {
+    if a.cycles.to_bits() != b.cycles.to_bits()
+        || a.compute_cycles.to_bits() != b.compute_cycles.to_bits()
+        || a.dram_cycles.to_bits() != b.dram_cycles.to_bits()
+        || a.busy_macs != b.busy_macs
+        || a.traffic != b.traffic
+        || a.waves_by_mode != b.waves_by_mode
+    {
+        return Err(format!(
+            "results diverge: cycles {} vs {}, macs {} vs {}, waves {:?} vs {:?}",
+            a.cycles, b.cycles, a.busy_macs, b.busy_macs, a.waves_by_mode, b.waves_by_mode
+        ));
+    }
+    Ok(())
+}
+
+/// Fresh per-process scratch directory for on-disk cache tests: unique per
+/// `tag`, any leftover from a previous run is removed. The caller (or the
+/// store it opens) creates it; the caller removes it when done.
+pub fn scratch_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("flexsa-scratch-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
 }
 
 /// Draw a GEMM-ish dimension, biased toward the interesting boundaries

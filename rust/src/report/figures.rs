@@ -46,6 +46,11 @@ pub struct EvalGrid {
     pub workloads: Vec<Workload>,
     /// Key: (model_idx, sched_idx, cfg_name, ideal).
     cells: HashMap<(usize, usize, &'static str, bool), TrajectoryAverage>,
+    /// True when this grid was computed with the reduced smoke trajectory
+    /// ([`Self::compute_auto`] under `FLEXSA_BENCH_SMOKE`); every figure
+    /// built from it carries a marker note so smoke numbers can never be
+    /// mistaken for paper results.
+    pub reduced: bool,
 }
 
 impl EvalGrid {
@@ -60,10 +65,15 @@ impl EvalGrid {
     /// when [`crate::bench_harness::SMOKE_ENV`] is set — the grid benches'
     /// counterpart of [`crate::bench_harness::Bencher::auto`], so CI's
     /// bench-smoke step proves the pipeline without paying for the full
-    /// 600-simulation grid.
+    /// 600-simulation grid. The CLI's grid commands (`fig10`–`fig13`,
+    /// `e2e-layers`, `report`) route through here too, which is how the CI
+    /// persistent-cache smoke step runs the same reduced grid twice against
+    /// one `--cache-dir` and asserts the second pass simulates nothing.
     pub fn compute_auto(threads: usize, session: &SimSession) -> Self {
         if std::env::var_os(crate::bench_harness::SMOKE_ENV).is_some() {
-            Self::compute_workloads(threads, session, 10, 5, 42)
+            let mut grid = Self::compute_workloads(threads, session, 10, 5, 42);
+            grid.reduced = true;
+            grid
         } else {
             Self::compute(threads, session)
         }
@@ -112,7 +122,20 @@ impl EvalGrid {
             let refs: Vec<_> = results[range].iter().collect();
             cells.insert(key, aggregate(&refs));
         }
-        Self { workloads, cells }
+        Self { workloads, cells, reduced: false }
+    }
+
+    /// The figure notes with the reduced-grid marker appended when this is
+    /// a smoke grid (see [`Self::reduced`]).
+    fn marked(&self, mut notes: Vec<String>) -> Vec<String> {
+        if self.reduced {
+            notes.push(
+                "REDUCED SMOKE GRID (FLEXSA_BENCH_SMOKE set): 10-epoch/interval-5 \
+                 trajectory, not the paper's 90/10 — do not record these numbers"
+                    .into(),
+            );
+        }
+        notes
     }
 
     /// Look up one grid cell (panics if out of range).
@@ -406,7 +429,7 @@ pub fn fig10(grid: &EvalGrid, ideal: bool) -> FigureReport {
             if ideal { "ideal DRAM" } else { "HBM2 270 GB/s" }
         ),
         table: t,
-        notes,
+        notes: grid.marked(notes),
     }
 }
 
@@ -430,7 +453,7 @@ pub fn fig11(grid: &EvalGrid) -> FigureReport {
         id: "Fig11".into(),
         title: "On-chip (GBUF→LBUF) traffic normalized to 1G1C".into(),
         table: t,
-        notes: vec![
+        notes: grid.marked(vec![
             format!("1G4C: {}", paper::vs(ratios[1], paper::FIG11.traffic_1g4c)),
             format!("4G4C: {}", paper::vs(ratios[2], paper::FIG11.traffic_4g4c)),
             format!(
@@ -441,7 +464,7 @@ pub fn fig11(grid: &EvalGrid) -> FigureReport {
                 "4G1F saving vs 4G4C: {}",
                 paper::vs(1.0 - ratios[4] / ratios[2], paper::FIG11.flexsa4_vs_4g4c_saving)
             ),
-        ],
+        ]),
     }
 }
 
@@ -490,11 +513,11 @@ pub fn fig12(grid: &EvalGrid) -> FigureReport {
         id: "Fig12".into(),
         title: "Dynamic energy per training iteration (mJ, strengths averaged)".into(),
         table: t,
-        notes: vec![format!(
+        notes: grid.marked(vec![format!(
             "1G4C vs 1G1F energy increase ({}): {} (paper: >20% for ResNet50/Inception)",
             worst_flexsa_gap.1,
             crate::util::fmt::pct(worst_flexsa_gap.0)
-        )],
+        )]),
     }
 }
 
@@ -540,7 +563,7 @@ pub fn fig13(grid: &EvalGrid) -> FigureReport {
         id: "Fig13".into(),
         title: "FlexSA operating-mode breakdown (wave issues, strengths averaged)".into(),
         table: t,
-        notes,
+        notes: grid.marked(notes),
     }
 }
 
@@ -581,10 +604,10 @@ pub fn e2e_layers(grid: &EvalGrid) -> FigureReport {
         id: "SecVIII-e2e".into(),
         title: "End-to-end training speedup including SIMD-bound other layers".into(),
         table: t,
-        notes: vec![
+        notes: grid.marked(vec![
             format!("avg 1G1F: {}", paper::vs(avg[0], paper::E2E_SPEEDUP[0])),
             format!("avg 4G1F: {}", paper::vs(avg[1], paper::E2E_SPEEDUP[1])),
-        ],
+        ]),
     }
 }
 

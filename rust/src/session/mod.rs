@@ -25,6 +25,16 @@
 //! ([`SimOptions::fingerprint`]). Per-GEMM loops precompute the config
 //! digest once ([`SimSession::simulate_keyed`]) so the hit path never
 //! re-serializes the config.
+//!
+//! A session can additionally be backed by a persistent on-disk second
+//! tier ([`SimStore`], DESIGN.md §11): memory misses read through to the
+//! store before simulating, and fresh results are written behind
+//! (best-effort, atomic), so repeated CLI invocations sharing a cache
+//! directory skip simulation entirely.
+
+pub mod store;
+
+pub use store::{SimStore, StoreStats};
 
 use crate::config::AcceleratorConfig;
 use crate::gemm::{GemmShape, Phase};
@@ -78,10 +88,12 @@ impl Fnv128 {
 /// Counter snapshot of a [`SimSession`].
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct SessionStats {
-    /// Lookups answered from the cache.
+    /// Lookups answered from the in-memory cache.
     pub hits: u64,
-    /// Lookups that ran the simulator (includes all lookups on a disabled
-    /// session).
+    /// Lookups the memory cache could not answer (includes all lookups on
+    /// a disabled session). With a persistent store attached, a miss may
+    /// still be answered from disk — [`Self::sims`] counts the lookups
+    /// that actually ran the simulator.
     pub misses: u64,
     /// Results inserted into the cache.
     pub inserts: u64,
@@ -89,12 +101,56 @@ pub struct SessionStats {
     pub evictions: u64,
     /// Entries currently resident.
     pub entries: u64,
+    /// Memory misses answered by the persistent store (0 when no store is
+    /// attached).
+    pub store_hits: u64,
+    /// Memory misses the persistent store could not answer.
+    pub store_misses: u64,
+    /// Results written behind to the persistent store.
+    pub store_writes: u64,
 }
 
 impl SessionStats {
     /// Total lookups (hits + misses).
     pub fn lookups(&self) -> u64 {
         self.hits + self.misses
+    }
+
+    /// Simulator executions: memory misses not answered by the store. The
+    /// warm-disk acceptance criterion is `sims() == 0` on a repeated run.
+    pub fn sims(&self) -> u64 {
+        self.misses.saturating_sub(self.store_hits)
+    }
+
+    /// Total persistent-store lookups (store hits + store misses).
+    pub fn store_lookups(&self) -> u64 {
+        self.store_hits + self.store_misses
+    }
+
+    /// Fraction of store lookups answered from disk (0 when idle; 1.0 is
+    /// the warm-cache-dir acceptance criterion).
+    pub fn store_hit_rate(&self) -> f64 {
+        if self.store_lookups() == 0 {
+            0.0
+        } else {
+            self.store_hits as f64 / self.store_lookups() as f64
+        }
+    }
+
+    /// Counter deltas since an `earlier` snapshot of the same session
+    /// (`entries` is carried over, not subtracted — it is a level, not a
+    /// counter). Backs the CLI's per-figure hit-rate lines.
+    pub fn delta(&self, earlier: &SessionStats) -> SessionStats {
+        SessionStats {
+            hits: self.hits.saturating_sub(earlier.hits),
+            misses: self.misses.saturating_sub(earlier.misses),
+            inserts: self.inserts.saturating_sub(earlier.inserts),
+            evictions: self.evictions.saturating_sub(earlier.evictions),
+            entries: self.entries,
+            store_hits: self.store_hits.saturating_sub(earlier.store_hits),
+            store_misses: self.store_misses.saturating_sub(earlier.store_misses),
+            store_writes: self.store_writes.saturating_sub(earlier.store_writes),
+        }
     }
 
     /// Fraction of lookups answered from the cache (0 when idle).
@@ -143,6 +199,8 @@ pub struct SimSession {
     shard_capacity: Option<usize>,
     /// `false` = pass-through (the CLI's `--no-cache` escape hatch).
     enabled: bool,
+    /// Persistent on-disk second tier (read-through/write-behind).
+    store: Option<SimStore>,
     hits: AtomicU64,
     misses: AtomicU64,
     inserts: AtomicU64,
@@ -161,6 +219,7 @@ impl SimSession {
             shards: (0..SHARDS).map(|_| Mutex::new(Shard::default())).collect(),
             shard_capacity: capacity.map(|c| c.div_ceil(SHARDS).max(1)),
             enabled,
+            store: None,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             inserts: AtomicU64::new(0),
@@ -190,6 +249,27 @@ impl SimSession {
     /// detached threads like [`crate::coordinator::SimService`]).
     pub fn shared() -> Arc<Self> {
         Arc::new(Self::new())
+    }
+
+    /// Unbounded caching session backed by a persistent on-disk store:
+    /// memory misses read through to `store` before simulating, and fresh
+    /// results are written behind (DESIGN.md §11).
+    pub fn with_store(store: SimStore) -> Self {
+        let mut s = Self::new();
+        s.store = Some(store);
+        s
+    }
+
+    /// Attach (or detach, with `None`) the persistent second tier. Takes
+    /// `&mut self`: wire the store up before sharing the session across
+    /// threads.
+    pub fn set_store(&mut self, store: Option<SimStore>) {
+        self.store = store;
+    }
+
+    /// The attached persistent store, if any.
+    pub fn store(&self) -> Option<&SimStore> {
+        self.store.as_ref()
     }
 
     /// Whether lookups can be answered from the cache.
@@ -222,6 +302,13 @@ impl SimSession {
         phase: Phase,
         opts: &SimOptions,
     ) -> Fingerprint {
+        // The options pack must fit the 1-byte slot below — if a future
+        // SimOptions knob pushes it past 8 bits, widen the encoding (and
+        // bump `sim::SIM_VERSION`) instead of silently colliding keys.
+        debug_assert!(
+            opts.fingerprint() <= u8::MAX as u64,
+            "SimOptions::fingerprint no longer fits one byte"
+        );
         let mut h = Fnv128::new();
         h.write_u64(cfg_fp);
         h.write_u64(shape.m as u64);
@@ -266,22 +353,47 @@ impl SimSession {
             self.misses.fetch_add(1, Ordering::Relaxed);
             return Arc::new(simulate_gemm_shape(cfg, shape, phase, opts));
         }
-        let fp = Self::fingerprint_keyed(cfg_fp, shape, phase, opts).0;
-        let shard = &self.shards[fp as usize % SHARDS];
-        let cached = shard.lock().unwrap().map.get(&fp).cloned();
+        let fp = Self::fingerprint_keyed(cfg_fp, shape, phase, opts);
+        let shard = &self.shards[fp.0 as usize % SHARDS];
+        let cached = shard.lock().unwrap().map.get(&fp.0).cloned();
         if let Some(hit) = cached {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return hit;
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
+        // Second tier: read through the persistent store before paying for
+        // a simulation. A disk hit is promoted into the memory map.
+        if let Some(disk) = self.store.as_ref().and_then(|st| st.get(fp)) {
+            return self.insert_or_adopt(shard, fp.0, Arc::new(disk)).0;
+        }
         // Simulate outside the lock (see the type-level docs).
         let sim = Arc::new(simulate_gemm_shape(cfg, shape, phase, opts));
+        let (sim, inserted) = self.insert_or_adopt(shard, fp.0, sim);
+        if inserted {
+            // Write behind: only the in-memory insert winner persists the
+            // entry, so a duplicate-compute race writes the file once.
+            if let Some(st) = &self.store {
+                st.put(fp, &sim);
+            }
+        }
+        sim
+    }
+
+    /// Insert `sim` under `fp` (applying the capacity bound), or adopt the
+    /// existing entry if another thread inserted first. Returns the
+    /// canonical `Arc` and whether this call did the insert.
+    fn insert_or_adopt(
+        &self,
+        shard: &Mutex<Shard>,
+        fp: u128,
+        sim: Arc<GemmSim>,
+    ) -> (Arc<GemmSim>, bool) {
         let mut guard = shard.lock().unwrap();
         let s = &mut *guard;
         if let Some(existing) = s.map.get(&fp) {
             // Lost a duplicate-compute race: adopt the first insert so all
             // callers observe one canonical Arc per key.
-            return Arc::clone(existing);
+            return (Arc::clone(existing), false);
         }
         s.map.insert(fp, Arc::clone(&sim));
         s.order.push_back(fp);
@@ -297,17 +409,22 @@ impl SimSession {
                 }
             }
         }
-        sim
+        (sim, true)
     }
 
-    /// Snapshot of the hit/miss/insert/eviction counters.
+    /// Snapshot of the hit/miss/insert/eviction counters (plus the
+    /// attached store's counters, when one is wired up).
     pub fn stats(&self) -> SessionStats {
+        let store = self.store.as_ref().map(|s| s.stats()).unwrap_or_default();
         SessionStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             inserts: self.inserts.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
             entries: self.len() as u64,
+            store_hits: store.hits,
+            store_misses: store.misses,
+            store_writes: store.writes,
         }
     }
 
@@ -462,5 +579,49 @@ mod tests {
         let text = fp.to_string();
         assert_eq!(text.len(), 32);
         assert!(text.chars().all(|c| c.is_ascii_hexdigit()));
+    }
+
+    #[test]
+    fn store_backed_session_reads_through_and_writes_behind() {
+        let dir = crate::proptest::scratch_dir("session-tiers");
+        let cfg = preset("1G1F").unwrap();
+
+        // Cold disk: the miss simulates and writes the entry behind.
+        let cold = SimSession::with_store(SimStore::open(&dir).unwrap());
+        let a = cold.simulate(&cfg, shape(), Phase::Forward, &SimOptions::ideal());
+        let st = cold.stats();
+        assert_eq!((st.misses, st.store_hits, st.store_misses, st.store_writes), (1, 0, 1, 1));
+        assert_eq!(st.sims(), 1);
+
+        // Warm disk, fresh memory: the miss is answered from disk without
+        // simulating, bit-identically.
+        let warm = SimSession::with_store(SimStore::open(&dir).unwrap());
+        let b = warm.simulate(&cfg, shape(), Phase::Forward, &SimOptions::ideal());
+        assert_eq!(a.cycles.to_bits(), b.cycles.to_bits());
+        assert_eq!(a.busy_macs, b.busy_macs);
+        assert_eq!(a.waves_by_mode, b.waves_by_mode);
+        let st = warm.stats();
+        assert_eq!((st.misses, st.store_hits, st.store_writes), (1, 1, 0));
+        assert_eq!(st.sims(), 0, "{st:?}");
+        // The disk hit was promoted into memory: the next lookup is a
+        // plain memory hit with no further store traffic.
+        warm.simulate(&cfg, shape(), Phase::Forward, &SimOptions::ideal());
+        let st = warm.stats();
+        assert_eq!((st.hits, st.store_hits, st.store_misses), (1, 1, 0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stats_delta_subtracts_counters_but_keeps_entries() {
+        let s = SimSession::new();
+        let cfg = preset("1G1C").unwrap();
+        s.simulate(&cfg, shape(), Phase::Forward, &SimOptions::ideal());
+        let before = s.stats();
+        s.simulate(&cfg, shape(), Phase::Forward, &SimOptions::ideal());
+        s.simulate(&cfg, shape(), Phase::DataGrad, &SimOptions::ideal());
+        let d = s.stats().delta(&before);
+        assert_eq!((d.hits, d.misses, d.inserts), (1, 1, 1));
+        assert_eq!(d.entries, 2, "delta carries the current entry level");
+        assert!((d.hit_rate() - 0.5).abs() < 1e-12);
     }
 }

@@ -1,0 +1,509 @@
+//! Persistent on-disk second tier for the session cache (DESIGN.md §11).
+//!
+//! A [`SimStore`] is a versioned, content-addressed directory of encoded
+//! [`GemmSim`] results, keyed by the session [`Fingerprint`] with the
+//! simulator version byte ([`crate::sim::SIM_VERSION`]) folded into the key
+//! derivation. [`crate::session::SimSession`] uses it as a
+//! read-through/write-behind backing store: a memory miss consults the
+//! store before simulating, and freshly simulated results are written back
+//! best-effort — the store can never change a result, only skip work.
+//!
+//! Guarantees:
+//!
+//! - **Self-describing entries.** Every entry is `magic ∥ version ∥
+//!   fixed-width LE fields ∥ length-prefixed `waves_by_mode` ∥ FNV-1a/64
+//!   checksum` ([`encode_gemm_sim`]). Decoding validates all of it;
+//!   truncated, tampered, or wrong-version bytes yield a [`CodecError`],
+//!   which [`SimStore::get`] treats as a clean miss (the subsequent
+//!   write-behind repairs the entry).
+//! - **Version auto-invalidation.** The key folds the simulator version
+//!   byte, so bumping [`crate::sim::SIM_VERSION`] re-keys the whole store:
+//!   stale entries simply stop resolving. The byte is *also* stored in the
+//!   entry header as a second, self-describing line of defense.
+//! - **Atomic writes.** Entries are written to a unique temp file in the
+//!   same directory and `rename`d into place, so concurrent CLI
+//!   invocations sharing one cache dir never observe torn entries —
+//!   readers see the old entry, no entry, or the complete new one.
+//!   Concurrent writers of one key race benignly: the simulator is
+//!   deterministic, so both rename bit-identical content.
+
+use crate::isa::Mode;
+use crate::session::Fingerprint;
+use crate::sim::{GemmSim, Traffic, SIM_VERSION};
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Magic prefix of every store entry.
+pub const MAGIC: [u8; 4] = *b"FXSA";
+
+/// Filename extension of store entries.
+const EXT: &str = "gsim";
+
+/// Fixed-size prefix of an encoded entry: magic, version byte, three `f64`
+/// timing fields, `busy_macs`, five traffic counters, and the
+/// `waves_by_mode` length prefix.
+const HEADER_LEN: usize = 4 + 1 + 8 * 9 + 4;
+
+/// Trailing FNV-1a/64 checksum.
+const CHECKSUM_LEN: usize = 8;
+
+/// One `waves_by_mode` entry: mode index byte + LE `u64` count.
+const WAVE_ENTRY_LEN: usize = 9;
+
+/// Process-wide temp-file sequence: two [`SimStore`]s opened on the same
+/// directory in one process must still generate distinct temp names.
+static TEMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Why an on-disk entry failed to decode. Every variant is a *clean miss*
+/// for the cache: the caller re-simulates and the write-behind overwrites
+/// the bad entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CodecError {
+    /// Entry shorter than the fixed header plus checksum.
+    Truncated,
+    /// Magic prefix is not [`MAGIC`].
+    BadMagic,
+    /// Entry was written by a different simulator version (the found byte).
+    BadVersion(u8),
+    /// Trailing FNV-1a/64 checksum does not match the entry body.
+    BadChecksum,
+    /// The `waves_by_mode` length prefix disagrees with the payload size.
+    BadLength,
+    /// Unknown or non-canonical (unsorted / duplicate) mode index.
+    BadMode(u8),
+}
+
+impl std::fmt::Display for CodecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CodecError::Truncated => write!(f, "entry truncated"),
+            CodecError::BadMagic => write!(f, "bad magic prefix"),
+            CodecError::BadVersion(v) => write!(f, "simulator version mismatch (entry v{v})"),
+            CodecError::BadChecksum => write!(f, "checksum mismatch"),
+            CodecError::BadLength => write!(f, "length prefix disagrees with payload"),
+            CodecError::BadMode(i) => write!(f, "bad mode index {i}"),
+        }
+    }
+}
+
+/// Encode a [`GemmSim`] as a compact self-describing binary entry:
+/// [`MAGIC`], the version byte, `cycles`/`compute_cycles`/`dram_cycles` as
+/// LE `f64` bit patterns, `busy_macs` and the five traffic counters as LE
+/// `u64`, a LE `u32` count of `waves_by_mode` entries followed by
+/// `(mode index byte, LE u64 count)` pairs in ascending mode order, and a
+/// trailing FNV-1a/64 checksum over everything before it.
+pub fn encode_gemm_sim(sim: &GemmSim, version: u8) -> Vec<u8> {
+    let waves = sim.waves_by_mode.len();
+    let mut out = Vec::with_capacity(HEADER_LEN + waves * WAVE_ENTRY_LEN + CHECKSUM_LEN);
+    out.extend_from_slice(&MAGIC);
+    out.push(version);
+    out.extend_from_slice(&sim.cycles.to_bits().to_le_bytes());
+    out.extend_from_slice(&sim.compute_cycles.to_bits().to_le_bytes());
+    out.extend_from_slice(&sim.dram_cycles.to_bits().to_le_bytes());
+    out.extend_from_slice(&sim.busy_macs.to_le_bytes());
+    let t = &sim.traffic;
+    for v in [t.gbuf_to_lbuf, t.obuf_to_gbuf, t.dram_read, t.dram_write, t.overcore] {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out.extend_from_slice(&(waves as u32).to_le_bytes());
+    // BTreeMap iterates in ascending Mode order: the encoding is canonical.
+    for (mode, count) in &sim.waves_by_mode {
+        out.push(mode.index() as u8);
+        out.extend_from_slice(&count.to_le_bytes());
+    }
+    let sum = crate::util::fnv64(&out);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out
+}
+
+fn read_u64(bytes: &[u8], off: usize) -> u64 {
+    u64::from_le_bytes(bytes[off..off + 8].try_into().expect("bounds checked"))
+}
+
+/// Decode an entry produced by [`encode_gemm_sim`], validating magic,
+/// version, checksum, length consistency, and mode-index canonicality.
+/// Bit-exact: floats round-trip through their `to_bits` patterns.
+pub fn decode_gemm_sim(bytes: &[u8], version: u8) -> Result<GemmSim, CodecError> {
+    if bytes.len() < HEADER_LEN + CHECKSUM_LEN {
+        return Err(CodecError::Truncated);
+    }
+    let (body, sum) = bytes.split_at(bytes.len() - CHECKSUM_LEN);
+    if body[..4] != MAGIC {
+        return Err(CodecError::BadMagic);
+    }
+    if body[4] != version {
+        return Err(CodecError::BadVersion(body[4]));
+    }
+    let want = u64::from_le_bytes(sum.try_into().expect("checksum is 8 bytes"));
+    if crate::util::fnv64(body) != want {
+        return Err(CodecError::BadChecksum);
+    }
+    let waves =
+        u32::from_le_bytes(body[HEADER_LEN - 4..HEADER_LEN].try_into().expect("bounds")) as usize;
+    if body.len() != HEADER_LEN + waves * WAVE_ENTRY_LEN {
+        return Err(CodecError::BadLength);
+    }
+    let mut waves_by_mode = std::collections::BTreeMap::new();
+    let mut prev: Option<u8> = None;
+    for w in 0..waves {
+        let off = HEADER_LEN + w * WAVE_ENTRY_LEN;
+        let idx = body[off];
+        // Canonical form is strictly ascending known indices; anything else
+        // means the entry was not produced by `encode_gemm_sim`.
+        if idx as usize >= Mode::FLEXSA_MODES.len() + 1 || prev.is_some_and(|p| p >= idx) {
+            return Err(CodecError::BadMode(idx));
+        }
+        prev = Some(idx);
+        waves_by_mode.insert(Mode::from_index(idx as usize), read_u64(body, off + 1));
+    }
+    Ok(GemmSim {
+        cycles: f64::from_bits(read_u64(body, 5)),
+        compute_cycles: f64::from_bits(read_u64(body, 13)),
+        dram_cycles: f64::from_bits(read_u64(body, 21)),
+        busy_macs: read_u64(body, 29),
+        traffic: Traffic {
+            gbuf_to_lbuf: read_u64(body, 37),
+            obuf_to_gbuf: read_u64(body, 45),
+            dram_read: read_u64(body, 53),
+            dram_write: read_u64(body, 61),
+            overcore: read_u64(body, 69),
+        },
+        waves_by_mode,
+    })
+}
+
+/// Counter snapshot of a [`SimStore`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Lookups answered from disk (decoded cleanly).
+    pub hits: u64,
+    /// Lookups that found no entry — or a truncated/corrupt/stale one.
+    pub misses: u64,
+    /// Entries written (atomically) to disk.
+    pub writes: u64,
+    /// Write attempts that failed on an I/O error (best-effort: the cache
+    /// stays correct, only slower).
+    pub write_errors: u64,
+}
+
+impl StoreStats {
+    /// Total store lookups (hits + misses).
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Fraction of lookups answered from disk (0 when idle).
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups() as f64
+        }
+    }
+
+    /// One-line summary (the CLI's store line; CI greps `hits=`). Write
+    /// errors are appended when present so an unwritable cache dir is
+    /// distinguishable from a merely cold one.
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "hits={} misses={} writes={} ({:.1}% hit rate)",
+            self.hits,
+            self.misses,
+            self.writes,
+            self.hit_rate() * 100.0
+        );
+        if self.write_errors > 0 {
+            s.push_str(&format!(" write_errors={} (cache dir not writable?)", self.write_errors));
+        }
+        s
+    }
+}
+
+/// Versioned, content-addressed on-disk store of [`GemmSim`] results.
+///
+/// Thread- and process-safe: lookups read immutable files, writes are
+/// temp-file + `rename`. Multiple stores (in one process or many) may
+/// share a directory.
+pub struct SimStore {
+    dir: PathBuf,
+    version: u8,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    writes: AtomicU64,
+    write_errors: AtomicU64,
+}
+
+impl SimStore {
+    /// Open (creating if needed) a store at `dir`, keyed for the current
+    /// [`crate::sim::SIM_VERSION`].
+    pub fn open(dir: impl Into<PathBuf>) -> io::Result<SimStore> {
+        Self::open_versioned(dir, SIM_VERSION)
+    }
+
+    /// [`Self::open`] with an explicit version byte (tests use this to
+    /// prove that a version bump invalidates old entries).
+    pub fn open_versioned(dir: impl Into<PathBuf>, version: u8) -> io::Result<SimStore> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)?;
+        Ok(SimStore {
+            dir,
+            version,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            writes: AtomicU64::new(0),
+            write_errors: AtomicU64::new(0),
+        })
+    }
+
+    /// The default store location: `$FLEXSA_CACHE_DIR` if set (and
+    /// non-empty), else `$XDG_CACHE_HOME/flexsa`, else `$HOME/.cache/flexsa`,
+    /// else `None` (no persistent tier — e.g. a bare container without a
+    /// home directory).
+    pub fn default_dir() -> Option<PathBuf> {
+        if let Some(d) = std::env::var_os("FLEXSA_CACHE_DIR") {
+            if !d.is_empty() {
+                return Some(PathBuf::from(d));
+            }
+        }
+        if let Some(d) = std::env::var_os("XDG_CACHE_HOME") {
+            if !d.is_empty() {
+                return Some(PathBuf::from(d).join("flexsa"));
+            }
+        }
+        std::env::var_os("HOME")
+            .filter(|h| !h.is_empty())
+            .map(|h| PathBuf::from(h).join(".cache").join("flexsa"))
+    }
+
+    /// Directory this store reads and writes.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Version byte folded into every key and written into every entry.
+    pub fn version(&self) -> u8 {
+        self.version
+    }
+
+    /// Store key: the session fingerprint re-hashed (FNV-1a/128) with the
+    /// simulator-version byte folded in, so a version bump re-keys every
+    /// entry (DESIGN.md §11).
+    fn store_key(&self, fp: Fingerprint) -> u128 {
+        let mut h = super::Fnv128::new();
+        h.write(&fp.0.to_le_bytes());
+        h.write(&[self.version]);
+        h.state
+    }
+
+    /// On-disk path of the entry for `fp`: a two-hex-char shard directory
+    /// plus the 32-hex-char store key. Public so corruption tests (and
+    /// debugging humans) can find the file behind a fingerprint.
+    pub fn entry_path(&self, fp: Fingerprint) -> PathBuf {
+        let hex = format!("{:032x}", self.store_key(fp));
+        self.dir.join(&hex[..2]).join(format!("{hex}.{EXT}"))
+    }
+
+    /// Look up `fp`. Any failure — no file, short read, bad checksum,
+    /// version mismatch — is a clean miss, never an error or a wrong
+    /// result.
+    pub fn get(&self, fp: Fingerprint) -> Option<GemmSim> {
+        let found = std::fs::read(self.entry_path(fp))
+            .ok()
+            .and_then(|bytes| decode_gemm_sim(&bytes, self.version).ok());
+        match found {
+            Some(sim) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(sim)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Write `sim` under `fp`, atomically (temp file + rename in the same
+    /// directory). Best-effort: returns `false` (and counts a write error)
+    /// on I/O failure instead of propagating it — persistence is an
+    /// optimization, not a correctness requirement.
+    pub fn put(&self, fp: Fingerprint, sim: &GemmSim) -> bool {
+        match self.write_atomic(&self.entry_path(fp), &encode_gemm_sim(sim, self.version)) {
+            Ok(()) => {
+                self.writes.fetch_add(1, Ordering::Relaxed);
+                true
+            }
+            Err(_) => {
+                self.write_errors.fetch_add(1, Ordering::Relaxed);
+                false
+            }
+        }
+    }
+
+    fn write_atomic(&self, path: &Path, bytes: &[u8]) -> io::Result<()> {
+        let parent = path.parent().expect("entry paths always have a shard dir");
+        std::fs::create_dir_all(parent)?;
+        let tmp = parent.join(format!(
+            ".tmp-{}-{}",
+            std::process::id(),
+            TEMP_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        if let Err(e) = std::fs::write(&tmp, bytes) {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e);
+        }
+        // Readers see the old entry, no entry, or the complete new one —
+        // never a torn write.
+        match std::fs::rename(&tmp, path) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                let _ = std::fs::remove_file(&tmp);
+                Err(e)
+            }
+        }
+    }
+
+    /// Count the complete entries on disk (walks the shard directories;
+    /// in-flight temp files are excluded). For tests and diagnostics.
+    pub fn entry_count(&self) -> usize {
+        let Ok(shards) = std::fs::read_dir(&self.dir) else { return 0 };
+        shards
+            .flatten()
+            .filter_map(|shard| std::fs::read_dir(shard.path()).ok())
+            .flat_map(|files| files.flatten())
+            .filter(|f| f.path().extension().is_some_and(|e| e == EXT))
+            .count()
+    }
+
+    /// Snapshot of the hit/miss/write counters.
+    pub fn stats(&self) -> StoreStats {
+        StoreStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            writes: self.writes.load(Ordering::Relaxed),
+            write_errors: self.write_errors.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn temp_store_dir(test: &str) -> PathBuf {
+        crate::proptest::scratch_dir(&format!("store-unit-{test}"))
+    }
+
+    fn sample_sim() -> GemmSim {
+        GemmSim {
+            cycles: 12345.75,
+            compute_cycles: 10000.0,
+            dram_cycles: 0.125,
+            busy_macs: 987654321,
+            traffic: Traffic {
+                gbuf_to_lbuf: 11,
+                obuf_to_gbuf: 22,
+                dram_read: 33,
+                dram_write: 44,
+                overcore: 55,
+            },
+            waves_by_mode: BTreeMap::from([(Mode::Fw, 7), (Mode::Isw, 9)]),
+        }
+    }
+
+    fn assert_bit_identical(a: &GemmSim, b: &GemmSim) {
+        // One definition of bit-identity for the whole crate (see
+        // `proptest::gemm_bit_identical`): new `GemmSim` fields extend the
+        // comparison there and every codec/cache suite picks it up.
+        crate::proptest::gemm_bit_identical(a, b).unwrap();
+    }
+
+    #[test]
+    fn codec_round_trips() {
+        let sim = sample_sim();
+        let bytes = encode_gemm_sim(&sim, 3);
+        assert_eq!(bytes.len(), HEADER_LEN + 2 * WAVE_ENTRY_LEN + CHECKSUM_LEN);
+        assert_bit_identical(&decode_gemm_sim(&bytes, 3).unwrap(), &sim);
+        // Empty waves map round-trips too.
+        let empty = GemmSim { waves_by_mode: BTreeMap::new(), ..sample_sim() };
+        let bytes = encode_gemm_sim(&empty, 3);
+        assert_eq!(bytes.len(), HEADER_LEN + CHECKSUM_LEN);
+        assert_bit_identical(&decode_gemm_sim(&bytes, 3).unwrap(), &empty);
+    }
+
+    #[test]
+    fn codec_error_taxonomy() {
+        let bytes = encode_gemm_sim(&sample_sim(), 1);
+        assert_eq!(decode_gemm_sim(&bytes[..10], 1), Err(CodecError::Truncated));
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xFF;
+        assert_eq!(decode_gemm_sim(&bad, 1), Err(CodecError::BadMagic));
+        let mut bad = bytes.clone();
+        bad[4] = 9;
+        assert_eq!(decode_gemm_sim(&bad, 1), Err(CodecError::BadVersion(9)));
+        let mut bad = bytes.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x01;
+        assert_eq!(decode_gemm_sim(&bad, 1), Err(CodecError::BadChecksum));
+        // Flipping a body byte is also caught by the checksum.
+        let mut bad = bytes.clone();
+        bad[20] ^= 0x40;
+        assert_eq!(decode_gemm_sim(&bad, 1), Err(CodecError::BadChecksum));
+        // Dropping one wave entry (with a recomputed checksum) hits the
+        // length check.
+        let mut bad = bytes[..bytes.len() - CHECKSUM_LEN - WAVE_ENTRY_LEN].to_vec();
+        let sum = crate::util::fnv64(&bad);
+        bad.extend_from_slice(&sum.to_le_bytes());
+        assert_eq!(decode_gemm_sim(&bad, 1), Err(CodecError::BadLength));
+        // A bogus mode index (with a recomputed checksum) is rejected.
+        let mut bad = bytes[..bytes.len() - CHECKSUM_LEN].to_vec();
+        bad[HEADER_LEN] = 200;
+        let sum = crate::util::fnv64(&bad);
+        bad.extend_from_slice(&sum.to_le_bytes());
+        assert_eq!(decode_gemm_sim(&bad, 1), Err(CodecError::BadMode(200)));
+    }
+
+    #[test]
+    fn put_get_round_trips_on_disk() {
+        let dir = temp_store_dir("putget");
+        let store = SimStore::open(&dir).unwrap();
+        let fp = Fingerprint(0xDEAD_BEEF_0123_4567_89AB_CDEF_0000_1111);
+        assert!(store.get(fp).is_none());
+        assert!(store.put(fp, &sample_sim()));
+        assert_bit_identical(&store.get(fp).unwrap(), &sample_sim());
+        assert_eq!(store.entry_count(), 1);
+        let st = store.stats();
+        assert_eq!((st.hits, st.misses, st.writes, st.write_errors), (1, 1, 1, 0));
+        assert!((st.hit_rate() - 0.5).abs() < 1e-12);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn version_byte_is_folded_into_the_key() {
+        let dir = temp_store_dir("version-key");
+        let v1 = SimStore::open_versioned(&dir, 1).unwrap();
+        let v2 = SimStore::open_versioned(&dir, 2).unwrap();
+        let fp = Fingerprint(42);
+        assert_ne!(v1.entry_path(fp), v2.entry_path(fp));
+        v1.put(fp, &sample_sim());
+        // The v2 store never even finds v1's file: stale entries
+        // auto-invalidate without any scan-and-delete pass.
+        assert!(v2.get(fp).is_none());
+        assert!(v1.get(fp).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn overwrite_replaces_atomically() {
+        let dir = temp_store_dir("overwrite");
+        let store = SimStore::open(&dir).unwrap();
+        let fp = Fingerprint(7);
+        store.put(fp, &sample_sim());
+        let other = GemmSim { cycles: 1.0, ..sample_sim() };
+        store.put(fp, &other);
+        assert_eq!(store.entry_count(), 1);
+        assert_eq!(store.get(fp).unwrap().cycles.to_bits(), 1.0f64.to_bits());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -26,6 +26,15 @@ mod iteration;
 
 pub use engine::{simulate_gemm, simulate_gemm_shape, GemmSim, GroupExecutor, Traffic};
 
+/// Simulator output version, folded into every persistent-store key and
+/// written into every on-disk entry (DESIGN.md §11). **Bump this whenever a
+/// change makes `simulate_gemm_shape` produce different numbers for the
+/// same input** (timing model fixes, traffic accounting changes, new
+/// [`GemmSim`] fields): old `~/.cache/flexsa` entries then stop resolving
+/// (their keys fold the old byte) and are transparently re-simulated —
+/// no manual cache flush, no stale figures.
+pub const SIM_VERSION: u8 = 1;
+
 /// Where the pipeline fill/drain ramp (`k + n` cycles) is charged.
 ///
 /// With the decoupled `ShiftV` preload (paper §VI-B) and double-buffered

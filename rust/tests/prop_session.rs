@@ -6,39 +6,13 @@
 
 use flexsa::config::{preset, PRESETS};
 use flexsa::gemm::{GemmShape, Phase};
-use flexsa::proptest::{forall, gemm_dim, shrink_dims3, Config};
+use flexsa::proptest::{
+    figure_options as options, forall, gemm_bit_identical as bit_identical, gemm_dim,
+    shrink_dims3, Config, FIGURE_OPTION_POINTS,
+};
 use flexsa::session::SimSession;
-use flexsa::sim::{simulate_gemm_shape, GemmSim, RampMode, SimOptions};
+use flexsa::sim::{simulate_gemm_shape, SimOptions};
 use std::sync::Arc;
-
-/// The six option points the figures exercise (both memory models, all
-/// ramp/overlap ablations).
-fn options(i: usize) -> SimOptions {
-    match i {
-        0 => SimOptions::ideal(),
-        1 => SimOptions::hbm2(),
-        2 => SimOptions { ideal_dram: true, shiftv_overlap: false, ramp: RampMode::PerGemm },
-        3 => SimOptions { ideal_dram: false, shiftv_overlap: true, ramp: RampMode::PerJob },
-        4 => SimOptions { ideal_dram: true, shiftv_overlap: true, ramp: RampMode::PerIssue },
-        _ => SimOptions { ideal_dram: false, shiftv_overlap: false, ramp: RampMode::PerIssue },
-    }
-}
-
-fn bit_identical(a: &GemmSim, b: &GemmSim) -> Result<(), String> {
-    if a.cycles.to_bits() != b.cycles.to_bits()
-        || a.compute_cycles.to_bits() != b.compute_cycles.to_bits()
-        || a.dram_cycles.to_bits() != b.dram_cycles.to_bits()
-        || a.busy_macs != b.busy_macs
-        || a.traffic != b.traffic
-        || a.waves_by_mode != b.waves_by_mode
-    {
-        return Err(format!(
-            "cached diverges from direct: cycles {} vs {}, macs {} vs {}",
-            a.cycles, b.cycles, a.busy_macs, b.busy_macs
-        ));
-    }
-    Ok(())
-}
 
 #[test]
 fn cached_results_bit_identical_to_uncached() {
@@ -52,7 +26,7 @@ fn cached_results_bit_identical_to_uncached() {
                 (gemm_dim(rng), gemm_dim(rng), gemm_dim(rng)),
                 rng.next_below(PRESETS.len() as u64) as usize,
                 rng.next_below(3) as usize,
-                rng.next_below(6) as usize,
+                rng.next_below(FIGURE_OPTION_POINTS as u64) as usize,
             )
         },
         |&(dims, ci, pi, oi)| {

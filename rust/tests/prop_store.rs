@@ -1,0 +1,303 @@
+//! Property, corruption-resilience, and concurrency tests for the
+//! persistent session store (DESIGN.md §11), mirroring `prop_session.rs`:
+//! the on-disk tier must be bit-exact when healthy and a *clean miss* —
+//! never a panic, never a wrong result — when truncated, tampered with, or
+//! written by a different simulator version.
+
+use flexsa::config::{preset, PRESETS};
+use flexsa::gemm::{GemmShape, Phase};
+use flexsa::isa::Mode;
+use flexsa::proptest::{
+    figure_options, forall, gemm_bit_identical as bit_identical, gemm_dim,
+    scratch_dir as temp_store_dir, shrink_dims3, Config, FIGURE_OPTION_POINTS,
+};
+use flexsa::session::store::{decode_gemm_sim, encode_gemm_sim, SimStore};
+use flexsa::session::SimSession;
+use flexsa::sim::{simulate_gemm_shape, GemmSim, SimOptions, Traffic, SIM_VERSION};
+use flexsa::util::Lcg64;
+use std::sync::Arc;
+
+/// Encode→decode of *simulated* results is bit-identical across randomized
+/// dims, presets, phases, and options (the satellite's headline property).
+#[test]
+fn codec_round_trips_simulated_gemms_bit_identically() {
+    forall(
+        &Config { cases: 40, ..Default::default() },
+        |rng| {
+            (
+                (gemm_dim(rng), gemm_dim(rng), gemm_dim(rng)),
+                rng.next_below(PRESETS.len() as u64) as usize,
+                rng.next_below(3) as usize,
+                rng.next_below(FIGURE_OPTION_POINTS as u64) as usize,
+            )
+        },
+        |&(dims, ci, pi, oi)| {
+            shrink_dims3(&dims).into_iter().map(|d| (d, ci, pi, oi)).collect()
+        },
+        |&((m, n, k), ci, pi, oi)| {
+            let cfg = preset(PRESETS[ci]).unwrap();
+            let sim = simulate_gemm_shape(
+                &cfg,
+                GemmShape::new(m, n, k),
+                Phase::ALL[pi],
+                &figure_options(oi),
+            );
+            let bytes = encode_gemm_sim(&sim, SIM_VERSION);
+            let decoded = decode_gemm_sim(&bytes, SIM_VERSION)
+                .map_err(|e| format!("decode failed: {e}"))?;
+            bit_identical(&decoded, &sim)
+        },
+    );
+}
+
+/// A finite float drawn from the interesting corners: exact zero, tiny,
+/// fractional, huge (no NaNs — the simulator never produces them and the
+/// satellite pins the NaN-free domain).
+fn finite_f64(rng: &mut Lcg64) -> f64 {
+    match rng.next_below(5) {
+        0 => 0.0,
+        1 => rng.next_below(1 << 20) as f64 / 1024.0,
+        2 => f64::from_bits(0x0010_0000_0000_0000 | rng.next_below(1 << 30)), // subnormal-adjacent tiny
+        3 => rng.next_below(u64::MAX >> 12) as f64,
+        _ => rng.next_below(1_000_000) as f64 * 1e12,
+    }
+}
+
+/// Encode→decode round-trips synthetic `GemmSim` values too, including
+/// empty and multi-entry `waves_by_mode` maps and zero-valued fields the
+/// simulator rarely emits.
+#[test]
+fn codec_round_trips_synthetic_values() {
+    forall(
+        &Config { cases: 200, ..Default::default() },
+        |rng| {
+            let n_modes = rng.next_below(6) as usize; // 0..=5 entries
+            let mut waves_by_mode = std::collections::BTreeMap::new();
+            let mut indices: Vec<usize> = (0..5).collect();
+            rng.shuffle(&mut indices);
+            for &mi in indices.iter().take(n_modes) {
+                waves_by_mode.insert(Mode::from_index(mi), rng.next_u64());
+            }
+            GemmSim {
+                cycles: finite_f64(rng),
+                compute_cycles: finite_f64(rng),
+                dram_cycles: finite_f64(rng),
+                busy_macs: rng.next_u64(),
+                traffic: Traffic {
+                    gbuf_to_lbuf: rng.next_u64(),
+                    obuf_to_gbuf: rng.next_u64(),
+                    dram_read: rng.next_u64(),
+                    dram_write: rng.next_u64(),
+                    overcore: rng.next_u64(),
+                },
+                waves_by_mode,
+            }
+        },
+        |_| Vec::new(),
+        |sim| {
+            let bytes = encode_gemm_sim(sim, SIM_VERSION);
+            let decoded = decode_gemm_sim(&bytes, SIM_VERSION)
+                .map_err(|e| format!("decode failed: {e}"))?;
+            bit_identical(&decoded, sim)
+        },
+    );
+}
+
+/// Shared setup for the corruption tests: a store-backed session simulates
+/// one GEMM (writing the entry), then `tamper` mangles the file; the next
+/// session must treat it as a clean miss, return the bit-identical result,
+/// and leave a repaired entry on disk.
+fn corruption_round_trip(test: &str, tamper: impl Fn(&std::path::Path)) {
+    let dir = temp_store_dir(test);
+    let cfg = preset("1G1F").unwrap();
+    let shape = GemmShape::new(500, 37, 120);
+    let direct = simulate_gemm_shape(&cfg, shape, Phase::Forward, &SimOptions::ideal());
+
+    let first = SimSession::with_store(SimStore::open(&dir).unwrap());
+    first.simulate(&cfg, shape, Phase::Forward, &SimOptions::ideal());
+    let path = first.store().unwrap().entry_path(SimSession::fingerprint(
+        &cfg,
+        shape,
+        Phase::Forward,
+        &SimOptions::ideal(),
+    ));
+    assert!(path.is_file(), "entry must exist at {}", path.display());
+    tamper(&path);
+
+    // The corrupt entry is a clean miss: re-simulate, bit-identical, and
+    // the write-behind repairs the file.
+    let second = SimSession::with_store(SimStore::open(&dir).unwrap());
+    let got = second.simulate(&cfg, shape, Phase::Forward, &SimOptions::ideal());
+    bit_identical(&got, &direct).unwrap();
+    let st = second.stats();
+    assert_eq!((st.store_hits, st.store_misses, st.store_writes), (0, 1, 1), "{st:?}");
+    assert_eq!(st.sims(), 1);
+
+    // Repaired: a third session now hits the store without simulating.
+    let third = SimSession::with_store(SimStore::open(&dir).unwrap());
+    let healed = third.simulate(&cfg, shape, Phase::Forward, &SimOptions::ideal());
+    bit_identical(&healed, &direct).unwrap();
+    let st = third.stats();
+    assert_eq!((st.store_hits, st.sims()), (1, 0), "{st:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn truncated_entry_is_a_clean_miss_and_gets_repaired() {
+    corruption_round_trip("truncate", |path| {
+        let bytes = std::fs::read(path).unwrap();
+        std::fs::write(path, &bytes[..bytes.len() / 2]).unwrap();
+    });
+}
+
+#[test]
+fn empty_entry_is_a_clean_miss_and_gets_repaired() {
+    corruption_round_trip("empty", |path| {
+        std::fs::write(path, b"").unwrap();
+    });
+}
+
+#[test]
+fn flipped_checksum_byte_is_a_clean_miss_and_gets_repaired() {
+    corruption_round_trip("checksum", |path| {
+        let mut bytes = std::fs::read(path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x5A;
+        std::fs::write(path, &bytes).unwrap();
+    });
+}
+
+#[test]
+fn flipped_payload_byte_is_a_clean_miss_and_gets_repaired() {
+    corruption_round_trip("payload", |path| {
+        let mut bytes = std::fs::read(path).unwrap();
+        bytes[16] ^= 0x01; // inside the cycles field: checksum catches it
+        std::fs::write(path, &bytes).unwrap();
+    });
+}
+
+#[test]
+fn wrong_version_byte_is_a_clean_miss_and_gets_repaired() {
+    corruption_round_trip("version-byte", |path| {
+        let mut bytes = std::fs::read(path).unwrap();
+        bytes[4] = bytes[4].wrapping_add(1); // header version byte
+        std::fs::write(path, &bytes).unwrap();
+    });
+}
+
+/// A simulator-version bump re-keys the store: entries written under the
+/// old version are simply never found (no scan, no deletion, no panic).
+#[test]
+fn version_bump_invalidates_old_entries() {
+    let dir = temp_store_dir("version-bump");
+    let old = SimStore::open_versioned(&dir, SIM_VERSION).unwrap();
+    let new = SimStore::open_versioned(&dir, SIM_VERSION.wrapping_add(1)).unwrap();
+    let cfg = preset("1G1C").unwrap();
+    let shape = GemmShape::new(200, 20, 50);
+    let fp = SimSession::fingerprint(&cfg, shape, Phase::Forward, &SimOptions::ideal());
+    assert_ne!(old.entry_path(fp), new.entry_path(fp), "version byte must fold into the key");
+
+    let sim = simulate_gemm_shape(&cfg, shape, Phase::Forward, &SimOptions::ideal());
+    assert!(old.put(fp, &sim));
+    assert!(new.get(fp).is_none(), "stale entry must not resolve under the new version");
+    assert!(old.get(fp).is_some());
+    assert_eq!(new.stats().misses, 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Satellite 3: two sessions sharing one cache dir, 8 threads total, race
+/// the same keys. Every answer must be bit-identical to ground truth (no
+/// torn reads), and afterwards every key resolves to a valid entry
+/// (first-write-wins left nothing torn behind).
+#[test]
+fn racing_sessions_share_a_cache_dir_without_torn_entries() {
+    let dir = temp_store_dir("race");
+    let session_a = Arc::new(SimSession::with_store(SimStore::open(&dir).unwrap()));
+    let session_b = Arc::new(SimSession::with_store(SimStore::open(&dir).unwrap()));
+
+    // A small shared working set so all 8 threads collide on every key.
+    let keys: Vec<(&str, GemmShape, Phase, SimOptions)> = (0..6)
+        .map(|i| {
+            (
+                ["1G1C", "1G4C", "1G1F"][i % 3],
+                GemmShape::new(128 + 64 * i, 24 + 8 * i, 96 + 32 * i),
+                Phase::ALL[i % 3],
+                if i % 2 == 0 { SimOptions::ideal() } else { SimOptions::hbm2() },
+            )
+        })
+        .collect();
+    let keys = Arc::new(keys);
+
+    std::thread::scope(|scope| {
+        for t in 0..8usize {
+            let session =
+                if t % 2 == 0 { Arc::clone(&session_a) } else { Arc::clone(&session_b) };
+            let keys = Arc::clone(&keys);
+            scope.spawn(move || {
+                for round in 0..2usize {
+                    for i in 0..keys.len() {
+                        // Stagger start points so threads race different
+                        // keys at any instant.
+                        let (name, shape, phase, opts) = keys[(i + t) % keys.len()];
+                        let cfg = preset(name).unwrap();
+                        let got = session.simulate(&cfg, shape, phase, &opts);
+                        let want = simulate_gemm_shape(&cfg, shape, phase, &opts);
+                        bit_identical(&got, &want).unwrap_or_else(|e| {
+                            panic!("thread {t} round {round} {shape}: {e}")
+                        });
+                    }
+                }
+            });
+        }
+    });
+
+    // No torn entries: every key decodes from disk and matches ground
+    // truth exactly; no stray temp files survive.
+    let verify = SimStore::open(&dir).unwrap();
+    for (name, shape, phase, opts) in keys.iter() {
+        let cfg = preset(name).unwrap();
+        let fp = SimSession::fingerprint(&cfg, *shape, *phase, opts);
+        let on_disk = verify.get(fp).expect("entry must decode cleanly");
+        bit_identical(&on_disk, &simulate_gemm_shape(&cfg, *shape, *phase, opts)).unwrap();
+    }
+    assert_eq!(verify.entry_count(), keys.len(), "exactly one entry per key");
+    // Atomicity left no litter: every file under the store is a complete
+    // `.gsim` entry — a leaked `.tmp-*` from a failed rename shows up here.
+    let stray: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap()
+        .flatten()
+        .filter_map(|shard| std::fs::read_dir(shard.path()).ok())
+        .flat_map(|files| files.flatten())
+        .map(|f| f.path())
+        .filter(|p| p.extension() != Some(std::ffi::OsStr::new("gsim")))
+        .collect();
+    assert!(stray.is_empty(), "stray non-entry files: {stray:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The satellite's acceptance shape end-to-end in miniature: an identical
+/// second "invocation" (fresh session, same dir) performs zero GEMM
+/// simulations.
+#[test]
+fn warm_cache_dir_simulates_nothing() {
+    let dir = temp_store_dir("warm");
+    let cfg = preset("4G1F").unwrap();
+    let shapes: Vec<GemmShape> =
+        (0..10).map(|i| GemmShape::new(100 + 30 * i, 16 + 4 * i, 64 + 8 * i)).collect();
+
+    let cold = SimSession::with_store(SimStore::open(&dir).unwrap());
+    for &s in &shapes {
+        cold.simulate(&cfg, s, Phase::Forward, &SimOptions::hbm2());
+    }
+    assert_eq!(cold.stats().sims(), shapes.len() as u64);
+
+    let warm = SimSession::with_store(SimStore::open(&dir).unwrap());
+    for &s in &shapes {
+        warm.simulate(&cfg, s, Phase::Forward, &SimOptions::hbm2());
+    }
+    let st = warm.stats();
+    assert_eq!(st.sims(), 0, "warm disk must answer everything: {st:?}");
+    assert_eq!(st.store_hits, shapes.len() as u64);
+    assert!((st.store_hit_rate() - 1.0).abs() < 1e-12);
+    let _ = std::fs::remove_dir_all(&dir);
+}
