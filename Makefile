@@ -1,7 +1,7 @@
 # Convenience targets. The rust build needs no artifacts; `artifacts` is
 # only for the optional PJRT end-to-end path (DESIGN.md §6).
 
-.PHONY: artifacts test rust-test py-test bench-smoke store-smoke
+.PHONY: artifacts test rust-test py-test bench-smoke store-smoke plan-smoke
 
 # AOT-lower the L2 model + L1 kernel to HLO text (python runs once, at
 # build time; see python/compile/aot.py).
@@ -30,6 +30,21 @@ store-smoke:
 	@hits=$$(sed -n 's/.*store: hits=\([0-9]*\).*/\1/p' /tmp/flexsa-store-smoke.log | tail -n 1); \
 	 sims=$$(sed -n 's/.*sims=\([0-9]*\).*/\1/p' /tmp/flexsa-store-smoke.log | tail -n 1); \
 	 echo "warm run: store hits=$$hits sims=$$sims"; \
+	 test -n "$$hits" && test "$$hits" -gt 0 && test -n "$$sims" && test "$$sims" -eq 0
+
+# Local mirror of CI's plan smoke: the searched gap must be >= 0 and a
+# warm second run must answer from the persisted plan record (FXPL
+# entries) with sims=0 (DESIGN.md §12).
+plan-smoke:
+	rm -rf /tmp/flexsa-plan-smoke
+	cd rust && cargo run --release --quiet -- plan 32 1000 2048 --config 4G1F --cache-dir /tmp/flexsa-plan-smoke >/tmp/flexsa-plan-cold.out 2>/dev/null
+	cd rust && cargo run --release --quiet -- plan 32 1000 2048 --config 4G1F --cache-dir /tmp/flexsa-plan-smoke >/tmp/flexsa-plan-warm.out 2>/tmp/flexsa-plan-warm.log
+	@gap=$$(sed -n 's/.*gap=\(-\{0,1\}[0-9.]*\)%.*/\1/p' /tmp/flexsa-plan-cold.out | tail -n 1); \
+	 hits=$$(sed -n 's/.*plan store: hits=\([0-9]*\).*/\1/p' /tmp/flexsa-plan-warm.log | tail -n 1); \
+	 sims=$$(sed -n 's/.*sims=\([0-9]*\).*/\1/p' /tmp/flexsa-plan-warm.log | tail -n 1); \
+	 echo "cold gap=$$gap% warm: plan hits=$$hits sims=$$sims"; \
+	 test -n "$$gap"; case "$$gap" in -*) exit 1;; esac; \
+	 grep -q "from plan store" /tmp/flexsa-plan-warm.out; \
 	 test -n "$$hits" && test "$$hits" -gt 0 && test -n "$$sims" && test "$$sims" -eq 0
 
 test: rust-test py-test

@@ -7,7 +7,7 @@ use std::collections::HashMap;
 /// Flags that never take a value, so a following token stays positional
 /// (`flexsa simulate --no-cache 512 256 128` keeps three positionals).
 /// Flags not listed here greedily consume the next non-`--` token.
-const BOOLEAN_FLAGS: &[&str] = &["ideal", "no-cache", "no-store", "help"];
+const BOOLEAN_FLAGS: &[&str] = &["ideal", "no-cache", "no-store", "exhaustive", "help"];
 
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]
@@ -107,6 +107,17 @@ mod tests {
         let a = parse("compile --config 1G1F 128 128 128");
         assert_eq!(a.get("config"), Some("1G1F"));
         assert_eq!(a.positional.len(), 3);
+    }
+
+    #[test]
+    fn exhaustive_flag_keeps_plan_positionals() {
+        let a = parse("plan --exhaustive 512 256 128 --config 4G1F");
+        assert!(a.has("exhaustive"));
+        assert_eq!(a.positional, vec!["512", "256", "128"]);
+        assert_eq!(a.get("config"), Some("4G1F"));
+        let a = parse("plan resnet50 --beam 4");
+        assert_eq!(a.positional, vec!["resnet50"]);
+        assert_eq!(a.get_usize("beam", 2).unwrap(), 4);
     }
 
     #[test]

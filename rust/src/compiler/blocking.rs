@@ -10,6 +10,7 @@
 //! the blocking factor — this is the mechanism behind the paper's
 //! "increased memory bandwidth peaks" of 1G4C/4G4C (§VIII).
 
+use super::plan::BlockingPolicy;
 use crate::config::{AcceleratorConfig, UnitKind};
 use crate::gemm::{GemmShape, Phase, ACC_BYTES};
 
@@ -53,12 +54,30 @@ pub fn effective_gbuf_bytes(cfg: &AcceleratorConfig) -> usize {
 
 /// Compute the DRAM traffic of one group's GEMM partition.
 ///
-/// `k_partitioned`: outputs are f32 partial sums (reduced later).
+/// `k_parts`: how many K-partials share each output tile (1 = the output
+/// is final; > 1 = f32 partial sums reduced later, and each partition
+/// carries `1/k_parts` of the final-write traffic).
 pub fn gbuf_blocking(
     cfg: &AcceleratorConfig,
     p: GemmShape,
+    phase: Phase,
+    k_parts: usize,
+) -> DramPlan {
+    gbuf_blocking_with(cfg, p, phase, k_parts, &BlockingPolicy::Auto)
+}
+
+/// [`gbuf_blocking`] under an explicit [`BlockingPolicy`] — the planner's
+/// blocking-orientation hook. `Auto` reproduces the plan-less min-traffic
+/// choice bit-exactly; forced orientations report that orientation's
+/// traffic (never less than `Auto`'s, which is why the heuristic's
+/// blocking is already in-model optimal — the planner's gap table states
+/// this rather than assuming it).
+pub fn gbuf_blocking_with(
+    cfg: &AcceleratorConfig,
+    p: GemmShape,
     _phase: Phase,
-    k_partitioned: bool,
+    k_parts: usize,
+    blocking: &BlockingPolicy,
 ) -> DramPlan {
     let a = p.a_bytes();
     let b = p.b_bytes();
@@ -77,18 +96,33 @@ pub fn gbuf_blocking(
     let keep_c_passes = c_acc.div_ceil(gbuf_half).max(1);
     let keep_c = if keep_c_passes == 1 { a + b } else { u64::MAX };
 
-    let (read, passes) = [(keep_b, keep_b_passes), (keep_a, keep_a_passes), (keep_c, 1)]
-        .into_iter()
-        .min_by_key(|(bytes, _)| *bytes)
-        .map(|(bytes, passes)| (bytes, passes as u32))
-        .unwrap();
+    let auto = || {
+        [(keep_b, keep_b_passes), (keep_a, keep_a_passes), (keep_c, 1)]
+            .into_iter()
+            .min_by_key(|(bytes, _)| *bytes)
+            .expect("three candidates")
+    };
+    let (read, passes) = match blocking {
+        BlockingPolicy::Auto => auto(),
+        BlockingPolicy::KeepA => (keep_a, keep_a_passes),
+        BlockingPolicy::KeepB => (keep_b, keep_b_passes),
+        // KeepC is only meaningful when the accumulator panel fits; forcing
+        // it on an oversized output falls back to the min-traffic choice.
+        BlockingPolicy::KeepC if keep_c_passes == 1 => (keep_c, 1),
+        BlockingPolicy::KeepC => auto(),
+    };
+    let (read, passes) = (read, passes as u32);
 
-    let (write, reduce) = if k_partitioned {
-        // Partial sums in f32; reduction reads every group's partial once
-        // and writes the final bf16 tensor. The reduction charge is
-        // attached uniformly (each group carries its own partial's share).
+    let (write, reduce) = if k_parts > 1 {
+        // Partial sums in f32; reduction reads every partial of the output
+        // tile once and writes the final bf16 tensor. The charge is
+        // attached uniformly: each partition carries its own partial plus
+        // `1/k_parts` of the final write, summing to exactly one full
+        // output write across the partials (dividing by `cfg.groups` here
+        // would undercount hybrid grids and partial K splits, where fewer
+        // than `groups` partials share a tile).
         let partial = (p.m * p.n * ACC_BYTES) as u64;
-        (partial, partial + p.c_bytes() / cfg.groups.max(1) as u64)
+        (partial, partial + p.c_bytes() / k_parts as u64)
     } else {
         (p.c_bytes(), 0)
     };
@@ -106,7 +140,7 @@ mod tests {
         let cfg = preset("1G1C").unwrap();
         // 1 MiB of inputs fits the 10 MiB GBUF: A + B + C, one pass.
         let p = GemmShape::new(256, 256, 512);
-        let d = gbuf_blocking(&cfg, p, Phase::Forward, false);
+        let d = gbuf_blocking(&cfg, p, Phase::Forward, 1);
         assert_eq!(d.passes, 1);
         assert_eq!(d.read_bytes, p.a_bytes() + p.b_bytes());
         assert_eq!(d.write_bytes, p.c_bytes());
@@ -118,7 +152,7 @@ mod tests {
         let cfg = preset("1G1C").unwrap();
         // B = 16K x 16K bf16 = 512 MiB >> GBUF.
         let p = GemmShape::new(100_000, 16_384, 16_384);
-        let d = gbuf_blocking(&cfg, p, Phase::Forward, false);
+        let d = gbuf_blocking(&cfg, p, Phase::Forward, 1);
         assert!(d.passes > 1, "passes={}", d.passes);
         assert!(d.read_bytes > p.a_bytes() + p.b_bytes());
     }
@@ -130,8 +164,8 @@ mod tests {
         let big = preset("1G1C").unwrap();
         let split = preset("1G4C").unwrap();
         let p = GemmShape::new(100_352, 256, 2304); // resnet50-scale fwd GEMM
-        let d_big = gbuf_blocking(&big, p, Phase::Forward, false);
-        let d_split = gbuf_blocking(&split, p, Phase::Forward, false);
+        let d_big = gbuf_blocking(&big, p, Phase::Forward, 1);
+        let d_split = gbuf_blocking(&split, p, Phase::Forward, 1);
         assert!(
             d_split.read_bytes >= d_big.read_bytes,
             "{} vs {}",
@@ -144,9 +178,47 @@ mod tests {
     fn k_partition_writes_f32_partials() {
         let cfg = preset("4G4C").unwrap();
         let p = GemmShape::new(256, 576, 25_088);
-        let d = gbuf_blocking(&cfg, p, Phase::WeightGrad, true);
+        let d = gbuf_blocking(&cfg, p, Phase::WeightGrad, 4);
         assert_eq!(d.write_bytes, (256 * 576 * ACC_BYTES) as u64);
         assert!(d.reduce_bytes > 0);
+    }
+
+    #[test]
+    fn forced_orientation_never_beats_auto() {
+        let cfg = preset("1G4C").unwrap();
+        for p in [
+            GemmShape::new(100_352, 256, 2304),
+            GemmShape::new(1_000_000, 64, 64),
+            GemmShape::new(256, 576, 25_088),
+            GemmShape::new(64, 64, 64),
+        ] {
+            let auto = gbuf_blocking_with(&cfg, p, Phase::Forward, 1, &BlockingPolicy::Auto);
+            assert_eq!(auto.read_bytes, gbuf_blocking(&cfg, p, Phase::Forward, 1).read_bytes);
+            for forced in
+                [BlockingPolicy::KeepA, BlockingPolicy::KeepB, BlockingPolicy::KeepC]
+            {
+                let d = gbuf_blocking_with(&cfg, p, Phase::Forward, 1, &forced);
+                assert!(
+                    d.read_bytes >= auto.read_bytes,
+                    "{p} {forced:?}: {} < {}",
+                    d.read_bytes,
+                    auto.read_bytes
+                );
+                assert_eq!(d.write_bytes, auto.write_bytes);
+            }
+        }
+    }
+
+    #[test]
+    fn keep_c_falls_back_when_output_oversized() {
+        let cfg = preset("1G1C").unwrap();
+        // Output 16K x 16K f32 accumulators >> GBUF half: KeepC must fall
+        // back to the min-traffic orientation instead of reporting u64::MAX.
+        let p = GemmShape::new(16_384, 16_384, 64);
+        let auto = gbuf_blocking(&cfg, p, Phase::Forward, 1);
+        let forced = gbuf_blocking_with(&cfg, p, Phase::Forward, 1, &BlockingPolicy::KeepC);
+        assert_eq!(forced.read_bytes, auto.read_bytes);
+        assert_eq!(forced.passes, auto.passes);
     }
 
     #[test]
@@ -154,7 +226,7 @@ mod tests {
         let cfg = preset("1G1C").unwrap();
         // Tall-skinny: A huge, B tiny -> keep B resident, one pass over A.
         let p = GemmShape::new(1_000_000, 64, 64);
-        let d = gbuf_blocking(&cfg, p, Phase::Forward, false);
+        let d = gbuf_blocking(&cfg, p, Phase::Forward, 1);
         assert_eq!(d.read_bytes, p.a_bytes() + p.b_bytes());
     }
 }

@@ -19,10 +19,15 @@
 //!    `ShiftV`, `ExecGEMM`, `StLBUF`, `sync`.
 
 mod blocking;
+pub mod plan;
 mod tiling;
 
-pub use blocking::{gbuf_blocking, DramPlan};
-pub use tiling::{select_mode, tile_partition, tile_partition_visit, tiling_summary, TilingStats};
+pub use blocking::{gbuf_blocking, gbuf_blocking_with, DramPlan};
+pub use plan::{BlockingPolicy, ModePolicy, PartitionPolicy, PlanParams};
+pub use tiling::{
+    select_mode, select_mode_with, tile_partition, tile_partition_visit,
+    tile_partition_visit_plan, tiling_summary, TilingStats,
+};
 
 use crate::config::AcceleratorConfig;
 use crate::gemm::{GemmShape, Phase};
@@ -98,32 +103,81 @@ pub fn partitions(
     shape: GemmShape,
     phase: Phase,
 ) -> (Vec<GemmShape>, bool) {
-    let pdim = partition_dim(phase, cfg.groups);
-    let parts: Vec<GemmShape> = match pdim {
-        PartitionDim::None => vec![shape],
-        PartitionDim::M => split_even(shape.m, cfg.groups)
+    let (parts, k_parts) = partitions_with(cfg, shape, phase, &PartitionPolicy::Heuristic);
+    (parts, k_parts > 1)
+}
+
+/// [`partitions`] under an explicit [`PartitionPolicy`] — the planner's
+/// group-partitioning hook. `Heuristic` reproduces the §VII phase rule
+/// bit-exactly; `ForceM`/`ForceK` override the dimension; `Hybrid` splits
+/// a 2-D `m_parts × (groups / m_parts)` grid. Returns the partitions and
+/// the number of K-partials sharing each output tile (1 = no K split;
+/// feeds the reduction accounting in [`gbuf_blocking`]).
+pub fn partitions_with(
+    cfg: &AcceleratorConfig,
+    shape: GemmShape,
+    phase: Phase,
+    policy: &PartitionPolicy,
+) -> (Vec<GemmShape>, usize) {
+    let split_m = |groups: usize| -> Vec<GemmShape> {
+        split_even(shape.m, groups)
             .into_iter()
             .map(|m| GemmShape::new(m, shape.n, shape.k))
-            .collect(),
-        PartitionDim::K => split_even(shape.k, cfg.groups)
+            .collect()
+    };
+    let split_k = |groups: usize| -> Vec<GemmShape> {
+        split_even(shape.k, groups)
             .into_iter()
             .map(|k| GemmShape::new(shape.m, shape.n, k))
-            .collect(),
+            .collect()
     };
-    let k_partitioned = pdim == PartitionDim::K && parts.len() > 1;
-    (parts, k_partitioned)
+    match policy {
+        PartitionPolicy::Heuristic => {
+            let pdim = partition_dim(phase, cfg.groups);
+            let parts = match pdim {
+                PartitionDim::None => vec![shape],
+                PartitionDim::M => split_m(cfg.groups),
+                PartitionDim::K => split_k(cfg.groups),
+            };
+            let k_parts = if pdim == PartitionDim::K { parts.len() } else { 1 };
+            (parts, k_parts)
+        }
+        PartitionPolicy::ForceM => (split_m(cfg.groups), 1),
+        PartitionPolicy::ForceK => {
+            let parts = split_k(cfg.groups);
+            let k_parts = parts.len();
+            (parts, k_parts)
+        }
+        PartitionPolicy::Hybrid { m_parts } => {
+            // Grid split: M into `mp` chunks × K into `groups / mp` chunks.
+            // Non-divisor `m_parts` simply occupies fewer groups (mp * kp),
+            // mirroring how tiny GEMMs occupy fewer groups than exist.
+            let mp = (*m_parts as usize).clamp(1, cfg.groups);
+            let kp = (cfg.groups / mp).max(1);
+            let k_chunks = split_even(shape.k, kp);
+            let k_parts = k_chunks.len().max(1);
+            let mut parts = Vec::with_capacity(mp * k_parts);
+            for &m in &split_even(shape.m, mp) {
+                for &k in &k_chunks {
+                    parts.push(GemmShape::new(m, shape.n, k));
+                }
+            }
+            (parts, k_parts)
+        }
+    }
 }
 
 /// Compile one GEMM for an accelerator configuration.
 pub fn compile_gemm(cfg: &AcceleratorConfig, shape: GemmShape, phase: Phase) -> CompiledGemm {
     assert!(!shape.is_empty(), "cannot compile empty GEMM {shape}");
-    let (parts, k_partitioned) = partitions(cfg, shape, phase);
+    let (parts, k_parts) = partitions_with(cfg, shape, phase, &PartitionPolicy::Heuristic);
+    let k_partitioned = k_parts > 1;
     // Shared (N-dimension) inputs are replicated across groups when
     // M-partitioning (§VII) — accounted inside gbuf_blocking via `parts`.
     let groups = parts
         .iter()
         .map(|&p| {
-            let dram = gbuf_blocking(cfg, p, phase, k_partitioned);
+            let dram = gbuf_blocking(cfg, p, phase, k_parts);
             let program = tile_partition(cfg, p, k_partitioned);
             GroupPlan { partition: p, program, dram }
         })
@@ -175,6 +229,63 @@ mod tests {
         assert_eq!(c.groups.len(), 4);
         for g in &c.groups {
             assert!(matches!(g.program.insts.last(), Some(Inst::Sync { .. })));
+        }
+    }
+
+    #[test]
+    fn partition_policies_cover_the_gemm() {
+        let cfg = preset("4G1F").unwrap();
+        let shape = GemmShape::new(1000, 71, 333);
+        for phase in Phase::ALL {
+            for policy in [
+                PartitionPolicy::Heuristic,
+                PartitionPolicy::ForceM,
+                PartitionPolicy::ForceK,
+                PartitionPolicy::Hybrid { m_parts: 2 },
+            ] {
+                let (parts, _) = partitions_with(&cfg, shape, phase, &policy);
+                let macs: u64 = parts.iter().map(|p| p.macs()).sum();
+                assert_eq!(macs, shape.macs(), "{policy:?} {phase:?}");
+            }
+        }
+        // Heuristic policy is bit-identical to the plan-less path.
+        for phase in Phase::ALL {
+            let (a, ka) = partitions(&cfg, shape, phase);
+            let (b, kb) = partitions_with(&cfg, shape, phase, &PartitionPolicy::Heuristic);
+            assert_eq!(a, b);
+            assert_eq!(ka, kb > 1);
+        }
+    }
+
+    #[test]
+    fn forced_and_hybrid_partitions_shape_as_documented() {
+        let cfg = preset("4G1F").unwrap();
+        let shape = GemmShape::new(1000, 71, 333);
+        // ForceK on a forward GEMM: K split across the 4 groups, partials.
+        let (parts, kp) = partitions_with(&cfg, shape, Phase::Forward, &PartitionPolicy::ForceK);
+        assert_eq!(kp, 4);
+        assert_eq!(parts.iter().map(|p| p.k).sum::<usize>(), 333);
+        assert!(parts.iter().all(|p| p.m == 1000 && p.n == 71));
+        // ForceM on a weight-grad GEMM: M split, no partials.
+        let (parts, kp) = partitions_with(&cfg, shape, Phase::WeightGrad, &PartitionPolicy::ForceM);
+        assert_eq!(kp, 1);
+        assert_eq!(parts.iter().map(|p| p.m).sum::<usize>(), 1000);
+        // Hybrid 2xK: 2 M chunks x 2 K chunks, 2 K-partials per tile.
+        let (parts, kp) =
+            partitions_with(&cfg, shape, Phase::Forward, &PartitionPolicy::Hybrid { m_parts: 2 });
+        assert_eq!(kp, 2);
+        assert_eq!(parts.len(), 4);
+        // A K split shallower than the group count reports the actual
+        // partial count (the reduce accounting divides by it).
+        let tiny = GemmShape::new(1000, 71, 2);
+        let (parts, kp) = partitions_with(&cfg, tiny, Phase::Forward, &PartitionPolicy::ForceK);
+        assert_eq!((parts.len(), kp), (2, 2));
+        // Single-group configs degenerate to one partition for every policy.
+        let one = preset("1G1F").unwrap();
+        for policy in [PartitionPolicy::ForceM, PartitionPolicy::ForceK] {
+            let (parts, kp) = partitions_with(&one, shape, Phase::Forward, &policy);
+            assert_eq!(parts, vec![shape]);
+            assert_eq!(kp, 1);
         }
     }
 

@@ -1,0 +1,271 @@
+//! Compilation-plan parameters: the searchable knobs of the compiler.
+//!
+//! The paper's compile pipeline is one fixed heuristic: §VII's phase rule
+//! picks the group-partition dimension, `gbuf_blocking` picks the
+//! minimum-traffic resident input, and Algorithm 1 picks each wave's FlexSA
+//! mode. [`PlanParams`] turns each of those decisions into an explicit,
+//! enumerable input so the [`crate::planner`] can search the plan space and
+//! quantify the heuristic's optimality gap. The default
+//! ([`PlanParams::HEURISTIC`]) reproduces the paper pipeline **bit-exactly**
+//! (property-pinned by `tests/prop_planner.rs`), so threading plans through
+//! the compiler costs the zero-search path nothing.
+
+use crate::isa::Mode;
+
+/// How a GEMM is split across core groups (the §VII phase rule made
+/// searchable).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionPolicy {
+    /// The paper's rule: M for forward/data-grad, K for weight-grad.
+    Heuristic,
+    /// Split along output rows regardless of phase.
+    ForceM,
+    /// Split along the accumulation depth regardless of phase (groups then
+    /// produce partial sums reduced through memory).
+    ForceK,
+    /// 2-D grid split: `m_parts` chunks along M × `groups / m_parts` chunks
+    /// along K (K-partitioned when the K factor exceeds 1).
+    Hybrid {
+        /// Number of M chunks (clamped to `1..=groups`; the K factor is
+        /// `groups / m_parts`, so only divisors use every group).
+        m_parts: u8,
+    },
+}
+
+/// Which input the 2-level GBUF blocking keeps resident (the
+/// min-traffic orientation choice of `gbuf_blocking` made forceable).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockingPolicy {
+    /// Pick whichever orientation moves the fewest DRAM bytes (default).
+    Auto,
+    /// Keep A panels resident, stream B once per panel round.
+    KeepA,
+    /// Keep B panels resident, stream A once per panel round.
+    KeepB,
+    /// Output-resident K-blocking (both inputs stream exactly once). Falls
+    /// back to [`BlockingPolicy::Auto`] when the f32 accumulator panel does
+    /// not fit the effective GBUF half.
+    KeepC,
+}
+
+/// Per-wave FlexSA mode assignment (Algorithm 1 made searchable).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModePolicy {
+    /// The paper's Algorithm 1: `FW > HSW = VSW > ISW` by the half-array
+    /// thresholds.
+    Algorithm1,
+    /// Among the modes a wave physically fits, pick the one streaming the
+    /// most output rows per issue (LBUF-capacity aware); ties prefer fewer
+    /// parallel sub-waves (more large-array reuse).
+    ReuseGreedy,
+    /// Force one mode for every wave it physically fits; waves it cannot
+    /// serve (tile exceeds the sub-array) fall back to Algorithm 1.
+    Forced(Mode),
+}
+
+/// One complete compilation plan for a `(config, shape, phase)` GEMM.
+///
+/// `Copy` and 64-bit packable ([`PlanParams::pack`]), so plans travel
+/// through cache fingerprints, [`crate::coordinator::Request`]s, and
+/// on-disk plan records without allocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlanParams {
+    /// Group-partition dimension policy.
+    pub partition: PartitionPolicy,
+    /// GBUF blocking orientation policy.
+    pub blocking: BlockingPolicy,
+    /// Per-wave mode assignment policy.
+    pub mode: ModePolicy,
+}
+
+impl Default for PlanParams {
+    fn default() -> Self {
+        Self::HEURISTIC
+    }
+}
+
+impl PlanParams {
+    /// The paper's pipeline: phase-rule partitioning, min-traffic blocking,
+    /// Algorithm-1 mode selection. Compiling/simulating with this plan is
+    /// bit-identical to the plan-less entry points.
+    pub const HEURISTIC: PlanParams = PlanParams {
+        partition: PartitionPolicy::Heuristic,
+        blocking: BlockingPolicy::Auto,
+        mode: ModePolicy::Algorithm1,
+    };
+
+    /// Is this the zero-search default? (Exactly the plans whose
+    /// [`Self::pack`] is 0; such plans share cache keys with the plan-less
+    /// paths.)
+    pub fn is_heuristic(&self) -> bool {
+        *self == Self::HEURISTIC
+    }
+
+    /// Stable 64-bit encoding: bits 0–1 partition tag, bits 2–9 `m_parts`,
+    /// bits 10–11 blocking tag, bits 12–13 mode tag, bits 14–16 forced-mode
+    /// index. The heuristic plan packs to 0. Part of session-cache plan
+    /// fingerprints and the on-disk plan-record codec (DESIGN.md §12) —
+    /// changing the layout requires bumping the plan codec version.
+    pub fn pack(&self) -> u64 {
+        let (pt, pm) = match self.partition {
+            PartitionPolicy::Heuristic => (0u64, 0u64),
+            PartitionPolicy::ForceM => (1, 0),
+            PartitionPolicy::ForceK => (2, 0),
+            PartitionPolicy::Hybrid { m_parts } => (3, m_parts as u64),
+        };
+        let b = match self.blocking {
+            BlockingPolicy::Auto => 0u64,
+            BlockingPolicy::KeepA => 1,
+            BlockingPolicy::KeepB => 2,
+            BlockingPolicy::KeepC => 3,
+        };
+        let (mt, mf) = match self.mode {
+            ModePolicy::Algorithm1 => (0u64, 0u64),
+            ModePolicy::ReuseGreedy => (1, 0),
+            ModePolicy::Forced(m) => (2, m.index() as u64),
+        };
+        pt | (pm << 2) | (b << 10) | (mt << 12) | (mf << 14)
+    }
+
+    /// Inverse of [`Self::pack`]. Rejects unknown tags, out-of-range
+    /// indices, and non-canonical padding (a stored record from a future
+    /// layout decodes as a clean error, never a wrong plan).
+    pub fn unpack(bits: u64) -> Result<PlanParams, String> {
+        if bits >> 17 != 0 {
+            return Err(format!("plan bits {bits:#x}: unknown high bits"));
+        }
+        let pm = ((bits >> 2) & 0xFF) as u8;
+        let partition = match bits & 0b11 {
+            0 | 1 | 2 if pm != 0 => {
+                return Err(format!("plan bits {bits:#x}: m_parts on non-hybrid"));
+            }
+            0 => PartitionPolicy::Heuristic,
+            1 => PartitionPolicy::ForceM,
+            2 => PartitionPolicy::ForceK,
+            _ => PartitionPolicy::Hybrid { m_parts: pm },
+        };
+        let blocking = match (bits >> 10) & 0b11 {
+            0 => BlockingPolicy::Auto,
+            1 => BlockingPolicy::KeepA,
+            2 => BlockingPolicy::KeepB,
+            _ => BlockingPolicy::KeepC,
+        };
+        let mf = ((bits >> 14) & 0b111) as usize;
+        let mode = match (bits >> 12) & 0b11 {
+            0 | 1 if mf != 0 => {
+                return Err(format!("plan bits {bits:#x}: forced mode on non-forced policy"));
+            }
+            0 => ModePolicy::Algorithm1,
+            1 => ModePolicy::ReuseGreedy,
+            2 if mf < 5 => ModePolicy::Forced(Mode::from_index(mf)),
+            other => return Err(format!("plan bits {bits:#x}: bad mode tag/index {other}/{mf}")),
+        };
+        Ok(PlanParams { partition, blocking, mode })
+    }
+}
+
+impl std::fmt::Display for PlanParams {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.is_heuristic() {
+            return f.write_str("heuristic");
+        }
+        let part = match self.partition {
+            PartitionPolicy::Heuristic => "phase-rule".to_string(),
+            PartitionPolicy::ForceM => "M".to_string(),
+            PartitionPolicy::ForceK => "K".to_string(),
+            PartitionPolicy::Hybrid { m_parts } => format!("M{m_parts}xK"),
+        };
+        let block = match self.blocking {
+            BlockingPolicy::Auto => "auto",
+            BlockingPolicy::KeepA => "keepA",
+            BlockingPolicy::KeepB => "keepB",
+            BlockingPolicy::KeepC => "keepC",
+        };
+        let mode = match self.mode {
+            ModePolicy::Algorithm1 => "alg1".to_string(),
+            ModePolicy::ReuseGreedy => "greedy".to_string(),
+            ModePolicy::Forced(m) => format!("force-{}", m.name()),
+        };
+        write!(f, "part={part} block={block} mode={mode}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn space() -> Vec<PlanParams> {
+        let mut out = Vec::new();
+        let partitions = [
+            PartitionPolicy::Heuristic,
+            PartitionPolicy::ForceM,
+            PartitionPolicy::ForceK,
+            PartitionPolicy::Hybrid { m_parts: 2 },
+            PartitionPolicy::Hybrid { m_parts: 7 },
+        ];
+        let blockings = [
+            BlockingPolicy::Auto,
+            BlockingPolicy::KeepA,
+            BlockingPolicy::KeepB,
+            BlockingPolicy::KeepC,
+        ];
+        let modes = [
+            ModePolicy::Algorithm1,
+            ModePolicy::ReuseGreedy,
+            ModePolicy::Forced(Mode::Fw),
+            ModePolicy::Forced(Mode::Vsw),
+            ModePolicy::Forced(Mode::Hsw),
+            ModePolicy::Forced(Mode::Isw),
+            ModePolicy::Forced(Mode::Mono),
+        ];
+        for p in partitions {
+            for b in blockings {
+                for m in modes {
+                    out.push(PlanParams { partition: p, blocking: b, mode: m });
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn pack_round_trips_and_is_injective() {
+        let mut seen = std::collections::BTreeSet::new();
+        for plan in space() {
+            let bits = plan.pack();
+            assert!(seen.insert(bits), "duplicate pack for {plan:?}");
+            assert_eq!(PlanParams::unpack(bits).unwrap(), plan);
+        }
+    }
+
+    #[test]
+    fn heuristic_packs_to_zero() {
+        assert_eq!(PlanParams::HEURISTIC.pack(), 0);
+        assert!(PlanParams::HEURISTIC.is_heuristic());
+        assert!(PlanParams::default().is_heuristic());
+        assert_eq!(PlanParams::unpack(0).unwrap(), PlanParams::HEURISTIC);
+        let other = PlanParams { mode: ModePolicy::ReuseGreedy, ..PlanParams::HEURISTIC };
+        assert!(!other.is_heuristic());
+        assert_ne!(other.pack(), 0);
+    }
+
+    #[test]
+    fn unpack_rejects_non_canonical_bits() {
+        assert!(PlanParams::unpack(1 << 17).is_err()); // high bits
+        assert!(PlanParams::unpack(0b100).is_err()); // m_parts on Heuristic
+        assert!(PlanParams::unpack(0b11 << 12).is_err()); // bad mode tag
+        assert!(PlanParams::unpack((1 << 14) | (1 << 12)).is_err()); // idx on greedy
+        assert!(PlanParams::unpack((5 << 14) | (2 << 12)).is_err()); // mode idx 5
+    }
+
+    #[test]
+    fn display_names_the_knobs() {
+        assert_eq!(PlanParams::HEURISTIC.to_string(), "heuristic");
+        let p = PlanParams {
+            partition: PartitionPolicy::ForceK,
+            blocking: BlockingPolicy::KeepB,
+            mode: ModePolicy::Forced(Mode::Isw),
+        };
+        assert_eq!(p.to_string(), "part=K block=keepB mode=force-ISW");
+    }
+}

@@ -16,6 +16,7 @@
 //! sharing the stationary tile via the local-broadcast datapaths — the
 //! source of FlexSA's reuse advantage over naive small cores.
 
+use super::plan::ModePolicy;
 use crate::config::{AcceleratorConfig, UnitKind};
 use crate::gemm::GemmShape;
 use crate::isa::{Buf, Inst, Mode, Program};
@@ -24,18 +25,62 @@ use crate::util::ceil_div;
 /// Select the FlexSA operating mode for a wave of `n_size × k_size`
 /// (paper `GetFlexSAMode(wide_wave, tall_wave)`).
 pub fn select_mode(cfg: &AcceleratorConfig, n_size: usize, k_size: usize) -> Mode {
-    match cfg.kind {
-        UnitKind::Monolithic => Mode::Mono,
-        UnitKind::FlexSa => {
-            let sub = cfg.subcore();
-            let wide = n_size <= sub.cols; // skinny tile: fits half width
-            let tall = k_size <= sub.rows; // fat tile: fits half height
-            match (wide, tall) {
-                (false, false) => Mode::Fw,
-                (false, true) => Mode::Hsw,
-                (true, false) => Mode::Vsw,
-                (true, true) => Mode::Isw,
-            }
+    select_mode_with(cfg, n_size, k_size, &ModePolicy::Algorithm1)
+}
+
+/// Can `mode` physically serve an `n_size × k_size` wave? Sub-array modes
+/// require the tile to fit the half-width/half-height sub-geometry (the
+/// same thresholds Algorithm 1 partitions the space by); FW always fits.
+fn mode_fits(cfg: &AcceleratorConfig, mode: Mode, n_size: usize, k_size: usize) -> bool {
+    let sub = cfg.subcore();
+    match mode {
+        Mode::Fw | Mode::Mono => true,
+        Mode::Vsw => n_size <= sub.cols,
+        Mode::Hsw => k_size <= sub.rows,
+        Mode::Isw => n_size <= sub.cols && k_size <= sub.rows,
+    }
+}
+
+/// [`select_mode`] under an explicit [`ModePolicy`] (the planner's
+/// searchable variant; `Algorithm1` reproduces the paper heuristic
+/// bit-exactly).
+pub fn select_mode_with(
+    cfg: &AcceleratorConfig,
+    n_size: usize,
+    k_size: usize,
+    policy: &ModePolicy,
+) -> Mode {
+    if cfg.kind == UnitKind::Monolithic {
+        return Mode::Mono;
+    }
+    let sub = cfg.subcore();
+    let wide = n_size <= sub.cols; // skinny tile: fits half width
+    let tall = k_size <= sub.rows; // fat tile: fits half height
+    let algorithm1 = match (wide, tall) {
+        (false, false) => Mode::Fw,
+        (false, true) => Mode::Hsw,
+        (true, false) => Mode::Vsw,
+        (true, true) => Mode::Isw,
+    };
+    match policy {
+        ModePolicy::Algorithm1 => algorithm1,
+        ModePolicy::Forced(Mode::Mono) => algorithm1,
+        ModePolicy::Forced(m) if mode_fits(cfg, *m, n_size, k_size) => *m,
+        ModePolicy::Forced(_) => algorithm1,
+        ModePolicy::ReuseGreedy => {
+            // Maximize output rows streamed per issue (`m_allowed × parallel
+            // waves`); ties prefer fewer parallel sub-waves, i.e. the
+            // large-array reuse of FW over broadcast duplication.
+            Mode::FLEXSA_MODES
+                .into_iter()
+                .filter(|m| mode_fits(cfg, *m, n_size, k_size))
+                .max_by_key(|m| {
+                    (
+                        m_allowed(cfg, *m, k_size) * m.parallel_waves(),
+                        std::cmp::Reverse(m.parallel_waves()),
+                    )
+                })
+                .unwrap_or(algorithm1)
         }
     }
 }
@@ -89,7 +134,20 @@ pub fn tile_partition(cfg: &AcceleratorConfig, p: GemmShape, k_partitioned: bool
 pub fn tile_partition_visit(
     cfg: &AcceleratorConfig,
     p: GemmShape,
+    k_partitioned: bool,
+    sink: &mut impl FnMut(Inst),
+) {
+    tile_partition_visit_plan(cfg, p, k_partitioned, &ModePolicy::Algorithm1, sink)
+}
+
+/// [`tile_partition_visit`] under an explicit [`ModePolicy`] — the
+/// planner's per-wave mode-assignment hook. `Algorithm1` emits exactly the
+/// instruction stream of the plan-less path.
+pub fn tile_partition_visit_plan(
+    cfg: &AcceleratorConfig,
+    p: GemmShape,
     _k_partitioned: bool,
+    policy: &ModePolicy,
     sink: &mut impl FnMut(Inst),
 ) {
     if p.is_empty() {
@@ -107,7 +165,7 @@ pub fn tile_partition_visit(
         // Mode per k-chunk is fixed within a column; the column's m quantum
         // must satisfy the tightest LBUF constraint among its waves.
         let modes: Vec<Mode> =
-            k_chunks.iter().map(|&k| select_mode(cfg, n_size, k)).collect();
+            k_chunks.iter().map(|&k| select_mode_with(cfg, n_size, k, policy)).collect();
         let col_m = k_chunks
             .iter()
             .zip(&modes)
@@ -320,6 +378,67 @@ mod tests {
         assert_eq!(m_allowed(&cfg, Mode::Fw, 128), 256);
         assert_eq!(m_allowed(&cfg, Mode::Hsw, 64), 256);
         assert_eq!(m_allowed(&cfg, Mode::Isw, 64), 128);
+    }
+
+    #[test]
+    fn forced_mode_applies_only_where_it_fits() {
+        let cfg = preset("1G1F").unwrap(); // sub-cores 64x64
+        // A 128x128 wave only fits FW; forcing ISW must fall back to
+        // Algorithm 1's choice, not emit an invalid configuration.
+        let isw = ModePolicy::Forced(Mode::Isw);
+        assert_eq!(select_mode_with(&cfg, 128, 128, &isw), Mode::Fw);
+        assert_eq!(select_mode_with(&cfg, 64, 64, &isw), Mode::Isw);
+        // VSW fits when the tile is narrow, regardless of height.
+        let vsw = ModePolicy::Forced(Mode::Vsw);
+        assert_eq!(select_mode_with(&cfg, 64, 64, &vsw), Mode::Vsw);
+        assert_eq!(select_mode_with(&cfg, 64, 128, &vsw), Mode::Vsw);
+        assert_eq!(select_mode_with(&cfg, 128, 64, &vsw), Mode::Hsw); // fallback
+        // FW can always be forced.
+        let fw = ModePolicy::Forced(Mode::Fw);
+        assert_eq!(select_mode_with(&cfg, 1, 1, &fw), Mode::Fw);
+        // Monolithic configs ignore the policy entirely.
+        let mono = preset("1G4C").unwrap();
+        assert_eq!(select_mode_with(&mono, 1, 1, &fw), Mode::Mono);
+        assert_eq!(select_mode_with(&mono, 1, 1, &ModePolicy::ReuseGreedy), Mode::Mono);
+    }
+
+    #[test]
+    fn reuse_greedy_prefers_fw_when_lbuf_binds() {
+        let cfg = preset("1G1F").unwrap();
+        // Full-height waves (k=128): the horizontal LBUF bounds rows/issue
+        // to lbuf/(par*k)*par = lbuf/k for every mode, so parallelism buys
+        // nothing and the tie-break picks the large-array FW.
+        assert_eq!(select_mode_with(&cfg, 64, 128, &ModePolicy::ReuseGreedy), Mode::Fw);
+        // Tiny waves (k=32): the blk_M clamp binds instead, so more
+        // parallel sub-waves stream more rows per issue -> ISW.
+        assert_eq!(select_mode_with(&cfg, 32, 32, &ModePolicy::ReuseGreedy), Mode::Isw);
+    }
+
+    #[test]
+    fn algorithm1_policy_emits_identical_programs() {
+        let cfg = preset("4G1F").unwrap();
+        for shape in [GemmShape::new(512, 40, 160), GemmShape::new(257, 129, 127)] {
+            let base = tile_partition(&cfg, shape, false);
+            let mut via_plan = Program::new();
+            tile_partition_visit_plan(&cfg, shape, false, &ModePolicy::Algorithm1, &mut |i| {
+                via_plan.push(i)
+            });
+            assert_eq!(base.insts, via_plan.insts, "{shape}");
+        }
+    }
+
+    #[test]
+    fn forced_fw_macs_preserved() {
+        let cfg = preset("1G1F").unwrap();
+        let shape = GemmShape::new(512, 40, 160);
+        let mut prog = Program::new();
+        tile_partition_visit_plan(&cfg, shape, false, &ModePolicy::Forced(Mode::Fw), &mut |i| {
+            prog.push(i)
+        });
+        let stats = prog.stats();
+        assert_eq!(stats.macs, shape.macs());
+        assert_eq!(stats.waves_by_mode.len(), 1);
+        assert!(stats.waves_by_mode.contains_key(&Mode::Fw), "{:?}", stats.waves_by_mode);
     }
 
     #[test]

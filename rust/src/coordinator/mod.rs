@@ -10,7 +10,9 @@
 mod service;
 mod workloads;
 
-pub use service::{BatchPolicy, Request, Response, ServiceStats, SimService};
+pub use service::{
+    BatchPolicy, Request, Response, ServiceStats, SimService, DEFAULT_SESSION_CAPACITY,
+};
 pub use workloads::{paper_workloads, point_weights, ScheduleKind, Workload};
 
 use crate::config::AcceleratorConfig;

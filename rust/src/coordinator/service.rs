@@ -11,6 +11,7 @@
 //! the same request always yields the same (bit-identical) result
 //! regardless of batching or caching.
 
+use crate::compiler::PlanParams;
 use crate::config::AcceleratorConfig;
 use crate::gemm::{GemmShape, Phase};
 use crate::session::SimSession;
@@ -19,6 +20,15 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// Default entry capacity of a service-owned session. Sized from the
+/// measured entry footprint: a cached `GemmSim` is ~230 B of payload
+/// (3 × f64, 6 × u64 counters, a ≤ 2-node `waves_by_mode` map) plus ~90 B
+/// of `Arc`/`HashMap`/FIFO-queue overhead, so 131072 entries bound a
+/// long-lived service near 40 MiB. With the disk tier attached an evicted
+/// key that is touched again is a store hit, not a re-simulation, so the
+/// bound is cheap (ROADMAP "Capacity policy under serving load").
+pub const DEFAULT_SESSION_CAPACITY: usize = 128 * 1024;
 
 /// One simulation request.
 #[derive(Clone)]
@@ -33,6 +43,9 @@ pub struct Request {
     pub phase: Phase,
     /// Simulator options.
     pub opts: SimOptions,
+    /// Compilation plan (the heuristic for plain `submit`; the planner's
+    /// candidate scoring submits variants).
+    pub plan: PlanParams,
 }
 
 /// The service's answer to a request.
@@ -94,13 +107,55 @@ pub struct ServiceStats {
     pub cache_store_misses: u64,
     /// Persistent-store writes at shutdown.
     pub cache_store_writes: u64,
+    /// Session-cache evictions at shutdown (non-zero only for sized
+    /// sessions, e.g. the [`DEFAULT_SESSION_CAPACITY`] default).
+    pub cache_evictions: u64,
+    /// Entries resident in the session at shutdown.
+    pub cache_entries: u64,
+}
+
+impl ServiceStats {
+    /// Fraction of inserts the capacity bound evicted (0 for unbounded
+    /// sessions or an idle service). A persistently high rate on a
+    /// store-backed session costs disk reads; without a store it costs
+    /// re-simulation — size the session up.
+    pub fn eviction_rate(&self) -> f64 {
+        if self.cache_inserts == 0 {
+            0.0
+        } else {
+            self.cache_evictions as f64 / self.cache_inserts as f64
+        }
+    }
+
+    /// One-line summary including the eviction-rate field (the serving
+    /// counterpart of the CLI's cache line).
+    pub fn summary(&self) -> String {
+        format!(
+            "{} requests in {} batches, cache {} hits / {} misses, \
+             evictions={} ({:.1}% of inserts), {} entries resident",
+            self.requests,
+            self.batches,
+            self.cache_hits,
+            self.cache_misses,
+            self.cache_evictions,
+            self.eviction_rate() * 100.0,
+            self.cache_entries
+        )
+    }
 }
 
 impl SimService {
     /// Start the leader + `workers` simulation threads with a private
-    /// unbounded session cache.
+    /// session sized at [`DEFAULT_SESSION_CAPACITY`] entries — a
+    /// long-lived service should bound its memory; callers wanting an
+    /// unbounded (or store-backed) cache pass their own via
+    /// [`Self::start_with_session`].
     pub fn start(workers: usize, policy: BatchPolicy) -> SimService {
-        Self::start_with_session(workers, policy, SimSession::shared())
+        Self::start_with_session(
+            workers,
+            policy,
+            Arc::new(SimSession::with_capacity(DEFAULT_SESSION_CAPACITY)),
+        )
     }
 
     /// Start the service on an existing (possibly shared) session, so
@@ -129,7 +184,7 @@ impl SimService {
         &self.session
     }
 
-    /// Submit a request; returns its id.
+    /// Submit a request (heuristic compilation plan); returns its id.
     pub fn submit(
         &self,
         cfg: &Arc<AcceleratorConfig>,
@@ -137,11 +192,24 @@ impl SimService {
         phase: Phase,
         opts: SimOptions,
     ) -> u64 {
+        self.submit_plan(cfg, shape, phase, opts, PlanParams::HEURISTIC)
+    }
+
+    /// Submit a request under an explicit compilation plan (the planner's
+    /// candidate-scoring path); returns its id.
+    pub fn submit_plan(
+        &self,
+        cfg: &Arc<AcceleratorConfig>,
+        shape: GemmShape,
+        phase: Phase,
+        opts: SimOptions,
+        plan: PlanParams,
+    ) -> u64 {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.tx
             .as_ref()
             .expect("service shut down")
-            .send(Request { id, cfg: Arc::clone(cfg), shape, phase, opts })
+            .send(Request { id, cfg: Arc::clone(cfg), shape, phase, opts, plan })
             .expect("service down");
         id
     }
@@ -167,6 +235,8 @@ impl SimService {
         stats.cache_store_hits = cache.store_hits;
         stats.cache_store_misses = cache.store_misses;
         stats.cache_store_writes = cache.store_writes;
+        stats.cache_evictions = cache.evictions;
+        stats.cache_entries = cache.entries;
         stats
     }
 }
@@ -295,7 +365,8 @@ fn dispatch(
                     return;
                 }
                 let r = &batch[i];
-                let sim = session.simulate_keyed(digests[i], &r.cfg, r.shape, r.phase, &r.opts);
+                let sim = session
+                    .simulate_plan_keyed(digests[i], &r.cfg, r.shape, r.phase, &r.opts, &r.plan);
                 let _ = tx.send(Response { id: r.id, sim });
             });
         }
@@ -426,6 +497,44 @@ mod tests {
         let stats = second.shutdown();
         assert_eq!(stats.cache_hits, 1, "{stats:?}");
         assert_eq!(stats.cache_misses, 1, "{stats:?}");
+    }
+
+    #[test]
+    fn plan_requests_match_direct_plan_simulation() {
+        use crate::compiler::{PartitionPolicy, PlanParams};
+        use crate::sim::simulate_gemm_plan;
+        let svc = SimService::start(2, BatchPolicy::default());
+        let cfg = Arc::new(preset("4G1F").unwrap());
+        let shape = GemmShape::new(1000, 71, 333);
+        let plan = PlanParams { partition: PartitionPolicy::ForceK, ..PlanParams::HEURISTIC };
+        let id = svc.submit_plan(&cfg, shape, Phase::Forward, SimOptions::ideal(), plan);
+        let resp = svc.recv().unwrap();
+        assert_eq!(resp.id, id);
+        let direct = simulate_gemm_plan(&cfg, shape, Phase::Forward, &SimOptions::ideal(), &plan);
+        assert_eq!(resp.sim.cycles.to_bits(), direct.cycles.to_bits());
+        assert_eq!(resp.sim.traffic, direct.traffic);
+        // A heuristic request for the same key is a distinct cache entry.
+        svc.submit(&cfg, shape, Phase::Forward, SimOptions::ideal());
+        svc.recv().unwrap();
+        let stats = svc.shutdown();
+        assert_eq!(stats.cache_misses, 2, "{stats:?}");
+    }
+
+    #[test]
+    fn eviction_rate_reports_capacity_pressure() {
+        let zero = ServiceStats::default();
+        assert_eq!(zero.eviction_rate(), 0.0);
+        let s = ServiceStats { cache_inserts: 200, cache_evictions: 50, ..Default::default() };
+        assert!((s.eviction_rate() - 0.25).abs() < 1e-12);
+        assert!(s.summary().contains("evictions=50 (25.0% of inserts)"), "{}", s.summary());
+        // The default service session is sized: a tiny run must not evict.
+        let svc = SimService::start(1, BatchPolicy::default());
+        let cfg = Arc::new(preset("1G1C").unwrap());
+        svc.submit(&cfg, GemmShape::new(64, 64, 64), Phase::Forward, SimOptions::ideal());
+        svc.recv().unwrap();
+        let stats = svc.shutdown();
+        assert_eq!(stats.cache_evictions, 0);
+        assert_eq!(stats.cache_entries, 1);
     }
 
     #[test]

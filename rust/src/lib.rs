@@ -12,9 +12,10 @@
 //!   area models ([`energy`], [`area`]), figure/report harnesses
 //!   ([`report`]), the PJRT runtime bridge ([`runtime`]), the end-to-end
 //!   prune-while-train driver ([`trainer`]), the threaded sweep
-//!   coordinator ([`coordinator`]), and the shared content-addressed
+//!   coordinator ([`coordinator`]), the shared content-addressed
 //!   simulation cache every compile→simulate path routes through
-//!   ([`session`]).
+//!   ([`session`]), and the search-based plan optimizer that quantifies
+//!   the Algorithm-1 heuristic's optimality gap ([`planner`]).
 //! - **L2/L1 (python, build-time only)** — a JAX PruneTrain model whose
 //!   convolutions call a Pallas systolic-wave GEMM kernel; AOT-lowered to
 //!   HLO text consumed by [`runtime`]. Python never runs on the request
@@ -35,6 +36,7 @@ pub mod energy;
 pub mod gemm;
 pub mod isa;
 pub mod models;
+pub mod planner;
 pub mod proptest;
 pub mod pruning;
 pub mod report;

@@ -6,11 +6,13 @@ use flexsa::compiler::compile_gemm;
 use flexsa::config::{parse_config, preset, preset_names};
 use flexsa::coordinator::default_threads;
 use flexsa::gemm::{GemmShape, Phase};
+use flexsa::planner::{Planner, Strategy};
 use flexsa::pruning::Strength;
 use flexsa::report::figures as fig;
-use flexsa::session::{SessionStats, SimSession, SimStore};
+use flexsa::report::TextTable;
+use flexsa::session::{CacheOpts, SessionStats, SimSession, SimStore};
 use flexsa::sim::SimOptions;
-use std::path::PathBuf;
+use std::sync::Arc;
 
 const USAGE: &str = "\
 flexsa — FlexSA (Lym & Erez 2020) full-system reproduction
@@ -31,6 +33,18 @@ figure regeneration (paper-vs-measured):
   ablate                                     ShiftV/ramp modeling ablations
   e2e-layers                                 end-to-end incl SIMD layers
 
+planner (search-based plan optimizer; DESIGN.md §12):
+  plan M N K [--config NAME] [--phase ..]    search plans for one GEMM
+       [--exhaustive | --beam N] [--ideal]   (default: exhaustive)
+  plan MODEL [--configs A,B] [--strength ..] heuristic-vs-oracle gap over
+       [--beam N | --exhaustive] [--ideal]   the pruning trajectory
+                                             (default: beam 2, 1G1F+4G1F)
+
+cache maintenance (ROADMAP store GC):
+  cache stats [--cache-dir DIR]              walk the shard dirs, report
+  cache gc [--max-mib N] [--cache-dir DIR]   evict oldest entries to fit
+                                             the budget (default 512 MiB)
+
 tools:
   configs                                    list presets
   simulate M N K [--config NAME] [--phase fwd|dgrad|wgrad] [--ideal]
@@ -41,8 +55,8 @@ tools:
 
 common flags: --threads N (default: all cores), --config NAME|@FILE
 
-cache flags (figure/report/simulate commands; `train` manages its own
-session and does not take these):
+cache flags (figure/report/simulate/plan commands, plus `train`, whose
+trace replay shares the same store):
               --no-cache (disable the shared simulation session cache),
               --cache-dir DIR (persistent result store; defaults to
               $FLEXSA_CACHE_DIR, else $XDG_CACHE_HOME/flexsa, else
@@ -65,7 +79,16 @@ fn main() {
 }
 
 fn load_config(args: &Args) -> Result<flexsa::config::AcceleratorConfig, String> {
-    let name = args.get("config").unwrap_or("1G1C");
+    load_config_default(args, "1G1C")
+}
+
+/// [`load_config`] with an explicit default preset (`plan` defaults to the
+/// FlexSA 4G1F, whose plan space is the richest).
+fn load_config_default(
+    args: &Args,
+    default: &str,
+) -> Result<flexsa::config::AcceleratorConfig, String> {
+    let name = args.get("config").unwrap_or(default);
     if let Some(path) = name.strip_prefix('@') {
         let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
         parse_config(&text)
@@ -120,29 +143,21 @@ fn emit(report: &fig::FigureReport, csv_dir: Option<&str>) -> Result<(), String>
 /// runs without the disk tier.
 const SIMULATING_COMMANDS: &[&str] = &[
     "fig3", "fig5", "fig10", "fig11", "fig12", "fig13", "e2e-layers", "ablate", "report",
-    "simulate",
+    "simulate", "plan",
 ];
 
 /// One session per CLI invocation: every figure harness and sweep below
 /// shares it, so recurring GEMMs dedup across figures (DESIGN.md §10).
 /// Simulating commands additionally get the persistent on-disk tier
 /// (DESIGN.md §11) unless `--no-cache`/`--no-store` opt out; a store that
-/// fails to open degrades to memory-only with a stderr note.
+/// fails to open degrades to memory-only with a stderr note (the
+/// [`CacheOpts`] behavior, shared with the trainer).
 fn make_session(args: &Args) -> SimSession {
-    if args.has("no-cache") {
-        return SimSession::disabled();
+    let mut opts = CacheOpts::from_args(args);
+    if !SIMULATING_COMMANDS.contains(&args.command.as_str()) {
+        opts.no_store = true;
     }
-    let mut session = SimSession::new();
-    if SIMULATING_COMMANDS.contains(&args.command.as_str()) && !args.has("no-store") {
-        let dir = args.get("cache-dir").map(PathBuf::from).or_else(SimStore::default_dir);
-        if let Some(dir) = dir {
-            match SimStore::open(&dir) {
-                Ok(store) => session.set_store(Some(store)),
-                Err(e) => eprintln!("# sim store disabled ({}: {e})", dir.display()),
-            }
-        }
-    }
-    session
+    opts.build_session()
 }
 
 /// The CLI's hit-rate lines (stderr, so CSV-ish stdout stays clean). The
@@ -164,6 +179,198 @@ fn print_cache_line(session: &SimSession) {
             );
         }
     }
+}
+
+/// The plan-store stderr line (printed by `plan` and `report`): how many
+/// plan searches were answered from / persisted to the disk tier, plus the
+/// session's simulator-run count — `sims=0` on a warm cache dir is the CI
+/// plan-smoke acceptance criterion.
+fn print_plan_store_line(session: &SimSession) {
+    if let Some(store) = session.store() {
+        let st = store.stats();
+        if st.plan_hits + st.plan_misses + st.plan_writes > 0 {
+            eprintln!(
+                "# plan store: {} sims={} at {}",
+                st.plan_summary(),
+                session.stats().sims(),
+                store.dir().display()
+            );
+        }
+    }
+}
+
+/// `flexsa plan M N K` / `flexsa plan MODEL`: search the compilation-plan
+/// space and report the heuristic-vs-searched-best gap.
+fn run_plan(args: &Args, threads: usize, session: &Arc<SimSession>) -> Result<(), String> {
+    let opts = if args.has("ideal") { SimOptions::ideal() } else { SimOptions::hbm2() };
+    let shape_mode = args.positional.len() == 3
+        && args.positional.iter().all(|p| p.parse::<usize>().is_ok());
+    let strategy = if args.has("exhaustive") {
+        Strategy::Exhaustive
+    } else if args.has("beam") {
+        Strategy::Beam(args.get_usize("beam", 2)?)
+    } else if shape_mode {
+        Strategy::Exhaustive
+    } else {
+        Strategy::Beam(2)
+    };
+    let planner = Planner::new(Arc::clone(session), strategy, threads);
+
+    if shape_mode {
+        let cfg = Arc::new(load_config_default(args, "4G1F")?);
+        let shape = parse_mnk(args)?;
+        let phase = parse_phase(args)?;
+        let (choice, candidates) = planner.plan_gemm_detailed(&cfg, shape, phase, &opts);
+        println!("config    : {cfg}");
+        println!("gemm      : {shape} ({phase:?})");
+        if !candidates.is_empty() {
+            let mut ranked = candidates;
+            ranked.sort_by(|a, b| a.cycles.total_cmp(&b.cycles).then(a.dram.cmp(&b.dram)));
+            let mut t = TextTable::new(vec!["plan", "cycles", "dram", "vs heuristic"]);
+            for c in ranked.iter().take(10) {
+                t.row(vec![
+                    c.plan.to_string(),
+                    format!("{:.0}", c.cycles),
+                    flexsa::util::fmt::bytes(c.dram as f64),
+                    format!("{:+.2}%", (c.cycles / choice.heuristic_cycles - 1.0) * 100.0),
+                ]);
+            }
+            print!("{}", t.render());
+            if ranked.len() > 10 {
+                println!("... ({} more candidates)", ranked.len() - 10);
+            }
+        }
+        println!(
+            "plan: best={} gap={:.2}% heuristic={:.0} best={:.0} cycles evaluated={}{}",
+            choice.best,
+            choice.gap() * 100.0,
+            choice.heuristic_cycles,
+            choice.best_cycles,
+            choice.evaluated,
+            if choice.from_store { " (from plan store)" } else { "" },
+        );
+        return Ok(());
+    }
+
+    // Model mode: gap over the pruning trajectory on >= 2 presets.
+    let model_name = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .or_else(|| args.get("model"))
+        .unwrap_or("resnet50");
+    let model = flexsa::models::by_name(model_name)
+        .ok_or_else(|| format!("unknown model `{model_name}` (and not an M N K triple)"))?;
+    let strength = parse_strength(args)?;
+    let sched = flexsa::pruning::prunetrain_schedule(&model, strength, 90, 10, 42);
+    let config_names: Vec<&str> = match args.get("configs") {
+        Some(list) => list.split(',').map(str::trim).filter(|s| !s.is_empty()).collect(),
+        None => vec!["1G1F", "4G1F"],
+    };
+    let strat_name = match strategy {
+        Strategy::Exhaustive => "exhaustive".to_string(),
+        Strategy::Beam(n) => format!("beam-{n}"),
+    };
+    println!(
+        "== plan — {model_name} (prunetrain-{} trajectory, {strat_name} search) ==",
+        strength.name()
+    );
+    let mut summary = TextTable::new(vec![
+        "config",
+        "unique GEMMs",
+        "improved",
+        "mean gap",
+        "max gap",
+        "weighted saving",
+        "from store",
+    ]);
+    let mut top_rows: Vec<(String, flexsa::planner::PlanRow)> = Vec::new();
+    for name in &config_names {
+        let cfg = preset(name).ok_or_else(|| {
+            format!("unknown preset `{name}` (have: {})", preset_names().join(", "))
+        })?;
+        let cfg = Arc::new(cfg);
+        eprintln!("# planning {} x {} trajectory points...", name, sched.points.len());
+        let tp = planner.plan_schedule(&cfg, &model, &sched, &opts);
+        summary.row(vec![
+            name.to_string(),
+            format!("{}", tp.unique_gemms()),
+            format!("{}", tp.improved()),
+            flexsa::util::fmt::pct(tp.mean_gap()),
+            flexsa::util::fmt::pct(tp.max_gap()),
+            flexsa::util::fmt::pct(tp.weighted_saving()),
+            format!("{}", tp.from_store()),
+        ]);
+        for row in tp.rows.iter().take(10) {
+            top_rows.push((name.to_string(), *row));
+        }
+    }
+    print!("{}", summary.render());
+    println!("note: gap >= 0 by construction — the search never returns a plan worse \
+              than Algorithm 1");
+    top_rows.sort_by(|a, b| b.1.choice.gap().total_cmp(&a.1.choice.gap()));
+    let mut t = TextTable::new(vec![
+        "config", "gemm", "phase", "weight", "heuristic cyc", "best cyc", "gap", "best plan",
+    ]);
+    for (name, row) in top_rows.iter().take(10) {
+        let c = &row.choice;
+        t.row(vec![
+            name.clone(),
+            c.shape.to_string(),
+            c.phase.name().to_string(),
+            format!("{:.0}", row.weight),
+            format!("{:.0}", c.heuristic_cycles),
+            format!("{:.0}", c.best_cycles),
+            flexsa::util::fmt::pct(c.gap()),
+            c.best.to_string(),
+        ]);
+    }
+    println!("\nper-GEMM top gaps:");
+    print!("{}", t.render());
+    Ok(())
+}
+
+/// `flexsa cache stats` / `flexsa cache gc`: persistent-store maintenance.
+fn run_cache(args: &Args) -> Result<(), String> {
+    // Same resolution chain as the simulating commands' sessions, so
+    // stats/gc always operate on the directory those commands use.
+    let dir = CacheOpts::from_args(args)
+        .resolved_dir()
+        .ok_or("no cache directory: pass --cache-dir or set FLEXSA_CACHE_DIR/HOME")?;
+    let store = SimStore::open(&dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+    let sub = args.positional.first().map(String::as_str).unwrap_or("stats");
+    match sub {
+        "stats" => {
+            let d = store.disk_stats();
+            println!("cache dir : {}", dir.display());
+            let mut t = TextTable::new(vec!["kind", "count"]);
+            t.row(vec!["sim entries (.gsim)".to_string(), d.sim_entries.to_string()]);
+            t.row(vec!["plan entries (.gplan)".to_string(), d.plan_entries.to_string()]);
+            t.row(vec!["shard dirs".to_string(), d.shard_dirs.to_string()]);
+            t.row(vec!["temp files".to_string(), d.temp_files.to_string()]);
+            t.row(vec!["other files".to_string(), d.other_files.to_string()]);
+            print!("{}", t.render());
+            println!("total     : {}", flexsa::util::fmt::bytes(d.bytes as f64));
+        }
+        "gc" => {
+            let max_mib = args.get_u64("max-mib", 512)?;
+            let r = store.gc(max_mib * 1024 * 1024);
+            println!(
+                "gc {} (budget {max_mib} MiB): scanned {} entries, deleted {} files \
+                 ({} freed), kept {} entries ({})",
+                dir.display(),
+                r.scanned,
+                r.deleted,
+                flexsa::util::fmt::bytes(r.freed_bytes as f64),
+                r.kept,
+                flexsa::util::fmt::bytes(r.kept_bytes as f64),
+            );
+        }
+        other => {
+            return Err(format!("unknown cache subcommand `{other}` (stats | gc)"));
+        }
+    }
+    Ok(())
 }
 
 /// Per-figure cache accounting: prints one `# <figure> cache: ...` stderr
@@ -216,7 +423,7 @@ fn grid_note(threads: usize) {
 fn run(args: &Args) -> Result<(), String> {
     let threads = args.get_usize("threads", default_threads())?;
     let csv = args.get("csv");
-    let session = make_session(args);
+    let session = Arc::new(make_session(args));
     match args.command.as_str() {
         "help" | "--help" | "-h" => println!("{USAGE}"),
         "configs" => {
@@ -287,7 +494,19 @@ fn run(args: &Args) -> Result<(), String> {
             emit(&fig::fig12(&grid), csv)?;
             emit(&fig::fig13(&grid), csv)?;
             emit(&fig::e2e_layers(&grid), csv)?;
+            eprintln!("# searching compilation-plan space (heuristic optimality gap)...");
+            emit(&fig::plan_gap(threads, &session), csv)?;
+            figs.line("PlanGap");
             print_cache_line(&session);
+            print_plan_store_line(&session);
+        }
+        "plan" => {
+            run_plan(args, threads, &session)?;
+            print_cache_line(&session);
+            print_plan_store_line(&session);
+        }
+        "cache" => {
+            run_cache(args)?;
         }
         "simulate" => {
             let cfg = load_config(args)?;

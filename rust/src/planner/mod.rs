@@ -1,0 +1,606 @@
+//! Search-based compilation-plan optimizer (DESIGN.md §12).
+//!
+//! The compiler's Algorithm-1 pipeline is a *heuristic*: §VII's phase rule
+//! fixes the group-partition dimension and the `FW > HSW = VSW > ISW`
+//! preference fixes every wave's mode, with no way to measure how much
+//! performance that convention leaves behind on a given pruned shape. This
+//! module enumerates candidate [`PlanParams`] per `(config, shape, phase,
+//! options)` key — partition dimension (M vs K vs hybrid grids), GBUF
+//! blocking orientation, and per-wave mode policy — scores every candidate
+//! through the shared [`SimSession`] via the batching
+//! [`crate::coordinator::SimService`], and returns a [`PlanChoice`] pairing
+//! the searched best plan with the Algorithm-1 baseline.
+//!
+//! Guarantees:
+//!
+//! - **Never worse than the heuristic.** The heuristic plan is always in
+//!   the candidate set and ties break toward it, so the selected best is
+//!   ≤ the heuristic under the scoring order (cycles, then DRAM bytes) and
+//!   [`PlanChoice::gap`] is ≥ 0 — property-pinned by
+//!   `tests/prop_planner.rs`.
+//! - **Zero-search default unchanged.** Searching only *reads* the plan
+//!   space; every plan-less path still compiles with
+//!   [`PlanParams::HEURISTIC`] bit-exactly.
+//! - **Search once, reuse forever.** With a persistent store attached,
+//!   winning plans persist as a second entry kind
+//!   ([`crate::session::PlanRecord`], `FXPL` magic) keyed by the search
+//!   strategy; a warm rerun answers from the store with **zero** simulator
+//!   runs (the CI plan-smoke criterion).
+
+use crate::compiler::{BlockingPolicy, ModePolicy, PartitionPolicy, PlanParams};
+use crate::config::{AcceleratorConfig, UnitKind};
+use crate::coordinator::{BatchPolicy, SimService};
+use crate::gemm::{GemmShape, Phase};
+use crate::isa::Mode;
+use crate::models::Model;
+use crate::pruning::PruneSchedule;
+use crate::session::{PlanRecord, SimSession};
+use crate::sim::SimOptions;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// How the plan space is searched.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// Score the full cross product of candidate axes.
+    Exhaustive,
+    /// Staged beam search: rank partition policies first, expand the top
+    /// `N` with mode policies, then blocking policies. A strict subset of
+    /// the exhaustive candidate set, so its best can only be between the
+    /// heuristic and the exhaustive oracle.
+    Beam(usize),
+}
+
+impl Strategy {
+    /// Stable one-byte encoding folded into plan-record store keys
+    /// (`0xFF` = exhaustive, else the beam width clamped to 254).
+    pub fn byte(&self) -> u8 {
+        match self {
+            Strategy::Exhaustive => 0xFF,
+            Strategy::Beam(n) => (*n).clamp(1, 254) as u8,
+        }
+    }
+}
+
+/// The planner's answer for one `(config, shape, phase, options)` key.
+#[derive(Debug, Clone, Copy)]
+pub struct PlanChoice {
+    /// The GEMM this plan is for.
+    pub shape: GemmShape,
+    /// Its training phase.
+    pub phase: Phase,
+    /// The best plan found (the heuristic itself when nothing beats it).
+    pub best: PlanParams,
+    /// Cycles under the best plan.
+    pub best_cycles: f64,
+    /// DRAM bytes (read + write) under the best plan.
+    pub best_dram: u64,
+    /// Cycles under the Algorithm-1 heuristic plan.
+    pub heuristic_cycles: f64,
+    /// DRAM bytes under the heuristic plan.
+    pub heuristic_dram: u64,
+    /// Candidate plans scored by the search (0 when answered from the
+    /// plan store).
+    pub evaluated: u32,
+    /// Whether this choice was answered from the persistent plan store
+    /// (no simulation at all).
+    pub from_store: bool,
+}
+
+impl PlanChoice {
+    /// Heuristic optimality gap: fraction of cycles the Algorithm-1 plan
+    /// pays over the searched best (`heuristic / best − 1`). Always ≥ 0:
+    /// the heuristic is in every candidate set.
+    pub fn gap(&self) -> f64 {
+        if self.best_cycles <= 0.0 {
+            return 0.0;
+        }
+        (self.heuristic_cycles / self.best_cycles - 1.0).max(0.0)
+    }
+
+    /// Convert to the on-disk record form.
+    fn to_record(self, strategy: Strategy) -> PlanRecord {
+        PlanRecord {
+            plan: self.best.pack(),
+            best_cycles: self.best_cycles,
+            best_dram: self.best_dram,
+            heuristic_cycles: self.heuristic_cycles,
+            heuristic_dram: self.heuristic_dram,
+            evaluated: self.evaluated,
+            strategy: strategy.byte(),
+        }
+    }
+}
+
+/// Candidate partition policies for `cfg` (heuristic first — the scoring
+/// tie-break depends on it).
+pub fn enumerate_partitions(cfg: &AcceleratorConfig) -> Vec<PartitionPolicy> {
+    let mut out = vec![PartitionPolicy::Heuristic];
+    if cfg.groups > 1 {
+        out.push(PartitionPolicy::ForceM);
+        out.push(PartitionPolicy::ForceK);
+        let mut m = 2;
+        while m < cfg.groups {
+            if cfg.groups % m == 0 {
+                out.push(PartitionPolicy::Hybrid { m_parts: m as u8 });
+            }
+            m *= 2;
+        }
+    }
+    out
+}
+
+/// Candidate mode policies for `cfg` (Algorithm 1 first). Monolithic
+/// units have no mode space.
+pub fn enumerate_modes(cfg: &AcceleratorConfig) -> Vec<ModePolicy> {
+    match cfg.kind {
+        UnitKind::Monolithic => vec![ModePolicy::Algorithm1],
+        UnitKind::FlexSa => vec![
+            ModePolicy::Algorithm1,
+            ModePolicy::ReuseGreedy,
+            ModePolicy::Forced(Mode::Fw),
+            ModePolicy::Forced(Mode::Vsw),
+            ModePolicy::Forced(Mode::Hsw),
+            ModePolicy::Forced(Mode::Isw),
+        ],
+    }
+}
+
+/// Candidate blocking policies (`Auto` first). `Auto` is in-model optimal
+/// for DRAM traffic, so forced orientations exist to *prove* that in the
+/// gap table rather than assume it.
+pub fn enumerate_blockings() -> Vec<BlockingPolicy> {
+    vec![BlockingPolicy::Auto, BlockingPolicy::KeepA, BlockingPolicy::KeepB, BlockingPolicy::KeepC]
+}
+
+/// One scored candidate plan (the CLI's per-candidate detail rows).
+#[derive(Debug, Clone, Copy)]
+pub struct CandidateScore {
+    /// The candidate.
+    pub plan: PlanParams,
+    /// Simulated cycles under it.
+    pub cycles: f64,
+    /// Simulated DRAM bytes (read + write) under it.
+    pub dram: u64,
+}
+
+/// Scoring order: cycles, then DRAM bytes; earlier-enumerated candidates
+/// win ties (the heuristic enumerates first).
+fn better(a: &CandidateScore, b: &CandidateScore) -> bool {
+    match a.cycles.total_cmp(&b.cycles) {
+        std::cmp::Ordering::Less => true,
+        std::cmp::Ordering::Greater => false,
+        std::cmp::Ordering::Equal => a.dram < b.dram,
+    }
+}
+
+/// The plan-search engine: owns a [`SimService`] whose workers score
+/// candidates through the shared session, so recurring candidates (across
+/// trajectory points, presets probing the same shape, repeated CLI runs
+/// against one `--cache-dir`) simulate once.
+pub struct Planner {
+    service: SimService,
+    strategy: Strategy,
+}
+
+impl Planner {
+    /// Start a planner on `session` with `workers` scoring threads.
+    pub fn new(session: Arc<SimSession>, strategy: Strategy, workers: usize) -> Planner {
+        let service =
+            SimService::start_with_session(workers.max(1), BatchPolicy::default(), session);
+        Planner { service, strategy }
+    }
+
+    /// The session candidates are scored through.
+    pub fn session(&self) -> &Arc<SimSession> {
+        self.service.session()
+    }
+
+    /// The configured search strategy.
+    pub fn strategy(&self) -> Strategy {
+        self.strategy
+    }
+
+    /// Score `plans` (which must be deduplicated) in parallel through the
+    /// service; returns them in input order.
+    fn evaluate(
+        &self,
+        cfg: &Arc<AcceleratorConfig>,
+        shape: GemmShape,
+        phase: Phase,
+        opts: &SimOptions,
+        plans: &[PlanParams],
+    ) -> Vec<CandidateScore> {
+        let ids: Vec<u64> = plans
+            .iter()
+            .map(|plan| self.service.submit_plan(cfg, shape, phase, *opts, *plan))
+            .collect();
+        let mut by_id: HashMap<u64, (f64, u64)> = HashMap::with_capacity(ids.len());
+        for _ in 0..ids.len() {
+            let resp = self.service.recv().expect("planner service alive");
+            by_id.insert(resp.id, (resp.sim.cycles, resp.sim.traffic.dram()));
+        }
+        plans
+            .iter()
+            .zip(&ids)
+            .map(|(plan, id)| {
+                let (cycles, dram) = by_id[id];
+                CandidateScore { plan: *plan, cycles, dram }
+            })
+            .collect()
+    }
+
+    /// Search the plan space for one GEMM. Reads (and write-behind
+    /// populates) the persistent plan store when the session has one: a
+    /// warm store answers without simulating anything.
+    pub fn plan_gemm(
+        &self,
+        cfg: &Arc<AcceleratorConfig>,
+        shape: GemmShape,
+        phase: Phase,
+        opts: &SimOptions,
+    ) -> PlanChoice {
+        self.plan_gemm_detailed(cfg, shape, phase, opts).0
+    }
+
+    /// [`Self::plan_gemm`] also returning every scored candidate (in
+    /// evaluation order; empty when the choice came from the plan store —
+    /// the store keeps decisions, not the full score table).
+    pub fn plan_gemm_detailed(
+        &self,
+        cfg: &Arc<AcceleratorConfig>,
+        shape: GemmShape,
+        phase: Phase,
+        opts: &SimOptions,
+    ) -> (PlanChoice, Vec<CandidateScore>) {
+        let fp = SimSession::fingerprint(cfg, shape, phase, opts);
+        if let Some(store) = self.session().store() {
+            if let Some(rec) = store.get_plan(fp, self.strategy.byte()) {
+                if let Ok(best) = PlanParams::unpack(rec.plan) {
+                    let choice = PlanChoice {
+                        shape,
+                        phase,
+                        best,
+                        best_cycles: rec.best_cycles,
+                        best_dram: rec.best_dram,
+                        heuristic_cycles: rec.heuristic_cycles,
+                        heuristic_dram: rec.heuristic_dram,
+                        evaluated: rec.evaluated,
+                        from_store: true,
+                    };
+                    return (choice, Vec::new());
+                }
+            }
+        }
+
+        let partitions = enumerate_partitions(cfg);
+        let modes = enumerate_modes(cfg);
+        let blockings = enumerate_blockings();
+        let mut seen: std::collections::HashSet<u64> = Default::default();
+        let mut scored: Vec<CandidateScore> = Vec::new();
+        // Evaluate the not-yet-seen subset of `cands`, in order.
+        let mut run = |planner: &Planner, cands: Vec<PlanParams>, scored: &mut Vec<CandidateScore>| {
+            let fresh: Vec<PlanParams> =
+                cands.into_iter().filter(|p| seen.insert(p.pack())).collect();
+            if !fresh.is_empty() {
+                scored.extend(planner.evaluate(cfg, shape, phase, opts, &fresh));
+            }
+        };
+
+        match self.strategy {
+            Strategy::Exhaustive => {
+                let mut all = Vec::new();
+                for &partition in &partitions {
+                    for &mode in &modes {
+                        for &blocking in &blockings {
+                            all.push(PlanParams { partition, blocking, mode });
+                        }
+                    }
+                }
+                run(self, all, &mut scored);
+            }
+            Strategy::Beam(n) => {
+                let n = n.max(1);
+                // Stage 1: partition axis under the default blocking/mode.
+                run(
+                    self,
+                    partitions
+                        .iter()
+                        .map(|&partition| PlanParams {
+                            partition,
+                            ..PlanParams::HEURISTIC
+                        })
+                        .collect(),
+                    &mut scored,
+                );
+                // Stage 2: expand the top-n plans along the mode axis.
+                let top = top_n(&scored, n);
+                run(
+                    self,
+                    top.iter()
+                        .flat_map(|p| {
+                            modes.iter().map(move |&mode| PlanParams { mode, ..*p })
+                        })
+                        .collect(),
+                    &mut scored,
+                );
+                // Stage 3: expand the (new) top-n along the blocking axis.
+                let top = top_n(&scored, n);
+                run(
+                    self,
+                    top.iter()
+                        .flat_map(|p| {
+                            blockings
+                                .iter()
+                                .map(move |&blocking| PlanParams { blocking, ..*p })
+                        })
+                        .collect(),
+                    &mut scored,
+                );
+            }
+        }
+
+        let heuristic = scored
+            .iter()
+            .find(|s| s.plan.is_heuristic())
+            .copied()
+            .expect("heuristic plan is always evaluated");
+        let mut best = heuristic;
+        for s in &scored {
+            if better(s, &best) {
+                best = *s;
+            }
+        }
+        let choice = PlanChoice {
+            shape,
+            phase,
+            best: best.plan,
+            best_cycles: best.cycles,
+            best_dram: best.dram,
+            heuristic_cycles: heuristic.cycles,
+            heuristic_dram: heuristic.dram,
+            evaluated: scored.len() as u32,
+            from_store: false,
+        };
+        if let Some(store) = self.session().store() {
+            store.put_plan(fp, &choice.to_record(self.strategy));
+        }
+        (choice, scored)
+    }
+
+    /// Plan every unique GEMM of a model's pruning trajectory on one
+    /// configuration (the `flexsa plan <model>` and report-table path).
+    /// Row weights are epoch×occurrence counts, so aggregate savings
+    /// reflect trajectory-serial time.
+    pub fn plan_schedule(
+        &self,
+        cfg: &Arc<AcceleratorConfig>,
+        model: &Model,
+        sched: &PruneSchedule,
+        opts: &SimOptions,
+    ) -> TrajectoryPlan {
+        let weights = crate::coordinator::point_weights(sched);
+        let mut keys: Vec<(GemmShape, Phase)> = Vec::new();
+        let mut weight_of: HashMap<(usize, usize, usize, usize), f64> = HashMap::new();
+        for (point, &w) in sched.points.iter().zip(&weights) {
+            for g in model.gemms(model.default_batch, &point.counts) {
+                let k = (g.shape.m, g.shape.n, g.shape.k, g.phase.index());
+                if !weight_of.contains_key(&k) {
+                    keys.push((g.shape, g.phase));
+                }
+                *weight_of.entry(k).or_insert(0.0) += w;
+            }
+        }
+        let mut rows: Vec<PlanRow> = keys
+            .into_iter()
+            .map(|(shape, phase)| {
+                let choice = self.plan_gemm(cfg, shape, phase, opts);
+                let weight = weight_of[&(shape.m, shape.n, shape.k, phase.index())];
+                PlanRow { choice, weight }
+            })
+            .collect();
+        rows.sort_by(|a, b| {
+            b.choice
+                .gap()
+                .total_cmp(&a.choice.gap())
+                .then_with(|| b.weight.total_cmp(&a.weight))
+        });
+        TrajectoryPlan { config: cfg.name.clone(), rows }
+    }
+}
+
+/// The `n` best-scoring distinct plans seen so far (enumeration order
+/// breaks ties, keeping the heuristic ahead of equals).
+fn top_n(scored: &[CandidateScore], n: usize) -> Vec<PlanParams> {
+    let mut idx: Vec<usize> = (0..scored.len()).collect();
+    idx.sort_by(|&a, &b| {
+        scored[a]
+            .cycles
+            .total_cmp(&scored[b].cycles)
+            .then(scored[a].dram.cmp(&scored[b].dram))
+            .then(a.cmp(&b))
+    });
+    idx.into_iter().take(n).map(|i| scored[i].plan).collect()
+}
+
+/// One planned unique GEMM of a trajectory.
+#[derive(Debug, Clone, Copy)]
+pub struct PlanRow {
+    /// The planner's decision for this GEMM.
+    pub choice: PlanChoice,
+    /// Epoch-weighted occurrence count over the trajectory.
+    pub weight: f64,
+}
+
+/// All planned GEMMs of one `(config, model trajectory)` pair, sorted by
+/// descending gap.
+#[derive(Debug, Clone)]
+pub struct TrajectoryPlan {
+    /// Configuration name the plans are for.
+    pub config: String,
+    /// Per-unique-GEMM rows (largest gap first).
+    pub rows: Vec<PlanRow>,
+}
+
+impl TrajectoryPlan {
+    /// Unique `(shape, phase)` GEMM keys planned.
+    pub fn unique_gemms(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Keys where the search strictly beat the heuristic.
+    pub fn improved(&self) -> usize {
+        self.rows.iter().filter(|r| r.choice.gap() > 0.0).count()
+    }
+
+    /// Unweighted mean gap over the unique keys.
+    pub fn mean_gap(&self) -> f64 {
+        if self.rows.is_empty() {
+            return 0.0;
+        }
+        self.rows.iter().map(|r| r.choice.gap()).sum::<f64>() / self.rows.len() as f64
+    }
+
+    /// Largest per-GEMM gap.
+    pub fn max_gap(&self) -> f64 {
+        self.rows.iter().map(|r| r.choice.gap()).fold(0.0, f64::max)
+    }
+
+    /// Trajectory-weighted cycle saving of searched plans over the
+    /// heuristic (`1 − Σw·best / Σw·heuristic`): the fraction of
+    /// layer-serial GEMM time the search recovers over the whole run.
+    pub fn weighted_saving(&self) -> f64 {
+        let heur: f64 = self.rows.iter().map(|r| r.weight * r.choice.heuristic_cycles).sum();
+        let best: f64 = self.rows.iter().map(|r| r.weight * r.choice.best_cycles).sum();
+        if heur <= 0.0 {
+            0.0
+        } else {
+            (1.0 - best / heur).max(0.0)
+        }
+    }
+
+    /// Were any rows answered from the persistent plan store?
+    pub fn from_store(&self) -> usize {
+        self.rows.iter().filter(|r| r.choice.from_store).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+
+    fn planner(strategy: Strategy) -> Planner {
+        Planner::new(SimSession::shared(), strategy, 2)
+    }
+
+    #[test]
+    fn enumeration_leads_with_the_heuristic() {
+        for name in ["1G1C", "1G4C", "4G4C", "1G1F", "4G1F"] {
+            let cfg = preset(name).unwrap();
+            assert_eq!(enumerate_partitions(&cfg)[0], PartitionPolicy::Heuristic, "{name}");
+            assert_eq!(enumerate_modes(&cfg)[0], ModePolicy::Algorithm1, "{name}");
+        }
+        assert_eq!(enumerate_blockings()[0], BlockingPolicy::Auto);
+        // Single-group configs have no partition variants; monolithic
+        // units no mode variants.
+        assert_eq!(enumerate_partitions(&preset("1G1C").unwrap()).len(), 1);
+        assert_eq!(enumerate_modes(&preset("1G4C").unwrap()).len(), 1);
+        assert!(enumerate_partitions(&preset("4G1F").unwrap()).len() >= 4);
+        assert_eq!(enumerate_modes(&preset("1G1F").unwrap()).len(), 6);
+    }
+
+    #[test]
+    fn strategy_bytes_are_distinct() {
+        assert_eq!(Strategy::Exhaustive.byte(), 0xFF);
+        assert_eq!(Strategy::Beam(2).byte(), 2);
+        assert_eq!(Strategy::Beam(4).byte(), 4);
+        assert_eq!(Strategy::Beam(0).byte(), 1);
+        assert_eq!(Strategy::Beam(10_000).byte(), 254);
+    }
+
+    #[test]
+    fn plan_gemm_never_beats_itself_on_trivial_space() {
+        // 1G1C has exactly the blocking axis: the heuristic must win with
+        // gap 0 (Auto is in-model optimal).
+        let p = planner(Strategy::Exhaustive);
+        let cfg = Arc::new(preset("1G1C").unwrap());
+        let c = p.plan_gemm(&cfg, GemmShape::new(1000, 71, 333), Phase::Forward, &SimOptions::hbm2());
+        assert!(c.best.is_heuristic(), "{:?}", c.best);
+        assert_eq!(c.gap(), 0.0);
+        assert_eq!(c.evaluated, 4); // Auto, KeepA, KeepB, KeepC
+        assert!(!c.from_store);
+    }
+
+    #[test]
+    fn gap_is_never_negative() {
+        let p = planner(Strategy::Exhaustive);
+        let opts = SimOptions::hbm2();
+        for name in ["1G4C", "4G4C", "1G1F", "4G1F"] {
+            let cfg = Arc::new(preset(name).unwrap());
+            for (shape, phase) in [
+                (GemmShape::new(25088, 53, 639), Phase::Forward),
+                (GemmShape::new(32, 1000, 2048), Phase::Forward),
+                (GemmShape::new(256, 576, 25088), Phase::WeightGrad),
+                (GemmShape::new(1000, 71, 333), Phase::DataGrad),
+            ] {
+                let c = p.plan_gemm(&cfg, shape, phase, &opts);
+                assert!(c.gap() >= 0.0, "{name} {shape} {phase:?}: {c:?}");
+                assert!(c.best_cycles <= c.heuristic_cycles, "{name} {shape}");
+                if c.best_cycles == c.heuristic_cycles {
+                    assert!(c.best_dram <= c.heuristic_dram, "{name} {shape}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn beam_is_bounded_by_heuristic_and_exhaustive() {
+        let session = SimSession::shared();
+        let exhaustive = Planner::new(Arc::clone(&session), Strategy::Exhaustive, 2);
+        let beam = Planner::new(Arc::clone(&session), Strategy::Beam(2), 2);
+        let cfg = Arc::new(preset("4G1F").unwrap());
+        let shape = GemmShape::new(32, 1000, 2048);
+        let e = exhaustive.plan_gemm(&cfg, shape, Phase::Forward, &SimOptions::hbm2());
+        let b = beam.plan_gemm(&cfg, shape, Phase::Forward, &SimOptions::hbm2());
+        assert!(b.evaluated <= e.evaluated, "{} > {}", b.evaluated, e.evaluated);
+        assert!(e.best_cycles <= b.best_cycles + 1e-9);
+        assert!(b.best_cycles <= b.heuristic_cycles);
+        assert_eq!(e.heuristic_cycles.to_bits(), b.heuristic_cycles.to_bits());
+    }
+
+    /// Tiny 3-conv CNN so the trajectory test stays fast.
+    fn tiny_model() -> crate::models::Model {
+        let mut b = crate::models::ModelBuilder::new("tiny", 32, 3, 8);
+        let g1 = b.group("c1", 48);
+        let g2 = b.group("c2", 96);
+        b.conv("conv1", g1, 3, 1);
+        b.conv("conv2", g2, 3, 2);
+        b.fc("fc", crate::models::ChRef::Fixed(10));
+        b.build()
+    }
+
+    #[test]
+    fn plan_schedule_dedups_and_weights() {
+        let p = planner(Strategy::Beam(1));
+        let cfg = Arc::new(preset("1G1F").unwrap());
+        let model = tiny_model();
+        let sched = crate::pruning::prunetrain_schedule(
+            &model,
+            crate::pruning::Strength::Low,
+            10,
+            5,
+            42,
+        );
+        let t = p.plan_schedule(&cfg, &model, &sched, &SimOptions::ideal());
+        assert!(t.unique_gemms() > 0);
+        assert!(t.rows.iter().all(|r| r.weight > 0.0));
+        assert!(t.mean_gap() >= 0.0);
+        assert!(t.max_gap() >= t.mean_gap());
+        assert!((0.0..=1.0).contains(&t.weighted_saving()));
+        // Rows are sorted by descending gap.
+        for w in t.rows.windows(2) {
+            assert!(w[0].choice.gap() >= w[1].choice.gap());
+        }
+    }
+}

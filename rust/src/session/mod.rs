@@ -34,12 +34,14 @@
 
 pub mod store;
 
-pub use store::{SimStore, StoreStats};
+pub use store::{DiskStats, GcResult, PlanRecord, SimStore, StoreStats};
 
+use crate::compiler::PlanParams;
 use crate::config::AcceleratorConfig;
 use crate::gemm::{GemmShape, Phase};
-use crate::sim::{simulate_gemm_shape, GemmSim, SimOptions};
+use crate::sim::{simulate_gemm_plan, simulate_gemm_shape, GemmSim, SimOptions};
 use std::collections::{HashMap, VecDeque};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -302,6 +304,14 @@ impl SimSession {
         phase: Phase,
         opts: &SimOptions,
     ) -> Fingerprint {
+        Fingerprint(Self::base_hasher(cfg_fp, shape, phase, opts).state)
+    }
+
+    /// The shared base-message hasher of [`Self::fingerprint_keyed`] and
+    /// [`Self::fingerprint_plan_keyed`]: one definition of the encoding,
+    /// so the plan-variant keys can never drift from the documented
+    /// "base encoding ∥ plan bits" contract.
+    fn base_hasher(cfg_fp: u64, shape: GemmShape, phase: Phase, opts: &SimOptions) -> Fnv128 {
         // The options pack must fit the 1-byte slot below — if a future
         // SimOptions knob pushes it past 8 bits, widen the encoding (and
         // bump `sim::SIM_VERSION`) instead of silently colliding keys.
@@ -315,6 +325,32 @@ impl SimSession {
         h.write_u64(shape.n as u64);
         h.write_u64(shape.k as u64);
         h.write(&[phase.index() as u8, opts.fingerprint() as u8]);
+        h
+    }
+
+    /// Content address of a **plan-parameterized** simulation input. For
+    /// the heuristic plan this is exactly [`Self::fingerprint_keyed`] —
+    /// plan-aware callers share cache (and persistent-store) entries with
+    /// every plan-less path. Non-heuristic plans fold the plan-codec
+    /// version byte plus the packed plan bits ([`PlanParams::pack`]) after
+    /// the base encoding, extending the hashed message, so plan variants
+    /// occupy their own key space — and a
+    /// [`store::PLAN_CODEC_VERSION`] bump (the documented procedure for a
+    /// pack-layout change) re-keys persisted plan-variant `.gsim` entries
+    /// too, so reinterpreted plan bits can never resolve a stale entry.
+    pub fn fingerprint_plan_keyed(
+        cfg_fp: u64,
+        shape: GemmShape,
+        phase: Phase,
+        opts: &SimOptions,
+        plan: &PlanParams,
+    ) -> Fingerprint {
+        if plan.is_heuristic() {
+            return Self::fingerprint_keyed(cfg_fp, shape, phase, opts);
+        }
+        let mut h = Self::base_hasher(cfg_fp, shape, phase, opts);
+        h.write(&[store::PLAN_CODEC_VERSION]);
+        h.write_u64(plan.pack());
         Fingerprint(h.state)
     }
 
@@ -348,12 +384,48 @@ impl SimSession {
         phase: Phase,
         opts: &SimOptions,
     ) -> Arc<GemmSim> {
+        self.simulate_plan_keyed(cfg_fp, cfg, shape, phase, opts, &PlanParams::HEURISTIC)
+    }
+
+    /// Simulate one GEMM under an explicit compilation plan through the
+    /// cache (the planner's candidate-scoring path). The heuristic plan is
+    /// keyed and computed identically to [`Self::simulate_keyed`] —
+    /// planner-warmed heuristic results dedup with every other consumer —
+    /// while non-heuristic plans get their own keys
+    /// ([`Self::fingerprint_plan_keyed`]) and flow through the same memory
+    /// tiers, including the persistent store.
+    pub fn simulate_plan(
+        &self,
+        cfg: &AcceleratorConfig,
+        shape: GemmShape,
+        phase: Phase,
+        opts: &SimOptions,
+        plan: &PlanParams,
+    ) -> Arc<GemmSim> {
+        if !self.enabled {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return Arc::new(simulate_gemm_plan(cfg, shape, phase, opts, plan));
+        }
+        self.simulate_plan_keyed(cfg.fingerprint(), cfg, shape, phase, opts, plan)
+    }
+
+    /// [`Self::simulate_plan`] with the config digest precomputed (same
+    /// contract as [`Self::simulate_keyed`]).
+    pub fn simulate_plan_keyed(
+        &self,
+        cfg_fp: u64,
+        cfg: &AcceleratorConfig,
+        shape: GemmShape,
+        phase: Phase,
+        opts: &SimOptions,
+        plan: &PlanParams,
+    ) -> Arc<GemmSim> {
         debug_assert_eq!(cfg_fp, cfg.fingerprint(), "stale config digest for {}", cfg.name);
         if !self.enabled {
             self.misses.fetch_add(1, Ordering::Relaxed);
-            return Arc::new(simulate_gemm_shape(cfg, shape, phase, opts));
+            return Arc::new(simulate_gemm_plan(cfg, shape, phase, opts, plan));
         }
-        let fp = Self::fingerprint_keyed(cfg_fp, shape, phase, opts);
+        let fp = Self::fingerprint_plan_keyed(cfg_fp, shape, phase, opts, plan);
         let shard = &self.shards[fp.0 as usize % SHARDS];
         let cached = shard.lock().unwrap().map.get(&fp.0).cloned();
         if let Some(hit) = cached {
@@ -367,7 +439,7 @@ impl SimSession {
             return self.insert_or_adopt(shard, fp.0, Arc::new(disk)).0;
         }
         // Simulate outside the lock (see the type-level docs).
-        let sim = Arc::new(simulate_gemm_shape(cfg, shape, phase, opts));
+        let sim = Arc::new(simulate_gemm_plan(cfg, shape, phase, opts, plan));
         let (sim, inserted) = self.insert_or_adopt(shard, fp.0, sim);
         if inserted {
             // Write behind: only the in-memory insert winner persists the
@@ -445,6 +517,64 @@ impl SimSession {
             g.map.clear();
             g.order.clear();
         }
+    }
+}
+
+/// Parsed cache-control flags (`--no-cache`, `--no-store`, `--cache-dir`),
+/// shared by the `flexsa` binary and the trainer so both build their
+/// sessions the same way (the trainer previously hardcoded
+/// `SimSession::new()` and could not share a warmed `--cache-dir`).
+#[derive(Debug, Clone, Default)]
+pub struct CacheOpts {
+    /// Disable the in-memory session cache entirely (`--no-cache`).
+    pub no_cache: bool,
+    /// Keep the memory cache but skip the persistent disk tier
+    /// (`--no-store`).
+    pub no_store: bool,
+    /// Explicit store directory (`--cache-dir DIR`); `None` falls back to
+    /// [`SimStore::default_dir`].
+    pub cache_dir: Option<PathBuf>,
+}
+
+impl CacheOpts {
+    /// Read the cache flags from a parsed command line.
+    pub fn from_args(args: &crate::cli::Args) -> CacheOpts {
+        CacheOpts {
+            no_cache: args.has("no-cache"),
+            no_store: args.has("no-store"),
+            cache_dir: args.get("cache-dir").map(PathBuf::from),
+        }
+    }
+
+    /// Build a session honoring these flags: disabled for `no_cache`,
+    /// memory-only for `no_store` (or when no store directory resolves),
+    /// otherwise store-backed. A store that fails to open degrades to
+    /// memory-only with a stderr note — persistence is an optimization,
+    /// never a hard requirement.
+    pub fn build_session(&self) -> SimSession {
+        if self.no_cache {
+            return SimSession::disabled();
+        }
+        let mut session = SimSession::new();
+        if !self.no_store {
+            let dir = self.cache_dir.clone().or_else(SimStore::default_dir);
+            if let Some(dir) = dir {
+                match SimStore::open(&dir) {
+                    Ok(store) => session.set_store(Some(store)),
+                    Err(e) => eprintln!("# sim store disabled ({}: {e})", dir.display()),
+                }
+            }
+        }
+        session
+    }
+
+    /// The store directory these flags resolve to (explicit flag, else the
+    /// default location), regardless of whether a store opens there.
+    pub fn resolved_dir(&self) -> Option<PathBuf> {
+        if self.no_store {
+            return None;
+        }
+        self.cache_dir.clone().or_else(SimStore::default_dir)
     }
 }
 
@@ -608,6 +738,83 @@ mod tests {
         warm.simulate(&cfg, shape(), Phase::Forward, &SimOptions::ideal());
         let st = warm.stats();
         assert_eq!((st.hits, st.store_hits, st.store_misses), (1, 1, 0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn heuristic_plan_shares_keys_with_planless_lookups() {
+        use crate::compiler::{ModePolicy, PlanParams};
+        let cfg = preset("1G1F").unwrap();
+        let opts = SimOptions::ideal();
+        let base = SimSession::fingerprint(&cfg, shape(), Phase::Forward, &opts);
+        assert_eq!(
+            base,
+            SimSession::fingerprint_plan_keyed(
+                cfg.fingerprint(),
+                shape(),
+                Phase::Forward,
+                &opts,
+                &PlanParams::HEURISTIC,
+            )
+        );
+        let greedy = PlanParams { mode: ModePolicy::ReuseGreedy, ..PlanParams::HEURISTIC };
+        assert_ne!(
+            base,
+            SimSession::fingerprint_plan_keyed(
+                cfg.fingerprint(),
+                shape(),
+                Phase::Forward,
+                &opts,
+                &greedy,
+            )
+        );
+        // And through the cache: a heuristic-plan lookup hits the entry a
+        // plan-less simulate inserted, a variant-plan lookup does not.
+        let s = SimSession::new();
+        s.simulate(&cfg, shape(), Phase::Forward, &opts);
+        s.simulate_plan(&cfg, shape(), Phase::Forward, &opts, &PlanParams::HEURISTIC);
+        let st = s.stats();
+        assert_eq!((st.hits, st.misses, st.entries), (1, 1, 1), "{st:?}");
+        s.simulate_plan(&cfg, shape(), Phase::Forward, &opts, &greedy);
+        let st = s.stats();
+        assert_eq!((st.hits, st.misses, st.entries), (1, 2, 2), "{st:?}");
+    }
+
+    #[test]
+    fn plan_variant_results_flow_through_the_store() {
+        use crate::compiler::{PartitionPolicy, PlanParams};
+        let dir = crate::proptest::scratch_dir("session-plan-tiers");
+        let cfg = preset("4G1F").unwrap();
+        let plan = PlanParams { partition: PartitionPolicy::ForceK, ..PlanParams::HEURISTIC };
+
+        let cold = SimSession::with_store(SimStore::open(&dir).unwrap());
+        let a = cold.simulate_plan(&cfg, shape(), Phase::Forward, &SimOptions::ideal(), &plan);
+        assert_eq!(cold.stats().store_writes, 1);
+
+        let warm = SimSession::with_store(SimStore::open(&dir).unwrap());
+        let b = warm.simulate_plan(&cfg, shape(), Phase::Forward, &SimOptions::ideal(), &plan);
+        crate::proptest::gemm_bit_identical(&a, &b).unwrap();
+        let st = warm.stats();
+        assert_eq!((st.store_hits, st.sims()), (1, 0), "{st:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cache_opts_build_matching_sessions() {
+        let opts = CacheOpts { no_cache: true, ..Default::default() };
+        assert!(!opts.build_session().is_enabled());
+        let dir = crate::proptest::scratch_dir("cache-opts");
+        let opts =
+            CacheOpts { cache_dir: Some(dir.clone()), ..Default::default() };
+        let s = opts.build_session();
+        assert!(s.is_enabled());
+        assert!(s.store().is_some());
+        assert_eq!(opts.resolved_dir().as_deref(), Some(dir.as_path()));
+        let opts = CacheOpts { no_store: true, cache_dir: Some(dir.clone()), ..Default::default() };
+        let s = opts.build_session();
+        assert!(s.is_enabled());
+        assert!(s.store().is_none());
+        assert!(opts.resolved_dir().is_none());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -34,11 +34,30 @@ use std::io;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 
-/// Magic prefix of every store entry.
+/// Magic prefix of every simulation-result store entry.
 pub const MAGIC: [u8; 4] = *b"FXSA";
 
-/// Filename extension of store entries.
+/// Magic prefix of every **plan-record** store entry (the second entry
+/// kind, DESIGN.md §12): the planner's winning plan + the heuristic
+/// baseline it beat, persisted so warm reruns skip the whole search.
+pub const PLAN_MAGIC: [u8; 4] = *b"FXPL";
+
+/// Filename extension of simulation-result entries.
 const EXT: &str = "gsim";
+
+/// Filename extension of plan-record entries.
+const PLAN_EXT: &str = "gplan";
+
+/// Plan-record codec version, folded into plan keys and stored in plan
+/// entries. Bump when [`crate::compiler::PlanParams::pack`], the planner's
+/// scoring order, or the [`PlanRecord`] layout changes (a
+/// [`crate::sim::SIM_VERSION`] bump *also* re-keys plan records, since the
+/// recorded cycles come from the simulator).
+pub const PLAN_CODEC_VERSION: u8 = 1;
+
+/// Domain-separation byte folded into plan keys so a plan record can never
+/// alias a simulation entry even if the extensions were ignored.
+const PLAN_DOMAIN: u8 = 0x50; // 'P'
 
 /// Fixed-size prefix of an encoded entry: magic, version byte, three `f64`
 /// timing fields, `busy_macs`, five traffic counters, and the
@@ -121,6 +140,84 @@ fn read_u64(bytes: &[u8], off: usize) -> u64 {
     u64::from_le_bytes(bytes[off..off + 8].try_into().expect("bounds checked"))
 }
 
+/// One persisted planner decision (see [`PLAN_MAGIC`]): the packed winning
+/// plan, its score, the Algorithm-1 baseline score, and how the search ran.
+/// Plain data — [`crate::planner`] converts it to/from `PlanChoice`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlanRecord {
+    /// Winning plan, packed via [`crate::compiler::PlanParams::pack`].
+    pub plan: u64,
+    /// Cycles of the winning plan.
+    pub best_cycles: f64,
+    /// DRAM bytes of the winning plan.
+    pub best_dram: u64,
+    /// Cycles of the Algorithm-1 heuristic plan on the same key.
+    pub heuristic_cycles: f64,
+    /// DRAM bytes of the heuristic plan.
+    pub heuristic_dram: u64,
+    /// Candidate plans the search scored.
+    pub evaluated: u32,
+    /// Search-strategy byte (`0xFF` = exhaustive, else the beam width);
+    /// also folded into the key, so a beam result never answers an
+    /// exhaustive query.
+    pub strategy: u8,
+}
+
+/// Fixed size of an encoded [`PlanRecord`]: magic, version, four 8-byte
+/// score fields, the packed plan, `evaluated`, the strategy byte, and the
+/// trailing checksum.
+const PLAN_ENTRY_LEN: usize = 4 + 1 + 8 * 5 + 4 + 1 + CHECKSUM_LEN;
+
+/// Encode a [`PlanRecord`] (layout mirrors [`encode_gemm_sim`]: magic ∥
+/// version ∥ fixed-width LE fields ∥ FNV-1a/64 checksum; floats travel as
+/// `to_bits`).
+pub fn encode_plan_record(r: &PlanRecord, version: u8) -> Vec<u8> {
+    let mut out = Vec::with_capacity(PLAN_ENTRY_LEN);
+    out.extend_from_slice(&PLAN_MAGIC);
+    out.push(version);
+    out.extend_from_slice(&r.plan.to_le_bytes());
+    out.extend_from_slice(&r.best_cycles.to_bits().to_le_bytes());
+    out.extend_from_slice(&r.best_dram.to_le_bytes());
+    out.extend_from_slice(&r.heuristic_cycles.to_bits().to_le_bytes());
+    out.extend_from_slice(&r.heuristic_dram.to_le_bytes());
+    out.extend_from_slice(&r.evaluated.to_le_bytes());
+    out.push(r.strategy);
+    let sum = crate::util::fnv64(&out);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out
+}
+
+/// Decode an entry produced by [`encode_plan_record`]; validation follows
+/// the same taxonomy as [`decode_gemm_sim`] (any failure is a clean miss).
+pub fn decode_plan_record(bytes: &[u8], version: u8) -> Result<PlanRecord, CodecError> {
+    if bytes.len() < PLAN_ENTRY_LEN {
+        return Err(CodecError::Truncated);
+    }
+    let (body, sum) = bytes.split_at(bytes.len() - CHECKSUM_LEN);
+    if body[..4] != PLAN_MAGIC {
+        return Err(CodecError::BadMagic);
+    }
+    if body[4] != version {
+        return Err(CodecError::BadVersion(body[4]));
+    }
+    let want = u64::from_le_bytes(sum.try_into().expect("checksum is 8 bytes"));
+    if crate::util::fnv64(body) != want {
+        return Err(CodecError::BadChecksum);
+    }
+    if bytes.len() != PLAN_ENTRY_LEN {
+        return Err(CodecError::BadLength);
+    }
+    Ok(PlanRecord {
+        plan: read_u64(body, 5),
+        best_cycles: f64::from_bits(read_u64(body, 13)),
+        best_dram: read_u64(body, 21),
+        heuristic_cycles: f64::from_bits(read_u64(body, 29)),
+        heuristic_dram: read_u64(body, 37),
+        evaluated: u32::from_le_bytes(body[45..49].try_into().expect("bounds")),
+        strategy: body[49],
+    })
+}
+
 /// Decode an entry produced by [`encode_gemm_sim`], validating magic,
 /// version, checksum, length consistency, and mode-index canonicality.
 /// Bit-exact: floats round-trip through their `to_bits` patterns.
@@ -185,6 +282,12 @@ pub struct StoreStats {
     /// Write attempts that failed on an I/O error (best-effort: the cache
     /// stays correct, only slower).
     pub write_errors: u64,
+    /// Plan-record lookups answered from disk.
+    pub plan_hits: u64,
+    /// Plan-record lookups that found no (valid) entry.
+    pub plan_misses: u64,
+    /// Plan records written to disk.
+    pub plan_writes: u64,
 }
 
 impl StoreStats {
@@ -218,6 +321,15 @@ impl StoreStats {
         }
         s
     }
+
+    /// One-line summary of the plan-record tier (the `flexsa plan`
+    /// command's `# plan store:` line; CI's plan-smoke greps `hits=`).
+    pub fn plan_summary(&self) -> String {
+        format!(
+            "hits={} misses={} writes={}",
+            self.plan_hits, self.plan_misses, self.plan_writes
+        )
+    }
 }
 
 /// Versioned, content-addressed on-disk store of [`GemmSim`] results.
@@ -232,6 +344,9 @@ pub struct SimStore {
     misses: AtomicU64,
     writes: AtomicU64,
     write_errors: AtomicU64,
+    plan_hits: AtomicU64,
+    plan_misses: AtomicU64,
+    plan_writes: AtomicU64,
 }
 
 impl SimStore {
@@ -253,6 +368,9 @@ impl SimStore {
             misses: AtomicU64::new(0),
             writes: AtomicU64::new(0),
             write_errors: AtomicU64::new(0),
+            plan_hits: AtomicU64::new(0),
+            plan_misses: AtomicU64::new(0),
+            plan_writes: AtomicU64::new(0),
         })
     }
 
@@ -363,6 +481,62 @@ impl SimStore {
         }
     }
 
+    /// Plan-record key: the session fingerprint re-hashed with the
+    /// simulator version, the plan codec version, the [`PLAN_DOMAIN`]
+    /// byte, and the search-strategy byte — so simulator bumps, plan-codec
+    /// bumps, and strategy changes each re-key plan records independently
+    /// of the simulation entries (DESIGN.md §12).
+    fn plan_key(&self, fp: Fingerprint, strategy: u8) -> u128 {
+        let mut h = super::Fnv128::new();
+        h.write(&fp.0.to_le_bytes());
+        h.write(&[self.version, PLAN_CODEC_VERSION, PLAN_DOMAIN, strategy]);
+        h.state
+    }
+
+    /// On-disk path of the plan record for `(fp, strategy)` (same
+    /// two-hex-char sharding as simulation entries, `.gplan` extension).
+    pub fn plan_entry_path(&self, fp: Fingerprint, strategy: u8) -> PathBuf {
+        let hex = format!("{:032x}", self.plan_key(fp, strategy));
+        self.dir.join(&hex[..2]).join(format!("{hex}.{PLAN_EXT}"))
+    }
+
+    /// Look up the persisted plan record for `(fp, strategy)`. Like
+    /// [`Self::get`], every failure mode — missing file, corruption,
+    /// version or strategy mismatch — is a clean miss.
+    pub fn get_plan(&self, fp: Fingerprint, strategy: u8) -> Option<PlanRecord> {
+        let found = std::fs::read(self.plan_entry_path(fp, strategy))
+            .ok()
+            .and_then(|bytes| decode_plan_record(&bytes, PLAN_CODEC_VERSION).ok())
+            // Second line of defense (mirrors the stored version byte): a
+            // record copied across strategy keys is rejected by content.
+            .filter(|r| r.strategy == strategy);
+        match found {
+            Some(r) => {
+                self.plan_hits.fetch_add(1, Ordering::Relaxed);
+                Some(r)
+            }
+            None => {
+                self.plan_misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Persist a plan record (atomic, best-effort; mirrors [`Self::put`]).
+    pub fn put_plan(&self, fp: Fingerprint, r: &PlanRecord) -> bool {
+        let path = self.plan_entry_path(fp, r.strategy);
+        match self.write_atomic(&path, &encode_plan_record(r, PLAN_CODEC_VERSION)) {
+            Ok(()) => {
+                self.plan_writes.fetch_add(1, Ordering::Relaxed);
+                true
+            }
+            Err(_) => {
+                self.write_errors.fetch_add(1, Ordering::Relaxed);
+                false
+            }
+        }
+    }
+
     /// Count the complete entries on disk (walks the shard directories;
     /// in-flight temp files are excluded). For tests and diagnostics.
     pub fn entry_count(&self) -> usize {
@@ -382,8 +556,150 @@ impl SimStore {
             misses: self.misses.load(Ordering::Relaxed),
             writes: self.writes.load(Ordering::Relaxed),
             write_errors: self.write_errors.load(Ordering::Relaxed),
+            plan_hits: self.plan_hits.load(Ordering::Relaxed),
+            plan_misses: self.plan_misses.load(Ordering::Relaxed),
+            plan_writes: self.plan_writes.load(Ordering::Relaxed),
         }
     }
+
+    /// Walk the shard directories and report what is on disk (the
+    /// `flexsa cache stats` command; ROADMAP "Store capacity + GC").
+    pub fn disk_stats(&self) -> DiskStats {
+        let mut out = DiskStats::default();
+        for (path, len, _) in self.walk() {
+            out.bytes += len;
+            match path.extension().and_then(|e| e.to_str()) {
+                Some(e) if e == EXT => out.sim_entries += 1,
+                Some(e) if e == PLAN_EXT => out.plan_entries += 1,
+                _ if is_temp(&path) => out.temp_files += 1,
+                _ => out.other_files += 1,
+            }
+        }
+        if let Ok(shards) = std::fs::read_dir(&self.dir) {
+            out.shard_dirs = shards.flatten().filter(|d| d.path().is_dir()).count() as u64;
+        }
+        out
+    }
+
+    /// Evict oldest-modified entries until the store fits `max_bytes`
+    /// (the `flexsa cache gc --max-mib N` command). Stale temp files
+    /// (leftovers of crashed writers, older than one minute) are always
+    /// removed. **Only files this store wrote are ever touched**
+    /// (`.gsim`/`.gplan` entries and `.tmp-*` leftovers): a mistyped
+    /// `--cache-dir` pointing at real data must not lose anything, so
+    /// unrecognized files are skipped entirely (they still show up in
+    /// [`Self::disk_stats`] as `other_files`). Eviction can only cost
+    /// future re-simulations, never correctness — the store is a cache.
+    pub fn gc(&self, max_bytes: u64) -> GcResult {
+        let mut out = GcResult::default();
+        let mut entries: Vec<(std::time::SystemTime, u64, PathBuf)> = Vec::new();
+        for (path, len, mtime) in self.walk() {
+            if is_temp(&path) {
+                let stale = mtime
+                    .elapsed()
+                    .map(|age| age > std::time::Duration::from_secs(60))
+                    .unwrap_or(false);
+                if stale && std::fs::remove_file(&path).is_ok() {
+                    out.deleted += 1;
+                    out.freed_bytes += len;
+                }
+                continue;
+            }
+            if !is_store_entry(&path) {
+                continue; // not ours — never delete, never count
+            }
+            out.scanned += 1;
+            entries.push((mtime, len, path));
+        }
+        let mut total: u64 = entries.iter().map(|(_, len, _)| len).sum();
+        entries.sort(); // oldest mtime first (path tie-break keeps it total)
+        let mut evicted = 0u64;
+        let mut it = entries.into_iter();
+        while total > max_bytes {
+            let Some((_, len, path)) = it.next() else { break };
+            if std::fs::remove_file(&path).is_ok() {
+                evicted += 1;
+                out.deleted += 1;
+                out.freed_bytes += len;
+                total -= len;
+            }
+        }
+        out.kept = out.scanned - evicted;
+        out.kept_bytes = total;
+        // Tidy now-empty shard dirs (best-effort; a racing writer simply
+        // recreates them).
+        if let Ok(shards) = std::fs::read_dir(&self.dir) {
+            for shard in shards.flatten() {
+                let _ = std::fs::remove_dir(shard.path()); // fails unless empty
+            }
+        }
+        out
+    }
+
+    /// All files under the shard directories as `(path, length, mtime)` —
+    /// one `stat` per file, shared by [`Self::disk_stats`] and
+    /// [`Self::gc`].
+    fn walk(&self) -> impl Iterator<Item = (PathBuf, u64, std::time::SystemTime)> {
+        let shards = std::fs::read_dir(&self.dir).ok();
+        shards
+            .into_iter()
+            .flatten()
+            .flatten()
+            .filter_map(|shard| std::fs::read_dir(shard.path()).ok())
+            .flat_map(|files| files.flatten())
+            .filter_map(|f| {
+                let meta = f.metadata().ok()?;
+                let mtime = meta.modified().unwrap_or(std::time::SystemTime::UNIX_EPOCH);
+                Some((f.path(), meta.len(), mtime))
+            })
+    }
+}
+
+/// Is this a writer temp file (`.tmp-<pid>-<seq>`)?
+fn is_temp(path: &Path) -> bool {
+    path.file_name()
+        .and_then(|n| n.to_str())
+        .is_some_and(|n| n.starts_with(".tmp-"))
+}
+
+/// Is this a file this store wrote (a `.gsim` or `.gplan` entry)? GC only
+/// ever deletes these (plus stale temps).
+fn is_store_entry(path: &Path) -> bool {
+    path.extension()
+        .and_then(|e| e.to_str())
+        .is_some_and(|e| e == EXT || e == PLAN_EXT)
+}
+
+/// What [`SimStore::disk_stats`] found on disk.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DiskStats {
+    /// Complete simulation-result entries (`.gsim`).
+    pub sim_entries: u64,
+    /// Complete plan-record entries (`.gplan`).
+    pub plan_entries: u64,
+    /// Total bytes under the shard directories (all file kinds).
+    pub bytes: u64,
+    /// Shard directories present.
+    pub shard_dirs: u64,
+    /// In-flight (or orphaned) writer temp files.
+    pub temp_files: u64,
+    /// Unrecognized files (not written by this store).
+    pub other_files: u64,
+}
+
+/// What one [`SimStore::gc`] pass did.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct GcResult {
+    /// Entries considered (temp files excluded).
+    pub scanned: u64,
+    /// Files deleted (evicted entries + stale temp files).
+    pub deleted: u64,
+    /// Bytes freed by the deletions.
+    pub freed_bytes: u64,
+    /// Entries surviving the pass.
+    pub kept: u64,
+    /// Bytes surviving the pass.
+    pub kept_bytes: u64,
 }
 
 #[cfg(test)]
@@ -492,6 +808,156 @@ mod tests {
         assert!(v2.get(fp).is_none());
         assert!(v1.get(fp).is_some());
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    fn sample_plan() -> PlanRecord {
+        PlanRecord {
+            plan: crate::compiler::PlanParams {
+                partition: crate::compiler::PartitionPolicy::ForceK,
+                blocking: crate::compiler::BlockingPolicy::Auto,
+                mode: crate::compiler::ModePolicy::ReuseGreedy,
+            }
+            .pack(),
+            best_cycles: 1234.5,
+            best_dram: 777,
+            heuristic_cycles: 1500.25,
+            heuristic_dram: 900,
+            evaluated: 17,
+            strategy: 0xFF,
+        }
+    }
+
+    #[test]
+    fn plan_codec_round_trips_and_rejects_corruption() {
+        let r = sample_plan();
+        let bytes = encode_plan_record(&r, PLAN_CODEC_VERSION);
+        assert_eq!(bytes.len(), PLAN_ENTRY_LEN);
+        let back = decode_plan_record(&bytes, PLAN_CODEC_VERSION).unwrap();
+        assert_eq!(back.plan, r.plan);
+        assert_eq!(back.best_cycles.to_bits(), r.best_cycles.to_bits());
+        assert_eq!(back.heuristic_cycles.to_bits(), r.heuristic_cycles.to_bits());
+        assert_eq!((back.best_dram, back.heuristic_dram), (r.best_dram, r.heuristic_dram));
+        assert_eq!((back.evaluated, back.strategy), (r.evaluated, r.strategy));
+
+        assert_eq!(decode_plan_record(&bytes[..10], PLAN_CODEC_VERSION), Err(CodecError::Truncated));
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xFF;
+        assert_eq!(decode_plan_record(&bad, PLAN_CODEC_VERSION), Err(CodecError::BadMagic));
+        let mut bad = bytes.clone();
+        bad[4] = 99;
+        assert_eq!(decode_plan_record(&bad, PLAN_CODEC_VERSION), Err(CodecError::BadVersion(99)));
+        let mut bad = bytes.clone();
+        bad[20] ^= 0x40;
+        assert_eq!(decode_plan_record(&bad, PLAN_CODEC_VERSION), Err(CodecError::BadChecksum));
+        // A simulation entry never decodes as a plan record (magic check).
+        let sim_bytes = encode_gemm_sim(&sample_sim(), PLAN_CODEC_VERSION);
+        assert_eq!(decode_plan_record(&sim_bytes, PLAN_CODEC_VERSION), Err(CodecError::BadMagic));
+    }
+
+    #[test]
+    fn plan_records_round_trip_on_disk_keyed_by_strategy() {
+        let dir = temp_store_dir("plan-putget");
+        let store = SimStore::open(&dir).unwrap();
+        let fp = Fingerprint(0x1234_5678_9ABC_DEF0);
+        let r = sample_plan();
+        assert!(store.get_plan(fp, r.strategy).is_none());
+        assert!(store.put_plan(fp, &r));
+        let back = store.get_plan(fp, r.strategy).unwrap();
+        assert_eq!(back, r);
+        // A different strategy byte resolves to a different key: miss.
+        assert!(store.get_plan(fp, 2).is_none());
+        // Plan records are invisible to the simulation-entry API and
+        // vice versa (distinct key domain + extension).
+        assert!(store.get(fp).is_none());
+        assert_eq!(store.entry_count(), 0, "gsim count ignores plan records");
+        let st = store.stats();
+        assert_eq!((st.plan_hits, st.plan_misses, st.plan_writes), (1, 2, 1), "{st:?}");
+        assert_eq!(st.misses, 1); // the `get` above
+        assert!(st.plan_summary().contains("hits=1"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn disk_stats_count_both_entry_kinds() {
+        let dir = temp_store_dir("disk-stats");
+        let store = SimStore::open(&dir).unwrap();
+        store.put(Fingerprint(1), &sample_sim());
+        store.put(Fingerprint(2), &sample_sim());
+        store.put_plan(Fingerprint(1), &sample_plan());
+        let d = store.disk_stats();
+        assert_eq!(d.sim_entries, 2);
+        assert_eq!(d.plan_entries, 1);
+        assert!(d.bytes > 0);
+        assert!(d.shard_dirs >= 1);
+        assert_eq!(d.temp_files + d.other_files, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_evicts_oldest_until_budget() {
+        let dir = temp_store_dir("gc");
+        let store = SimStore::open(&dir).unwrap();
+        for i in 0..6u64 {
+            store.put(Fingerprint(i as u128), &sample_sim());
+            // Stagger mtimes deterministically (filesystem clocks can be
+            // coarse): oldest-first eviction must drop the earliest keys.
+            let path = store.entry_path(Fingerprint(i as u128));
+            let t = filetime_from_secs(1_000_000 + i);
+            set_mtime(&path, t);
+        }
+        let entry_len = encode_gemm_sim(&sample_sim(), SIM_VERSION).len() as u64;
+        // Budget for three entries: the three oldest must go.
+        let r = store.gc(3 * entry_len);
+        assert_eq!(r.scanned, 6, "{r:?}");
+        assert_eq!(r.deleted, 3, "{r:?}");
+        assert_eq!(r.kept, 3, "{r:?}");
+        assert_eq!(r.kept_bytes, 3 * entry_len, "{r:?}");
+        for i in 0..3u64 {
+            assert!(store.get(Fingerprint(i as u128)).is_none(), "entry {i} survived");
+        }
+        for i in 3..6u64 {
+            assert!(store.get(Fingerprint(i as u128)).is_some(), "entry {i} evicted");
+        }
+        // A second pass under the same budget is a no-op.
+        let r2 = store.gc(3 * entry_len);
+        assert_eq!((r2.scanned, r2.deleted), (3, 0), "{r2:?}");
+        // Budget 0 clears everything and removes the emptied shard dirs.
+        let r3 = store.gc(0);
+        assert_eq!(r3.kept, 0, "{r3:?}");
+        assert_eq!(store.disk_stats(), DiskStats::default());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_never_touches_foreign_files() {
+        // A mistyped --cache-dir pointing at real data must be safe: GC
+        // only deletes .gsim/.gplan entries (and stale temps), even under
+        // a zero budget.
+        let dir = temp_store_dir("gc-foreign");
+        let store = SimStore::open(&dir).unwrap();
+        store.put(Fingerprint(1), &sample_sim());
+        let shard = store.entry_path(Fingerprint(1)).parent().unwrap().to_path_buf();
+        std::fs::write(shard.join("precious.txt"), b"user data").unwrap();
+        std::fs::write(dir.join("top-level.txt"), b"not in a shard dir").unwrap();
+        let r = store.gc(0);
+        assert_eq!((r.scanned, r.deleted, r.kept), (1, 1, 0), "{r:?}");
+        assert_eq!(std::fs::read(shard.join("precious.txt")).unwrap(), b"user data");
+        assert!(dir.join("top-level.txt").exists());
+        let d = store.disk_stats();
+        assert_eq!((d.sim_entries, d.other_files), (0, 1), "{d:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Set a file's mtime via the only std-available channel (no `filetime`
+    /// crate offline): `File::set_times`.
+    fn set_mtime(path: &Path, t: std::time::SystemTime) {
+        let f = std::fs::OpenOptions::new().append(true).open(path).unwrap();
+        let times = std::fs::FileTimes::new().set_modified(t);
+        f.set_times(times).unwrap();
+    }
+
+    fn filetime_from_secs(secs: u64) -> std::time::SystemTime {
+        std::time::SystemTime::UNIX_EPOCH + std::time::Duration::from_secs(secs)
     }
 
     #[test]

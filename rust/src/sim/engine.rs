@@ -243,15 +243,32 @@ pub fn simulate_gemm_shape(
     phase: crate::gemm::Phase,
     opts: &SimOptions,
 ) -> GemmSim {
-    use crate::compiler::{gbuf_blocking, partitions, tile_partition_visit};
-    let (parts, k_partitioned) = partitions(cfg, shape, phase);
+    simulate_gemm_plan(cfg, shape, phase, opts, &crate::compiler::PlanParams::HEURISTIC)
+}
+
+/// [`simulate_gemm_shape`] under an explicit compilation plan — the
+/// scoring primitive of the [`crate::planner`]. With
+/// [`crate::compiler::PlanParams::HEURISTIC`] this *is* the plan-less
+/// streaming path (same partition, blocking, and mode decisions in the
+/// same order), so results are bit-identical — property-pinned by
+/// `tests/prop_planner.rs`.
+pub fn simulate_gemm_plan(
+    cfg: &AcceleratorConfig,
+    shape: crate::gemm::GemmShape,
+    phase: crate::gemm::Phase,
+    opts: &SimOptions,
+    plan: &crate::compiler::PlanParams,
+) -> GemmSim {
+    use crate::compiler::{gbuf_blocking_with, partitions_with, tile_partition_visit_plan};
+    let (parts, k_parts) = partitions_with(cfg, shape, phase, &plan.partition);
+    let k_partitioned = k_parts > 1;
     let mut out = GemmSim::default();
     let mut group_max = 0.0f64;
     let mut dram_bytes = 0u64;
     for p in parts {
-        let dram = gbuf_blocking(cfg, p, phase, k_partitioned);
+        let dram = gbuf_blocking_with(cfg, p, phase, k_parts, &plan.blocking);
         let mut ex = GroupExecutor::new(cfg, *opts, k_partitioned);
-        tile_partition_visit(cfg, p, k_partitioned, &mut |inst| ex.exec(&inst));
+        tile_partition_visit_plan(cfg, p, k_partitioned, &plan.mode, &mut |inst| ex.exec(&inst));
         group_max = group_max.max(ex.drain_into(&mut out));
         dram_bytes += dram.total_bytes();
         out.traffic.dram_read += dram.read_bytes;
@@ -409,6 +426,36 @@ mod tests {
         let fast = sim("1G1C", 4096, 512, 1024, &SimOptions::ideal());
         let slow = sim("1G1C", 4096, 512, 1024, &no_overlap);
         assert!(slow.cycles > fast.cycles, "{} vs {}", slow.cycles, fast.cycles);
+    }
+
+    #[test]
+    fn heuristic_plan_is_the_default_path() {
+        use crate::compiler::PlanParams;
+        for name in ["1G1C", "4G4C", "1G1F", "4G1F"] {
+            let cfg = preset(name).unwrap();
+            for phase in Phase::ALL {
+                let shape = GemmShape::new(1000, 71, 333);
+                let base = simulate_gemm_shape(&cfg, shape, phase, &SimOptions::hbm2());
+                let plan =
+                    simulate_gemm_plan(&cfg, shape, phase, &SimOptions::hbm2(), &PlanParams::HEURISTIC);
+                crate::proptest::gemm_bit_identical(&base, &plan).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn plan_variants_change_results() {
+        use crate::compiler::{PartitionPolicy, PlanParams};
+        // ForceK on a forward GEMM on a 4-group config writes f32 partials
+        // and reduces through memory: traffic must differ from the
+        // heuristic M-split.
+        let cfg = preset("4G1F").unwrap();
+        let shape = GemmShape::new(4096, 256, 1024);
+        let heur = simulate_gemm_shape(&cfg, shape, Phase::Forward, &SimOptions::ideal());
+        let plan = PlanParams { partition: PartitionPolicy::ForceK, ..PlanParams::HEURISTIC };
+        let forced = simulate_gemm_plan(&cfg, shape, Phase::Forward, &SimOptions::ideal(), &plan);
+        assert_eq!(forced.busy_macs, heur.busy_macs);
+        assert_ne!(forced.traffic.dram_write, heur.traffic.dram_write);
     }
 
     #[test]

@@ -24,7 +24,9 @@
 mod engine;
 mod iteration;
 
-pub use engine::{simulate_gemm, simulate_gemm_shape, GemmSim, GroupExecutor, Traffic};
+pub use engine::{
+    simulate_gemm, simulate_gemm_plan, simulate_gemm_shape, GemmSim, GroupExecutor, Traffic,
+};
 
 /// Simulator output version, folded into every persistent-store key and
 /// written into every on-disk entry (DESIGN.md §11). **Bump this whenever a
@@ -33,7 +35,11 @@ pub use engine::{simulate_gemm, simulate_gemm_shape, GemmSim, GroupExecutor, Tra
 /// [`GemmSim`] fields): old `~/.cache/flexsa` entries then stop resolving
 /// (their keys fold the old byte) and are transparently re-simulated —
 /// no manual cache flush, no stale figures.
-pub const SIM_VERSION: u8 = 1;
+///
+/// v2: the K-partition reduction charge divides the final-write traffic
+/// by the actual partial count instead of `groups` (PR 4 — exact for
+/// hybrid grids and K splits shallower than the group count).
+pub const SIM_VERSION: u8 = 2;
 
 /// Where the pipeline fill/drain ramp (`k + n` cycles) is charged.
 ///

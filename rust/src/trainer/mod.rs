@@ -24,6 +24,7 @@ pub use pruner::{ChannelMask, Pruner};
 use crate::cli::Args;
 use crate::pruning::PruneSchedule;
 use crate::runtime::ModelMeta;
+use crate::session::CacheOpts;
 
 /// Trainer configuration (CLI-driven).
 #[derive(Debug, Clone)]
@@ -42,6 +43,11 @@ pub struct TrainerConfig {
     pub seed: u64,
     /// Where to write the trace/loss outputs (None = skip).
     pub out_dir: Option<String>,
+    /// Cache flags for the measured-trace replay's simulation session —
+    /// the CLI's `--no-cache`/`--no-store`/`--cache-dir` plumb through
+    /// here, so the replay reads and warms the same persistent store as
+    /// the figure commands instead of building a private session.
+    pub cache: CacheOpts,
 }
 
 impl Default for TrainerConfig {
@@ -54,6 +60,7 @@ impl Default for TrainerConfig {
             threshold: 0.45,
             seed: 42,
             out_dir: Some("artifacts".into()),
+            cache: CacheOpts::default(),
         }
     }
 }
@@ -83,6 +90,7 @@ pub fn run_from_args(args: &Args) -> Result<(), String> {
     if let Some(o) = args.get("out") {
         cfg.out_dir = Some(o.to_string());
     }
+    cfg.cache = CacheOpts::from_args(args);
     dispatch(&cfg)
 }
 
@@ -110,7 +118,6 @@ pub fn run(cfg: &TrainerConfig) -> anyhow::Result<TrainOutcome> {
     use crate::models::ChannelCounts;
     use crate::pruning::PrunePoint;
     use crate::runtime::{lit, Runtime};
-    use crate::session::SimSession;
     use crate::sim::{simulate_model_epoch, SimOptions};
     use anyhow::Context;
 
@@ -228,8 +235,10 @@ pub fn run(cfg: &TrainerConfig) -> anyhow::Result<TrainOutcome> {
 
     // Simulate the measured trajectory on the paper's key configs. One
     // session for the whole replay: unpruned layers recur across trajectory
-    // points and repeated blocks recur within each iteration.
-    let session = SimSession::new();
+    // points and repeated blocks recur within each iteration. The session
+    // honors the CLI cache flags, so the replay reads/warms the same
+    // persistent `--cache-dir` as the figure commands.
+    let session = cfg.cache.build_session();
     let mut sim_results = Vec::new();
     println!("\nsimulated PE utilization on the measured trajectory:");
     for name in ["1G1C", "1G4C", "1G1F", "4G1F"] {
@@ -250,6 +259,14 @@ pub fn run(cfg: &TrainerConfig) -> anyhow::Result<TrainOutcome> {
     let speedup = sim_results[0].2 / sim_results[2].2;
     println!("headline: 1G1F speedup over 1G1C on measured trajectory = {speedup:.2}x");
     println!("sim cache: {}", session.stats().summary());
+    if let Some(store) = session.store() {
+        println!(
+            "sim store: {} sims={} at {}",
+            store.stats().summary(),
+            session.stats().sims(),
+            store.dir().display()
+        );
+    }
 
     if let Some(dir) = &cfg.out_dir {
         std::fs::create_dir_all(dir)?;
@@ -310,6 +327,20 @@ mod tests {
         let c = TrainerConfig::default();
         assert!(c.steps >= c.prune_interval);
         assert!(c.threshold > 0.0 && c.threshold < 1.0);
+        assert!(!c.cache.no_cache && !c.cache.no_store && c.cache.cache_dir.is_none());
+    }
+
+    #[test]
+    fn cache_flags_parse_into_trainer_config() {
+        let args = Args::parse(
+            ["train", "--steps", "10", "--cache-dir", "/tmp/x", "--no-store"]
+                .map(String::from),
+        )
+        .unwrap();
+        let cache = CacheOpts::from_args(&args);
+        assert!(cache.no_store);
+        assert!(!cache.no_cache);
+        assert_eq!(cache.cache_dir.as_deref(), Some(std::path::Path::new("/tmp/x")));
     }
 
     #[test]
