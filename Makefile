@@ -1,7 +1,7 @@
 # Convenience targets. The rust build needs no artifacts; `artifacts` is
 # only for the optional PJRT end-to-end path (DESIGN.md §6).
 
-.PHONY: artifacts test rust-test py-test bench-smoke store-smoke plan-smoke
+.PHONY: artifacts test rust-test py-test bench-smoke store-smoke plan-smoke group-smoke
 
 # AOT-lower the L2 model + L1 kernel to HLO text (python runs once, at
 # build time; see python/compile/aot.py).
@@ -46,5 +46,21 @@ plan-smoke:
 	 test -n "$$gap"; case "$$gap" in -*) exit 1;; esac; \
 	 grep -q "from plan store" /tmp/flexsa-plan-warm.out; \
 	 test -n "$$hits" && test "$$hits" -gt 0 && test -n "$$sims" && test "$$sims" -eq 0
+
+# Local mirror of CI's group-tier smoke (DESIGN.md §13): a second,
+# *different* configuration (a DRAM-bandwidth sweep of 4G1F — distinct
+# whole-GEMM keys) run against the same --cache-dir must answer every
+# group partition from the shared group tier: group_hits>0 and
+# group_sims=0 on its `# group tier:` stderr line.
+group-smoke:
+	rm -rf /tmp/flexsa-group-smoke
+	mkdir -p /tmp/flexsa-group-smoke
+	printf 'name = 4G1F-sweep\ngroups = 4\nunits_per_group = 1\nunit_rows = 64\nunit_cols = 64\nkind = flexsa\ndram_gbps = 135\n' > /tmp/flexsa-group-smoke/cfg.txt
+	cd rust && cargo run --release --quiet -- simulate 4096 512 1024 --config 4G1F --cache-dir /tmp/flexsa-group-smoke/store >/dev/null 2>/tmp/flexsa-group-smoke/cold.log
+	cd rust && cargo run --release --quiet -- simulate 4096 512 1024 --config @/tmp/flexsa-group-smoke/cfg.txt --cache-dir /tmp/flexsa-group-smoke/store >/dev/null 2>/tmp/flexsa-group-smoke/warm.log
+	@hits=$$(sed -n 's/.*group_hits=\([0-9]*\).*/\1/p' /tmp/flexsa-group-smoke/warm.log | tail -n 1); \
+	 gsims=$$(sed -n 's/.*group_sims=\([0-9]*\).*/\1/p' /tmp/flexsa-group-smoke/warm.log | tail -n 1); \
+	 echo "sweep config: group_hits=$$hits group_sims=$$gsims"; \
+	 test -n "$$hits" && test "$$hits" -gt 0 && test -n "$$gsims" && test "$$gsims" -eq 0
 
 test: rust-test py-test

@@ -8,14 +8,20 @@
 //! (`store_cold_disk` / `store_warm_disk`) measure the on-disk second tier
 //! (DESIGN.md §11): cold includes codec + atomic-write overhead, warm
 //! replays against a populated cache dir with a fresh memory session.
+//! The `group_reuse` rows measure the group tier (DESIGN.md §13): a
+//! DRAM-sweep variant config replayed cold vs against a session
+//! group-warmed by the base config, plus the exhaustive-plan
+//! group-sim-count reduction.
 
 use flexsa::bench_harness::{black_box, Bencher};
-use flexsa::config::preset;
-use flexsa::gemm::Gemm;
+use flexsa::config::{preset, AcceleratorConfig};
+use flexsa::gemm::{Gemm, GemmShape, Phase};
 use flexsa::models::resnet50;
+use flexsa::planner::{Planner, Strategy};
 use flexsa::pruning::{prunetrain_schedule, Strength};
 use flexsa::session::{SimSession, SimStore};
 use flexsa::sim::{simulate_iteration, SimOptions};
+use std::sync::Arc;
 
 fn main() {
     let b = Bencher::auto_quick();
@@ -47,13 +53,14 @@ fn main() {
         cfg.name
     );
 
-    let replay = |session: &SimSession| {
+    let replay_on = |cfg: &AcceleratorConfig, session: &SimSession| {
         let mut cycles = 0.0f64;
         for gemms in &per_epoch {
-            cycles += simulate_iteration(&cfg, gemms, &opts, session).gemm_cycles;
+            cycles += simulate_iteration(cfg, gemms, &opts, session).gemm_cycles;
         }
         cycles
     };
+    let replay = |session: &SimSession| replay_on(&cfg, session);
 
     let cold = b.run("trajectory_replay/uncached", || {
         black_box(replay(&SimSession::disabled()))
@@ -110,11 +117,66 @@ fn main() {
     println!("\nwarm-disk store: {} (sims this replay: {})", pstore.summary(), pstats.sims());
     let _ = std::fs::remove_dir_all(&base);
 
+    // Group-tier cross-config reuse (DESIGN.md §13): a DRAM-bandwidth
+    // sweep variant of the same accelerator shares every group key with
+    // the original, so a session warmed by one config answers the other's
+    // GEMM-tier misses entirely from cached group executions.
+    let sweep_cfg = {
+        let mut c = cfg.clone();
+        c.name = "1G1F-lowbw".into();
+        c.dram_gbps = 135.0;
+        c
+    };
+    let grp_cold = b.run("group_reuse/cross_config_cold", || {
+        // Fresh session: the sweep config simulates every group itself.
+        black_box(replay_on(&sweep_cfg, &SimSession::new()))
+    });
+    println!("{}", grp_cold.report_throughput(total_gemms as f64, "gemms"));
+    let warm_base = SimSession::new();
+    black_box(replay(&warm_base)); // warm the group tier on the base config
+    let grp_warm = b.run("group_reuse/cross_config_group_warm", || {
+        // Same session, other config: GEMM keys all miss, groups all hit.
+        black_box(replay_on(&sweep_cfg, &warm_base))
+    });
+    println!("{}", grp_warm.report_throughput(total_gemms as f64, "gemms"));
+    let probe = SimSession::new();
+    black_box(replay(&probe));
+    let before = probe.stats();
+    black_box(replay_on(&sweep_cfg, &probe));
+    let d = probe.stats().delta(&before);
+    println!(
+        "cross-config sweep replay: group_hits={} group_sims={} (cold replay runs {})",
+        d.group_hits,
+        d.group_sims(),
+        before.group_sims(),
+    );
+
+    // Exhaustive plan search: candidates sharing partition slices and
+    // blocking-only variants stop re-simulating identical groups.
+    let plan_session = SimSession::shared();
+    let planner = Planner::new(Arc::clone(&plan_session), Strategy::Exhaustive, 1);
+    let pc = planner.plan_gemm(
+        &Arc::new(preset("4G1F").unwrap()),
+        GemmShape::new(32, 1000, 2048),
+        Phase::Forward,
+        &SimOptions::hbm2(),
+    );
+    let pst = plan_session.stats();
+    println!(
+        "exhaustive plan 4G1F [32x1000x2048]: candidates={} deduped={} group_sims={} \
+         (naive candidates x groups = {})",
+        pc.evaluated + pc.deduped,
+        pc.deduped,
+        pst.group_sims(),
+        (pc.evaluated + pc.deduped) as u64 * 4,
+    );
+
     // Hit rate of a single cached replay, measured on its own session.
     let fresh = SimSession::new();
     black_box(replay(&fresh));
     let stats = fresh.stats();
     let speedup = cold.mean.as_secs_f64() / warm.mean.as_secs_f64();
     println!("per-replay cache: {}", stats.summary());
+    println!("group tier (one cached replay): {}", stats.group_summary());
     println!("speedup cached vs uncached: {speedup:.2}x (acceptance target: >= 2x)");
 }

@@ -29,9 +29,71 @@ pub use tiling::{
     tile_partition_visit_plan, tiling_summary, TilingStats,
 };
 
-use crate::config::AcceleratorConfig;
+use crate::config::{AcceleratorConfig, UnitGeometry, UnitKind};
 use crate::gemm::{GemmShape, Phase};
 use crate::isa::Program;
+
+/// Canonical descriptor of everything one **group execution** depends on
+/// (DESIGN.md §13): the compiled instruction stream
+/// ([`tile_partition_visit_plan`]) and the wave-pipeline timing machine
+/// ([`crate::sim::GroupExecutor`]) read *only* these fields of an
+/// [`AcceleratorConfig`] — not the group count, clock, DRAM bandwidth, or
+/// GBUF sizes. Two configurations with equal descriptors therefore run
+/// bit-identical group executions for the same partition slice, which is
+/// what makes the session's group-level memoization
+/// ([`crate::session::SimSession::simulate_group`]) sound across
+/// configurations (`tiling_depends_only_on_group_geometry` pins it).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GroupGeometry {
+    /// Compute units per group (round-robin tile-job targets).
+    pub units: usize,
+    /// Geometry of each unit (the full FlexSA unit, all four sub-cores).
+    pub unit: UnitGeometry,
+    /// Monolithic array or FlexSA (2×2 sub-core) unit.
+    pub kind: UnitKind,
+    /// Horizontal LBUF capacity per unit in elements (bounds `m_allowed`
+    /// and `blk_M`).
+    pub lbuf_horizontal_elems: usize,
+    /// Sustained GBUF→LBUF bytes per cycle per unit. Derived from
+    /// `unit.cols` today, but folded explicitly so a future provisioning
+    /// change cannot silently alias group keys.
+    pub bytes_per_cycle_per_unit: f64,
+}
+
+impl GroupGeometry {
+    /// Extract the group-execution-relevant fields of a configuration.
+    pub fn of(cfg: &AcceleratorConfig) -> GroupGeometry {
+        GroupGeometry {
+            units: cfg.units_per_group,
+            unit: cfg.unit,
+            kind: cfg.kind,
+            lbuf_horizontal_elems: cfg.lbuf_horizontal_elems,
+            bytes_per_cycle_per_unit: cfg.onchip_bytes_per_cycle_per_unit(),
+        }
+    }
+
+    /// Stable 64-bit digest (FNV-1a over the fixed-width LE field
+    /// encoding): the geometry half of every group fingerprint
+    /// ([`crate::session::SimSession::fingerprint_group_keyed`]). Computed
+    /// once per GEMM, like the config digest of the whole-GEMM tier.
+    pub fn fingerprint(&self) -> u64 {
+        let mut bytes = [0u8; 48];
+        for (slot, v) in [
+            self.units as u64,
+            self.unit.rows as u64,
+            self.unit.cols as u64,
+            self.kind.index() as u64,
+            self.lbuf_horizontal_elems as u64,
+            self.bytes_per_cycle_per_unit.to_bits(),
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            bytes[slot * 8..slot * 8 + 8].copy_from_slice(&v.to_le_bytes());
+        }
+        crate::util::fnv64(&bytes)
+    }
+}
 
 /// A compiled GEMM: one instruction program per core group + DRAM plan.
 #[derive(Debug, Clone)]
@@ -286,6 +348,51 @@ mod tests {
             let (parts, kp) = partitions_with(&one, shape, Phase::Forward, &policy);
             assert_eq!(parts, vec![shape]);
             assert_eq!(kp, 1);
+        }
+    }
+
+    #[test]
+    fn group_geometry_ignores_non_group_fields() {
+        // The descriptor (and its digest) must be blind to exactly the
+        // fields a group execution never reads: group count, clock, DRAM
+        // bandwidth, GBUF capacity, SIMD throughput, name, and the
+        // stationary LBUF (validation-only).
+        let a = preset("4G1F").unwrap();
+        let mut b = a.clone();
+        b.name = "sweep".into();
+        b.groups = 1;
+        b.gbuf_total_bytes *= 2;
+        b.clock_ghz = 1.4;
+        b.dram_gbps = 135.0;
+        b.simd_gflops = 250.0;
+        b.lbuf_stationary_elems *= 2;
+        assert_eq!(GroupGeometry::of(&a), GroupGeometry::of(&b));
+        assert_eq!(GroupGeometry::of(&a).fingerprint(), GroupGeometry::of(&b).fingerprint());
+        // ... and sensitive to every field it does read.
+        let base = GroupGeometry::of(&a);
+        let mut c = a.clone();
+        c.units_per_group = 2;
+        assert_ne!(base.fingerprint(), GroupGeometry::of(&c).fingerprint());
+        let mut c = a.clone();
+        c.unit = UnitGeometry::new(128, 128);
+        assert_ne!(base.fingerprint(), GroupGeometry::of(&c).fingerprint());
+        let mut c = a.clone();
+        c.kind = UnitKind::Monolithic;
+        assert_ne!(base.fingerprint(), GroupGeometry::of(&c).fingerprint());
+        let mut c = a.clone();
+        c.lbuf_horizontal_elems *= 2;
+        assert_ne!(base.fingerprint(), GroupGeometry::of(&c).fingerprint());
+    }
+
+    #[test]
+    fn distinct_presets_have_distinct_group_geometries() {
+        // No two Table-I presets share a group geometry (which is why the
+        // cross-config reuse tests construct custom configs); the digest
+        // must separate them all.
+        let mut seen = std::collections::BTreeSet::new();
+        for name in ["1G1C", "1G4C", "4G4C", "1G1F", "4G1F"] {
+            let g = GroupGeometry::of(&preset(name).unwrap());
+            assert!(seen.insert(g.fingerprint()), "{name} collides");
         }
     }
 

@@ -127,6 +127,19 @@ impl PlanParams {
         pt | (pm << 2) | (b << 10) | (mt << 12) | (mf << 14)
     }
 
+    /// The mode-policy component of [`Self::pack`] (bits 12–16, shifted
+    /// down): the only plan knob a *group execution* depends on. The group
+    /// fingerprint (DESIGN.md §13) folds exactly this — the partition
+    /// policy only selects *which* slices exist (the slice itself is keyed
+    /// directly), and the blocking policy only shapes the analytic
+    /// [`crate::compiler::DramPlan`] recomputed at compose time — so plan
+    /// candidates differing in those axes share group entries. Layout
+    /// changes here are [`Self::pack`] layout changes: bump the plan codec
+    /// version.
+    pub fn mode_bits(&self) -> u64 {
+        self.pack() >> 12
+    }
+
     /// Inverse of [`Self::pack`]. Rejects unknown tags, out-of-range
     /// indices, and non-canonical padding (a stored record from a future
     /// layout decodes as a clean error, never a wrong plan).
@@ -247,6 +260,31 @@ mod tests {
         let other = PlanParams { mode: ModePolicy::ReuseGreedy, ..PlanParams::HEURISTIC };
         assert!(!other.is_heuristic());
         assert_ne!(other.pack(), 0);
+    }
+
+    #[test]
+    fn mode_bits_ignore_partition_and_blocking() {
+        // Same mode policy across every partition/blocking combination must
+        // produce one mode_bits value (group entries shared across those
+        // axes), and distinct mode policies must produce distinct values.
+        let mut by_mode: std::collections::BTreeMap<u64, std::collections::BTreeSet<u64>> =
+            Default::default();
+        for plan in space() {
+            by_mode
+                .entry(match plan.mode {
+                    ModePolicy::Algorithm1 => 0,
+                    ModePolicy::ReuseGreedy => 1,
+                    ModePolicy::Forced(m) => 2 + m.index() as u64,
+                })
+                .or_default()
+                .insert(plan.mode_bits());
+        }
+        assert_eq!(by_mode.len(), 7);
+        let mut seen = std::collections::BTreeSet::new();
+        for bits in by_mode.values() {
+            assert_eq!(bits.len(), 1, "mode_bits varies within one mode policy");
+            assert!(seen.insert(*bits.iter().next().unwrap()), "mode_bits collide");
+        }
     }
 
     #[test]

@@ -143,6 +143,12 @@ pub fn tile_partition_visit(
 /// [`tile_partition_visit`] under an explicit [`ModePolicy`] — the
 /// planner's per-wave mode-assignment hook. `Algorithm1` emits exactly the
 /// instruction stream of the plan-less path.
+///
+/// Reads only the [`crate::compiler::GroupGeometry`] fields of `cfg`
+/// (unit geometry, kind, unit count, horizontal LBUF) — never the group
+/// count, clock, or buffer totals — which is what lets the session memoize
+/// group executions across configurations (DESIGN.md §13; pinned by
+/// `tiling_depends_only_on_group_geometry`).
 pub fn tile_partition_visit_plan(
     cfg: &AcceleratorConfig,
     p: GemmShape,
@@ -439,6 +445,43 @@ mod tests {
         assert_eq!(stats.macs, shape.macs());
         assert_eq!(stats.waves_by_mode.len(), 1);
         assert!(stats.waves_by_mode.contains_key(&Mode::Fw), "{:?}", stats.waves_by_mode);
+    }
+
+    #[test]
+    fn tiling_depends_only_on_group_geometry() {
+        // Two configs with equal GroupGeometry descriptors but different
+        // group counts / clocks / buffer totals must emit identical
+        // per-group instruction streams for the same partition slice — the
+        // soundness contract of the session's group memoization
+        // (DESIGN.md §13).
+        use crate::compiler::GroupGeometry;
+        let a = preset("4G1F").unwrap();
+        let mut b = a.clone();
+        b.name = "sweep".into();
+        b.groups = 1;
+        b.gbuf_total_bytes /= 4;
+        b.clock_ghz = 1.4;
+        b.dram_gbps = 100.0;
+        assert_eq!(GroupGeometry::of(&a), GroupGeometry::of(&b));
+        for p in [
+            GemmShape::new(1024, 512, 1024),
+            GemmShape::new(257, 40, 127),
+            GemmShape::new(1, 1, 5000),
+        ] {
+            for policy in [
+                ModePolicy::Algorithm1,
+                ModePolicy::ReuseGreedy,
+                ModePolicy::Forced(Mode::Fw),
+            ] {
+                for k_partitioned in [false, true] {
+                    let mut pa = Program::new();
+                    tile_partition_visit_plan(&a, p, k_partitioned, &policy, &mut |i| pa.push(i));
+                    let mut pb = Program::new();
+                    tile_partition_visit_plan(&b, p, k_partitioned, &policy, &mut |i| pb.push(i));
+                    assert_eq!(pa.insts, pb.insts, "{p} {policy:?}");
+                }
+            }
+        }
     }
 
     #[test]

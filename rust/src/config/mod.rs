@@ -25,6 +25,17 @@ pub enum UnitKind {
     FlexSa,
 }
 
+impl UnitKind {
+    /// Stable dense index; part of the group-geometry fingerprint encoding
+    /// (DESIGN.md §13).
+    pub fn index(&self) -> usize {
+        match self {
+            UnitKind::Monolithic => 0,
+            UnitKind::FlexSa => 1,
+        }
+    }
+}
+
 /// Geometry of one compute unit.
 ///
 /// `rows` is the accumulation-depth (K) dimension — stationary inputs are

@@ -112,6 +112,15 @@ pub struct ServiceStats {
     pub cache_evictions: u64,
     /// Entries resident in the session at shutdown.
     pub cache_entries: u64,
+    /// Group-tier hits at shutdown (DESIGN.md §13): GEMM-tier misses that
+    /// reused an already-executed group partition.
+    pub cache_group_hits: u64,
+    /// Group-tier misses at shutdown.
+    pub cache_group_misses: u64,
+    /// Group executions the session actually ran (group misses not
+    /// answered by the persistent store) — the planner's sim-count
+    /// reduction criterion reads this.
+    pub cache_group_sims: u64,
 }
 
 impl ServiceStats {
@@ -237,6 +246,9 @@ impl SimService {
         stats.cache_store_writes = cache.store_writes;
         stats.cache_evictions = cache.evictions;
         stats.cache_entries = cache.entries;
+        stats.cache_group_hits = cache.group_hits;
+        stats.cache_group_misses = cache.group_misses;
+        stats.cache_group_sims = cache.group_sims();
         stats
     }
 }
@@ -518,6 +530,26 @@ mod tests {
         svc.recv().unwrap();
         let stats = svc.shutdown();
         assert_eq!(stats.cache_misses, 2, "{stats:?}");
+    }
+
+    #[test]
+    fn plan_variants_share_group_executions() {
+        use crate::compiler::{BlockingPolicy, PlanParams};
+        // Two candidates differing only in the blocking axis compose from
+        // the same cached group executions (DESIGN.md §13): the second
+        // request runs zero new groups.
+        let svc = SimService::start(1, BatchPolicy::default());
+        let cfg = Arc::new(preset("4G1F").unwrap());
+        let shape = GemmShape::new(4096, 512, 1024);
+        svc.submit(&cfg, shape, Phase::Forward, SimOptions::ideal());
+        svc.recv().unwrap();
+        let keepa = PlanParams { blocking: BlockingPolicy::KeepA, ..PlanParams::HEURISTIC };
+        svc.submit_plan(&cfg, shape, Phase::Forward, SimOptions::ideal(), keepa);
+        svc.recv().unwrap();
+        let stats = svc.shutdown();
+        assert_eq!(stats.cache_misses, 2, "{stats:?}"); // distinct GEMM keys
+        assert_eq!(stats.cache_group_sims, 1, "{stats:?}"); // one shared execution
+        assert_eq!(stats.cache_group_hits, 7, "{stats:?}"); // 3 + 4 reuses
     }
 
     #[test]

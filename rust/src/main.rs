@@ -168,6 +168,12 @@ fn print_cache_line(session: &SimSession) {
     if stats.lookups() > 0 {
         eprintln!("# sim cache: {}", stats.summary());
     }
+    // The group tier (DESIGN.md §13): `group_sims=` counts the group
+    // executions that actually ran — `make group-smoke` asserts a second,
+    // geometry-matching config reports `group_hits>0` with `group_sims=0`.
+    if stats.group_lookups() > 0 {
+        eprintln!("# group tier: {}", stats.group_summary());
+    }
     if let Some(store) = session.store() {
         let st = store.stats();
         if st.lookups() + st.writes > 0 {
@@ -240,13 +246,23 @@ fn run_plan(args: &Args, threads: usize, session: &Arc<SimSession>) -> Result<()
                 println!("... ({} more candidates)", ranked.len() - 10);
             }
         }
+        if !choice.from_store {
+            // The dedupe satellite's log line: how many proposals were
+            // skipped as provably identical before any simulation.
+            eprintln!(
+                "# plan candidates={} deduped={}",
+                choice.evaluated + choice.deduped,
+                choice.deduped
+            );
+        }
         println!(
-            "plan: best={} gap={:.2}% heuristic={:.0} best={:.0} cycles evaluated={}{}",
+            "plan: best={} gap={:.2}% heuristic={:.0} best={:.0} cycles evaluated={} deduped={}{}",
             choice.best,
             choice.gap() * 100.0,
             choice.heuristic_cycles,
             choice.best_cycles,
             choice.evaluated,
+            choice.deduped,
             if choice.from_store { " (from plan store)" } else { "" },
         );
         return Ok(());
@@ -346,6 +362,7 @@ fn run_cache(args: &Args) -> Result<(), String> {
             let mut t = TextTable::new(vec!["kind", "count"]);
             t.row(vec!["sim entries (.gsim)".to_string(), d.sim_entries.to_string()]);
             t.row(vec!["plan entries (.gplan)".to_string(), d.plan_entries.to_string()]);
+            t.row(vec!["group entries (.ggrp)".to_string(), d.group_entries.to_string()]);
             t.row(vec!["shard dirs".to_string(), d.shard_dirs.to_string()]);
             t.row(vec!["temp files".to_string(), d.temp_files.to_string()]);
             t.row(vec!["other files".to_string(), d.other_files.to_string()]);
@@ -403,6 +420,11 @@ impl<'a> FigCacheLines<'a> {
                 );
             } else {
                 eprintln!("# {label} cache: {}", delta.summary());
+            }
+            if delta.group_lookups() > 0 {
+                // Where the figure's GEMM-tier misses were actually
+                // answered: reused group executions vs fresh ones.
+                eprintln!("# {label} groups: {}", delta.group_summary());
             }
         }
         self.last = now;

@@ -27,7 +27,9 @@
 //!   strategy; a warm rerun answers from the store with **zero** simulator
 //!   runs (the CI plan-smoke criterion).
 
-use crate::compiler::{BlockingPolicy, ModePolicy, PartitionPolicy, PlanParams};
+use crate::compiler::{
+    gbuf_blocking_with, partitions_with, BlockingPolicy, ModePolicy, PartitionPolicy, PlanParams,
+};
 use crate::config::{AcceleratorConfig, UnitKind};
 use crate::coordinator::{BatchPolicy, SimService};
 use crate::gemm::{GemmShape, Phase};
@@ -82,6 +84,12 @@ pub struct PlanChoice {
     /// Candidate plans scored by the search (0 when answered from the
     /// plan store).
     pub evaluated: u32,
+    /// Candidate plans skipped without simulating because they were
+    /// provably identical to an already-proposed one — same cache
+    /// fingerprint, or same computation key ([`candidate_computation_key`]:
+    /// partition slices + per-slice DRAM plans + mode bits). Not persisted
+    /// in plan records, so store-answered choices report 0.
+    pub deduped: u32,
     /// Whether this choice was answered from the persistent plan store
     /// (no simulation at all).
     pub from_store: bool,
@@ -164,6 +172,33 @@ pub struct CandidateScore {
     pub dram: u64,
 }
 
+/// Exact content key of a candidate's *computation*: the partition slices
+/// it produces, each slice's analytic DRAM plan, and the plan's
+/// mode-policy bits — everything [`crate::sim::simulate_gemm_plan`] reads
+/// from a plan. Two candidates with equal keys are guaranteed to simulate
+/// to bit-identical results (e.g. `ForceM` duplicates the phase rule on
+/// forward GEMMs, and forced blocking orientations collapse onto `Auto`
+/// whenever they tie its traffic), so the search skips them outright —
+/// exact structural equality, no hashing, so a dedupe can never skip a
+/// genuinely distinct candidate.
+#[allow(clippy::type_complexity)]
+fn candidate_computation_key(
+    cfg: &AcceleratorConfig,
+    shape: GemmShape,
+    phase: Phase,
+    plan: &PlanParams,
+) -> (Vec<(usize, usize, usize, u64, u64, u64, u32)>, usize, u64) {
+    let (parts, k_parts) = partitions_with(cfg, shape, phase, &plan.partition);
+    let rows = parts
+        .into_iter()
+        .map(|p| {
+            let d = gbuf_blocking_with(cfg, p, phase, k_parts, &plan.blocking);
+            (p.m, p.n, p.k, d.read_bytes, d.write_bytes, d.reduce_bytes, d.passes)
+        })
+        .collect();
+    (rows, k_parts, plan.mode_bits())
+}
+
 /// Scoring order: cycles, then DRAM bytes; earlier-enumerated candidates
 /// win ties (the heuristic enumerates first).
 fn better(a: &CandidateScore, b: &CandidateScore) -> bool {
@@ -184,8 +219,17 @@ pub struct Planner {
 }
 
 impl Planner {
-    /// Start a planner on `session` with `workers` scoring threads.
+    /// Start a planner on `session` with `workers` scoring threads. Beam
+    /// widths are normalized to the range [`Strategy::byte`] can encode
+    /// (1–254), so the strategy that keys persisted plan records is always
+    /// exactly the strategy that ran — two beam widths that would share a
+    /// record key now run the identical search. (Widths that large are
+    /// degenerate anyway: no enumeration axis approaches 254 candidates.)
     pub fn new(session: Arc<SimSession>, strategy: Strategy, workers: usize) -> Planner {
+        let strategy = match strategy {
+            Strategy::Exhaustive => Strategy::Exhaustive,
+            Strategy::Beam(n) => Strategy::Beam(n.clamp(1, 254)),
+        };
         let service =
             SimService::start_with_session(workers.max(1), BatchPolicy::default(), session);
         Planner { service, strategy }
@@ -266,6 +310,7 @@ impl Planner {
                         heuristic_cycles: rec.heuristic_cycles,
                         heuristic_dram: rec.heuristic_dram,
                         evaluated: rec.evaluated,
+                        deduped: 0,
                         from_store: true,
                     };
                     return (choice, Vec::new());
@@ -276,12 +321,38 @@ impl Planner {
         let partitions = enumerate_partitions(cfg);
         let modes = enumerate_modes(cfg);
         let blockings = enumerate_blockings();
-        let mut seen: std::collections::HashSet<u64> = Default::default();
+        // Two dedupe layers before anything simulates: identical candidates
+        // re-proposed by overlapping beam stages (same cache fingerprint,
+        // the satellite's `fingerprint_plan_keyed` filter), and distinct
+        // candidates that provably compile to the same computation
+        // ([`candidate_computation_key`]). Skipped candidates can never
+        // change the outcome: their scores equal an already-scored one,
+        // and enumeration-order tie-breaking keeps the earlier candidate.
+        let cfg_fp = cfg.fingerprint();
+        let mut seen_fingerprints: std::collections::HashSet<u128> = Default::default();
+        #[allow(clippy::type_complexity)]
+        let mut seen_computations: std::collections::HashSet<(
+            Vec<(usize, usize, usize, u64, u64, u64, u32)>,
+            usize,
+            u64,
+        )> = Default::default();
+        let mut deduped = 0u32;
         let mut scored: Vec<CandidateScore> = Vec::new();
         // Evaluate the not-yet-seen subset of `cands`, in order.
         let mut run = |planner: &Planner, cands: Vec<PlanParams>, scored: &mut Vec<CandidateScore>| {
-            let fresh: Vec<PlanParams> =
-                cands.into_iter().filter(|p| seen.insert(p.pack())).collect();
+            let fresh: Vec<PlanParams> = cands
+                .into_iter()
+                .filter(|p| {
+                    let key = SimSession::fingerprint_plan_keyed(cfg_fp, shape, phase, opts, p);
+                    if !seen_fingerprints.insert(key.0)
+                        || !seen_computations.insert(candidate_computation_key(cfg, shape, phase, p))
+                    {
+                        deduped += 1;
+                        return false;
+                    }
+                    true
+                })
+                .collect();
             if !fresh.is_empty() {
                 scored.extend(planner.evaluate(cfg, shape, phase, opts, &fresh));
             }
@@ -360,6 +431,7 @@ impl Planner {
             heuristic_cycles: heuristic.cycles,
             heuristic_dram: heuristic.dram,
             evaluated: scored.len() as u32,
+            deduped,
             from_store: false,
         };
         if let Some(store) = self.session().store() {
@@ -511,6 +583,15 @@ mod tests {
     }
 
     #[test]
+    fn beam_widths_normalize_to_the_record_byte_range() {
+        // The strategy that keys persisted records must be the strategy
+        // that ran: out-of-range widths normalize at construction.
+        assert_eq!(planner(Strategy::Beam(10_000)).strategy(), Strategy::Beam(254));
+        assert_eq!(planner(Strategy::Beam(0)).strategy(), Strategy::Beam(1));
+        assert_eq!(planner(Strategy::Exhaustive).strategy(), Strategy::Exhaustive);
+    }
+
+    #[test]
     fn strategy_bytes_are_distinct() {
         assert_eq!(Strategy::Exhaustive.byte(), 0xFF);
         assert_eq!(Strategy::Beam(2).byte(), 2);
@@ -522,14 +603,41 @@ mod tests {
     #[test]
     fn plan_gemm_never_beats_itself_on_trivial_space() {
         // 1G1C has exactly the blocking axis: the heuristic must win with
-        // gap 0 (Auto is in-model optimal).
+        // gap 0 (Auto is in-model optimal). This GEMM fits the GBUF whole,
+        // so all four orientations produce the same single-pass DRAM plan
+        // and the computation dedupe collapses them to one simulation.
         let p = planner(Strategy::Exhaustive);
         let cfg = Arc::new(preset("1G1C").unwrap());
         let c = p.plan_gemm(&cfg, GemmShape::new(1000, 71, 333), Phase::Forward, &SimOptions::hbm2());
         assert!(c.best.is_heuristic(), "{:?}", c.best);
         assert_eq!(c.gap(), 0.0);
-        assert_eq!(c.evaluated, 4); // Auto, KeepA, KeepB, KeepC
+        assert_eq!((c.evaluated, c.deduped), (1, 3), "{c:?}");
         assert!(!c.from_store);
+    }
+
+    #[test]
+    fn dedupe_skips_only_provable_duplicates() {
+        // A GEMM whose resident panel exceeds the GBUF half makes the
+        // orientations genuinely distinct: KeepB must stay a separate
+        // candidate while KeepA/KeepC still collapse onto Auto when their
+        // plans tie it exactly.
+        let p = planner(Strategy::Exhaustive);
+        let cfg = Arc::new(preset("1G1C").unwrap());
+        // B = 8192x8192 bf16 = 128 MiB >> 5 MiB half: keep_b multi-pass.
+        let c =
+            p.plan_gemm(&cfg, GemmShape::new(2048, 8192, 8192), Phase::Forward, &SimOptions::ideal());
+        assert!(c.evaluated >= 2, "{c:?}");
+        assert_eq!(c.evaluated + c.deduped, 4, "{c:?}");
+        // Dedupe must never change the answer: the searched best still
+        // reproduces when simulated directly.
+        let direct = crate::sim::simulate_gemm_plan(
+            &cfg,
+            GemmShape::new(2048, 8192, 8192),
+            Phase::Forward,
+            &SimOptions::ideal(),
+            &c.best,
+        );
+        assert_eq!(direct.cycles.to_bits(), c.best_cycles.to_bits());
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! and store property suites test one domain instead of drifting copies.
 //! Used by `rust/tests/prop_*.rs` for compiler/simulator invariants.
 
-use crate::sim::{GemmSim, RampMode, SimOptions};
+use crate::sim::{GemmSim, GroupSim, RampMode, SimOptions};
 use crate::util::Lcg64;
 
 /// Number of cases per property by default.
@@ -121,6 +121,23 @@ pub fn gemm_bit_identical(a: &GemmSim, b: &GemmSim) -> CheckResult {
         return Err(format!(
             "results diverge: cycles {} vs {}, macs {} vs {}, waves {:?} vs {:?}",
             a.cycles, b.cycles, a.busy_macs, b.busy_macs, a.waves_by_mode, b.waves_by_mode
+        ));
+    }
+    Ok(())
+}
+
+/// Bit-exact comparison of two group-execution results (the [`GroupSim`]
+/// analogue of [`gemm_bit_identical`]; the group codec and group-tier
+/// property suites share this single definition).
+pub fn group_bit_identical(a: &GroupSim, b: &GroupSim) -> CheckResult {
+    if a.time.to_bits() != b.time.to_bits()
+        || a.traffic != b.traffic
+        || a.busy_macs != b.busy_macs
+        || a.waves != b.waves
+    {
+        return Err(format!(
+            "group results diverge: time {} vs {}, macs {} vs {}, waves {:?} vs {:?}",
+            a.time, b.time, a.busy_macs, b.busy_macs, a.waves, b.waves
         ));
     }
     Ok(())

@@ -31,15 +31,33 @@
 //! store before simulating, and fresh results are written behind
 //! (best-effort, atomic), so repeated CLI invocations sharing a cache
 //! directory skip simulation entirely.
+//!
+//! Below the whole-GEMM tier sits the **group tier** (DESIGN.md §13): a
+//! whole-GEMM miss no longer runs the monolithic simulator — it is
+//! *composed* from per-group-partition executions, each memoized under a
+//! [`Fingerprint`] of only what a group execution actually depends on
+//! ([`SimSession::fingerprint_group_keyed`]): the group geometry, the
+//! partition slice, the mode policy, and the compute-relevant option
+//! bits — **not** the full configuration. Equal partitions of one GEMM
+//! collapse to a single execution, plan-search candidates differing only
+//! in partition/blocking axes share groups, and configurations differing
+//! only in fold-time fields (clock, DRAM bandwidth, GBUF sizes, group
+//! count) reuse each other's group executions, in memory and through the
+//! store (`FXGR` entries).
 
 pub mod store;
 
 pub use store::{DiskStats, GcResult, PlanRecord, SimStore, StoreStats};
 
-use crate::compiler::PlanParams;
+use crate::compiler::{
+    gbuf_blocking_with, partitions_with, GroupGeometry, PlanParams,
+};
 use crate::config::AcceleratorConfig;
 use crate::gemm::{GemmShape, Phase};
-use crate::sim::{simulate_gemm_plan, simulate_gemm_shape, GemmSim, SimOptions};
+use crate::sim::{
+    execute_group, simulate_gemm_plan, simulate_gemm_shape, GemmFold, GemmSim, GroupSim,
+    SimOptions,
+};
 use std::collections::{HashMap, VecDeque};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -48,6 +66,11 @@ use std::sync::{Arc, Mutex};
 /// Number of independently locked cache shards (fixed power of two; the
 /// low fingerprint bits pick the shard).
 const SHARDS: usize = 16;
+
+/// Domain-separation byte leading every group-fingerprint message
+/// (DESIGN.md §13), so a group key can never collide with a whole-GEMM key
+/// even before the store's own domain fold.
+const GROUP_FP_DOMAIN: u8 = 0x47; // 'G'
 
 /// Stable 128-bit content address of one `(config, shape, phase, options)`
 /// simulation input (FNV-1a over the canonical encodings; see
@@ -110,6 +133,26 @@ pub struct SessionStats {
     pub store_misses: u64,
     /// Results written behind to the persistent store.
     pub store_writes: u64,
+    /// Group-tier lookups answered from the in-memory group map
+    /// (DESIGN.md §13). Group lookups only happen while composing a
+    /// whole-GEMM miss, so these do not overlap [`Self::hits`].
+    pub group_hits: u64,
+    /// Group-tier lookups the memory map could not answer (a miss may
+    /// still be answered from disk — [`Self::group_sims`] counts actual
+    /// group executions).
+    pub group_misses: u64,
+    /// Group results inserted into the in-memory group map.
+    pub group_inserts: u64,
+    /// Group entries dropped by the capacity bound.
+    pub group_evictions: u64,
+    /// Group entries currently resident.
+    pub group_entries: u64,
+    /// Group-tier memory misses answered by the persistent store.
+    pub group_store_hits: u64,
+    /// Group-tier memory misses the persistent store could not answer.
+    pub group_store_misses: u64,
+    /// Group results written behind to the persistent store.
+    pub group_store_writes: u64,
 }
 
 impl SessionStats {
@@ -118,10 +161,44 @@ impl SessionStats {
         self.hits + self.misses
     }
 
-    /// Simulator executions: memory misses not answered by the store. The
-    /// warm-disk acceptance criterion is `sims() == 0` on a repeated run.
+    /// Whole-GEMM lookups neither memory nor the store could answer — each
+    /// one composes a result (from the group tier, which may itself be
+    /// fully warm: [`Self::group_sims`] counts the group executions that
+    /// actually ran). The warm-disk acceptance criterion is `sims() == 0`
+    /// on a repeated run.
     pub fn sims(&self) -> u64 {
         self.misses.saturating_sub(self.store_hits)
+    }
+
+    /// Total group-tier lookups (group hits + group misses).
+    pub fn group_lookups(&self) -> u64 {
+        self.group_hits + self.group_misses
+    }
+
+    /// Group executions actually run: group memory misses not answered by
+    /// the persistent store. The cross-config acceptance criterion is
+    /// `group_sims() == 0` when a matching-geometry run warmed the tier.
+    pub fn group_sims(&self) -> u64 {
+        self.group_misses.saturating_sub(self.group_store_hits)
+    }
+
+    /// One-line summary of the group tier (the CLI's `# group tier:`
+    /// stderr line; `make group-smoke` greps `group_hits=`/`group_sims=`).
+    pub fn group_summary(&self) -> String {
+        let mut s = format!(
+            "group_hits={} group_misses={} group_sims={} entries={}",
+            self.group_hits,
+            self.group_misses,
+            self.group_sims(),
+            self.group_entries
+        );
+        if self.group_store_hits + self.group_store_misses + self.group_store_writes > 0 {
+            s.push_str(&format!(
+                " (store: hits={} misses={} writes={})",
+                self.group_store_hits, self.group_store_misses, self.group_store_writes
+            ));
+        }
+        s
     }
 
     /// Total persistent-store lookups (store hits + store misses).
@@ -152,6 +229,18 @@ impl SessionStats {
             store_hits: self.store_hits.saturating_sub(earlier.store_hits),
             store_misses: self.store_misses.saturating_sub(earlier.store_misses),
             store_writes: self.store_writes.saturating_sub(earlier.store_writes),
+            group_hits: self.group_hits.saturating_sub(earlier.group_hits),
+            group_misses: self.group_misses.saturating_sub(earlier.group_misses),
+            group_inserts: self.group_inserts.saturating_sub(earlier.group_inserts),
+            group_evictions: self.group_evictions.saturating_sub(earlier.group_evictions),
+            group_entries: self.group_entries,
+            group_store_hits: self.group_store_hits.saturating_sub(earlier.group_store_hits),
+            group_store_misses: self
+                .group_store_misses
+                .saturating_sub(earlier.group_store_misses),
+            group_store_writes: self
+                .group_store_writes
+                .saturating_sub(earlier.group_store_writes),
         }
     }
 
@@ -177,13 +266,21 @@ impl SessionStats {
     }
 }
 
-#[derive(Default)]
-struct Shard {
+/// One locked cache shard, generic over the cached value so the whole-GEMM
+/// tier (`Arc<GemmSim>`) and the group tier (`Arc<GroupSim>`) share the
+/// map/FIFO-eviction machinery.
+struct Shard<T> {
     /// Fingerprint → cached result. Keys are full 128-bit content
     /// addresses, so a collision would require an FNV-1a/128 collision.
-    map: HashMap<u128, Arc<GemmSim>>,
+    map: HashMap<u128, Arc<T>>,
     /// Insertion order of `map`'s keys (deterministic FIFO eviction).
     order: VecDeque<u128>,
+}
+
+impl<T> Default for Shard<T> {
+    fn default() -> Self {
+        Self { map: HashMap::new(), order: VecDeque::new() }
+    }
 }
 
 /// A shared, thread-safe, content-addressed cache of GEMM simulation
@@ -196,8 +293,11 @@ struct Shard {
 /// cached value, so every caller observes one canonical (bit-identical)
 /// result per key.
 pub struct SimSession {
-    shards: Vec<Mutex<Shard>>,
-    /// Per-shard entry bound (`None` = unbounded).
+    shards: Vec<Mutex<Shard<GemmSim>>>,
+    /// The group tier (DESIGN.md §13): memoized per-group executions keyed
+    /// by [`Self::fingerprint_group_keyed`], shared across configurations.
+    group_shards: Vec<Mutex<Shard<GroupSim>>>,
+    /// Per-shard entry bound (`None` = unbounded), applied to both tiers.
     shard_capacity: Option<usize>,
     /// `false` = pass-through (the CLI's `--no-cache` escape hatch).
     enabled: bool,
@@ -207,6 +307,10 @@ pub struct SimSession {
     misses: AtomicU64,
     inserts: AtomicU64,
     evictions: AtomicU64,
+    group_hits: AtomicU64,
+    group_misses: AtomicU64,
+    group_inserts: AtomicU64,
+    group_evictions: AtomicU64,
 }
 
 impl Default for SimSession {
@@ -219,6 +323,7 @@ impl SimSession {
     fn build(capacity: Option<usize>, enabled: bool) -> Self {
         Self {
             shards: (0..SHARDS).map(|_| Mutex::new(Shard::default())).collect(),
+            group_shards: (0..SHARDS).map(|_| Mutex::new(Shard::default())).collect(),
             shard_capacity: capacity.map(|c| c.div_ceil(SHARDS).max(1)),
             enabled,
             store: None,
@@ -226,6 +331,10 @@ impl SimSession {
             misses: AtomicU64::new(0),
             inserts: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            group_hits: AtomicU64::new(0),
+            group_misses: AtomicU64::new(0),
+            group_inserts: AtomicU64::new(0),
+            group_evictions: AtomicU64::new(0),
         }
     }
 
@@ -354,6 +463,147 @@ impl SimSession {
         Fingerprint(h.state)
     }
 
+    /// Content address of one **group execution** (DESIGN.md §13): FNV-1a/128
+    /// over the [`GROUP_FP_DOMAIN`] byte, the group-geometry digest
+    /// ([`GroupGeometry::fingerprint`]), the partition slice dims, the
+    /// K-partitioned flag, the compute-relevant option bits
+    /// ([`SimOptions::group_fingerprint`]), and the plan's mode-policy bits
+    /// ([`PlanParams::mode_bits`]).
+    ///
+    /// Deliberately absent — because [`crate::sim::execute_group`] provably
+    /// never reads them — are the full config (group count, clock, DRAM
+    /// bandwidth, GBUF sizes), the partition *policy* (only the slice it
+    /// produced), the blocking policy (the analytic DRAM plan is recomputed
+    /// at compose time), and the `ideal_dram` bit (a fold-time bound). That
+    /// exclusion list is what makes e.g. a `4G1F` GEMM's equal M-partitions
+    /// collapse to one execution, a GBUF/DRAM/clock sweep reuse every
+    /// group, and plan candidates differing only in partition or blocking
+    /// axes stop re-simulating identical groups.
+    pub fn fingerprint_group_keyed(
+        geom_fp: u64,
+        p: GemmShape,
+        k_partitioned: bool,
+        plan: &PlanParams,
+        opts: &SimOptions,
+    ) -> Fingerprint {
+        debug_assert!(
+            opts.group_fingerprint() <= u8::MAX as u64,
+            "SimOptions::group_fingerprint no longer fits one byte"
+        );
+        let mut h = Fnv128::new();
+        h.write(&[GROUP_FP_DOMAIN]);
+        h.write_u64(geom_fp);
+        h.write_u64(p.m as u64);
+        h.write_u64(p.n as u64);
+        h.write_u64(p.k as u64);
+        h.write(&[k_partitioned as u8, opts.group_fingerprint() as u8]);
+        h.write_u64(plan.mode_bits());
+        Fingerprint(h.state)
+    }
+
+    /// [`Self::fingerprint_group_keyed`] with the geometry digest computed
+    /// here (per-GEMM loops precompute it once instead).
+    pub fn fingerprint_group(
+        cfg: &AcceleratorConfig,
+        p: GemmShape,
+        k_partitioned: bool,
+        plan: &PlanParams,
+        opts: &SimOptions,
+    ) -> Fingerprint {
+        Self::fingerprint_group_keyed(GroupGeometry::of(cfg).fingerprint(), p, k_partitioned, plan, opts)
+    }
+
+    /// Execute one group partition through the memoized group tier
+    /// (DESIGN.md §13): group-memory hit → group-store hit → run
+    /// [`crate::sim::execute_group`] and cache it (write-behind when a
+    /// store is attached). Bit-identical to calling `execute_group`
+    /// directly. On a disabled session this is a pure pass-through.
+    pub fn simulate_group(
+        &self,
+        cfg: &AcceleratorConfig,
+        p: GemmShape,
+        k_partitioned: bool,
+        plan: &PlanParams,
+        opts: &SimOptions,
+    ) -> Arc<GroupSim> {
+        if !self.enabled {
+            self.group_misses.fetch_add(1, Ordering::Relaxed);
+            return Arc::new(execute_group(cfg, p, k_partitioned, &plan.mode, opts));
+        }
+        self.simulate_group_keyed(GroupGeometry::of(cfg).fingerprint(), cfg, p, k_partitioned, plan, opts)
+    }
+
+    /// [`Self::simulate_group`] with the geometry digest precomputed.
+    /// `geom_fp` **must** equal `GroupGeometry::of(cfg).fingerprint()` — a
+    /// mismatched digest would file results under the wrong key (debug
+    /// builds assert the contract).
+    pub fn simulate_group_keyed(
+        &self,
+        geom_fp: u64,
+        cfg: &AcceleratorConfig,
+        p: GemmShape,
+        k_partitioned: bool,
+        plan: &PlanParams,
+        opts: &SimOptions,
+    ) -> Arc<GroupSim> {
+        debug_assert_eq!(
+            geom_fp,
+            GroupGeometry::of(cfg).fingerprint(),
+            "stale group-geometry digest for {}",
+            cfg.name
+        );
+        if !self.enabled {
+            self.group_misses.fetch_add(1, Ordering::Relaxed);
+            return Arc::new(execute_group(cfg, p, k_partitioned, &plan.mode, opts));
+        }
+        let fp = Self::fingerprint_group_keyed(geom_fp, p, k_partitioned, plan, opts);
+        let shard = &self.group_shards[fp.0 as usize % SHARDS];
+        let cached = shard.lock().unwrap().map.get(&fp.0).cloned();
+        if let Some(hit) = cached {
+            self.group_hits.fetch_add(1, Ordering::Relaxed);
+            return hit;
+        }
+        self.group_misses.fetch_add(1, Ordering::Relaxed);
+        if let Some(disk) = self.store.as_ref().and_then(|st| st.get_group(fp)) {
+            return self.adopt_group(shard, fp.0, Arc::new(disk)).0;
+        }
+        // Execute outside the lock (same duplicate-compute contract as the
+        // whole-GEMM tier: first insert wins).
+        let g = Arc::new(execute_group(cfg, p, k_partitioned, &plan.mode, opts));
+        let (g, inserted) = self.adopt_group(shard, fp.0, g);
+        if inserted {
+            if let Some(st) = &self.store {
+                st.put_group(fp, &g);
+            }
+        }
+        g
+    }
+
+    /// Compose one GEMM from memoized group executions: partition, look
+    /// each slice up in the group tier, recompute the analytic DRAM plan,
+    /// and fold ([`GemmFold`]). Bit-identical to [`simulate_gemm_plan`] by
+    /// construction — both run the same `execute_group` + fold primitives
+    /// in the same order (property-pinned by `tests/prop_session.rs`).
+    fn compose_plan(
+        &self,
+        cfg: &AcceleratorConfig,
+        shape: GemmShape,
+        phase: Phase,
+        opts: &SimOptions,
+        plan: &PlanParams,
+    ) -> GemmSim {
+        let (parts, k_parts) = partitions_with(cfg, shape, phase, &plan.partition);
+        let k_partitioned = k_parts > 1;
+        let geom_fp = GroupGeometry::of(cfg).fingerprint();
+        let mut fold = GemmFold::new();
+        for p in parts {
+            let g = self.simulate_group_keyed(geom_fp, cfg, p, k_partitioned, plan, opts);
+            let dram = gbuf_blocking_with(cfg, p, phase, k_parts, &plan.blocking);
+            fold.add(&g, &dram);
+        }
+        fold.finish(cfg, opts)
+    }
+
     /// Simulate one GEMM through the cache: returns the cached result on a
     /// hit, otherwise runs [`simulate_gemm_shape`] and caches it.
     /// Bit-identical to calling [`simulate_gemm_shape`] directly.
@@ -438,8 +688,10 @@ impl SimSession {
         if let Some(disk) = self.store.as_ref().and_then(|st| st.get(fp)) {
             return self.insert_or_adopt(shard, fp.0, Arc::new(disk)).0;
         }
-        // Simulate outside the lock (see the type-level docs).
-        let sim = Arc::new(simulate_gemm_plan(cfg, shape, phase, opts, plan));
+        // Compose from the group tier, outside the lock (see the
+        // type-level docs): each group partition resolves through its own
+        // memoized entry, so only the not-yet-seen groups execute.
+        let sim = Arc::new(self.compose_plan(cfg, shape, phase, opts, plan));
         let (sim, inserted) = self.insert_or_adopt(shard, fp.0, sim);
         if inserted {
             // Write behind: only the in-memory insert winner persists the
@@ -451,37 +703,33 @@ impl SimSession {
         sim
     }
 
-    /// Insert `sim` under `fp` (applying the capacity bound), or adopt the
-    /// existing entry if another thread inserted first. Returns the
-    /// canonical `Arc` and whether this call did the insert.
+    /// Insert `sim` under `fp` in the whole-GEMM tier, or adopt the
+    /// existing entry if another thread inserted first.
     fn insert_or_adopt(
         &self,
-        shard: &Mutex<Shard>,
+        shard: &Mutex<Shard<GemmSim>>,
         fp: u128,
         sim: Arc<GemmSim>,
     ) -> (Arc<GemmSim>, bool) {
-        let mut guard = shard.lock().unwrap();
-        let s = &mut *guard;
-        if let Some(existing) = s.map.get(&fp) {
-            // Lost a duplicate-compute race: adopt the first insert so all
-            // callers observe one canonical Arc per key.
-            return (Arc::clone(existing), false);
-        }
-        s.map.insert(fp, Arc::clone(&sim));
-        s.order.push_back(fp);
-        self.inserts.fetch_add(1, Ordering::Relaxed);
-        if let Some(cap) = self.shard_capacity {
-            while s.map.len() > cap {
-                match s.order.pop_front() {
-                    Some(old) => {
-                        s.map.remove(&old);
-                        self.evictions.fetch_add(1, Ordering::Relaxed);
-                    }
-                    None => break,
-                }
-            }
-        }
-        (sim, true)
+        insert_or_adopt_in(shard, fp, sim, self.shard_capacity, &self.inserts, &self.evictions)
+    }
+
+    /// Insert `g` under `fp` in the group tier, or adopt the existing
+    /// entry if another thread inserted first.
+    fn adopt_group(
+        &self,
+        shard: &Mutex<Shard<GroupSim>>,
+        fp: u128,
+        g: Arc<GroupSim>,
+    ) -> (Arc<GroupSim>, bool) {
+        insert_or_adopt_in(
+            shard,
+            fp,
+            g,
+            self.shard_capacity,
+            &self.group_inserts,
+            &self.group_evictions,
+        )
     }
 
     /// Snapshot of the hit/miss/insert/eviction counters (plus the
@@ -497,27 +745,81 @@ impl SimSession {
             store_hits: store.hits,
             store_misses: store.misses,
             store_writes: store.writes,
+            group_hits: self.group_hits.load(Ordering::Relaxed),
+            group_misses: self.group_misses.load(Ordering::Relaxed),
+            group_inserts: self.group_inserts.load(Ordering::Relaxed),
+            group_evictions: self.group_evictions.load(Ordering::Relaxed),
+            group_entries: self.group_len() as u64,
+            group_store_hits: store.group_hits,
+            group_store_misses: store.group_misses,
+            group_store_writes: store.group_writes,
         }
     }
 
-    /// Entries currently cached (sums all shards).
+    /// Whole-GEMM entries currently cached (sums all shards).
     pub fn len(&self) -> usize {
         self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
     }
 
-    /// No entries cached?
-    pub fn is_empty(&self) -> bool {
-        self.len() == 0
+    /// Group entries currently cached (sums all group shards).
+    pub fn group_len(&self) -> usize {
+        self.group_shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
     }
 
-    /// Drop all cached entries (counters are kept).
+    /// No entries cached in either tier?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0 && self.group_len() == 0
+    }
+
+    /// Drop all cached entries, both tiers (counters are kept).
     pub fn clear(&self) {
         for shard in &self.shards {
             let mut g = shard.lock().unwrap();
             g.map.clear();
             g.order.clear();
         }
+        for shard in &self.group_shards {
+            let mut g = shard.lock().unwrap();
+            g.map.clear();
+            g.order.clear();
+        }
     }
+}
+
+/// Insert `value` under `fp` (applying the per-shard capacity bound), or
+/// adopt the existing entry if another thread inserted first. Returns the
+/// canonical `Arc` and whether this call did the insert. Shared by both
+/// cache tiers; each passes its own insert/eviction counters.
+fn insert_or_adopt_in<T>(
+    shard: &Mutex<Shard<T>>,
+    fp: u128,
+    value: Arc<T>,
+    capacity: Option<usize>,
+    inserts: &AtomicU64,
+    evictions: &AtomicU64,
+) -> (Arc<T>, bool) {
+    let mut guard = shard.lock().unwrap();
+    let s = &mut *guard;
+    if let Some(existing) = s.map.get(&fp) {
+        // Lost a duplicate-compute race: adopt the first insert so all
+        // callers observe one canonical Arc per key.
+        return (Arc::clone(existing), false);
+    }
+    s.map.insert(fp, Arc::clone(&value));
+    s.order.push_back(fp);
+    inserts.fetch_add(1, Ordering::Relaxed);
+    if let Some(cap) = capacity {
+        while s.map.len() > cap {
+            match s.order.pop_front() {
+                Some(old) => {
+                    s.map.remove(&old);
+                    evictions.fetch_add(1, Ordering::Relaxed);
+                }
+                None => break,
+            }
+        }
+    }
+    (value, true)
 }
 
 /// Parsed cache-control flags (`--no-cache`, `--no-store`, `--cache-dir`),
@@ -815,6 +1117,124 @@ mod tests {
         assert!(s.is_enabled());
         assert!(s.store().is_none());
         assert!(opts.resolved_dir().is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn equal_partitions_collapse_to_one_group_execution() {
+        // 4G1F splits a forward GEMM into four equal M-slices: one group
+        // miss, three group hits, one resident group entry.
+        let s = SimSession::new();
+        let cfg = preset("4G1F").unwrap();
+        s.simulate(&cfg, GemmShape::new(4096, 512, 1024), Phase::Forward, &SimOptions::hbm2());
+        let st = s.stats();
+        assert_eq!((st.group_hits, st.group_misses, st.group_entries), (3, 1, 1), "{st:?}");
+        assert_eq!(st.group_sims(), 1);
+        // A second, different GEMM with unequal slices gets its own keys.
+        s.simulate(&cfg, GemmShape::new(10, 512, 1024), Phase::Forward, &SimOptions::hbm2());
+        let st = s.stats();
+        // 10 rows split 3+3+3+1: two distinct slices -> 2 misses + 2 hits.
+        assert_eq!((st.group_hits, st.group_misses, st.group_entries), (5, 3, 3), "{st:?}");
+    }
+
+    #[test]
+    fn ideal_dram_is_outside_the_group_domain() {
+        // The ideal/HBM2 memory models differ only in the fold-time DRAM
+        // bound: the second simulate must compose entirely from the groups
+        // the first one cached — and still match the direct simulator
+        // bit-exactly.
+        let s = SimSession::new();
+        let cfg = preset("4G1F").unwrap();
+        let shape = GemmShape::new(4096, 512, 1024);
+        s.simulate(&cfg, shape, Phase::Forward, &SimOptions::hbm2());
+        let before = s.stats();
+        let got = s.simulate(&cfg, shape, Phase::Forward, &SimOptions::ideal());
+        let d = s.stats().delta(&before);
+        assert_eq!((d.misses, d.group_hits, d.group_misses), (1, 4, 0), "{d:?}");
+        assert_eq!(d.group_sims(), 0);
+        let direct = simulate_gemm_shape(&cfg, shape, Phase::Forward, &SimOptions::ideal());
+        crate::proptest::gemm_bit_identical(&got, &direct).unwrap();
+        // ShiftV/ramp ablation bits stay inside the domain: new groups.
+        let mut o = SimOptions::ideal();
+        o.shiftv_overlap = false;
+        let before = s.stats();
+        s.simulate(&cfg, shape, Phase::Forward, &o);
+        let d = s.stats().delta(&before);
+        assert_eq!(d.group_misses, 1, "{d:?}");
+    }
+
+    #[test]
+    fn group_fingerprint_domain_is_exactly_the_documented_one() {
+        let cfg = preset("4G1F").unwrap();
+        let p = GemmShape::new(1024, 512, 1024);
+        let plan = PlanParams::HEURISTIC;
+        let base =
+            SimSession::fingerprint_group(&cfg, p, false, &plan, &SimOptions::hbm2());
+        // Fold-time config fields are invisible...
+        let mut sweep = cfg.clone();
+        sweep.name = "sweep".into();
+        sweep.groups = 1;
+        sweep.gbuf_total_bytes *= 2;
+        sweep.clock_ghz = 1.4;
+        sweep.dram_gbps = 135.0;
+        assert_eq!(
+            base,
+            SimSession::fingerprint_group(&sweep, p, false, &plan, &SimOptions::ideal())
+        );
+        // ...geometry, slice, K-flag, mode policy, and compute options are
+        // not.
+        let mut other = cfg.clone();
+        other.unit = crate::config::UnitGeometry::new(128, 128);
+        assert_ne!(base, SimSession::fingerprint_group(&other, p, false, &plan, &SimOptions::hbm2()));
+        assert_ne!(
+            base,
+            SimSession::fingerprint_group(&cfg, GemmShape::new(1024, 512, 1025), false, &plan, &SimOptions::hbm2())
+        );
+        assert_ne!(base, SimSession::fingerprint_group(&cfg, p, true, &plan, &SimOptions::hbm2()));
+        let greedy = PlanParams { mode: crate::compiler::ModePolicy::ReuseGreedy, ..plan };
+        assert_ne!(base, SimSession::fingerprint_group(&cfg, p, false, &greedy, &SimOptions::hbm2()));
+        let keepa = PlanParams { blocking: crate::compiler::BlockingPolicy::KeepA, ..plan };
+        assert_eq!(base, SimSession::fingerprint_group(&cfg, p, false, &keepa, &SimOptions::hbm2()));
+        let forcek = PlanParams { partition: crate::compiler::PartitionPolicy::ForceK, ..plan };
+        assert_eq!(base, SimSession::fingerprint_group(&cfg, p, false, &forcek, &SimOptions::hbm2()));
+        let mut ramp = SimOptions::hbm2();
+        ramp.ramp = RampMode::PerIssue;
+        assert_ne!(base, SimSession::fingerprint_group(&cfg, p, false, &plan, &ramp));
+    }
+
+    #[test]
+    fn group_entries_flow_through_the_store() {
+        let dir = crate::proptest::scratch_dir("session-group-tiers");
+        let cfg = preset("4G1F").unwrap();
+        let shape = GemmShape::new(4096, 512, 1024);
+
+        // Cold: one group execution, written behind as a .ggrp entry.
+        let cold = SimSession::with_store(SimStore::open(&dir).unwrap());
+        let a = cold.simulate(&cfg, shape, Phase::Forward, &SimOptions::hbm2());
+        let st = cold.stats();
+        assert_eq!((st.group_store_misses, st.group_store_writes), (1, 1), "{st:?}");
+        assert_eq!(cold.store().unwrap().group_entry_count(), 1);
+
+        // Fresh memory, same dir, same GEMM: answered from the .gsim entry
+        // (the fast first tier) without touching the group tier at all.
+        let warm = SimSession::with_store(SimStore::open(&dir).unwrap());
+        let b = warm.simulate(&cfg, shape, Phase::Forward, &SimOptions::hbm2());
+        crate::proptest::gemm_bit_identical(&a, &b).unwrap();
+        let st = warm.stats();
+        assert_eq!((st.store_hits, st.group_lookups()), (1, 0), "{st:?}");
+
+        // Fresh memory, a *different* GEMM key built from the same slices:
+        // the data-grad phase M-splits identically, and a group execution
+        // is phase-blind (phase only picks the partition dimension), so
+        // the GEMM tier misses but every group answers from disk.
+        let cross = SimSession::with_store(SimStore::open(&dir).unwrap());
+        let c = cross.simulate(&cfg, shape, Phase::DataGrad, &SimOptions::hbm2());
+        let st = cross.stats();
+        assert_eq!(st.sims(), 1, "{st:?}");
+        assert_eq!(st.group_sims(), 0, "every group from disk: {st:?}");
+        assert_eq!((st.group_store_hits, st.group_hits), (1, 3), "{st:?}");
+        let direct = simulate_gemm_shape(&cfg, shape, Phase::DataGrad, &SimOptions::hbm2());
+        crate::proptest::gemm_bit_identical(&c, &direct).unwrap();
         let _ = std::fs::remove_dir_all(&dir);
     }
 

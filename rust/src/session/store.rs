@@ -29,7 +29,7 @@
 
 use crate::isa::Mode;
 use crate::session::Fingerprint;
-use crate::sim::{GemmSim, Traffic, SIM_VERSION};
+use crate::sim::{GemmSim, GroupSim, Traffic, SIM_VERSION};
 use std::io;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -47,6 +47,26 @@ const EXT: &str = "gsim";
 
 /// Filename extension of plan-record entries.
 const PLAN_EXT: &str = "gplan";
+
+/// Magic prefix of every **group-execution** store entry (the third entry
+/// kind, DESIGN.md §13): one memoized [`GroupSim`], persisted so group
+/// executions are shared across processes and configurations.
+pub const GROUP_MAGIC: [u8; 4] = *b"FXGR";
+
+/// Filename extension of group-execution entries.
+const GROUP_EXT: &str = "ggrp";
+
+/// Group-entry codec version, folded into group **keys** (the entry header
+/// itself carries the store's simulator-version byte, like `.gsim`
+/// entries). Bump when the [`GroupSim`] layout or [`encode_group_sim`]
+/// changes (a [`crate::sim::SIM_VERSION`] bump also re-keys group entries;
+/// [`PLAN_CODEC_VERSION`] is folded too because group keys embed the
+/// mode-policy bits of [`crate::compiler::PlanParams::pack`]).
+pub const GROUP_CODEC_VERSION: u8 = 1;
+
+/// Domain-separation byte folded into group keys so a group entry can
+/// never alias a simulation or plan entry even if extensions were ignored.
+const GROUP_DOMAIN: u8 = 0x47; // 'G'
 
 /// Plan-record codec version, folded into plan keys and stored in plan
 /// entries. Bump when [`crate::compiler::PlanParams::pack`], the planner's
@@ -218,6 +238,72 @@ pub fn decode_plan_record(bytes: &[u8], version: u8) -> Result<PlanRecord, Codec
     })
 }
 
+/// Fixed size of an encoded [`GroupSim`]: magic, version, the group time,
+/// five traffic counters, `busy_macs`, the five per-mode wave counts, and
+/// the trailing checksum. Fixed-width throughout (the wave array has no
+/// length prefix — all five [`Mode`] slots travel, zero or not).
+const GROUP_ENTRY_LEN: usize = 4 + 1 + 8 + 8 * 5 + 8 + 8 * 5 + CHECKSUM_LEN;
+
+/// Encode a [`GroupSim`] (layout mirrors [`encode_gemm_sim`]: magic ∥
+/// version ∥ fixed-width LE fields ∥ FNV-1a/64 checksum; the time travels
+/// as its `to_bits` pattern).
+pub fn encode_group_sim(g: &GroupSim, version: u8) -> Vec<u8> {
+    let mut out = Vec::with_capacity(GROUP_ENTRY_LEN);
+    out.extend_from_slice(&GROUP_MAGIC);
+    out.push(version);
+    out.extend_from_slice(&g.time.to_bits().to_le_bytes());
+    let t = &g.traffic;
+    for v in [t.gbuf_to_lbuf, t.obuf_to_gbuf, t.dram_read, t.dram_write, t.overcore] {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out.extend_from_slice(&g.busy_macs.to_le_bytes());
+    for w in g.waves {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+    let sum = crate::util::fnv64(&out);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out
+}
+
+/// Decode an entry produced by [`encode_group_sim`]; validation follows
+/// the [`decode_gemm_sim`] taxonomy (any failure is a clean miss for the
+/// group tier). Bit-exact: the time round-trips through its bit pattern.
+pub fn decode_group_sim(bytes: &[u8], version: u8) -> Result<GroupSim, CodecError> {
+    if bytes.len() < GROUP_ENTRY_LEN {
+        return Err(CodecError::Truncated);
+    }
+    let (body, sum) = bytes.split_at(bytes.len() - CHECKSUM_LEN);
+    if body[..4] != GROUP_MAGIC {
+        return Err(CodecError::BadMagic);
+    }
+    if body[4] != version {
+        return Err(CodecError::BadVersion(body[4]));
+    }
+    let want = u64::from_le_bytes(sum.try_into().expect("checksum is 8 bytes"));
+    if crate::util::fnv64(body) != want {
+        return Err(CodecError::BadChecksum);
+    }
+    if bytes.len() != GROUP_ENTRY_LEN {
+        return Err(CodecError::BadLength);
+    }
+    let mut waves = [0u64; 5];
+    for (i, w) in waves.iter_mut().enumerate() {
+        *w = read_u64(body, 61 + i * 8);
+    }
+    Ok(GroupSim {
+        time: f64::from_bits(read_u64(body, 5)),
+        traffic: Traffic {
+            gbuf_to_lbuf: read_u64(body, 13),
+            obuf_to_gbuf: read_u64(body, 21),
+            dram_read: read_u64(body, 29),
+            dram_write: read_u64(body, 37),
+            overcore: read_u64(body, 45),
+        },
+        busy_macs: read_u64(body, 53),
+        waves,
+    })
+}
+
 /// Decode an entry produced by [`encode_gemm_sim`], validating magic,
 /// version, checksum, length consistency, and mode-index canonicality.
 /// Bit-exact: floats round-trip through their `to_bits` patterns.
@@ -288,6 +374,12 @@ pub struct StoreStats {
     pub plan_misses: u64,
     /// Plan records written to disk.
     pub plan_writes: u64,
+    /// Group-execution lookups answered from disk.
+    pub group_hits: u64,
+    /// Group-execution lookups that found no (valid) entry.
+    pub group_misses: u64,
+    /// Group-execution entries written to disk.
+    pub group_writes: u64,
 }
 
 impl StoreStats {
@@ -330,6 +422,15 @@ impl StoreStats {
             self.plan_hits, self.plan_misses, self.plan_writes
         )
     }
+
+    /// One-line summary of the group-execution tier (folded into the CLI's
+    /// `# group tier:` line).
+    pub fn group_summary(&self) -> String {
+        format!(
+            "hits={} misses={} writes={}",
+            self.group_hits, self.group_misses, self.group_writes
+        )
+    }
 }
 
 /// Versioned, content-addressed on-disk store of [`GemmSim`] results.
@@ -347,6 +448,9 @@ pub struct SimStore {
     plan_hits: AtomicU64,
     plan_misses: AtomicU64,
     plan_writes: AtomicU64,
+    group_hits: AtomicU64,
+    group_misses: AtomicU64,
+    group_writes: AtomicU64,
 }
 
 impl SimStore {
@@ -371,6 +475,9 @@ impl SimStore {
             plan_hits: AtomicU64::new(0),
             plan_misses: AtomicU64::new(0),
             plan_writes: AtomicU64::new(0),
+            group_hits: AtomicU64::new(0),
+            group_misses: AtomicU64::new(0),
+            group_writes: AtomicU64::new(0),
         })
     }
 
@@ -537,6 +644,71 @@ impl SimStore {
         }
     }
 
+    /// Group-entry key: the group fingerprint re-hashed with the simulator
+    /// version, the group and plan codec versions, and the [`GROUP_DOMAIN`]
+    /// byte (DESIGN.md §13) — so simulator bumps, group-layout bumps, and
+    /// plan-pack-layout bumps (group keys embed mode-policy bits) each
+    /// re-key group entries independently of the other entry kinds.
+    fn group_key(&self, fp: Fingerprint) -> u128 {
+        let mut h = super::Fnv128::new();
+        h.write(&fp.0.to_le_bytes());
+        h.write(&[self.version, GROUP_CODEC_VERSION, PLAN_CODEC_VERSION, GROUP_DOMAIN]);
+        h.state
+    }
+
+    /// On-disk path of the group entry for `fp` (same two-hex-char
+    /// sharding as simulation entries, `.ggrp` extension).
+    pub fn group_entry_path(&self, fp: Fingerprint) -> PathBuf {
+        let hex = format!("{:032x}", self.group_key(fp));
+        self.dir.join(&hex[..2]).join(format!("{hex}.{GROUP_EXT}"))
+    }
+
+    /// Look up the persisted group execution for `fp`. Like [`Self::get`],
+    /// every failure mode is a clean miss.
+    pub fn get_group(&self, fp: Fingerprint) -> Option<GroupSim> {
+        let found = std::fs::read(self.group_entry_path(fp))
+            .ok()
+            .and_then(|bytes| decode_group_sim(&bytes, self.version).ok());
+        match found {
+            Some(g) => {
+                self.group_hits.fetch_add(1, Ordering::Relaxed);
+                Some(g)
+            }
+            None => {
+                self.group_misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Persist a group execution (atomic, best-effort; mirrors
+    /// [`Self::put`]).
+    pub fn put_group(&self, fp: Fingerprint, g: &GroupSim) -> bool {
+        let path = self.group_entry_path(fp);
+        match self.write_atomic(&path, &encode_group_sim(g, self.version)) {
+            Ok(()) => {
+                self.group_writes.fetch_add(1, Ordering::Relaxed);
+                true
+            }
+            Err(_) => {
+                self.write_errors.fetch_add(1, Ordering::Relaxed);
+                false
+            }
+        }
+    }
+
+    /// Count the complete group entries on disk (the `.ggrp` analogue of
+    /// [`Self::entry_count`]). For tests and diagnostics.
+    pub fn group_entry_count(&self) -> usize {
+        let Ok(shards) = std::fs::read_dir(&self.dir) else { return 0 };
+        shards
+            .flatten()
+            .filter_map(|shard| std::fs::read_dir(shard.path()).ok())
+            .flat_map(|files| files.flatten())
+            .filter(|f| f.path().extension().is_some_and(|e| e == GROUP_EXT))
+            .count()
+    }
+
     /// Count the complete entries on disk (walks the shard directories;
     /// in-flight temp files are excluded). For tests and diagnostics.
     pub fn entry_count(&self) -> usize {
@@ -559,6 +731,9 @@ impl SimStore {
             plan_hits: self.plan_hits.load(Ordering::Relaxed),
             plan_misses: self.plan_misses.load(Ordering::Relaxed),
             plan_writes: self.plan_writes.load(Ordering::Relaxed),
+            group_hits: self.group_hits.load(Ordering::Relaxed),
+            group_misses: self.group_misses.load(Ordering::Relaxed),
+            group_writes: self.group_writes.load(Ordering::Relaxed),
         }
     }
 
@@ -571,6 +746,7 @@ impl SimStore {
             match path.extension().and_then(|e| e.to_str()) {
                 Some(e) if e == EXT => out.sim_entries += 1,
                 Some(e) if e == PLAN_EXT => out.plan_entries += 1,
+                Some(e) if e == GROUP_EXT => out.group_entries += 1,
                 _ if is_temp(&path) => out.temp_files += 1,
                 _ => out.other_files += 1,
             }
@@ -585,7 +761,7 @@ impl SimStore {
     /// (the `flexsa cache gc --max-mib N` command). Stale temp files
     /// (leftovers of crashed writers, older than one minute) are always
     /// removed. **Only files this store wrote are ever touched**
-    /// (`.gsim`/`.gplan` entries and `.tmp-*` leftovers): a mistyped
+    /// (`.gsim`/`.gplan`/`.ggrp` entries and `.tmp-*` leftovers): a mistyped
     /// `--cache-dir` pointing at real data must not lose anything, so
     /// unrecognized files are skipped entirely (they still show up in
     /// [`Self::disk_stats`] as `other_files`). Eviction can only cost
@@ -662,12 +838,12 @@ fn is_temp(path: &Path) -> bool {
         .is_some_and(|n| n.starts_with(".tmp-"))
 }
 
-/// Is this a file this store wrote (a `.gsim` or `.gplan` entry)? GC only
-/// ever deletes these (plus stale temps).
+/// Is this a file this store wrote (a `.gsim`, `.gplan`, or `.ggrp`
+/// entry)? GC only ever deletes these (plus stale temps).
 fn is_store_entry(path: &Path) -> bool {
     path.extension()
         .and_then(|e| e.to_str())
-        .is_some_and(|e| e == EXT || e == PLAN_EXT)
+        .is_some_and(|e| e == EXT || e == PLAN_EXT || e == GROUP_EXT)
 }
 
 /// What [`SimStore::disk_stats`] found on disk.
@@ -677,6 +853,8 @@ pub struct DiskStats {
     pub sim_entries: u64,
     /// Complete plan-record entries (`.gplan`).
     pub plan_entries: u64,
+    /// Complete group-execution entries (`.ggrp`).
+    pub group_entries: u64,
     /// Total bytes under the shard directories (all file kinds).
     pub bytes: u64,
     /// Shard directories present.
@@ -877,16 +1055,93 @@ mod tests {
         let _ = std::fs::remove_dir_all(&dir);
     }
 
+    fn sample_group() -> GroupSim {
+        GroupSim {
+            time: 9876.5,
+            traffic: Traffic {
+                gbuf_to_lbuf: 111,
+                obuf_to_gbuf: 222,
+                dram_read: 0,
+                dram_write: 0,
+                overcore: 333,
+            },
+            busy_macs: 123456789,
+            waves: [7, 0, 0, 9, 0],
+        }
+    }
+
     #[test]
-    fn disk_stats_count_both_entry_kinds() {
+    fn group_codec_round_trips_and_rejects_corruption() {
+        let g = sample_group();
+        let bytes = encode_group_sim(&g, GROUP_CODEC_VERSION);
+        assert_eq!(bytes.len(), GROUP_ENTRY_LEN);
+        let back = decode_group_sim(&bytes, GROUP_CODEC_VERSION).unwrap();
+        assert_eq!(back.time.to_bits(), g.time.to_bits());
+        assert_eq!(back.traffic, g.traffic);
+        assert_eq!((back.busy_macs, back.waves), (g.busy_macs, g.waves));
+
+        assert_eq!(decode_group_sim(&bytes[..10], GROUP_CODEC_VERSION), Err(CodecError::Truncated));
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xFF;
+        assert_eq!(decode_group_sim(&bad, GROUP_CODEC_VERSION), Err(CodecError::BadMagic));
+        let mut bad = bytes.clone();
+        bad[4] = 77;
+        assert_eq!(decode_group_sim(&bad, GROUP_CODEC_VERSION), Err(CodecError::BadVersion(77)));
+        let mut bad = bytes.clone();
+        bad[20] ^= 0x40;
+        assert_eq!(decode_group_sim(&bad, GROUP_CODEC_VERSION), Err(CodecError::BadChecksum));
+        // Cross-kind confusion is caught by magic in both directions.
+        let sim_bytes = encode_gemm_sim(&sample_sim(), GROUP_CODEC_VERSION);
+        assert_eq!(decode_group_sim(&sim_bytes, GROUP_CODEC_VERSION), Err(CodecError::BadMagic));
+        assert_eq!(decode_gemm_sim(&bytes, GROUP_CODEC_VERSION), Err(CodecError::BadMagic));
+    }
+
+    #[test]
+    fn group_entries_round_trip_on_disk_in_their_own_domain() {
+        let dir = temp_store_dir("group-putget");
+        let store = SimStore::open(&dir).unwrap();
+        let fp = Fingerprint(0xAAAA_BBBB_CCCC_DDDD);
+        assert!(store.get_group(fp).is_none());
+        assert!(store.put_group(fp, &sample_group()));
+        let back = store.get_group(fp).unwrap();
+        assert_eq!(back, sample_group());
+        // Group entries are invisible to the other entry APIs: same
+        // fingerprint, three disjoint key domains.
+        assert!(store.get(fp).is_none());
+        assert!(store.get_plan(fp, 0xFF).is_none());
+        assert_eq!(store.entry_count(), 0);
+        assert_eq!(store.group_entry_count(), 1);
+        let st = store.stats();
+        assert_eq!((st.group_hits, st.group_misses, st.group_writes), (1, 2, 1), "{st:?}");
+        assert!(st.group_summary().contains("hits=1"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn group_keys_fold_the_version_byte() {
+        let dir = temp_store_dir("group-version");
+        let v1 = SimStore::open_versioned(&dir, 1).unwrap();
+        let v2 = SimStore::open_versioned(&dir, 2).unwrap();
+        let fp = Fingerprint(42);
+        assert_ne!(v1.group_entry_path(fp), v2.group_entry_path(fp));
+        v1.put_group(fp, &sample_group());
+        assert!(v2.get_group(fp).is_none());
+        assert!(v1.get_group(fp).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn disk_stats_count_all_entry_kinds() {
         let dir = temp_store_dir("disk-stats");
         let store = SimStore::open(&dir).unwrap();
         store.put(Fingerprint(1), &sample_sim());
         store.put(Fingerprint(2), &sample_sim());
         store.put_plan(Fingerprint(1), &sample_plan());
+        store.put_group(Fingerprint(1), &sample_group());
         let d = store.disk_stats();
         assert_eq!(d.sim_entries, 2);
         assert_eq!(d.plan_entries, 1);
+        assert_eq!(d.group_entries, 1);
         assert!(d.bytes > 0);
         assert!(d.shard_dirs >= 1);
         assert_eq!(d.temp_files + d.other_files, 0);
@@ -936,11 +1191,16 @@ mod tests {
         let dir = temp_store_dir("gc-foreign");
         let store = SimStore::open(&dir).unwrap();
         store.put(Fingerprint(1), &sample_sim());
+        // All three store-owned suffixes (.gsim/.gplan/.ggrp) are GC-able;
+        // anything else is untouchable.
+        store.put_plan(Fingerprint(1), &sample_plan());
+        store.put_group(Fingerprint(1), &sample_group());
         let shard = store.entry_path(Fingerprint(1)).parent().unwrap().to_path_buf();
         std::fs::write(shard.join("precious.txt"), b"user data").unwrap();
         std::fs::write(dir.join("top-level.txt"), b"not in a shard dir").unwrap();
         let r = store.gc(0);
-        assert_eq!((r.scanned, r.deleted, r.kept), (1, 1, 0), "{r:?}");
+        assert_eq!((r.scanned, r.deleted, r.kept), (3, 3, 0), "{r:?}");
+        assert!(store.get_group(Fingerprint(1)).is_none());
         assert_eq!(std::fs::read(shard.join("precious.txt")).unwrap(), b"user data");
         assert!(dir.join("top-level.txt").exists());
         let d = store.disk_stats();

@@ -1,9 +1,19 @@
 //! Per-GEMM event-driven execution of compiled programs.
+//!
+//! Structured as **group execution → fold** (DESIGN.md §13): each group
+//! partition runs through [`execute_group`] producing a [`GroupSim`] (the
+//! compute side: wave-pipeline time, on-chip traffic, MACs, wave counts),
+//! and [`GemmFold`] composes GroupSims plus each group's analytic
+//! [`DramPlan`] into the final [`GemmSim`]. The monolithic entry points
+//! ([`simulate_gemm`], [`simulate_gemm_plan`]) and the session's
+//! group-memoized path ([`crate::session::SimSession::simulate_group`])
+//! share these exact primitives, which is why composed results are
+//! bit-identical to monolithic ones by construction.
 
 use super::{RampMode, SimOptions};
-use crate::compiler::CompiledGemm;
+use crate::compiler::{CompiledGemm, DramPlan, ModePolicy};
 use crate::config::AcceleratorConfig;
-use crate::gemm::{ACC_BYTES, ELEM_BYTES};
+use crate::gemm::{GemmShape, ACC_BYTES, ELEM_BYTES};
 use crate::isa::{Inst, Mode};
 
 /// Traffic counters in bytes.
@@ -68,6 +78,31 @@ impl GemmSim {
         }
         self.busy_macs as f64 / (cfg.total_pes() as f64 * self.cycles)
     }
+}
+
+/// Result of executing one group partition's instruction stream — the
+/// **compute side** of a group: wave-pipeline completion time, on-chip /
+/// over-core traffic, useful MACs, and per-mode wave counts.
+///
+/// DRAM traffic is deliberately *not* part of it: the analytic
+/// [`DramPlan`] costs a handful of integer ops and depends on the GBUF
+/// share and blocking policy, so it is recomputed at compose time
+/// ([`GemmFold::add`]) instead of widening the memoization key — which is
+/// what lets a GBUF-size sweep, the `Auto`-vs-forced blocking axis of a
+/// plan search, and the ideal-vs-HBM2 memory models all share one cached
+/// group execution (DESIGN.md §13).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct GroupSim {
+    /// Group completion time in cycles (all units' loads, execs, stores
+    /// drained) — [`GroupExecutor::finish`].
+    pub time: f64,
+    /// Compute-side byte counters. `dram_read`/`dram_write` are always 0
+    /// here (charged at compose time from the [`DramPlan`]).
+    pub traffic: Traffic,
+    /// Useful MACs executed by this group.
+    pub busy_macs: u64,
+    /// Wave-issue counts indexed by [`Mode::index`].
+    pub waves: [u64; 5],
 }
 
 /// Per-unit engine state during program execution.
@@ -200,38 +235,83 @@ impl GroupExecutor {
             .fold(0.0f64, f64::max)
     }
 
-    /// Fold this group's counters into a [`GemmSim`]; returns group time.
-    fn drain_into(self, out: &mut GemmSim) -> f64 {
-        let done = self.finish();
-        out.traffic.add(&self.traffic);
-        out.busy_macs += self.busy_macs;
-        for (i, c) in self.waves.into_iter().enumerate() {
+    /// Consume the executor into its [`GroupSim`] result.
+    pub fn into_group_sim(self) -> GroupSim {
+        let time = self.finish();
+        GroupSim { time, traffic: self.traffic, busy_macs: self.busy_macs, waves: self.waves }
+    }
+}
+
+/// Execute one group partition's instruction stream (streamed straight out
+/// of the compiler, never materialized) and return its [`GroupSim`]. The
+/// expensive primitive the session's group tier memoizes
+/// (`SimSession::simulate_group`); reads only the
+/// [`crate::compiler::GroupGeometry`] fields of `cfg` plus `opts`'s
+/// compute-relevant bits ([`SimOptions::group_fingerprint`]).
+pub fn execute_group(
+    cfg: &AcceleratorConfig,
+    p: GemmShape,
+    k_partitioned: bool,
+    mode: &ModePolicy,
+    opts: &SimOptions,
+) -> GroupSim {
+    let mut ex = GroupExecutor::new(cfg, *opts, k_partitioned);
+    crate::compiler::tile_partition_visit_plan(cfg, p, k_partitioned, mode, &mut |inst| {
+        ex.exec(&inst)
+    });
+    ex.into_group_sim()
+}
+
+/// Accumulator composing per-group results into a [`GemmSim`] — the single
+/// definition of the group→GEMM fold, shared by the monolithic simulation
+/// paths and the session's group-memoized compose, so the two can never
+/// drift (property-pinned by `tests/prop_session.rs`).
+#[derive(Debug, Default)]
+pub struct GemmFold {
+    out: GemmSim,
+    group_max: f64,
+    dram_bytes: u64,
+}
+
+impl GemmFold {
+    /// Empty fold.
+    pub fn new() -> GemmFold {
+        GemmFold::default()
+    }
+
+    /// Fold one group's compute-side result plus its analytic DRAM plan.
+    pub fn add(&mut self, g: &GroupSim, dram: &DramPlan) {
+        self.group_max = self.group_max.max(g.time);
+        self.out.traffic.add(&g.traffic);
+        self.out.busy_macs += g.busy_macs;
+        for (i, &c) in g.waves.iter().enumerate() {
             if c > 0 {
-                *out.waves_by_mode.entry(Mode::from_index(i)).or_insert(0) += c;
+                *self.out.waves_by_mode.entry(Mode::from_index(i)).or_insert(0) += c;
             }
         }
-        done
+        self.dram_bytes += dram.total_bytes();
+        self.out.traffic.dram_read += dram.read_bytes;
+        self.out.traffic.dram_write += dram.write_bytes + dram.reduce_bytes;
+    }
+
+    /// Apply the DRAM bandwidth bound and return the composed [`GemmSim`].
+    pub fn finish(mut self, cfg: &AcceleratorConfig, opts: &SimOptions) -> GemmSim {
+        finish_gemm(cfg, opts, &mut self.out, self.group_max, self.dram_bytes);
+        self.out
     }
 }
 
 /// Simulate one compiled GEMM on the accelerator.
 pub fn simulate_gemm(cfg: &AcceleratorConfig, c: &CompiledGemm, opts: &SimOptions) -> GemmSim {
-    let mut out = GemmSim::default();
-    let mut group_max = 0.0f64;
-    let mut dram_bytes = 0u64;
-
+    let mut fold = GemmFold::new();
     for plan in &c.groups {
         let mut ex = GroupExecutor::new(cfg, *opts, c.k_partitioned);
         for inst in &plan.program.insts {
             ex.exec(inst);
         }
-        group_max = group_max.max(ex.drain_into(&mut out));
-        dram_bytes += plan.dram.total_bytes();
-        out.traffic.dram_read += plan.dram.read_bytes;
-        out.traffic.dram_write += plan.dram.write_bytes + plan.dram.reduce_bytes;
+        fold.add(&ex.into_group_sim(), &plan.dram);
     }
-    finish_gemm(cfg, opts, &mut out, group_max, dram_bytes);
-    out
+    fold.finish(cfg, opts)
 }
 
 /// Streaming compile+simulate: identical results to
@@ -259,23 +339,16 @@ pub fn simulate_gemm_plan(
     opts: &SimOptions,
     plan: &crate::compiler::PlanParams,
 ) -> GemmSim {
-    use crate::compiler::{gbuf_blocking_with, partitions_with, tile_partition_visit_plan};
+    use crate::compiler::{gbuf_blocking_with, partitions_with};
     let (parts, k_parts) = partitions_with(cfg, shape, phase, &plan.partition);
     let k_partitioned = k_parts > 1;
-    let mut out = GemmSim::default();
-    let mut group_max = 0.0f64;
-    let mut dram_bytes = 0u64;
+    let mut fold = GemmFold::new();
     for p in parts {
+        let g = execute_group(cfg, p, k_partitioned, &plan.mode, opts);
         let dram = gbuf_blocking_with(cfg, p, phase, k_parts, &plan.blocking);
-        let mut ex = GroupExecutor::new(cfg, *opts, k_partitioned);
-        tile_partition_visit_plan(cfg, p, k_partitioned, &plan.mode, &mut |inst| ex.exec(&inst));
-        group_max = group_max.max(ex.drain_into(&mut out));
-        dram_bytes += dram.total_bytes();
-        out.traffic.dram_read += dram.read_bytes;
-        out.traffic.dram_write += dram.write_bytes + dram.reduce_bytes;
+        fold.add(&g, &dram);
     }
-    finish_gemm(cfg, opts, &mut out, group_max, dram_bytes);
-    out
+    fold.finish(cfg, opts)
 }
 
 fn finish_gemm(
@@ -456,6 +529,65 @@ mod tests {
         let forced = simulate_gemm_plan(&cfg, shape, Phase::Forward, &SimOptions::ideal(), &plan);
         assert_eq!(forced.busy_macs, heur.busy_macs);
         assert_ne!(forced.traffic.dram_write, heur.traffic.dram_write);
+    }
+
+    #[test]
+    fn execute_group_composes_to_the_monolithic_result() {
+        // Hand-composing execute_group + gbuf_blocking_with through
+        // GemmFold must reproduce simulate_gemm_shape bit-exactly — the
+        // contract the session's group-memoized path is built on.
+        use crate::compiler::{gbuf_blocking_with, partitions_with, PlanParams};
+        for name in ["1G1C", "1G4C", "4G4C", "1G1F", "4G1F"] {
+            let cfg = preset(name).unwrap();
+            for phase in Phase::ALL {
+                let shape = GemmShape::new(1000, 71, 333);
+                let plan = PlanParams::HEURISTIC;
+                let (parts, k_parts) = partitions_with(&cfg, shape, phase, &plan.partition);
+                let k_partitioned = k_parts > 1;
+                let mut fold = GemmFold::new();
+                for p in parts {
+                    let g = execute_group(&cfg, p, k_partitioned, &plan.mode, &SimOptions::hbm2());
+                    // Group results carry no DRAM traffic: that is charged
+                    // from the analytic plan at compose time.
+                    assert_eq!((g.traffic.dram_read, g.traffic.dram_write), (0, 0));
+                    fold.add(&g, &gbuf_blocking_with(&cfg, p, phase, k_parts, &plan.blocking));
+                }
+                let composed = fold.finish(&cfg, &SimOptions::hbm2());
+                let direct = simulate_gemm_shape(&cfg, shape, phase, &SimOptions::hbm2());
+                crate::proptest::gemm_bit_identical(&composed, &direct).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn group_time_is_bandwidth_and_gbuf_blind() {
+        // A group execution must not change when only fold-time config
+        // fields move (clock, DRAM bandwidth, GBUF size, group count): the
+        // exclusion list of the group-fingerprint domain (DESIGN.md §13).
+        let a = preset("4G1F").unwrap();
+        let mut b = a.clone();
+        b.groups = 1;
+        b.gbuf_total_bytes *= 4;
+        b.clock_ghz = 1.4;
+        b.dram_gbps = 100.0;
+        let p = GemmShape::new(1024, 137, 333);
+        for k_partitioned in [false, true] {
+            let ga = execute_group(
+                &a,
+                p,
+                k_partitioned,
+                &crate::compiler::ModePolicy::Algorithm1,
+                &SimOptions::hbm2(),
+            );
+            let gb = execute_group(
+                &b,
+                p,
+                k_partitioned,
+                &crate::compiler::ModePolicy::Algorithm1,
+                &SimOptions::ideal(), // ideal_dram is fold-time too
+            );
+            assert_eq!(ga, gb);
+        }
     }
 
     #[test]

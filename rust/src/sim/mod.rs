@@ -25,7 +25,8 @@ mod engine;
 mod iteration;
 
 pub use engine::{
-    simulate_gemm, simulate_gemm_plan, simulate_gemm_shape, GemmSim, GroupExecutor, Traffic,
+    execute_group, simulate_gemm, simulate_gemm_plan, simulate_gemm_shape, GemmFold, GemmSim,
+    GroupExecutor, GroupSim, Traffic,
 };
 
 /// Simulator output version, folded into every persistent-store key and
@@ -112,6 +113,18 @@ impl SimOptions {
             | ((self.shiftv_overlap as u64) << 1)
             | ((self.ramp.index() as u64) << 2)
     }
+
+    /// The **compute-relevant** subset of [`Self::fingerprint`], for the
+    /// session's group-fingerprint domain (DESIGN.md §13): bit 0 =
+    /// `shiftv_overlap`, bits 1–2 = [`RampMode::index`]. `ideal_dram` is
+    /// deliberately excluded — it only gates the DRAM bandwidth bound
+    /// applied when groups are folded into a [`GemmSim`]
+    /// (`GemmFold::finish`), never the group execution itself, so the
+    /// ideal and HBM2 memory models share every cached group
+    /// (`ideal_dram_is_outside_the_group_domain` pins it).
+    pub fn group_fingerprint(&self) -> u64 {
+        (self.shiftv_overlap as u64) | ((self.ramp.index() as u64) << 1)
+    }
 }
 
 #[cfg(test)]
@@ -130,5 +143,22 @@ mod tests {
             }
         }
         assert_eq!(seen.len(), 12);
+    }
+
+    #[test]
+    fn group_fingerprint_folds_ideal_dram_away() {
+        // The 12 option points collapse to 6 compute-side classes: each
+        // (shiftv_overlap, ramp) pair maps ideal and HBM2 to one value.
+        let mut seen = std::collections::BTreeSet::new();
+        for shiftv_overlap in [false, true] {
+            for ramp in [RampMode::PerGemm, RampMode::PerJob, RampMode::PerIssue] {
+                let hbm2 = SimOptions { ideal_dram: false, shiftv_overlap, ramp };
+                let ideal = SimOptions { ideal_dram: true, shiftv_overlap, ramp };
+                assert_eq!(hbm2.group_fingerprint(), ideal.group_fingerprint());
+                assert!(seen.insert(hbm2.group_fingerprint()), "duplicate for {hbm2:?}");
+            }
+        }
+        assert_eq!(seen.len(), 6);
+        assert!(seen.iter().all(|&v| v <= u8::MAX as u64));
     }
 }

@@ -161,7 +161,10 @@ fn golden_oracle_gap_fc_forward_on_4g1f() {
         Phase::Forward,
         &SimOptions::hbm2(),
     );
-    assert_eq!(c.evaluated, 96, "4 partitions x 6 modes x 4 blockings");
+    // 4 partitions x 6 modes x 4 blockings = 96 proposals, of which the
+    // computation dedupe (ForceM == phase rule on forward GEMMs; blocking
+    // orientations tying Auto's DRAM plan) simulates only 30 (port-pinned).
+    assert_eq!((c.evaluated, c.deduped), (30, 66), "{c:?}");
     assert_eq!(c.best.partition, PartitionPolicy::ForceK, "{}", c.best);
     assert_eq!(c.best.blocking, BlockingPolicy::Auto, "{}", c.best);
     assert_eq!(c.best.mode, ModePolicy::Algorithm1, "{}", c.best);
@@ -183,6 +186,35 @@ fn golden_oracle_gap_fc_forward_on_4g1f() {
     assert!((c2.gap() - 13.906_656_465_187_451).abs() < 1e-5, "gap={}", c2.gap());
 }
 
+/// The group-tier acceptance criterion for the planner (DESIGN.md §13): an
+/// exhaustive search issues far fewer group executions than candidates ×
+/// groups, because candidates differing only in the partition/blocking
+/// axes (and equal slices within one candidate) share group entries.
+#[test]
+fn exhaustive_search_shares_group_executions_across_candidates() {
+    let session = SimSession::shared();
+    // One worker => deterministic group counters (no duplicate-compute
+    // races on shared keys).
+    let planner = Planner::new(Arc::clone(&session), Strategy::Exhaustive, 1);
+    let cfg = Arc::new(preset("4G1F").unwrap());
+    let c = planner.plan_gemm(
+        &cfg,
+        GemmShape::new(32, 1000, 2048),
+        Phase::Forward,
+        &SimOptions::hbm2(),
+    );
+    let st = session.stats();
+    let proposals = (c.evaluated + c.deduped) as u64;
+    let naive = proposals * 4; // every candidate on every group, no reuse
+    assert_eq!(proposals, 96);
+    // Three distinct slice sets x six mode policies = 18 executions
+    // (port-pinned): a 21x reduction over the naive count.
+    assert_eq!(st.group_sims(), 18, "{st:?}");
+    assert!(st.group_sims() < c.evaluated as u64, "{st:?}");
+    assert!(st.group_hits > 0, "{st:?}");
+    assert!(st.group_sims() * 21 <= naive, "{} vs {naive}", st.group_sims());
+}
+
 #[test]
 fn warm_plan_store_answers_with_zero_sims() {
     let dir = scratch_dir("planner-store");
@@ -195,7 +227,7 @@ fn warm_plan_store_answers_with_zero_sims() {
     let p1 = Planner::new(Arc::clone(&s1), Strategy::Exhaustive, 2);
     let cold = p1.plan_gemm(&cfg, shape, Phase::Forward, &opts);
     assert!(!cold.from_store);
-    assert_eq!(cold.evaluated, 96);
+    assert_eq!(cold.evaluated, 30); // 96 proposals after computation dedupe
     assert_eq!(s1.store().unwrap().stats().plan_writes, 1);
 
     // Warm, fresh session + store on the same dir: answered from the plan

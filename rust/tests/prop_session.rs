@@ -4,15 +4,45 @@
 //! makes routing every compile→simulate path through [`SimSession`] sound
 //! (DESIGN.md §10).
 
-use flexsa::config::{preset, PRESETS};
+use flexsa::compiler::{BlockingPolicy, ModePolicy, PartitionPolicy, PlanParams};
+use flexsa::config::{preset, AcceleratorConfig, UnitGeometry, UnitKind, PRESETS};
 use flexsa::gemm::{GemmShape, Phase};
+use flexsa::isa::Mode;
 use flexsa::proptest::{
     figure_options as options, forall, gemm_bit_identical as bit_identical, gemm_dim,
     shrink_dims3, Config, FIGURE_OPTION_POINTS,
 };
 use flexsa::session::SimSession;
-use flexsa::sim::{simulate_gemm_shape, SimOptions};
+use flexsa::sim::{simulate_gemm_plan, simulate_gemm_shape, SimOptions};
 use std::sync::Arc;
+
+/// Number of distinct plan points [`plan_variant`] cycles through.
+const PLAN_VARIANTS: usize = 6;
+
+/// Plan points covering every [`PlanParams`] axis (partition forcing,
+/// hybrid grids, blocking orientations, mode policies).
+fn plan_variant(i: usize) -> PlanParams {
+    match i % PLAN_VARIANTS {
+        0 => PlanParams::HEURISTIC,
+        1 => PlanParams { partition: PartitionPolicy::ForceM, ..PlanParams::HEURISTIC },
+        2 => PlanParams { partition: PartitionPolicy::ForceK, ..PlanParams::HEURISTIC },
+        3 => PlanParams {
+            partition: PartitionPolicy::Hybrid { m_parts: 2 },
+            blocking: BlockingPolicy::KeepA,
+            ..PlanParams::HEURISTIC
+        },
+        4 => PlanParams {
+            mode: ModePolicy::ReuseGreedy,
+            blocking: BlockingPolicy::KeepB,
+            ..PlanParams::HEURISTIC
+        },
+        _ => PlanParams {
+            mode: ModePolicy::Forced(Mode::Vsw),
+            blocking: BlockingPolicy::KeepC,
+            ..PlanParams::HEURISTIC
+        },
+    }
+}
 
 #[test]
 fn cached_results_bit_identical_to_uncached() {
@@ -49,6 +79,138 @@ fn cached_results_bit_identical_to_uncached() {
     // Every case queried its key twice: at least half the lookups hit.
     assert!(stats.hits >= stats.misses, "{stats:?}");
     assert_eq!(stats.entries, stats.inserts, "unbounded session must not evict: {stats:?}");
+}
+
+/// The tentpole's headline property (DESIGN.md §13): a session answer —
+/// composed from memoized per-group executions, possibly *shared* with
+/// earlier cases through the group tier — is bit-identical to the
+/// monolithic simulator across random shapes × presets × phases × option
+/// points × plan variants.
+#[test]
+fn composed_group_results_bit_identical_to_monolithic() {
+    // One session across all cases: later cases hit both tiers of a
+    // populated multi-config cache, so cross-candidate and cross-config
+    // group reuse is exercised, not just cold composition.
+    let session = SimSession::new();
+    forall(
+        &Config { cases: 48, ..Default::default() },
+        |rng| {
+            (
+                (gemm_dim(rng), gemm_dim(rng), gemm_dim(rng)),
+                rng.next_below(PRESETS.len() as u64) as usize,
+                rng.next_below(3) as usize,
+                rng.next_below(FIGURE_OPTION_POINTS as u64) as usize,
+                rng.next_below(PLAN_VARIANTS as u64) as usize,
+            )
+        },
+        |&(dims, ci, pi, oi, vi)| {
+            shrink_dims3(&dims).into_iter().map(|d| (d, ci, pi, oi, vi)).collect()
+        },
+        |&((m, n, k), ci, pi, oi, vi)| {
+            let cfg = preset(PRESETS[ci]).unwrap();
+            let phase = Phase::ALL[pi];
+            let opts = options(oi);
+            let plan = plan_variant(vi);
+            let shape = GemmShape::new(m, n, k);
+            let direct = simulate_gemm_plan(&cfg, shape, phase, &opts, &plan);
+            let composed = session.simulate_plan(&cfg, shape, phase, &opts, &plan);
+            bit_identical(&composed, &direct)?;
+            // And again through the whole-GEMM hit path.
+            bit_identical(&session.simulate_plan(&cfg, shape, phase, &opts, &plan), &direct)
+        },
+    );
+    let stats = session.stats();
+    assert!(stats.group_lookups() > 0, "{stats:?}");
+    assert_eq!(stats.group_entries, stats.group_inserts, "unbounded: no group evictions");
+}
+
+/// The PR-4 golden-gap shapes (the largest known heuristic-vs-oracle gaps)
+/// compose bit-identically under every plan variant and both memory
+/// models — these are exactly the keys the planner hammers through the
+/// group tier, so they are pinned explicitly.
+#[test]
+fn golden_gap_shapes_compose_bit_identically() {
+    let session = SimSession::new();
+    let cfg = preset("4G1F").unwrap();
+    for (shape, phase) in [
+        (GemmShape::new(32, 1000, 2048), Phase::Forward),
+        (GemmShape::new(1000, 2048, 32), Phase::WeightGrad),
+    ] {
+        for vi in 0..PLAN_VARIANTS {
+            for opts in [SimOptions::hbm2(), SimOptions::ideal()] {
+                let plan = plan_variant(vi);
+                let direct = simulate_gemm_plan(&cfg, shape, phase, &opts, &plan);
+                let composed = session.simulate_plan(&cfg, shape, phase, &opts, &plan);
+                bit_identical(&composed, &direct)
+                    .unwrap_or_else(|e| panic!("{shape} {phase:?} variant {vi}: {e}"));
+            }
+        }
+    }
+    // The ideal-DRAM passes and the slice overlap between partition
+    // variants must have reused groups.
+    let stats = session.stats();
+    assert!(stats.group_hits > 0, "{stats:?}");
+    assert!(stats.group_sims() < stats.group_lookups(), "{stats:?}");
+}
+
+/// Cross-config partial reuse, the ROADMAP headline: a warm session built
+/// on one configuration answers another configuration's group partitions
+/// without executing anything, whenever the group geometries match.
+#[test]
+fn matching_geometry_configs_share_group_executions() {
+    // A single-group accelerator whose one unit matches 4G1F's per-group
+    // unit (64x64 FlexSA): its whole-GEMM results ARE 4G1F's group
+    // executions for the matching slices.
+    let one = AcceleratorConfig::new(
+        "1G-64F",
+        1,
+        1,
+        UnitGeometry::new(64, 64),
+        UnitKind::FlexSa,
+    );
+    let four = preset("4G1F").unwrap();
+    let session = SimSession::new();
+    // Warm: the slice 4G1F will M-split (4096 rows / 4 groups = 1024).
+    session.simulate(&one, GemmShape::new(1024, 512, 1024), Phase::Forward, &SimOptions::hbm2());
+    let before = session.stats();
+    assert_eq!(before.group_sims(), 1, "{before:?}");
+    let got =
+        session.simulate(&four, GemmShape::new(4096, 512, 1024), Phase::Forward, &SimOptions::hbm2());
+    let d = session.stats().delta(&before);
+    assert_eq!(d.group_sims(), 0, "all four groups answered warm: {d:?}");
+    assert_eq!(d.group_hits, 4, "{d:?}");
+    let direct =
+        simulate_gemm_shape(&four, GemmShape::new(4096, 512, 1024), Phase::Forward, &SimOptions::hbm2());
+    bit_identical(&got, &direct).unwrap();
+}
+
+/// GBUF-capacity and DRAM-bandwidth sweeps (the ROADMAP's "pruned shape
+/// probed across a sweep of GBUF sizes") reuse every compute-side group
+/// execution: only the analytic DRAM plan and the fold-time bound change.
+#[test]
+fn gbuf_and_dram_sweeps_reuse_group_executions() {
+    let base = preset("4G1F").unwrap();
+    let mut sweep = base.clone();
+    sweep.name = "4G1F-sweep".into();
+    sweep.gbuf_total_bytes *= 4;
+    sweep.dram_gbps = 135.0;
+    let session = SimSession::new();
+    let shape = GemmShape::new(4096, 512, 1024);
+    for phase in Phase::ALL {
+        session.simulate(&base, shape, phase, &SimOptions::hbm2());
+    }
+    let before = session.stats();
+    for phase in Phase::ALL {
+        let got = session.simulate(&sweep, shape, phase, &SimOptions::hbm2());
+        bit_identical(&got, &simulate_gemm_shape(&sweep, shape, phase, &SimOptions::hbm2()))
+            .unwrap_or_else(|e| panic!("{phase:?}: {e}"));
+    }
+    let d = session.stats().delta(&before);
+    assert_eq!(d.misses, 3, "distinct whole-GEMM keys: {d:?}");
+    // Forward/data-grad slices are warm; the weight-grad K-split slices
+    // depend on k (identical here), so every group answers from cache.
+    assert_eq!(d.group_sims(), 0, "{d:?}");
+    assert!(d.group_hits > 0, "{d:?}");
 }
 
 #[test]

@@ -4,16 +4,22 @@
 //! never a panic, never a wrong result — when truncated, tampered with, or
 //! written by a different simulator version.
 
+use flexsa::compiler::{ModePolicy, PlanParams};
 use flexsa::config::{preset, PRESETS};
 use flexsa::gemm::{GemmShape, Phase};
 use flexsa::isa::Mode;
 use flexsa::proptest::{
-    figure_options, forall, gemm_bit_identical as bit_identical, gemm_dim,
-    scratch_dir as temp_store_dir, shrink_dims3, Config, FIGURE_OPTION_POINTS,
+    figure_options, forall, gemm_bit_identical as bit_identical,
+    group_bit_identical as group_identical, gemm_dim, scratch_dir as temp_store_dir,
+    shrink_dims3, Config, FIGURE_OPTION_POINTS,
 };
-use flexsa::session::store::{decode_gemm_sim, encode_gemm_sim, SimStore};
+use flexsa::session::store::{
+    decode_gemm_sim, decode_group_sim, encode_gemm_sim, encode_group_sim, SimStore,
+};
 use flexsa::session::SimSession;
-use flexsa::sim::{simulate_gemm_shape, GemmSim, SimOptions, Traffic, SIM_VERSION};
+use flexsa::sim::{
+    execute_group, simulate_gemm_shape, GemmSim, GroupSim, SimOptions, Traffic, SIM_VERSION,
+};
 use flexsa::util::Lcg64;
 use std::sync::Arc;
 
@@ -101,6 +107,155 @@ fn codec_round_trips_synthetic_values() {
             bit_identical(&decoded, sim)
         },
     );
+}
+
+/// Encode→decode of *executed* group results is bit-identical across
+/// randomized slices, presets, K-flags, mode policies, and option points
+/// (the group-tier analogue of the `.gsim` headline property).
+#[test]
+fn group_codec_round_trips_executed_groups_bit_identically() {
+    forall(
+        &Config { cases: 40, ..Default::default() },
+        |rng| {
+            (
+                (gemm_dim(rng), gemm_dim(rng), gemm_dim(rng)),
+                rng.next_below(PRESETS.len() as u64) as usize,
+                rng.next_below(2) == 0,
+                rng.next_below(3) as usize,
+                rng.next_below(FIGURE_OPTION_POINTS as u64) as usize,
+            )
+        },
+        |&(dims, ci, kp, mi, oi)| {
+            shrink_dims3(&dims).into_iter().map(|d| (d, ci, kp, mi, oi)).collect()
+        },
+        |&((m, n, k), ci, kp, mi, oi)| {
+            let cfg = preset(PRESETS[ci]).unwrap();
+            let mode = [
+                ModePolicy::Algorithm1,
+                ModePolicy::ReuseGreedy,
+                ModePolicy::Forced(Mode::Isw),
+            ][mi];
+            let g = execute_group(&cfg, GemmShape::new(m, n, k), kp, &mode, &figure_options(oi));
+            let bytes = encode_group_sim(&g, SIM_VERSION);
+            let decoded = decode_group_sim(&bytes, SIM_VERSION)
+                .map_err(|e| format!("decode failed: {e}"))?;
+            group_identical(&decoded, &g)
+        },
+    );
+}
+
+/// Synthetic [`GroupSim`] values round-trip too, including zero times,
+/// all-zero wave arrays, and saturated counters.
+#[test]
+fn group_codec_round_trips_synthetic_values() {
+    forall(
+        &Config { cases: 200, ..Default::default() },
+        |rng| GroupSim {
+            time: match rng.next_below(4) {
+                0 => 0.0,
+                1 => rng.next_below(1 << 20) as f64 / 1024.0,
+                2 => rng.next_below(u64::MAX >> 12) as f64,
+                _ => f64::from_bits(0x0010_0000_0000_0000 | rng.next_below(1 << 30)),
+            },
+            traffic: Traffic {
+                gbuf_to_lbuf: rng.next_u64(),
+                obuf_to_gbuf: rng.next_u64(),
+                dram_read: rng.next_u64(),
+                dram_write: rng.next_u64(),
+                overcore: rng.next_u64(),
+            },
+            busy_macs: rng.next_u64(),
+            waves: [
+                rng.next_u64(),
+                rng.next_u64(),
+                rng.next_u64(),
+                rng.next_u64(),
+                rng.next_u64(),
+            ],
+        },
+        |_| Vec::new(),
+        |g| {
+            let bytes = encode_group_sim(g, SIM_VERSION);
+            let decoded = decode_group_sim(&bytes, SIM_VERSION)
+                .map_err(|e| format!("decode failed: {e}"))?;
+            group_identical(&decoded, g)
+        },
+    );
+}
+
+/// Group-entry corruption is a clean miss that the write-behind repairs —
+/// exercised through the session so the whole lookup chain (gsim tier →
+/// group memory → group store → executor) is covered. Truncation, a
+/// checksum flip, and a version-byte bump all take the same path.
+#[test]
+fn corrupt_group_entries_are_clean_misses_and_get_repaired() {
+    let tampers: [(&str, fn(&std::path::Path)); 3] = [
+        ("truncate", |p| {
+            let b = std::fs::read(p).unwrap();
+            std::fs::write(p, &b[..b.len() / 2]).unwrap();
+        }),
+        ("checksum", |p| {
+            let mut b = std::fs::read(p).unwrap();
+            let last = b.len() - 1;
+            b[last] ^= 0x5A;
+            std::fs::write(p, &b).unwrap();
+        }),
+        ("version", |p| {
+            let mut b = std::fs::read(p).unwrap();
+            b[4] = b[4].wrapping_add(1);
+            std::fs::write(p, &b).unwrap();
+        }),
+    ];
+    for (tag, tamper) in tampers {
+        let dir = temp_store_dir(&format!("group-corrupt-{tag}"));
+        let cfg = preset("1G1F").unwrap();
+        let shape = GemmShape::new(500, 37, 120);
+        let opts = SimOptions::ideal();
+        let direct = simulate_gemm_shape(&cfg, shape, Phase::Forward, &opts);
+        let gemm_path = |store: &SimStore| {
+            store.entry_path(SimSession::fingerprint(&cfg, shape, Phase::Forward, &opts))
+        };
+        // 1G1F is single-group: the one group's slice is the whole shape.
+        let group_path = |store: &SimStore| {
+            store.group_entry_path(SimSession::fingerprint_group(
+                &cfg,
+                shape,
+                false,
+                &PlanParams::HEURISTIC,
+                &opts,
+            ))
+        };
+
+        let first = SimSession::with_store(SimStore::open(&dir).unwrap());
+        first.simulate(&cfg, shape, Phase::Forward, &opts);
+        let gpath = group_path(first.store().unwrap());
+        assert!(gpath.is_file(), "{tag}: group entry must exist at {}", gpath.display());
+        // Remove the whole-GEMM entry so the next session must compose,
+        // then corrupt the group entry it will reach for.
+        std::fs::remove_file(gemm_path(first.store().unwrap())).unwrap();
+        tamper(&gpath);
+
+        let second = SimSession::with_store(SimStore::open(&dir).unwrap());
+        let got = second.simulate(&cfg, shape, Phase::Forward, &opts);
+        bit_identical(&got, &direct).unwrap_or_else(|e| panic!("{tag}: {e}"));
+        let st = second.stats();
+        assert_eq!(
+            (st.group_store_hits, st.group_store_misses, st.group_store_writes),
+            (0, 1, 1),
+            "{tag}: {st:?}"
+        );
+        assert_eq!(st.group_sims(), 1, "{tag}: corrupt entry re-executes: {st:?}");
+
+        // Repaired: a third session (gsim entry removed again) composes
+        // entirely from the healed group entry.
+        std::fs::remove_file(gemm_path(second.store().unwrap())).unwrap();
+        let third = SimSession::with_store(SimStore::open(&dir).unwrap());
+        let healed = third.simulate(&cfg, shape, Phase::Forward, &opts);
+        bit_identical(&healed, &direct).unwrap_or_else(|e| panic!("{tag}: {e}"));
+        let st = third.stats();
+        assert_eq!((st.group_store_hits, st.group_sims()), (1, 0), "{tag}: {st:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
 }
 
 /// Shared setup for the corruption tests: a store-backed session simulates
@@ -261,15 +416,22 @@ fn racing_sessions_share_a_cache_dir_without_torn_entries() {
         bit_identical(&on_disk, &simulate_gemm_shape(&cfg, *shape, *phase, opts)).unwrap();
     }
     assert_eq!(verify.entry_count(), keys.len(), "exactly one entry per key");
+    // Every group entry the racing composes persisted must decode cleanly
+    // too (no torn group writes).
+    assert!(verify.group_entry_count() > 0, "composes must have persisted group entries");
     // Atomicity left no litter: every file under the store is a complete
-    // `.gsim` entry — a leaked `.tmp-*` from a failed rename shows up here.
+    // `.gsim` or `.ggrp` entry — a leaked `.tmp-*` from a failed rename
+    // shows up here.
     let stray: Vec<_> = std::fs::read_dir(&dir)
         .unwrap()
         .flatten()
         .filter_map(|shard| std::fs::read_dir(shard.path()).ok())
         .flat_map(|files| files.flatten())
         .map(|f| f.path())
-        .filter(|p| p.extension() != Some(std::ffi::OsStr::new("gsim")))
+        .filter(|p| {
+            p.extension() != Some(std::ffi::OsStr::new("gsim"))
+                && p.extension() != Some(std::ffi::OsStr::new("ggrp"))
+        })
         .collect();
     assert!(stray.is_empty(), "stray non-entry files: {stray:?}");
     let _ = std::fs::remove_dir_all(&dir);
