@@ -1,7 +1,7 @@
 # Convenience targets. The rust build needs no artifacts; `artifacts` is
 # only for the optional PJRT end-to-end path (DESIGN.md §6).
 
-.PHONY: artifacts test rust-test py-test bench-smoke store-smoke plan-smoke group-smoke
+.PHONY: artifacts test rust-test py-test bench-smoke store-smoke plan-smoke group-smoke serve-smoke
 
 # AOT-lower the L2 model + L1 kernel to HLO text (python runs once, at
 # build time; see python/compile/aot.py).
@@ -62,5 +62,29 @@ group-smoke:
 	 gsims=$$(sed -n 's/.*group_sims=\([0-9]*\).*/\1/p' /tmp/flexsa-group-smoke/warm.log | tail -n 1); \
 	 echo "sweep config: group_hits=$$hits group_sims=$$gsims"; \
 	 test -n "$$hits" && test "$$hits" -gt 0 && test -n "$$gsims" && test "$$gsims" -eq 0
+
+# Local mirror of CI's serve smoke (DESIGN.md §14): a daemon on a temp
+# unix socket answers the same 4G1F GEMM twice; the second reply must be
+# served entirely from the warm session (request stats: hits>0, sims=0),
+# and a `shutdown` request must drain cleanly (daemon exit 0).
+serve-smoke:
+	rm -rf /tmp/flexsa-serve-smoke
+	mkdir -p /tmp/flexsa-serve-smoke
+	cd rust && cargo build --release --quiet
+	@sock=/tmp/flexsa-serve-smoke/daemon.sock; \
+	 req='{"type":"simulate","m":4096,"n":512,"k":1024,"config":"4G1F"}'; \
+	 bin=rust/target/release/flexsa; \
+	 FLEXSA_BENCH_SMOKE=1 $$bin serve --socket $$sock --cache-dir /tmp/flexsa-serve-smoke/store --quiet 2>/tmp/flexsa-serve-smoke/serve.log & pid=$$!; \
+	 for i in $$(seq 1 100); do if [ -S $$sock ]; then break; fi; sleep 0.1; done; \
+	 if ! [ -S $$sock ]; then echo "daemon socket never appeared"; kill $$pid 2>/dev/null; exit 1; fi; \
+	 $$bin query --socket $$sock "$$req" >/dev/null || { kill $$pid 2>/dev/null; exit 1; }; \
+	 out=$$($$bin query --socket $$sock "$$req") || { kill $$pid 2>/dev/null; exit 1; }; \
+	 hits=$$(printf '%s\n' "$$out" | sed -n 's/.*"request":{"hits":\([0-9]*\).*/\1/p'); \
+	 sims=$$(printf '%s\n' "$$out" | sed -n 's/.*"request":{.*"sims":\([0-9]*\).*/\1/p'); \
+	 echo "warm query: hits=$$hits sims=$$sims"; \
+	 $$bin query --socket $$sock '{"type":"shutdown"}' >/dev/null || { kill $$pid 2>/dev/null; exit 1; }; \
+	 rc=1; wait $$pid && rc=0; \
+	 echo "daemon exit rc=$$rc"; \
+	 test -n "$$hits" && test "$$hits" -gt 0 && test -n "$$sims" && test "$$sims" -eq 0 && test "$$rc" -eq 0
 
 test: rust-test py-test

@@ -7,7 +7,7 @@ use std::collections::HashMap;
 /// Flags that never take a value, so a following token stays positional
 /// (`flexsa simulate --no-cache 512 256 128` keeps three positionals).
 /// Flags not listed here greedily consume the next non-`--` token.
-const BOOLEAN_FLAGS: &[&str] = &["ideal", "no-cache", "no-store", "exhaustive", "help"];
+const BOOLEAN_FLAGS: &[&str] = &["ideal", "no-cache", "no-store", "exhaustive", "help", "quiet"];
 
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]

@@ -11,7 +11,8 @@ mod service;
 mod workloads;
 
 pub use service::{
-    BatchPolicy, Request, Response, ServiceStats, SimService, DEFAULT_SESSION_CAPACITY,
+    BatchPolicy, DrainReport, Request, Response, ServiceStats, SimService, Submitter,
+    DEFAULT_SESSION_CAPACITY,
 };
 pub use workloads::{paper_workloads, point_weights, ScheduleKind, Workload};
 

@@ -75,9 +75,109 @@ impl Default for BatchPolicy {
 pub struct SimService {
     tx: Option<Sender<Request>>,
     rx: Receiver<Response>,
-    next_id: AtomicU64,
+    next_id: Arc<AtomicU64>,
     handle: Option<std::thread::JoinHandle<ServiceStats>>,
     session: Arc<SimSession>,
+}
+
+/// Detached request intake for a [`SimService`], cloneable across
+/// threads (`std::sync::mpsc::Sender` is `Sync` since Rust 1.72).
+///
+/// Splitting the intake from the service handle lets one thread own the
+/// response side ([`SimService::recv`] / [`SimService::shutdown`]) while
+/// any number of others submit — the serve daemon's shape. When every
+/// clone is dropped the leader runs down exactly as if the service handle
+/// had released its sender.
+#[derive(Clone)]
+pub struct Submitter {
+    tx: Sender<Request>,
+    next_id: Arc<AtomicU64>,
+}
+
+impl Submitter {
+    /// Reserve a request id *without* submitting, so a caller can register
+    /// the id with its response-routing table before the service can
+    /// possibly answer (closing the route/submit race), then submit via
+    /// [`Self::submit_allocated`].
+    pub fn allocate(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Submit a request under a previously [`Self::allocate`]d id. Returns
+    /// `false` if the service has already shut down (the request is
+    /// dropped and no response will arrive).
+    pub fn submit_allocated(
+        &self,
+        id: u64,
+        cfg: &Arc<AcceleratorConfig>,
+        shape: GemmShape,
+        phase: Phase,
+        opts: SimOptions,
+        plan: PlanParams,
+    ) -> bool {
+        self.tx
+            .send(Request { id, cfg: Arc::clone(cfg), shape, phase, opts, plan })
+            .is_ok()
+    }
+
+    /// Allocate-and-submit under an explicit compilation plan; returns the
+    /// request id, or `None` if the service has already shut down.
+    pub fn submit_plan(
+        &self,
+        cfg: &Arc<AcceleratorConfig>,
+        shape: GemmShape,
+        phase: Phase,
+        opts: SimOptions,
+        plan: PlanParams,
+    ) -> Option<u64> {
+        let id = self.allocate();
+        self.submit_allocated(id, cfg, shape, phase, opts, plan).then_some(id)
+    }
+
+    /// Allocate-and-submit with the heuristic compilation plan; returns
+    /// the request id, or `None` if the service has already shut down.
+    pub fn submit(
+        &self,
+        cfg: &Arc<AcceleratorConfig>,
+        shape: GemmShape,
+        phase: Phase,
+        opts: SimOptions,
+    ) -> Option<u64> {
+        self.submit_plan(cfg, shape, phase, opts, PlanParams::HEURISTIC)
+    }
+}
+
+/// What a graceful drain accomplished: the shutdown contract of the serve
+/// daemon (DESIGN.md §14). Previously `shutdown` silently dropped store
+/// write failures; now they are surfaced here so a caller can tell a
+/// clean drain from one that lost write-behind entries.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DrainReport {
+    /// Responses computed and delivered (received by a client or drained
+    /// at shutdown) rather than dropped.
+    pub responses_flushed: u64,
+    /// Persistent-store writes (sim + plan + group records) that completed
+    /// over the service's lifetime — the write-behind that is durable.
+    pub store_writes_completed: u64,
+    /// Persistent-store writes that failed on I/O errors. Non-zero means
+    /// the disk tier is missing entries it should have (cache dir full or
+    /// unwritable); results remained correct.
+    pub store_writes_failed: u64,
+}
+
+impl DrainReport {
+    /// True when nothing was lost: every store write attempt landed.
+    pub fn is_clean(&self) -> bool {
+        self.store_writes_failed == 0
+    }
+
+    /// One-line drain summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "flushed {} responses, store writes {} completed / {} failed",
+            self.responses_flushed, self.store_writes_completed, self.store_writes_failed
+        )
+    }
 }
 
 /// Counters the leader reports at shutdown.
@@ -121,6 +221,10 @@ pub struct ServiceStats {
     /// answered by the persistent store) — the planner's sim-count
     /// reduction criterion reads this.
     pub cache_group_sims: u64,
+    /// What the drain accomplished (response flushing, store write-behind
+    /// completion); all-zero for sessions without a store and no drained
+    /// responses.
+    pub drain: DrainReport,
 }
 
 impl ServiceStats {
@@ -182,7 +286,7 @@ impl SimService {
         SimService {
             tx: Some(req_tx),
             rx: resp_rx,
-            next_id: AtomicU64::new(1),
+            next_id: Arc::new(AtomicU64::new(1)),
             handle: Some(handle),
             session,
         }
@@ -191,6 +295,17 @@ impl SimService {
     /// The session cache the workers simulate through.
     pub fn session(&self) -> &Arc<SimSession> {
         &self.session
+    }
+
+    /// Detach the request intake as a cloneable [`Submitter`], leaving
+    /// this handle response-only ([`Self::recv`] / [`Self::shutdown`]).
+    /// The leader now runs down when the last `Submitter` clone drops;
+    /// calling [`Self::submit`] on the service afterwards panics.
+    pub fn submitter(&mut self) -> Submitter {
+        Submitter {
+            tx: self.tx.take().expect("intake already detached"),
+            next_id: Arc::clone(&self.next_id),
+        }
     }
 
     /// Submit a request (heuristic compilation plan); returns its id.
@@ -249,6 +364,12 @@ impl SimService {
         stats.cache_group_hits = cache.group_hits;
         stats.cache_group_misses = cache.group_misses;
         stats.cache_group_sims = cache.group_sims();
+        stats.drain.responses_flushed = stats.drained;
+        if let Some(store) = self.session.store() {
+            let st = store.stats();
+            stats.drain.store_writes_completed = st.writes + st.plan_writes + st.group_writes;
+            stats.drain.store_writes_failed = st.write_errors;
+        }
         stats
     }
 }
@@ -567,6 +688,82 @@ mod tests {
         let stats = svc.shutdown();
         assert_eq!(stats.cache_evictions, 0);
         assert_eq!(stats.cache_entries, 1);
+    }
+
+    #[test]
+    fn detached_submitter_drives_the_service() {
+        let mut svc = SimService::start(2, BatchPolicy::default());
+        let sub = svc.submitter();
+        let cfg = Arc::new(preset("1G1C").unwrap());
+
+        // Pre-allocated ids submit and answer like plain submissions.
+        let id = sub.allocate();
+        assert!(sub.submit_allocated(
+            id,
+            &cfg,
+            GemmShape::new(128, 32, 64),
+            Phase::Forward,
+            SimOptions::ideal(),
+            PlanParams::HEURISTIC,
+        ));
+        let sub2 = sub.clone();
+        let id2 = sub2
+            .submit(&cfg, GemmShape::new(256, 32, 64), Phase::Forward, SimOptions::ideal())
+            .unwrap();
+        assert_ne!(id, id2);
+        let mut got = vec![svc.recv().unwrap().id, svc.recv().unwrap().id];
+        got.sort_unstable();
+        let mut want = vec![id, id2];
+        want.sort_unstable();
+        assert_eq!(got, want);
+
+        // Dropping every submitter clone runs the leader down: recv ends.
+        drop(sub);
+        drop(sub2);
+        assert!(svc.recv().is_none());
+        let stats = svc.shutdown();
+        assert_eq!(stats.requests, 2);
+    }
+
+    #[test]
+    fn submit_after_service_death_reports_failure() {
+        let mut svc = SimService::start(1, BatchPolicy::default());
+        let sub = svc.submitter();
+        let cfg = Arc::new(preset("1G1C").unwrap());
+        drop(svc); // whole service gone; intake must fail soft
+        let shape = GemmShape::new(64, 64, 64);
+        assert!(sub.submit(&cfg, shape, Phase::Forward, SimOptions::ideal()).is_none());
+        let id = sub.allocate();
+        assert!(!sub.submit_allocated(
+            id,
+            &cfg,
+            shape,
+            Phase::Forward,
+            SimOptions::ideal(),
+            PlanParams::HEURISTIC
+        ));
+    }
+
+    #[test]
+    fn drain_report_counts_flushed_responses_and_store_writes() {
+        use crate::session::SimStore;
+        let dir = crate::proptest::scratch_dir("service-drain-report");
+        let session = Arc::new(SimSession::with_store(SimStore::open(&dir).unwrap()));
+        let svc = SimService::start_with_session(1, BatchPolicy::default(), session);
+        let cfg = Arc::new(preset("1G1C").unwrap());
+        for i in 0..3usize {
+            svc.submit(&cfg, GemmShape::new(100 + i, 32, 48), Phase::Forward, SimOptions::ideal());
+        }
+        svc.recv().unwrap(); // receive one, abandon two
+        let stats = svc.shutdown();
+        assert_eq!(stats.drained, 2, "{stats:?}");
+        assert_eq!(stats.drain.responses_flushed, 2, "{:?}", stats.drain);
+        // One sim record per distinct GEMM, plus its group-tier records.
+        assert!(stats.drain.store_writes_completed >= 3, "{:?}", stats.drain);
+        assert_eq!(stats.drain.store_writes_failed, 0);
+        assert!(stats.drain.is_clean());
+        assert!(stats.drain.summary().contains("/ 0 failed"), "{}", stats.drain.summary());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

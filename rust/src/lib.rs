@@ -14,8 +14,10 @@
 //!   prune-while-train driver ([`trainer`]), the threaded sweep
 //!   coordinator ([`coordinator`]), the shared content-addressed
 //!   simulation cache every compile→simulate path routes through
-//!   ([`session`]), and the search-based plan optimizer that quantifies
-//!   the Algorithm-1 heuristic's optimality gap ([`planner`]).
+//!   ([`session`]), the search-based plan optimizer that quantifies
+//!   the Algorithm-1 heuristic's optimality gap ([`planner`]), and the
+//!   long-running simulation daemon serving the warm session over a
+//!   socket ([`serve`]).
 //! - **L2/L1 (python, build-time only)** — a JAX PruneTrain model whose
 //!   convolutions call a Pallas systolic-wave GEMM kernel; AOT-lowered to
 //!   HLO text consumed by [`runtime`]. Python never runs on the request
@@ -41,6 +43,7 @@ pub mod proptest;
 pub mod pruning;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod session;
 pub mod sim;
 pub mod trainer;

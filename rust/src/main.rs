@@ -45,6 +45,13 @@ cache maintenance (ROADMAP store GC):
   cache gc [--max-mib N] [--cache-dir DIR]   evict oldest entries to fit
                                              the budget (default 512 MiB)
 
+serving (long-running daemon over the warm session; DESIGN.md §14):
+  serve --socket PATH | --listen ADDR:PORT   newline-delimited JSON daemon
+        [--read-timeout-ms N] [--max-frame N] (simulate/plan/report/stats/
+        [--quiet]                             ping/shutdown requests)
+  query --socket PATH | --connect ADDR:PORT  send request lines (args or
+        [REQUEST_JSON ...]                    stdin), print response lines
+
 tools:
   configs                                    list presets
   simulate M N K [--config NAME] [--phase fwd|dgrad|wgrad] [--ideal]
@@ -143,7 +150,7 @@ fn emit(report: &fig::FigureReport, csv_dir: Option<&str>) -> Result<(), String>
 /// runs without the disk tier.
 const SIMULATING_COMMANDS: &[&str] = &[
     "fig3", "fig5", "fig10", "fig11", "fig12", "fig13", "e2e-layers", "ablate", "report",
-    "simulate", "plan",
+    "simulate", "plan", "serve",
 ];
 
 /// One session per CLI invocation: every figure harness and sweep below
@@ -346,6 +353,103 @@ fn run_plan(args: &Args, threads: usize, session: &Arc<SimSession>) -> Result<()
     Ok(())
 }
 
+/// Bind the daemon's Unix socket (platform helper so `run_serve` stays
+/// portable).
+#[cfg(unix)]
+fn unix_listener(path: &str) -> Result<flexsa::serve::Listener, String> {
+    flexsa::serve::Listener::unix(path).map_err(|e| format!("socket {path}: {e}"))
+}
+
+#[cfg(not(unix))]
+fn unix_listener(_path: &str) -> Result<flexsa::serve::Listener, String> {
+    Err("unix sockets are unsupported on this platform; use --listen ADDR:PORT".into())
+}
+
+/// `flexsa serve`: run the long-running simulation daemon (DESIGN.md §14)
+/// over this invocation's (store-backed) session until shutdown/SIGTERM.
+fn run_serve(args: &Args, threads: usize, session: &Arc<SimSession>) -> Result<(), String> {
+    use flexsa::serve::{self, ServeOptions};
+    let listener = if let Some(addr) = args.get("listen") {
+        serve::Listener::tcp(addr).map_err(|e| format!("listen {addr}: {e}"))?
+    } else if let Some(path) = args.get("socket") {
+        unix_listener(path)?
+    } else {
+        return Err("serve: pass --socket PATH or --listen ADDR:PORT".into());
+    };
+    let opts = ServeOptions {
+        workers: threads,
+        read_timeout: std::time::Duration::from_millis(args.get_u64("read-timeout-ms", 30_000)?),
+        max_frame: args.get_usize("max-frame", flexsa::serve::protocol::DEFAULT_MAX_FRAME)?,
+        quiet: args.has("quiet"),
+        handle_signals: true,
+        flush_throttle: None,
+    };
+    let outcome = serve::run(listener, Arc::clone(session), opts)?;
+    let drain = outcome.service.drain;
+    eprintln!("# serve drain: {}", drain.summary());
+    if !drain.is_clean() {
+        return Err(format!("store write-behind incomplete: {}", drain.summary()));
+    }
+    Ok(())
+}
+
+/// Open a client connection for `flexsa query` as clonable read/write
+/// halves.
+fn query_connect(args: &Args) -> Result<(Box<dyn std::io::Write>, Box<dyn std::io::Read>), String> {
+    if let Some(addr) = args.get("connect") {
+        let s = std::net::TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+        let r = s.try_clone().map_err(|e| e.to_string())?;
+        return Ok((Box::new(s), Box::new(r)));
+    }
+    #[cfg(unix)]
+    if let Some(path) = args.get("socket") {
+        let s = std::os::unix::net::UnixStream::connect(path)
+            .map_err(|e| format!("socket {path}: {e}"))?;
+        let r = s.try_clone().map_err(|e| e.to_string())?;
+        return Ok((Box::new(s), Box::new(r)));
+    }
+    Err("query: pass --socket PATH or --connect ADDR:PORT".into())
+}
+
+/// `flexsa query`: send request lines (positional args, else stdin) to a
+/// running daemon, echo each response line to stdout. Exits nonzero if any
+/// response reports `ok:false`, so smoke scripts can assert on it.
+fn run_query(args: &Args) -> Result<(), String> {
+    use std::io::{BufRead, BufReader, Write};
+    let (mut w, r) = query_connect(args)?;
+    let mut reader = BufReader::new(r);
+    let requests: Vec<String> = if args.positional.is_empty() {
+        std::io::stdin().lock().lines().collect::<Result<_, _>>().map_err(|e| e.to_string())?
+    } else {
+        args.positional.clone()
+    };
+    let mut failures = 0u64;
+    for req in &requests {
+        w.write_all(req.as_bytes())
+            .and_then(|()| w.write_all(b"\n"))
+            .and_then(|()| w.flush())
+            .map_err(|e| format!("send: {e}"))?;
+        let mut resp = String::new();
+        let n = reader.read_line(&mut resp).map_err(|e| format!("recv: {e}"))?;
+        if n == 0 {
+            return Err("server closed the connection".into());
+        }
+        let resp = resp.trim_end();
+        println!("{resp}");
+        let ok = flexsa::serve::protocol::Json::parse(resp)
+            .ok()
+            .and_then(|j| j.get("ok").and_then(|v| v.as_bool()))
+            .unwrap_or(false);
+        if !ok {
+            failures += 1;
+        }
+    }
+    if failures > 0 {
+        return Err(format!("{failures} of {} request(s) failed", requests.len()));
+    }
+    Ok(())
+}
+
 /// `flexsa cache stats` / `flexsa cache gc`: persistent-store maintenance.
 fn run_cache(args: &Args) -> Result<(), String> {
     // Same resolution chain as the simulating commands' sessions, so
@@ -526,6 +630,13 @@ fn run(args: &Args) -> Result<(), String> {
             run_plan(args, threads, &session)?;
             print_cache_line(&session);
             print_plan_store_line(&session);
+        }
+        "serve" => {
+            run_serve(args, threads, &session)?;
+            print_cache_line(&session);
+        }
+        "query" => {
+            run_query(args)?;
         }
         "cache" => {
             run_cache(args)?;

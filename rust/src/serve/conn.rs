@@ -1,0 +1,336 @@
+//! Per-connection handling: newline framing with size limits and timeout
+//! ticks, and the request/response loop over one client socket.
+//!
+//! Robustness invariants (pinned by `tests/prop_serve.rs`):
+//! - a malformed or schema-violating frame produces one `ok:false`
+//!   envelope and the connection keeps working;
+//! - a frame longer than the limit is skipped (never buffered whole) and
+//!   answered with an `oversized` error;
+//! - a client that stalls mid-frame is disconnected after the idle
+//!   timeout without disturbing other connections.
+
+use super::protocol::{
+    encode_envelope, parse_request, Envelope, ErrorKind, ServeRequest, StatsBlock, WireError,
+};
+use super::Shared;
+use std::io::{ErrorKind as IoKind, Read, Write};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Socket read-timeout tick: reads wake this often so the connection can
+/// notice daemon drain and accumulate idle time toward the configured
+/// read timeout.
+pub(crate) const READ_TICK: Duration = Duration::from_millis(100);
+
+/// One framing event from a [`FrameReader`].
+pub(crate) enum FrameEvent {
+    /// A complete line (without the trailing newline / carriage return).
+    Frame(Vec<u8>),
+    /// A line exceeded the size limit; its bytes were discarded up to the
+    /// next newline and reading can continue.
+    Oversized,
+    /// The read timed out (one tick; the caller accumulates idle time).
+    TimedOut,
+    /// Peer closed the connection (any partial trailing frame is dropped).
+    Eof,
+    /// Unrecoverable I/O error.
+    Err(std::io::Error),
+}
+
+/// Newline framing over a raw stream with a hard per-frame size cap: an
+/// over-long line is discarded as it arrives (O(1) memory) instead of
+/// buffering attacker-controlled bytes.
+pub(crate) struct FrameReader<S> {
+    stream: S,
+    buf: Vec<u8>,
+    max_frame: usize,
+}
+
+impl<S: Read> FrameReader<S> {
+    pub(crate) fn new(stream: S, max_frame: usize) -> FrameReader<S> {
+        FrameReader { stream, buf: Vec::new(), max_frame }
+    }
+
+    /// The underlying stream, for writing responses between frames.
+    pub(crate) fn stream_mut(&mut self) -> &mut S {
+        &mut self.stream
+    }
+
+    /// Read until the next framing event.
+    pub(crate) fn next_frame(&mut self) -> FrameEvent {
+        loop {
+            if let Some(nl) = self.buf.iter().position(|&b| b == b'\n') {
+                let mut line: Vec<u8> = self.buf.drain(..=nl).collect();
+                line.pop(); // the newline
+                if line.last() == Some(&b'\r') {
+                    line.pop();
+                }
+                // The limit applies even when the whole line (newline
+                // included) arrived in one read: over-long is over-long.
+                if line.len() > self.max_frame {
+                    return FrameEvent::Oversized;
+                }
+                return FrameEvent::Frame(line);
+            }
+            if self.buf.len() > self.max_frame {
+                self.buf.clear();
+                return self.skip_to_newline();
+            }
+            match self.fill() {
+                Ok(0) => return FrameEvent::Eof,
+                Ok(_) => {}
+                Err(e) if is_timeout(&e) => return FrameEvent::TimedOut,
+                Err(e) if e.kind() == IoKind::Interrupted => {}
+                Err(e) => return FrameEvent::Err(e),
+            }
+        }
+    }
+
+    fn fill(&mut self) -> std::io::Result<usize> {
+        let mut chunk = [0u8; 4096];
+        let n = self.stream.read(&mut chunk)?;
+        self.buf.extend_from_slice(&chunk[..n]);
+        Ok(n)
+    }
+
+    /// Discard bytes until a newline; buffered follow-on bytes are kept.
+    fn skip_to_newline(&mut self) -> FrameEvent {
+        loop {
+            let mut chunk = [0u8; 4096];
+            match self.stream.read(&mut chunk) {
+                Ok(0) => return FrameEvent::Eof,
+                Ok(n) => {
+                    if let Some(nl) = chunk[..n].iter().position(|&b| b == b'\n') {
+                        self.buf.extend_from_slice(&chunk[nl + 1..n]);
+                        return FrameEvent::Oversized;
+                    }
+                }
+                // A stalling client mid-skip still counts against the idle
+                // timeout: report the oversized frame now; the remaining
+                // garbage (up to the next newline) resumes discarding on
+                // the next call via the empty buffer + skip state... but a
+                // simple policy is stronger: treat a timeout during skip
+                // as a dead client.
+                Err(e) if is_timeout(&e) => return FrameEvent::Eof,
+                Err(e) if e.kind() == IoKind::Interrupted => {}
+                Err(e) => return FrameEvent::Err(e),
+            }
+        }
+    }
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), IoKind::WouldBlock | IoKind::TimedOut)
+}
+
+/// Per-connection counters echoed in every envelope's `client` block.
+#[derive(Default)]
+struct ClientCounters {
+    requests: u64,
+    errors: u64,
+}
+
+/// Serve one accepted connection until EOF, idle timeout, error, or
+/// daemon drain. Never panics on client input.
+pub(crate) fn handle_conn<S: Read + Write>(stream: S, shared: &Arc<Shared>) {
+    let mut reader = FrameReader::new(stream, shared.opts.max_frame);
+    let mut client = ClientCounters::default();
+    let mut idle = Duration::ZERO;
+    loop {
+        if shared.draining() {
+            return;
+        }
+        match reader.next_frame() {
+            FrameEvent::TimedOut => {
+                idle += READ_TICK;
+                if idle >= shared.opts.read_timeout {
+                    shared.log("connection idle timeout");
+                    return;
+                }
+            }
+            FrameEvent::Eof => return,
+            FrameEvent::Err(e) => {
+                shared.log(&format!("connection read error: {e}"));
+                return;
+            }
+            FrameEvent::Oversized => {
+                idle = Duration::ZERO;
+                let err = WireError::new(
+                    ErrorKind::Oversized,
+                    format!("frame exceeds {} bytes", shared.opts.max_frame),
+                );
+                if respond(&mut reader, shared, &mut client, None, Err(err), false, None).is_err()
+                {
+                    return;
+                }
+            }
+            FrameEvent::Frame(bytes) => {
+                idle = Duration::ZERO;
+                if bytes.iter().all(|b| b.is_ascii_whitespace()) {
+                    continue; // blank keep-alive line
+                }
+                if process_frame(bytes, &mut reader, shared, &mut client).is_err() {
+                    return; // client went away mid-response
+                }
+            }
+        }
+    }
+}
+
+/// Parse, dispatch, and answer one frame. `Err` means the response could
+/// not be written (dead client) and the connection should be dropped.
+fn process_frame<S: Read + Write>(
+    bytes: Vec<u8>,
+    reader: &mut FrameReader<S>,
+    shared: &Arc<Shared>,
+    client: &mut ClientCounters,
+) -> std::io::Result<()> {
+    let parsed = String::from_utf8(bytes)
+        .map_err(|_| WireError::new(ErrorKind::Malformed, "frame is not valid UTF-8"))
+        .and_then(|line| parse_request(&line));
+    let (id, outcome, holds_slot, before) = match parsed {
+        Err(e) => (None, Err(e), false, None),
+        Ok(frame) => {
+            // Counter snapshot before dispatch: the envelope's `request`
+            // block is the delta across this request's work.
+            let before = shared.session.stats();
+            let (outcome, holds_slot) = shared.handle(&frame.req);
+            (frame.id, outcome, holds_slot, Some(before))
+        }
+    };
+    respond(reader, shared, client, id, outcome, holds_slot, before)
+}
+
+/// Build the envelope (stats trailer included), flush it, and settle the
+/// outstanding-work slot for simulation responses.
+#[allow(clippy::too_many_arguments)]
+fn respond<S: Read + Write>(
+    reader: &mut FrameReader<S>,
+    shared: &Arc<Shared>,
+    client: &mut ClientCounters,
+    id: Option<u64>,
+    body: Result<super::protocol::ServeResponse, WireError>,
+    holds_slot: bool,
+    before: Option<crate::session::SessionStats>,
+) -> std::io::Result<()> {
+    client.requests += 1;
+    shared.requests.fetch_add(1, Ordering::Relaxed);
+    if body.is_err() {
+        client.errors += 1;
+        shared.errors.fetch_add(1, Ordering::Relaxed);
+    }
+    let now = shared.session.stats();
+    let env = Envelope {
+        id,
+        body,
+        stats: super::protocol::EnvelopeStats {
+            client_requests: client.requests,
+            client_errors: client.errors,
+            global: StatsBlock::from_session(&now),
+            // Exact for serial clients; approximate under concurrency (the
+            // counters are whole-session; DESIGN.md §14).
+            request: before
+                .map(|b| StatsBlock::from_session(&now.delta(&b)))
+                .unwrap_or_default(),
+        },
+    };
+    if holds_slot {
+        // Test-only drain knob: widen the submit→flush window so the
+        // drain suite can deterministically catch responses in flight.
+        if let Some(delay) = shared.opts.flush_throttle {
+            std::thread::sleep(delay);
+        }
+    }
+    let line = encode_envelope(&env);
+    let out = reader.stream_mut();
+    let res = out.write_all(line.as_bytes()).and_then(|()| {
+        out.write_all(b"\n")?;
+        out.flush()
+    });
+    if holds_slot {
+        // The response is flushed (or the client is gone): either way this
+        // in-flight slot is settled for the drain accounting.
+        shared.outstanding.fetch_sub(1, Ordering::SeqCst);
+    }
+    res
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn frames(input: &[u8], max: usize) -> Vec<FrameEvent> {
+        let mut r = FrameReader::new(Cursor::new(input.to_vec()), max);
+        let mut out = Vec::new();
+        loop {
+            let ev = r.next_frame();
+            let eof = matches!(ev, FrameEvent::Eof | FrameEvent::Err(_));
+            out.push(ev);
+            if eof {
+                return out;
+            }
+        }
+    }
+
+    #[test]
+    fn splits_lines_and_strips_cr() {
+        let evs = frames(b"abc\r\ndef\n", 100);
+        match (&evs[0], &evs[1], &evs[2]) {
+            (FrameEvent::Frame(a), FrameEvent::Frame(b), FrameEvent::Eof) => {
+                assert_eq!(a, b"abc");
+                assert_eq!(b, b"def");
+            }
+            _ => panic!("unexpected events"),
+        }
+    }
+
+    #[test]
+    fn partial_trailing_frame_is_dropped() {
+        let evs = frames(b"whole\npartial", 100);
+        assert!(matches!(&evs[0], FrameEvent::Frame(f) if f == b"whole"));
+        assert!(matches!(evs[1], FrameEvent::Eof));
+    }
+
+    #[test]
+    fn oversized_line_is_skipped_and_reading_continues() {
+        let mut input = vec![b'x'; 10_000];
+        input.extend_from_slice(b"\nok\n");
+        let evs = frames(&input, 64);
+        assert!(matches!(evs[0], FrameEvent::Oversized));
+        assert!(matches!(&evs[1], FrameEvent::Frame(f) if f == b"ok"));
+        assert!(matches!(evs[2], FrameEvent::Eof));
+    }
+
+    #[test]
+    fn oversized_detection_is_constant_memory() {
+        // 8 MiB of garbage against a 4 KiB limit: the reader's buffer must
+        // never grow past limit + one read chunk.
+        let mut input = vec![b'y'; 8 << 20];
+        input.extend_from_slice(b"\nping\n");
+        let mut r = FrameReader::new(Cursor::new(input), 4096);
+        assert!(matches!(r.next_frame(), FrameEvent::Oversized));
+        assert!(r.buf.capacity() <= 4096 + 2 * 4096 + 64, "buffered {}", r.buf.capacity());
+        assert!(matches!(r.next_frame(), FrameEvent::Frame(f) if f == b"ping"));
+    }
+
+    #[test]
+    fn oversized_line_already_buffered_with_newline_is_still_rejected() {
+        // limit+1 bytes arriving in ONE read together with the newline and
+        // a follow-on frame: the limit must still apply.
+        let mut input = vec![b'w'; 65];
+        input.extend_from_slice(b"\nok\n");
+        let evs = frames(&input, 64);
+        assert!(matches!(evs[0], FrameEvent::Oversized));
+        assert!(matches!(&evs[1], FrameEvent::Frame(f) if f == b"ok"));
+    }
+
+    #[test]
+    fn exact_limit_line_is_accepted() {
+        let mut input = vec![b'z'; 64];
+        input.push(b'\n');
+        let evs = frames(&input, 64);
+        assert!(matches!(&evs[0], FrameEvent::Frame(f) if f.len() == 64));
+    }
+}

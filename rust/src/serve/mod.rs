@@ -1,0 +1,607 @@
+//! `flexsa serve` — a long-running simulation daemon over the warm
+//! session (DESIGN.md §14).
+//!
+//! The daemon listens on a Unix socket (or TCP) and speaks the
+//! newline-delimited JSON protocol in [`protocol`]. Every connection gets
+//! its own thread; `simulate` requests are routed through one shared
+//! [`SimService`] — so concurrent clients batch against the leader's
+//! deadline and repeat queries are answered from the warm [`SimSession`]
+//! (and its persistent store) with `sims=0` — while `plan` requests run
+//! the search-based [`Planner`] over the same session. A single router
+//! thread fans service responses back out to the waiting connections.
+//!
+//! Shutdown (a `shutdown` request, SIGTERM, or SIGINT) is a graceful
+//! drain: in-flight simulations complete and their responses are flushed
+//! to clients, the store write-behind settles, and the final
+//! [`ServiceStats`] carries a [`DrainReport`] saying exactly what was
+//! flushed and whether any store writes failed.
+
+pub mod protocol;
+
+mod conn;
+
+use crate::compiler::PlanParams;
+use crate::config::{parse_config, preset, AcceleratorConfig};
+use crate::coordinator::{BatchPolicy, ServiceStats, SimService, Submitter};
+use crate::planner::Planner;
+use crate::pruning::Strength;
+use crate::report::figures as fig;
+use crate::session::SimSession;
+use crate::sim::GemmSim;
+use protocol::{ConfigRef, ErrorKind, ServeRequest, ServeResponse, WireError, DEFAULT_MAX_FRAME};
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::TcpListener;
+#[cfg(unix)]
+use std::os::unix::net::UnixListener;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// How often the accept loop wakes to check the drain / signal flags.
+const ACCEPT_TICK: Duration = Duration::from_millis(25);
+
+/// Daemon tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeOptions {
+    /// Simulation worker threads behind the service leader.
+    pub workers: usize,
+    /// Idle limit per connection: a client that sends nothing for this
+    /// long is disconnected.
+    pub read_timeout: Duration,
+    /// Per-frame size limit in bytes (larger frames are answered with an
+    /// `oversized` error and skipped).
+    pub max_frame: usize,
+    /// Suppress per-connection stderr log lines.
+    pub quiet: bool,
+    /// Install SIGTERM/SIGINT handlers that begin a graceful drain (the
+    /// CLI sets this; in-process tests must not).
+    pub handle_signals: bool,
+    /// Test-only: artificially delay each simulation response flush, so
+    /// drain tests can deterministically observe in-flight work.
+    pub flush_throttle: Option<Duration>,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self {
+            workers: crate::coordinator::default_threads(),
+            read_timeout: Duration::from_secs(30),
+            max_frame: DEFAULT_MAX_FRAME,
+            quiet: false,
+            handle_signals: false,
+            flush_throttle: None,
+        }
+    }
+}
+
+/// The daemon's listening endpoint.
+pub enum Listener {
+    /// A Unix-domain socket; the path is unlinked when the listener drops.
+    #[cfg(unix)]
+    Unix {
+        /// The bound listener (non-blocking).
+        listener: UnixListener,
+        /// Socket path, for cleanup and logging.
+        path: PathBuf,
+    },
+    /// A TCP socket.
+    Tcp {
+        /// The bound listener (non-blocking).
+        listener: TcpListener,
+        /// Bound address, for logging.
+        addr: std::net::SocketAddr,
+    },
+}
+
+impl Listener {
+    /// Bind a Unix-domain socket at `path` (must not already exist).
+    #[cfg(unix)]
+    pub fn unix(path: impl Into<PathBuf>) -> io::Result<Listener> {
+        let path = path.into();
+        let listener = UnixListener::bind(&path)?;
+        listener.set_nonblocking(true)?;
+        Ok(Listener::Unix { listener, path })
+    }
+
+    /// Bind a TCP socket at `addr` (e.g. `127.0.0.1:7411`).
+    pub fn tcp(addr: &str) -> io::Result<Listener> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        Ok(Listener::Tcp { listener, addr })
+    }
+
+    /// Human-readable endpoint description.
+    pub fn describe(&self) -> String {
+        match self {
+            #[cfg(unix)]
+            Listener::Unix { path, .. } => format!("unix:{}", path.display()),
+            Listener::Tcp { addr, .. } => format!("tcp:{addr}"),
+        }
+    }
+
+    /// Accept one pending connection, `None` if none is waiting.
+    fn accept(&self) -> io::Result<Option<Stream>> {
+        match self {
+            #[cfg(unix)]
+            Listener::Unix { listener, .. } => match listener.accept() {
+                Ok((s, _)) => {
+                    s.set_nonblocking(false)?;
+                    s.set_read_timeout(Some(conn::READ_TICK))?;
+                    Ok(Some(Stream::Unix(s)))
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => Ok(None),
+                Err(e) => Err(e),
+            },
+            Listener::Tcp { listener, .. } => match listener.accept() {
+                Ok((s, _)) => {
+                    s.set_nonblocking(false)?;
+                    s.set_read_timeout(Some(conn::READ_TICK))?;
+                    let _ = s.set_nodelay(true);
+                    Ok(Some(Stream::Tcp(s)))
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => Ok(None),
+                Err(e) => Err(e),
+            },
+        }
+    }
+}
+
+impl Drop for Listener {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Listener::Unix { path, .. } = self {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+/// One accepted client connection.
+enum Stream {
+    #[cfg(unix)]
+    Unix(std::os::unix::net::UnixStream),
+    Tcp(std::net::TcpStream),
+}
+
+impl io::Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            #[cfg(unix)]
+            Stream::Unix(s) => s.read(buf),
+            Stream::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl io::Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            #[cfg(unix)]
+            Stream::Unix(s) => s.write(buf),
+            Stream::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            #[cfg(unix)]
+            Stream::Unix(s) => s.flush(),
+            Stream::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+/// State shared between the accept loop, connection threads, and the
+/// response router.
+pub(crate) struct Shared {
+    pub(crate) session: Arc<SimSession>,
+    /// Request intake; `None` once the drain has released it (new
+    /// simulation requests are then refused with `shutting_down`).
+    submitter: Mutex<Option<Submitter>>,
+    /// In-flight simulate requests: service id → the connection waiting.
+    waiters: Mutex<HashMap<u64, mpsc::Sender<Arc<GemmSim>>>>,
+    /// Simulate responses submitted but not yet flushed to their client.
+    pub(crate) outstanding: AtomicU64,
+    draining: AtomicBool,
+    /// `outstanding` at the moment the drain began (the responses the
+    /// drain then flushes rather than drops).
+    drain_inflight: AtomicU64,
+    pub(crate) connections: AtomicU64,
+    pub(crate) requests: AtomicU64,
+    pub(crate) errors: AtomicU64,
+    /// Preset configs already resolved, so repeat queries share one `Arc`
+    /// (the service dispatcher dedups config digests by pointer).
+    presets: Mutex<HashMap<String, Arc<AcceleratorConfig>>>,
+    pub(crate) opts: ServeOptions,
+}
+
+impl Shared {
+    pub(crate) fn draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    /// Flip into draining mode (idempotent); snapshots the in-flight count
+    /// the drain is responsible for flushing.
+    pub(crate) fn begin_drain(&self) -> u64 {
+        let inflight = self.outstanding.load(Ordering::SeqCst);
+        if !self.draining.swap(true, Ordering::SeqCst) {
+            self.drain_inflight.store(inflight, Ordering::SeqCst);
+        }
+        inflight
+    }
+
+    pub(crate) fn log(&self, msg: &str) {
+        if !self.opts.quiet {
+            eprintln!("# serve: {msg}");
+        }
+    }
+
+    fn resolve_config(&self, config: &ConfigRef) -> Result<Arc<AcceleratorConfig>, WireError> {
+        match config {
+            ConfigRef::Preset(name) => {
+                let mut cache = self.presets.lock().unwrap();
+                if let Some(cfg) = cache.get(name) {
+                    return Ok(Arc::clone(cfg));
+                }
+                let cfg = Arc::new(
+                    preset(name)
+                        .ok_or_else(|| WireError::invalid(format!("unknown preset `{name}`")))?,
+                );
+                cache.insert(name.clone(), Arc::clone(&cfg));
+                Ok(cfg)
+            }
+            ConfigRef::Inline(text) => {
+                parse_config(text).map(Arc::new).map_err(WireError::invalid)
+            }
+        }
+    }
+
+    /// Submit one GEMM through the shared service and wait for its result.
+    /// On success the caller owns an `outstanding` slot and must release
+    /// it once the response is flushed.
+    fn simulate(
+        &self,
+        cfg: &Arc<AcceleratorConfig>,
+        shape: crate::gemm::GemmShape,
+        phase: crate::gemm::Phase,
+        opts: crate::sim::SimOptions,
+    ) -> Result<Arc<GemmSim>, WireError> {
+        let refused = || WireError::new(ErrorKind::ShuttingDown, "daemon is draining");
+        let (tx, rx) = mpsc::channel();
+        {
+            let guard = self.submitter.lock().unwrap();
+            let Some(sub) = guard.as_ref() else {
+                return Err(refused());
+            };
+            let id = sub.allocate();
+            self.waiters.lock().unwrap().insert(id, tx);
+            self.outstanding.fetch_add(1, Ordering::SeqCst);
+            if !sub.submit_allocated(id, cfg, shape, phase, opts, PlanParams::HEURISTIC) {
+                self.waiters.lock().unwrap().remove(&id);
+                self.outstanding.fetch_sub(1, Ordering::SeqCst);
+                return Err(refused());
+            }
+        }
+        match rx.recv() {
+            Ok(sim) => Ok(sim),
+            Err(_) => {
+                // Router exited with our request unanswered (service died
+                // mid-drain); settle the slot here.
+                self.outstanding.fetch_sub(1, Ordering::SeqCst);
+                Err(refused())
+            }
+        }
+    }
+
+    /// Dispatch one parsed request. The `bool` is true when the `Ok`
+    /// response holds an `outstanding` slot the connection must release
+    /// after flushing.
+    pub(crate) fn handle(&self, req: &ServeRequest) -> (Result<ServeResponse, WireError>, bool) {
+        match req {
+            ServeRequest::Ping => (Ok(ServeResponse::Pong), false),
+            ServeRequest::Stats => (
+                Ok(ServeResponse::Stats {
+                    global: protocol::StatsBlock::from_session(&self.session.stats()),
+                    connections: self.connections.load(Ordering::Relaxed),
+                    requests: self.requests.load(Ordering::Relaxed),
+                    errors: self.errors.load(Ordering::Relaxed),
+                    outstanding: self.outstanding.load(Ordering::SeqCst),
+                }),
+                false,
+            ),
+            ServeRequest::Shutdown => {
+                let inflight = self.begin_drain();
+                self.log("shutdown requested; draining");
+                (Ok(ServeResponse::ShutdownAck { outstanding: inflight }), false)
+            }
+            ServeRequest::Simulate { shape, phase, memory, config } => {
+                if self.draining() {
+                    return (
+                        Err(WireError::new(ErrorKind::ShuttingDown, "daemon is draining")),
+                        false,
+                    );
+                }
+                let cfg = match self.resolve_config(config) {
+                    Ok(c) => c,
+                    Err(e) => return (Err(e), false),
+                };
+                match self.simulate(&cfg, *shape, *phase, memory.options()) {
+                    Ok(sim) => {
+                        (Ok(ServeResponse::Simulate(protocol::SimResult::from_sim(&sim))), true)
+                    }
+                    Err(e) => (Err(e), false),
+                }
+            }
+            ServeRequest::Plan { shape, phase, memory, config, strategy } => {
+                if self.draining() {
+                    return (
+                        Err(WireError::new(ErrorKind::ShuttingDown, "daemon is draining")),
+                        false,
+                    );
+                }
+                let cfg = match self.resolve_config(config) {
+                    Ok(c) => c,
+                    Err(e) => return (Err(e), false),
+                };
+                let planner = Planner::new(
+                    Arc::clone(&self.session),
+                    strategy.to_planner(),
+                    self.opts.workers,
+                );
+                let choice = planner.plan_gemm(&cfg, *shape, *phase, &memory.options());
+                (Ok(ServeResponse::Plan(protocol::PlanResult::from_choice(&choice))), false)
+            }
+            ServeRequest::Report { figure } => (self.report(figure), false),
+        }
+    }
+
+    /// Render one figure over the warm session. Grid-scale figures are
+    /// deliberately not served (they are batch workloads, not queries).
+    fn report(&self, figure: &str) -> Result<ServeResponse, WireError> {
+        let threads = self.opts.workers;
+        let session = &self.session;
+        let rep = match figure {
+            "table1" => fig::table1(),
+            "fig3" => fig::fig3(Strength::Low, threads, session),
+            "fig3-high" => fig::fig3(Strength::High, threads, session),
+            "fig5" => fig::fig5(threads, session),
+            "fig6" => fig::fig6(),
+            "area" => fig::area_flexsa(),
+            "ablate" => fig::ablations(threads, session),
+            other => {
+                return Err(WireError::invalid(format!(
+                    "unknown figure `{other}` (have: table1, fig3, fig3-high, fig5, fig6, area, \
+                     ablate)"
+                )))
+            }
+        };
+        Ok(ServeResponse::Report { figure: rep.id.clone(), text: rep.render() })
+    }
+}
+
+/// What the daemon did over its lifetime, returned when it exits.
+#[derive(Debug, Clone)]
+pub struct ServeOutcome {
+    /// Service + session counters at shutdown; `service.drain` is the
+    /// drain report (responses flushed, store writes completed/failed).
+    pub service: ServiceStats,
+    /// Connections accepted.
+    pub connections: u64,
+    /// Requests answered (all kinds, error replies included).
+    pub requests: u64,
+    /// Error replies sent.
+    pub errors: u64,
+}
+
+/// Handle to a daemon running on a background thread (the in-process API
+/// the test suites drive).
+pub struct ServeHandle {
+    shared: Arc<Shared>,
+    thread: std::thread::JoinHandle<Result<ServeOutcome, String>>,
+}
+
+impl ServeHandle {
+    /// Ask the daemon to drain, as if a `shutdown` frame had arrived.
+    pub fn begin_shutdown(&self) {
+        self.shared.begin_drain();
+    }
+
+    /// Wait for the daemon to exit and collect its outcome.
+    pub fn join(self) -> Result<ServeOutcome, String> {
+        self.thread.join().map_err(|_| "serve thread panicked".to_string())?
+    }
+}
+
+fn build(session: Arc<SimSession>, opts: ServeOptions) -> (Arc<Shared>, SimService) {
+    let mut svc = SimService::start_with_session(
+        opts.workers.max(1),
+        BatchPolicy::default(),
+        Arc::clone(&session),
+    );
+    let submitter = svc.submitter();
+    let shared = Arc::new(Shared {
+        session,
+        submitter: Mutex::new(Some(submitter)),
+        waiters: Mutex::new(HashMap::new()),
+        outstanding: AtomicU64::new(0),
+        draining: AtomicBool::new(false),
+        drain_inflight: AtomicU64::new(0),
+        connections: AtomicU64::new(0),
+        requests: AtomicU64::new(0),
+        errors: AtomicU64::new(0),
+        presets: Mutex::new(HashMap::new()),
+        opts,
+    });
+    (shared, svc)
+}
+
+/// Run the daemon on the calling thread until a shutdown request or (with
+/// [`ServeOptions::handle_signals`]) SIGTERM/SIGINT drains it.
+pub fn run(
+    listener: Listener,
+    session: Arc<SimSession>,
+    opts: ServeOptions,
+) -> Result<ServeOutcome, String> {
+    let (shared, svc) = build(session, opts);
+    run_daemon(listener, svc, shared)
+}
+
+/// Start the daemon on a background thread (in-process use: tests, or
+/// embedding a simulation server in a larger harness).
+pub fn spawn(
+    listener: Listener,
+    session: Arc<SimSession>,
+    opts: ServeOptions,
+) -> ServeHandle {
+    let (shared, svc) = build(session, opts);
+    let thread_shared = Arc::clone(&shared);
+    let thread = std::thread::spawn(move || run_daemon(listener, svc, thread_shared));
+    ServeHandle { shared, thread }
+}
+
+/// Fan service responses back out to the connections waiting on them;
+/// exits (harvesting the final stats) once the intake is released and the
+/// leader drains.
+fn router_loop(svc: SimService, shared: Arc<Shared>, stats_tx: mpsc::Sender<ServiceStats>) {
+    while let Some(resp) = svc.recv() {
+        let waiter = shared.waiters.lock().unwrap().remove(&resp.id);
+        match waiter {
+            Some(tx) => {
+                if tx.send(resp.sim).is_err() {
+                    // Connection died before its answer: nothing to flush.
+                    shared.outstanding.fetch_sub(1, Ordering::SeqCst);
+                }
+            }
+            None => {
+                shared.outstanding.fetch_sub(1, Ordering::SeqCst);
+            }
+        }
+    }
+    // Any waiters left have no response coming; dropping their senders
+    // unblocks the connections with a `shutting_down` error.
+    shared.waiters.lock().unwrap().clear();
+    let _ = stats_tx.send(svc.shutdown());
+}
+
+fn run_daemon(
+    listener: Listener,
+    svc: SimService,
+    shared: Arc<Shared>,
+) -> Result<ServeOutcome, String> {
+    let endpoint = listener.describe();
+    shared.log(&format!(
+        "listening on {endpoint} ({} workers, {} byte frames)",
+        shared.opts.workers.max(1),
+        shared.opts.max_frame
+    ));
+    if shared.opts.handle_signals {
+        sig::install();
+    }
+    let (stats_tx, stats_rx) = mpsc::channel();
+    let router_shared = Arc::clone(&shared);
+    let router = std::thread::spawn(move || router_loop(svc, router_shared, stats_tx));
+
+    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    loop {
+        if shared.draining() {
+            break;
+        }
+        if shared.opts.handle_signals && sig::requested() {
+            shared.log("signal received; draining");
+            shared.begin_drain();
+            break;
+        }
+        match listener.accept() {
+            Ok(Some(stream)) => {
+                shared.connections.fetch_add(1, Ordering::Relaxed);
+                let conn_shared = Arc::clone(&shared);
+                conns.push(std::thread::spawn(move || {
+                    conn::handle_conn(stream, &conn_shared);
+                }));
+                conns.retain(|h| !h.is_finished());
+            }
+            Ok(None) => std::thread::sleep(ACCEPT_TICK),
+            Err(e) => {
+                // Transient accept failure (e.g. EMFILE): log and keep
+                // serving existing connections.
+                shared.log(&format!("accept error: {e}"));
+                std::thread::sleep(ACCEPT_TICK);
+            }
+        }
+    }
+
+    // Drain: stop accepting, let every connection finish its in-flight
+    // request (responses flushed), then release the intake so the service
+    // leader runs down and reports.
+    drop(listener);
+    for h in conns {
+        let _ = h.join();
+    }
+    *shared.submitter.lock().unwrap() = None;
+    let mut service = stats_rx.recv().map_err(|_| "service router died".to_string())?;
+    let _ = router.join();
+
+    let flushed = shared
+        .drain_inflight
+        .load(Ordering::SeqCst)
+        .saturating_sub(shared.outstanding.load(Ordering::SeqCst));
+    service.drained += flushed;
+    service.drain.responses_flushed = service.drained;
+    let outcome = ServeOutcome {
+        service,
+        connections: shared.connections.load(Ordering::Relaxed),
+        requests: shared.requests.load(Ordering::Relaxed),
+        errors: shared.errors.load(Ordering::Relaxed),
+    };
+    shared.log(&format!(
+        "drained: {} requests on {} connections ({} errors), {}",
+        outcome.requests,
+        outcome.connections,
+        outcome.errors,
+        outcome.service.drain.summary()
+    ));
+    Ok(outcome)
+}
+
+#[cfg(unix)]
+mod sig {
+    //! Minimal async-signal-safe SIGTERM/SIGINT latch (std links libc; a
+    //! full signal crate is not in the offline vendor set). The handler
+    //! only stores to an atomic; the accept loop polls it.
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static TERM: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_term(_signum: i32) {
+        TERM.store(true, Ordering::SeqCst);
+    }
+
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> isize;
+    }
+
+    pub fn install() {
+        const SIGINT: i32 = 2;
+        const SIGTERM: i32 = 15;
+        unsafe {
+            signal(SIGINT, on_term);
+            signal(SIGTERM, on_term);
+        }
+    }
+
+    pub fn requested() -> bool {
+        TERM.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(not(unix))]
+mod sig {
+    pub fn install() {}
+
+    pub fn requested() -> bool {
+        false
+    }
+}

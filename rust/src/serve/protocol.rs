@@ -1,0 +1,1441 @@
+//! The `flexsa serve` wire protocol (DESIGN.md §14).
+//!
+//! Newline-delimited JSON frames: every request and every response is one
+//! JSON object on one line. The codec is hand-rolled (serde is not in the
+//! offline vendor set) and deliberately strict — unknown request types,
+//! schema violations, and trailing garbage are structured errors, never
+//! panics — because the daemon must survive arbitrary bytes on the socket.
+//!
+//! Numbers: 64-bit counters (`busy_macs`, traffic bytes) are kept exact by
+//! a dedicated integer variant ([`Json::UInt`]); `f64` cycle counts rely
+//! on Rust's shortest-round-trip float formatting, so a simulation result
+//! serialized and re-parsed is bit-identical to the in-process value (the
+//! concurrency suite in `tests/serve_daemon.rs` pins this).
+
+use crate::gemm::{GemmShape, Phase};
+use crate::planner::Strategy;
+use crate::session::SessionStats;
+use crate::sim::{GemmSim, SimOptions};
+
+/// Nesting depth the JSON parser accepts before rejecting the frame
+/// (protection against stack exhaustion from `[[[[...`).
+pub const MAX_JSON_DEPTH: usize = 64;
+
+/// Default per-frame size limit (bytes, excluding the newline). Frames
+/// larger than this are answered with an [`ErrorKind::Oversized`] error
+/// and skipped without buffering them.
+pub const DEFAULT_MAX_FRAME: usize = 64 * 1024;
+
+// ---------------------------------------------------------------------------
+// JSON value + parser + serializer
+// ---------------------------------------------------------------------------
+
+/// A parsed JSON value. Object members preserve insertion order (the
+/// serializer is deterministic, which the smoke tooling's `sed` patterns
+/// rely on).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    /// `null`.
+    Null,
+    /// `true` / `false`.
+    Bool(bool),
+    /// A non-negative integer that fits `u64`, kept exact (no `f64`
+    /// round-trip, which would corrupt counters above 2^53).
+    UInt(u64),
+    /// Any other number.
+    Num(f64),
+    /// A string.
+    Str(String),
+    /// An array.
+    Arr(Vec<Json>),
+    /// An object (ordered key/value pairs; duplicate keys keep the first).
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Member lookup on an object (`None` for non-objects/missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(members) => members.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// The value as a `u64`, accepting integral `Num`s.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::UInt(n) => Some(*n),
+            Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 && *x <= u64::MAX as f64 => {
+                Some(*x as u64)
+            }
+            _ => None,
+        }
+    }
+
+    /// The value as an `f64` (both number variants).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::UInt(n) => Some(*n as f64),
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// The value as a string slice.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// The value as a bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Serialize to compact JSON (no whitespace). Non-finite floats — which
+    /// no simulator output produces — serialize as `null`.
+    pub fn encode(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(true) => out.push_str("true"),
+            Json::Bool(false) => out.push_str("false"),
+            Json::UInt(n) => out.push_str(&n.to_string()),
+            Json::Num(x) => {
+                if x.is_finite() {
+                    out.push_str(&format!("{x}"));
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => write_json_string(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(members) => {
+                out.push('{');
+                for (i, (k, v)) in members.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_json_string(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    /// Parse one JSON value from `text`; trailing non-whitespace is an
+    /// error (a frame is exactly one value).
+    pub fn parse(text: &str) -> Result<Json, JsonError> {
+        let mut p = JsonParser { bytes: text.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value(0)?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            return Err(p.err("trailing garbage after JSON value"));
+        }
+        Ok(v)
+    }
+}
+
+fn write_json_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            '\u{8}' => out.push_str("\\b"),
+            '\u{c}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// A JSON syntax error with its byte offset (for error replies).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JsonError {
+    /// Byte offset the parser stopped at.
+    pub pos: usize,
+    /// What went wrong.
+    pub msg: String,
+}
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} at byte {}", self.msg, self.pos)
+    }
+}
+
+struct JsonParser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> JsonParser<'a> {
+    fn err(&self, msg: &str) -> JsonError {
+        JsonError { pos: self.pos, msg: msg.to_string() }
+    }
+
+    fn skip_ws(&mut self) {
+        while let Some(&b) = self.bytes.get(self.pos) {
+            if b == b' ' || b == b'\t' || b == b'\n' || b == b'\r' {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), JsonError> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected `{}`", b as char)))
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json, JsonError> {
+        if depth > MAX_JSON_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        match self.peek() {
+            None => Err(self.err("unexpected end of input")),
+            Some(b'{') => self.object(depth),
+            Some(b'[') => self.array(depth),
+            Some(b'"') => self.string().map(Json::Str),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(b'-') | Some(b'0'..=b'9') => self.number(),
+            Some(_) => Err(self.err("unexpected character")),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json, JsonError> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            Err(self.err("invalid literal"))
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> Result<Json, JsonError> {
+        self.expect(b'{')?;
+        let mut members: Vec<(String, Json)> = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(members));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let val = self.value(depth + 1)?;
+            // Duplicate keys keep the first occurrence (lookup uses the
+            // first match; re-encoding must not silently reorder).
+            if !members.iter().any(|(k, _)| *k == key) {
+                members.push((key, val));
+            }
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(members));
+                }
+                _ => return Err(self.err("expected `,` or `}` in object")),
+            }
+        }
+    }
+
+    fn array(&mut self, depth: usize) -> Result<Json, JsonError> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value(depth + 1)?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(self.err("expected `,` or `]` in array")),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, JsonError> {
+        self.expect(b'"')?;
+        let mut out: Vec<u8> = Vec::new();
+        let mut pending_high: Option<u16> = None;
+        loop {
+            let b = self.peek().ok_or_else(|| self.err("unterminated string"))?;
+            match b {
+                b'"' => {
+                    self.pos += 1;
+                    if pending_high.is_some() {
+                        return Err(self.err("unpaired surrogate escape"));
+                    }
+                    return String::from_utf8(out).map_err(|_| self.err("invalid UTF-8 in string"));
+                }
+                b'\\' => {
+                    self.pos += 1;
+                    let esc = self.peek().ok_or_else(|| self.err("unterminated escape"))?;
+                    self.pos += 1;
+                    let simple = match esc {
+                        b'"' => Some('"'),
+                        b'\\' => Some('\\'),
+                        b'/' => Some('/'),
+                        b'b' => Some('\u{8}'),
+                        b'f' => Some('\u{c}'),
+                        b'n' => Some('\n'),
+                        b'r' => Some('\r'),
+                        b't' => Some('\t'),
+                        b'u' => None,
+                        _ => return Err(self.err("invalid escape")),
+                    };
+                    if let Some(c) = simple {
+                        if pending_high.is_some() {
+                            return Err(self.err("unpaired surrogate escape"));
+                        }
+                        let mut buf = [0u8; 4];
+                        out.extend_from_slice(c.encode_utf8(&mut buf).as_bytes());
+                        continue;
+                    }
+                    let unit = self.hex4()?;
+                    match pending_high.take() {
+                        Some(high) => {
+                            if (0xDC00..=0xDFFF).contains(&unit) {
+                                let cp = 0x10000
+                                    + (((high as u32) - 0xD800) << 10)
+                                    + (unit as u32 - 0xDC00);
+                                let c = char::from_u32(cp)
+                                    .ok_or_else(|| self.err("invalid surrogate pair"))?;
+                                let mut buf = [0u8; 4];
+                                out.extend_from_slice(c.encode_utf8(&mut buf).as_bytes());
+                            } else {
+                                return Err(self.err("unpaired surrogate escape"));
+                            }
+                        }
+                        None => {
+                            if (0xD800..=0xDBFF).contains(&unit) {
+                                pending_high = Some(unit);
+                            } else if (0xDC00..=0xDFFF).contains(&unit) {
+                                return Err(self.err("unpaired surrogate escape"));
+                            } else {
+                                let c = char::from_u32(unit as u32)
+                                    .ok_or_else(|| self.err("invalid \\u escape"))?;
+                                let mut buf = [0u8; 4];
+                                out.extend_from_slice(c.encode_utf8(&mut buf).as_bytes());
+                            }
+                        }
+                    }
+                }
+                b if b < 0x20 => return Err(self.err("raw control character in string")),
+                _ => {
+                    if pending_high.is_some() {
+                        return Err(self.err("unpaired surrogate escape"));
+                    }
+                    out.push(b);
+                    self.pos += 1;
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u16, JsonError> {
+        let mut v: u16 = 0;
+        for _ in 0..4 {
+            let b = self.peek().ok_or_else(|| self.err("truncated \\u escape"))?;
+            let d = match b {
+                b'0'..=b'9' => b - b'0',
+                b'a'..=b'f' => b - b'a' + 10,
+                b'A'..=b'F' => b - b'A' + 10,
+                _ => return Err(self.err("invalid hex digit in \\u escape")),
+            };
+            v = (v << 4) | d as u16;
+            self.pos += 1;
+        }
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<Json, JsonError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        // Integer part: `0` alone or a nonzero-led digit run (strict JSON).
+        match self.peek() {
+            Some(b'0') => self.pos += 1,
+            Some(b'1'..=b'9') => {
+                while matches!(self.peek(), Some(b'0'..=b'9')) {
+                    self.pos += 1;
+                }
+            }
+            _ => return Err(self.err("invalid number")),
+        }
+        let mut integral = true;
+        if self.peek() == Some(b'.') {
+            integral = false;
+            self.pos += 1;
+            if !matches!(self.peek(), Some(b'0'..=b'9')) {
+                return Err(self.err("digits required after decimal point"));
+            }
+            while matches!(self.peek(), Some(b'0'..=b'9')) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e') | Some(b'E')) {
+            integral = false;
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+') | Some(b'-')) {
+                self.pos += 1;
+            }
+            if !matches!(self.peek(), Some(b'0'..=b'9')) {
+                return Err(self.err("digits required in exponent"));
+            }
+            while matches!(self.peek(), Some(b'0'..=b'9')) {
+                self.pos += 1;
+            }
+        }
+        let tok = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| self.err("invalid number"))?;
+        if integral && !tok.starts_with('-') {
+            if let Ok(n) = tok.parse::<u64>() {
+                return Ok(Json::UInt(n));
+            }
+        }
+        tok.parse::<f64>().map(Json::Num).map_err(|_| self.err("unparseable number"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Error taxonomy
+// ---------------------------------------------------------------------------
+
+/// The protocol's error taxonomy (DESIGN.md §14). Every failure a client
+/// can cause maps to exactly one kind; none of them crash the daemon or
+/// wedge the connection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// The frame exceeded the size limit; it was skipped to the next
+    /// newline and the connection stays usable.
+    Oversized,
+    /// The frame was not valid JSON (or not valid UTF-8).
+    Malformed,
+    /// Valid JSON that violates the request schema (unknown type, missing
+    /// or ill-typed field, unknown preset, ...).
+    Invalid,
+    /// The daemon is draining: no new simulation work is accepted.
+    ShuttingDown,
+}
+
+impl ErrorKind {
+    /// Wire name of the kind.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ErrorKind::Oversized => "oversized",
+            ErrorKind::Malformed => "malformed",
+            ErrorKind::Invalid => "invalid",
+            ErrorKind::ShuttingDown => "shutting_down",
+        }
+    }
+
+    /// Parse a wire name back.
+    pub fn parse(s: &str) -> Option<ErrorKind> {
+        Some(match s {
+            "oversized" => ErrorKind::Oversized,
+            "malformed" => ErrorKind::Malformed,
+            "invalid" => ErrorKind::Invalid,
+            "shutting_down" => ErrorKind::ShuttingDown,
+            _ => return None,
+        })
+    }
+}
+
+/// A structured protocol error, sent to the client in an `ok:false`
+/// envelope instead of dropping the connection.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireError {
+    /// Which taxonomy bucket.
+    pub kind: ErrorKind,
+    /// Human-readable detail.
+    pub message: String,
+}
+
+impl WireError {
+    /// Construct an error of `kind`.
+    pub fn new(kind: ErrorKind, message: impl Into<String>) -> WireError {
+        WireError { kind, message: message.into() }
+    }
+
+    /// Shorthand for [`ErrorKind::Invalid`].
+    pub fn invalid(message: impl Into<String>) -> WireError {
+        WireError::new(ErrorKind::Invalid, message)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Requests
+// ---------------------------------------------------------------------------
+
+/// The accelerator configuration a request targets.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ConfigRef {
+    /// A named preset (`"4G1F"`; the `config` field).
+    Preset(String),
+    /// Inline configuration text in the `parse_config` format (the
+    /// `config_text` field).
+    Inline(String),
+}
+
+/// Memory model selector (`memory` field): the two [`SimOptions`] points
+/// the CLI exposes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Memory {
+    /// Infinite DRAM bandwidth.
+    Ideal,
+    /// HBM2 bandwidth model.
+    Hbm2,
+}
+
+impl Memory {
+    /// Wire name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Memory::Ideal => "ideal",
+            Memory::Hbm2 => "hbm2",
+        }
+    }
+
+    /// The simulator options this selector stands for.
+    pub fn options(&self) -> SimOptions {
+        match self {
+            Memory::Ideal => SimOptions::ideal(),
+            Memory::Hbm2 => SimOptions::hbm2(),
+        }
+    }
+}
+
+/// Plan-search strategy selector (`strategy` + `beam` fields).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SearchStrategy {
+    /// Score every candidate plan.
+    Exhaustive,
+    /// Beam search of the given width.
+    Beam(u64),
+}
+
+impl SearchStrategy {
+    /// Convert to the planner's strategy type.
+    pub fn to_planner(self) -> Strategy {
+        match self {
+            SearchStrategy::Exhaustive => Strategy::Exhaustive,
+            SearchStrategy::Beam(n) => Strategy::Beam(n.max(1) as usize),
+        }
+    }
+}
+
+/// One parsed request (the `type` field selects the variant).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeRequest {
+    /// Simulate one GEMM under the Algorithm-1 heuristic plan.
+    Simulate {
+        /// GEMM dimensions (`m`/`n`/`k` fields).
+        shape: GemmShape,
+        /// Training phase (`phase`: `fwd`/`dgrad`/`wgrad`; default `fwd`).
+        phase: Phase,
+        /// Memory model (`memory`: `ideal`/`hbm2`; default `hbm2`).
+        memory: Memory,
+        /// Target configuration (`config` or `config_text`; required).
+        config: ConfigRef,
+    },
+    /// Search the compilation-plan space for one GEMM.
+    Plan {
+        /// GEMM dimensions.
+        shape: GemmShape,
+        /// Training phase.
+        phase: Phase,
+        /// Memory model.
+        memory: Memory,
+        /// Target configuration.
+        config: ConfigRef,
+        /// Search strategy (`strategy`: `exhaustive`/`beam` + `beam` width;
+        /// default exhaustive).
+        strategy: SearchStrategy,
+    },
+    /// Render one figure/table over the warm session (`figure` field).
+    Report {
+        /// Figure id (`table1`, `fig3`, `fig5`, `fig6`, `area`, `ablate`).
+        figure: String,
+    },
+    /// Session/store/daemon counters.
+    Stats,
+    /// Liveness probe.
+    Ping,
+    /// Begin a graceful drain.
+    Shutdown,
+}
+
+/// A request frame: optional client-chosen `id` (echoed in the response)
+/// plus the request body.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    /// Client correlation id; echoed verbatim in the response envelope.
+    pub id: Option<u64>,
+    /// The request.
+    pub req: ServeRequest,
+}
+
+/// Largest GEMM dimension a request may carry (keeps a hostile frame from
+/// requesting an absurd simulation).
+pub const MAX_DIM: u64 = 1 << 30;
+
+fn shape_json(shape: &GemmShape, members: &mut Vec<(String, Json)>) {
+    members.push(("m".into(), Json::UInt(shape.m as u64)));
+    members.push(("n".into(), Json::UInt(shape.n as u64)));
+    members.push(("k".into(), Json::UInt(shape.k as u64)));
+}
+
+fn config_json(config: &ConfigRef, members: &mut Vec<(String, Json)>) {
+    match config {
+        ConfigRef::Preset(name) => members.push(("config".into(), Json::Str(name.clone()))),
+        ConfigRef::Inline(text) => members.push(("config_text".into(), Json::Str(text.clone()))),
+    }
+}
+
+/// Serialize a request frame to one JSON line (no trailing newline).
+pub fn encode_request(frame: &Frame) -> String {
+    let mut members: Vec<(String, Json)> = Vec::new();
+    let type_name = match &frame.req {
+        ServeRequest::Simulate { .. } => "simulate",
+        ServeRequest::Plan { .. } => "plan",
+        ServeRequest::Report { .. } => "report",
+        ServeRequest::Stats => "stats",
+        ServeRequest::Ping => "ping",
+        ServeRequest::Shutdown => "shutdown",
+    };
+    members.push(("type".into(), Json::Str(type_name.into())));
+    if let Some(id) = frame.id {
+        members.push(("id".into(), Json::UInt(id)));
+    }
+    match &frame.req {
+        ServeRequest::Simulate { shape, phase, memory, config } => {
+            shape_json(shape, &mut members);
+            members.push(("phase".into(), Json::Str(phase.name().into())));
+            members.push(("memory".into(), Json::Str(memory.name().into())));
+            config_json(config, &mut members);
+        }
+        ServeRequest::Plan { shape, phase, memory, config, strategy } => {
+            shape_json(shape, &mut members);
+            members.push(("phase".into(), Json::Str(phase.name().into())));
+            members.push(("memory".into(), Json::Str(memory.name().into())));
+            config_json(config, &mut members);
+            match strategy {
+                SearchStrategy::Exhaustive => {
+                    members.push(("strategy".into(), Json::Str("exhaustive".into())));
+                }
+                SearchStrategy::Beam(w) => {
+                    members.push(("strategy".into(), Json::Str("beam".into())));
+                    members.push(("beam".into(), Json::UInt(*w)));
+                }
+            }
+        }
+        ServeRequest::Report { figure } => {
+            members.push(("figure".into(), Json::Str(figure.clone())));
+        }
+        ServeRequest::Stats | ServeRequest::Ping | ServeRequest::Shutdown => {}
+    }
+    Json::Obj(members).encode()
+}
+
+fn parse_shape(obj: &Json) -> Result<GemmShape, WireError> {
+    let dim = |key: &str| -> Result<u64, WireError> {
+        let v = obj
+            .get(key)
+            .ok_or_else(|| WireError::invalid(format!("missing `{key}`")))?
+            .as_u64()
+            .ok_or_else(|| WireError::invalid(format!("`{key}` must be a non-negative integer")))?;
+        if v == 0 || v > MAX_DIM {
+            return Err(WireError::invalid(format!("`{key}` must be in 1..={MAX_DIM}")));
+        }
+        Ok(v)
+    };
+    Ok(GemmShape::new(dim("m")? as usize, dim("n")? as usize, dim("k")? as usize))
+}
+
+fn parse_phase_field(obj: &Json) -> Result<Phase, WireError> {
+    match obj.get("phase") {
+        None => Ok(Phase::Forward),
+        Some(v) => match v.as_str() {
+            Some("fwd") => Ok(Phase::Forward),
+            Some("dgrad") => Ok(Phase::DataGrad),
+            Some("wgrad") => Ok(Phase::WeightGrad),
+            _ => Err(WireError::invalid("`phase` must be fwd|dgrad|wgrad")),
+        },
+    }
+}
+
+fn parse_memory_field(obj: &Json) -> Result<Memory, WireError> {
+    match obj.get("memory") {
+        None => Ok(Memory::Hbm2),
+        Some(v) => match v.as_str() {
+            Some("ideal") => Ok(Memory::Ideal),
+            Some("hbm2") => Ok(Memory::Hbm2),
+            _ => Err(WireError::invalid("`memory` must be ideal|hbm2")),
+        },
+    }
+}
+
+fn parse_config_field(obj: &Json) -> Result<ConfigRef, WireError> {
+    match (obj.get("config"), obj.get("config_text")) {
+        (Some(_), Some(_)) => Err(WireError::invalid("pass `config` or `config_text`, not both")),
+        (Some(v), None) => v
+            .as_str()
+            .map(|s| ConfigRef::Preset(s.to_string()))
+            .ok_or_else(|| WireError::invalid("`config` must be a string")),
+        (None, Some(v)) => v
+            .as_str()
+            .map(|s| ConfigRef::Inline(s.to_string()))
+            .ok_or_else(|| WireError::invalid("`config_text` must be a string")),
+        (None, None) => Err(WireError::invalid("missing `config` (or `config_text`)")),
+    }
+}
+
+fn parse_strategy_field(obj: &Json) -> Result<SearchStrategy, WireError> {
+    match obj.get("strategy") {
+        None => Ok(SearchStrategy::Exhaustive),
+        Some(v) => match v.as_str() {
+            Some("exhaustive") => Ok(SearchStrategy::Exhaustive),
+            Some("beam") => {
+                let w = match obj.get("beam") {
+                    None => 2,
+                    Some(b) => b
+                        .as_u64()
+                        .filter(|w| (1..=1024).contains(w))
+                        .ok_or_else(|| WireError::invalid("`beam` must be in 1..=1024"))?,
+                };
+                Ok(SearchStrategy::Beam(w))
+            }
+            _ => Err(WireError::invalid("`strategy` must be exhaustive|beam")),
+        },
+    }
+}
+
+/// Parse one request line. [`ErrorKind::Malformed`] for JSON syntax
+/// errors, [`ErrorKind::Invalid`] for schema violations; the caller turns
+/// either into an `ok:false` envelope on a still-healthy connection.
+pub fn parse_request(line: &str) -> Result<Frame, WireError> {
+    let v = Json::parse(line).map_err(|e| WireError::new(ErrorKind::Malformed, e.to_string()))?;
+    if !matches!(v, Json::Obj(_)) {
+        return Err(WireError::invalid("request must be a JSON object"));
+    }
+    let id = match v.get("id") {
+        None => None,
+        Some(x) => Some(
+            x.as_u64().ok_or_else(|| WireError::invalid("`id` must be a non-negative integer"))?,
+        ),
+    };
+    let ty = v
+        .get("type")
+        .and_then(|t| t.as_str())
+        .ok_or_else(|| WireError::invalid("missing `type`"))?;
+    let req = match ty {
+        "simulate" => ServeRequest::Simulate {
+            shape: parse_shape(&v)?,
+            phase: parse_phase_field(&v)?,
+            memory: parse_memory_field(&v)?,
+            config: parse_config_field(&v)?,
+        },
+        "plan" => ServeRequest::Plan {
+            shape: parse_shape(&v)?,
+            phase: parse_phase_field(&v)?,
+            memory: parse_memory_field(&v)?,
+            config: parse_config_field(&v)?,
+            strategy: parse_strategy_field(&v)?,
+        },
+        "report" => ServeRequest::Report {
+            figure: v
+                .get("figure")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| WireError::invalid("missing `figure`"))?
+                .to_string(),
+        },
+        "stats" => ServeRequest::Stats,
+        "ping" => ServeRequest::Ping,
+        "shutdown" => ServeRequest::Shutdown,
+        other => return Err(WireError::invalid(format!("unknown request type `{other}`"))),
+    };
+    Ok(Frame { id, req })
+}
+
+// ---------------------------------------------------------------------------
+// Responses
+// ---------------------------------------------------------------------------
+
+/// A simulation result on the wire (the [`GemmSim`] fields that define
+/// bit-identity, see `proptest::gemm_bit_identical`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimResult {
+    /// Total cycles.
+    pub cycles: f64,
+    /// Compute-bound cycles.
+    pub compute_cycles: f64,
+    /// DRAM-bound cycles.
+    pub dram_cycles: f64,
+    /// Useful MACs.
+    pub busy_macs: u64,
+    /// GBUF→LBUF bytes.
+    pub gbuf_to_lbuf: u64,
+    /// OBUF→GBUF bytes.
+    pub obuf_to_gbuf: u64,
+    /// DRAM read bytes.
+    pub dram_read: u64,
+    /// DRAM write bytes.
+    pub dram_write: u64,
+    /// Inter-core bytes.
+    pub overcore: u64,
+    /// Wave counts per mode name, in [`crate::isa::Mode`] order.
+    pub waves: Vec<(String, u64)>,
+}
+
+impl SimResult {
+    /// Project a [`GemmSim`] onto the wire struct.
+    pub fn from_sim(sim: &GemmSim) -> SimResult {
+        SimResult {
+            cycles: sim.cycles,
+            compute_cycles: sim.compute_cycles,
+            dram_cycles: sim.dram_cycles,
+            busy_macs: sim.busy_macs,
+            gbuf_to_lbuf: sim.traffic.gbuf_to_lbuf,
+            obuf_to_gbuf: sim.traffic.obuf_to_gbuf,
+            dram_read: sim.traffic.dram_read,
+            dram_write: sim.traffic.dram_write,
+            overcore: sim.traffic.overcore,
+            waves: sim.waves_by_mode.iter().map(|(m, c)| (m.name().to_string(), *c)).collect(),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("cycles".into(), Json::Num(self.cycles)),
+            ("compute_cycles".into(), Json::Num(self.compute_cycles)),
+            ("dram_cycles".into(), Json::Num(self.dram_cycles)),
+            ("busy_macs".into(), Json::UInt(self.busy_macs)),
+            (
+                "traffic".into(),
+                Json::Obj(vec![
+                    ("gbuf_to_lbuf".into(), Json::UInt(self.gbuf_to_lbuf)),
+                    ("obuf_to_gbuf".into(), Json::UInt(self.obuf_to_gbuf)),
+                    ("dram_read".into(), Json::UInt(self.dram_read)),
+                    ("dram_write".into(), Json::UInt(self.dram_write)),
+                    ("overcore".into(), Json::UInt(self.overcore)),
+                ]),
+            ),
+            (
+                "waves".into(),
+                Json::Obj(self.waves.iter().map(|(m, c)| (m.clone(), Json::UInt(*c))).collect()),
+            ),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<SimResult, WireError> {
+        let f = |key: &str| {
+            v.get(key)
+                .and_then(|x| x.as_f64())
+                .ok_or_else(|| WireError::invalid(format!("result missing `{key}`")))
+        };
+        let t = v.get("traffic").ok_or_else(|| WireError::invalid("result missing `traffic`"))?;
+        let tu = |key: &str| {
+            t.get(key)
+                .and_then(|x| x.as_u64())
+                .ok_or_else(|| WireError::invalid(format!("traffic missing `{key}`")))
+        };
+        let waves = match v.get("waves") {
+            Some(Json::Obj(members)) => members
+                .iter()
+                .map(|(m, c)| {
+                    c.as_u64()
+                        .map(|c| (m.clone(), c))
+                        .ok_or_else(|| WireError::invalid("wave counts must be integers"))
+                })
+                .collect::<Result<Vec<_>, _>>()?,
+            _ => return Err(WireError::invalid("result missing `waves`")),
+        };
+        Ok(SimResult {
+            cycles: f("cycles")?,
+            compute_cycles: f("compute_cycles")?,
+            dram_cycles: f("dram_cycles")?,
+            busy_macs: v
+                .get("busy_macs")
+                .and_then(|x| x.as_u64())
+                .ok_or_else(|| WireError::invalid("result missing `busy_macs`"))?,
+            gbuf_to_lbuf: tu("gbuf_to_lbuf")?,
+            obuf_to_gbuf: tu("obuf_to_gbuf")?,
+            dram_read: tu("dram_read")?,
+            dram_write: tu("dram_write")?,
+            overcore: tu("overcore")?,
+            waves,
+        })
+    }
+}
+
+/// A plan-search result on the wire (the [`crate::planner::PlanChoice`]
+/// summary fields).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanResult {
+    /// Display form of the winning plan.
+    pub best: String,
+    /// Cycles of the winning plan.
+    pub best_cycles: f64,
+    /// DRAM bytes of the winning plan.
+    pub best_dram: u64,
+    /// Cycles of the Algorithm-1 heuristic plan.
+    pub heuristic_cycles: f64,
+    /// DRAM bytes of the heuristic plan.
+    pub heuristic_dram: u64,
+    /// Candidates the search scored.
+    pub evaluated: u64,
+    /// Candidates skipped as provably identical.
+    pub deduped: u64,
+    /// Whether the whole search was answered from the plan store.
+    pub from_store: bool,
+}
+
+impl PlanResult {
+    /// Project a [`crate::planner::PlanChoice`] onto the wire struct.
+    pub fn from_choice(c: &crate::planner::PlanChoice) -> PlanResult {
+        PlanResult {
+            best: c.best.to_string(),
+            best_cycles: c.best_cycles,
+            best_dram: c.best_dram,
+            heuristic_cycles: c.heuristic_cycles,
+            heuristic_dram: c.heuristic_dram,
+            evaluated: c.evaluated as u64,
+            deduped: c.deduped as u64,
+            from_store: c.from_store,
+        }
+    }
+
+    /// The heuristic-vs-best gap (mirrors `PlanChoice::gap`).
+    pub fn gap(&self) -> f64 {
+        if self.best_cycles > 0.0 {
+            (self.heuristic_cycles / self.best_cycles - 1.0).max(0.0)
+        } else {
+            0.0
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("best".into(), Json::Str(self.best.clone())),
+            ("best_cycles".into(), Json::Num(self.best_cycles)),
+            ("best_dram".into(), Json::UInt(self.best_dram)),
+            ("heuristic_cycles".into(), Json::Num(self.heuristic_cycles)),
+            ("heuristic_dram".into(), Json::UInt(self.heuristic_dram)),
+            ("gap".into(), Json::Num(self.gap())),
+            ("evaluated".into(), Json::UInt(self.evaluated)),
+            ("deduped".into(), Json::UInt(self.deduped)),
+            ("from_store".into(), Json::Bool(self.from_store)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<PlanResult, WireError> {
+        let fu = |key: &str| {
+            v.get(key)
+                .and_then(|x| x.as_u64())
+                .ok_or_else(|| WireError::invalid(format!("result missing `{key}`")))
+        };
+        let ff = |key: &str| {
+            v.get(key)
+                .and_then(|x| x.as_f64())
+                .ok_or_else(|| WireError::invalid(format!("result missing `{key}`")))
+        };
+        Ok(PlanResult {
+            best: v
+                .get("best")
+                .and_then(|x| x.as_str())
+                .ok_or_else(|| WireError::invalid("result missing `best`"))?
+                .to_string(),
+            best_cycles: ff("best_cycles")?,
+            best_dram: fu("best_dram")?,
+            heuristic_cycles: ff("heuristic_cycles")?,
+            heuristic_dram: fu("heuristic_dram")?,
+            evaluated: fu("evaluated")?,
+            deduped: fu("deduped")?,
+            from_store: v
+                .get("from_store")
+                .and_then(|x| x.as_bool())
+                .ok_or_else(|| WireError::invalid("result missing `from_store`"))?,
+        })
+    }
+}
+
+/// One block of session-cache counters on the wire (used for both the
+/// global snapshot and the per-request delta in every envelope).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct StatsBlock {
+    /// Memory-tier hits.
+    pub hits: u64,
+    /// Memory-tier misses.
+    pub misses: u64,
+    /// Disk-tier hits.
+    pub store_hits: u64,
+    /// Disk-tier writes.
+    pub store_writes: u64,
+    /// GEMMs actually simulated (`misses - store_hits`; `sims=0` is the
+    /// warm-daemon acceptance criterion).
+    pub sims: u64,
+    /// Entries resident in the memory tier.
+    pub entries: u64,
+}
+
+impl StatsBlock {
+    /// Project [`SessionStats`] (a snapshot or a delta) onto the wire.
+    pub fn from_session(s: &SessionStats) -> StatsBlock {
+        StatsBlock {
+            hits: s.hits,
+            misses: s.misses,
+            store_hits: s.store_hits,
+            store_writes: s.store_writes,
+            sims: s.sims(),
+            entries: s.entries,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("hits".into(), Json::UInt(self.hits)),
+            ("misses".into(), Json::UInt(self.misses)),
+            ("store_hits".into(), Json::UInt(self.store_hits)),
+            ("store_writes".into(), Json::UInt(self.store_writes)),
+            ("sims".into(), Json::UInt(self.sims)),
+            ("entries".into(), Json::UInt(self.entries)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<StatsBlock, WireError> {
+        let u = |key: &str| {
+            v.get(key)
+                .and_then(|x| x.as_u64())
+                .ok_or_else(|| WireError::invalid(format!("stats missing `{key}`")))
+        };
+        Ok(StatsBlock {
+            hits: u("hits")?,
+            misses: u("misses")?,
+            store_hits: u("store_hits")?,
+            store_writes: u("store_writes")?,
+            sims: u("sims")?,
+            entries: u("entries")?,
+        })
+    }
+}
+
+/// One response body (the `result` member of an `ok:true` envelope; the
+/// `type` member selects the variant).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeResponse {
+    /// Answer to `simulate`.
+    Simulate(SimResult),
+    /// Answer to `plan`.
+    Plan(PlanResult),
+    /// Answer to `report`: the rendered figure text.
+    Report {
+        /// The figure's report id (e.g. `Fig5`).
+        figure: String,
+        /// Rendered table text.
+        text: String,
+    },
+    /// Answer to `stats`.
+    Stats {
+        /// Whole-session counters.
+        global: StatsBlock,
+        /// Connections accepted so far.
+        connections: u64,
+        /// Requests served so far (all kinds).
+        requests: u64,
+        /// Error replies sent so far.
+        errors: u64,
+        /// Simulation requests currently in flight.
+        outstanding: u64,
+    },
+    /// Answer to `ping`.
+    Pong,
+    /// Answer to `shutdown`: the drain has begun.
+    ShutdownAck {
+        /// Simulation responses still in flight at drain start (these are
+        /// flushed, not dropped, before the daemon exits).
+        outstanding: u64,
+    },
+}
+
+impl ServeResponse {
+    /// The `type` member value for this variant.
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            ServeResponse::Simulate(_) => "simulate",
+            ServeResponse::Plan(_) => "plan",
+            ServeResponse::Report { .. } => "report",
+            ServeResponse::Stats { .. } => "stats",
+            ServeResponse::Pong => "pong",
+            ServeResponse::ShutdownAck { .. } => "shutdown",
+        }
+    }
+
+    fn result_json(&self) -> Json {
+        match self {
+            ServeResponse::Simulate(r) => r.to_json(),
+            ServeResponse::Plan(r) => r.to_json(),
+            ServeResponse::Report { figure, text } => Json::Obj(vec![
+                ("figure".into(), Json::Str(figure.clone())),
+                ("text".into(), Json::Str(text.clone())),
+            ]),
+            ServeResponse::Stats { global, connections, requests, errors, outstanding } => {
+                Json::Obj(vec![
+                    ("global".into(), global.to_json()),
+                    ("connections".into(), Json::UInt(*connections)),
+                    ("requests".into(), Json::UInt(*requests)),
+                    ("errors".into(), Json::UInt(*errors)),
+                    ("outstanding".into(), Json::UInt(*outstanding)),
+                ])
+            }
+            ServeResponse::Pong => Json::Obj(vec![]),
+            ServeResponse::ShutdownAck { outstanding } => {
+                Json::Obj(vec![("outstanding".into(), Json::UInt(*outstanding))])
+            }
+        }
+    }
+
+    fn from_json(type_name: &str, result: &Json) -> Result<ServeResponse, WireError> {
+        Ok(match type_name {
+            "simulate" => ServeResponse::Simulate(SimResult::from_json(result)?),
+            "plan" => ServeResponse::Plan(PlanResult::from_json(result)?),
+            "report" => ServeResponse::Report {
+                figure: result
+                    .get("figure")
+                    .and_then(|x| x.as_str())
+                    .ok_or_else(|| WireError::invalid("report missing `figure`"))?
+                    .to_string(),
+                text: result
+                    .get("text")
+                    .and_then(|x| x.as_str())
+                    .ok_or_else(|| WireError::invalid("report missing `text`"))?
+                    .to_string(),
+            },
+            "stats" => {
+                let u = |key: &str| {
+                    result
+                        .get(key)
+                        .and_then(|x| x.as_u64())
+                        .ok_or_else(|| WireError::invalid(format!("stats missing `{key}`")))
+                };
+                ServeResponse::Stats {
+                    global: StatsBlock::from_json(
+                        result
+                            .get("global")
+                            .ok_or_else(|| WireError::invalid("stats missing `global`"))?,
+                    )?,
+                    connections: u("connections")?,
+                    requests: u("requests")?,
+                    errors: u("errors")?,
+                    outstanding: u("outstanding")?,
+                }
+            }
+            "pong" => ServeResponse::Pong,
+            "shutdown" => ServeResponse::ShutdownAck {
+                outstanding: result
+                    .get("outstanding")
+                    .and_then(|x| x.as_u64())
+                    .ok_or_else(|| WireError::invalid("shutdown ack missing `outstanding`"))?,
+            },
+            other => return Err(WireError::invalid(format!("unknown response type `{other}`"))),
+        })
+    }
+}
+
+/// The stats trailer attached to every response envelope.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct EnvelopeStats {
+    /// Requests this connection has submitted (including this one).
+    pub client_requests: u64,
+    /// Error replies this connection has received (including this one, if
+    /// it is one).
+    pub client_errors: u64,
+    /// Whole-session counters after the request.
+    pub global: StatsBlock,
+    /// Counter delta attributable to this request. Exact when requests are
+    /// serial; approximate under concurrent clients (the counters are
+    /// whole-session).
+    pub request: StatsBlock,
+}
+
+impl EnvelopeStats {
+    fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            (
+                "client".into(),
+                Json::Obj(vec![
+                    ("requests".into(), Json::UInt(self.client_requests)),
+                    ("errors".into(), Json::UInt(self.client_errors)),
+                ]),
+            ),
+            ("global".into(), self.global.to_json()),
+            ("request".into(), self.request.to_json()),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<EnvelopeStats, WireError> {
+        let client = v.get("client").ok_or_else(|| WireError::invalid("stats missing `client`"))?;
+        let u = |obj: &Json, key: &str| {
+            obj.get(key)
+                .and_then(|x| x.as_u64())
+                .ok_or_else(|| WireError::invalid(format!("stats missing `{key}`")))
+        };
+        Ok(EnvelopeStats {
+            client_requests: u(client, "requests")?,
+            client_errors: u(client, "errors")?,
+            global: StatsBlock::from_json(
+                v.get("global").ok_or_else(|| WireError::invalid("stats missing `global`"))?,
+            )?,
+            request: StatsBlock::from_json(
+                v.get("request").ok_or_else(|| WireError::invalid("stats missing `request`"))?,
+            )?,
+        })
+    }
+}
+
+/// A full response envelope: one line on the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Envelope {
+    /// Echo of the request's `id` (absent if the request carried none or
+    /// was unparseable).
+    pub id: Option<u64>,
+    /// The response body, or the structured error.
+    pub body: Result<ServeResponse, WireError>,
+    /// Cache/hit-rate stats (attached to every envelope, errors included).
+    pub stats: EnvelopeStats,
+}
+
+/// Serialize a response envelope to one JSON line (no trailing newline).
+pub fn encode_envelope(env: &Envelope) -> String {
+    let mut members: Vec<(String, Json)> = Vec::new();
+    if let Some(id) = env.id {
+        members.push(("id".into(), Json::UInt(id)));
+    }
+    match &env.body {
+        Ok(resp) => {
+            members.push(("ok".into(), Json::Bool(true)));
+            members.push(("type".into(), Json::Str(resp.type_name().into())));
+            members.push(("result".into(), resp.result_json()));
+        }
+        Err(e) => {
+            members.push(("ok".into(), Json::Bool(false)));
+            members.push((
+                "error".into(),
+                Json::Obj(vec![
+                    ("kind".into(), Json::Str(e.kind.name().into())),
+                    ("message".into(), Json::Str(e.message.clone())),
+                ]),
+            ));
+        }
+    }
+    members.push(("stats".into(), env.stats.to_json()));
+    Json::Obj(members).encode()
+}
+
+/// Parse a response envelope line (the client side of the codec).
+pub fn parse_envelope(line: &str) -> Result<Envelope, WireError> {
+    let v = Json::parse(line).map_err(|e| WireError::new(ErrorKind::Malformed, e.to_string()))?;
+    let id = match v.get("id") {
+        None => None,
+        Some(x) => {
+            Some(x.as_u64().ok_or_else(|| WireError::invalid("`id` must be an integer"))?)
+        }
+    };
+    let ok = v
+        .get("ok")
+        .and_then(|x| x.as_bool())
+        .ok_or_else(|| WireError::invalid("envelope missing `ok`"))?;
+    let stats = EnvelopeStats::from_json(
+        v.get("stats").ok_or_else(|| WireError::invalid("envelope missing `stats`"))?,
+    )?;
+    let body = if ok {
+        let ty = v
+            .get("type")
+            .and_then(|x| x.as_str())
+            .ok_or_else(|| WireError::invalid("envelope missing `type`"))?;
+        let result =
+            v.get("result").ok_or_else(|| WireError::invalid("envelope missing `result`"))?;
+        Ok(ServeResponse::from_json(ty, result)?)
+    } else {
+        let e = v.get("error").ok_or_else(|| WireError::invalid("envelope missing `error`"))?;
+        let kind = e
+            .get("kind")
+            .and_then(|x| x.as_str())
+            .and_then(ErrorKind::parse)
+            .ok_or_else(|| WireError::invalid("error missing `kind`"))?;
+        let message = e
+            .get("message")
+            .and_then(|x| x.as_str())
+            .ok_or_else(|| WireError::invalid("error missing `message`"))?
+            .to_string();
+        Err(WireError { kind, message })
+    };
+    Ok(Envelope { id, body, stats })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic_values() {
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(Json::parse(" true ").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse("42").unwrap(), Json::UInt(42));
+        assert_eq!(Json::parse("-3").unwrap(), Json::Num(-3.0));
+        assert_eq!(Json::parse("1.5e2").unwrap(), Json::Num(150.0));
+        assert_eq!(Json::parse("\"hi\"").unwrap(), Json::Str("hi".into()));
+        assert_eq!(
+            Json::parse("[1,2]").unwrap(),
+            Json::Arr(vec![Json::UInt(1), Json::UInt(2)])
+        );
+        assert_eq!(
+            Json::parse("{\"a\":1}").unwrap(),
+            Json::Obj(vec![("a".into(), Json::UInt(1))])
+        );
+    }
+
+    #[test]
+    fn large_counters_stay_exact() {
+        let n = u64::MAX - 3;
+        let v = Json::parse(&n.to_string()).unwrap();
+        assert_eq!(v, Json::UInt(n));
+        assert_eq!(v.encode(), n.to_string());
+    }
+
+    #[test]
+    fn float_round_trip_is_bit_exact() {
+        for x in [0.1, 1e300, 123456789.25, f64::MIN_POSITIVE, 2.0f64.powi(60) + 0.5] {
+            let enc = Json::Num(x).encode();
+            let back = Json::parse(&enc).unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "{x} via {enc}");
+        }
+    }
+
+    #[test]
+    fn string_escapes_round_trip() {
+        let s = "quote\" slash\\ nl\n tab\t nul\u{0} emoji🙂 high\u{10348}";
+        let enc = Json::Str(s.into()).encode();
+        assert_eq!(Json::parse(&enc).unwrap(), Json::Str(s.into()));
+        // Explicit surrogate-pair escape.
+        assert_eq!(
+            Json::parse("\"\\ud83d\\ude00\"").unwrap(),
+            Json::Str("\u{1F600}".into())
+        );
+    }
+
+    #[test]
+    fn malformed_inputs_error_not_panic() {
+        for bad in [
+            "", "{", "[1,", "\"unterminated", "{\"a\"}", "01", "1.", "1e", "tru", "nul",
+            "\"\\q\"", "\"\\ud800x\"", "\"\\ud800\"", "{\"a\":1}garbage", "[1 2]", "\u{1}",
+            "{'a':1}", "+1", "--1", "\"\\u12\"",
+        ] {
+            assert!(Json::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn deep_nesting_is_rejected() {
+        let deep = "[".repeat(MAX_JSON_DEPTH + 2) + &"]".repeat(MAX_JSON_DEPTH + 2);
+        assert!(Json::parse(&deep).is_err());
+        let ok = "[".repeat(8) + &"]".repeat(8);
+        assert!(Json::parse(&ok).is_ok());
+    }
+
+    #[test]
+    fn duplicate_keys_keep_first() {
+        let v = Json::parse("{\"a\":1,\"a\":2}").unwrap();
+        assert_eq!(v.get("a"), Some(&Json::UInt(1)));
+    }
+
+    #[test]
+    fn request_defaults_and_errors() {
+        let f = parse_request(r#"{"type":"simulate","m":8,"n":8,"k":8,"config":"1G1C"}"#).unwrap();
+        match f.req {
+            ServeRequest::Simulate { phase, memory, .. } => {
+                assert_eq!(phase, Phase::Forward);
+                assert_eq!(memory, Memory::Hbm2);
+            }
+            other => panic!("{other:?}"),
+        }
+        let e = parse_request("not json").unwrap_err();
+        assert_eq!(e.kind, ErrorKind::Malformed);
+        for bad in [
+            r#"{"type":"simulate","m":0,"n":1,"k":1,"config":"x"}"#,
+            r#"{"type":"simulate","m":1,"n":1,"k":1}"#,
+            r#"{"type":"simulate","m":1,"n":1,"k":1,"config":"x","config_text":"y"}"#,
+            r#"{"type":"simulate","m":1,"n":1,"k":1,"config":"x","phase":"sideways"}"#,
+            r#"{"type":"warp"}"#,
+            r#"{"type":"plan","m":1,"n":1,"k":1,"config":"x","strategy":"beam","beam":0}"#,
+            r#"{"id":-1,"type":"ping"}"#,
+            r#"[1,2,3]"#,
+            r#"{"type":"report"}"#,
+        ] {
+            let e = parse_request(bad).unwrap_err();
+            assert_eq!(e.kind, ErrorKind::Invalid, "{bad}");
+        }
+    }
+
+    #[test]
+    fn error_kind_names_round_trip() {
+        for k in
+            [ErrorKind::Oversized, ErrorKind::Malformed, ErrorKind::Invalid, ErrorKind::ShuttingDown]
+        {
+            assert_eq!(ErrorKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(ErrorKind::parse("nope"), None);
+    }
+}

@@ -1,0 +1,470 @@
+//! Property tests for the `flexsa serve` wire protocol (ISSUE 6 satellite):
+//! seeded round-trips of every request/response variant through the real
+//! codec, plus an adversarial socket fuzz — malformed / truncated /
+//! oversized frames against a live daemon, asserting a structured error
+//! reply and a still-healthy connection after every case.
+
+use flexsa::gemm::{GemmShape, Phase};
+use flexsa::proptest::{forall, Config};
+use flexsa::serve::protocol::{
+    encode_envelope, encode_request, parse_envelope, parse_request, ConfigRef, Envelope,
+    EnvelopeStats, ErrorKind, Frame, Memory, PlanResult, SearchStrategy, ServeRequest,
+    ServeResponse, SimResult, StatsBlock, WireError, MAX_DIM,
+};
+use flexsa::serve::{self, ServeOptions};
+use flexsa::session::SimSession;
+use flexsa::util::Lcg64;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+// ---------------------------------------------------------------------------
+// Generators
+// ---------------------------------------------------------------------------
+
+/// Strings that stress the JSON escaper: quotes, backslashes, control
+/// characters, multi-byte UTF-8, astral-plane codepoints.
+fn gen_string(rng: &mut Lcg64) -> String {
+    const PALETTE: &[char] = &[
+        'a', 'Z', '0', '9', ' ', '"', '\\', '/', '\n', '\r', '\t', '\u{0}', '\u{1}', '\u{1f}',
+        '\u{7f}', '{', '}', '[', ']', ':', ',', 'é', 'ß', '中', '🙂', '\u{10348}', '\u{e000}',
+    ];
+    let len = rng.next_below(12) as usize;
+    (0..len).map(|_| PALETTE[rng.next_below(PALETTE.len() as u64) as usize]).collect()
+}
+
+fn gen_shape(rng: &mut Lcg64) -> GemmShape {
+    let dim = |rng: &mut Lcg64| match rng.next_below(4) {
+        0 => 1,
+        1 => rng.range(2, 1024),
+        2 => rng.range(1025, 1 << 20),
+        _ => MAX_DIM as usize,
+    };
+    GemmShape::new(dim(rng), dim(rng), dim(rng))
+}
+
+fn gen_phase(rng: &mut Lcg64) -> Phase {
+    match rng.next_below(3) {
+        0 => Phase::Forward,
+        1 => Phase::DataGrad,
+        _ => Phase::WeightGrad,
+    }
+}
+
+fn gen_memory(rng: &mut Lcg64) -> Memory {
+    if rng.next_below(2) == 0 {
+        Memory::Ideal
+    } else {
+        Memory::Hbm2
+    }
+}
+
+fn gen_config(rng: &mut Lcg64) -> ConfigRef {
+    if rng.next_below(2) == 0 {
+        ConfigRef::Preset(gen_string(rng))
+    } else {
+        ConfigRef::Inline(format!("cores = 4\n# weird: {}\n", gen_string(rng)))
+    }
+}
+
+fn gen_strategy(rng: &mut Lcg64) -> SearchStrategy {
+    if rng.next_below(2) == 0 {
+        SearchStrategy::Exhaustive
+    } else {
+        // The schema validates beam width 1..=1024; stay in-range so the
+        // round trip is lossless.
+        SearchStrategy::Beam(1 + rng.next_below(1024))
+    }
+}
+
+fn gen_frame(rng: &mut Lcg64) -> Frame {
+    let id = if rng.next_below(2) == 0 { Some(rng.next_u64()) } else { None };
+    let req = match rng.next_below(6) {
+        0 => ServeRequest::Simulate {
+            shape: gen_shape(rng),
+            phase: gen_phase(rng),
+            memory: gen_memory(rng),
+            config: gen_config(rng),
+        },
+        1 => ServeRequest::Plan {
+            shape: gen_shape(rng),
+            phase: gen_phase(rng),
+            memory: gen_memory(rng),
+            config: gen_config(rng),
+            strategy: gen_strategy(rng),
+        },
+        2 => ServeRequest::Report { figure: gen_string(rng) },
+        3 => ServeRequest::Stats,
+        4 => ServeRequest::Ping,
+        _ => ServeRequest::Shutdown,
+    };
+    Frame { id, req }
+}
+
+/// Any finite `f64`, including negatives, subnormals, and huge exponents
+/// (the codec's shortest-round-trip formatting must hold for all of them).
+fn gen_f64(rng: &mut Lcg64) -> f64 {
+    loop {
+        let x = f64::from_bits(rng.next_u64());
+        if x.is_finite() {
+            return x;
+        }
+    }
+}
+
+fn gen_sim_result(rng: &mut Lcg64) -> SimResult {
+    // Wave keys must be distinct (the wire object keeps first on dup), so
+    // draw a prefix of a fixed distinct candidate set.
+    const WAVE_KEYS: &[&str] = &["FW", "VSW", "HSW", "ISW", "MONO", "模式🙂"];
+    let n = rng.next_below(WAVE_KEYS.len() as u64 + 1) as usize;
+    SimResult {
+        cycles: gen_f64(rng),
+        compute_cycles: gen_f64(rng),
+        dram_cycles: gen_f64(rng),
+        busy_macs: rng.next_u64(),
+        gbuf_to_lbuf: rng.next_u64(),
+        obuf_to_gbuf: rng.next_u64(),
+        dram_read: rng.next_u64(),
+        dram_write: rng.next_u64(),
+        overcore: rng.next_u64(),
+        waves: WAVE_KEYS[..n].iter().map(|k| (k.to_string(), rng.next_u64())).collect(),
+    }
+}
+
+fn gen_plan_result(rng: &mut Lcg64) -> PlanResult {
+    PlanResult {
+        best: gen_string(rng),
+        best_cycles: gen_f64(rng),
+        best_dram: rng.next_u64(),
+        heuristic_cycles: gen_f64(rng),
+        heuristic_dram: rng.next_u64(),
+        evaluated: rng.next_u64(),
+        deduped: rng.next_u64(),
+        from_store: rng.next_below(2) == 0,
+    }
+}
+
+fn gen_stats_block(rng: &mut Lcg64) -> StatsBlock {
+    StatsBlock {
+        hits: rng.next_u64(),
+        misses: rng.next_u64(),
+        store_hits: rng.next_u64(),
+        store_writes: rng.next_u64(),
+        sims: rng.next_u64(),
+        entries: rng.next_u64(),
+    }
+}
+
+fn gen_error_kind(rng: &mut Lcg64) -> ErrorKind {
+    match rng.next_below(4) {
+        0 => ErrorKind::Oversized,
+        1 => ErrorKind::Malformed,
+        2 => ErrorKind::Invalid,
+        _ => ErrorKind::ShuttingDown,
+    }
+}
+
+fn gen_envelope(rng: &mut Lcg64) -> Envelope {
+    let body = match rng.next_below(8) {
+        0 => Ok(ServeResponse::Simulate(gen_sim_result(rng))),
+        1 => Ok(ServeResponse::Plan(gen_plan_result(rng))),
+        2 => Ok(ServeResponse::Report { figure: gen_string(rng), text: gen_string(rng) }),
+        3 => Ok(ServeResponse::Stats {
+            global: gen_stats_block(rng),
+            connections: rng.next_u64(),
+            requests: rng.next_u64(),
+            errors: rng.next_u64(),
+            outstanding: rng.next_u64(),
+        }),
+        4 => Ok(ServeResponse::Pong),
+        5 => Ok(ServeResponse::ShutdownAck { outstanding: rng.next_u64() }),
+        _ => Err(WireError::new(gen_error_kind(rng), gen_string(rng))),
+    };
+    Envelope {
+        id: if rng.next_below(2) == 0 { Some(rng.next_u64()) } else { None },
+        body,
+        stats: EnvelopeStats {
+            client_requests: rng.next_u64(),
+            client_errors: rng.next_u64(),
+            global: gen_stats_block(rng),
+            request: gen_stats_block(rng),
+        },
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Codec round-trip properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_request_frames_round_trip() {
+    forall(
+        &Config { cases: 400, ..Default::default() },
+        gen_frame,
+        |_| Vec::new(),
+        |frame| {
+            let line = encode_request(frame);
+            if line.contains('\n') {
+                return Err(format!("encoded frame contains a newline: {line:?}"));
+            }
+            let back = parse_request(&line).map_err(|e| format!("{line}: {e:?}"))?;
+            if back != *frame {
+                return Err(format!("round trip changed the frame: {back:?} via {line}"));
+            }
+            // Canonical-form stability: re-encoding the parse is identical
+            // (pins deterministic member order for the smoke tooling).
+            let again = encode_request(&back);
+            if again != line {
+                return Err(format!("re-encode differs:\n  {line}\n  {again}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_response_envelopes_round_trip() {
+    forall(
+        &Config { cases: 400, ..Default::default() },
+        gen_envelope,
+        |_| Vec::new(),
+        |env| {
+            let line = encode_envelope(env);
+            if line.contains('\n') {
+                return Err(format!("encoded envelope contains a newline: {line:?}"));
+            }
+            let back = parse_envelope(&line).map_err(|e| format!("{line}: {e:?}"))?;
+            if back != *env {
+                return Err(format!("round trip changed the envelope via {line}"));
+            }
+            // Re-encode equality implies the f64 fields survived bit-exactly
+            // (shortest-round-trip formatting), on top of PartialEq.
+            let again = encode_envelope(&back);
+            if again != line {
+                return Err(format!("re-encode differs:\n  {line}\n  {again}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_request_parser_never_panics_on_garbage() {
+    forall(
+        &Config { cases: 600, ..Default::default() },
+        |rng| {
+            let len = rng.next_below(80) as usize;
+            let bytes: Vec<u8> = (0..len).map(|_| (rng.next_below(128)) as u8).collect();
+            String::from_utf8_lossy(&bytes).into_owned()
+        },
+        |s| vec![s[..s.len() / 2].to_string()],
+        |garbage| {
+            // Any outcome but a panic is acceptable; errors must stay in
+            // the client-fault taxonomy (never ShuttingDown/Oversized,
+            // which only the daemon itself assigns).
+            match parse_request(garbage) {
+                Ok(_) => Ok(()),
+                Err(e) if matches!(e.kind, ErrorKind::Malformed | ErrorKind::Invalid) => Ok(()),
+                Err(e) => Err(format!("unexpected kind {:?} for {garbage:?}", e.kind)),
+            }
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Adversarial socket fuzz against a live daemon
+// ---------------------------------------------------------------------------
+
+const FUZZ_MAX_FRAME: usize = 2048;
+
+fn tcp_listener() -> (serve::Listener, SocketAddr) {
+    let l = serve::Listener::tcp("127.0.0.1:0").expect("bind");
+    let addr = match &l {
+        serve::Listener::Tcp { addr, .. } => *addr,
+        #[cfg(unix)]
+        _ => unreachable!(),
+    };
+    (l, addr)
+}
+
+/// Valid request lines the mutator starts from (never `shutdown` — the
+/// daemon must stay up for the whole corpus).
+fn base_lines() -> Vec<String> {
+    vec![
+        encode_request(&Frame {
+            id: Some(7),
+            req: ServeRequest::Simulate {
+                shape: GemmShape::new(32, 16, 8),
+                phase: Phase::Forward,
+                memory: Memory::Ideal,
+                config: ConfigRef::Preset("1G1C".into()),
+            },
+        }),
+        encode_request(&Frame {
+            id: None,
+            req: ServeRequest::Plan {
+                shape: GemmShape::new(24, 8, 16),
+                phase: Phase::WeightGrad,
+                memory: Memory::Ideal,
+                config: ConfigRef::Preset("1G1C".into()),
+                strategy: SearchStrategy::Beam(2),
+            },
+        }),
+        encode_request(&Frame { id: Some(1), req: ServeRequest::Stats }),
+        encode_request(&Frame { id: None, req: ServeRequest::Report { figure: "table1".into() } }),
+    ]
+}
+
+/// One mutated (usually invalid) frame body, possibly broken UTF-8.
+fn mutate(rng: &mut Lcg64, base: &[String]) -> Vec<u8> {
+    let mut bytes = base[rng.next_below(base.len() as u64) as usize].clone().into_bytes();
+    match rng.next_below(7) {
+        0 => {
+            // Truncate mid-frame.
+            bytes.truncate(rng.next_below(bytes.len() as u64 + 1) as usize);
+        }
+        1 => {
+            // Flip one byte to anything (including \n: that just splits the
+            // frame — both halves must still be answered or skipped).
+            if !bytes.is_empty() {
+                let i = rng.next_below(bytes.len() as u64) as usize;
+                bytes[i] = rng.next_below(256) as u8;
+            }
+        }
+        2 => {
+            // Insert a few random bytes.
+            for _ in 0..=rng.next_below(8) {
+                let i = rng.next_below(bytes.len() as u64 + 1) as usize;
+                bytes.insert(i, rng.next_below(256) as u8);
+            }
+        }
+        3 => {
+            // Replace with pure noise (often invalid UTF-8).
+            let len = rng.next_below(64) as usize;
+            bytes = (0..len).map(|_| rng.next_below(256) as u8).collect();
+        }
+        4 => {
+            // Oversize past the frame limit.
+            while bytes.len() <= FUZZ_MAX_FRAME {
+                let b = bytes.clone();
+                bytes.extend_from_slice(&b);
+                if bytes.is_empty() {
+                    bytes = vec![b'x'; FUZZ_MAX_FRAME + 16];
+                }
+            }
+            bytes.retain(|&b| b != b'\n');
+        }
+        5 => {
+            // Valid JSON, hostile schema.
+            let depth = 4 + rng.next_below(16) as usize;
+            let nested = "[".repeat(depth) + &"]".repeat(depth);
+            bytes = match rng.next_below(4) {
+                0 => format!("{{\"type\":\"simulate\",\"m\":{},\"n\":1,\"k\":1,\"config\":\"1G1C\"}}", MAX_DIM + 1),
+                1 => format!("{{\"type\":\"x\",\"pad\":{nested}}}"),
+                2 => "{\"type\":\"report\",\"figure\":\"fig99\"}".to_string(),
+                _ => "null".to_string(),
+            }
+            .into_bytes();
+        }
+        _ => {
+            // Duplicate the whole frame: trailing garbage after one value.
+            let b = bytes.clone();
+            bytes.extend_from_slice(&b);
+        }
+    }
+    bytes
+}
+
+/// Fuzz a live daemon over one persistent connection: after every garbage
+/// frame a `ping` must still round-trip — the connection is never wedged
+/// and the daemon never dies. Pins the ISSUE acceptance criterion "no
+/// malformed input can crash the daemon or wedge a connection".
+#[test]
+fn fuzz_daemon_survives_malformed_truncated_oversized_frames() {
+    let (listener, addr) = tcp_listener();
+    let opts = ServeOptions {
+        workers: 2,
+        read_timeout: Duration::from_secs(120),
+        max_frame: FUZZ_MAX_FRAME,
+        quiet: true,
+        handle_signals: false,
+        flush_throttle: None,
+    };
+    let handle = serve::spawn(listener, Arc::new(SimSession::new()), opts);
+
+    let stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+
+    let base = base_lines();
+    let mut rng = Lcg64::new(0x5EedF00d);
+    let mut error_replies = 0u64;
+    for case in 0..120u64 {
+        let garbage = mutate(&mut rng, &base);
+        w.write_all(&garbage).unwrap();
+        w.write_all(b"\n").unwrap();
+        let ping_id = 1_000_000 + case;
+        w.write_all(encode_request(&Frame { id: Some(ping_id), req: ServeRequest::Ping }).as_bytes())
+            .unwrap();
+        w.write_all(b"\n").unwrap();
+        w.flush().unwrap();
+
+        // Read replies until our ping's pong; every line in between must be
+        // a well-formed envelope (ok:true if the mutation stayed valid,
+        // else a structured client-fault error).
+        let mut hops = 0;
+        loop {
+            hops += 1;
+            assert!(hops <= 50, "case {case}: no pong after 50 replies ({garbage:?})");
+            let mut line = String::new();
+            let n = r.read_line(&mut line).unwrap_or_else(|e| {
+                panic!("case {case}: connection wedged ({e}) after {garbage:?}")
+            });
+            assert!(n > 0, "case {case}: daemon closed the connection after {garbage:?}");
+            let env = parse_envelope(line.trim_end())
+                .unwrap_or_else(|e| panic!("case {case}: bad envelope {line:?}: {e:?}"));
+            match env.body {
+                Ok(ServeResponse::Pong) if env.id == Some(ping_id) => break,
+                Ok(_) => {} // the mutation happened to stay a valid request
+                Err(e) => {
+                    error_replies += 1;
+                    assert!(
+                        matches!(
+                            e.kind,
+                            ErrorKind::Malformed | ErrorKind::Invalid | ErrorKind::Oversized
+                        ),
+                        "case {case}: unexpected error kind {:?}",
+                        e.kind
+                    );
+                }
+            }
+        }
+    }
+    assert!(error_replies > 50, "fuzz corpus produced only {error_replies} error replies");
+
+    // The daemon is still fully functional: stats then a graceful shutdown.
+    w.write_all(encode_request(&Frame { id: None, req: ServeRequest::Stats }).as_bytes()).unwrap();
+    w.write_all(b"\n").unwrap();
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    let env = parse_envelope(line.trim_end()).unwrap();
+    match env.body {
+        Ok(ServeResponse::Stats { errors, requests, .. }) => {
+            assert!(errors >= error_replies, "stats lost error replies: {errors}");
+            assert!(requests > error_replies);
+        }
+        other => panic!("expected stats, got {other:?}"),
+    }
+    w.write_all(encode_request(&Frame { id: None, req: ServeRequest::Shutdown }).as_bytes())
+        .unwrap();
+    w.write_all(b"\n").unwrap();
+    line.clear();
+    r.read_line(&mut line).unwrap();
+    let env = parse_envelope(line.trim_end()).unwrap();
+    assert!(matches!(env.body, Ok(ServeResponse::ShutdownAck { .. })), "{line}");
+    let outcome = handle.join().expect("daemon exited cleanly");
+    assert_eq!(outcome.connections, 1);
+    assert!(outcome.errors >= error_replies);
+}

@@ -1,0 +1,349 @@
+//! End-to-end tests for the `flexsa serve` daemon (ISSUE 6 satellites):
+//! eight concurrent clients over one warm session with bit-identity
+//! against direct [`SimSession`] calls, `sims=0` on repeat queries, and
+//! drain-on-shutdown semantics (in-flight responses flushed, drain report
+//! populated, store write-behind durable).
+
+use flexsa::config::preset;
+use flexsa::gemm::{GemmShape, Phase};
+use flexsa::planner::{Planner, Strategy};
+use flexsa::proptest::scratch_dir;
+use flexsa::serve::protocol::{
+    encode_request, parse_envelope, ConfigRef, Envelope, Frame, Memory, SearchStrategy,
+    ServeRequest, ServeResponse, SimResult,
+};
+use flexsa::serve::{self, ServeOptions};
+use flexsa::session::{SimSession, SimStore};
+use flexsa::sim::simulate_gemm_shape;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn tcp_listener() -> (serve::Listener, SocketAddr) {
+    let l = serve::Listener::tcp("127.0.0.1:0").expect("bind");
+    let addr = match &l {
+        serve::Listener::Tcp { addr, .. } => *addr,
+        #[cfg(unix)]
+        _ => unreachable!(),
+    };
+    (l, addr)
+}
+
+fn opts(workers: usize) -> ServeOptions {
+    ServeOptions {
+        workers,
+        read_timeout: Duration::from_secs(120),
+        max_frame: flexsa::serve::protocol::DEFAULT_MAX_FRAME,
+        quiet: true,
+        handle_signals: false,
+        flush_throttle: None,
+    }
+}
+
+/// A line-oriented protocol client over TCP.
+struct Client {
+    w: TcpStream,
+    r: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let s = TcpStream::connect(addr).expect("connect");
+        s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        let r = BufReader::new(s.try_clone().unwrap());
+        Client { w: s, r }
+    }
+
+    fn request(&mut self, frame: &Frame) -> Envelope {
+        self.w.write_all(encode_request(frame).as_bytes()).unwrap();
+        self.w.write_all(b"\n").unwrap();
+        self.w.flush().unwrap();
+        let mut line = String::new();
+        let n = self.r.read_line(&mut line).expect("read reply");
+        assert!(n > 0, "server closed the connection");
+        parse_envelope(line.trim_end()).unwrap_or_else(|e| panic!("bad envelope {line:?}: {e:?}"))
+    }
+}
+
+/// The shared query set: shapes × phases × memory models × presets that
+/// all eight clients hammer concurrently.
+fn keys() -> Vec<(GemmShape, Phase, Memory, &'static str)> {
+    vec![
+        (GemmShape::new(512, 64, 128), Phase::Forward, Memory::Ideal, "1G1C"),
+        (GemmShape::new(300, 40, 70), Phase::WeightGrad, Memory::Hbm2, "1G1C"),
+        (GemmShape::new(1000, 71, 333), Phase::DataGrad, Memory::Hbm2, "4G1F"),
+        (GemmShape::new(256, 32, 64), Phase::Forward, Memory::Ideal, "4G1F"),
+        (GemmShape::new(128, 128, 128), Phase::Forward, Memory::Hbm2, "1G1F"),
+        (GemmShape::new(77, 13, 211), Phase::WeightGrad, Memory::Ideal, "1G4C"),
+    ]
+}
+
+fn simulate_frame(id: u64, key: &(GemmShape, Phase, Memory, &str)) -> Frame {
+    Frame {
+        id: Some(id),
+        req: ServeRequest::Simulate {
+            shape: key.0,
+            phase: key.1,
+            memory: key.2,
+            config: ConfigRef::Preset(key.3.to_string()),
+        },
+    }
+}
+
+fn expect_sim(env: &Envelope) -> &SimResult {
+    match &env.body {
+        Ok(ServeResponse::Simulate(r)) => r,
+        other => panic!("expected simulate result, got {other:?}"),
+    }
+}
+
+/// Field-by-field bit-exact comparison (PartialEq alone would let
+/// `-0.0 == 0.0` slip through on the cycle counts).
+fn assert_sim_bits(got: &SimResult, want: &SimResult, what: &str) {
+    assert_eq!(got.cycles.to_bits(), want.cycles.to_bits(), "{what}: cycles");
+    assert_eq!(
+        got.compute_cycles.to_bits(),
+        want.compute_cycles.to_bits(),
+        "{what}: compute_cycles"
+    );
+    assert_eq!(got.dram_cycles.to_bits(), want.dram_cycles.to_bits(), "{what}: dram_cycles");
+    assert_eq!(got, want, "{what}: full result");
+}
+
+/// ISSUE 6 concurrency satellite: 8 clients, overlapping simulate + plan
+/// on one daemon, results bit-identical to direct in-process calls, and a
+/// serial repeat pass that must be answered entirely from the warm cache
+/// (`sims=0`).
+#[test]
+fn eight_clients_get_bit_identical_results_and_warm_repeats() {
+    let (listener, addr) = tcp_listener();
+    let session = SimSession::shared();
+    let handle = serve::spawn(listener, Arc::clone(&session), opts(4));
+
+    let keys = keys();
+    let plan_key = (GemmShape::new(96, 48, 64), Phase::Forward, Memory::Ideal, "1G1C");
+    let clients: Vec<_> = (0..8u64)
+        .map(|t| {
+            let keys = keys.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr);
+                let mut sims = Vec::new();
+                // Interleave the shared keys differently per client so
+                // identical queries overlap in flight.
+                for round in 0..2 {
+                    for i in 0..keys.len() {
+                        let i = (i + t as usize) % keys.len();
+                        let env = c.request(&simulate_frame(t * 100 + i as u64, &keys[i]));
+                        assert_eq!(env.id, Some(t * 100 + i as u64));
+                        sims.push((i, expect_sim(&env).clone()));
+                        if round == 0 && t % 2 == 0 && i == 0 {
+                            let env = c.request(&Frame {
+                                id: None,
+                                req: ServeRequest::Plan {
+                                    shape: plan_key.0,
+                                    phase: plan_key.1,
+                                    memory: plan_key.2,
+                                    config: ConfigRef::Preset(plan_key.3.to_string()),
+                                    strategy: SearchStrategy::Beam(2),
+                                },
+                            });
+                            match env.body {
+                                Ok(ServeResponse::Plan(p)) => sims_check_plan(&plan_key, &p),
+                                other => panic!("expected plan result, got {other:?}"),
+                            }
+                        }
+                    }
+                }
+                sims
+            })
+        })
+        .collect();
+
+    let mut per_key: Vec<Vec<SimResult>> = vec![Vec::new(); keys.len()];
+    for cl in clients {
+        for (i, sim) in cl.join().expect("client thread") {
+            per_key[i].push(sim);
+        }
+    }
+
+    // Every client saw every key twice; all answers are bit-identical to a
+    // direct, daemon-free simulation.
+    for (i, key) in keys.iter().enumerate() {
+        assert_eq!(per_key[i].len(), 16, "key {i}: 8 clients x 2 rounds");
+        let cfg = preset(key.3).unwrap();
+        let direct = SimResult::from_sim(&simulate_gemm_shape(
+            &cfg,
+            key.0,
+            key.1,
+            &key.2.options(),
+        ));
+        for (j, got) in per_key[i].iter().enumerate() {
+            assert_sim_bits(got, &direct, &format!("key {i} answer {j}"));
+        }
+    }
+
+    // Serial repeat pass: the session is warm, so the per-request delta
+    // must show exactly one memory hit and zero fresh simulations.
+    let mut c = Client::connect(addr);
+    for (i, key) in keys.iter().enumerate() {
+        let env = c.request(&simulate_frame(9000 + i as u64, key));
+        expect_sim(&env);
+        assert_eq!(env.stats.request.sims, 0, "key {i}: repeat must not simulate");
+        assert_eq!(env.stats.request.misses, 0, "key {i}: repeat must not miss");
+        assert_eq!(env.stats.request.hits, 1, "key {i}: repeat is one warm hit");
+    }
+
+    // Daemon-level counters, then graceful shutdown.
+    let env = c.request(&Frame { id: None, req: ServeRequest::Stats });
+    match env.body {
+        Ok(ServeResponse::Stats { connections, requests, errors, outstanding, global }) => {
+            assert!(connections >= 9, "8 workers + repeat client, got {connections}");
+            assert!(requests >= 8 * 12 + 6, "got {requests}");
+            assert_eq!(errors, 0);
+            assert_eq!(outstanding, 0);
+            assert!(global.hits > 0 && global.misses > 0);
+        }
+        other => panic!("expected stats, got {other:?}"),
+    }
+    let env = c.request(&Frame { id: None, req: ServeRequest::Shutdown });
+    assert!(matches!(env.body, Ok(ServeResponse::ShutdownAck { .. })));
+
+    let outcome = handle.join().expect("clean exit");
+    assert_eq!(outcome.errors, 0);
+    assert!(outcome.service.drain.is_clean(), "{:?}", outcome.service.drain);
+}
+
+/// The daemon's plan answer must match a direct planner run on a fresh
+/// session (search results are cache-independent).
+fn sims_check_plan(
+    key: &(GemmShape, Phase, Memory, &str),
+    got: &flexsa::serve::protocol::PlanResult,
+) {
+    let cfg = Arc::new(preset(key.3).unwrap());
+    let planner = Planner::new(SimSession::shared(), Strategy::Beam(2), 2);
+    let direct = flexsa::serve::protocol::PlanResult::from_choice(&planner.plan_gemm(
+        &cfg,
+        key.0,
+        key.1,
+        &key.2.options(),
+    ));
+    assert_eq!(got.best, direct.best, "plan winner");
+    assert_eq!(got.best_cycles.to_bits(), direct.best_cycles.to_bits(), "plan cycles");
+    assert_eq!(got.evaluated, direct.evaluated, "plan evaluated");
+    assert_eq!(got.deduped, direct.deduped, "plan deduped");
+}
+
+/// ISSUE 6 drain satellite: with a store-backed session and a widened
+/// flush window, `shutdown` must flush every in-flight response, count
+/// them in the drain report, and leave the write-behind entries on disk.
+#[test]
+fn shutdown_drains_in_flight_responses_and_store_writes() {
+    let dir = scratch_dir("serve-drain");
+    let store = SimStore::open(&dir).expect("open store");
+    let session = Arc::new(SimSession::with_store(store));
+    let (listener, addr) = tcp_listener();
+    let mut o = opts(2);
+    // Hold each simulate response for 800ms between completion and flush
+    // so shutdown reliably lands while responses are in flight.
+    o.flush_throttle = Some(Duration::from_millis(800));
+    let handle = serve::spawn(listener, Arc::clone(&session), o);
+
+    let shapes = 4u64;
+    let clients: Vec<_> = (0..shapes)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr);
+                let key = (
+                    GemmShape::new(200 + i as usize, 33, 44),
+                    Phase::Forward,
+                    Memory::Ideal,
+                    "1G1C",
+                );
+                c.request(&simulate_frame(i, &key))
+            })
+        })
+        .collect();
+
+    // Poll until every client's response is in flight (each respond() is
+    // sleeping in its throttle window), then shut down while they are all
+    // still held — otherwise a late client's request could be refused as
+    // shutting_down instead of drained.
+    let mut c = Client::connect(addr);
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        let env = c.request(&Frame { id: None, req: ServeRequest::Stats });
+        if let Ok(ServeResponse::Stats { outstanding, .. }) = env.body {
+            if outstanding >= shapes {
+                break;
+            }
+        }
+        assert!(Instant::now() < deadline, "never observed {shapes} in-flight responses");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let env = c.request(&Frame { id: None, req: ServeRequest::Shutdown });
+    assert!(matches!(env.body, Ok(ServeResponse::ShutdownAck { .. })), "{env:?}");
+
+    // Every in-flight client still receives its full response: drain
+    // flushes, it does not drop.
+    for cl in clients {
+        let env = cl.join().expect("client thread");
+        expect_sim(&env);
+    }
+
+    let outcome = handle.join().expect("clean exit");
+    let drain = outcome.service.drain;
+    assert!(drain.responses_flushed >= 1, "drain flushed nothing: {drain:?}");
+    assert_eq!(outcome.service.drained, drain.responses_flushed, "drained counts the flushes");
+    assert!(
+        drain.store_writes_completed >= shapes,
+        "expected >= {shapes} write-behind records, got {drain:?}"
+    );
+    assert!(drain.is_clean(), "{}", drain.summary());
+
+    // The write-behind entries survived the daemon: a cold store sees them.
+    let reopened = SimStore::open(&dir).expect("reopen store");
+    let disk = reopened.disk_stats();
+    assert!(disk.sim_entries >= shapes, "store should hold the drained sims, got {disk:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Unix-socket coverage: the daemon binds, answers, and unlinks its socket
+/// file on drain.
+#[cfg(unix)]
+#[test]
+fn unix_socket_daemon_answers_and_cleans_up_its_socket() {
+    use std::os::unix::net::UnixStream;
+
+    let dir = scratch_dir("serve-unix");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("flexsa.sock");
+    let listener = serve::Listener::unix(&path).expect("bind unix socket");
+    assert!(path.exists(), "socket file created at bind");
+    let handle = serve::spawn(listener, Arc::new(SimSession::new()), opts(1));
+
+    let s = UnixStream::connect(&path).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut w = s.try_clone().unwrap();
+    let mut r = BufReader::new(s);
+    for (frame, want_pong) in [
+        (Frame { id: Some(5), req: ServeRequest::Ping }, true),
+        (Frame { id: None, req: ServeRequest::Shutdown }, false),
+    ] {
+        w.write_all(encode_request(&frame).as_bytes()).unwrap();
+        w.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        assert!(r.read_line(&mut line).unwrap() > 0);
+        let env = parse_envelope(line.trim_end()).unwrap();
+        if want_pong {
+            assert_eq!(env.id, Some(5));
+            assert!(matches!(env.body, Ok(ServeResponse::Pong)));
+        } else {
+            assert!(matches!(env.body, Ok(ServeResponse::ShutdownAck { .. })));
+        }
+    }
+
+    handle.join().expect("clean exit");
+    assert!(!path.exists(), "socket file unlinked on drain");
+    let _ = std::fs::remove_dir_all(&dir);
+}
