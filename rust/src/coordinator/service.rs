@@ -71,13 +71,46 @@ impl Default for BatchPolicy {
     }
 }
 
+/// What travels on the leader's intake channel: requests, or the `Stop`
+/// sentinel that gives the leader an exit path which does not require
+/// every sender to disconnect. `Stop` is sent by [`SimService::shutdown`]
+/// and [`SimService`]'s `Drop` (via the control sender the service handle
+/// always retains) and by the last [`Submitter`] clone's drop — so the
+/// service handle can die while detached `Submitter`s are still alive
+/// without deadlocking the join on the leader thread.
+enum Msg {
+    Request(Request),
+    Stop,
+}
+
 /// Handle to a running service; dropping it shuts the service down.
 pub struct SimService {
-    tx: Option<Sender<Request>>,
+    tx: Option<Sender<Msg>>,
+    /// Control sender the handle keeps even after [`Self::submitter`]
+    /// detaches the intake: `shutdown`/`Drop` send [`Msg::Stop`] through
+    /// it so the leader wakes and exits even while `Submitter` clones
+    /// (and their request senders) are still alive.
+    ctrl: Sender<Msg>,
     rx: Receiver<Response>,
     next_id: Arc<AtomicU64>,
     handle: Option<std::thread::JoinHandle<ServiceStats>>,
     session: Arc<SimSession>,
+}
+
+/// The intake sender shared by every [`Submitter`] clone; when the last
+/// clone drops, this drops and tells the leader the intake is closed.
+struct SubmitterCore {
+    tx: Sender<Msg>,
+}
+
+impl Drop for SubmitterCore {
+    fn drop(&mut self) {
+        // Wake a leader blocked in `recv` (the service handle's control
+        // sender keeps the channel connected, so disconnection alone
+        // would never be observed). Send failure means the leader is
+        // already gone.
+        let _ = self.tx.send(Msg::Stop);
+    }
 }
 
 /// Detached request intake for a [`SimService`], cloneable across
@@ -87,10 +120,12 @@ pub struct SimService {
 /// response side ([`SimService::recv`] / [`SimService::shutdown`]) while
 /// any number of others submit — the serve daemon's shape. When every
 /// clone is dropped the leader runs down exactly as if the service handle
-/// had released its sender.
+/// had released its sender; conversely, shutting down (or dropping) the
+/// service while clones are still alive stops the leader and makes every
+/// later submission fail soft.
 #[derive(Clone)]
 pub struct Submitter {
-    tx: Sender<Request>,
+    core: Arc<SubmitterCore>,
     next_id: Arc<AtomicU64>,
 }
 
@@ -115,8 +150,9 @@ impl Submitter {
         opts: SimOptions,
         plan: PlanParams,
     ) -> bool {
-        self.tx
-            .send(Request { id, cfg: Arc::clone(cfg), shape, phase, opts, plan })
+        self.core
+            .tx
+            .send(Msg::Request(Request { id, cfg: Arc::clone(cfg), shape, phase, opts, plan }))
             .is_ok()
     }
 
@@ -278,13 +314,15 @@ impl SimService {
         policy: BatchPolicy,
         session: Arc<SimSession>,
     ) -> SimService {
-        let (req_tx, req_rx) = channel::<Request>();
+        let (req_tx, req_rx) = channel::<Msg>();
         let (resp_tx, resp_rx) = channel::<Response>();
         let leader_session = Arc::clone(&session);
         let handle =
             std::thread::spawn(move || leader(req_rx, resp_tx, workers, policy, leader_session));
+        let ctrl = req_tx.clone();
         SimService {
             tx: Some(req_tx),
+            ctrl,
             rx: resp_rx,
             next_id: Arc::new(AtomicU64::new(1)),
             handle: Some(handle),
@@ -299,11 +337,14 @@ impl SimService {
 
     /// Detach the request intake as a cloneable [`Submitter`], leaving
     /// this handle response-only ([`Self::recv`] / [`Self::shutdown`]).
-    /// The leader now runs down when the last `Submitter` clone drops;
+    /// The leader now runs down when the last `Submitter` clone drops —
+    /// or when this handle shuts down or drops, whichever comes first;
     /// calling [`Self::submit`] on the service afterwards panics.
     pub fn submitter(&mut self) -> Submitter {
         Submitter {
-            tx: self.tx.take().expect("intake already detached"),
+            core: Arc::new(SubmitterCore {
+                tx: self.tx.take().expect("intake already detached"),
+            }),
             next_id: Arc::clone(&self.next_id),
         }
     }
@@ -333,7 +374,7 @@ impl SimService {
         self.tx
             .as_ref()
             .expect("service shut down")
-            .send(Request { id, cfg: Arc::clone(cfg), shape, phase, opts, plan })
+            .send(Msg::Request(Request { id, cfg: Arc::clone(cfg), shape, phase, opts, plan }))
             .expect("service down");
         id
     }
@@ -345,9 +386,12 @@ impl SimService {
 
     /// Shut down and collect stats. Responses still in flight are drained
     /// and counted in [`ServiceStats::drained`] rather than silently
-    /// discarded.
+    /// discarded. Safe to call while detached [`Submitter`] clones are
+    /// still alive: the control sentinel stops the leader, and their
+    /// later submissions fail soft.
     pub fn shutdown(mut self) -> ServiceStats {
         drop(self.tx.take());
+        let _ = self.ctrl.send(Msg::Stop);
         let mut stats = self.handle.take().map(|h| h.join().unwrap()).unwrap_or_default();
         while self.rx.try_recv().is_ok() {
             stats.drained += 1;
@@ -377,15 +421,23 @@ impl SimService {
 impl Drop for SimService {
     fn drop(&mut self) {
         drop(self.tx.take());
+        // The sentinel (not channel disconnection) is what lets this join
+        // terminate while detached `Submitter` clones are still holding
+        // request senders.
+        let _ = self.ctrl.send(Msg::Stop);
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
     }
 }
 
-/// Leader loop: accumulate → batch → fan out → respond.
+/// Leader loop: accumulate → batch → fan out → respond. Exits on a
+/// [`Msg::Stop`] sentinel (service handle shutdown/drop, or the last
+/// detached `Submitter` dropping) or on channel disconnection, after
+/// dispatching every request already pulled; requests still queued behind
+/// the sentinel are dropped (their senders were racing the shutdown).
 fn leader(
-    req_rx: Receiver<Request>,
+    req_rx: Receiver<Msg>,
     resp_tx: Sender<Response>,
     workers: usize,
     policy: BatchPolicy,
@@ -398,9 +450,9 @@ fn leader(
 
     loop {
         // Pull requests without blocking past the batching deadline.
-        loop {
+        while !closed {
             match req_rx.try_recv() {
-                Ok(r) => {
+                Ok(Msg::Request(r)) => {
                     if pending.is_empty() {
                         oldest = Some(Instant::now());
                     }
@@ -410,9 +462,8 @@ fn leader(
                     }
                 }
                 Err(TryRecvError::Empty) => break,
-                Err(TryRecvError::Disconnected) => {
+                Ok(Msg::Stop) | Err(TryRecvError::Disconnected) => {
                     closed = true;
-                    break;
                 }
             }
         }
@@ -434,13 +485,14 @@ fn leader(
         } else if closed {
             return stats;
         } else if pending.is_empty() {
-            // Idle: block for the next request.
+            // Idle: block for the next request (a `Stop` sentinel wakes
+            // this even while other senders stay connected).
             match req_rx.recv() {
-                Ok(r) => {
+                Ok(Msg::Request(r)) => {
                     oldest = Some(Instant::now());
                     pending.push(r);
                 }
-                Err(_) => closed = true,
+                Ok(Msg::Stop) | Err(_) => closed = true,
             }
         } else {
             // A batch is forming: block until either another request
@@ -448,7 +500,8 @@ fn leader(
             let deadline = oldest.expect("pending implies oldest") + policy.max_wait;
             let wait = deadline.saturating_duration_since(Instant::now());
             match req_rx.recv_timeout(wait) {
-                Ok(r) => pending.push(r),
+                Ok(Msg::Request(r)) => pending.push(r),
+                Ok(Msg::Stop) => closed = true,
                 Err(RecvTimeoutError::Timeout) => {} // batch is due next pass
                 Err(RecvTimeoutError::Disconnected) => closed = true,
             }
@@ -730,7 +783,10 @@ mod tests {
         let mut svc = SimService::start(1, BatchPolicy::default());
         let sub = svc.submitter();
         let cfg = Arc::new(preset("1G1C").unwrap());
-        drop(svc); // whole service gone; intake must fail soft
+        // `sub` is still alive here: dropping the service must not block
+        // on the Submitter going away (the control sentinel, not channel
+        // disconnection, stops the leader).
+        drop(svc);
         let shape = GemmShape::new(64, 64, 64);
         assert!(sub.submit(&cfg, shape, Phase::Forward, SimOptions::ideal()).is_none());
         let id = sub.allocate();
@@ -742,6 +798,22 @@ mod tests {
             SimOptions::ideal(),
             PlanParams::HEURISTIC
         ));
+    }
+
+    #[test]
+    fn shutdown_with_a_live_submitter_returns_stats() {
+        let mut svc = SimService::start(1, BatchPolicy::default());
+        let sub = svc.submitter();
+        let cfg = Arc::new(preset("1G1C").unwrap());
+        let shape = GemmShape::new(96, 32, 48);
+        let id = sub.submit(&cfg, shape, Phase::Forward, SimOptions::ideal()).unwrap();
+        assert_eq!(svc.recv().unwrap().id, id);
+        // The submitter outlives the service handle: shutdown must stop
+        // the leader and report, not wait for `sub` to drop.
+        let stats = svc.shutdown();
+        assert_eq!(stats.requests, 1, "{stats:?}");
+        // The orphaned submitter now fails soft.
+        assert!(sub.submit(&cfg, shape, Phase::Forward, SimOptions::ideal()).is_none());
     }
 
     #[test]

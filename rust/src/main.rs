@@ -48,7 +48,9 @@ cache maintenance (ROADMAP store GC):
 serving (long-running daemon over the warm session; DESIGN.md §14):
   serve --socket PATH | --listen ADDR:PORT   newline-delimited JSON daemon
         [--read-timeout-ms N] [--max-frame N] (simulate/plan/report/stats/
-        [--quiet]                             ping/shutdown requests)
+        [--quiet]                             ping/shutdown requests; no
+                                             auth -- bind 127.0.0.1 unless
+                                             the network is trusted)
   query --socket PATH | --connect ADDR:PORT  send request lines (args or
         [REQUEST_JSON ...]                    stdin), print response lines
 

@@ -6,8 +6,10 @@
 //!   envelope and the connection keeps working;
 //! - a frame longer than the limit is skipped (never buffered whole) and
 //!   answered with an `oversized` error;
-//! - a client that stalls mid-frame is disconnected after the idle
-//!   timeout without disturbing other connections.
+//! - a client that stalls — or trickles bytes without ever completing a
+//!   frame — is disconnected after the idle timeout without disturbing
+//!   other connections: "idle" means time without a completed frame, so
+//!   one byte per tick cannot pin a connection thread open forever.
 
 use super::protocol::{
     encode_envelope, parse_request, Envelope, ErrorKind, ServeRequest, StatsBlock, WireError,
@@ -16,7 +18,7 @@ use super::Shared;
 use std::io::{ErrorKind as IoKind, Read, Write};
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Socket read-timeout tick: reads wake this often so the connection can
 /// notice daemon drain and accumulate idle time toward the configured
@@ -57,8 +59,14 @@ impl<S: Read> FrameReader<S> {
         &mut self.stream
     }
 
-    /// Read until the next framing event.
+    /// Read until the next framing event. Each call is bounded to roughly
+    /// one [`READ_TICK`] of wall time even when bytes keep arriving: a
+    /// client trickling a byte at a time without a newline gets a
+    /// `TimedOut` tick back (partial frame stays buffered) instead of
+    /// pinning this loop, so the caller's idle-timeout accounting and
+    /// drain check still run against it.
     pub(crate) fn next_frame(&mut self) -> FrameEvent {
+        let start = Instant::now();
         loop {
             if let Some(nl) = self.buf.iter().position(|&b| b == b'\n') {
                 let mut line: Vec<u8> = self.buf.drain(..=nl).collect();
@@ -75,7 +83,12 @@ impl<S: Read> FrameReader<S> {
             }
             if self.buf.len() > self.max_frame {
                 self.buf.clear();
-                return self.skip_to_newline();
+                return self.skip_to_newline(start);
+            }
+            // Checked only after the buffer has been mined for a complete
+            // frame, so a frame that did arrive always wins over the tick.
+            if start.elapsed() >= READ_TICK {
+                return FrameEvent::TimedOut;
             }
             match self.fill() {
                 Ok(0) => return FrameEvent::Eof,
@@ -95,8 +108,14 @@ impl<S: Read> FrameReader<S> {
     }
 
     /// Discard bytes until a newline; buffered follow-on bytes are kept.
-    fn skip_to_newline(&mut self) -> FrameEvent {
+    /// `start` is when the enclosing `next_frame` call began: a client
+    /// that stalls or trickles mid-skip is treated as dead (the frame is
+    /// oversized garbage anyway) rather than allowed to pin this loop.
+    fn skip_to_newline(&mut self, start: Instant) -> FrameEvent {
         loop {
+            if start.elapsed() >= READ_TICK {
+                return FrameEvent::Eof;
+            }
             let mut chunk = [0u8; 4096];
             match self.stream.read(&mut chunk) {
                 Ok(0) => return FrameEvent::Eof,
@@ -106,12 +125,8 @@ impl<S: Read> FrameReader<S> {
                         return FrameEvent::Oversized;
                     }
                 }
-                // A stalling client mid-skip still counts against the idle
-                // timeout: report the oversized frame now; the remaining
-                // garbage (up to the next newline) resumes discarding on
-                // the next call via the empty buffer + skip state... but a
-                // simple policy is stronger: treat a timeout during skip
-                // as a dead client.
+                // A timeout during skip is a dead client: simplest policy
+                // that keeps the discard O(1) in both memory and state.
                 Err(e) if is_timeout(&e) => return FrameEvent::Eof,
                 Err(e) if e.kind() == IoKind::Interrupted => {}
                 Err(e) => return FrameEvent::Err(e),
@@ -332,5 +347,34 @@ mod tests {
         input.push(b'\n');
         let evs = frames(&input, 64);
         assert!(matches!(&evs[0], FrameEvent::Frame(f) if f.len() == 64));
+    }
+
+    /// A stream that always has one more byte and never a newline — the
+    /// shape of a client trickling bytes to defeat the idle timeout.
+    struct Trickle;
+
+    impl std::io::Read for Trickle {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            buf[0] = b'x';
+            Ok(1)
+        }
+    }
+
+    #[test]
+    fn trickling_bytes_without_a_newline_yields_timeout_ticks() {
+        // Before the per-call wall budget, this spun forever inside
+        // next_frame (reads kept succeeding), so the caller never
+        // accumulated idle time or rechecked the daemon's drain flag.
+        let mut r = FrameReader::new(Trickle, 1 << 20);
+        let start = std::time::Instant::now();
+        assert!(matches!(r.next_frame(), FrameEvent::TimedOut));
+        assert!(
+            start.elapsed() < Duration::from_secs(10),
+            "tick took {:?}",
+            start.elapsed()
+        );
+        assert!(!r.buf.is_empty(), "partial frame must stay buffered across ticks");
+        // The next call ticks again rather than wedging.
+        assert!(matches!(r.next_frame(), FrameEvent::TimedOut));
     }
 }

@@ -223,14 +223,23 @@ impl Shared {
         self.draining.load(Ordering::SeqCst)
     }
 
-    /// Flip into draining mode (idempotent); snapshots the in-flight count
-    /// the drain is responsible for flushing.
+    /// Flip into draining mode (idempotent); the winning transition
+    /// snapshots the in-flight count the drain is responsible for
+    /// flushing, *after* the flag is set so a simulate that raced past
+    /// the `draining()` check and incremented `outstanding` is usually
+    /// included. A request can still slip between the swap and the load
+    /// (its response is flushed but uncounted), so the flushed-responses
+    /// stat is a lower bound under concurrency — documented in
+    /// DESIGN.md §14; the `saturating_sub` in `run_daemon` keeps the
+    /// accounting from underflowing either way.
     pub(crate) fn begin_drain(&self) -> u64 {
-        let inflight = self.outstanding.load(Ordering::SeqCst);
         if !self.draining.swap(true, Ordering::SeqCst) {
+            let inflight = self.outstanding.load(Ordering::SeqCst);
             self.drain_inflight.store(inflight, Ordering::SeqCst);
+            inflight
+        } else {
+            self.drain_inflight.load(Ordering::SeqCst)
         }
-        inflight
     }
 
     pub(crate) fn log(&self, msg: &str) {
@@ -497,6 +506,19 @@ fn run_daemon(
         shared.opts.workers.max(1),
         shared.opts.max_frame
     ));
+    match &listener {
+        // Deliberately not gated on `quiet`: the protocol carries no
+        // authentication (DESIGN.md §14), so a non-loopback bind lets any
+        // reachable peer run expensive plan searches or issue `shutdown`
+        // and kill the daemon.
+        Listener::Tcp { addr, .. } if !addr.ip().is_loopback() => eprintln!(
+            "# serve: WARNING: {endpoint} is not a loopback address and the \
+             protocol is unauthenticated; any peer that can reach this port \
+             can run plan searches or shut the daemon down. Bind \
+             127.0.0.1:PORT unless the network is trusted."
+        ),
+        _ => {}
+    }
     if shared.opts.handle_signals {
         sig::install();
     }
