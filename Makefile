@@ -1,7 +1,7 @@
 # Convenience targets. The rust build needs no artifacts; `artifacts` is
 # only for the optional PJRT end-to-end path (DESIGN.md §6).
 
-.PHONY: artifacts test rust-test py-test bench-smoke store-smoke plan-smoke group-smoke serve-smoke
+.PHONY: artifacts test rust-test py-test bench-smoke perf-smoke store-smoke plan-smoke group-smoke serve-smoke
 
 # AOT-lower the L2 model + L1 kernel to HLO text (python runs once, at
 # build time; see python/compile/aot.py).
@@ -19,6 +19,23 @@ py-test:
 # caught on every PR without paying for stable timings.
 bench-smoke:
 	cd rust && FLEXSA_BENCH_SMOKE=1 cargo bench
+
+# Fast-path perf smoke (DESIGN.md §15): the fast/streaming equivalence
+# forall must pass, and a smoke run of sim_hotpath must show the fast
+# path covering the whole preset corpus (`# fastpath: fast=N fallback=0`
+# with N > 0 — divergence fails the test, disablement fails the grep).
+# The JSON-lines rows land in /tmp/flexsa-perf-smoke.jsonl (the BENCH_*
+# artifact CI uploads).
+perf-smoke:
+	rm -f /tmp/flexsa-perf-smoke.jsonl
+	cd rust && cargo test --release -q --test prop_fastpath
+	cd rust && FLEXSA_BENCH_SMOKE=1 FLEXSA_BENCH_JSON=/tmp/flexsa-perf-smoke.jsonl \
+	  cargo bench --bench sim_hotpath | tee /tmp/flexsa-perf-smoke.log
+	@line=$$(grep '^# fastpath: ' /tmp/flexsa-perf-smoke.log | tail -n 1); \
+	 fast=$$(printf '%s\n' "$$line" | sed -n 's/.*fast=\([0-9]*\).*/\1/p'); \
+	 fb=$$(printf '%s\n' "$$line" | sed -n 's/.*fallback=\([0-9]*\).*/\1/p'); \
+	 echo "dispatch census: fast=$$fast fallback=$$fb"; \
+	 test -n "$$fast" && test "$$fast" -gt 0 && test -n "$$fb" && test "$$fb" -eq 0
 
 # Local mirror of CI's persistent-cache smoke: the second identical run
 # against a warm --cache-dir must report sims=0 on its store line

@@ -13,7 +13,7 @@
 //! group-warmed by the base config, plus the exhaustive-plan
 //! group-sim-count reduction.
 
-use flexsa::bench_harness::{black_box, Bencher};
+use flexsa::bench_harness::{black_box, BenchLog, Bencher};
 use flexsa::config::{preset, AcceleratorConfig};
 use flexsa::gemm::{Gemm, GemmShape, Phase};
 use flexsa::models::resnet50;
@@ -25,6 +25,7 @@ use std::sync::Arc;
 
 fn main() {
     let b = Bencher::auto_quick();
+    let log = BenchLog::from_env("session_cache");
     let model = resnet50();
     let epochs = 12usize;
     let interval = 3usize;
@@ -66,6 +67,7 @@ fn main() {
         black_box(replay(&SimSession::disabled()))
     });
     println!("{}", cold.report_throughput(total_gemms as f64, "gemms"));
+    log.add(&cold);
 
     // Fresh session per replay: the figure-harness shape (dedup within one
     // harness run only).
@@ -73,6 +75,7 @@ fn main() {
         black_box(replay(&SimSession::new()))
     });
     println!("{}", warm.report_throughput(total_gemms as f64, "gemms"));
+    log.add(&warm);
 
     // Persistent session across replays: the serving / trainer-replay
     // shape (steady-state, everything hits).
@@ -81,6 +84,7 @@ fn main() {
         black_box(replay(&persistent))
     });
     println!("{}", hot.report_throughput(total_gemms as f64, "gemms"));
+    log.add(&hot);
 
     // Persistent on-disk second tier (DESIGN.md §11): the repeated-CLI
     // shape. Cold-disk pays codec + atomic-write overhead on every miss;
@@ -99,6 +103,7 @@ fn main() {
         black_box(replay(&SimSession::with_store(SimStore::open(d).expect("open bench store"))))
     });
     println!("{}", cold_disk.report_throughput(total_gemms as f64, "gemms"));
+    log.add(&cold_disk);
 
     let dir = base.join("warm");
     let store_session =
@@ -108,6 +113,7 @@ fn main() {
         black_box(replay(&store_session()))
     });
     println!("{}", warm_disk.report_throughput(total_gemms as f64, "gemms"));
+    log.add(&warm_disk);
 
     // Store hit rate + simulation count of one warm-disk replay.
     let probe = store_session();
@@ -132,6 +138,7 @@ fn main() {
         black_box(replay_on(&sweep_cfg, &SimSession::new()))
     });
     println!("{}", grp_cold.report_throughput(total_gemms as f64, "gemms"));
+    log.add(&grp_cold);
     let warm_base = SimSession::new();
     black_box(replay(&warm_base)); // warm the group tier on the base config
     let grp_warm = b.run("group_reuse/cross_config_group_warm", || {
@@ -139,6 +146,7 @@ fn main() {
         black_box(replay_on(&sweep_cfg, &warm_base))
     });
     println!("{}", grp_warm.report_throughput(total_gemms as f64, "gemms"));
+    log.add(&grp_warm);
     let probe = SimSession::new();
     black_box(replay(&probe));
     let before = probe.stats();
@@ -179,4 +187,5 @@ fn main() {
     println!("per-replay cache: {}", stats.summary());
     println!("group tier (one cached replay): {}", stats.group_summary());
     println!("speedup cached vs uncached: {speedup:.2}x (acceptance target: >= 2x)");
+    log.note("cache_speedup", &format!("{speedup:.3}"));
 }

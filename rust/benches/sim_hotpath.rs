@@ -1,22 +1,53 @@
 //! Hot-path microbenchmarks: the compile+simulate pipeline per GEMM and
 //! per whole-model iteration — the simulator throughput targets of
 //! EXPERIMENTS.md §Perf — plus the session-cache hit path layered on top.
+//!
+//! The single-GEMM rows compare three tiers of the same computation:
+//! materialized programs, the streaming per-instruction executor (forced —
+//! the pre-fast-path baseline), and the closed-form fast path the
+//! dispatcher now takes (DESIGN.md §15). The per-config `# fastpath
+//! speedup` lines back the ≥10× claim in EXPERIMENTS.md §Perf.
 
-use flexsa::bench_harness::{black_box, Bencher};
-use flexsa::compiler::compile_gemm;
+use flexsa::bench_harness::{black_box, BenchLog, Bencher};
+use flexsa::compiler::{compile_gemm, gbuf_blocking_with, partitions_with, PlanParams};
 use flexsa::config::preset;
 use flexsa::gemm::{GemmShape, Phase};
 use flexsa::models::{resnet50, ChannelCounts};
 use flexsa::session::SimSession;
-use flexsa::sim::{simulate_gemm, simulate_gemm_shape, simulate_model_epoch, SimOptions};
+use flexsa::sim::{
+    execute_group_streaming, fastpath_counters, simulate_gemm, simulate_gemm_shape,
+    simulate_model_epoch, GemmFold, SimOptions,
+};
+
+/// The pre-fast-path baseline: the identical group fold with every group
+/// forced through the streaming executor (bit-identical results, pinned by
+/// `tests/prop_fastpath.rs`).
+fn simulate_streaming(
+    cfg: &flexsa::config::AcceleratorConfig,
+    shape: GemmShape,
+    phase: Phase,
+    opts: &SimOptions,
+) -> f64 {
+    let plan = PlanParams::HEURISTIC;
+    let (parts, k_parts) = partitions_with(cfg, shape, phase, &plan.partition);
+    let k_partitioned = k_parts > 1;
+    let mut fold = GemmFold::new();
+    for p in parts {
+        let g = execute_group_streaming(cfg, p, k_partitioned, &plan.mode, opts);
+        fold.add(&g, &gbuf_blocking_with(cfg, p, phase, k_parts, &plan.blocking));
+    }
+    fold.finish(cfg, opts).cycles
+}
 
 fn main() {
     let b = Bencher::auto();
+    let log = BenchLog::from_env("sim_hotpath");
     let opts = SimOptions::hbm2();
 
     // Single-GEMM pipeline on all Table-I configs: materialized programs
-    // vs the streaming compile+simulate hot path (§Perf), vs a session-
-    // cache hit (pure fingerprint + lookup cost).
+    // vs the forced streaming executor vs the closed-form fast path
+    // (what `simulate_gemm_shape` now dispatches to), vs a session-cache
+    // hit (pure fingerprint + lookup cost).
     for name in ["1G1C", "1G4C", "4G4C", "1G1F", "4G1F"] {
         let cfg = preset(name).unwrap();
         let shape = GemmShape::new(100_352, 256, 1152); // resnet50-scale fwd
@@ -28,10 +59,20 @@ fn main() {
             black_box(s.cycles)
         });
         println!("{}", r.report_throughput(waves as f64, "waves"));
-        let r = b.run(&format!("gemm_sim_streaming/{name}"), || {
+        log.add(&r);
+        let streaming = b.run(&format!("gemm_sim_streaming/{name}"), || {
+            black_box(simulate_streaming(&cfg, shape, Phase::Forward, &opts))
+        });
+        println!("{}", streaming.report_throughput(waves as f64, "waves"));
+        log.add(&streaming);
+        let fast = b.run(&format!("gemm_sim_fastpath/{name}"), || {
             black_box(simulate_gemm_shape(&cfg, shape, Phase::Forward, &opts).cycles)
         });
-        println!("{}", r.report_throughput(waves as f64, "waves"));
+        println!("{}", fast.report_throughput(waves as f64, "waves"));
+        log.add(&fast);
+        let speedup = streaming.mean.as_secs_f64() / fast.mean.as_secs_f64().max(1e-12);
+        println!("# fastpath speedup {name}: {speedup:.1}x (streaming -> closed-form)");
+        log.note(&format!("fastpath_speedup/{name}"), &format!("{speedup:.3}"));
         let session = SimSession::new();
         let cfg_fp = cfg.fingerprint();
         session.simulate(&cfg, shape, Phase::Forward, &opts); // warm the key
@@ -41,6 +82,7 @@ fn main() {
             )
         });
         println!("{}", r.report_throughput(waves as f64, "waves"));
+        log.add(&r);
     }
 
     // Whole-iteration simulation (161 GEMMs of ResNet50 at batch 32),
@@ -56,10 +98,19 @@ fn main() {
             black_box(simulate_model_epoch(&cfg, &model, &counts, &opts, &cold).gemm_cycles)
         });
         println!("{}", r.report_throughput(n_gemms as f64, "gemms"));
+        log.add(&r);
         let session = SimSession::new();
         let r = b.run(&format!("iter_sim_cached/resnet50/{name}"), || {
             black_box(simulate_model_epoch(&cfg, &model, &counts, &opts, &session).gemm_cycles)
         });
         println!("{}", r.report_throughput(n_gemms as f64, "gemms"));
+        log.add(&r);
     }
+
+    // Dispatch census over everything the bench just ran: every preset
+    // group must have taken the closed-form path (`make perf-smoke`
+    // asserts fallback=0).
+    let (fast, fallback) = fastpath_counters();
+    println!("# fastpath: fast={fast} fallback={fallback}");
+    log.note("fastpath_counters", &format!("fast={fast} fallback={fallback}"));
 }

@@ -140,6 +140,87 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// When this environment variable names a file, [`BenchLog`] appends one
+/// JSON line per [`BenchResult`] (and per note) to it — how CI materializes
+/// the `BENCH_*.json` perf-trajectory artifacts without a JSON dependency.
+pub const JSON_ENV: &str = "FLEXSA_BENCH_JSON";
+
+/// JSON-lines emitter for bench results, fed by [`JSON_ENV`]. Inactive
+/// (every call a no-op) when the variable is unset, so benches always log
+/// unconditionally.
+#[derive(Debug)]
+pub struct BenchLog {
+    bench: String,
+    path: Option<std::path::PathBuf>,
+    smoke: bool,
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl BenchLog {
+    /// Logger for the named bench binary; reads [`JSON_ENV`] and
+    /// [`SMOKE_ENV`] once.
+    pub fn from_env(bench: &str) -> BenchLog {
+        BenchLog {
+            bench: bench.to_string(),
+            path: std::env::var_os(JSON_ENV).map(std::path::PathBuf::from),
+            smoke: std::env::var_os(SMOKE_ENV).is_some(),
+        }
+    }
+
+    fn append(&self, line: &str) {
+        let Some(path) = &self.path else { return };
+        use std::io::Write;
+        if let Ok(mut f) =
+            std::fs::OpenOptions::new().create(true).append(true).open(path)
+        {
+            let _ = writeln!(f, "{line}");
+        }
+    }
+
+    /// Log one result row (no-op without [`JSON_ENV`]).
+    pub fn add(&self, r: &BenchResult) {
+        self.append(&format!(
+            concat!(
+                "{{\"bench\":\"{}\",\"name\":\"{}\",\"iters\":{},",
+                "\"mean_s\":{:e},\"stddev_s\":{:e},\"min_s\":{:e},\"max_s\":{:e},",
+                "\"smoke\":{}}}"
+            ),
+            json_escape(&self.bench),
+            json_escape(&r.name),
+            r.iters,
+            r.mean.as_secs_f64(),
+            r.stddev.as_secs_f64(),
+            r.min.as_secs_f64(),
+            r.max.as_secs_f64(),
+            self.smoke
+        ));
+    }
+
+    /// Log a free-form key/value note (e.g. a speedup ratio or dispatch
+    /// counters) tied to this bench.
+    pub fn note(&self, key: &str, value: &str) {
+        self.append(&format!(
+            "{{\"bench\":\"{}\",\"note\":\"{}\",\"value\":\"{}\",\"smoke\":{}}}",
+            json_escape(&self.bench),
+            json_escape(key),
+            json_escape(value),
+            self.smoke
+        ));
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -165,6 +246,31 @@ mod tests {
         let r = Bencher::smoke().run("smoke", || calls += 1);
         assert_eq!(r.iters, 1);
         assert_eq!(calls, 1);
+    }
+
+    #[test]
+    fn bench_log_appends_json_lines() {
+        let path = std::env::temp_dir()
+            .join(format!("flexsa-benchlog-{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let log = BenchLog { bench: "t".into(), path: Some(path.clone()), smoke: true };
+        let r = Bencher::smoke().run("row/\"x\"", || 1);
+        log.add(&r);
+        log.note("speedup", "12.3x");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains("\"bench\":\"t\"") && lines[0].contains("row/\\\"x\\\""));
+        assert!(lines[0].contains("\"smoke\":true"));
+        assert!(lines[1].contains("\"note\":\"speedup\"") && lines[1].contains("12.3x"));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn bench_log_without_env_is_inert() {
+        let log = BenchLog { bench: "t".into(), path: None, smoke: false };
+        log.add(&Bencher::smoke().run("row", || 1));
+        log.note("k", "v");
     }
 
     #[test]

@@ -25,8 +25,8 @@ mod tiling;
 pub use blocking::{gbuf_blocking, gbuf_blocking_with, DramPlan};
 pub use plan::{BlockingPolicy, ModePolicy, PartitionPolicy, PlanParams};
 pub use tiling::{
-    select_mode, select_mode_with, tile_partition, tile_partition_visit,
-    tile_partition_visit_plan, tiling_summary, TilingStats,
+    chunk_sizes, select_mode, select_mode_with, tile_partition, tile_partition_visit,
+    tile_partition_visit_plan, tiling_summary, ColumnPlan, TilingStats,
 };
 
 use crate::config::{AcceleratorConfig, UnitGeometry, UnitKind};

@@ -93,8 +93,12 @@ fn m_allowed(cfg: &AcceleratorConfig, mode: Mode, k_size: usize) -> usize {
     cap.clamp(1, cfg.blk_m())
 }
 
-/// Split `total` into chunks of `quantum` (last chunk smaller).
-fn chunks(total: usize, quantum: usize) -> Vec<usize> {
+/// Split `total` into chunks of `quantum` (last chunk smaller). The grid
+/// primitive shared by the streaming emitter, [`tiling_summary`], and the
+/// closed-form fast path ([`crate::sim::execute_group_fast`]) — one
+/// definition of "how a dimension quantizes", so the paths cannot drift
+/// (DESIGN.md §15).
+pub fn chunk_sizes(total: usize, quantum: usize) -> Vec<usize> {
     let mut out = Vec::with_capacity(ceil_div(total, quantum));
     let mut rem = total;
     while rem > 0 {
@@ -103,6 +107,45 @@ fn chunks(total: usize, quantum: usize) -> Vec<usize> {
         rem -= c;
     }
     out
+}
+
+/// Per-tile-column quanta: the per-k-chunk FlexSA modes, the column's
+/// m-slab quantum, and the job batch width. Shared by the streaming
+/// instruction emitter and the closed-form fast path
+/// ([`crate::sim::execute_group_fast`]) so the two derive the *same* tile
+/// grid from one computation — the no-drift contract of DESIGN.md §15.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ColumnPlan {
+    /// FlexSA mode per k-chunk (fixed within a column; index-aligned with
+    /// the column's `k_chunks`).
+    pub modes: Vec<Mode>,
+    /// The column's m-slab quantum: the tightest `m_allowed` among its
+    /// waves (horizontal-LBUF capacity under the slowest mode).
+    pub col_m: usize,
+    /// m-slabs batched per tile job (`max parallel_waves` over the
+    /// column's modes), so sub-array modes can pack parallel sub-waves.
+    pub batch: usize,
+}
+
+impl ColumnPlan {
+    /// Compute the quanta for one `n_size`-wide column over `k_chunks`.
+    pub fn compute(
+        cfg: &AcceleratorConfig,
+        n_size: usize,
+        k_chunks: &[usize],
+        policy: &ModePolicy,
+    ) -> ColumnPlan {
+        let modes: Vec<Mode> =
+            k_chunks.iter().map(|&k| select_mode_with(cfg, n_size, k, policy)).collect();
+        let col_m = k_chunks
+            .iter()
+            .zip(&modes)
+            .map(|(&k, &mode)| m_allowed(cfg, mode, k))
+            .min()
+            .unwrap_or(cfg.blk_m());
+        let batch = modes.iter().map(|m| m.parallel_waves()).max().unwrap_or(1);
+        ColumnPlan { modes, col_m, batch }
+    }
 }
 
 /// Summary of one partition's tiling (used by tests and reports).
@@ -161,32 +204,24 @@ pub fn tile_partition_visit_plan(
     }
     let rows = cfg.unit.rows;
     let cols = cfg.unit.cols;
-    let n_chunks = chunks(p.n, cols);
-    let k_chunks = chunks(p.k, rows);
+    let n_chunks = chunk_sizes(p.n, cols);
+    let k_chunks = chunk_sizes(p.k, rows);
     let units = cfg.units_per_group;
     let mut rr_unit = 0usize;
 
     let prog = sink; // emit through the sink
     for &n_size in &n_chunks {
         // Mode per k-chunk is fixed within a column; the column's m quantum
-        // must satisfy the tightest LBUF constraint among its waves.
-        let modes: Vec<Mode> =
-            k_chunks.iter().map(|&k| select_mode_with(cfg, n_size, k, policy)).collect();
-        let col_m = k_chunks
-            .iter()
-            .zip(&modes)
-            .map(|(&k, &mode)| m_allowed(cfg, mode, k))
-            .min()
-            .unwrap_or(cfg.blk_m());
-        let m_chunks = chunks(p.m, col_m);
+        // must satisfy the tightest LBUF constraint among its waves
+        // (ColumnPlan is the computation the fast path shares).
+        let col = ColumnPlan::compute(cfg, n_size, &k_chunks, policy);
+        let m_chunks = chunk_sizes(p.m, col.col_m);
         // Batch m-slabs so sub-array modes can pack parallel sub-waves.
-        let batch = modes.iter().map(|m| m.parallel_waves()).max().unwrap_or(1);
-
-        for mb in m_chunks.chunks(batch) {
+        for mb in m_chunks.chunks(col.batch) {
             let unit = rr_unit % units;
             rr_unit += 1;
             // K loop: waves accumulate into the OBUF of this tile job.
-            for (&k_size, &mode) in k_chunks.iter().zip(&modes) {
+            for (&k_size, &mode) in k_chunks.iter().zip(&col.modes) {
                 let par = mode.parallel_waves();
                 // Issue waves over the batch, `par` sub-waves at a time.
                 for issue in mb.chunks(par) {
@@ -237,23 +272,15 @@ pub fn tile_partition_visit_plan(
 
 /// Compute tiling summary statistics for a partition (without emitting).
 pub fn tiling_summary(cfg: &AcceleratorConfig, p: GemmShape) -> TilingStats {
-    let n_chunks = chunks(p.n, cfg.unit.cols);
-    let k_chunks = chunks(p.k, cfg.unit.rows);
+    let n_chunks = chunk_sizes(p.n, cfg.unit.cols);
+    let k_chunks = chunk_sizes(p.k, cfg.unit.rows);
     let mut s = TilingStats { tile_columns: n_chunks.len(), ..Default::default() };
     for &n_size in &n_chunks {
-        let modes: Vec<Mode> =
-            k_chunks.iter().map(|&k| select_mode(cfg, n_size, k)).collect();
-        let col_m = k_chunks
-            .iter()
-            .zip(&modes)
-            .map(|(&k, &m)| m_allowed(cfg, m, k))
-            .min()
-            .unwrap_or(cfg.blk_m());
-        let m_chunks = chunks(p.m, col_m);
-        let batch = modes.iter().map(|m| m.parallel_waves()).max().unwrap_or(1);
-        s.tile_jobs += ceil_div(m_chunks.len(), batch);
-        for &mode in &modes {
-            s.wave_issues += ceil_div(m_chunks.len(), mode.parallel_waves().min(batch));
+        let col = ColumnPlan::compute(cfg, n_size, &k_chunks, &ModePolicy::Algorithm1);
+        let m_chunks = chunk_sizes(p.m, col.col_m);
+        s.tile_jobs += ceil_div(m_chunks.len(), col.batch);
+        for &mode in &col.modes {
+            s.wave_issues += ceil_div(m_chunks.len(), mode.parallel_waves().min(col.batch));
         }
     }
     s

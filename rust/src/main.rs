@@ -194,6 +194,12 @@ fn print_cache_line(session: &SimSession) {
             );
         }
     }
+    // Closed-form vs streaming dispatch of execute_group (DESIGN.md §15);
+    // `fallback=0` on preset configs — `make perf-smoke` asserts it.
+    let (fast, fallback) = flexsa::sim::fastpath_counters();
+    if fast + fallback > 0 {
+        eprintln!("# fastpath: fast={fast} fallback={fallback}");
+    }
 }
 
 /// The plan-store stderr line (printed by `plan` and `report`): how many

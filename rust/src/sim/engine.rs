@@ -242,13 +242,39 @@ impl GroupExecutor {
     }
 }
 
-/// Execute one group partition's instruction stream (streamed straight out
-/// of the compiler, never materialized) and return its [`GroupSim`]. The
-/// expensive primitive the session's group tier memoizes
+/// Execute one group partition and return its [`GroupSim`]. The expensive
+/// primitive the session's group tier memoizes
 /// (`SimSession::simulate_group`); reads only the
 /// [`crate::compiler::GroupGeometry`] fields of `cfg` plus `opts`'s
 /// compute-relevant bits ([`SimOptions::group_fingerprint`]).
+///
+/// Dispatches to the closed-form fast path
+/// ([`crate::sim::execute_group_fast`], DESIGN.md §15) when it covers the
+/// configuration, and replays the streaming per-instruction executor
+/// ([`execute_group_streaming`]) otherwise. The two are bit-identical on
+/// covered shapes (pinned by `tests/prop_fastpath.rs`), so dispatch is
+/// invisible in results — only in the [`crate::sim::fastpath_counters`].
 pub fn execute_group(
+    cfg: &AcceleratorConfig,
+    p: GemmShape,
+    k_partitioned: bool,
+    mode: &ModePolicy,
+    opts: &SimOptions,
+) -> GroupSim {
+    if let Some(g) = super::fastpath::execute_group_fast(cfg, p, k_partitioned, mode, opts) {
+        super::fastpath::count_fast();
+        return g;
+    }
+    super::fastpath::count_fallback();
+    execute_group_streaming(cfg, p, k_partitioned, mode, opts)
+}
+
+/// Execute one group partition's instruction stream (streamed straight out
+/// of the compiler, never materialized) and return its [`GroupSim`] — the
+/// reference streaming executor. [`execute_group`] only uses it as the
+/// fallback for shapes the fast path declines, but it stays public as the
+/// pinning baseline for equivalence tests and before/after benches.
+pub fn execute_group_streaming(
     cfg: &AcceleratorConfig,
     p: GemmShape,
     k_partitioned: bool,
@@ -271,6 +297,11 @@ pub struct GemmFold {
     out: GemmSim,
     group_max: f64,
     dram_bytes: u64,
+    /// Wave counts by [`Mode::index`]; the `waves_by_mode` BTreeMap is
+    /// materialized once in [`GemmFold::finish`] instead of doing a map
+    /// lookup per group per mode (BTreeMap was 10%+ of the hot path once;
+    /// see the note on [`GroupExecutor`]).
+    waves: [u64; 5],
 }
 
 impl GemmFold {
@@ -285,9 +316,7 @@ impl GemmFold {
         self.out.traffic.add(&g.traffic);
         self.out.busy_macs += g.busy_macs;
         for (i, &c) in g.waves.iter().enumerate() {
-            if c > 0 {
-                *self.out.waves_by_mode.entry(Mode::from_index(i)).or_insert(0) += c;
-            }
+            self.waves[i] += c;
         }
         self.dram_bytes += dram.total_bytes();
         self.out.traffic.dram_read += dram.read_bytes;
@@ -296,6 +325,11 @@ impl GemmFold {
 
     /// Apply the DRAM bandwidth bound and return the composed [`GemmSim`].
     pub fn finish(mut self, cfg: &AcceleratorConfig, opts: &SimOptions) -> GemmSim {
+        for (i, &c) in self.waves.iter().enumerate() {
+            if c > 0 {
+                self.out.waves_by_mode.insert(Mode::from_index(i), c);
+            }
+        }
         finish_gemm(cfg, opts, &mut self.out, self.group_max, self.dram_bytes);
         self.out
     }
@@ -343,8 +377,20 @@ pub fn simulate_gemm_plan(
     let (parts, k_parts) = partitions_with(cfg, shape, phase, &plan.partition);
     let k_partitioned = k_parts > 1;
     let mut fold = GemmFold::new();
+    // Partitions are usually identical (m,n,k) slices (the session's group
+    // tier shows cold 4G1F = 1 execution + 3 hits); execute_group is a pure
+    // function of the partition shape here, so equal partitions share one
+    // execution. A linear scan suffices: groups ≤ 4 on every preset.
+    let mut seen: Vec<(GemmShape, GroupSim)> = Vec::new();
     for p in parts {
-        let g = execute_group(cfg, p, k_partitioned, &plan.mode, opts);
+        let g = match seen.iter().find(|(s, _)| *s == p) {
+            Some((_, g)) => g.clone(),
+            None => {
+                let g = execute_group(cfg, p, k_partitioned, &plan.mode, opts);
+                seen.push((p, g.clone()));
+                g
+            }
+        };
         let dram = gbuf_blocking_with(cfg, p, phase, k_parts, &plan.blocking);
         fold.add(&g, &dram);
     }

@@ -1,0 +1,576 @@
+//! Closed-form wave-pipeline fast path for group execution (DESIGN.md §15).
+//!
+//! [`execute_group_fast`] computes the exact same [`GroupSim`] as the
+//! streaming per-instruction executor — bit-identical `time`, traffic,
+//! MACs, and wave counts — directly from the tile grid, without
+//! materializing or visiting individual [`crate::isa::Inst`]s. Three facts
+//! make that possible:
+//!
+//! 1. **The grid is shared, not re-derived.** The per-column quanta
+//!    (k-chunk modes, m-slab quantum, job batch) come from the same
+//!    [`ColumnPlan`] / [`chunk_sizes`] computation the streaming emitter
+//!    uses, so the two paths tile identically by construction.
+//! 2. **The per-unit timing recurrence is max-plus-affine.** Writing a
+//!    unit's state as `(E, B)` = (exec-free, load-free), one wave issue
+//!    with load bytes `δ` and occupancy `c` (shift + longest sub-wave +
+//!    ramp) is the transform `E' = max(E + c, B + δ + c)`, `B' = B + δ`.
+//!    Such transforms compose in O(1) (`c = c₁+c₂`, `d = max(d₁+c₂,
+//!    b₁+d₂)`, `b = b₁+b₂`) and a run of `r` identical transforms
+//!    collapses to its endpoints (`d_r = max(d+(r−1)c, (r−1)b+d)` — the
+//!    max of an affine function over an integer interval), so each tile
+//!    job — and each run of identical full-K chunks inside it — folds in
+//!    O(1) instead of O(instructions). A job's trailing stores collapse
+//!    the same way: `St' = max(St, E') + Σ store bytes`.
+//! 3. **The arithmetic is exact.** When the on-chip bandwidth is an exact
+//!    power of two (`2 · cols · ELEM_BYTES` — true for every preset),
+//!    every f64 the streaming executor produces is a dyadic rational with
+//!    denominator `bw`, and every add / max / divide-by-`bw` it performs
+//!    is exact IEEE arithmetic while magnitudes stay below 2⁵³. The fast
+//!    path therefore computes in integer **ticks** (1 tick = 1/`bw`
+//!    cycles: byte counts are ticks as-is, cycle counts are `≪ log₂ bw`)
+//!    using `u128`, converts once at the end, and *falls back to the
+//!    streaming executor* — returning `None` — if the bandwidth is not a
+//!    power of two or any final value reaches 2⁵³ ticks.
+//!
+//! Bit-identity between the two paths is property-pinned by
+//! `tests/prop_fastpath.rs`; the dispatcher ([`crate::sim::execute_group`])
+//! keeps process-wide [`counters`] so benches and the CLI can report how
+//! often the fast path actually ran.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::engine::{GroupSim, Traffic};
+use super::{RampMode, SimOptions};
+use crate::compiler::{chunk_sizes, ColumnPlan, ModePolicy};
+use crate::config::AcceleratorConfig;
+use crate::gemm::{GemmShape, ACC_BYTES, ELEM_BYTES};
+use crate::isa::Mode;
+use crate::util::ceil_div;
+
+/// Largest tick value whose `as f64` conversion — and every smaller
+/// streaming intermediate — is exact. Past this the fast path falls back.
+const MAX_EXACT_TICKS: u128 = 1 << 53;
+
+static FAST: AtomicU64 = AtomicU64::new(0);
+static FALLBACK: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide `(fast, fallback)` dispatch counters of
+/// [`crate::sim::execute_group`]: how many group executions took the
+/// closed-form path vs the streaming executor. The CLI prints them as the
+/// `# fastpath:` stderr line; `make perf-smoke` asserts `fallback == 0` on
+/// the preset corpus.
+pub fn counters() -> (u64, u64) {
+    (FAST.load(Ordering::Relaxed), FALLBACK.load(Ordering::Relaxed))
+}
+
+pub(crate) fn count_fast() {
+    FAST.fetch_add(1, Ordering::Relaxed);
+}
+
+pub(crate) fn count_fallback() {
+    FALLBACK.fetch_add(1, Ordering::Relaxed);
+}
+
+/// `log₂ bw` when `bw` is a positive integral power of two, else `None`
+/// (the coverage predicate of the tick representation).
+fn exact_log2(bw: f64) -> Option<u32> {
+    if !bw.is_finite() || bw <= 0.0 || bw.fract() != 0.0 || bw > (1u64 << 52) as f64 {
+        return None;
+    }
+    let b = bw as u64;
+    if b as f64 != bw || !b.is_power_of_two() {
+        return None;
+    }
+    Some(b.trailing_zeros())
+}
+
+/// Max-plus-affine transform of one unit's `(E, B)` = (exec-free,
+/// load-free) tick state: `E' = max(E + c, B + d)`, `B' = B + bytes`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Xform {
+    /// Occupancy charged on top of the previous exec-free time.
+    c: u128,
+    /// Offset over the *entry* load-free time (folds the loads issued up
+    /// to and including the dominating issue).
+    d: u128,
+    /// Total load ticks (== bytes) issued by the transform.
+    bytes: u128,
+}
+
+impl Xform {
+    /// Sequential composition: apply `self`, then `o`.
+    fn then(self, o: Xform) -> Xform {
+        Xform {
+            c: self.c + o.c,
+            d: (self.d + o.c).max(self.bytes + o.d),
+            bytes: self.bytes + o.bytes,
+        }
+    }
+
+    /// `self` composed with itself `r ≥ 1` times. The inner maximum is
+    /// affine in the repetition index, so only the endpoints survive.
+    fn repeat(self, r: u128) -> Xform {
+        debug_assert!(r >= 1);
+        Xform {
+            c: self.c * r,
+            d: (self.d + self.c * (r - 1)).max(self.bytes * (r - 1) + self.d),
+            bytes: self.bytes * r,
+        }
+    }
+}
+
+/// Which issues of a job carry the fill/drain ramp.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum IssueRamp {
+    /// No issue (steady-state `PerGemm` jobs).
+    None,
+    /// The job's first issue only (`PerJob`, or a unit's first `PerGemm`
+    /// job).
+    First,
+    /// Every issue (`PerIssue`).
+    Every,
+}
+
+/// One tile job's pre-folded transforms (one per ramp placement), store
+/// drain, and counter deltas. Jobs of a column come in at most two kinds —
+/// steady (`batch` full slabs) and tail — so these fold once per kind and
+/// apply in O(1) per job.
+#[derive(Debug, Clone)]
+struct JobKind {
+    /// Transform with no ramp anywhere.
+    plain: Xform,
+    /// Transform with the ramp on the job's first issue.
+    first: Xform,
+    /// Transform with a ramp on every issue.
+    every: Xform,
+    /// Store-engine drain ticks (== output bytes) at job end.
+    sb: u128,
+    /// GBUF→LBUF bytes one such job moves.
+    gbuf: u64,
+    /// OBUF→GBUF bytes one such job moves.
+    obuf: u64,
+    /// Over-core bytes (broadcast copies + per-mode seam traffic).
+    overcore: u64,
+    /// Useful MACs.
+    macs: u64,
+    /// Wave issues by [`Mode::index`].
+    waves: [u64; 5],
+}
+
+/// Over-core bytes of one `m × n × k` wave in `mode` — the closed-form
+/// twin of the streaming executor's `overcore_for_mode` (same integer
+/// expressions, so per-wave sums match bit-for-bit).
+fn overcore_wave(mode: Mode, m: usize, n: usize, k: usize) -> u64 {
+    match mode {
+        Mode::Fw => (m * k * ELEM_BYTES / 2) as u64 + (m * n * ACC_BYTES / 2) as u64,
+        Mode::Hsw => (m * k * ELEM_BYTES / 2) as u64,
+        Mode::Vsw | Mode::Isw => (m * n * ACC_BYTES / 2) as u64,
+        Mode::Mono => 0,
+    }
+}
+
+/// Transform of one wave issue over sub-wave slabs `iss`.
+fn issue_xform(
+    iss: &[usize],
+    n_size: usize,
+    k_size: usize,
+    ramped: bool,
+    shiftv_overlap: bool,
+    e: u32,
+) -> Xform {
+    let ldv = (k_size * n_size * ELEM_BYTES) as u128;
+    let ldh: u128 = iss.iter().map(|&m| (k_size * m * ELEM_BYTES) as u128).sum();
+    let delta = ldv + ldh;
+    let longest = *iss.iter().max().expect("issue has at least one sub-wave") as u128;
+    let shift = if shiftv_overlap { 0 } else { (k_size as u128) << e };
+    let ramp = if ramped { ((k_size + n_size) as u128) << e } else { 0 };
+    let c = shift + (longest << e) + ramp;
+    Xform { c, d: delta + c, bytes: delta }
+}
+
+/// Transform of one k-chunk (all issues over the job's slab batch), with
+/// `ramp_first` marking whether this chunk's first issue carries the ramp.
+#[allow(clippy::too_many_arguments)]
+fn chunk_xform(
+    slabs: &[usize],
+    n_size: usize,
+    k_size: usize,
+    par: usize,
+    ramp: IssueRamp,
+    ramp_first: bool,
+    shiftv_overlap: bool,
+    e: u32,
+) -> Xform {
+    let mut out: Option<Xform> = None;
+    for (i, iss) in slabs.chunks(par).enumerate() {
+        let ramped = match ramp {
+            IssueRamp::Every => true,
+            IssueRamp::First => ramp_first && i == 0,
+            IssueRamp::None => false,
+        };
+        let x = issue_xform(iss, n_size, k_size, ramped, shiftv_overlap, e);
+        out = Some(match out {
+            Some(prev) => prev.then(x),
+            None => x,
+        });
+    }
+    out.expect("job has at least one slab")
+}
+
+/// Fold a whole job (all k-chunk classes over the slab batch) into one
+/// transform under the given ramp placement.
+fn job_xform(
+    slabs: &[usize],
+    n_size: usize,
+    classes: &[(usize, Mode, usize)],
+    ramp: IssueRamp,
+    shiftv_overlap: bool,
+    e: u32,
+) -> Xform {
+    let mut out: Option<Xform> = None;
+    for (ci, &(k_size, mode, count)) in classes.iter().enumerate() {
+        let par = mode.parallel_waves();
+        // Under `First`, only the very first issue of the job (chunk 0 of
+        // class 0) is ramped; the remaining `count - 1` identical chunks
+        // collapse through `repeat`.
+        let head_ramped = ramp == IssueRamp::First && ci == 0;
+        let head = chunk_xform(slabs, n_size, k_size, par, ramp, head_ramped, shiftv_overlap, e);
+        let class = if count > 1 {
+            let rest = if head_ramped {
+                chunk_xform(slabs, n_size, k_size, par, ramp, false, shiftv_overlap, e)
+            } else {
+                head
+            };
+            head.then(rest.repeat(count as u128 - 1))
+        } else {
+            head
+        };
+        out = Some(match out {
+            Some(prev) => prev.then(class),
+            None => class,
+        });
+    }
+    out.expect("column has at least one k-chunk")
+}
+
+/// Build one job kind: its three ramp-placement transforms plus the
+/// counter deltas a single such job contributes.
+fn build_job(
+    slabs: &[usize],
+    n_size: usize,
+    classes: &[(usize, Mode, usize)],
+    shiftv_overlap: bool,
+    store_elem: usize,
+    e: u32,
+) -> JobKind {
+    let plain = job_xform(slabs, n_size, classes, IssueRamp::None, shiftv_overlap, e);
+    let first = job_xform(slabs, n_size, classes, IssueRamp::First, shiftv_overlap, e);
+    let every = job_xform(slabs, n_size, classes, IssueRamp::Every, shiftv_overlap, e);
+
+    let mut gbuf = 0u64;
+    let mut overcore = 0u64;
+    let mut macs = 0u64;
+    let mut waves = [0u64; 5];
+    for &(k_size, mode, count) in classes {
+        let cnt = count as u64;
+        let par = mode.parallel_waves();
+        for iss in slabs.chunks(par) {
+            let ldv = (k_size * n_size * ELEM_BYTES) as u64;
+            gbuf += ldv * cnt;
+            if iss.len() > 1 {
+                // Broadcast stationary: the mirrored copy crosses the core
+                // seam (streaming's `LdLbufV { broadcast: true }` charge).
+                overcore += ldv * cnt;
+            }
+            for &m in iss {
+                gbuf += (k_size * m * ELEM_BYTES) as u64 * cnt;
+                waves[mode.index()] += cnt;
+                macs += (m as u64) * (n_size as u64) * (k_size as u64) * cnt;
+                overcore += overcore_wave(mode, m, n_size, k_size) * cnt;
+            }
+        }
+    }
+    let obuf: u64 = slabs.iter().map(|&m| (m * n_size * store_elem) as u64).sum();
+    JobKind { plain, first, every, sb: obuf as u128, gbuf, obuf, overcore, macs, waves }
+}
+
+/// Everything one column contributes: its two job kinds, the job count,
+/// and the column's total counter deltas. Full-width columns are
+/// identical, so this is computed once per distinct `n_size` (≤ 2).
+#[derive(Debug, Clone)]
+struct ColumnCost {
+    steady: JobKind,
+    tail: JobKind,
+    jobs: u64,
+    gbuf: u64,
+    obuf: u64,
+    overcore: u64,
+    macs: u64,
+    waves: [u64; 5],
+}
+
+#[allow(clippy::too_many_arguments)]
+fn build_column(
+    cfg: &AcceleratorConfig,
+    p: GemmShape,
+    n_size: usize,
+    k_chunks: &[usize],
+    policy: &ModePolicy,
+    shiftv_overlap: bool,
+    store_elem: usize,
+    e: u32,
+) -> ColumnCost {
+    let col = ColumnPlan::compute(cfg, n_size, k_chunks, policy);
+    // Run-length compress the (k, mode) sequence: the k-grid is full
+    // chunks plus at most one tail, so this is ≤ 2 classes in practice,
+    // but deriving it from ColumnPlan keeps any future grid change
+    // automatically consistent.
+    let mut classes: Vec<(usize, Mode, usize)> = Vec::new();
+    for (&k, &mode) in k_chunks.iter().zip(&col.modes) {
+        match classes.last_mut() {
+            Some((pk, pm, c)) if *pk == k && *pm == mode => *c += 1,
+            _ => classes.push((k, mode, 1)),
+        }
+    }
+
+    let s_total = ceil_div(p.m, col.col_m);
+    let m_tail = p.m - (s_total - 1) * col.col_m;
+    let jobs = ceil_div(s_total, col.batch);
+    let steady_slabs = vec![col.col_m; col.batch];
+    let tail_len = s_total - (jobs - 1) * col.batch;
+    let mut tail_slabs = vec![col.col_m; tail_len];
+    *tail_slabs.last_mut().expect("tail job has at least one slab") = m_tail;
+
+    let steady = build_job(&steady_slabs, n_size, &classes, shiftv_overlap, store_elem, e);
+    let tail = build_job(&tail_slabs, n_size, &classes, shiftv_overlap, store_elem, e);
+
+    let jobs = jobs as u64;
+    let mut waves = [0u64; 5];
+    for ((w, &s), &t) in waves.iter_mut().zip(&steady.waves).zip(&tail.waves) {
+        *w = s * (jobs - 1) + t;
+    }
+    ColumnCost {
+        gbuf: steady.gbuf * (jobs - 1) + tail.gbuf,
+        obuf: steady.obuf * (jobs - 1) + tail.obuf,
+        overcore: steady.overcore * (jobs - 1) + tail.overcore,
+        macs: steady.macs * (jobs - 1) + tail.macs,
+        waves,
+        steady,
+        tail,
+        jobs,
+    }
+}
+
+/// Per-unit tick state during the closed-form scan.
+#[derive(Debug, Clone, Copy, Default)]
+struct UnitTicks {
+    /// Exec-engine free time.
+    exec: u128,
+    /// Store-engine free time.
+    store: u128,
+    /// Load-engine free time (== total load ticks issued so far).
+    load: u128,
+    /// The unit has run a job (gates the `PerGemm` first-issue ramp).
+    ran: bool,
+}
+
+/// Closed-form twin of the streaming group executor: `Some(GroupSim)`
+/// bit-identical to [`crate::sim::execute_group_streaming`] when the shape
+/// is covered, `None` when the caller must fall back (on-chip bandwidth
+/// not a power of two, or tick magnitudes past the f64-exactness bound).
+///
+/// Folds each unit's timeline in O(jobs) and each counter in closed form
+/// over the chunk grid (see the module docs for the recurrence); shares
+/// the grid computation ([`ColumnPlan`], [`chunk_sizes`]) with the
+/// streaming emitter so the two cannot drift. Equivalence is pinned by
+/// `tests/prop_fastpath.rs` over shapes × presets × phases × options ×
+/// plans.
+pub fn execute_group_fast(
+    cfg: &AcceleratorConfig,
+    p: GemmShape,
+    k_partitioned: bool,
+    policy: &ModePolicy,
+    opts: &SimOptions,
+) -> Option<GroupSim> {
+    let bw = cfg.onchip_bytes_per_cycle_per_unit();
+    let e = exact_log2(bw)?;
+    if p.is_empty() {
+        // The streaming emitter emits nothing: a default executor result.
+        return Some(GroupSim::default());
+    }
+
+    let k_chunks = chunk_sizes(p.k, cfg.unit.rows);
+    let n_chunks = chunk_sizes(p.n, cfg.unit.cols);
+    let store_elem = if k_partitioned { ACC_BYTES } else { ELEM_BYTES };
+
+    // ≤ 2 distinct column widths (full + tail); build each cost once.
+    let mut costs: Vec<(usize, ColumnCost)> = Vec::with_capacity(2);
+    for &n_size in &n_chunks {
+        if !costs.iter().any(|(w, _)| *w == n_size) {
+            let cost = build_column(
+                cfg,
+                p,
+                n_size,
+                &k_chunks,
+                policy,
+                opts.shiftv_overlap,
+                store_elem,
+                e,
+            );
+            costs.push((n_size, cost));
+        }
+    }
+
+    let mut units = vec![UnitTicks::default(); cfg.units_per_group];
+    let mut traffic = Traffic::default();
+    let mut busy_macs = 0u64;
+    let mut waves = [0u64; 5];
+    let mut rr = 0usize;
+    for &n_size in &n_chunks {
+        let (_, cost) = costs
+            .iter()
+            .find(|(w, _)| *w == n_size)
+            .expect("column cost built above");
+        traffic.gbuf_to_lbuf += cost.gbuf;
+        traffic.obuf_to_gbuf += cost.obuf;
+        traffic.overcore += cost.overcore;
+        busy_macs += cost.macs;
+        for (w, &c) in waves.iter_mut().zip(&cost.waves) {
+            *w += c;
+        }
+        for j in 0..cost.jobs {
+            let jk = if j + 1 == cost.jobs { &cost.tail } else { &cost.steady };
+            let u = &mut units[rr % units.len()];
+            rr += 1;
+            let x = match opts.ramp {
+                RampMode::PerIssue => jk.every,
+                RampMode::PerJob => jk.first,
+                RampMode::PerGemm => {
+                    if u.ran {
+                        jk.plain
+                    } else {
+                        jk.first
+                    }
+                }
+            };
+            u.ran = true;
+            u.exec = (u.exec + x.c).max(u.load + x.d);
+            u.load += x.bytes;
+            u.store = u.store.max(u.exec) + jk.sb;
+        }
+    }
+
+    let max_ticks = units
+        .iter()
+        .map(|u| u.exec.max(u.store).max(u.load))
+        .max()
+        .unwrap_or(0);
+    if max_ticks >= MAX_EXACT_TICKS {
+        // Past the exact-f64 range the streaming executor's rounding is
+        // the pinned semantics; let the dispatcher replay it.
+        return None;
+    }
+    let time = max_ticks as f64 / bw;
+    Some(GroupSim { time, traffic, busy_macs, waves })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+    use crate::sim::execute_group_streaming;
+
+    #[test]
+    fn exact_log2_accepts_only_powers_of_two() {
+        assert_eq!(exact_log2(512.0), Some(9));
+        assert_eq!(exact_log2(256.0), Some(8));
+        assert_eq!(exact_log2(1.0), Some(0));
+        assert_eq!(exact_log2(0.0), None);
+        assert_eq!(exact_log2(-256.0), None);
+        assert_eq!(exact_log2(384.0), None);
+        assert_eq!(exact_log2(2.5), None);
+        assert_eq!(exact_log2(f64::INFINITY), None);
+        assert_eq!(exact_log2(f64::NAN), None);
+    }
+
+    #[test]
+    fn repeat_matches_iterated_composition() {
+        let x = Xform { c: 7, d: 20, bytes: 13 };
+        let mut acc = x;
+        for r in 2..=9u128 {
+            acc = acc.then(x);
+            assert_eq!(acc, x.repeat(r), "r={r}");
+        }
+        // A load-dominated transform exercises the other endpoint of the
+        // affine maximum.
+        let y = Xform { c: 2, d: 40, bytes: 35 };
+        let mut acc = y;
+        for r in 2..=9u128 {
+            acc = acc.then(y);
+            assert_eq!(acc, y.repeat(r), "r={r}");
+        }
+    }
+
+    #[test]
+    fn fast_path_covers_presets_and_matches_streaming() {
+        for name in ["1G1C", "1G4C", "4G4C", "1G1F", "4G1F"] {
+            let cfg = preset(name).unwrap();
+            for p in [
+                GemmShape::new(1000, 71, 333),
+                GemmShape::new(1, 1, 5000),
+                GemmShape::new(257, 129, 127),
+            ] {
+                for k_partitioned in [false, true] {
+                    let opts = SimOptions::hbm2();
+                    let fast =
+                        execute_group_fast(&cfg, p, k_partitioned, &ModePolicy::Algorithm1, &opts)
+                            .expect("preset bandwidths are powers of two");
+                    let slow = execute_group_streaming(
+                        &cfg,
+                        p,
+                        k_partitioned,
+                        &ModePolicy::Algorithm1,
+                        &opts,
+                    );
+                    crate::proptest::group_bit_identical(&fast, &slow)
+                        .unwrap_or_else(|m| panic!("{name} {p} k={k_partitioned}: {m}"));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_partition_is_the_default_group() {
+        let cfg = preset("4G1F").unwrap();
+        let empty = GemmShape::new(0, 16, 16);
+        let fast =
+            execute_group_fast(&cfg, empty, false, &ModePolicy::Algorithm1, &SimOptions::hbm2())
+                .unwrap();
+        let slow = execute_group_streaming(
+            &cfg,
+            empty,
+            false,
+            &ModePolicy::Algorithm1,
+            &SimOptions::hbm2(),
+        );
+        crate::proptest::group_bit_identical(&fast, &slow).unwrap();
+        assert_eq!(fast, GroupSim::default());
+    }
+
+    #[test]
+    fn non_power_of_two_bandwidth_falls_back() {
+        let mut cfg = preset("1G1C").unwrap();
+        // 96 columns → 384 B/cycle on-chip: not a power of two.
+        cfg.unit.cols = 96;
+        assert_eq!(
+            execute_group_fast(
+                &cfg,
+                GemmShape::new(64, 64, 64),
+                false,
+                &ModePolicy::Algorithm1,
+                &SimOptions::hbm2(),
+            ),
+            None
+        );
+    }
+}

@@ -22,12 +22,14 @@
 //! `total PEs × cycles`.
 
 mod engine;
+mod fastpath;
 mod iteration;
 
 pub use engine::{
-    execute_group, simulate_gemm, simulate_gemm_plan, simulate_gemm_shape, GemmFold, GemmSim,
-    GroupExecutor, GroupSim, Traffic,
+    execute_group, execute_group_streaming, simulate_gemm, simulate_gemm_plan,
+    simulate_gemm_shape, GemmFold, GemmSim, GroupExecutor, GroupSim, Traffic,
 };
+pub use fastpath::{counters as fastpath_counters, execute_group_fast};
 
 /// Simulator output version, folded into every persistent-store key and
 /// written into every on-disk entry (DESIGN.md §11). **Bump this whenever a
@@ -40,6 +42,10 @@ pub use engine::{
 /// v2: the K-partition reduction charge divides the final-write traffic
 /// by the actual partial count instead of `groups` (PR 4 — exact for
 /// hybrid grids and K splits shallower than the group count).
+///
+/// Deliberately *not* bumped for the closed-form fast path (DESIGN.md
+/// §15): it is bit-identical to the streaming executor on every covered
+/// shape and falls back otherwise, so cached entries stay valid.
 pub const SIM_VERSION: u8 = 2;
 
 /// Where the pipeline fill/drain ramp (`k + n` cycles) is charged.

@@ -1,0 +1,216 @@
+//! Bit-identity pinning of the closed-form group-execution fast path
+//! (DESIGN.md §15): on every configuration the fast path covers, it must
+//! reproduce the streaming per-instruction executor's [`GroupSim`] — and
+//! whole-GEMM results through [`simulate_gemm_plan`] — bit for bit, over
+//! shapes × presets × phases × [`SimOptions`] × plan variants. The preset
+//! corpus must also stay *covered* (the fast path may never silently
+//! disable itself there) — `make perf-smoke` runs this suite.
+
+use flexsa::compiler::{
+    gbuf_blocking_with, partitions_with, ModePolicy, PartitionPolicy, PlanParams,
+};
+use flexsa::config::{preset, PRESETS};
+use flexsa::gemm::{GemmShape, Phase};
+use flexsa::isa::Mode;
+use flexsa::proptest::{
+    figure_options, forall, gemm_bit_identical, gemm_dim, group_bit_identical, shrink_dims3,
+    Config, FIGURE_OPTION_POINTS,
+};
+use flexsa::sim::{
+    execute_group, execute_group_fast, execute_group_streaming, simulate_gemm_plan, GemmFold,
+    GroupSim, RampMode, SimOptions,
+};
+
+/// Fast path vs streaming executor on one group partition; also asserts
+/// coverage (`Some`) — presets all have power-of-two on-chip bandwidth.
+fn check_group(
+    name: &str,
+    p: GemmShape,
+    k_partitioned: bool,
+    mode: &ModePolicy,
+    opts: &SimOptions,
+) -> Result<(), String> {
+    let cfg = preset(name).unwrap();
+    let fast = execute_group_fast(&cfg, p, k_partitioned, mode, opts).ok_or_else(|| {
+        format!("{name} {p} k={k_partitioned}: fast path declined a covered preset")
+    })?;
+    let slow = execute_group_streaming(&cfg, p, k_partitioned, mode, opts);
+    group_bit_identical(&fast, &slow)
+        .map_err(|m| format!("{name} {p} k={k_partitioned} {mode:?}: {m}"))?;
+    // The dispatcher must hand back the very same result.
+    group_bit_identical(&execute_group(&cfg, p, k_partitioned, mode, opts), &slow)
+        .map_err(|m| format!("{name} {p} (dispatcher): {m}"))
+}
+
+#[test]
+fn fast_path_is_bit_identical_across_the_domain() {
+    let mode_points =
+        [ModePolicy::Algorithm1, ModePolicy::ReuseGreedy, ModePolicy::Forced(Mode::Vsw)];
+    forall(
+        &Config { cases: 48, ..Default::default() },
+        |rng| (gemm_dim(rng), gemm_dim(rng), gemm_dim(rng)),
+        shrink_dims3,
+        |&(m, n, k)| {
+            let p = GemmShape::new(m, n, k);
+            // Rotate the option/mode point per shape (value-derived so the
+            // rotation is stable under shrinking); every preset and
+            // k-partition flag every case.
+            let i = m.wrapping_mul(31).wrapping_add(n.wrapping_mul(7)).wrapping_add(k);
+            let opts = figure_options(i % FIGURE_OPTION_POINTS);
+            let mode = mode_points[i % mode_points.len()];
+            for name in PRESETS {
+                for k_partitioned in [false, true] {
+                    check_group(name, p, k_partitioned, &mode, &opts)?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn whole_gemm_plan_results_are_unchanged() {
+    // simulate_gemm_plan (dispatcher + equal-partition dedupe) vs a manual
+    // per-partition streaming fold: the end-to-end zero-drift contract.
+    let plans = [
+        PlanParams::HEURISTIC,
+        PlanParams { mode: ModePolicy::ReuseGreedy, ..PlanParams::HEURISTIC },
+        PlanParams { partition: PartitionPolicy::ForceK, ..PlanParams::HEURISTIC },
+        PlanParams { partition: PartitionPolicy::ForceM, ..PlanParams::HEURISTIC },
+    ];
+    forall(
+        &Config { cases: 24, ..Default::default() },
+        |rng| (gemm_dim(rng), gemm_dim(rng), gemm_dim(rng)),
+        shrink_dims3,
+        |&(m, n, k)| {
+            let shape = GemmShape::new(m, n, k);
+            let i = m.wrapping_mul(31).wrapping_add(n.wrapping_mul(7)).wrapping_add(k);
+            let opts = figure_options(i % FIGURE_OPTION_POINTS);
+            let plan = &plans[i % plans.len()];
+            for name in ["1G1C", "4G4C", "4G1F"] {
+                let cfg = preset(name).unwrap();
+                for phase in Phase::ALL {
+                    let (parts, k_parts) = partitions_with(&cfg, shape, phase, &plan.partition);
+                    let k_partitioned = k_parts > 1;
+                    let mut fold = GemmFold::new();
+                    for p in parts {
+                        let g = execute_group_streaming(&cfg, p, k_partitioned, &plan.mode, &opts);
+                        fold.add(&g, &gbuf_blocking_with(&cfg, p, phase, k_parts, &plan.blocking));
+                    }
+                    let reference = fold.finish(&cfg, &opts);
+                    let fast = simulate_gemm_plan(&cfg, shape, phase, &opts, plan);
+                    gemm_bit_identical(&fast, &reference)
+                        .map_err(|e| format!("{name} {phase:?} {plan}: {e}"))?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn golden_gap_shapes_stay_pinned() {
+    // The PR-4 planner-gap shapes (EXPERIMENTS.md golden table): the exact
+    // configurations whose numbers back the README headline.
+    for (shape, phase) in [
+        (GemmShape::new(32, 1000, 2048), Phase::Forward),
+        (GemmShape::new(1000, 2048, 32), Phase::WeightGrad),
+    ] {
+        for name in PRESETS {
+            for i in 0..FIGURE_OPTION_POINTS {
+                let opts = figure_options(i);
+                for k_partitioned in [false, true] {
+                    check_group(name, shape, k_partitioned, &ModePolicy::Algorithm1, &opts)
+                        .unwrap();
+                }
+                let cfg = preset(name).unwrap();
+                let (parts, k_parts) =
+                    partitions_with(&cfg, shape, phase, &PartitionPolicy::Heuristic);
+                let mut fold = GemmFold::new();
+                for p in parts {
+                    let g = execute_group_streaming(
+                        &cfg,
+                        p,
+                        k_parts > 1,
+                        &ModePolicy::Algorithm1,
+                        &opts,
+                    );
+                    fold.add(
+                        &g,
+                        &gbuf_blocking_with(
+                            &cfg,
+                            p,
+                            phase,
+                            k_parts,
+                            &flexsa::compiler::BlockingPolicy::Auto,
+                        ),
+                    );
+                }
+                let reference = fold.finish(&cfg, &opts);
+                let fast =
+                    simulate_gemm_plan(&cfg, shape, phase, &opts, &PlanParams::HEURISTIC);
+                gemm_bit_identical(&fast, &reference).unwrap();
+            }
+        }
+    }
+}
+
+#[test]
+fn equivalence_corners() {
+    let alg1 = ModePolicy::Algorithm1;
+
+    // Empty partitions (zero dims) are the streaming executor's "emit
+    // nothing" case.
+    for name in PRESETS {
+        for p in [GemmShape::new(0, 64, 64), GemmShape::new(64, 0, 64), GemmShape::new(64, 64, 0)]
+        {
+            check_group(name, p, false, &alg1, &SimOptions::hbm2()).unwrap();
+            let cfg = preset(name).unwrap();
+            assert_eq!(
+                execute_group_fast(&cfg, p, false, &alg1, &SimOptions::hbm2()).unwrap(),
+                GroupSim::default(),
+                "{name} {p}"
+            );
+        }
+    }
+
+    // m smaller than the slab batch: ISW batches 4 parallel sub-waves, so
+    // m = 1..3 exercises ragged single-issue jobs.
+    for m in 1..=5 {
+        check_group("1G1F", GemmShape::new(m, 17, 9), false, &alg1, &SimOptions::hbm2()).unwrap();
+        check_group("1G1F", GemmShape::new(m, 17, 9), false, &ModePolicy::Forced(Mode::Isw),
+            &SimOptions::hbm2())
+        .unwrap();
+    }
+
+    // A K tail whose mode differs from the full chunks' forces the column
+    // to the smaller m_allowed quantum (mixed-mode k-classes): k = 129 on
+    // a 128-row unit gives chunks [128, 1], n small enough that the tail
+    // wave fits a sub-core.
+    for (n, k) in [(17, 129), (64, 257), (40, 140)] {
+        check_group("1G1F", GemmShape::new(1000, n, k), false, &alg1, &SimOptions::hbm2())
+            .unwrap();
+        check_group("4G1F", GemmShape::new(333, n, k), true, &alg1, &SimOptions::hbm2()).unwrap();
+    }
+
+    // Serialized ShiftV and every ramp mode.
+    for shiftv_overlap in [false, true] {
+        for ramp in [RampMode::PerGemm, RampMode::PerJob, RampMode::PerIssue] {
+            let opts = SimOptions { ideal_dram: true, shiftv_overlap, ramp };
+            for name in ["1G1C", "1G1F", "4G4C"] {
+                check_group(name, GemmShape::new(777, 130, 300), false, &alg1, &opts).unwrap();
+            }
+        }
+    }
+
+    // Single-unit groups (1G1C / 1G1F have units_per_group == 1) and the
+    // widest round-robin (1G4C: 4 units) with more jobs than units.
+    for name in ["1G1C", "1G1F", "1G4C"] {
+        check_group(name, GemmShape::new(2048, 511, 127), false, &alg1, &SimOptions::ideal())
+            .unwrap();
+    }
+
+    // K-partitioned groups store f32 accumulators (ACC_BYTES): the PR-4
+    // store-width case.
+    check_group("4G1F", GemmShape::new(500, 500, 500), true, &alg1, &SimOptions::hbm2()).unwrap();
+}
