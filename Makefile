@@ -1,7 +1,7 @@
 # Convenience targets. The rust build needs no artifacts; `artifacts` is
 # only for the optional PJRT end-to-end path (DESIGN.md §6).
 
-.PHONY: artifacts test rust-test py-test bench-smoke perf-smoke store-smoke plan-smoke group-smoke serve-smoke
+.PHONY: artifacts test rust-test py-test bench-smoke perf-smoke store-smoke plan-smoke plans-smoke group-smoke serve-smoke
 
 # AOT-lower the L2 model + L1 kernel to HLO text (python runs once, at
 # build time; see python/compile/aot.py).
@@ -63,6 +63,28 @@ plan-smoke:
 	 test -n "$$gap"; case "$$gap" in -*) exit 1;; esac; \
 	 grep -q "from plan store" /tmp/flexsa-plan-warm.out; \
 	 test -n "$$hits" && test "$$hits" -gt 0 && test -n "$$sims" && test "$$sims" -eq 0
+
+# Local mirror of CI's plan-resolution smoke (DESIGN.md §16): `flexsa
+# plan` persists the searched best plan for the PR-4 golden GEMM; then
+# `simulate --use-plans` against the same --cache-dir must resolve it
+# (plan store hits>0, `# plans: resolved=` > 0) and report cycles no
+# worse than the search's recorded heuristic baseline, and a warm rerun
+# must answer entirely from the store (sims=0).
+plans-smoke:
+	rm -rf /tmp/flexsa-plans-smoke
+	cd rust && cargo run --release --quiet -- plan 32 1000 2048 --config 4G1F --cache-dir /tmp/flexsa-plans-smoke >/tmp/flexsa-plans-plan.out 2>/dev/null
+	cd rust && cargo run --release --quiet -- simulate 32 1000 2048 --config 4G1F --use-plans --cache-dir /tmp/flexsa-plans-smoke >/tmp/flexsa-plans-sim.out 2>/tmp/flexsa-plans-sim.log
+	cd rust && cargo run --release --quiet -- simulate 32 1000 2048 --config 4G1F --use-plans --cache-dir /tmp/flexsa-plans-smoke >/dev/null 2>/tmp/flexsa-plans-warm.log
+	@heur=$$(sed -n 's/.*heuristic=\([0-9]*\) .*/\1/p' /tmp/flexsa-plans-plan.out | tail -n 1); \
+	 cyc=$$(sed -n 's/^cycles.*: \([0-9]*\) .*/\1/p' /tmp/flexsa-plans-sim.out | tail -n 1); \
+	 hits=$$(sed -n 's/.*plan store: hits=\([0-9]*\).*/\1/p' /tmp/flexsa-plans-sim.log | tail -n 1); \
+	 resolved=$$(sed -n 's/.*plans: resolved=\([0-9]*\).*/\1/p' /tmp/flexsa-plans-sim.log | tail -n 1); \
+	 sims=$$(sed -n 's/.*sims=\([0-9]*\).*/\1/p' /tmp/flexsa-plans-warm.log | tail -n 1); \
+	 echo "plans smoke: heuristic=$$heur plan-cycles=$$cyc plan-store-hits=$$hits resolved=$$resolved warm-sims=$$sims"; \
+	 test -n "$$heur" && test -n "$$cyc" && test "$$cyc" -le "$$heur"; \
+	 test -n "$$hits" && test "$$hits" -gt 0; \
+	 test -n "$$resolved" && test "$$resolved" -gt 0; \
+	 test -n "$$sims" && test "$$sims" -eq 0
 
 # Local mirror of CI's group-tier smoke (DESIGN.md §13): a second,
 # *different* configuration (a DRAM-bandwidth sweep of 4G1F — distinct

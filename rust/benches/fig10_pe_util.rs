@@ -11,7 +11,7 @@ fn main() {
     let threads = flexsa::coordinator::default_threads();
     let session = SimSession::new();
     let t0 = Instant::now();
-    let grid = EvalGrid::compute_auto(threads, &session);
+    let grid = EvalGrid::compute_auto(threads, &session).expect("paper workloads validate");
     println!(
         "grid/compute {:>37}   ({}, {threads} threads)",
         flexsa::util::fmt::seconds(t0.elapsed().as_secs_f64()),

@@ -8,7 +8,7 @@ use flexsa::session::SimSession;
 fn main() {
     let threads = flexsa::coordinator::default_threads();
     let session = SimSession::new();
-    let grid = EvalGrid::compute_auto(threads, &session);
+    let grid = EvalGrid::compute_auto(threads, &session).expect("paper workloads validate");
     println!("grid sim cache: {}", session.stats().summary());
     let r = Bencher::auto().run("fig11/extract", || black_box(figures::fig11(&grid)));
     println!("{}", r.report());

@@ -15,7 +15,7 @@ use flexsa::gemm::{GemmShape, Phase};
 use flexsa::models::{resnet50, ChannelCounts};
 use flexsa::session::SimSession;
 use flexsa::sim::{
-    execute_group_streaming, fastpath_counters, simulate_gemm, simulate_gemm_shape,
+    execute_group_streaming, fastpath_snapshot, simulate_gemm, simulate_gemm_shape,
     simulate_model_epoch, GemmFold, SimOptions,
 };
 
@@ -43,6 +43,11 @@ fn main() {
     let b = Bencher::auto();
     let log = BenchLog::from_env("sim_hotpath");
     let opts = SimOptions::hbm2();
+    // The FAST/FALLBACK counters are process-wide and never reset
+    // (DESIGN.md §15), so every per-row attribution below is a
+    // snapshot/delta — never a raw read, which would smear earlier rows
+    // into later ones.
+    let bench_start = fastpath_snapshot();
 
     // Single-GEMM pipeline on all Table-I configs: materialized programs
     // vs the forced streaming executor vs the closed-form fast path
@@ -65,6 +70,7 @@ fn main() {
         });
         println!("{}", streaming.report_throughput(waves as f64, "waves"));
         log.add(&streaming);
+        let row_start = fastpath_snapshot();
         let fast = b.run(&format!("gemm_sim_fastpath/{name}"), || {
             black_box(simulate_gemm_shape(&cfg, shape, Phase::Forward, &opts).cycles)
         });
@@ -73,6 +79,13 @@ fn main() {
         let speedup = streaming.mean.as_secs_f64() / fast.mean.as_secs_f64().max(1e-12);
         println!("# fastpath speedup {name}: {speedup:.1}x (streaming -> closed-form)");
         log.note(&format!("fastpath_speedup/{name}"), &format!("{speedup:.3}"));
+        // This row's dispatch mix, isolated from every preceding row.
+        let d = fastpath_snapshot().delta(&row_start);
+        println!("# fastpath dispatch {name}: fast={} fallback={}", d.fast, d.fallback);
+        log.note(
+            &format!("fastpath_dispatch/{name}"),
+            &format!("fast={} fallback={}", d.fast, d.fallback),
+        );
         let session = SimSession::new();
         let cfg_fp = cfg.fingerprint();
         session.simulate(&cfg, shape, Phase::Forward, &opts); // warm the key
@@ -107,10 +120,13 @@ fn main() {
         log.add(&r);
     }
 
-    // Dispatch census over everything the bench just ran: every preset
-    // group must have taken the closed-form path (`make perf-smoke`
-    // asserts fallback=0).
-    let (fast, fallback) = fastpath_counters();
-    println!("# fastpath: fast={fast} fallback={fallback}");
-    log.note("fastpath_counters", &format!("fast={fast} fallback={fallback}"));
+    // Dispatch census over everything the bench just ran (delta from the
+    // process-start snapshot): every preset group must have taken the
+    // closed-form path (`make perf-smoke` asserts fallback=0).
+    let total = fastpath_snapshot().delta(&bench_start);
+    println!("# fastpath: fast={} fallback={}", total.fast, total.fallback);
+    log.note(
+        "fastpath_counters",
+        &format!("fast={} fallback={}", total.fast, total.fallback),
+    );
 }

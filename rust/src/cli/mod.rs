@@ -7,7 +7,8 @@ use std::collections::HashMap;
 /// Flags that never take a value, so a following token stays positional
 /// (`flexsa simulate --no-cache 512 256 128` keeps three positionals).
 /// Flags not listed here greedily consume the next non-`--` token.
-const BOOLEAN_FLAGS: &[&str] = &["ideal", "no-cache", "no-store", "exhaustive", "help", "quiet"];
+const BOOLEAN_FLAGS: &[&str] =
+    &["ideal", "no-cache", "no-store", "exhaustive", "help", "quiet", "use-plans", "tails"];
 
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]
@@ -134,6 +135,12 @@ mod tests {
         assert!(a.has("ideal"));
         assert_eq!(a.get("config"), Some("1G1F"));
         assert_eq!(a.positional.len(), 3);
+        let a = parse("simulate --use-plans 512 256 128");
+        assert!(a.has("use-plans"));
+        assert_eq!(a.positional, vec!["512", "256", "128"]);
+        let a = parse("plan --tails 512 256 128 --beam 2");
+        assert!(a.has("tails"));
+        assert_eq!(a.positional, vec!["512", "256", "128"]);
     }
 
     #[test]

@@ -23,10 +23,10 @@ pub mod plan;
 mod tiling;
 
 pub use blocking::{gbuf_blocking, gbuf_blocking_with, DramPlan};
-pub use plan::{BlockingPolicy, ModePolicy, PartitionPolicy, PlanParams};
+pub use plan::{BlockingPolicy, ModePolicy, ModeSpec, PartitionPolicy, PlanParams};
 pub use tiling::{
     chunk_sizes, select_mode, select_mode_with, tile_partition, tile_partition_visit,
-    tile_partition_visit_plan, tiling_summary, ColumnPlan, TilingStats,
+    tile_partition_visit_plan, tile_partition_visit_spec, tiling_summary, ColumnPlan, TilingStats,
 };
 
 use crate::config::{AcceleratorConfig, UnitGeometry, UnitKind};

@@ -10,6 +10,7 @@
 //! (property-pinned by `tests/prop_planner.rs`), so threading plans through
 //! the compiler costs the zero-search path nothing.
 
+use crate::config::AcceleratorConfig;
 use crate::isa::Mode;
 
 /// How a GEMM is split across core groups (the §VII phase rule made
@@ -76,6 +77,12 @@ pub struct PlanParams {
     pub blocking: BlockingPolicy,
     /// Per-wave mode assignment policy.
     pub mode: ModePolicy,
+    /// Optional mode override for the partial tail column: when a FlexSA
+    /// GEMM's N dimension leaves a remainder column narrower than the
+    /// array, this mode is forced for that column only (full-width columns
+    /// keep [`Self::mode`]). `None` applies [`Self::mode`] everywhere —
+    /// the pre-widening behaviour.
+    pub tail_mode: Option<Mode>,
 }
 
 impl Default for PlanParams {
@@ -92,6 +99,7 @@ impl PlanParams {
         partition: PartitionPolicy::Heuristic,
         blocking: BlockingPolicy::Auto,
         mode: ModePolicy::Algorithm1,
+        tail_mode: None,
     };
 
     /// Is this the zero-search default? (Exactly the plans whose
@@ -103,7 +111,8 @@ impl PlanParams {
 
     /// Stable 64-bit encoding: bits 0–1 partition tag, bits 2–9 `m_parts`,
     /// bits 10–11 blocking tag, bits 12–13 mode tag, bits 14–16 forced-mode
-    /// index. The heuristic plan packs to 0. Part of session-cache plan
+    /// index, bits 17–19 tail-mode code (0 = none, else mode index + 1).
+    /// The heuristic plan packs to 0. Part of session-cache plan
     /// fingerprints and the on-disk plan-record codec (DESIGN.md §12) —
     /// changing the layout requires bumping the plan codec version.
     pub fn pack(&self) -> u64 {
@@ -124,11 +133,16 @@ impl PlanParams {
             ModePolicy::ReuseGreedy => (1, 0),
             ModePolicy::Forced(m) => (2, m.index() as u64),
         };
-        pt | (pm << 2) | (b << 10) | (mt << 12) | (mf << 14)
+        let t = match self.tail_mode {
+            None => 0u64,
+            Some(m) => m.index() as u64 + 1,
+        };
+        pt | (pm << 2) | (b << 10) | (mt << 12) | (mf << 14) | (t << 17)
     }
 
-    /// The mode-policy component of [`Self::pack`] (bits 12–16, shifted
-    /// down): the only plan knob a *group execution* depends on. The group
+    /// The mode-policy component of [`Self::pack`] (bits 12–19 — mode tag,
+    /// forced index, and tail-mode code — shifted down): the only plan
+    /// knobs a *group execution* depends on. The group
     /// fingerprint (DESIGN.md §13) folds exactly this — the partition
     /// policy only selects *which* slices exist (the slice itself is keyed
     /// directly), and the blocking policy only shapes the analytic
@@ -144,7 +158,7 @@ impl PlanParams {
     /// indices, and non-canonical padding (a stored record from a future
     /// layout decodes as a clean error, never a wrong plan).
     pub fn unpack(bits: u64) -> Result<PlanParams, String> {
-        if bits >> 17 != 0 {
+        if bits >> 20 != 0 {
             return Err(format!("plan bits {bits:#x}: unknown high bits"));
         }
         let pm = ((bits >> 2) & 0xFF) as u8;
@@ -173,7 +187,53 @@ impl PlanParams {
             2 if mf < 5 => ModePolicy::Forced(Mode::from_index(mf)),
             other => return Err(format!("plan bits {bits:#x}: bad mode tag/index {other}/{mf}")),
         };
-        Ok(PlanParams { partition, blocking, mode })
+        let tail_mode = match ((bits >> 17) & 0b111) as usize {
+            0 => None,
+            t if t <= 5 => Some(Mode::from_index(t - 1)),
+            t => return Err(format!("plan bits {bits:#x}: bad tail-mode code {t}")),
+        };
+        Ok(PlanParams { partition, blocking, mode, tail_mode })
+    }
+
+    /// The per-column mode resolution this plan stands for: the base
+    /// [`Self::mode`] policy, plus [`Self::tail_mode`] forced on the
+    /// partial tail column when set.
+    pub fn mode_spec(&self) -> ModeSpec {
+        ModeSpec { base: self.mode, tail: self.tail_mode.map(ModePolicy::Forced) }
+    }
+}
+
+/// A resolved per-column mode policy: the plan's base [`ModePolicy`] plus
+/// an optional override for the partial tail column (the one N-chunk
+/// narrower than the array that a non-multiple N leaves behind). The
+/// `_spec` compile/simulate entry points consult [`Self::policy_for`] per
+/// column; the plain [`ModePolicy`] entry points are the `tail = None`
+/// special case.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModeSpec {
+    /// Policy governing full-width columns.
+    pub base: ModePolicy,
+    /// Materialized override policy (always `Forced`) for the tail column;
+    /// `None` applies `base` everywhere.
+    tail: Option<ModePolicy>,
+}
+
+impl ModeSpec {
+    /// A spec with no tail override: `policy` everywhere (what every plain
+    /// [`ModePolicy`] entry point delegates through).
+    pub fn base_only(policy: ModePolicy) -> ModeSpec {
+        ModeSpec { base: policy, tail: None }
+    }
+
+    /// The policy governing a column of `n_size` output columns. The tail
+    /// override applies exactly when the column is narrower than the
+    /// array (`n_size < cfg.unit.cols`) — a pure function of `n_size`, so
+    /// per-width cost caches stay sound.
+    pub fn policy_for(&self, cfg: &AcceleratorConfig, n_size: usize) -> &ModePolicy {
+        match &self.tail {
+            Some(t) if n_size < cfg.unit.cols => t,
+            _ => &self.base,
+        }
     }
 }
 
@@ -199,7 +259,11 @@ impl std::fmt::Display for PlanParams {
             ModePolicy::ReuseGreedy => "greedy".to_string(),
             ModePolicy::Forced(m) => format!("force-{}", m.name()),
         };
-        write!(f, "part={part} block={block} mode={mode}")
+        write!(f, "part={part} block={block} mode={mode}")?;
+        if let Some(t) = self.tail_mode {
+            write!(f, " tail={}", t.name())?;
+        }
+        Ok(())
     }
 }
 
@@ -231,10 +295,25 @@ mod tests {
             ModePolicy::Forced(Mode::Isw),
             ModePolicy::Forced(Mode::Mono),
         ];
+        let tails = [
+            None,
+            Some(Mode::Fw),
+            Some(Mode::Vsw),
+            Some(Mode::Hsw),
+            Some(Mode::Isw),
+            Some(Mode::Mono),
+        ];
         for p in partitions {
             for b in blockings {
                 for m in modes {
-                    out.push(PlanParams { partition: p, blocking: b, mode: m });
+                    for t in tails {
+                        out.push(PlanParams {
+                            partition: p,
+                            blocking: b,
+                            mode: m,
+                            tail_mode: t,
+                        });
+                    }
                 }
             }
         }
@@ -264,36 +343,63 @@ mod tests {
 
     #[test]
     fn mode_bits_ignore_partition_and_blocking() {
-        // Same mode policy across every partition/blocking combination must
-        // produce one mode_bits value (group entries shared across those
-        // axes), and distinct mode policies must produce distinct values.
-        let mut by_mode: std::collections::BTreeMap<u64, std::collections::BTreeSet<u64>> =
+        // Same (mode, tail) pair across every partition/blocking
+        // combination must produce one mode_bits value (group entries
+        // shared across those axes), and distinct pairs must produce
+        // distinct values (a tail override is a different execution).
+        let mut by_mode: std::collections::BTreeMap<(u64, u64), std::collections::BTreeSet<u64>> =
             Default::default();
         for plan in space() {
-            by_mode
-                .entry(match plan.mode {
-                    ModePolicy::Algorithm1 => 0,
-                    ModePolicy::ReuseGreedy => 1,
-                    ModePolicy::Forced(m) => 2 + m.index() as u64,
-                })
-                .or_default()
-                .insert(plan.mode_bits());
+            let mode_key = match plan.mode {
+                ModePolicy::Algorithm1 => 0,
+                ModePolicy::ReuseGreedy => 1,
+                ModePolicy::Forced(m) => 2 + m.index() as u64,
+            };
+            let tail_key = match plan.tail_mode {
+                None => 0,
+                Some(m) => 1 + m.index() as u64,
+            };
+            by_mode.entry((mode_key, tail_key)).or_default().insert(plan.mode_bits());
         }
-        assert_eq!(by_mode.len(), 7);
+        assert_eq!(by_mode.len(), 7 * 6);
         let mut seen = std::collections::BTreeSet::new();
         for bits in by_mode.values() {
-            assert_eq!(bits.len(), 1, "mode_bits varies within one mode policy");
+            assert_eq!(bits.len(), 1, "mode_bits varies within one (mode, tail) pair");
             assert!(seen.insert(*bits.iter().next().unwrap()), "mode_bits collide");
         }
     }
 
     #[test]
     fn unpack_rejects_non_canonical_bits() {
-        assert!(PlanParams::unpack(1 << 17).is_err()); // high bits
+        assert!(PlanParams::unpack(1 << 20).is_err()); // high bits
         assert!(PlanParams::unpack(0b100).is_err()); // m_parts on Heuristic
         assert!(PlanParams::unpack(0b11 << 12).is_err()); // bad mode tag
         assert!(PlanParams::unpack((1 << 14) | (1 << 12)).is_err()); // idx on greedy
         assert!(PlanParams::unpack((5 << 14) | (2 << 12)).is_err()); // mode idx 5
+        assert!(PlanParams::unpack(6 << 17).is_err()); // tail code 6
+        assert!(PlanParams::unpack(7 << 17).is_err()); // tail code 7
+        assert_eq!(
+            PlanParams::unpack(1 << 17).unwrap().tail_mode, // tail code 1 = FW
+            Some(Mode::Fw)
+        );
+    }
+
+    #[test]
+    fn mode_spec_resolves_tail_only_below_array_width() {
+        let cfg = crate::config::preset("1G1F").unwrap();
+        let cols = cfg.unit.cols;
+        let plain = PlanParams::HEURISTIC.mode_spec();
+        assert_eq!(*plain.policy_for(&cfg, cols), ModePolicy::Algorithm1);
+        assert_eq!(*plain.policy_for(&cfg, cols / 2), ModePolicy::Algorithm1);
+        let tailed =
+            PlanParams { tail_mode: Some(Mode::Vsw), ..PlanParams::HEURISTIC }.mode_spec();
+        assert_eq!(*tailed.policy_for(&cfg, cols), ModePolicy::Algorithm1);
+        assert_eq!(*tailed.policy_for(&cfg, cols + 1), ModePolicy::Algorithm1);
+        assert_eq!(*tailed.policy_for(&cfg, cols - 1), ModePolicy::Forced(Mode::Vsw));
+        assert_eq!(
+            ModeSpec::base_only(ModePolicy::ReuseGreedy),
+            PlanParams { mode: ModePolicy::ReuseGreedy, ..PlanParams::HEURISTIC }.mode_spec()
+        );
     }
 
     #[test]
@@ -303,7 +409,10 @@ mod tests {
             partition: PartitionPolicy::ForceK,
             blocking: BlockingPolicy::KeepB,
             mode: ModePolicy::Forced(Mode::Isw),
+            tail_mode: None,
         };
         assert_eq!(p.to_string(), "part=K block=keepB mode=force-ISW");
+        let t = PlanParams { tail_mode: Some(Mode::Vsw), ..p };
+        assert_eq!(t.to_string(), "part=K block=keepB mode=force-ISW tail=VSW");
     }
 }

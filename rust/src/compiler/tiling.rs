@@ -16,7 +16,7 @@
 //! sharing the stationary tile via the local-broadcast datapaths — the
 //! source of FlexSA's reuse advantage over naive small cores.
 
-use super::plan::ModePolicy;
+use super::plan::{ModePolicy, ModeSpec};
 use crate::config::{AcceleratorConfig, UnitKind};
 use crate::gemm::GemmShape;
 use crate::isa::{Buf, Inst, Mode, Program};
@@ -195,8 +195,23 @@ pub fn tile_partition_visit(
 pub fn tile_partition_visit_plan(
     cfg: &AcceleratorConfig,
     p: GemmShape,
-    _k_partitioned: bool,
+    k_partitioned: bool,
     policy: &ModePolicy,
+    sink: &mut impl FnMut(Inst),
+) {
+    tile_partition_visit_spec(cfg, p, k_partitioned, &ModeSpec::base_only(*policy), sink)
+}
+
+/// [`tile_partition_visit_plan`] under a full [`ModeSpec`]: each tile
+/// column resolves its governing [`ModePolicy`] through
+/// [`ModeSpec::policy_for`], so a plan's tail-mode override applies to the
+/// partial tail column only. A spec without a tail override emits exactly
+/// the [`tile_partition_visit_plan`] stream.
+pub fn tile_partition_visit_spec(
+    cfg: &AcceleratorConfig,
+    p: GemmShape,
+    _k_partitioned: bool,
+    spec: &ModeSpec,
     sink: &mut impl FnMut(Inst),
 ) {
     if p.is_empty() {
@@ -214,7 +229,7 @@ pub fn tile_partition_visit_plan(
         // Mode per k-chunk is fixed within a column; the column's m quantum
         // must satisfy the tightest LBUF constraint among its waves
         // (ColumnPlan is the computation the fast path shares).
-        let col = ColumnPlan::compute(cfg, n_size, &k_chunks, policy);
+        let col = ColumnPlan::compute(cfg, n_size, &k_chunks, spec.policy_for(cfg, n_size));
         let m_chunks = chunk_sizes(p.m, col.col_m);
         // Batch m-slabs so sub-array modes can pack parallel sub-waves.
         for mb in m_chunks.chunks(col.batch) {
@@ -509,6 +524,31 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn tail_override_applies_to_partial_column_only() {
+        use crate::compiler::PlanParams;
+        let cfg = preset("1G1F").unwrap(); // cols = 128
+        // N = 168 -> one full 128-wide column (FW waves) plus a 40-wide
+        // tail (VSW under Algorithm 1). Forcing FW on the tail flips only
+        // the tail column's waves.
+        let shape = GemmShape::new(512, 168, 128);
+        let plain = tile_partition(&cfg, shape, false);
+        assert!(plain.stats().waves_by_mode.contains_key(&Mode::Vsw));
+        let spec = PlanParams { tail_mode: Some(Mode::Fw), ..PlanParams::HEURISTIC }.mode_spec();
+        let mut tailed = Program::new();
+        tile_partition_visit_spec(&cfg, shape, false, &spec, &mut |i| tailed.push(i));
+        let stats = tailed.stats();
+        assert_eq!(stats.macs, shape.macs());
+        assert!(!stats.waves_by_mode.contains_key(&Mode::Vsw), "{:?}", stats.waves_by_mode);
+        assert!(stats.waves_by_mode.contains_key(&Mode::Fw));
+        // No partial column -> the override never fires: identical stream.
+        let full = GemmShape::new(512, 256, 128);
+        let base = tile_partition(&cfg, full, false);
+        let mut via_spec = Program::new();
+        tile_partition_visit_spec(&cfg, full, false, &spec, &mut |i| via_spec.push(i));
+        assert_eq!(base.insts, via_spec.insts);
     }
 
     #[test]

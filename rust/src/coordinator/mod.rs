@@ -19,7 +19,7 @@ pub use workloads::{paper_workloads, point_weights, ScheduleKind, Workload};
 use crate::config::AcceleratorConfig;
 use crate::models::{ChannelCounts, Model};
 use crate::session::SimSession;
-use crate::sim::{simulate_model_epoch, IterationSim, SimOptions};
+use crate::sim::{simulate_model_epoch_with, IterationSim, SimOptions};
 use std::sync::{Arc, Mutex};
 
 /// One sweep cell: simulate `model` at `counts` on `cfg`.
@@ -35,6 +35,10 @@ pub struct SweepJob {
     pub weight: f64,
     /// Simulator options (ideal vs HBM2, ablation knobs).
     pub opts: SimOptions,
+    /// Resolve each GEMM's compilation plan from the session's plan store
+    /// (`--use-plans`, DESIGN.md §16); false is the plan-less heuristic
+    /// path, bit-identical to before the flag existed.
+    pub use_plans: bool,
 }
 
 /// Result of one sweep cell (same index as the submitted job).
@@ -74,8 +78,14 @@ pub fn run_sweep(jobs: Vec<SweepJob>, threads: usize, session: &SimSession) -> V
                     i
                 };
                 let job = jobs[i].clone();
-                let sim =
-                    simulate_model_epoch(&job.cfg, &job.model, &job.counts, &job.opts, session);
+                let sim = simulate_model_epoch_with(
+                    &job.cfg,
+                    &job.model,
+                    &job.counts,
+                    &job.opts,
+                    session,
+                    job.use_plans,
+                );
                 results.lock().unwrap()[i] = Some(JobResult { job, sim });
             });
         }
@@ -167,6 +177,7 @@ mod tests {
     use super::*;
     use crate::config::preset;
     use crate::models::resnet50;
+    use crate::sim::simulate_model_epoch;
 
     #[test]
     fn sweep_matches_serial_execution() {
@@ -180,6 +191,7 @@ mod tests {
                 counts: counts.clone(),
                 weight: 1.0,
                 opts: SimOptions::ideal(),
+                use_plans: false,
             })
             .collect();
         let serial =
@@ -203,6 +215,7 @@ mod tests {
             counts: counts.clone(),
             weight: w,
             opts: SimOptions::ideal(),
+            use_plans: false,
         };
         let results = run_sweep(vec![mk(1.0), mk(3.0)], 2, &SimSession::new());
         let refs: Vec<&JobResult> = results.iter().collect();
@@ -231,6 +244,7 @@ mod tests {
                 counts: counts.clone(),
                 weight: 1.0,
                 opts: SimOptions::ideal(),
+                use_plans: false,
             })
             .collect();
         let session = SimSession::new();

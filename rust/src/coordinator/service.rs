@@ -261,6 +261,12 @@ pub struct ServiceStats {
     /// completion); all-zero for sessions without a store and no drained
     /// responses.
     pub drain: DrainReport,
+    /// The leader thread panicked (a worker panic propagates through the
+    /// dispatch scope). [`SimService::shutdown`] records this instead of
+    /// re-panicking on the join, so a caller still gets the session's
+    /// cache counters and can report the failure as a soft error; the
+    /// leader's own request/batch counters are lost (zero).
+    pub leader_panicked: bool,
 }
 
 impl ServiceStats {
@@ -392,7 +398,14 @@ impl SimService {
     pub fn shutdown(mut self) -> ServiceStats {
         drop(self.tx.take());
         let _ = self.ctrl.send(Msg::Stop);
-        let mut stats = self.handle.take().map(|h| h.join().unwrap()).unwrap_or_default();
+        let mut stats = match self.handle.take().map(|h| h.join()) {
+            Some(Ok(s)) => s,
+            // A poisoned leader (worker panic inside a dispatch scope) is
+            // recorded, not propagated: the caller keeps the session's
+            // cache counters and a clean shutdown path.
+            Some(Err(_)) => ServiceStats { leader_panicked: true, ..Default::default() },
+            None => ServiceStats::default(),
+        };
         while self.rx.try_recv().is_ok() {
             stats.drained += 1;
         }
@@ -836,6 +849,36 @@ mod tests {
         assert!(stats.drain.is_clean());
         assert!(stats.drain.summary().contains("/ 0 failed"), "{}", stats.drain.summary());
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn leader_panic_is_a_soft_error_not_a_propagated_panic() {
+        // An invalid config (units_per_group = 0 — `validate()` rejects
+        // it, but a raw Request carries any Arc'd config) panics the
+        // worker, which propagates through the dispatch scope and kills
+        // the leader. Shutdown must record that, not re-panic.
+        let mut poisoned = preset("1G1C").unwrap();
+        poisoned.units_per_group = 0;
+        let cfg = Arc::new(poisoned);
+        let mut svc = SimService::start(1, BatchPolicy::default());
+        let sub = svc.submitter();
+        assert!(sub.submit(&cfg, GemmShape::new(64, 64, 64), Phase::Forward, SimOptions::ideal())
+            .is_some());
+        // The dead leader closes the response channel.
+        assert!(svc.recv().is_none());
+        drop(sub);
+        let stats = svc.shutdown();
+        assert!(stats.leader_panicked, "{stats:?}");
+        // The leader's own counters died with it; the session's survive
+        // (nothing was cached here, but the fields are still populated).
+        assert_eq!(stats.requests, 0, "{stats:?}");
+        assert_eq!(stats.cache_entries, 0, "{stats:?}");
+        // A healthy service never sets the flag.
+        let svc = SimService::start(1, BatchPolicy::default());
+        let cfg = Arc::new(preset("1G1C").unwrap());
+        svc.submit(&cfg, GemmShape::new(64, 64, 64), Phase::Forward, SimOptions::ideal());
+        svc.recv().unwrap();
+        assert!(!svc.shutdown().leader_panicked);
     }
 
     #[test]

@@ -43,6 +43,25 @@ pub struct Workload {
     pub schedules: Vec<(ScheduleKind, PruneSchedule)>,
 }
 
+impl Workload {
+    /// Build a workload, validating every schedule against `model`
+    /// ([`PruneSchedule::validate`]): a trajectory whose points don't
+    /// match the model's group structure is rejected here as an `Err`
+    /// instead of panicking later inside a sweep worker or figure
+    /// harness.
+    pub fn new(
+        model: Arc<Model>,
+        schedules: Vec<(ScheduleKind, PruneSchedule)>,
+    ) -> Result<Workload, String> {
+        for (kind, s) in &schedules {
+            s.validate(&model).map_err(|e| {
+                format!("workload {}: invalid {} schedule: {e}", model.name, kind.label())
+            })?;
+        }
+        Ok(Workload { model, schedules })
+    }
+}
+
 /// Build the three paper workloads (§VII):
 ///
 /// - **ResNet50**: PruneTrain at low & high strength, 90 epochs, interval 10;
@@ -50,7 +69,16 @@ pub struct Workload {
 /// - **MobileNet v2**: baseline and the statically pruned 0.75× variant
 ///   (its "schedule" holds the two static widths; figures that prune by
 ///   strength treat width 0.75 as both strengths, as in the paper).
-pub fn paper_workloads(epochs: usize, interval: usize, seed: u64) -> Vec<Workload> {
+///
+/// Every schedule is validated against its model on the way out
+/// ([`Workload::new`]); a mismatch — impossible for the built-in models
+/// unless a model or pruning change broke the invariant — surfaces as an
+/// `Err` instead of a panic deep inside a sweep.
+pub fn paper_workloads(
+    epochs: usize,
+    interval: usize,
+    seed: u64,
+) -> Result<Vec<Workload>, String> {
     let resnet = Arc::new(resnet50());
     let r_low = prunetrain_schedule(&resnet, Strength::Low, epochs, interval, seed);
     let r_high = prunetrain_schedule(&resnet, Strength::High, epochs, interval, seed);
@@ -84,26 +112,26 @@ pub fn paper_workloads(epochs: usize, interval: usize, seed: u64) -> Vec<Workloa
         }
     };
 
-    vec![
-        Workload {
-            model: resnet,
-            schedules: vec![
+    Ok(vec![
+        Workload::new(
+            resnet,
+            vec![
                 (ScheduleKind::PruneTrain(Strength::Low), r_low),
                 (ScheduleKind::PruneTrain(Strength::High), r_high),
             ],
-        },
-        Workload {
-            model: inception,
-            schedules: vec![
+        )?,
+        Workload::new(
+            inception,
+            vec![
                 (ScheduleKind::Transferred(Strength::Low), i_low),
                 (ScheduleKind::Transferred(Strength::High), i_high),
             ],
-        },
-        Workload {
-            model: mobilenet,
-            schedules: vec![(ScheduleKind::Static, m_base), (ScheduleKind::Static, m_slim)],
-        },
-    ]
+        )?,
+        Workload::new(
+            mobilenet,
+            vec![(ScheduleKind::Static, m_base), (ScheduleKind::Static, m_slim)],
+        )?,
+    ])
 }
 
 /// Epoch weights for the points of a schedule (time each point's counts
@@ -125,7 +153,7 @@ mod tests {
 
     #[test]
     fn three_workloads_with_two_schedules_each() {
-        let ws = paper_workloads(90, 10, 42);
+        let ws = paper_workloads(90, 10, 42).unwrap();
         assert_eq!(ws.len(), 3);
         for w in &ws {
             assert_eq!(w.schedules.len(), 2);
@@ -139,10 +167,41 @@ mod tests {
     }
 
     #[test]
+    fn invalid_schedule_is_an_error_not_a_panic() {
+        // A schedule built for ResNet50 cannot attach to MobileNet v2:
+        // the per-group channel counts don't line up. This must surface
+        // as an Err from the library path, never a panic.
+        let resnet = Arc::new(crate::models::resnet50());
+        let sched = prunetrain_schedule(&resnet, Strength::Low, 90, 10, 42);
+        let wrong = Arc::new(crate::models::mobilenet_v2());
+        let err = Workload::new(
+            Arc::clone(&wrong),
+            vec![(ScheduleKind::PruneTrain(Strength::Low), sched.clone())],
+        )
+        .unwrap_err();
+        assert!(err.contains("mobilenet_v2"), "{err}");
+        assert!(err.contains("prunetrain-low"), "{err}");
+        // The matching model still validates.
+        assert!(Workload::new(
+            resnet,
+            vec![(ScheduleKind::PruneTrain(Strength::Low), sched)],
+        )
+        .is_ok());
+        // An empty schedule is rejected too.
+        let empty = PruneSchedule {
+            model_name: wrong.name.clone(),
+            epochs: 1,
+            interval: 1,
+            points: vec![],
+        };
+        assert!(Workload::new(wrong, vec![(ScheduleKind::Static, empty)]).is_err());
+    }
+
+    #[test]
     fn mobilenet_slim_ratio_near_q56pct() {
         // 0.75 width => MACs ~ 0.75^2 = 0.56 of baseline for pointwise-
         // dominated compute.
-        let ws = paper_workloads(90, 10, 42);
+        let ws = paper_workloads(90, 10, 42).unwrap();
         let slim = &ws[2].schedules[1].1;
         let r = slim.final_ratio();
         assert!((0.4..0.75).contains(&r), "ratio={r}");
@@ -150,7 +209,7 @@ mod tests {
 
     #[test]
     fn point_weights_sum_to_run_length() {
-        let ws = paper_workloads(90, 10, 42);
+        let ws = paper_workloads(90, 10, 42).unwrap();
         let s = &ws[0].schedules[0].1;
         let w = point_weights(s);
         let sum: f64 = w.iter().sum();

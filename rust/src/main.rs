@@ -21,6 +21,9 @@ USAGE: flexsa <command> [args] [--flags]
 
 figure regeneration (paper-vs-measured):
   report [--threads N] [--csv DIR]           all tables and figures
+         [--use-plans]                       (--use-plans adds the whole-
+                                             trajectory heuristic-vs-plans
+                                             table; DESIGN.md §16)
   table1                                     Table I configurations
   fig3 [--strength low|high]                 pruning timeline on 1G1C
   fig5                                       naive core-size sweep
@@ -35,10 +38,12 @@ figure regeneration (paper-vs-measured):
 
 planner (search-based plan optimizer; DESIGN.md §12):
   plan M N K [--config NAME] [--phase ..]    search plans for one GEMM
-       [--exhaustive | --beam N] [--ideal]   (default: exhaustive)
+       [--exhaustive | --beam N] [--ideal]   (default: exhaustive;
+       [--tails]                             --tails widens the space with
+                                             per-column tail-mode overrides)
   plan MODEL [--configs A,B] [--strength ..] heuristic-vs-oracle gap over
        [--beam N | --exhaustive] [--ideal]   the pruning trajectory
-                                             (default: beam 2, 1G1F+4G1F)
+       [--tails]                             (default: beam 2, 1G1F+4G1F)
 
 cache maintenance (ROADMAP store GC):
   cache stats [--cache-dir DIR]              walk the shard dirs, report
@@ -63,6 +68,13 @@ tools:
                                              via PJRT (python never on path)
 
 common flags: --threads N (default: all cores), --config NAME|@FILE
+
+plan resolution (simulate/report/fig10-13/e2e-layers/train; serve takes a
+per-request `use_plans` field instead):
+              --use-plans (resolve each GEMM's compilation plan from the
+              plan store written by `flexsa plan`; a miss falls back to
+              the Algorithm-1 heuristic, so results are never worse than
+              the plan-less run; prints `# plans: resolved=.. fallback=..`)
 
 cache flags (figure/report/simulate/plan commands, plus `train`, whose
 trace replay shares the same store):
@@ -220,6 +232,17 @@ fn print_plan_store_line(session: &SimSession) {
     }
 }
 
+/// The plan-resolution stderr line (`--use-plans` paths, DESIGN.md §16):
+/// how many GEMM compilations replayed a searched plan from the store vs
+/// fell back to the Algorithm-1 heuristic. `make plans-smoke` greps
+/// `resolved=` on a warm store.
+fn print_plans_line(session: &SimSession) {
+    let stats = session.stats();
+    if stats.plan_resolves + stats.plan_fallbacks > 0 {
+        eprintln!("# plans: {}", stats.plans_summary());
+    }
+}
+
 /// `flexsa plan M N K` / `flexsa plan MODEL`: search the compilation-plan
 /// space and report the heuristic-vs-searched-best gap.
 fn run_plan(args: &Args, threads: usize, session: &Arc<SimSession>) -> Result<(), String> {
@@ -235,7 +258,11 @@ fn run_plan(args: &Args, threads: usize, session: &Arc<SimSession>) -> Result<()
     } else {
         Strategy::Beam(2)
     };
-    let planner = Planner::new(Arc::clone(session), strategy, threads);
+    // --tails widens the candidate space with per-column tail-mode
+    // overrides (DESIGN.md §16); off by default so the golden oracle
+    // counts (and the beam ⊆ exhaustive property) are what CI pins.
+    let planner =
+        Planner::new(Arc::clone(session), strategy, threads).with_tail_search(args.has("tails"));
 
     if shape_mode {
         let cfg = Arc::new(load_config_default(args, "4G1F")?);
@@ -586,9 +613,10 @@ fn run(args: &Args) -> Result<(), String> {
             print_cache_line(&session);
         }
         "fig10" | "fig11" | "fig12" | "fig13" | "e2e-layers" => {
+            let use_plans = args.has("use-plans");
             let mut figs = FigCacheLines::new(&session);
             grid_note(threads);
-            let grid = fig::EvalGrid::compute_auto(threads, &session);
+            let grid = fig::EvalGrid::compute_auto_with(threads, &session, use_plans)?;
             figs.line("EvalGrid");
             match args.command.as_str() {
                 "fig10" => {
@@ -605,8 +633,10 @@ fn run(args: &Args) -> Result<(), String> {
                 _ => emit(&fig::e2e_layers(&grid), csv)?,
             }
             print_cache_line(&session);
+            print_plans_line(&session);
         }
         "report" => {
+            let use_plans = args.has("use-plans");
             let mut figs = FigCacheLines::new(&session);
             emit(&fig::table1(), csv)?;
             emit(&fig::fig3(Strength::Low, threads, &session), csv)?;
@@ -620,7 +650,7 @@ fn run(args: &Args) -> Result<(), String> {
             emit(&fig::ablations(threads, &session), csv)?;
             figs.line("Ablations");
             grid_note(threads);
-            let grid = fig::EvalGrid::compute_auto(threads, &session);
+            let grid = fig::EvalGrid::compute_auto_with(threads, &session, use_plans)?;
             figs.line("EvalGrid");
             emit(&fig::fig10(&grid, true), csv)?;
             emit(&fig::fig10(&grid, false), csv)?;
@@ -631,8 +661,17 @@ fn run(args: &Args) -> Result<(), String> {
             eprintln!("# searching compilation-plan space (heuristic optimality gap)...");
             emit(&fig::plan_gap(threads, &session), csv)?;
             figs.line("PlanGap");
+            if use_plans {
+                // The tentpole's acceptance table: whole-trajectory
+                // heuristic-vs-plans cycles, per phase, every row with
+                // plans <= heuristic (fallback semantics guarantee it).
+                eprintln!("# replaying trajectory under resolved plans (--use-plans)...");
+                emit(&fig::plans_vs_heuristic(threads, &session), csv)?;
+                figs.line("PlansVsHeuristic");
+            }
             print_cache_line(&session);
             print_plan_store_line(&session);
+            print_plans_line(&session);
         }
         "plan" => {
             run_plan(args, threads, &session)?;
@@ -654,7 +693,13 @@ fn run(args: &Args) -> Result<(), String> {
             let shape = parse_mnk(args)?;
             let phase = parse_phase(args)?;
             let opts = if args.has("ideal") { SimOptions::ideal() } else { SimOptions::hbm2() };
-            let sim = session.simulate(&cfg, shape, phase, &opts);
+            let sim = if args.has("use-plans") {
+                let fp = SimSession::fingerprint_keyed(cfg.fingerprint(), shape, phase, &opts);
+                let plan = session.resolve_plan(fp);
+                session.simulate_plan(&cfg, shape, phase, &opts, &plan)
+            } else {
+                session.simulate(&cfg, shape, phase, &opts)
+            };
             println!("config    : {cfg}");
             println!("gemm      : {shape} ({:?})", phase);
             println!("cycles    : {:.0} (compute {:.0}, dram {:.0})",
@@ -668,6 +713,10 @@ fn run(args: &Args) -> Result<(), String> {
                 flexsa::util::fmt::bytes(sim.traffic.dram() as f64));
             println!("waves     : {:?}", sim.waves_by_mode);
             print_cache_line(&session);
+            // Under --use-plans the resolver's FXPL probes show up here
+            // (`# plan store: hits=..`) — `make plans-smoke` greps it.
+            print_plan_store_line(&session);
+            print_plans_line(&session);
         }
         "compile" => {
             let cfg = load_config(args)?;

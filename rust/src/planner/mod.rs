@@ -121,21 +121,73 @@ impl PlanChoice {
 }
 
 /// Candidate partition policies for `cfg` (heuristic first — the scoring
-/// tie-break depends on it).
+/// tie-break depends on it). Hybrid grids cover **every** divisor `m` of
+/// the group count in `2..groups` (an `m×(groups/m)` grid), not just the
+/// powers of two: power-of-two group counts enumerate exactly as before,
+/// while e.g. `groups = 6` now proposes the `3×2` grid alongside `2×3`.
 pub fn enumerate_partitions(cfg: &AcceleratorConfig) -> Vec<PartitionPolicy> {
     let mut out = vec![PartitionPolicy::Heuristic];
     if cfg.groups > 1 {
         out.push(PartitionPolicy::ForceM);
         out.push(PartitionPolicy::ForceK);
-        let mut m = 2;
-        while m < cfg.groups {
+        for m in 2..cfg.groups.min(u8::MAX as usize + 1) {
             if cfg.groups % m == 0 {
                 out.push(PartitionPolicy::Hybrid { m_parts: m as u8 });
             }
-            m *= 2;
         }
     }
     out
+}
+
+/// Candidate tail-mode overrides for `(cfg, shape)` (no override first —
+/// the tie-break keeps tail-less plans ahead of equals). Non-trivial only
+/// when a partial tail column actually exists — a FlexSA unit with
+/// `shape.n` wider than one array but not a multiple of it; everything
+/// else has no tail for the override to act on, so the axis collapses to
+/// `[None]`. Searched only by planners with
+/// [`Planner::with_tail_search`] enabled (the plan space is 5× larger per
+/// partition×mode×blocking point).
+pub fn enumerate_tails(cfg: &AcceleratorConfig, shape: GemmShape) -> Vec<Option<Mode>> {
+    let cols = cfg.unit.cols;
+    if cfg.kind == UnitKind::FlexSa && shape.n > cols && shape.n % cols != 0 {
+        vec![None, Some(Mode::Fw), Some(Mode::Vsw), Some(Mode::Hsw), Some(Mode::Isw)]
+    } else {
+        vec![None]
+    }
+}
+
+/// Drop partition policies **dominated** by an earlier-enumerated one for
+/// this `(shape, phase)`: a policy producing the identical slice grid and
+/// K-split depth proposes only candidates that compile to computations an
+/// earlier policy already proposes (e.g. `ForceM` duplicates the phase
+/// rule on forward GEMMs, `ForceK` duplicates it on weight-gradient
+/// GEMMs). Returns the surviving policies plus the number pruned — callers
+/// fold the pruned count into their dedupe accounting, so pruning is
+/// observationally a dedupe that skips the per-candidate key computation.
+pub fn prune_dominated_partitions(
+    cfg: &AcceleratorConfig,
+    shape: GemmShape,
+    phase: Phase,
+    partitions: Vec<PartitionPolicy>,
+) -> (Vec<PartitionPolicy>, u32) {
+    let mut seen: std::collections::HashSet<(Vec<(usize, usize, usize)>, usize)> =
+        Default::default();
+    let mut pruned = 0u32;
+    let survivors = partitions
+        .into_iter()
+        .filter(|pp| {
+            let (parts, k_parts) = partitions_with(cfg, shape, phase, pp);
+            let grid: Vec<(usize, usize, usize)> =
+                parts.into_iter().map(|p| (p.m, p.n, p.k)).collect();
+            if seen.insert((grid, k_parts)) {
+                true
+            } else {
+                pruned += 1;
+                false
+            }
+        })
+        .collect();
+    (survivors, pruned)
 }
 
 /// Candidate mode policies for `cfg` (Algorithm 1 first). Monolithic
@@ -216,6 +268,7 @@ fn better(a: &CandidateScore, b: &CandidateScore) -> bool {
 pub struct Planner {
     service: SimService,
     strategy: Strategy,
+    tail_search: bool,
 }
 
 impl Planner {
@@ -232,7 +285,18 @@ impl Planner {
         };
         let service =
             SimService::start_with_session(workers.max(1), BatchPolicy::default(), session);
-        Planner { service, strategy }
+        Planner { service, strategy, tail_search: false }
+    }
+
+    /// Enable (or disable) the tail-mode search axis
+    /// ([`enumerate_tails`]): candidates may additionally override the
+    /// wave mode of the partial tail column. Off by default — the axis
+    /// multiplies the plan space 5× on shapes that have a tail, and
+    /// records it persists share the plain strategy key, so opt in
+    /// deliberately (`flexsa plan --tails`).
+    pub fn with_tail_search(mut self, on: bool) -> Planner {
+        self.tail_search = on;
+        self
     }
 
     /// The session candidates are scored through.
@@ -321,6 +385,13 @@ impl Planner {
         let partitions = enumerate_partitions(cfg);
         let modes = enumerate_modes(cfg);
         let blockings = enumerate_blockings();
+        let tails =
+            if self.tail_search { enumerate_tails(cfg, shape) } else { vec![None] };
+        // Dominated-partition pruning (see [`prune_dominated_partitions`]):
+        // skipped policies are credited to `deduped` below with the same
+        // multiplicity the dedupe filters would have counted, so pruning
+        // never changes the reported proposal totals.
+        let (partitions, pruned) = prune_dominated_partitions(cfg, shape, phase, partitions);
         // Two dedupe layers before anything simulates: identical candidates
         // re-proposed by overlapping beam stages (same cache fingerprint,
         // the satellite's `fingerprint_plan_keyed` filter), and distinct
@@ -358,19 +429,28 @@ impl Planner {
             }
         };
 
+        let mut pruned_credit = 0u32;
         match self.strategy {
             Strategy::Exhaustive => {
+                // Each pruned policy would have proposed the full
+                // mode×blocking×tail cross product.
+                pruned_credit = pruned * (modes.len() * blockings.len() * tails.len()) as u32;
                 let mut all = Vec::new();
                 for &partition in &partitions {
                     for &mode in &modes {
                         for &blocking in &blockings {
-                            all.push(PlanParams { partition, blocking, mode });
+                            for &tail_mode in &tails {
+                                all.push(PlanParams { partition, blocking, mode, tail_mode });
+                            }
                         }
                     }
                 }
                 run(self, all, &mut scored);
             }
             Strategy::Beam(n) => {
+                // Each pruned policy would have proposed one stage-1
+                // candidate (and, deduped there, never reached a beam).
+                pruned_credit = pruned;
                 let n = n.max(1);
                 // Stage 1: partition axis under the default blocking/mode.
                 run(
@@ -408,6 +488,22 @@ impl Planner {
                         .collect(),
                     &mut scored,
                 );
+                // Stage 4 (opt-in): expand the top-n along the tail axis.
+                if tails.len() > 1 {
+                    let top = top_n(&scored, n);
+                    run(
+                        self,
+                        top.iter()
+                            .flat_map(|p| {
+                                tails.iter().map(move |&tail_mode| PlanParams {
+                                    tail_mode,
+                                    ..*p
+                                })
+                            })
+                            .collect(),
+                        &mut scored,
+                    );
+                }
             }
         }
 
@@ -431,7 +527,7 @@ impl Planner {
             heuristic_cycles: heuristic.cycles,
             heuristic_dram: heuristic.dram,
             evaluated: scored.len() as u32,
-            deduped,
+            deduped: deduped + pruned_credit,
             from_store: false,
         };
         if let Some(store) = self.session().store() {
@@ -580,6 +676,92 @@ mod tests {
         assert_eq!(enumerate_modes(&preset("1G4C").unwrap()).len(), 1);
         assert!(enumerate_partitions(&preset("4G1F").unwrap()).len() >= 4);
         assert_eq!(enumerate_modes(&preset("1G1F").unwrap()).len(), 6);
+    }
+
+    #[test]
+    fn hybrid_grids_cover_every_divisor() {
+        // Power-of-two group counts enumerate exactly as before...
+        let four = preset("4G1F").unwrap();
+        assert_eq!(
+            enumerate_partitions(&four),
+            vec![
+                PartitionPolicy::Heuristic,
+                PartitionPolicy::ForceM,
+                PartitionPolicy::ForceK,
+                PartitionPolicy::Hybrid { m_parts: 2 },
+            ]
+        );
+        // ...while non-power-of-two counts gain the odd-divisor grids.
+        let mut twelve = four.clone();
+        twelve.groups = 12;
+        let parts = enumerate_partitions(&twelve);
+        for m in [2u8, 3, 4, 6] {
+            assert!(parts.contains(&PartitionPolicy::Hybrid { m_parts: m }), "{parts:?}");
+        }
+        assert!(!parts.contains(&PartitionPolicy::Hybrid { m_parts: 5 }));
+        assert!(!parts.contains(&PartitionPolicy::Hybrid { m_parts: 12 }));
+    }
+
+    #[test]
+    fn tail_axis_exists_only_for_flexsa_partial_columns() {
+        let flex = preset("1G1F").unwrap();
+        let cols = flex.unit.cols;
+        // Partial tail column: full 5-way axis, no-override first.
+        let t = enumerate_tails(&flex, GemmShape::new(512, cols + 40, 128));
+        assert_eq!(t.len(), 5);
+        assert_eq!(t[0], None);
+        assert!(!t.contains(&Some(Mode::Mono)));
+        // Exact multiple, narrower-than-one-array, and monolithic units
+        // all collapse the axis.
+        assert_eq!(enumerate_tails(&flex, GemmShape::new(512, cols * 2, 128)), vec![None]);
+        assert_eq!(enumerate_tails(&flex, GemmShape::new(512, cols - 1, 128)), vec![None]);
+        let mono = preset("1G1C").unwrap();
+        assert_eq!(enumerate_tails(&mono, GemmShape::new(512, 200, 128)), vec![None]);
+    }
+
+    #[test]
+    fn dominated_partitions_are_pruned_with_credit() {
+        let cfg = preset("4G1F").unwrap();
+        let shape = GemmShape::new(4096, 512, 1024);
+        let all = enumerate_partitions(&cfg);
+        // Forward heuristic M-splits: ForceM is the dominated duplicate.
+        let (fwd, pruned) = prune_dominated_partitions(&cfg, shape, Phase::Forward, all.clone());
+        assert_eq!(pruned, 1);
+        assert!(!fwd.contains(&PartitionPolicy::ForceM), "{fwd:?}");
+        assert!(fwd.contains(&PartitionPolicy::ForceK));
+        // Weight-grad heuristic K-splits: ForceK is the duplicate.
+        let (wg, pruned) = prune_dominated_partitions(&cfg, shape, Phase::WeightGrad, all);
+        assert_eq!(pruned, 1);
+        assert!(!wg.contains(&PartitionPolicy::ForceK), "{wg:?}");
+        assert!(wg.contains(&PartitionPolicy::ForceM));
+        // Pruning is invisible in the reported totals: the full 4G1F
+        // cross product still accounts 4×6×4 proposals.
+        let p = planner(Strategy::Exhaustive);
+        let c = p.plan_gemm(
+            &Arc::new(cfg),
+            GemmShape::new(32, 1000, 2048),
+            Phase::Forward,
+            &SimOptions::hbm2(),
+        );
+        assert_eq!(c.evaluated + c.deduped, 96, "{c:?}");
+    }
+
+    #[test]
+    fn tail_search_never_loses_to_the_plain_search() {
+        let session = SimSession::shared();
+        let plain = Planner::new(Arc::clone(&session), Strategy::Exhaustive, 2);
+        let tails =
+            Planner::new(Arc::clone(&session), Strategy::Exhaustive, 2).with_tail_search(true);
+        let cfg = Arc::new(preset("1G1F").unwrap());
+        let shape = GemmShape::new(512, cfg.unit.cols + 40, 128);
+        let a = plain.plan_gemm(&cfg, shape, Phase::Forward, &SimOptions::hbm2());
+        let b = tails.plan_gemm(&cfg, shape, Phase::Forward, &SimOptions::hbm2());
+        // Same heuristic baseline, a superset candidate space: the tail
+        // search proposes more and can only match or beat the plain best.
+        assert_eq!(a.heuristic_cycles.to_bits(), b.heuristic_cycles.to_bits());
+        assert!(b.evaluated + b.deduped > a.evaluated + a.deduped, "{a:?} vs {b:?}");
+        assert!(b.best_cycles <= a.best_cycles, "{} > {}", b.best_cycles, a.best_cycles);
+        assert!(b.gap() >= a.gap());
     }
 
     #[test]

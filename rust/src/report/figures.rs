@@ -56,9 +56,11 @@ pub struct EvalGrid {
 impl EvalGrid {
     /// Compute the grid with `threads` workers sharing `session` — the 600
     /// iteration simulations dedup their recurring GEMMs across strengths,
-    /// epochs, and memory models through it (EXPERIMENTS.md §Perf).
-    pub fn compute(threads: usize, session: &SimSession) -> Self {
-        Self::compute_workloads(threads, session, 90, 10, 42)
+    /// epochs, and memory models through it (EXPERIMENTS.md §Perf). `Err`
+    /// only if the built-in workloads fail validation
+    /// ([`paper_workloads`]).
+    pub fn compute(threads: usize, session: &SimSession) -> Result<Self, String> {
+        Self::compute_workloads(threads, session, 90, 10, 42, false)
     }
 
     /// [`Self::compute`], or a reduced smoke grid (3 trajectory points)
@@ -69,13 +71,25 @@ impl EvalGrid {
     /// `e2e-layers`, `report`) route through here too, which is how the CI
     /// persistent-cache smoke step runs the same reduced grid twice against
     /// one `--cache-dir` and asserts the second pass simulates nothing.
-    pub fn compute_auto(threads: usize, session: &SimSession) -> Self {
+    pub fn compute_auto(threads: usize, session: &SimSession) -> Result<Self, String> {
+        Self::compute_auto_with(threads, session, false)
+    }
+
+    /// [`Self::compute_auto`] with plan resolution: `use_plans` makes
+    /// every sweep cell resolve its GEMM plans from the session's plan
+    /// store (`--use-plans`, DESIGN.md §16); with an empty store this is
+    /// bit-identical to the plan-less grid.
+    pub fn compute_auto_with(
+        threads: usize,
+        session: &SimSession,
+        use_plans: bool,
+    ) -> Result<Self, String> {
         if std::env::var_os(crate::bench_harness::SMOKE_ENV).is_some() {
-            let mut grid = Self::compute_workloads(threads, session, 10, 5, 42);
+            let mut grid = Self::compute_workloads(threads, session, 10, 5, 42, use_plans)?;
             grid.reduced = true;
-            grid
+            Ok(grid)
         } else {
-            Self::compute(threads, session)
+            Self::compute_workloads(threads, session, 90, 10, 42, use_plans)
         }
     }
 
@@ -89,8 +103,9 @@ impl EvalGrid {
         epochs: usize,
         interval: usize,
         seed: u64,
-    ) -> Self {
-        let workloads = paper_workloads(epochs, interval, seed);
+        use_plans: bool,
+    ) -> Result<Self, String> {
+        let workloads = paper_workloads(epochs, interval, seed)?;
         let mut jobs = Vec::new();
         let mut keys = Vec::new();
         for (wi, w) in workloads.iter().enumerate() {
@@ -109,6 +124,7 @@ impl EvalGrid {
                                 counts: p.counts.clone(),
                                 weight: wt,
                                 opts,
+                                use_plans,
                             });
                         }
                         keys.push(((wi, si, name, ideal), lo..jobs.len()));
@@ -122,7 +138,7 @@ impl EvalGrid {
             let refs: Vec<_> = results[range].iter().collect();
             cells.insert(key, aggregate(&refs));
         }
-        Self { workloads, cells, reduced: false }
+        Ok(Self { workloads, cells, reduced: false })
     }
 
     /// The figure notes with the reduced-grid marker appended when this is
@@ -198,6 +214,7 @@ pub fn fig3(strength: Strength, threads: usize, session: &SimSession) -> FigureR
             counts: p.counts.clone(),
             weight: 1.0,
             opts: SimOptions::ideal(),
+            use_plans: false,
         })
         .collect();
     let results = run_sweep(jobs, threads, session);
@@ -263,6 +280,7 @@ pub fn fig5(threads: usize, session: &SimSession) -> FigureReport {
                     counts: p.counts.clone(),
                     weight: wt,
                     opts: SimOptions::ideal(),
+                    use_plans: false,
                 })
                 .collect();
             let results = run_sweep(jobs, threads, session);
@@ -684,6 +702,112 @@ pub fn plan_gap(threads: usize, session: &Arc<SimSession>) -> FigureReport {
         id: "PlanGap".into(),
         title: "Heuristic optimality gap: Algorithm 1 vs searched best plan \
                 (ResNet50 low-strength trajectory, HBM2)"
+            .into(),
+        table: t,
+        notes,
+    }
+}
+
+/// Whole-trajectory heuristic-vs-plans table (`flexsa report
+/// --use-plans`, DESIGN.md §16): for every Table-I preset, (1) search the
+/// plan space of each unique GEMM of the ResNet50 pruning trajectory
+/// (populating / reading the session's plan store — a warm store answers
+/// with zero simulator runs), then (2) replay the **whole trajectory
+/// end-to-end** twice through the session — once on the plan-less
+/// heuristic path, once through [`SimSession::resolve_plan`] — and report
+/// the epoch-weighted cycle totals side by side with a per-phase gap
+/// breakdown. Every row satisfies `plans ≤ heuristic`: a resolution
+/// either replays a searched plan whose cycles beat (or tie) the
+/// heuristic, or *is* the heuristic. Honors `FLEXSA_BENCH_SMOKE` with the
+/// reduced trajectory, like [`EvalGrid::compute_auto`].
+pub fn plans_vs_heuristic(threads: usize, session: &Arc<SimSession>) -> FigureReport {
+    use crate::planner::{Planner, Strategy};
+    let smoke = std::env::var_os(crate::bench_harness::SMOKE_ENV).is_some();
+    let (epochs, interval) = if smoke { (10, 5) } else { (90, 10) };
+    let model = crate::models::resnet50();
+    let sched = crate::pruning::prunetrain_schedule(&model, Strength::Low, epochs, interval, 42);
+    let weights = point_weights(&sched);
+    let opts = SimOptions::hbm2();
+    let planner = Planner::new(Arc::clone(session), Strategy::Beam(2), threads);
+
+    let mut t = TextTable::new(vec![
+        "config",
+        "heuristic Mcyc",
+        "plans Mcyc",
+        "speedup",
+        "fwd gap",
+        "dgrad gap",
+        "wgrad gap",
+    ]);
+    let mut notes = Vec::new();
+    let before = session.stats();
+    for name in PRESETS {
+        let cfg = Arc::new(preset(name).unwrap());
+        // Phase 1: plan every unique trajectory GEMM (store read-through /
+        // write-behind: a rerun against a warm --cache-dir searches
+        // nothing).
+        let tp = planner.plan_schedule(&cfg, &model, &sched, &opts);
+        // Phase 2: replay the full trajectory end-to-end, heuristic vs
+        // resolved plans, epoch-weighted — the same per-GEMM machinery
+        // `simulate_iteration_with` uses.
+        let cfg_fp = cfg.fingerprint();
+        let mut heur = [0.0f64; 3];
+        let mut plans = [0.0f64; 3];
+        for (point, &w) in sched.points.iter().zip(&weights) {
+            for g in model.gemms(model.default_batch, &point.counts) {
+                let pi = g.phase.index();
+                let h = session.simulate_keyed(cfg_fp, &cfg, g.shape, g.phase, &opts);
+                heur[pi] += w * h.cycles;
+                let fp = SimSession::fingerprint_keyed(cfg_fp, g.shape, g.phase, &opts);
+                let plan = session.resolve_plan(fp);
+                let p = session.simulate_plan_keyed(cfg_fp, &cfg, g.shape, g.phase, &opts, &plan);
+                plans[pi] += w * p.cycles;
+            }
+        }
+        let ht: f64 = heur.iter().sum();
+        let pt: f64 = plans.iter().sum();
+        let gap = |i: usize| {
+            if plans[i] > 0.0 {
+                crate::util::fmt::pct(heur[i] / plans[i] - 1.0)
+            } else {
+                "-".to_string()
+            }
+        };
+        t.row(vec![
+            name.to_string(),
+            format!("{:.1}", ht / 1e6),
+            format!("{:.1}", pt / 1e6),
+            format!("{:.3}x", if pt > 0.0 { ht / pt } else { 1.0 }),
+            gap(0),
+            gap(1),
+            gap(2),
+        ]);
+        if tp.max_gap() > 0.0 {
+            notes.push(format!(
+                "{name}: search improved {}/{} unique GEMMs (max per-GEMM gap {})",
+                tp.improved(),
+                tp.unique_gemms(),
+                crate::util::fmt::pct(tp.max_gap()),
+            ));
+        }
+    }
+    let d = session.stats().delta(&before);
+    notes.push(format!(
+        "plan resolution: resolved={} fallback={} (fallbacks replay the heuristic, \
+         so every row satisfies plans <= heuristic)",
+        d.plan_resolves, d.plan_fallbacks,
+    ));
+    if smoke {
+        notes.push(
+            "REDUCED SMOKE GRID (FLEXSA_BENCH_SMOKE set): 10-epoch/interval-5 \
+             trajectory, not the paper's 90/10 — do not record these numbers"
+                .into(),
+        );
+    }
+    FigureReport {
+        id: "PlansVsHeuristic".into(),
+        title: "Whole-trajectory cycles: Algorithm-1 heuristic vs resolved plans \
+                (ResNet50 low-strength trajectory, HBM2, beam-2 search)"
             .into(),
         table: t,
         notes,

@@ -207,9 +207,11 @@ fn process_frame<S: Read + Write>(
     let (id, outcome, holds_slot, before) = match parsed {
         Err(e) => (None, Err(e), false, None),
         Ok(frame) => {
-            // Counter snapshot before dispatch: the envelope's `request`
-            // block is the delta across this request's work.
-            let before = shared.session.stats();
+            // Counter snapshots before dispatch: the envelope's `request`
+            // block is the delta across this request's work. The fast-path
+            // counters are process-wide and never reset, so a snapshot
+            // delta is the only correct per-request attribution.
+            let before = (shared.session.stats(), crate::sim::fastpath_snapshot());
             let (outcome, holds_slot) = shared.handle(&frame.req);
             (frame.id, outcome, holds_slot, Some(before))
         }
@@ -227,7 +229,7 @@ fn respond<S: Read + Write>(
     id: Option<u64>,
     body: Result<super::protocol::ServeResponse, WireError>,
     holds_slot: bool,
-    before: Option<crate::session::SessionStats>,
+    before: Option<(crate::session::SessionStats, crate::sim::FastpathSnapshot)>,
 ) -> std::io::Result<()> {
     client.requests += 1;
     shared.requests.fetch_add(1, Ordering::Relaxed);
@@ -236,17 +238,21 @@ fn respond<S: Read + Write>(
         shared.errors.fetch_add(1, Ordering::Relaxed);
     }
     let now = shared.session.stats();
+    let fp_now = crate::sim::fastpath_snapshot();
     let env = Envelope {
         id,
         body,
         stats: super::protocol::EnvelopeStats {
             client_requests: client.requests,
             client_errors: client.errors,
-            global: StatsBlock::from_session(&now),
+            global: StatsBlock::from_session(&now).with_fastpath(fp_now.fast, fp_now.fallback),
             // Exact for serial clients; approximate under concurrency (the
             // counters are whole-session; DESIGN.md §14).
             request: before
-                .map(|b| StatsBlock::from_session(&now.delta(&b)))
+                .map(|(b, fp_b)| {
+                    let d = fp_now.delta(&fp_b);
+                    StatsBlock::from_session(&now.delta(&b)).with_fastpath(d.fast, d.fallback)
+                })
                 .unwrap_or_default(),
         },
     };

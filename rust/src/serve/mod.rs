@@ -269,16 +269,25 @@ impl Shared {
     }
 
     /// Submit one GEMM through the shared service and wait for its result.
-    /// On success the caller owns an `outstanding` slot and must release
-    /// it once the response is flushed.
+    /// With `use_plans` the compilation plan is resolved from the warm
+    /// session's plan store first ([`SimSession::resolve_plan`]; a miss
+    /// falls back to the heuristic). On success the caller owns an
+    /// `outstanding` slot and must release it once the response is flushed.
     fn simulate(
         &self,
         cfg: &Arc<AcceleratorConfig>,
         shape: crate::gemm::GemmShape,
         phase: crate::gemm::Phase,
         opts: crate::sim::SimOptions,
+        use_plans: bool,
     ) -> Result<Arc<GemmSim>, WireError> {
         let refused = || WireError::new(ErrorKind::ShuttingDown, "daemon is draining");
+        let plan = if use_plans {
+            let fp = SimSession::fingerprint_keyed(cfg.fingerprint(), shape, phase, &opts);
+            self.session.resolve_plan(fp)
+        } else {
+            PlanParams::HEURISTIC
+        };
         let (tx, rx) = mpsc::channel();
         {
             let guard = self.submitter.lock().unwrap();
@@ -288,7 +297,7 @@ impl Shared {
             let id = sub.allocate();
             self.waiters.lock().unwrap().insert(id, tx);
             self.outstanding.fetch_add(1, Ordering::SeqCst);
-            if !sub.submit_allocated(id, cfg, shape, phase, opts, PlanParams::HEURISTIC) {
+            if !sub.submit_allocated(id, cfg, shape, phase, opts, plan) {
                 self.waiters.lock().unwrap().remove(&id);
                 self.outstanding.fetch_sub(1, Ordering::SeqCst);
                 return Err(refused());
@@ -313,7 +322,11 @@ impl Shared {
             ServeRequest::Ping => (Ok(ServeResponse::Pong), false),
             ServeRequest::Stats => (
                 Ok(ServeResponse::Stats {
-                    global: protocol::StatsBlock::from_session(&self.session.stats()),
+                    global: {
+                        let (fast, fallback) = crate::sim::fastpath_counters();
+                        protocol::StatsBlock::from_session(&self.session.stats())
+                            .with_fastpath(fast, fallback)
+                    },
                     connections: self.connections.load(Ordering::Relaxed),
                     requests: self.requests.load(Ordering::Relaxed),
                     errors: self.errors.load(Ordering::Relaxed),
@@ -326,7 +339,7 @@ impl Shared {
                 self.log("shutdown requested; draining");
                 (Ok(ServeResponse::ShutdownAck { outstanding: inflight }), false)
             }
-            ServeRequest::Simulate { shape, phase, memory, config } => {
+            ServeRequest::Simulate { shape, phase, memory, config, use_plans } => {
                 if self.draining() {
                     return (
                         Err(WireError::new(ErrorKind::ShuttingDown, "daemon is draining")),
@@ -337,7 +350,7 @@ impl Shared {
                     Ok(c) => c,
                     Err(e) => return (Err(e), false),
                 };
-                match self.simulate(&cfg, *shape, *phase, memory.options()) {
+                match self.simulate(&cfg, *shape, *phase, memory.options(), *use_plans) {
                     Ok(sim) => {
                         (Ok(ServeResponse::Simulate(protocol::SimResult::from_sim(&sim))), true)
                     }

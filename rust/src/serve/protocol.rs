@@ -580,7 +580,8 @@ impl SearchStrategy {
 /// One parsed request (the `type` field selects the variant).
 #[derive(Debug, Clone, PartialEq)]
 pub enum ServeRequest {
-    /// Simulate one GEMM under the Algorithm-1 heuristic plan.
+    /// Simulate one GEMM under the Algorithm-1 heuristic plan — or, with
+    /// `use_plans`, under the best stored plan for the GEMM.
     Simulate {
         /// GEMM dimensions (`m`/`n`/`k` fields).
         shape: GemmShape,
@@ -590,6 +591,11 @@ pub enum ServeRequest {
         memory: Memory,
         /// Target configuration (`config` or `config_text`; required).
         config: ConfigRef,
+        /// Resolve the compilation plan from the session's plan store
+        /// (`use_plans`: boolean; default false). A store miss falls back
+        /// to the heuristic, so the answer is never worse than the plain
+        /// request (DESIGN.md §16).
+        use_plans: bool,
     },
     /// Search the compilation-plan space for one GEMM.
     Plan {
@@ -661,11 +667,15 @@ pub fn encode_request(frame: &Frame) -> String {
         members.push(("id".into(), Json::UInt(id)));
     }
     match &frame.req {
-        ServeRequest::Simulate { shape, phase, memory, config } => {
+        ServeRequest::Simulate { shape, phase, memory, config, use_plans } => {
             shape_json(shape, &mut members);
             members.push(("phase".into(), Json::Str(phase.name().into())));
             members.push(("memory".into(), Json::Str(memory.name().into())));
             config_json(config, &mut members);
+            // Emitted only when set, so pre-plan frames stay byte-identical.
+            if *use_plans {
+                members.push(("use_plans".into(), Json::Bool(true)));
+            }
         }
         ServeRequest::Plan { shape, phase, memory, config, strategy } => {
             shape_json(shape, &mut members);
@@ -787,6 +797,12 @@ pub fn parse_request(line: &str) -> Result<Frame, WireError> {
             phase: parse_phase_field(&v)?,
             memory: parse_memory_field(&v)?,
             config: parse_config_field(&v)?,
+            use_plans: match v.get("use_plans") {
+                None => false,
+                Some(x) => x
+                    .as_bool()
+                    .ok_or_else(|| WireError::invalid("`use_plans` must be a boolean"))?,
+            },
         },
         "plan" => ServeRequest::Plan {
             shape: parse_shape(&v)?,
@@ -1029,10 +1045,18 @@ pub struct StatsBlock {
     pub sims: u64,
     /// Entries resident in the memory tier.
     pub entries: u64,
+    /// Group executions answered by the closed-form wave-pipeline fast
+    /// path (DESIGN.md §15). The counters are process-wide; per-request
+    /// blocks carry a snapshot delta ([`Self::with_fastpath`]).
+    pub fast: u64,
+    /// Group executions that replayed the streaming executor instead.
+    pub fallback: u64,
 }
 
 impl StatsBlock {
     /// Project [`SessionStats`] (a snapshot or a delta) onto the wire.
+    /// The fast-path counters live outside the session (process-wide
+    /// atomics); attach them with [`Self::with_fastpath`].
     pub fn from_session(s: &SessionStats) -> StatsBlock {
         StatsBlock {
             hits: s.hits,
@@ -1041,10 +1065,23 @@ impl StatsBlock {
             store_writes: s.store_writes,
             sims: s.sims(),
             entries: s.entries,
+            fast: 0,
+            fallback: 0,
         }
     }
 
+    /// Attach closed-form fast-path dispatch counts — the process-wide
+    /// totals for a global block, or a snapshot delta
+    /// ([`crate::sim::FastpathSnapshot::delta`]) for a per-request block.
+    pub fn with_fastpath(mut self, fast: u64, fallback: u64) -> StatsBlock {
+        self.fast = fast;
+        self.fallback = fallback;
+        self
+    }
+
     fn to_json(&self) -> Json {
+        // `hits` must stay the FIRST member: the smoke tooling's `sed`
+        // patterns anchor on it. New members append at the end.
         Json::Obj(vec![
             ("hits".into(), Json::UInt(self.hits)),
             ("misses".into(), Json::UInt(self.misses)),
@@ -1052,6 +1089,8 @@ impl StatsBlock {
             ("store_writes".into(), Json::UInt(self.store_writes)),
             ("sims".into(), Json::UInt(self.sims)),
             ("entries".into(), Json::UInt(self.entries)),
+            ("fast".into(), Json::UInt(self.fast)),
+            ("fallback".into(), Json::UInt(self.fallback)),
         ])
     }
 
@@ -1061,6 +1100,9 @@ impl StatsBlock {
                 .and_then(|x| x.as_u64())
                 .ok_or_else(|| WireError::invalid(format!("stats missing `{key}`")))
         };
+        // Absent fast-path members read as 0 (frames from pre-fast-path
+        // daemons stay parseable).
+        let opt = |key: &str| v.get(key).and_then(|x| x.as_u64()).unwrap_or(0);
         Ok(StatsBlock {
             hits: u("hits")?,
             misses: u("misses")?,
@@ -1068,6 +1110,8 @@ impl StatsBlock {
             store_writes: u("store_writes")?,
             sims: u("sims")?,
             entries: u("entries")?,
+            fast: opt("fast"),
+            fallback: opt("fallback"),
         })
     }
 }

@@ -55,7 +55,7 @@ use crate::compiler::{
 use crate::config::AcceleratorConfig;
 use crate::gemm::{GemmShape, Phase};
 use crate::sim::{
-    execute_group, simulate_gemm_plan, simulate_gemm_shape, GemmFold, GemmSim, GroupSim,
+    execute_group_spec, simulate_gemm_plan, simulate_gemm_shape, GemmFold, GemmSim, GroupSim,
     SimOptions,
 };
 use std::collections::{HashMap, VecDeque};
@@ -153,6 +153,15 @@ pub struct SessionStats {
     pub group_store_misses: u64,
     /// Group results written behind to the persistent store.
     pub group_store_writes: u64,
+    /// Plan resolutions ([`SimSession::resolve_plan`], DESIGN.md §16)
+    /// answered by a stored `FXPL` record: the GEMM simulated under a
+    /// searched plan instead of the Algorithm-1 heuristic.
+    pub plan_resolves: u64,
+    /// Plan resolutions that fell back to [`PlanParams::HEURISTIC`] — no
+    /// store attached, no record under any probed strategy key, or every
+    /// stored record was rejected (undecodable or worse than its own
+    /// recorded heuristic baseline).
+    pub plan_fallbacks: u64,
 }
 
 impl SessionStats {
@@ -241,7 +250,15 @@ impl SessionStats {
             group_store_writes: self
                 .group_store_writes
                 .saturating_sub(earlier.group_store_writes),
+            plan_resolves: self.plan_resolves.saturating_sub(earlier.plan_resolves),
+            plan_fallbacks: self.plan_fallbacks.saturating_sub(earlier.plan_fallbacks),
         }
+    }
+
+    /// One-line summary of plan resolution (the CLI's `# plans:` stderr
+    /// line under `--use-plans`; `make plans-smoke` greps `resolved=`).
+    pub fn plans_summary(&self) -> String {
+        format!("resolved={} fallback={}", self.plan_resolves, self.plan_fallbacks)
     }
 
     /// Fraction of lookups answered from the cache (0 when idle).
@@ -311,6 +328,8 @@ pub struct SimSession {
     group_misses: AtomicU64,
     group_inserts: AtomicU64,
     group_evictions: AtomicU64,
+    plan_resolves: AtomicU64,
+    plan_fallbacks: AtomicU64,
 }
 
 impl Default for SimSession {
@@ -335,6 +354,8 @@ impl SimSession {
             group_misses: AtomicU64::new(0),
             group_inserts: AtomicU64::new(0),
             group_evictions: AtomicU64::new(0),
+            plan_resolves: AtomicU64::new(0),
+            plan_fallbacks: AtomicU64::new(0),
         }
     }
 
@@ -386,6 +407,41 @@ impl SimSession {
     /// Whether lookups can be answered from the cache.
     pub fn is_enabled(&self) -> bool {
         self.enabled
+    }
+
+    /// Strategy bytes [`Self::resolve_plan`] probes, best-first: the
+    /// exhaustive record (`0xFF`), then persisted beam widths widest-first.
+    const PLAN_PROBE_STRATEGIES: [u8; 5] = [0xFF, 8, 4, 2, 1];
+
+    /// Resolve the compilation plan for one GEMM from the persistent plan
+    /// store (DESIGN.md §16). `fp` is the GEMM's **base** (heuristic)
+    /// fingerprint — the key `flexsa plan` records decisions under. Probes
+    /// the strategy keys best-first ([`Self::PLAN_PROBE_STRATEGIES`]) and
+    /// returns the first stored winning plan that decodes under the current
+    /// codec and is not worse than its own recorded heuristic baseline;
+    /// anything else — no store attached, no record, corrupt or stale
+    /// entry — falls back to [`PlanParams::HEURISTIC`]. By construction a
+    /// `--use-plans` run is therefore never worse than the heuristic path:
+    /// every resolution either replays a searched plan whose recorded
+    /// cycles beat (or tie) the heuristic, or *is* the heuristic.
+    pub fn resolve_plan(&self, fp: Fingerprint) -> PlanParams {
+        if let Some(store) = self.store.as_ref() {
+            for s in Self::PLAN_PROBE_STRATEGIES {
+                let Some(rec) = store.get_plan(fp, s) else { continue };
+                // Defensive: a record claiming a slower-than-heuristic
+                // winner is malformed (the search never persists one).
+                let sane = rec.best_cycles.is_finite() && rec.best_cycles <= rec.heuristic_cycles;
+                if !sane {
+                    continue;
+                }
+                if let Ok(plan) = PlanParams::unpack(rec.plan) {
+                    self.plan_resolves.fetch_add(1, Ordering::Relaxed);
+                    return plan;
+                }
+            }
+        }
+        self.plan_fallbacks.fetch_add(1, Ordering::Relaxed);
+        PlanParams::HEURISTIC
     }
 
     /// Stable content address of one simulation input: FNV-1a/128 over the
@@ -528,7 +584,7 @@ impl SimSession {
     ) -> Arc<GroupSim> {
         if !self.enabled {
             self.group_misses.fetch_add(1, Ordering::Relaxed);
-            return Arc::new(execute_group(cfg, p, k_partitioned, &plan.mode, opts));
+            return Arc::new(execute_group_spec(cfg, p, k_partitioned, &plan.mode_spec(), opts));
         }
         self.simulate_group_keyed(GroupGeometry::of(cfg).fingerprint(), cfg, p, k_partitioned, plan, opts)
     }
@@ -554,7 +610,7 @@ impl SimSession {
         );
         if !self.enabled {
             self.group_misses.fetch_add(1, Ordering::Relaxed);
-            return Arc::new(execute_group(cfg, p, k_partitioned, &plan.mode, opts));
+            return Arc::new(execute_group_spec(cfg, p, k_partitioned, &plan.mode_spec(), opts));
         }
         let fp = Self::fingerprint_group_keyed(geom_fp, p, k_partitioned, plan, opts);
         let shard = &self.group_shards[fp.0 as usize % SHARDS];
@@ -569,7 +625,7 @@ impl SimSession {
         }
         // Execute outside the lock (same duplicate-compute contract as the
         // whole-GEMM tier: first insert wins).
-        let g = Arc::new(execute_group(cfg, p, k_partitioned, &plan.mode, opts));
+        let g = Arc::new(execute_group_spec(cfg, p, k_partitioned, &plan.mode_spec(), opts));
         let (g, inserted) = self.adopt_group(shard, fp.0, g);
         if inserted {
             if let Some(st) = &self.store {
@@ -753,6 +809,8 @@ impl SimSession {
             group_store_hits: store.group_hits,
             group_store_misses: store.group_misses,
             group_store_writes: store.group_writes,
+            plan_resolves: self.plan_resolves.load(Ordering::Relaxed),
+            plan_fallbacks: self.plan_fallbacks.load(Ordering::Relaxed),
         }
     }
 
@@ -1235,6 +1293,45 @@ mod tests {
         assert_eq!((st.group_store_hits, st.group_hits), (1, 3), "{st:?}");
         let direct = simulate_gemm_shape(&cfg, shape, Phase::DataGrad, &SimOptions::hbm2());
         crate::proptest::gemm_bit_identical(&c, &direct).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resolve_plan_probes_store_best_first_and_falls_back() {
+        use crate::compiler::PartitionPolicy;
+        let dir = crate::proptest::scratch_dir("session-resolve-plan");
+        let mut s = SimSession::with_store(SimStore::open(&dir).unwrap());
+        let cfg = preset("4G1F").unwrap();
+        let fp = SimSession::fingerprint(&cfg, shape(), Phase::Forward, &SimOptions::hbm2());
+        // Empty store: heuristic fallback.
+        assert!(s.resolve_plan(fp).is_heuristic());
+        let st = s.stats();
+        assert_eq!((st.plan_resolves, st.plan_fallbacks), (0, 1), "{st:?}");
+        // A beam-2 record resolves even though wider strategy keys miss.
+        let plan = PlanParams { partition: PartitionPolicy::ForceK, ..PlanParams::HEURISTIC };
+        let rec = PlanRecord {
+            plan: plan.pack(),
+            best_cycles: 10.0,
+            best_dram: 1,
+            heuristic_cycles: 20.0,
+            heuristic_dram: 2,
+            evaluated: 3,
+            strategy: 2,
+        };
+        assert!(s.store().unwrap().put_plan(fp, &rec));
+        assert_eq!(s.resolve_plan(fp), plan);
+        // A malformed exhaustive record (winner slower than its own
+        // baseline) is skipped; the sane beam record still answers.
+        let bad = PlanRecord { best_cycles: 30.0, strategy: 0xFF, ..rec };
+        assert!(s.store().unwrap().put_plan(fp, &bad));
+        assert_eq!(s.resolve_plan(fp), plan, "rejected exhaustive, resolved beam");
+        let st = s.stats();
+        assert_eq!((st.plan_resolves, st.plan_fallbacks), (2, 1), "{st:?}");
+        assert!(st.plans_summary().contains("resolved=2"));
+        // Store detached: pure fallback again.
+        s.set_store(None);
+        assert!(s.resolve_plan(fp).is_heuristic());
+        assert_eq!(s.stats().plan_fallbacks, 2);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

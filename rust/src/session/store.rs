@@ -73,7 +73,7 @@ const GROUP_DOMAIN: u8 = 0x47; // 'G'
 /// scoring order, or the [`PlanRecord`] layout changes (a
 /// [`crate::sim::SIM_VERSION`] bump *also* re-keys plan records, since the
 /// recorded cycles come from the simulator).
-pub const PLAN_CODEC_VERSION: u8 = 1;
+pub const PLAN_CODEC_VERSION: u8 = 2;
 
 /// Domain-separation byte folded into plan keys so a plan record can never
 /// alias a simulation entry even if the extensions were ignored.
@@ -994,6 +994,7 @@ mod tests {
                 partition: crate::compiler::PartitionPolicy::ForceK,
                 blocking: crate::compiler::BlockingPolicy::Auto,
                 mode: crate::compiler::ModePolicy::ReuseGreedy,
+                tail_mode: None,
             }
             .pack(),
             best_cycles: 1234.5,

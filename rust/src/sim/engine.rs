@@ -11,7 +11,7 @@
 //! bit-identical to monolithic ones by construction.
 
 use super::{RampMode, SimOptions};
-use crate::compiler::{CompiledGemm, DramPlan, ModePolicy};
+use crate::compiler::{CompiledGemm, DramPlan, ModePolicy, ModeSpec};
 use crate::config::AcceleratorConfig;
 use crate::gemm::{GemmShape, ACC_BYTES, ELEM_BYTES};
 use crate::isa::{Inst, Mode};
@@ -261,12 +261,25 @@ pub fn execute_group(
     mode: &ModePolicy,
     opts: &SimOptions,
 ) -> GroupSim {
-    if let Some(g) = super::fastpath::execute_group_fast(cfg, p, k_partitioned, mode, opts) {
+    execute_group_spec(cfg, p, k_partitioned, &ModeSpec::base_only(*mode), opts)
+}
+
+/// [`execute_group`] under a full [`ModeSpec`] (base policy + optional
+/// tail-column override). A spec without a tail override is bit-identical
+/// to [`execute_group`].
+pub fn execute_group_spec(
+    cfg: &AcceleratorConfig,
+    p: GemmShape,
+    k_partitioned: bool,
+    spec: &ModeSpec,
+    opts: &SimOptions,
+) -> GroupSim {
+    if let Some(g) = super::fastpath::execute_group_fast_spec(cfg, p, k_partitioned, spec, opts) {
         super::fastpath::count_fast();
         return g;
     }
     super::fastpath::count_fallback();
-    execute_group_streaming(cfg, p, k_partitioned, mode, opts)
+    execute_group_streaming_spec(cfg, p, k_partitioned, spec, opts)
 }
 
 /// Execute one group partition's instruction stream (streamed straight out
@@ -281,8 +294,20 @@ pub fn execute_group_streaming(
     mode: &ModePolicy,
     opts: &SimOptions,
 ) -> GroupSim {
+    execute_group_streaming_spec(cfg, p, k_partitioned, &ModeSpec::base_only(*mode), opts)
+}
+
+/// [`execute_group_streaming`] under a full [`ModeSpec`] — the fallback
+/// behind [`execute_group_spec`].
+pub fn execute_group_streaming_spec(
+    cfg: &AcceleratorConfig,
+    p: GemmShape,
+    k_partitioned: bool,
+    spec: &ModeSpec,
+    opts: &SimOptions,
+) -> GroupSim {
     let mut ex = GroupExecutor::new(cfg, *opts, k_partitioned);
-    crate::compiler::tile_partition_visit_plan(cfg, p, k_partitioned, mode, &mut |inst| {
+    crate::compiler::tile_partition_visit_spec(cfg, p, k_partitioned, spec, &mut |inst| {
         ex.exec(&inst)
     });
     ex.into_group_sim()
@@ -376,6 +401,7 @@ pub fn simulate_gemm_plan(
     use crate::compiler::{gbuf_blocking_with, partitions_with};
     let (parts, k_parts) = partitions_with(cfg, shape, phase, &plan.partition);
     let k_partitioned = k_parts > 1;
+    let spec = plan.mode_spec();
     let mut fold = GemmFold::new();
     // Partitions are usually identical (m,n,k) slices (the session's group
     // tier shows cold 4G1F = 1 execution + 3 hits); execute_group is a pure
@@ -386,7 +412,7 @@ pub fn simulate_gemm_plan(
         let g = match seen.iter().find(|(s, _)| *s == p) {
             Some((_, g)) => g.clone(),
             None => {
-                let g = execute_group(cfg, p, k_partitioned, &plan.mode, opts);
+                let g = execute_group_spec(cfg, p, k_partitioned, &spec, opts);
                 seen.push((p, g.clone()));
                 g
             }

@@ -41,7 +41,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::engine::{GroupSim, Traffic};
 use super::{RampMode, SimOptions};
-use crate::compiler::{chunk_sizes, ColumnPlan, ModePolicy};
+use crate::compiler::{chunk_sizes, ColumnPlan, ModePolicy, ModeSpec};
 use crate::config::AcceleratorConfig;
 use crate::gemm::{GemmShape, ACC_BYTES, ELEM_BYTES};
 use crate::isa::Mode;
@@ -61,6 +61,36 @@ static FALLBACK: AtomicU64 = AtomicU64::new(0);
 /// the preset corpus.
 pub fn counters() -> (u64, u64) {
     (FAST.load(Ordering::Relaxed), FALLBACK.load(Ordering::Relaxed))
+}
+
+/// A point-in-time copy of the process-wide dispatch counters. The
+/// counters only ever grow and are never reset (a reset would race with
+/// concurrent simulations); callers that want per-run or per-request
+/// numbers take a snapshot before, another after, and diff with
+/// [`FastpathSnapshot::delta`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct FastpathSnapshot {
+    /// Group executions that took the closed-form path.
+    pub fast: u64,
+    /// Group executions that replayed the streaming executor.
+    pub fallback: u64,
+}
+
+impl FastpathSnapshot {
+    /// Counters accumulated since `earlier` (saturating, so a stale
+    /// snapshot from another epoch never underflows).
+    pub fn delta(&self, earlier: &FastpathSnapshot) -> FastpathSnapshot {
+        FastpathSnapshot {
+            fast: self.fast.saturating_sub(earlier.fast),
+            fallback: self.fallback.saturating_sub(earlier.fallback),
+        }
+    }
+}
+
+/// Snapshot the process-wide dispatch counters (see [`FastpathSnapshot`]).
+pub fn snapshot() -> FastpathSnapshot {
+    let (fast, fallback) = counters();
+    FastpathSnapshot { fast, fallback }
 }
 
 pub(crate) fn count_fast() {
@@ -392,6 +422,20 @@ pub fn execute_group_fast(
     policy: &ModePolicy,
     opts: &SimOptions,
 ) -> Option<GroupSim> {
+    execute_group_fast_spec(cfg, p, k_partitioned, &ModeSpec::base_only(*policy), opts)
+}
+
+/// [`execute_group_fast`] under a full [`ModeSpec`]: each column width
+/// resolves its governing policy through [`ModeSpec::policy_for`] before
+/// its cost is built. Sound per-width because the override is a pure
+/// function of the column width (`n_size`), the key of the cost cache.
+pub fn execute_group_fast_spec(
+    cfg: &AcceleratorConfig,
+    p: GemmShape,
+    k_partitioned: bool,
+    spec: &ModeSpec,
+    opts: &SimOptions,
+) -> Option<GroupSim> {
     let bw = cfg.onchip_bytes_per_cycle_per_unit();
     let e = exact_log2(bw)?;
     if p.is_empty() {
@@ -412,7 +456,7 @@ pub fn execute_group_fast(
                 p,
                 n_size,
                 &k_chunks,
-                policy,
+                spec.policy_for(cfg, n_size),
                 opts.shiftv_overlap,
                 store_elem,
                 e,
@@ -555,6 +599,40 @@ mod tests {
         );
         crate::proptest::group_bit_identical(&fast, &slow).unwrap();
         assert_eq!(fast, GroupSim::default());
+    }
+
+    #[test]
+    fn snapshot_delta_counts_only_new_dispatches() {
+        let before = snapshot();
+        let cfg = preset("1G1F").unwrap();
+        crate::sim::execute_group(
+            &cfg,
+            GemmShape::new(64, 64, 64),
+            false,
+            &ModePolicy::Algorithm1,
+            &SimOptions::hbm2(),
+        );
+        let after = snapshot();
+        let d = after.delta(&before);
+        assert!(d.fast + d.fallback >= 1, "{d:?}");
+        // Saturating: diffing in the wrong order clamps to zero instead of
+        // wrapping.
+        let rev = before.delta(&after);
+        assert_eq!((rev.fast, rev.fallback), (0, 0));
+    }
+
+    #[test]
+    fn spec_tail_override_matches_streaming() {
+        use crate::compiler::PlanParams;
+        let cfg = preset("1G1F").unwrap();
+        let spec = PlanParams { tail_mode: Some(Mode::Fw), ..PlanParams::HEURISTIC }.mode_spec();
+        // N = 168 has a 40-wide tail column; the fast and streaming paths
+        // must agree under the override exactly as they do without it.
+        let p = GemmShape::new(512, 168, 160);
+        let opts = SimOptions::hbm2();
+        let fast = execute_group_fast_spec(&cfg, p, false, &spec, &opts).unwrap();
+        let slow = crate::sim::execute_group_streaming_spec(&cfg, p, false, &spec, &opts);
+        crate::proptest::group_bit_identical(&fast, &slow).unwrap();
     }
 
     #[test]

@@ -85,12 +85,36 @@ pub fn simulate_iteration(
     opts: &SimOptions,
     session: &SimSession,
 ) -> IterationSim {
+    simulate_iteration_with(cfg, gemms, opts, session, false)
+}
+
+/// [`simulate_iteration`] with plan resolution (DESIGN.md §16): when
+/// `use_plans` is set, each GEMM first resolves its compilation plan from
+/// the session's persistent plan store
+/// ([`SimSession::resolve_plan`], keyed by the GEMM's base fingerprint)
+/// and simulates under the resolved plan; misses fall back to the
+/// Algorithm-1 heuristic, so the result is never worse than the plan-less
+/// path and **bit-identical** to it when the store has no plans. With
+/// `use_plans` false this *is* [`simulate_iteration`].
+pub fn simulate_iteration_with(
+    cfg: &AcceleratorConfig,
+    gemms: &[Gemm],
+    opts: &SimOptions,
+    session: &SimSession,
+    use_plans: bool,
+) -> IterationSim {
     let mut out = IterationSim::default();
     // One config digest for the whole iteration: the session hit path then
     // never re-serializes the config (161 GEMMs for ResNet50).
     let cfg_fp = cfg.fingerprint();
     for g in gemms {
-        let s = session.simulate_keyed(cfg_fp, cfg, g.shape, g.phase, opts);
+        let s = if use_plans {
+            let fp = SimSession::fingerprint_keyed(cfg_fp, g.shape, g.phase, opts);
+            let plan = session.resolve_plan(fp);
+            session.simulate_plan_keyed(cfg_fp, cfg, g.shape, g.phase, opts, &plan)
+        } else {
+            session.simulate_keyed(cfg_fp, cfg, g.shape, g.phase, opts)
+        };
         out.gemm_cycles += s.cycles;
         out.busy_macs += s.busy_macs;
         out.traffic.add(&s.traffic);
@@ -120,9 +144,23 @@ pub fn simulate_model_epoch(
     opts: &SimOptions,
     session: &SimSession,
 ) -> IterationSim {
+    simulate_model_epoch_with(cfg, model, counts, opts, session, false)
+}
+
+/// [`simulate_model_epoch`] with plan resolution — the `use_plans`
+/// contract of [`simulate_iteration_with`] applied to a whole model
+/// iteration (the SIMD phase has no plan space and is unaffected).
+pub fn simulate_model_epoch_with(
+    cfg: &AcceleratorConfig,
+    model: &Model,
+    counts: &ChannelCounts,
+    opts: &SimOptions,
+    session: &SimSession,
+    use_plans: bool,
+) -> IterationSim {
     let batch = model.default_batch;
     let gemms = model.gemms(batch, counts);
-    let mut out = simulate_iteration(cfg, &gemms, opts, session);
+    let mut out = simulate_iteration_with(cfg, &gemms, opts, session, use_plans);
 
     let flops = model.total_simd_flops(batch, counts);
     let bytes = model.total_simd_bytes(batch, counts);

@@ -26,10 +26,14 @@ mod fastpath;
 mod iteration;
 
 pub use engine::{
-    execute_group, execute_group_streaming, simulate_gemm, simulate_gemm_plan,
-    simulate_gemm_shape, GemmFold, GemmSim, GroupExecutor, GroupSim, Traffic,
+    execute_group, execute_group_spec, execute_group_streaming, execute_group_streaming_spec,
+    simulate_gemm, simulate_gemm_plan, simulate_gemm_shape, GemmFold, GemmSim, GroupExecutor,
+    GroupSim, Traffic,
 };
-pub use fastpath::{counters as fastpath_counters, execute_group_fast};
+pub use fastpath::{
+    counters as fastpath_counters, execute_group_fast, execute_group_fast_spec,
+    snapshot as fastpath_snapshot, FastpathSnapshot,
+};
 
 /// Simulator output version, folded into every persistent-store key and
 /// written into every on-disk entry (DESIGN.md §11). **Bump this whenever a
@@ -78,7 +82,10 @@ impl RampMode {
         }
     }
 }
-pub use iteration::{fused_total_cycles, simulate_iteration, simulate_model_epoch, IterationSim, SimdSim};
+pub use iteration::{
+    fused_total_cycles, simulate_iteration, simulate_iteration_with, simulate_model_epoch,
+    simulate_model_epoch_with, IterationSim, SimdSim,
+};
 
 /// Simulator knobs (modeling ablations; defaults follow the paper).
 #[derive(Debug, Clone, Copy)]

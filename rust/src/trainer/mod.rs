@@ -48,6 +48,11 @@ pub struct TrainerConfig {
     /// here, so the replay reads and warms the same persistent store as
     /// the figure commands instead of building a private session.
     pub cache: CacheOpts,
+    /// Resolve each replayed GEMM's compilation plan from the session's
+    /// plan store (`--use-plans`, DESIGN.md §16). A store miss falls back
+    /// to the Algorithm-1 heuristic, so the replay is never slower than
+    /// the plan-less one.
+    pub use_plans: bool,
 }
 
 impl Default for TrainerConfig {
@@ -61,6 +66,7 @@ impl Default for TrainerConfig {
             seed: 42,
             out_dir: Some("artifacts".into()),
             cache: CacheOpts::default(),
+            use_plans: false,
         }
     }
 }
@@ -91,6 +97,7 @@ pub fn run_from_args(args: &Args) -> Result<(), String> {
         cfg.out_dir = Some(o.to_string());
     }
     cfg.cache = CacheOpts::from_args(args);
+    cfg.use_plans = args.has("use-plans");
     dispatch(&cfg)
 }
 
@@ -118,7 +125,7 @@ pub fn run(cfg: &TrainerConfig) -> anyhow::Result<TrainOutcome> {
     use crate::models::ChannelCounts;
     use crate::pruning::PrunePoint;
     use crate::runtime::{lit, Runtime};
-    use crate::sim::{simulate_model_epoch, SimOptions};
+    use crate::sim::{simulate_model_epoch_with, SimOptions};
     use anyhow::Context;
 
     anyhow::ensure!(
@@ -246,8 +253,14 @@ pub fn run(cfg: &TrainerConfig) -> anyhow::Result<TrainOutcome> {
         let mut busy = 0.0;
         let mut cycles = 0.0;
         for p in &schedule.points {
-            let s =
-                simulate_model_epoch(&acc, &sim_model, &p.counts, &SimOptions::ideal(), &session);
+            let s = simulate_model_epoch_with(
+                &acc,
+                &sim_model,
+                &p.counts,
+                &SimOptions::ideal(),
+                &session,
+                cfg.use_plans,
+            );
             busy += s.busy_macs as f64;
             cycles += s.gemm_cycles;
         }
@@ -259,6 +272,9 @@ pub fn run(cfg: &TrainerConfig) -> anyhow::Result<TrainOutcome> {
     let speedup = sim_results[0].2 / sim_results[2].2;
     println!("headline: 1G1F speedup over 1G1C on measured trajectory = {speedup:.2}x");
     println!("sim cache: {}", session.stats().summary());
+    if cfg.use_plans {
+        println!("plans: {}", session.stats().plans_summary());
+    }
     if let Some(store) = session.store() {
         println!(
             "sim store: {} sims={} at {}",
@@ -328,6 +344,7 @@ mod tests {
         assert!(c.steps >= c.prune_interval);
         assert!(c.threshold > 0.0 && c.threshold < 1.0);
         assert!(!c.cache.no_cache && !c.cache.no_store && c.cache.cache_dir.is_none());
+        assert!(!c.use_plans);
     }
 
     #[test]

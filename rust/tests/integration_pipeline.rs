@@ -25,6 +25,7 @@ fn trajectory_util(cfg_name: &str, strength: Strength) -> f64 {
             counts: p.counts.clone(),
             weight: w,
             opts: SimOptions::ideal(),
+            use_plans: false,
         })
         .collect();
     let results = run_sweep(jobs, 8, &SimSession::new());
@@ -80,7 +81,7 @@ fn flexsa_tracks_naive_split_utilization() {
 #[test]
 fn paper_workloads_grid_headlines() {
     // A reduced Fig-10/11 consistency check on ResNet50 only (fast).
-    let ws = paper_workloads(90, 10, 42);
+    let ws = paper_workloads(90, 10, 42).unwrap();
     let resnet = &ws[0];
     let mut utils = std::collections::HashMap::new();
     let mut traffic = std::collections::HashMap::new();
@@ -100,6 +101,7 @@ fn paper_workloads_grid_headlines() {
                 counts: p.counts.clone(),
                 weight: w,
                 opts: SimOptions::hbm2(),
+                use_plans: false,
             })
             .collect();
         let results = run_sweep(jobs, 8, &session);
@@ -121,7 +123,7 @@ fn paper_workloads_grid_headlines() {
 
 #[test]
 fn schedules_transfer_and_remain_valid() {
-    let ws = paper_workloads(90, 10, 7);
+    let ws = paper_workloads(90, 10, 7).unwrap();
     for w in &ws {
         for (kind, sched) in &w.schedules {
             sched.validate(&w.model).unwrap_or_else(|e| {
@@ -133,7 +135,7 @@ fn schedules_transfer_and_remain_valid() {
 
 #[test]
 fn mobilenet_static_variant_reduces_cycles() {
-    let ws = paper_workloads(90, 10, 42);
+    let ws = paper_workloads(90, 10, 42).unwrap();
     let mobilenet = &ws[2];
     let cfg = preset("1G1C").unwrap();
     let session = SimSession::new();

@@ -1,0 +1,145 @@
+//! Plan-resolution properties (`--use-plans`, DESIGN.md §16): with an
+//! empty plan store a plan-aware run is bit-identical to the heuristic
+//! path; a store hit replays the *exact* searched [`PlanParams`] with zero
+//! simulator runs against a warm sim store; and a corrupt `.gplan` entry
+//! is a clean miss — heuristic fallback now, repaired record after the
+//! next search.
+
+use flexsa::config::preset;
+use flexsa::gemm::{Gemm, GemmShape, Phase};
+use flexsa::models::{resnet50, ChannelCounts};
+use flexsa::planner::{Planner, Strategy};
+use flexsa::proptest::scratch_dir;
+use flexsa::session::{SimSession, SimStore};
+use flexsa::sim::{simulate_iteration, simulate_iteration_with, IterationSim, SimOptions};
+use std::sync::Arc;
+
+/// Bit-level equality for whole-iteration results (f64 fields compared by
+/// bit pattern, so `-0.0 != 0.0` and NaNs would be caught too).
+fn iteration_bits_equal(a: &IterationSim, b: &IterationSim, ctx: &str) {
+    assert_eq!(a.gemm_cycles.to_bits(), b.gemm_cycles.to_bits(), "{ctx}: gemm_cycles");
+    assert_eq!(
+        a.ideal_gemm_cycles.to_bits(),
+        b.ideal_gemm_cycles.to_bits(),
+        "{ctx}: ideal_gemm_cycles"
+    );
+    assert_eq!(a.busy_macs, b.busy_macs, "{ctx}: busy_macs");
+    assert_eq!(a.traffic, b.traffic, "{ctx}: traffic");
+    assert_eq!(a.waves_by_mode, b.waves_by_mode, "{ctx}: waves_by_mode");
+    assert_eq!(a.simd.cycles.to_bits(), b.simd.cycles.to_bits(), "{ctx}: simd cycles");
+}
+
+/// A small but phase-diverse GEMM slice of the ResNet50 iteration (keeps
+/// the debug-profile test cheap while still crossing layers and phases).
+fn sample_gemms() -> Vec<Gemm> {
+    let model = resnet50();
+    let counts = ChannelCounts::baseline(&model);
+    let gemms = model.gemms(model.default_batch, &counts);
+    gemms.into_iter().step_by(19).take(9).collect()
+}
+
+#[test]
+fn empty_store_resolution_is_bit_identical_to_heuristic() {
+    let dir = scratch_dir("plans-empty");
+    let gemms = sample_gemms();
+    let opts = SimOptions::hbm2();
+    for name in ["1G1C", "4G1F"] {
+        let cfg = preset(name).unwrap();
+        // Plan-less ground truth on a plain session.
+        let base_session = SimSession::new();
+        let base = simulate_iteration(&cfg, &gemms, &opts, &base_session);
+        // Plan-aware run against a store with no FXPL records: every
+        // resolution must fall back to the heuristic, bit-identically.
+        let session = SimSession::with_store(SimStore::open(&dir).unwrap());
+        let planned = simulate_iteration_with(&cfg, &gemms, &opts, &session, true);
+        iteration_bits_equal(&planned, &base, name);
+        let st = session.stats();
+        assert_eq!(st.plan_resolves, 0, "{name}: nothing to resolve: {st:?}");
+        assert_eq!(st.plan_fallbacks, gemms.len() as u64, "{name}: one fallback per GEMM: {st:?}");
+    }
+    // And with no store attached at all, `use_plans` is a pure no-op.
+    let cfg = preset("4G1F").unwrap();
+    let s1 = SimSession::new();
+    let s2 = SimSession::new();
+    iteration_bits_equal(
+        &simulate_iteration_with(&cfg, &gemms, &opts, &s1, true),
+        &simulate_iteration_with(&cfg, &gemms, &opts, &s2, false),
+        "storeless",
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn store_hit_replays_the_exact_searched_plan() {
+    let dir = scratch_dir("plans-replay");
+    let cfg = Arc::new(preset("4G1F").unwrap());
+    let shape = GemmShape::new(32, 1000, 2048); // PR-4 golden fwd gap shape
+    let opts = SimOptions::hbm2();
+
+    // Cold: exhaustive search persists the winning record (FXPL) and
+    // every candidate simulation (gsim tier).
+    let s1 = Arc::new(SimSession::with_store(SimStore::open(&dir).unwrap()));
+    let cold = Planner::new(Arc::clone(&s1), Strategy::Exhaustive, 2)
+        .plan_gemm(&cfg, shape, Phase::Forward, &opts);
+    assert!(!cold.best.is_heuristic(), "golden shape has a real gap");
+
+    // A fresh plan-aware session resolves the *exact* PlanParams back.
+    let s2 = Arc::new(SimSession::with_store(SimStore::open(&dir).unwrap()));
+    let fp = SimSession::fingerprint(&cfg, shape, Phase::Forward, &opts);
+    let resolved = s2.resolve_plan(fp);
+    assert_eq!(resolved, cold.best, "store hit must replay the searched plan");
+    assert_eq!(resolved.pack(), cold.best.pack());
+    let st = s2.stats();
+    assert_eq!((st.plan_resolves, st.plan_fallbacks), (1, 0), "{st:?}");
+
+    // Simulating under the resolved plan reproduces the search's recorded
+    // cycles bit-for-bit and answers entirely from the warm sim store:
+    // sims=0, the CI plans-smoke acceptance criterion.
+    let sim = s2.simulate_plan(&cfg, shape, Phase::Forward, &opts, &resolved);
+    assert_eq!(sim.cycles.to_bits(), cold.best_cycles.to_bits());
+    assert_eq!(sim.traffic.dram(), cold.best_dram);
+    assert_eq!(s2.stats().sims(), 0, "warm store must answer without simulating");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_plan_entry_is_a_clean_miss_then_repaired() {
+    let dir = scratch_dir("plans-corrupt");
+    let cfg = Arc::new(preset("4G1F").unwrap());
+    let shape = GemmShape::new(1000, 2048, 32); // PR-4 golden wgrad gap shape
+    let opts = SimOptions::hbm2();
+
+    let s1 = Arc::new(SimSession::with_store(SimStore::open(&dir).unwrap()));
+    let cold = Planner::new(Arc::clone(&s1), Strategy::Exhaustive, 2)
+        .plan_gemm(&cfg, shape, Phase::WeightGrad, &opts);
+    assert!(!cold.best.is_heuristic());
+
+    // Flip one byte of the stored record: resolution must degrade to the
+    // heuristic (never an error, never a garbage plan).
+    let fp = SimSession::fingerprint(&cfg, shape, Phase::WeightGrad, &opts);
+    let path = s1.store().unwrap().plan_entry_path(fp, Strategy::Exhaustive.byte());
+    let mut bytes = std::fs::read(&path).unwrap();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0x01;
+    std::fs::write(&path, &bytes).unwrap();
+
+    let s2 = Arc::new(SimSession::with_store(SimStore::open(&dir).unwrap()));
+    assert!(s2.resolve_plan(fp).is_heuristic(), "corrupt record must fall back");
+    let st = s2.stats();
+    assert_eq!((st.plan_resolves, st.plan_fallbacks), (0, 1), "{st:?}");
+    // Fallback semantics end-to-end: the plan-aware simulate equals the
+    // plan-less one bit-for-bit while the record is corrupt.
+    let heuristic = s2.simulate(&cfg, shape, Phase::WeightGrad, &opts);
+    let planned = s2.simulate_plan(&cfg, shape, Phase::WeightGrad, &opts, &s2.resolve_plan(fp));
+    assert_eq!(planned.cycles.to_bits(), heuristic.cycles.to_bits());
+
+    // The next search re-runs (clean miss, not an error) and repairs the
+    // record; a fresh resolver then replays the original winner.
+    let repaired = Planner::new(Arc::clone(&s2), Strategy::Exhaustive, 2)
+        .plan_gemm(&cfg, shape, Phase::WeightGrad, &opts);
+    assert!(!repaired.from_store, "corrupt record must not answer the search");
+    assert_eq!(repaired.best, cold.best);
+    let s3 = Arc::new(SimSession::with_store(SimStore::open(&dir).unwrap()));
+    assert_eq!(s3.resolve_plan(fp), cold.best, "record repaired on disk");
+    let _ = std::fs::remove_dir_all(&dir);
+}

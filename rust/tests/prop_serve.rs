@@ -86,6 +86,7 @@ fn gen_frame(rng: &mut Lcg64) -> Frame {
             phase: gen_phase(rng),
             memory: gen_memory(rng),
             config: gen_config(rng),
+            use_plans: rng.next_below(2) == 0,
         },
         1 => ServeRequest::Plan {
             shape: gen_shape(rng),
@@ -153,6 +154,8 @@ fn gen_stats_block(rng: &mut Lcg64) -> StatsBlock {
         store_writes: rng.next_u64(),
         sims: rng.next_u64(),
         entries: rng.next_u64(),
+        fast: rng.next_u64(),
+        fallback: rng.next_u64(),
     }
 }
 
@@ -299,6 +302,7 @@ fn base_lines() -> Vec<String> {
                 phase: Phase::Forward,
                 memory: Memory::Ideal,
                 config: ConfigRef::Preset("1G1C".into()),
+                use_plans: false,
             },
         }),
         encode_request(&Frame {

@@ -17,10 +17,11 @@ use flexsa::sim::{simulate_gemm_plan, simulate_gemm_shape, SimOptions};
 use std::sync::Arc;
 
 /// Number of distinct plan points [`plan_variant`] cycles through.
-const PLAN_VARIANTS: usize = 6;
+const PLAN_VARIANTS: usize = 8;
 
 /// Plan points covering every [`PlanParams`] axis (partition forcing,
-/// hybrid grids, blocking orientations, mode policies).
+/// hybrid grids, blocking orientations, mode policies, tail-mode
+/// overrides).
 fn plan_variant(i: usize) -> PlanParams {
     match i % PLAN_VARIANTS {
         0 => PlanParams::HEURISTIC,
@@ -36,9 +37,17 @@ fn plan_variant(i: usize) -> PlanParams {
             blocking: BlockingPolicy::KeepB,
             ..PlanParams::HEURISTIC
         },
-        _ => PlanParams {
+        5 => PlanParams {
             mode: ModePolicy::Forced(Mode::Vsw),
             blocking: BlockingPolicy::KeepC,
+            ..PlanParams::HEURISTIC
+        },
+        // Widened plan space (DESIGN.md §16): a tail-mode override on its
+        // own, and stacked on a forced-mode base.
+        6 => PlanParams { tail_mode: Some(Mode::Hsw), ..PlanParams::HEURISTIC },
+        _ => PlanParams {
+            mode: ModePolicy::Forced(Mode::Isw),
+            tail_mode: Some(Mode::Vsw),
             ..PlanParams::HEURISTIC
         },
     }

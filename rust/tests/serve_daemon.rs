@@ -87,6 +87,7 @@ fn simulate_frame(id: u64, key: &(GemmShape, Phase, Memory, &str)) -> Frame {
             phase: key.1,
             memory: key.2,
             config: ConfigRef::Preset(key.3.to_string()),
+            use_plans: false,
         },
     }
 }
