@@ -1,7 +1,7 @@
 # Convenience targets. The rust build needs no artifacts; `artifacts` is
 # only for the optional PJRT end-to-end path (DESIGN.md §6).
 
-.PHONY: artifacts test rust-test py-test bench-smoke perf-smoke store-smoke plan-smoke plans-smoke group-smoke serve-smoke
+.PHONY: artifacts test rust-test py-test bench-smoke perf-smoke store-smoke plan-smoke plans-smoke group-smoke serve-smoke trace-smoke
 
 # AOT-lower the L2 model + L1 kernel to HLO text (python runs once, at
 # build time; see python/compile/aot.py).
@@ -125,5 +125,41 @@ serve-smoke:
 	 rc=1; wait $$pid && rc=0; \
 	 echo "daemon exit rc=$$rc"; \
 	 test -n "$$hits" && test "$$hits" -gt 0 && test -n "$$sims" && test "$$sims" -eq 0 && test "$$rc" -eq 0
+
+# Local mirror of CI's telemetry smoke (DESIGN.md §17): a --trace-out run
+# of the PR-4 golden GEMM must produce a Chrome trace with complete
+# ("ph":"X") span events — including group_exec and fold — that a stock
+# JSON parser accepts; the same command under FLEXSA_QUIET=1 must emit
+# zero census (`# `) stderr lines; and the daemon's `metrics` request
+# must answer a Prometheus exposition with flexsa_-prefixed families and
+# per-request latency buckets.
+trace-smoke:
+	rm -rf /tmp/flexsa-trace-smoke
+	mkdir -p /tmp/flexsa-trace-smoke
+	cd rust && cargo build --release --quiet
+	cd rust && cargo run --release --quiet -- simulate 32 1000 2048 --config 4G1F --trace-out /tmp/flexsa-trace-smoke/trace.json >/dev/null 2>/tmp/flexsa-trace-smoke/trace.log
+	cd rust && FLEXSA_QUIET=1 cargo run --release --quiet -- simulate 32 1000 2048 --config 4G1F >/dev/null 2>/tmp/flexsa-trace-smoke/quiet.log
+	@events=$$(grep -o '"ph":"X"' /tmp/flexsa-trace-smoke/trace.json | wc -l); \
+	 python3 -c "import json; json.load(open('/tmp/flexsa-trace-smoke/trace.json'))"; \
+	 quiet=$$(grep -c '^# ' /tmp/flexsa-trace-smoke/quiet.log || true); \
+	 echo "trace events=$$events quiet census lines=$$quiet"; \
+	 test "$$events" -gt 0; \
+	 grep -q '"name":"group_exec"' /tmp/flexsa-trace-smoke/trace.json; \
+	 grep -q '"name":"fold"' /tmp/flexsa-trace-smoke/trace.json; \
+	 test "$$quiet" -eq 0
+	@sock=/tmp/flexsa-trace-smoke/daemon.sock; \
+	 bin=rust/target/release/flexsa; \
+	 $$bin serve --socket $$sock --quiet 2>/dev/null & pid=$$!; \
+	 for i in $$(seq 1 100); do if [ -S $$sock ]; then break; fi; sleep 0.1; done; \
+	 if ! [ -S $$sock ]; then echo "daemon socket never appeared"; kill $$pid 2>/dev/null; exit 1; fi; \
+	 $$bin query --socket $$sock '{"type":"simulate","m":4096,"n":512,"k":1024,"config":"4G1F"}' >/dev/null || { kill $$pid 2>/dev/null; exit 1; }; \
+	 out=$$($$bin query --socket $$sock '{"type":"metrics"}') || { kill $$pid 2>/dev/null; exit 1; }; \
+	 $$bin query --socket $$sock '{"type":"shutdown"}' >/dev/null || { kill $$pid 2>/dev/null; exit 1; }; \
+	 rc=1; wait $$pid && rc=0; \
+	 echo "metrics exposition: $$(printf '%s\n' "$$out" | grep -o 'flexsa_[a-z_]*' | sort -u | wc -l) distinct flexsa_ names, daemon exit rc=$$rc"; \
+	 printf '%s\n' "$$out" | grep -q 'flexsa_serve_requests'; \
+	 printf '%s\n' "$$out" | grep -q 'flexsa_session_hits'; \
+	 printf '%s\n' "$$out" | grep -q 'flexsa_serve_request_simulate_us_bucket'; \
+	 test "$$rc" -eq 0
 
 test: rust-test py-test

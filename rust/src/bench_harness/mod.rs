@@ -189,8 +189,13 @@ impl BenchLog {
         }
     }
 
-    /// Log one result row (no-op without [`JSON_ENV`]).
+    /// Log one result row (no-op without [`JSON_ENV`]). The mean latency
+    /// also lands in the telemetry registry's `bench_{name}_ns` histogram
+    /// regardless of [`JSON_ENV`], so a `metrics` scrape or the Prometheus
+    /// exposition carries bench trajectories without the JSON side file.
     pub fn add(&self, r: &BenchResult) {
+        crate::telemetry::histogram(&format!("bench_{}_ns", r.name))
+            .observe(r.mean.as_nanos() as u64);
         self.append(&format!(
             concat!(
                 "{{\"bench\":\"{}\",\"name\":\"{}\",\"iters\":{},",

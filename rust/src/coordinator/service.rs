@@ -427,6 +427,21 @@ impl SimService {
             stats.drain.store_writes_completed = st.writes + st.plan_writes + st.group_writes;
             stats.drain.store_writes_failed = st.write_errors;
         }
+        // Publish the final service counters as registry gauges (the
+        // ServiceStats struct stays the API; DESIGN.md §17): a later
+        // `metrics` scrape or Chrome-trace export can carry what the
+        // drain accomplished without re-threading the struct.
+        for (name, v) in [
+            ("service_requests", stats.requests),
+            ("service_batches", stats.batches),
+            ("service_full_batches", stats.full_batches),
+            ("service_drained", stats.drained),
+            ("drain_responses_flushed", stats.drain.responses_flushed),
+            ("drain_store_writes_completed", stats.drain.store_writes_completed),
+            ("drain_store_writes_failed", stats.drain.store_writes_failed),
+        ] {
+            crate::telemetry::counter(name).set(v);
+        }
         stats
     }
 }

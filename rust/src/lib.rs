@@ -15,9 +15,11 @@
 //!   coordinator ([`coordinator`]), the shared content-addressed
 //!   simulation cache every compile→simulate path routes through
 //!   ([`session`]), the search-based plan optimizer that quantifies
-//!   the Algorithm-1 heuristic's optimality gap ([`planner`]), and the
+//!   the Algorithm-1 heuristic's optimality gap ([`planner`]), the
 //!   long-running simulation daemon serving the warm session over a
-//!   socket ([`serve`]).
+//!   socket ([`serve`]), and the unified telemetry layer — metrics
+//!   registry, census lines, span tracing with Chrome-trace export —
+//!   every other layer reports through ([`telemetry`]).
 //! - **L2/L1 (python, build-time only)** — a JAX PruneTrain model whose
 //!   convolutions call a Pallas systolic-wave GEMM kernel; AOT-lowered to
 //!   HLO text consumed by [`runtime`]. Python never runs on the request
@@ -46,5 +48,6 @@ pub mod runtime;
 pub mod serve;
 pub mod session;
 pub mod sim;
+pub mod telemetry;
 pub mod trainer;
 pub mod util;

@@ -12,6 +12,7 @@ use flexsa::report::figures as fig;
 use flexsa::report::TextTable;
 use flexsa::session::{CacheOpts, SessionStats, SimSession, SimStore};
 use flexsa::sim::SimOptions;
+use flexsa::telemetry::{emit_census, emit_census_raw};
 use std::sync::Arc;
 
 const USAGE: &str = "\
@@ -53,9 +54,11 @@ cache maintenance (ROADMAP store GC):
 serving (long-running daemon over the warm session; DESIGN.md §14):
   serve --socket PATH | --listen ADDR:PORT   newline-delimited JSON daemon
         [--read-timeout-ms N] [--max-frame N] (simulate/plan/report/stats/
-        [--quiet]                             ping/shutdown requests; no
-                                             auth -- bind 127.0.0.1 unless
-                                             the network is trusted)
+        [--quiet]                             metrics/ping/shutdown requests;
+                                             `metrics` returns a Prometheus
+                                             text exposition; no auth --
+                                             bind 127.0.0.1 unless the
+                                             network is trusted)
   query --socket PATH | --connect ADDR:PORT  send request lines (args or
         [REQUEST_JSON ...]                    stdin), print response lines
 
@@ -68,6 +71,14 @@ tools:
                                              via PJRT (python never on path)
 
 common flags: --threads N (default: all cores), --config NAME|@FILE
+
+telemetry (DESIGN.md §17):
+              --trace-out FILE (record spans — plan resolution, group
+              execution, fold, store I/O, planner scoring — and write
+              Chrome trace-event JSON loadable in Perfetto; off by
+              default with zero overhead beyond one atomic load),
+              FLEXSA_QUIET=1 (suppress all `#`-prefixed stderr census
+              lines)
 
 plan resolution (simulate/report/fig10-13/e2e-layers/train; serve takes a
 per-request `use_plans` field instead):
@@ -187,22 +198,20 @@ fn make_session(args: &Args) -> SimSession {
 fn print_cache_line(session: &SimSession) {
     let stats = session.stats();
     if stats.lookups() > 0 {
-        eprintln!("# sim cache: {}", stats.summary());
+        emit_census("sim cache", &stats.summary());
     }
     // The group tier (DESIGN.md §13): `group_sims=` counts the group
     // executions that actually ran — `make group-smoke` asserts a second,
     // geometry-matching config reports `group_hits>0` with `group_sims=0`.
     if stats.group_lookups() > 0 {
-        eprintln!("# group tier: {}", stats.group_summary());
+        emit_census("group tier", &stats.group_summary());
     }
     if let Some(store) = session.store() {
         let st = store.stats();
         if st.lookups() + st.writes > 0 {
-            eprintln!(
-                "# sim store: {} sims={} at {}",
-                st.summary(),
-                stats.sims(),
-                store.dir().display()
+            emit_census(
+                "sim store",
+                &format!("{} sims={} at {}", st.summary(), stats.sims(), store.dir().display()),
             );
         }
     }
@@ -210,7 +219,7 @@ fn print_cache_line(session: &SimSession) {
     // `fallback=0` on preset configs — `make perf-smoke` asserts it.
     let (fast, fallback) = flexsa::sim::fastpath_counters();
     if fast + fallback > 0 {
-        eprintln!("# fastpath: fast={fast} fallback={fallback}");
+        emit_census("fastpath", &format!("fast={fast} fallback={fallback}"));
     }
 }
 
@@ -222,11 +231,14 @@ fn print_plan_store_line(session: &SimSession) {
     if let Some(store) = session.store() {
         let st = store.stats();
         if st.plan_hits + st.plan_misses + st.plan_writes > 0 {
-            eprintln!(
-                "# plan store: {} sims={} at {}",
-                st.plan_summary(),
-                session.stats().sims(),
-                store.dir().display()
+            emit_census(
+                "plan store",
+                &format!(
+                    "{} sims={} at {}",
+                    st.plan_summary(),
+                    session.stats().sims(),
+                    store.dir().display()
+                ),
             );
         }
     }
@@ -239,7 +251,7 @@ fn print_plan_store_line(session: &SimSession) {
 fn print_plans_line(session: &SimSession) {
     let stats = session.stats();
     if stats.plan_resolves + stats.plan_fallbacks > 0 {
-        eprintln!("# plans: {}", stats.plans_summary());
+        emit_census("plans", &stats.plans_summary());
     }
 }
 
@@ -291,11 +303,11 @@ fn run_plan(args: &Args, threads: usize, session: &Arc<SimSession>) -> Result<()
         if !choice.from_store {
             // The dedupe satellite's log line: how many proposals were
             // skipped as provably identical before any simulation.
-            eprintln!(
-                "# plan candidates={} deduped={}",
+            emit_census_raw(&format!(
+                "plan candidates={} deduped={}",
                 choice.evaluated + choice.deduped,
                 choice.deduped
-            );
+            ));
         }
         println!(
             "plan: best={} gap={:.2}% heuristic={:.0} best={:.0} cycles evaluated={} deduped={}{}",
@@ -348,7 +360,11 @@ fn run_plan(args: &Args, threads: usize, session: &Arc<SimSession>) -> Result<()
             format!("unknown preset `{name}` (have: {})", preset_names().join(", "))
         })?;
         let cfg = Arc::new(cfg);
-        eprintln!("# planning {} x {} trajectory points...", name, sched.points.len());
+        emit_census_raw(&format!(
+            "planning {} x {} trajectory points...",
+            name,
+            sched.points.len()
+        ));
         let tp = planner.plan_schedule(&cfg, &model, &sched, &opts);
         summary.row(vec![
             name.to_string(),
@@ -421,7 +437,7 @@ fn run_serve(args: &Args, threads: usize, session: &Arc<SimSession>) -> Result<(
     };
     let outcome = serve::run(listener, Arc::clone(session), opts)?;
     let drain = outcome.service.drain;
-    eprintln!("# serve drain: {}", drain.summary());
+    emit_census("serve drain", &drain.summary());
     if !drain.is_clean() {
         return Err(format!("store write-behind incomplete: {}", drain.summary()));
     }
@@ -551,19 +567,22 @@ impl<'a> FigCacheLines<'a> {
                 // Memory misses answered from disk are not cache failures:
                 // on a warm --cache-dir the figure's memory hit rate reads
                 // 0% while sims stays 0 — say so.
-                eprintln!(
-                    "# {label} cache: {} [store: {} hits, {} sims]",
-                    delta.summary(),
-                    delta.store_hits,
-                    delta.sims()
+                emit_census(
+                    &format!("{label} cache"),
+                    &format!(
+                        "{} [store: {} hits, {} sims]",
+                        delta.summary(),
+                        delta.store_hits,
+                        delta.sims()
+                    ),
                 );
             } else {
-                eprintln!("# {label} cache: {}", delta.summary());
+                emit_census(&format!("{label} cache"), &delta.summary());
             }
             if delta.group_lookups() > 0 {
                 // Where the figure's GEMM-tier misses were actually
                 // answered: reused group executions vs fresh ones.
-                eprintln!("# {label} groups: {}", delta.group_summary());
+                emit_census(&format!("{label} groups"), &delta.group_summary());
             }
         }
         self.last = now;
@@ -575,15 +594,25 @@ impl<'a> FigCacheLines<'a> {
 /// CI persistent-cache smoke step runs the grid this way, twice).
 fn grid_note(threads: usize) {
     if std::env::var_os(flexsa::bench_harness::SMOKE_ENV).is_some() {
-        eprintln!("# computing evaluation grid ({threads} threads, reduced smoke trajectory)...");
+        emit_census_raw(&format!(
+            "computing evaluation grid ({threads} threads, reduced smoke trajectory)..."
+        ));
     } else {
-        eprintln!("# computing evaluation grid ({threads} threads)...");
+        emit_census_raw(&format!("computing evaluation grid ({threads} threads)..."));
     }
 }
 
 fn run(args: &Args) -> Result<(), String> {
     let threads = args.get_usize("threads", default_threads())?;
     let csv = args.get("csv");
+    // `--trace-out FILE`: record telemetry spans for this invocation and
+    // write them as Chrome trace-event JSON (DESIGN.md §17). Tracing stays
+    // off — a single relaxed load per span site — without the flag, so
+    // results are bit-identical either way (tests/prop_telemetry.rs).
+    let trace_out = args.get("trace-out").map(std::path::PathBuf::from);
+    if trace_out.is_some() {
+        flexsa::telemetry::set_tracing(true);
+    }
     let session = Arc::new(make_session(args));
     match args.command.as_str() {
         "help" | "--help" | "-h" => println!("{USAGE}"),
@@ -658,14 +687,14 @@ fn run(args: &Args) -> Result<(), String> {
             emit(&fig::fig12(&grid), csv)?;
             emit(&fig::fig13(&grid), csv)?;
             emit(&fig::e2e_layers(&grid), csv)?;
-            eprintln!("# searching compilation-plan space (heuristic optimality gap)...");
+            emit_census_raw("searching compilation-plan space (heuristic optimality gap)...");
             emit(&fig::plan_gap(threads, &session), csv)?;
             figs.line("PlanGap");
             if use_plans {
                 // The tentpole's acceptance table: whole-trajectory
                 // heuristic-vs-plans cycles, per phase, every row with
                 // plans <= heuristic (fallback semantics guarantee it).
-                eprintln!("# replaying trajectory under resolved plans (--use-plans)...");
+                emit_census_raw("replaying trajectory under resolved plans (--use-plans)...");
                 emit(&fig::plans_vs_heuristic(threads, &session), csv)?;
                 figs.line("PlansVsHeuristic");
             }
@@ -744,6 +773,12 @@ fn run(args: &Args) -> Result<(), String> {
         other => {
             return Err(format!("unknown command `{other}`\n{USAGE}"));
         }
+    }
+    if let Some(path) = trace_out {
+        flexsa::telemetry::set_tracing(false);
+        let events = flexsa::telemetry::write_chrome_trace(&path)
+            .map_err(|e| format!("trace-out {}: {e}", path.display()))?;
+        emit_census("trace", &format!("events={events} wrote {}", path.display()));
     }
     Ok(())
 }

@@ -319,6 +319,7 @@ impl Planner {
         opts: &SimOptions,
         plans: &[PlanParams],
     ) -> Vec<CandidateScore> {
+        let _span = crate::telemetry::span("candidate_eval", "planner");
         let ids: Vec<u64> = plans
             .iter()
             .map(|plan| self.service.submit_plan(cfg, shape, phase, *opts, *plan))

@@ -888,13 +888,13 @@ pub fn ablations(_threads: usize, session: &SimSession) -> FigureReport {
                 let s = simulate_model_epoch(&cfg, &model, &counts, &opts, session);
                 let delta = session.stats().delta(&before);
                 if delta.group_lookups() > 0 {
-                    eprintln!(
-                        "# ablation {ramp:?}/{}/{} group reuse: group_hits={} group_sims={}",
+                    crate::telemetry::emit_census_raw(&format!(
+                        "ablation {ramp:?}/{}/{} group reuse: group_hits={} group_sims={}",
                         if overlap { "overlap" } else { "serial" },
                         if ideal { "ideal" } else { "hbm2" },
                         delta.group_hits,
                         delta.group_sims(),
-                    );
+                    ));
                 }
                 let b = *base.get_or_insert(s.gemm_cycles);
                 t.row(vec![

@@ -160,6 +160,11 @@ pub(crate) fn handle_conn<S: Read + Write>(stream: S, shared: &Arc<Shared>) {
             FrameEvent::TimedOut => {
                 idle += READ_TICK;
                 if idle >= shared.opts.read_timeout {
+                    // Timeouts never produce an envelope, so the wall time
+                    // is recorded here or nowhere: the idle duration lands
+                    // in its own error-taxonomy histogram (DESIGN.md §17).
+                    crate::telemetry::histogram("serve_error_timeout_us")
+                        .observe(idle.as_micros() as u64);
                     shared.log("connection idle timeout");
                     return;
                 }
@@ -171,21 +176,38 @@ pub(crate) fn handle_conn<S: Read + Write>(stream: S, shared: &Arc<Shared>) {
             }
             FrameEvent::Oversized => {
                 idle = Duration::ZERO;
+                // The clock starts at oversize detection: error replies are
+                // timed too (they previously fell outside all accounting).
+                let started = Instant::now();
                 let err = WireError::new(
                     ErrorKind::Oversized,
                     format!("frame exceeds {} bytes", shared.opts.max_frame),
                 );
-                if respond(&mut reader, shared, &mut client, None, Err(err), false, None).is_err()
+                if respond(
+                    &mut reader,
+                    shared,
+                    &mut client,
+                    None,
+                    Err(err),
+                    false,
+                    None,
+                    started,
+                    None,
+                )
+                .is_err()
                 {
                     return;
                 }
             }
             FrameEvent::Frame(bytes) => {
                 idle = Duration::ZERO;
+                // The clock starts when the frame's bytes complete, so the
+                // envelope's `elapsed_us` covers parse + dispatch + encode.
+                let started = Instant::now();
                 if bytes.iter().all(|b| b.is_ascii_whitespace()) {
                     continue; // blank keep-alive line
                 }
-                if process_frame(bytes, &mut reader, shared, &mut client).is_err() {
+                if process_frame(bytes, started, &mut reader, shared, &mut client).is_err() {
                     return; // client went away mid-response
                 }
             }
@@ -197,30 +219,44 @@ pub(crate) fn handle_conn<S: Read + Write>(stream: S, shared: &Arc<Shared>) {
 /// not be written (dead client) and the connection should be dropped.
 fn process_frame<S: Read + Write>(
     bytes: Vec<u8>,
+    started: Instant,
     reader: &mut FrameReader<S>,
     shared: &Arc<Shared>,
     client: &mut ClientCounters,
 ) -> std::io::Result<()> {
+    let mut span = crate::telemetry::span("request", "serve");
     let parsed = String::from_utf8(bytes)
         .map_err(|_| WireError::new(ErrorKind::Malformed, "frame is not valid UTF-8"))
         .and_then(|line| parse_request(&line));
     let (id, outcome, holds_slot, before) = match parsed {
-        Err(e) => (None, Err(e), false, None),
+        Err(e) => {
+            span.detail("error");
+            (None, Err(e), false, None)
+        }
         Ok(frame) => {
+            span.detail(frame.req.kind());
             // Counter snapshots before dispatch: the envelope's `request`
             // block is the delta across this request's work. The fast-path
             // counters are process-wide and never reset, so a snapshot
             // delta is the only correct per-request attribution.
             let before = (shared.session.stats(), crate::sim::fastpath_snapshot());
             let (outcome, holds_slot) = shared.handle(&frame.req);
-            (frame.id, outcome, holds_slot, Some(before))
+            (frame.id, outcome, holds_slot, Some((before, frame.req.kind())))
         }
     };
-    respond(reader, shared, client, id, outcome, holds_slot, before)
+    let (before, kind) = match before {
+        Some((b, k)) => (Some(b), Some(k)),
+        None => (None, None),
+    };
+    respond(reader, shared, client, id, outcome, holds_slot, before, started, kind)
 }
 
 /// Build the envelope (stats trailer included), flush it, and settle the
-/// outstanding-work slot for simulation responses.
+/// outstanding-work slot for simulation responses. `started` is when the
+/// request's frame completed (or its oversize was detected): the elapsed
+/// wall time is stamped on the envelope and recorded into the per-kind
+/// latency histograms — error replies included, so the error taxonomy
+/// (`serve_error_*_us`) is timed exactly like the success path.
 #[allow(clippy::too_many_arguments)]
 fn respond<S: Read + Write>(
     reader: &mut FrameReader<S>,
@@ -230,12 +266,26 @@ fn respond<S: Read + Write>(
     body: Result<super::protocol::ServeResponse, WireError>,
     holds_slot: bool,
     before: Option<(crate::session::SessionStats, crate::sim::FastpathSnapshot)>,
+    started: Instant,
+    kind: Option<&'static str>,
 ) -> std::io::Result<()> {
     client.requests += 1;
     shared.requests.fetch_add(1, Ordering::Relaxed);
     if body.is_err() {
         client.errors += 1;
         shared.errors.fetch_add(1, Ordering::Relaxed);
+    }
+    let elapsed_us = started.elapsed().as_micros() as u64;
+    match &body {
+        Ok(_) => {
+            if let Some(k) = kind {
+                crate::telemetry::histogram(&format!("serve_request_{k}_us")).observe(elapsed_us);
+            }
+        }
+        Err(e) => {
+            crate::telemetry::histogram(&format!("serve_error_{}_us", e.kind.name()))
+                .observe(elapsed_us);
+        }
     }
     let now = shared.session.stats();
     let fp_now = crate::sim::fastpath_snapshot();
@@ -255,6 +305,7 @@ fn respond<S: Read + Write>(
                 })
                 .unwrap_or_default(),
         },
+        elapsed_us,
     };
     if holds_slot {
         // Test-only drain knob: widen the submit→flush window so the

@@ -244,7 +244,43 @@ impl Shared {
 
     pub(crate) fn log(&self, msg: &str) {
         if !self.opts.quiet {
-            eprintln!("# serve: {msg}");
+            crate::telemetry::emit_census("serve", msg);
+        }
+    }
+
+    /// Publish the session / daemon counters as registry gauges, so the
+    /// Prometheus exposition carries them next to the native telemetry
+    /// metrics. Called at scrape time (`metrics` request): the registry
+    /// holds levels, the session stays the source of truth.
+    fn publish_gauges(&self) {
+        let s = self.session.stats();
+        for (name, v) in [
+            ("session_hits", s.hits),
+            ("session_misses", s.misses),
+            ("session_inserts", s.inserts),
+            ("session_evictions", s.evictions),
+            ("session_entries", s.entries),
+            ("session_sims", s.sims()),
+            ("session_store_hits", s.store_hits),
+            ("session_store_misses", s.store_misses),
+            ("session_store_writes", s.store_writes),
+            ("session_group_hits", s.group_hits),
+            ("session_group_misses", s.group_misses),
+            ("session_group_inserts", s.group_inserts),
+            ("session_group_evictions", s.group_evictions),
+            ("session_group_entries", s.group_entries),
+            ("session_group_sims", s.group_sims()),
+            ("session_group_store_hits", s.group_store_hits),
+            ("session_group_store_misses", s.group_store_misses),
+            ("session_group_store_writes", s.group_store_writes),
+            ("session_plan_resolves", s.plan_resolves),
+            ("session_plan_fallbacks", s.plan_fallbacks),
+            ("serve_connections", self.connections.load(Ordering::Relaxed)),
+            ("serve_requests", self.requests.load(Ordering::Relaxed)),
+            ("serve_errors", self.errors.load(Ordering::Relaxed)),
+            ("serve_outstanding", self.outstanding.load(Ordering::SeqCst)),
+        ] {
+            crate::telemetry::counter(name).set(v);
         }
     }
 
@@ -331,9 +367,17 @@ impl Shared {
                     requests: self.requests.load(Ordering::Relaxed),
                     errors: self.errors.load(Ordering::Relaxed),
                     outstanding: self.outstanding.load(Ordering::SeqCst),
+                    latency: latency_rows(),
                 }),
                 false,
             ),
+            ServeRequest::Metrics => {
+                self.publish_gauges();
+                (
+                    Ok(ServeResponse::Metrics { text: crate::telemetry::render_prometheus() }),
+                    false,
+                )
+            }
             ServeRequest::Shutdown => {
                 let inflight = self.begin_drain();
                 self.log("shutdown requested; draining");
@@ -402,6 +446,30 @@ impl Shared {
         };
         Ok(ServeResponse::Report { figure: rep.id.clone(), text: rep.render() })
     }
+}
+
+/// Project the telemetry registry's per-kind request/error latency
+/// histograms onto `stats` wire rows. `serve_request_{kind}_us` maps to
+/// `kind`, `serve_error_{kind}_us` to `error_{kind}`; empty histograms
+/// (idle kinds) are omitted. Deterministic order (registry is a BTreeMap).
+fn latency_rows() -> Vec<protocol::LatencyRow> {
+    let snap = crate::telemetry::snapshot();
+    let mut rows = Vec::new();
+    for (name, h) in &snap.histograms {
+        let kind = name
+            .strip_prefix("serve_request_")
+            .and_then(|k| k.strip_suffix("_us"))
+            .map(str::to_string)
+            .or_else(|| {
+                name.strip_prefix("serve_error_")
+                    .and_then(|k| k.strip_suffix("_us"))
+                    .map(|k| format!("error_{k}"))
+            });
+        if let Some(kind) = kind {
+            rows.extend(protocol::LatencyRow::from_snapshot(&kind, h));
+        }
+    }
+    rows
 }
 
 /// What the daemon did over its lifetime, returned when it exits.

@@ -618,10 +618,30 @@ pub enum ServeRequest {
     },
     /// Session/store/daemon counters.
     Stats,
+    /// Prometheus text exposition of the whole telemetry registry
+    /// (DESIGN.md §17).
+    Metrics,
     /// Liveness probe.
     Ping,
     /// Begin a graceful drain.
     Shutdown,
+}
+
+impl ServeRequest {
+    /// Stable request-kind label (`simulate`, `plan`, …) — the `type`
+    /// member on the wire, and the key the daemon's per-kind latency
+    /// histograms (`serve_request_<kind>_us`) are registered under.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ServeRequest::Simulate { .. } => "simulate",
+            ServeRequest::Plan { .. } => "plan",
+            ServeRequest::Report { .. } => "report",
+            ServeRequest::Stats => "stats",
+            ServeRequest::Metrics => "metrics",
+            ServeRequest::Ping => "ping",
+            ServeRequest::Shutdown => "shutdown",
+        }
+    }
 }
 
 /// A request frame: optional client-chosen `id` (echoed in the response)
@@ -654,15 +674,7 @@ fn config_json(config: &ConfigRef, members: &mut Vec<(String, Json)>) {
 /// Serialize a request frame to one JSON line (no trailing newline).
 pub fn encode_request(frame: &Frame) -> String {
     let mut members: Vec<(String, Json)> = Vec::new();
-    let type_name = match &frame.req {
-        ServeRequest::Simulate { .. } => "simulate",
-        ServeRequest::Plan { .. } => "plan",
-        ServeRequest::Report { .. } => "report",
-        ServeRequest::Stats => "stats",
-        ServeRequest::Ping => "ping",
-        ServeRequest::Shutdown => "shutdown",
-    };
-    members.push(("type".into(), Json::Str(type_name.into())));
+    members.push(("type".into(), Json::Str(frame.req.kind().into())));
     if let Some(id) = frame.id {
         members.push(("id".into(), Json::UInt(id)));
     }
@@ -695,7 +707,10 @@ pub fn encode_request(frame: &Frame) -> String {
         ServeRequest::Report { figure } => {
             members.push(("figure".into(), Json::Str(figure.clone())));
         }
-        ServeRequest::Stats | ServeRequest::Ping | ServeRequest::Shutdown => {}
+        ServeRequest::Stats
+        | ServeRequest::Metrics
+        | ServeRequest::Ping
+        | ServeRequest::Shutdown => {}
     }
     Json::Obj(members).encode()
 }
@@ -819,6 +834,7 @@ pub fn parse_request(line: &str) -> Result<Frame, WireError> {
                 .to_string(),
         },
         "stats" => ServeRequest::Stats,
+        "metrics" => ServeRequest::Metrics,
         "ping" => ServeRequest::Ping,
         "shutdown" => ServeRequest::Shutdown,
         other => return Err(WireError::invalid(format!("unknown request type `{other}`"))),
@@ -1116,6 +1132,71 @@ impl StatsBlock {
     }
 }
 
+/// Latency quantiles for one request kind (or error taxonomy) on the wire:
+/// the `stats` response's `latency_us` rows, estimated from the telemetry
+/// registry's log₂ histograms (upper-bound quantiles, microseconds).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LatencyRow {
+    /// Request kind (`simulate`, `plan`, …) or error taxonomy prefixed
+    /// `error_` (`error_oversized`, `error_malformed`, …).
+    pub kind: String,
+    /// Observations recorded.
+    pub count: u64,
+    /// Median latency upper bound, µs.
+    pub p50: u64,
+    /// 90th-percentile latency upper bound, µs.
+    pub p90: u64,
+    /// 99th-percentile latency upper bound, µs.
+    pub p99: u64,
+}
+
+impl LatencyRow {
+    /// Build a row from a histogram snapshot (`None` when it is empty —
+    /// idle kinds are omitted from the wire).
+    pub fn from_snapshot(kind: &str, h: &crate::telemetry::HistogramSnapshot) -> Option<LatencyRow> {
+        let count = h.count();
+        if count == 0 {
+            return None;
+        }
+        Some(LatencyRow {
+            kind: kind.to_string(),
+            count,
+            p50: h.quantile(0.50),
+            p90: h.quantile(0.90),
+            p99: h.quantile(0.99),
+        })
+    }
+
+    fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("kind".into(), Json::Str(self.kind.clone())),
+            ("count".into(), Json::UInt(self.count)),
+            ("p50".into(), Json::UInt(self.p50)),
+            ("p90".into(), Json::UInt(self.p90)),
+            ("p99".into(), Json::UInt(self.p99)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<LatencyRow, WireError> {
+        let u = |key: &str| {
+            v.get(key)
+                .and_then(|x| x.as_u64())
+                .ok_or_else(|| WireError::invalid(format!("latency row missing `{key}`")))
+        };
+        Ok(LatencyRow {
+            kind: v
+                .get("kind")
+                .and_then(|x| x.as_str())
+                .ok_or_else(|| WireError::invalid("latency row missing `kind`"))?
+                .to_string(),
+            count: u("count")?,
+            p50: u("p50")?,
+            p90: u("p90")?,
+            p99: u("p99")?,
+        })
+    }
+}
+
 /// One response body (the `result` member of an `ok:true` envelope; the
 /// `type` member selects the variant).
 #[derive(Debug, Clone, PartialEq)]
@@ -1143,6 +1224,16 @@ pub enum ServeResponse {
         errors: u64,
         /// Simulation requests currently in flight.
         outstanding: u64,
+        /// Per-kind request/error latency quantiles (p50/p90/p99, µs) from
+        /// the telemetry registry. Appended member: absent on frames from
+        /// pre-telemetry daemons, which parse as an empty list.
+        latency: Vec<LatencyRow>,
+    },
+    /// Answer to `metrics`: the full telemetry registry as Prometheus text
+    /// exposition ([`crate::telemetry::render_prometheus`]).
+    Metrics {
+        /// Prometheus text exposition (version 0.0.4) body.
+        text: String,
     },
     /// Answer to `ping`.
     Pong,
@@ -1162,6 +1253,7 @@ impl ServeResponse {
             ServeResponse::Plan(_) => "plan",
             ServeResponse::Report { .. } => "report",
             ServeResponse::Stats { .. } => "stats",
+            ServeResponse::Metrics { .. } => "metrics",
             ServeResponse::Pong => "pong",
             ServeResponse::ShutdownAck { .. } => "shutdown",
         }
@@ -1175,14 +1267,23 @@ impl ServeResponse {
                 ("figure".into(), Json::Str(figure.clone())),
                 ("text".into(), Json::Str(text.clone())),
             ]),
-            ServeResponse::Stats { global, connections, requests, errors, outstanding } => {
+            ServeResponse::Stats { global, connections, requests, errors, outstanding, latency } => {
+                // `latency_us` appends after the pre-telemetry members so
+                // old clients keep parsing (they ignore unknown members).
                 Json::Obj(vec![
                     ("global".into(), global.to_json()),
                     ("connections".into(), Json::UInt(*connections)),
                     ("requests".into(), Json::UInt(*requests)),
                     ("errors".into(), Json::UInt(*errors)),
                     ("outstanding".into(), Json::UInt(*outstanding)),
+                    (
+                        "latency_us".into(),
+                        Json::Arr(latency.iter().map(LatencyRow::to_json).collect()),
+                    ),
                 ])
+            }
+            ServeResponse::Metrics { text } => {
+                Json::Obj(vec![("text".into(), Json::Str(text.clone()))])
             }
             ServeResponse::Pong => Json::Obj(vec![]),
             ServeResponse::ShutdownAck { outstanding } => {
@@ -1224,8 +1325,26 @@ impl ServeResponse {
                     requests: u("requests")?,
                     errors: u("errors")?,
                     outstanding: u("outstanding")?,
+                    // Absent on pre-telemetry daemons: default to empty.
+                    latency: match result.get("latency_us") {
+                        None => Vec::new(),
+                        Some(Json::Arr(rows)) => rows
+                            .iter()
+                            .map(LatencyRow::from_json)
+                            .collect::<Result<Vec<_>, _>>()?,
+                        Some(_) => {
+                            return Err(WireError::invalid("`latency_us` must be an array"))
+                        }
+                    },
                 }
             }
+            "metrics" => ServeResponse::Metrics {
+                text: result
+                    .get("text")
+                    .and_then(|x| x.as_str())
+                    .ok_or_else(|| WireError::invalid("metrics missing `text`"))?
+                    .to_string(),
+            },
             "pong" => ServeResponse::Pong,
             "shutdown" => ServeResponse::ShutdownAck {
                 outstanding: result
@@ -1299,6 +1418,10 @@ pub struct Envelope {
     pub body: Result<ServeResponse, WireError>,
     /// Cache/hit-rate stats (attached to every envelope, errors included).
     pub stats: EnvelopeStats,
+    /// Server-side wall time for this request in microseconds, measured
+    /// from frame completion (or oversize detection) to reply encode.
+    /// Appended member: absent on pre-telemetry daemons, parsed as 0.
+    pub elapsed_us: u64,
 }
 
 /// Serialize a response envelope to one JSON line (no trailing newline).
@@ -1325,6 +1448,7 @@ pub fn encode_envelope(env: &Envelope) -> String {
         }
     }
     members.push(("stats".into(), env.stats.to_json()));
+    members.push(("elapsed_us".into(), Json::UInt(env.elapsed_us)));
     Json::Obj(members).encode()
 }
 
@@ -1366,7 +1490,8 @@ pub fn parse_envelope(line: &str) -> Result<Envelope, WireError> {
             .to_string();
         Err(WireError { kind, message })
     };
-    Ok(Envelope { id, body, stats })
+    let elapsed_us = v.get("elapsed_us").and_then(|x| x.as_u64()).unwrap_or(0);
+    Ok(Envelope { id, body, stats, elapsed_us })
 }
 
 #[cfg(test)]
@@ -1471,6 +1596,47 @@ mod tests {
             let e = parse_request(bad).unwrap_err();
             assert_eq!(e.kind, ErrorKind::Invalid, "{bad}");
         }
+    }
+
+    #[test]
+    fn metrics_and_latency_round_trip() {
+        // New `metrics` request kind parses and re-encodes.
+        let f = parse_request(r#"{"type":"metrics","id":7}"#).unwrap();
+        assert!(matches!(f.req, ServeRequest::Metrics));
+        let f2 = parse_request(&encode_request(&f)).unwrap();
+        assert!(matches!(f2.req, ServeRequest::Metrics));
+
+        // Stats latency rows survive the envelope codec; elapsed_us too.
+        let env = Envelope {
+            id: Some(3),
+            body: Ok(ServeResponse::Stats {
+                global: StatsBlock::default(),
+                connections: 1,
+                requests: 2,
+                errors: 0,
+                outstanding: 0,
+                latency: vec![LatencyRow {
+                    kind: "simulate".into(),
+                    count: 4,
+                    p50: 10,
+                    p90: 20,
+                    p99: 40,
+                }],
+            }),
+            stats: EnvelopeStats::default(),
+            elapsed_us: 123,
+        };
+        let back = parse_envelope(&encode_envelope(&env)).unwrap();
+        assert_eq!(back, env);
+
+        // A pre-telemetry envelope (no latency_us / elapsed_us) still parses.
+        let block = r#"{"hits":0,"misses":0,"store_hits":0,"store_writes":0,"sims":0,"entries":0}"#;
+        let legacy = format!(
+            r#"{{"ok":true,"type":"pong","result":{{}},"stats":{{"client":{{"requests":1,"errors":0}},"global":{b},"request":{b}}}}}"#,
+            b = block
+        );
+        let parsed = parse_envelope(&legacy).unwrap();
+        assert_eq!(parsed.elapsed_us, 0);
     }
 
     #[test]

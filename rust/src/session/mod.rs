@@ -425,6 +425,7 @@ impl SimSession {
     /// every resolution either replays a searched plan whose recorded
     /// cycles beat (or tie) the heuristic, or *is* the heuristic.
     pub fn resolve_plan(&self, fp: Fingerprint) -> PlanParams {
+        let mut span = crate::telemetry::span("plan_resolve", "session");
         if let Some(store) = self.store.as_ref() {
             for s in Self::PLAN_PROBE_STRATEGIES {
                 let Some(rec) = store.get_plan(fp, s) else { continue };
@@ -436,11 +437,13 @@ impl SimSession {
                 }
                 if let Ok(plan) = PlanParams::unpack(rec.plan) {
                     self.plan_resolves.fetch_add(1, Ordering::Relaxed);
+                    span.detail("resolved");
                     return plan;
                 }
             }
         }
         self.plan_fallbacks.fetch_add(1, Ordering::Relaxed);
+        span.detail("fallback");
         PlanParams::HEURISTIC
     }
 
@@ -921,7 +924,10 @@ impl CacheOpts {
             if let Some(dir) = dir {
                 match SimStore::open(&dir) {
                     Ok(store) => session.set_store(Some(store)),
-                    Err(e) => eprintln!("# sim store disabled ({}: {e})", dir.display()),
+                    Err(e) => crate::telemetry::emit_census_raw(&format!(
+                        "sim store disabled ({}: {e})",
+                        dir.display()
+                    )),
                 }
             }
         }

@@ -533,6 +533,7 @@ impl SimStore {
     /// version mismatch — is a clean miss, never an error or a wrong
     /// result.
     pub fn get(&self, fp: Fingerprint) -> Option<GemmSim> {
+        let _span = crate::telemetry::span_with("store_read", "store", "sim");
         let found = std::fs::read(self.entry_path(fp))
             .ok()
             .and_then(|bytes| decode_gemm_sim(&bytes, self.version).ok());
@@ -553,6 +554,7 @@ impl SimStore {
     /// on I/O failure instead of propagating it — persistence is an
     /// optimization, not a correctness requirement.
     pub fn put(&self, fp: Fingerprint, sim: &GemmSim) -> bool {
+        let _span = crate::telemetry::span_with("store_write", "store", "sim");
         match self.write_atomic(&self.entry_path(fp), &encode_gemm_sim(sim, self.version)) {
             Ok(()) => {
                 self.writes.fetch_add(1, Ordering::Relaxed);
@@ -611,6 +613,7 @@ impl SimStore {
     /// [`Self::get`], every failure mode — missing file, corruption,
     /// version or strategy mismatch — is a clean miss.
     pub fn get_plan(&self, fp: Fingerprint, strategy: u8) -> Option<PlanRecord> {
+        let _span = crate::telemetry::span_with("store_read", "store", "plan");
         let found = std::fs::read(self.plan_entry_path(fp, strategy))
             .ok()
             .and_then(|bytes| decode_plan_record(&bytes, PLAN_CODEC_VERSION).ok())
@@ -631,6 +634,7 @@ impl SimStore {
 
     /// Persist a plan record (atomic, best-effort; mirrors [`Self::put`]).
     pub fn put_plan(&self, fp: Fingerprint, r: &PlanRecord) -> bool {
+        let _span = crate::telemetry::span_with("store_write", "store", "plan");
         let path = self.plan_entry_path(fp, r.strategy);
         match self.write_atomic(&path, &encode_plan_record(r, PLAN_CODEC_VERSION)) {
             Ok(()) => {
@@ -666,6 +670,7 @@ impl SimStore {
     /// Look up the persisted group execution for `fp`. Like [`Self::get`],
     /// every failure mode is a clean miss.
     pub fn get_group(&self, fp: Fingerprint) -> Option<GroupSim> {
+        let _span = crate::telemetry::span_with("store_read", "store", "group");
         let found = std::fs::read(self.group_entry_path(fp))
             .ok()
             .and_then(|bytes| decode_group_sim(&bytes, self.version).ok());
@@ -684,6 +689,7 @@ impl SimStore {
     /// Persist a group execution (atomic, best-effort; mirrors
     /// [`Self::put`]).
     pub fn put_group(&self, fp: Fingerprint, g: &GroupSim) -> bool {
+        let _span = crate::telemetry::span_with("store_write", "store", "group");
         let path = self.group_entry_path(fp);
         match self.write_atomic(&path, &encode_group_sim(g, self.version)) {
             Ok(()) => {

@@ -274,11 +274,17 @@ pub fn execute_group_spec(
     spec: &ModeSpec,
     opts: &SimOptions,
 ) -> GroupSim {
+    // Span attribution mirrors the dispatch counters: `fast` covers the
+    // closed-form path, `streaming` the per-instruction executor. Inert
+    // (one relaxed load) unless `--trace-out` enabled tracing.
+    let mut span = crate::telemetry::span("group_exec", "sim");
     if let Some(g) = super::fastpath::execute_group_fast_spec(cfg, p, k_partitioned, spec, opts) {
         super::fastpath::count_fast();
+        span.detail("fast");
         return g;
     }
     super::fastpath::count_fallback();
+    span.detail("streaming");
     execute_group_streaming_spec(cfg, p, k_partitioned, spec, opts)
 }
 
@@ -350,6 +356,7 @@ impl GemmFold {
 
     /// Apply the DRAM bandwidth bound and return the composed [`GemmSim`].
     pub fn finish(mut self, cfg: &AcceleratorConfig, opts: &SimOptions) -> GemmSim {
+        let _span = crate::telemetry::span("fold", "sim");
         for (i, &c) in self.waves.iter().enumerate() {
             if c > 0 {
                 self.out.waves_by_mode.insert(Mode::from_index(i), c);

@@ -37,7 +37,7 @@
 //! keeps process-wide [`counters`] so benches and the CLI can report how
 //! often the fast path actually ran.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
 
 use super::engine::{GroupSim, Traffic};
 use super::{RampMode, SimOptions};
@@ -51,16 +51,29 @@ use crate::util::ceil_div;
 /// streaming intermediate — is exact. Past this the fast path falls back.
 const MAX_EXACT_TICKS: u128 = 1 << 53;
 
-static FAST: AtomicU64 = AtomicU64::new(0);
-static FALLBACK: AtomicU64 = AtomicU64::new(0);
+/// Registry handle for the FAST dispatch counter (`fastpath_fast` in the
+/// telemetry registry / Prometheus exposition). Cached so the hot dispatch
+/// path pays one relaxed `fetch_add`, not a registry-table lock.
+fn fast_counter() -> &'static crate::telemetry::Counter {
+    static C: OnceLock<&'static crate::telemetry::Counter> = OnceLock::new();
+    C.get_or_init(|| crate::telemetry::counter("fastpath_fast"))
+}
+
+/// Registry handle for the FALLBACK dispatch counter (`fastpath_fallback`).
+fn fallback_counter() -> &'static crate::telemetry::Counter {
+    static C: OnceLock<&'static crate::telemetry::Counter> = OnceLock::new();
+    C.get_or_init(|| crate::telemetry::counter("fastpath_fallback"))
+}
 
 /// Process-wide `(fast, fallback)` dispatch counters of
 /// [`crate::sim::execute_group`]: how many group executions took the
 /// closed-form path vs the streaming executor. The CLI prints them as the
 /// `# fastpath:` stderr line; `make perf-smoke` asserts `fallback == 0` on
-/// the preset corpus.
+/// the preset corpus. Since the unified telemetry layer (DESIGN.md §17)
+/// this is a thin shim over the registry's `fastpath_fast` /
+/// `fastpath_fallback` counters — same values, same monotone contract.
 pub fn counters() -> (u64, u64) {
-    (FAST.load(Ordering::Relaxed), FALLBACK.load(Ordering::Relaxed))
+    (fast_counter().get(), fallback_counter().get())
 }
 
 /// A point-in-time copy of the process-wide dispatch counters. The
@@ -94,11 +107,11 @@ pub fn snapshot() -> FastpathSnapshot {
 }
 
 pub(crate) fn count_fast() {
-    FAST.fetch_add(1, Ordering::Relaxed);
+    fast_counter().inc();
 }
 
 pub(crate) fn count_fallback() {
-    FALLBACK.fetch_add(1, Ordering::Relaxed);
+    fallback_counter().inc();
 }
 
 /// `log₂ bw` when `bw` is a positive integral power of two, else `None`

@@ -1,0 +1,437 @@
+//! Unified telemetry: process-wide metrics registry, census-line emission,
+//! and span tracing with Chrome-trace export (DESIGN.md §17).
+//!
+//! Three concerns, one module, zero dependencies:
+//!
+//! - **Metrics registry** — named [`Counter`]s and log₂-bucketed
+//!   [`Histogram`]s behind one process-wide table. Everything is a relaxed
+//!   [`AtomicU64`]: u64-exact, monotone, never reset (a reset would race
+//!   with concurrent recorders — the same contract as the old
+//!   `FastpathSnapshot`). Per-run / per-request numbers come from
+//!   [`snapshot`] + [`MetricsSnapshot::delta`]. [`render_prometheus`]
+//!   serializes the whole registry as Prometheus text exposition (the
+//!   daemon's `metrics` request).
+//! - **Census lines** — [`emit_census`] / [`emit_census_raw`] are the one
+//!   gate every `# topic: key=value` stderr line goes through, so
+//!   `FLEXSA_QUIET=1` silences the lot without touching the formats the
+//!   smoke tooling seds for.
+//! - **Span tracing** — the [`trace`] submodule's RAII [`Span`] guards,
+//!   recorded into a lock-sharded ring buffer and exported as Chrome
+//!   trace-event JSON. **Off by default**: a span site on the disabled
+//!   path costs exactly one relaxed [`AtomicBool`] load and never reads a
+//!   clock, so simulation results (and `SIM_VERSION`) are untouched.
+//!
+//! [`AtomicBool`]: std::sync::atomic::AtomicBool
+
+mod trace;
+
+pub use trace::{
+    collect_events, export_chrome_trace, set_tracing, span, span_with, tracing_enabled,
+    write_chrome_trace, Span, TraceEvent, SHARD_CAP, TRACE_SHARDS,
+};
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Number of log₂ value buckets in a [`Histogram`]: bucket `i` holds the
+/// observations of bit width `i` — bucket 0 is exactly `{0}`, bucket 1 is
+/// `{1}`, bucket `i` (2 ≤ i ≤ 63) is `[2^(i-1), 2^i - 1]`, and bucket 64
+/// is `[2^63, u64::MAX]`. Every `u64` lands in exactly one bucket.
+pub const HISTOGRAM_BUCKETS: usize = 65;
+
+/// The bucket index of an observed value: its bit width
+/// (`64 - leading_zeros`), so 0 → 0, 1 → 1, 2..=3 → 2, …, `u64::MAX` → 64.
+pub fn bucket_index(v: u64) -> usize {
+    (64 - v.leading_zeros()) as usize
+}
+
+/// Inclusive lower bound of bucket `i` (see [`HISTOGRAM_BUCKETS`]).
+pub fn bucket_lower(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else {
+        1u64 << (i - 1)
+    }
+}
+
+/// Inclusive upper bound of bucket `i` (see [`HISTOGRAM_BUCKETS`]). This is
+/// the value quantile estimates report for a rank landing in bucket `i`.
+pub fn bucket_upper(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else if i >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << i) - 1
+    }
+}
+
+/// A named monotone counter (relaxed atomics; u64-exact). Obtained from the
+/// registry via [`counter`]; handles are `&'static`, so call sites cache
+/// them in a `OnceLock` and pay one relaxed `fetch_add` per event.
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    /// Add 1.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Add `n` (relaxed; wrapping like any `fetch_add`, which is
+    /// unreachable in practice for event counts).
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Overwrite the value (gauge semantics — used to publish point-in-time
+    /// levels like `SessionStats` fields into the exposition).
+    pub fn set(&self, v: u64) {
+        self.value.store(v, Ordering::Relaxed);
+    }
+
+    /// Current value (relaxed).
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Saturating atomic add (CAS loop; cold path only — the histogram `sum`,
+/// which must not wrap even under adversarial `u64::MAX` observations).
+fn saturating_fetch_add(cell: &AtomicU64, v: u64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = cur.saturating_add(v);
+        match cell.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+/// A named log₂-bucketed histogram (relaxed atomics; per-bucket counts are
+/// u64-exact, the running sum saturates at `u64::MAX`). Obtained from the
+/// registry via [`histogram`]. Quantiles are answered from a
+/// [`HistogramSnapshot`].
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; HISTOGRAM_BUCKETS],
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self { buckets: std::array::from_fn(|_| AtomicU64::new(0)), sum: AtomicU64::new(0) }
+    }
+}
+
+impl Histogram {
+    /// Record one observation.
+    pub fn observe(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        saturating_fetch_add(&self.sum, v);
+    }
+
+    /// Point-in-time copy of the bucket counts and sum.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+            sum: self.sum.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A point-in-time copy of one [`Histogram`] (the quantile/delta surface —
+/// the live histogram only ever grows, like the old `FastpathSnapshot`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    /// Per-bucket observation counts (see [`HISTOGRAM_BUCKETS`]).
+    pub buckets: [u64; HISTOGRAM_BUCKETS],
+    /// Saturating sum of all observed values.
+    pub sum: u64,
+}
+
+impl Default for HistogramSnapshot {
+    fn default() -> Self {
+        Self { buckets: [0; HISTOGRAM_BUCKETS], sum: 0 }
+    }
+}
+
+impl HistogramSnapshot {
+    /// Total observations (saturating over the buckets).
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().fold(0u64, |a, &b| a.saturating_add(b))
+    }
+
+    /// Upper-bound quantile estimate: the bucket upper bound of the bucket
+    /// containing rank `⌈q·count⌉`. Monotone in `q` by construction (the
+    /// cumulative walk never moves backward); 0 on an empty histogram.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum = cum.saturating_add(c);
+            if cum >= rank {
+                return bucket_upper(i);
+            }
+        }
+        bucket_upper(HISTOGRAM_BUCKETS - 1)
+    }
+
+    /// Observations accumulated since `earlier` (per-bucket saturating, so
+    /// a stale snapshot from another epoch never underflows).
+    pub fn delta(&self, earlier: &HistogramSnapshot) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: std::array::from_fn(|i| {
+                self.buckets[i].saturating_sub(earlier.buckets[i])
+            }),
+            sum: self.sum.saturating_sub(earlier.sum),
+        }
+    }
+}
+
+/// The process-wide registry: one table of named counters, one of named
+/// histograms. Handles are leaked (`&'static`) — the name set is small and
+/// fixed per process, so this is a bounded, one-time cost that buys
+/// lock-free recording after the first lookup.
+struct Registry {
+    counters: Mutex<BTreeMap<String, &'static Counter>>,
+    histograms: Mutex<BTreeMap<String, &'static Histogram>>,
+}
+
+fn registry() -> &'static Registry {
+    static R: OnceLock<Registry> = OnceLock::new();
+    R.get_or_init(|| Registry {
+        counters: Mutex::new(BTreeMap::new()),
+        histograms: Mutex::new(BTreeMap::new()),
+    })
+}
+
+/// Look up (registering on first use) the counter named `name`. Names are
+/// `snake_case` with underscores (they appear verbatim in the Prometheus
+/// exposition under a `flexsa_` prefix). Hot call sites cache the returned
+/// `&'static` in a `OnceLock` instead of paying the table lock per event.
+pub fn counter(name: &str) -> &'static Counter {
+    let mut t = registry().counters.lock().unwrap();
+    if let Some(c) = t.get(name) {
+        return c;
+    }
+    let c: &'static Counter = Box::leak(Box::default());
+    t.insert(name.to_string(), c);
+    c
+}
+
+/// Look up (registering on first use) the histogram named `name` (same
+/// naming and caching contract as [`counter`]).
+pub fn histogram(name: &str) -> &'static Histogram {
+    let mut t = registry().histograms.lock().unwrap();
+    if let Some(h) = t.get(name) {
+        return h;
+    }
+    let h: &'static Histogram = Box::leak(Box::default());
+    t.insert(name.to_string(), h);
+    h
+}
+
+/// A point-in-time copy of the whole registry (see [`snapshot`]).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    /// Counter values by name.
+    pub counters: BTreeMap<String, u64>,
+    /// Histogram snapshots by name.
+    pub histograms: BTreeMap<String, HistogramSnapshot>,
+}
+
+impl MetricsSnapshot {
+    /// Registry activity since `earlier` (saturating per entry; names
+    /// absent from `earlier` keep their full value).
+    pub fn delta(&self, earlier: &MetricsSnapshot) -> MetricsSnapshot {
+        MetricsSnapshot {
+            counters: self
+                .counters
+                .iter()
+                .map(|(k, &v)| {
+                    (k.clone(), v.saturating_sub(earlier.counters.get(k).copied().unwrap_or(0)))
+                })
+                .collect(),
+            histograms: self
+                .histograms
+                .iter()
+                .map(|(k, v)| {
+                    (k.clone(), v.delta(&earlier.histograms.get(k).copied().unwrap_or_default()))
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Snapshot every registered counter and histogram.
+pub fn snapshot() -> MetricsSnapshot {
+    let r = registry();
+    let counters =
+        r.counters.lock().unwrap().iter().map(|(k, c)| (k.clone(), c.get())).collect();
+    let histograms =
+        r.histograms.lock().unwrap().iter().map(|(k, h)| (k.clone(), h.snapshot())).collect();
+    MetricsSnapshot { counters, histograms }
+}
+
+/// Keep only `[a-zA-Z0-9_]` (the Prometheus metric-name alphabet); anything
+/// else becomes `_`.
+fn sanitize_metric_name(name: &str) -> String {
+    name.chars().map(|c| if c.is_ascii_alphanumeric() || c == '_' { c } else { '_' }).collect()
+}
+
+/// Render the whole registry as Prometheus text exposition (version 0.0.4):
+/// every counter as `flexsa_<name>`, every histogram as the conventional
+/// `_bucket{le="..."}` / `_sum` / `_count` triple with cumulative log₂
+/// bucket bounds. This is the body of the daemon's `metrics` reply.
+pub fn render_prometheus() -> String {
+    let snap = snapshot();
+    let mut out = String::new();
+    for (name, v) in &snap.counters {
+        let n = sanitize_metric_name(name);
+        out.push_str(&format!("# TYPE flexsa_{n} counter\nflexsa_{n} {v}\n"));
+    }
+    for (name, h) in &snap.histograms {
+        let n = sanitize_metric_name(name);
+        out.push_str(&format!("# TYPE flexsa_{n} histogram\n"));
+        let last = h.buckets.iter().rposition(|&c| c > 0).unwrap_or(0);
+        let mut cum = 0u64;
+        for (i, &c) in h.buckets.iter().enumerate().take(last + 1) {
+            cum = cum.saturating_add(c);
+            out.push_str(&format!("flexsa_{n}_bucket{{le=\"{}\"}} {cum}\n", bucket_upper(i)));
+        }
+        out.push_str(&format!("flexsa_{n}_bucket{{le=\"+Inf\"}} {}\n", h.count()));
+        out.push_str(&format!("flexsa_{n}_sum {}\n", h.sum));
+        out.push_str(&format!("flexsa_{n}_count {}\n", h.count()));
+    }
+    out
+}
+
+/// Is census emission suppressed? `FLEXSA_QUIET=1` (any non-empty value
+/// other than `0`) silences every `#`-prefixed stderr line the crate
+/// emits. Read once per process.
+pub fn census_quiet() -> bool {
+    static QUIET: OnceLock<bool> = OnceLock::new();
+    *QUIET.get_or_init(|| {
+        std::env::var("FLEXSA_QUIET").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+    })
+}
+
+/// Emit one census line — `# {topic}: {fields}` on stderr — unless
+/// suppressed ([`census_quiet`]). `fields` is conventionally a
+/// space-separated `key=value` list; the exact strings of the pre-existing
+/// lines (`# fastpath: fast=..`, `# plans: resolved=..`, `# group tier:
+/// group_hits=..`, the per-figure cache lines) are preserved because the
+/// smoke tooling seds them.
+pub fn emit_census(topic: &str, fields: &str) {
+    if !census_quiet() {
+        eprintln!("# {topic}: {fields}");
+    }
+}
+
+/// [`emit_census`] for the few legacy lines that are not `topic: fields`
+/// shaped (`# plan candidates=..`, progress notes): emits `# {line}`.
+pub fn emit_census_raw(line: &str) {
+    if !census_quiet() {
+        eprintln!("# {line}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_partition_u64() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(u64::MAX), 64);
+        for i in 0..HISTOGRAM_BUCKETS {
+            assert!(bucket_lower(i) <= bucket_upper(i));
+            assert_eq!(bucket_index(bucket_lower(i)), i);
+            assert_eq!(bucket_index(bucket_upper(i)), i);
+        }
+        // Adjacent buckets tile the domain with no gap or overlap.
+        for i in 1..HISTOGRAM_BUCKETS {
+            assert_eq!(bucket_lower(i), bucket_upper(i - 1) + 1);
+        }
+        assert_eq!(bucket_upper(HISTOGRAM_BUCKETS - 1), u64::MAX);
+    }
+
+    #[test]
+    fn histogram_counts_are_exact_and_sum_saturates() {
+        let h = Histogram::default();
+        h.observe(0);
+        h.observe(1);
+        h.observe(1);
+        h.observe(u64::MAX);
+        h.observe(u64::MAX);
+        let s = h.snapshot();
+        assert_eq!(s.buckets[0], 1);
+        assert_eq!(s.buckets[1], 2);
+        assert_eq!(s.buckets[64], 2);
+        assert_eq!(s.count(), 5);
+        assert_eq!(s.sum, u64::MAX, "sum saturates instead of wrapping");
+    }
+
+    #[test]
+    fn quantiles_are_monotone_and_bounded() {
+        let h = Histogram::default();
+        for v in [3u64, 5, 9, 100, 1000, 1_000_000] {
+            h.observe(v);
+        }
+        let s = h.snapshot();
+        let mut last = 0;
+        for i in 0..=100 {
+            let q = s.quantile(i as f64 / 100.0);
+            assert!(q >= last, "quantile not monotone at {i}%");
+            last = q;
+        }
+        assert!(s.quantile(0.0) >= 3);
+        assert!(s.quantile(1.0) >= 1_000_000);
+        assert_eq!(HistogramSnapshot::default().quantile(0.5), 0);
+    }
+
+    #[test]
+    fn registry_handles_are_stable_and_deltas_subtract() {
+        let c = counter("test_registry_stable");
+        let again = counter("test_registry_stable");
+        assert!(std::ptr::eq(c, again));
+        let before = snapshot();
+        c.add(3);
+        histogram("test_registry_hist").observe(7);
+        let d = snapshot().delta(&before);
+        assert_eq!(d.counters["test_registry_stable"], 3);
+        assert_eq!(d.histograms["test_registry_hist"].count(), 1);
+        assert_eq!(d.histograms["test_registry_hist"].buckets[bucket_index(7)], 1);
+    }
+
+    #[test]
+    fn prometheus_exposition_has_the_conventional_shape() {
+        counter("test_prom_counter").add(2);
+        let h = histogram("test_prom_hist");
+        h.observe(1);
+        h.observe(5);
+        let text = render_prometheus();
+        assert!(text.contains("# TYPE flexsa_test_prom_counter counter"));
+        assert!(text.contains("flexsa_test_prom_counter 2"));
+        assert!(text.contains("# TYPE flexsa_test_prom_hist histogram"));
+        assert!(text.contains("flexsa_test_prom_hist_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("flexsa_test_prom_hist_sum 6"));
+        assert!(text.contains("flexsa_test_prom_hist_count 2"));
+        // Cumulative: the le="7" bucket (holding 5) counts the le="1" one.
+        assert!(text.contains("flexsa_test_prom_hist_bucket{le=\"7\"} 2"));
+    }
+}

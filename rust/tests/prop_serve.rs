@@ -8,8 +8,8 @@ use flexsa::gemm::{GemmShape, Phase};
 use flexsa::proptest::{forall, Config};
 use flexsa::serve::protocol::{
     encode_envelope, encode_request, parse_envelope, parse_request, ConfigRef, Envelope,
-    EnvelopeStats, ErrorKind, Frame, Memory, PlanResult, SearchStrategy, ServeRequest,
-    ServeResponse, SimResult, StatsBlock, WireError, MAX_DIM,
+    EnvelopeStats, ErrorKind, Frame, LatencyRow, Memory, PlanResult, SearchStrategy,
+    ServeRequest, ServeResponse, SimResult, StatsBlock, WireError, MAX_DIM,
 };
 use flexsa::serve::{self, ServeOptions};
 use flexsa::session::SimSession;
@@ -80,7 +80,7 @@ fn gen_strategy(rng: &mut Lcg64) -> SearchStrategy {
 
 fn gen_frame(rng: &mut Lcg64) -> Frame {
     let id = if rng.next_below(2) == 0 { Some(rng.next_u64()) } else { None };
-    let req = match rng.next_below(6) {
+    let req = match rng.next_below(7) {
         0 => ServeRequest::Simulate {
             shape: gen_shape(rng),
             phase: gen_phase(rng),
@@ -98,6 +98,7 @@ fn gen_frame(rng: &mut Lcg64) -> Frame {
         2 => ServeRequest::Report { figure: gen_string(rng) },
         3 => ServeRequest::Stats,
         4 => ServeRequest::Ping,
+        5 => ServeRequest::Metrics,
         _ => ServeRequest::Shutdown,
     };
     Frame { id, req }
@@ -159,6 +160,19 @@ fn gen_stats_block(rng: &mut Lcg64) -> StatsBlock {
     }
 }
 
+fn gen_latency_rows(rng: &mut Lcg64) -> Vec<LatencyRow> {
+    let n = rng.next_below(4) as usize;
+    (0..n)
+        .map(|_| LatencyRow {
+            kind: gen_string(rng),
+            count: rng.next_u64(),
+            p50: rng.next_u64(),
+            p90: rng.next_u64(),
+            p99: rng.next_u64(),
+        })
+        .collect()
+}
+
 fn gen_error_kind(rng: &mut Lcg64) -> ErrorKind {
     match rng.next_below(4) {
         0 => ErrorKind::Oversized,
@@ -169,7 +183,7 @@ fn gen_error_kind(rng: &mut Lcg64) -> ErrorKind {
 }
 
 fn gen_envelope(rng: &mut Lcg64) -> Envelope {
-    let body = match rng.next_below(8) {
+    let body = match rng.next_below(9) {
         0 => Ok(ServeResponse::Simulate(gen_sim_result(rng))),
         1 => Ok(ServeResponse::Plan(gen_plan_result(rng))),
         2 => Ok(ServeResponse::Report { figure: gen_string(rng), text: gen_string(rng) }),
@@ -179,9 +193,11 @@ fn gen_envelope(rng: &mut Lcg64) -> Envelope {
             requests: rng.next_u64(),
             errors: rng.next_u64(),
             outstanding: rng.next_u64(),
+            latency: gen_latency_rows(rng),
         }),
         4 => Ok(ServeResponse::Pong),
         5 => Ok(ServeResponse::ShutdownAck { outstanding: rng.next_u64() }),
+        6 => Ok(ServeResponse::Metrics { text: gen_string(rng) }),
         _ => Err(WireError::new(gen_error_kind(rng), gen_string(rng))),
     };
     Envelope {
@@ -193,6 +209,7 @@ fn gen_envelope(rng: &mut Lcg64) -> Envelope {
             global: gen_stats_block(rng),
             request: gen_stats_block(rng),
         },
+        elapsed_us: rng.next_u64(),
     }
 }
 

@@ -1,0 +1,240 @@
+//! Property tests for the unified telemetry layer (DESIGN.md §17):
+//! histogram bucket boundaries and quantiles, the Chrome-trace export's
+//! compatibility with the serve codec's strict JSON parser, and — the
+//! load-bearing contract — that enabling span tracing never perturbs
+//! simulation results (bit identity over shapes × presets × options).
+
+use flexsa::config::{preset, PRESETS};
+use flexsa::gemm::{GemmShape, Phase};
+use flexsa::proptest::{
+    figure_options, forall, gemm_bit_identical, gemm_dim, shrink_dims3, Config,
+    FIGURE_OPTION_POINTS,
+};
+use flexsa::serve::protocol::Json;
+use flexsa::sim::simulate_gemm_plan;
+use flexsa::telemetry::{
+    bucket_index, bucket_lower, bucket_upper, Histogram, HistogramSnapshot, HISTOGRAM_BUCKETS,
+};
+use std::sync::Mutex;
+
+/// Serializes the tests that toggle the process-global tracing switch —
+/// without this the harness's parallel test threads race on
+/// [`flexsa::telemetry::set_tracing`] and spans vanish mid-test.
+static TRACING_GATE: Mutex<()> = Mutex::new(());
+
+// ---------------------------------------------------------------------------
+// Histogram properties
+// ---------------------------------------------------------------------------
+
+/// Values biased toward the bucket boundaries (powers of two and their
+/// neighbors) plus the extremes 0 / 1 / `u64::MAX`.
+fn gen_value(rng: &mut flexsa::util::Lcg64) -> u64 {
+    match rng.next_below(6) {
+        0 => 0,
+        1 => 1,
+        2 => u64::MAX,
+        3 => 1u64 << rng.next_below(64),
+        4 => (1u64 << rng.next_below(64)).wrapping_sub(1),
+        _ => rng.next_u64(),
+    }
+}
+
+#[test]
+fn prop_every_value_lands_in_its_own_bucket() {
+    forall(
+        &Config { cases: 500, ..Default::default() },
+        gen_value,
+        |&v| vec![v / 2, v.saturating_sub(1)],
+        |&v| {
+            let i = bucket_index(v);
+            if i >= HISTOGRAM_BUCKETS {
+                return Err(format!("{v}: bucket index {i} out of range"));
+            }
+            if !(bucket_lower(i)..=bucket_upper(i)).contains(&v) {
+                return Err(format!(
+                    "{v}: outside its bucket [{}, {}]",
+                    bucket_lower(i),
+                    bucket_upper(i)
+                ));
+            }
+            // Neighbors must not also claim it (the partition is exact).
+            if i > 0 && v <= bucket_upper(i - 1) {
+                return Err(format!("{v}: also inside bucket {}", i - 1));
+            }
+            if i + 1 < HISTOGRAM_BUCKETS && v >= bucket_lower(i + 1) {
+                return Err(format!("{v}: also inside bucket {}", i + 1));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_histogram_counts_exactly_and_quantiles_are_monotone_bounds() {
+    forall(
+        &Config { cases: 120, ..Default::default() },
+        |rng| {
+            let n = 1 + rng.next_below(40) as usize;
+            (0..n).map(|_| gen_value(rng)).collect::<Vec<u64>>()
+        },
+        |vs| {
+            let mut out = Vec::new();
+            if vs.len() > 1 {
+                out.push(vs[..vs.len() / 2].to_vec());
+                out.push(vs[vs.len() / 2..].to_vec());
+            }
+            out
+        },
+        |values| {
+            let h = Histogram::default();
+            for &v in values {
+                h.observe(v);
+            }
+            let s = h.snapshot();
+            if s.count() != values.len() as u64 {
+                return Err(format!("count {} != {}", s.count(), values.len()));
+            }
+            // Quantiles are monotone in q and are upper bounds: every
+            // quantile dominates at least ⌈q·n⌉ of the observed values.
+            let mut sorted = values.clone();
+            sorted.sort_unstable();
+            let mut last = 0u64;
+            for i in 0..=20 {
+                let q = i as f64 / 20.0;
+                let est = s.quantile(q);
+                if est < last {
+                    return Err(format!("quantile({q}) = {est} < previous {last}"));
+                }
+                last = est;
+                let rank = ((q * values.len() as f64).ceil() as usize)
+                    .clamp(1, values.len());
+                let true_rank_value = sorted[rank - 1];
+                if est < true_rank_value {
+                    return Err(format!(
+                        "quantile({q}) = {est} undercuts rank value {true_rank_value}"
+                    ));
+                }
+                // The upper-bound estimate stays within one bucket of the
+                // true rank value (same bucket's upper bound, exactly).
+                if est != bucket_upper(bucket_index(true_rank_value)) {
+                    return Err(format!(
+                        "quantile({q}) = {est} is not the rank value's bucket bound \
+                         (value {true_rank_value})"
+                    ));
+                }
+            }
+            // u64::MAX observations never wrap the saturating sum.
+            if values.contains(&u64::MAX) && s.sum != u64::MAX {
+                return Err(format!("sum {} did not saturate", s.sum));
+            }
+            // Delta against a mid-stream snapshot subtracts exactly.
+            let h2 = Histogram::default();
+            for &v in &values[..values.len() / 2] {
+                h2.observe(v);
+            }
+            let before = h2.snapshot();
+            for &v in &values[values.len() / 2..] {
+                h2.observe(v);
+            }
+            let d = h2.snapshot().delta(&before);
+            if d.count() != (values.len() - values.len() / 2) as u64 {
+                return Err(format!("delta count {} wrong", d.count()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn empty_histogram_quantiles_are_zero() {
+    let s = HistogramSnapshot::default();
+    for q in [0.0, 0.5, 0.99, 1.0] {
+        assert_eq!(s.quantile(q), 0);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chrome-trace export through the strict serve-codec parser
+// ---------------------------------------------------------------------------
+
+/// The exported trace must parse under [`Json::parse`] — the same strict
+/// grammar the daemon enforces on the wire — and carry complete ("ph":"X")
+/// events for the span taxonomy the ISSUE pins: plan resolution, group
+/// execution (fast/streaming attributed), fold, store I/O.
+#[test]
+fn chrome_trace_round_trips_through_the_strict_parser() {
+    let _gate = TRACING_GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let session = flexsa::session::SimSession::new();
+    let cfg = preset("4G1F").unwrap();
+    flexsa::telemetry::set_tracing(true);
+    // One simulated GEMM (groups + fold), plus a plan resolution (falls
+    // back heuristically — still a span) through the session.
+    let fp = flexsa::session::SimSession::fingerprint_keyed(
+        cfg.fingerprint(),
+        GemmShape::new(64, 64, 64),
+        Phase::Forward,
+        &flexsa::sim::SimOptions::hbm2(),
+    );
+    let _ = session.resolve_plan(fp);
+    let _ = session.simulate(
+        &cfg,
+        GemmShape::new(64, 64, 64),
+        Phase::Forward,
+        &flexsa::sim::SimOptions::hbm2(),
+    );
+    flexsa::telemetry::set_tracing(false);
+
+    let text = flexsa::telemetry::export_chrome_trace();
+    let v = Json::parse(&text).expect("trace parses under the strict serve codec");
+    let events = match v.get("traceEvents") {
+        Some(Json::Arr(evs)) => evs,
+        other => panic!("missing traceEvents array: {other:?}"),
+    };
+    assert!(!events.is_empty(), "no events recorded");
+    let mut names = std::collections::BTreeSet::new();
+    for e in events {
+        assert_eq!(e.get("ph").and_then(Json::as_str), Some("X"), "complete events only");
+        assert!(e.get("ts").and_then(Json::as_u64).is_some(), "integer ts");
+        assert!(e.get("dur").and_then(Json::as_u64).is_some(), "integer dur");
+        assert!(e.get("tid").and_then(Json::as_u64).is_some(), "integer tid");
+        assert_eq!(e.get("pid").and_then(Json::as_u64), Some(1));
+        names.insert(e.get("name").and_then(Json::as_str).unwrap_or("?").to_string());
+    }
+    for expected in ["plan_resolve", "group_exec", "fold"] {
+        assert!(names.contains(expected), "span `{expected}` missing from {names:?}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tracing must not perturb results
+// ---------------------------------------------------------------------------
+
+/// The overhead contract's observable half: simulating with tracing on
+/// yields bit-identical [`flexsa::sim::GemmSim`]s to tracing off, over
+/// shapes × presets × option points. (The golden-pin suite covers the
+/// untraced baseline; this covers the traced one.)
+#[test]
+fn prop_tracing_on_is_bit_identical_to_tracing_off() {
+    let _gate = TRACING_GATE.lock().unwrap_or_else(|e| e.into_inner());
+    forall(
+        &Config { cases: 24, ..Default::default() },
+        |rng| (gemm_dim(rng), gemm_dim(rng), gemm_dim(rng)),
+        shrink_dims3,
+        |&(m, n, k)| {
+            let shape = GemmShape::new(m, n, k);
+            let i = m.wrapping_mul(31).wrapping_add(n.wrapping_mul(7)).wrapping_add(k);
+            let opts = figure_options(i % FIGURE_OPTION_POINTS);
+            let phase = Phase::ALL[i % 3];
+            for name in PRESETS {
+                let cfg = preset(name).unwrap();
+                let plan = flexsa::compiler::PlanParams::HEURISTIC;
+                let off = simulate_gemm_plan(&cfg, shape, phase, &opts, &plan);
+                flexsa::telemetry::set_tracing(true);
+                let on = simulate_gemm_plan(&cfg, shape, phase, &opts, &plan);
+                flexsa::telemetry::set_tracing(false);
+                gemm_bit_identical(&off, &on).map_err(|m| format!("{name} {shape}: {m}"))?;
+            }
+            Ok(())
+        },
+    );
+}

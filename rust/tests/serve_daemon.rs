@@ -198,15 +198,39 @@ fn eight_clients_get_bit_identical_results_and_warm_repeats() {
     // Daemon-level counters, then graceful shutdown.
     let env = c.request(&Frame { id: None, req: ServeRequest::Stats });
     match env.body {
-        Ok(ServeResponse::Stats { connections, requests, errors, outstanding, global }) => {
+        Ok(ServeResponse::Stats { connections, requests, errors, outstanding, global, latency }) => {
             assert!(connections >= 9, "8 workers + repeat client, got {connections}");
             assert!(requests >= 8 * 12 + 6, "got {requests}");
             assert_eq!(errors, 0);
             assert_eq!(outstanding, 0);
             assert!(global.hits > 0 && global.misses > 0);
+            // The telemetry satellite: every simulate above landed in the
+            // per-kind latency histogram, quantiles monotone by rank.
+            let sim = latency
+                .iter()
+                .find(|r| r.kind == "simulate")
+                .expect("simulate latency row present");
+            assert!(sim.count > 0);
+            assert!(sim.p50 <= sim.p90 && sim.p90 <= sim.p99, "{sim:?}");
         }
         other => panic!("expected stats, got {other:?}"),
     }
+
+    // The `metrics` request: a Prometheus-style exposition over the same
+    // registry, through the strict codec.
+    let env = c.request(&Frame { id: None, req: ServeRequest::Metrics });
+    match env.body {
+        Ok(ServeResponse::Metrics { text }) => {
+            assert!(text.contains("flexsa_serve_requests"), "{text}");
+            assert!(text.contains("flexsa_session_hits"), "{text}");
+            assert!(
+                text.contains("flexsa_serve_request_simulate_us_bucket"),
+                "{text}"
+            );
+        }
+        other => panic!("expected metrics, got {other:?}"),
+    }
+
     let env = c.request(&Frame { id: None, req: ServeRequest::Shutdown });
     assert!(matches!(env.body, Ok(ServeResponse::ShutdownAck { .. })));
 
