@@ -1,7 +1,7 @@
 # Convenience targets. The rust build needs no artifacts; `artifacts` is
 # only for the optional PJRT end-to-end path (DESIGN.md §6).
 
-.PHONY: artifacts test rust-test py-test bench-smoke perf-smoke store-smoke plan-smoke plans-smoke group-smoke serve-smoke trace-smoke
+.PHONY: artifacts test rust-test py-test bench-smoke perf-smoke store-smoke plan-smoke plans-smoke group-smoke serve-smoke trace-smoke chaos-smoke
 
 # AOT-lower the L2 model + L1 kernel to HLO text (python runs once, at
 # build time; see python/compile/aot.py).
@@ -160,6 +160,48 @@ trace-smoke:
 	 printf '%s\n' "$$out" | grep -q 'flexsa_serve_requests'; \
 	 printf '%s\n' "$$out" | grep -q 'flexsa_session_hits'; \
 	 printf '%s\n' "$$out" | grep -q 'flexsa_serve_request_simulate_us_bucket'; \
+	 test "$$rc" -eq 0
+
+# Local mirror of CI's chaos smoke (DESIGN.md §18): a --features failpoints
+# build of the daemon runs with a tiny connection cap (--max-conns 2), a
+# short default deadline, and a fault schedule (store_read forced misses
+# every 3rd read, a 40ms submit stall). A bench-client storm with more
+# clients than the cap must end with >0 successes and >0 structured
+# `overloaded` refusals; a tiny-deadline round must end with >0
+# `deadline_exceeded` replies; and the daemon must still drain cleanly on
+# shutdown (run_serve exits non-zero on an unclean DrainReport) and leave
+# a parseable Chrome trace behind.
+chaos-smoke:
+	rm -rf /tmp/flexsa-chaos-smoke
+	mkdir -p /tmp/flexsa-chaos-smoke
+	cd rust && cargo build --release --quiet --features failpoints
+	cd rust && cargo test --release -q --features failpoints --test chaos_soak
+	@sock=/tmp/flexsa-chaos-smoke/daemon.sock; \
+	 bin=rust/target/release/flexsa; \
+	 FLEXSA_FAILPOINTS="store_read=every:3;service_submit=delay:40" \
+	   $$bin serve --socket $$sock --cache-dir /tmp/flexsa-chaos-smoke/store \
+	   --max-conns 2 --default-deadline-ms 30000 \
+	   --trace-out /tmp/flexsa-chaos-smoke/trace.json --quiet \
+	   2>/tmp/flexsa-chaos-smoke/serve.log & pid=$$!; \
+	 for i in $$(seq 1 100); do if [ -S $$sock ]; then break; fi; sleep 0.1; done; \
+	 if ! [ -S $$sock ]; then echo "daemon socket never appeared"; cat /tmp/flexsa-chaos-smoke/serve.log; kill $$pid 2>/dev/null; exit 1; fi; \
+	 $$bin bench-client --socket $$sock --clients 6 --requests 8 \
+	   >/tmp/flexsa-chaos-smoke/storm.out || { kill $$pid 2>/dev/null; exit 1; }; \
+	 $$bin bench-client --socket $$sock --clients 1 --requests 4 2048 2048 512 \
+	   --config 1G1C --deadline-ms 1 >/tmp/flexsa-chaos-smoke/deadline.out \
+	   || { kill $$pid 2>/dev/null; exit 1; }; \
+	 sleep 1; \
+	 $$bin query --socket $$sock '{"type":"shutdown"}' >/dev/null || { kill $$pid 2>/dev/null; exit 1; }; \
+	 rc=1; wait $$pid && rc=0; \
+	 cat /tmp/flexsa-chaos-smoke/storm.out /tmp/flexsa-chaos-smoke/deadline.out; \
+	 python3 -c "import json; json.load(open('/tmp/flexsa-chaos-smoke/trace.json'))"; \
+	 ok=$$(sed -n 's/.* ok=\([0-9]*\).*/\1/p' /tmp/flexsa-chaos-smoke/storm.out | tail -n 1); \
+	 over=$$(sed -n 's/.*overloaded=\([0-9]*\).*/\1/p' /tmp/flexsa-chaos-smoke/storm.out | tail -n 1); \
+	 dl=$$(sed -n 's/.*deadline_exceeded=\([0-9]*\).*/\1/p' /tmp/flexsa-chaos-smoke/deadline.out | tail -n 1); \
+	 echo "chaos smoke: ok=$$ok overloaded=$$over deadline_exceeded=$$dl daemon exit rc=$$rc"; \
+	 test -n "$$ok" && test "$$ok" -gt 0; \
+	 test -n "$$over" && test "$$over" -gt 0; \
+	 test -n "$$dl" && test "$$dl" -gt 0; \
 	 test "$$rc" -eq 0
 
 test: rust-test py-test

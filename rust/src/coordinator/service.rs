@@ -15,7 +15,7 @@ use crate::compiler::PlanParams;
 use crate::config::AcceleratorConfig;
 use crate::gemm::{GemmShape, Phase};
 use crate::session::SimSession;
-use crate::sim::{GemmSim, SimOptions};
+use crate::sim::{CancelToken, Cancelled, GemmSim, SimOptions};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
@@ -46,14 +46,22 @@ pub struct Request {
     /// Compilation plan (the heuristic for plain `submit`; the planner's
     /// candidate scoring submits variants).
     pub plan: PlanParams,
+    /// Cooperative cancellation token (DESIGN.md §18): checked by the
+    /// dispatch worker before the simulation starts and at group
+    /// boundaries inside it. [`CancelToken::NONE`] (the default for every
+    /// pre-deadline entry point) is never cancelled.
+    pub cancel: CancelToken,
 }
 
 /// The service's answer to a request.
 pub struct Response {
     /// Id of the request this answers.
     pub id: u64,
-    /// The simulation result (shared with the session cache).
-    pub sim: Arc<GemmSim>,
+    /// The simulation result (shared with the session cache), or
+    /// [`Err`]`(Cancelled)` if the request's token tripped first. Entry
+    /// points that submit with [`CancelToken::NONE`] can `expect` the
+    /// `Ok`: an inert token never cancels.
+    pub sim: Result<Arc<GemmSim>, Cancelled>,
 }
 
 /// Batching policy.
@@ -138,9 +146,9 @@ impl Submitter {
         self.next_id.fetch_add(1, Ordering::Relaxed)
     }
 
-    /// Submit a request under a previously [`Self::allocate`]d id. Returns
-    /// `false` if the service has already shut down (the request is
-    /// dropped and no response will arrive).
+    /// Submit a request under a previously [`Self::allocate`]d id, with a
+    /// cancellation token. Returns `false` if the service has already
+    /// shut down (the request is dropped and no response will arrive).
     pub fn submit_allocated(
         &self,
         id: u64,
@@ -149,10 +157,24 @@ impl Submitter {
         phase: Phase,
         opts: SimOptions,
         plan: PlanParams,
+        cancel: CancelToken,
     ) -> bool {
+        // Failpoint: models the intake channel refusing work (service
+        // wedged / torn down). Inert outside tests and `failpoints` builds.
+        if crate::failpoint::should_fail("service_submit") {
+            return false;
+        }
         self.core
             .tx
-            .send(Msg::Request(Request { id, cfg: Arc::clone(cfg), shape, phase, opts, plan }))
+            .send(Msg::Request(Request {
+                id,
+                cfg: Arc::clone(cfg),
+                shape,
+                phase,
+                opts,
+                plan,
+                cancel,
+            }))
             .is_ok()
     }
 
@@ -167,7 +189,7 @@ impl Submitter {
         plan: PlanParams,
     ) -> Option<u64> {
         let id = self.allocate();
-        self.submit_allocated(id, cfg, shape, phase, opts, plan).then_some(id)
+        self.submit_allocated(id, cfg, shape, phase, opts, plan, CancelToken::NONE).then_some(id)
     }
 
     /// Allocate-and-submit with the heuristic compilation plan; returns
@@ -380,7 +402,15 @@ impl SimService {
         self.tx
             .as_ref()
             .expect("service shut down")
-            .send(Msg::Request(Request { id, cfg: Arc::clone(cfg), shape, phase, opts, plan }))
+            .send(Msg::Request(Request {
+                id,
+                cfg: Arc::clone(cfg),
+                shape,
+                phase,
+                opts,
+                plan,
+                cancel: CancelToken::NONE,
+            }))
             .expect("service down");
         id
     }
@@ -579,8 +609,27 @@ fn dispatch(
                     return;
                 }
                 let r = &batch[i];
-                let sim = session
-                    .simulate_plan_keyed(digests[i], &r.cfg, r.shape, r.phase, &r.opts, &r.plan);
+                // A request whose token tripped while queued never starts:
+                // the worker answers immediately and moves to the next item
+                // (this is what "cancellation frees its worker" means here).
+                let sim = if r.cancel.is_cancelled() {
+                    crate::telemetry::counter("service_cancelled").inc();
+                    Err(Cancelled)
+                } else {
+                    let sim = session.simulate_plan_keyed_cancel(
+                        digests[i],
+                        &r.cfg,
+                        r.shape,
+                        r.phase,
+                        &r.opts,
+                        &r.plan,
+                        &r.cancel,
+                    );
+                    if sim.is_err() {
+                        crate::telemetry::counter("service_cancelled").inc();
+                    }
+                    sim
+                };
                 let _ = tx.send(Response { id: r.id, sim });
             });
         }
@@ -628,9 +677,10 @@ mod tests {
         let id = svc.submit(&cfg, shape, Phase::WeightGrad, SimOptions::hbm2());
         let resp = svc.recv().unwrap();
         assert_eq!(resp.id, id);
+        let sim = resp.sim.expect("uncancelled");
         let direct = simulate_gemm_shape(&cfg, shape, Phase::WeightGrad, &SimOptions::hbm2());
-        assert_eq!(resp.sim.cycles, direct.cycles);
-        assert_eq!(resp.sim.busy_macs, direct.busy_macs);
+        assert_eq!(sim.cycles, direct.cycles);
+        assert_eq!(sim.busy_macs, direct.busy_macs);
         svc.shutdown();
     }
 
@@ -724,9 +774,10 @@ mod tests {
         let id = svc.submit_plan(&cfg, shape, Phase::Forward, SimOptions::ideal(), plan);
         let resp = svc.recv().unwrap();
         assert_eq!(resp.id, id);
+        let sim = resp.sim.expect("uncancelled");
         let direct = simulate_gemm_plan(&cfg, shape, Phase::Forward, &SimOptions::ideal(), &plan);
-        assert_eq!(resp.sim.cycles.to_bits(), direct.cycles.to_bits());
-        assert_eq!(resp.sim.traffic, direct.traffic);
+        assert_eq!(sim.cycles.to_bits(), direct.cycles.to_bits());
+        assert_eq!(sim.traffic, direct.traffic);
         // A heuristic request for the same key is a distinct cache entry.
         svc.submit(&cfg, shape, Phase::Forward, SimOptions::ideal());
         svc.recv().unwrap();
@@ -786,6 +837,7 @@ mod tests {
             Phase::Forward,
             SimOptions::ideal(),
             PlanParams::HEURISTIC,
+            CancelToken::NONE,
         ));
         let sub2 = sub.clone();
         let id2 = sub2
@@ -824,7 +876,8 @@ mod tests {
             shape,
             Phase::Forward,
             SimOptions::ideal(),
-            PlanParams::HEURISTIC
+            PlanParams::HEURISTIC,
+            CancelToken::NONE,
         ));
     }
 
@@ -897,6 +950,81 @@ mod tests {
     }
 
     #[test]
+    fn cancelled_requests_answer_err_and_never_poison_the_cache() {
+        let mut svc = SimService::start(1, BatchPolicy::default());
+        let sub = svc.submitter();
+        let cfg = Arc::new(preset("4G1F").unwrap());
+        let shape = GemmShape::new(2048, 96, 512);
+
+        // Pre-tripped token: the worker answers Err without simulating.
+        let cancel = CancelToken::new();
+        cancel.cancel();
+        let id = sub.allocate();
+        assert!(sub.submit_allocated(
+            id,
+            &cfg,
+            shape,
+            Phase::Forward,
+            SimOptions::ideal(),
+            PlanParams::HEURISTIC,
+            cancel,
+        ));
+        let resp = svc.recv().unwrap();
+        assert_eq!(resp.id, id);
+        assert!(matches!(resp.sim, Err(Cancelled)));
+
+        // The same request with a live (never-tripped) token computes
+        // fresh — nothing partial was cached — and matches the direct
+        // simulation bit-for-bit.
+        let id2 = sub.allocate();
+        assert!(sub.submit_allocated(
+            id2,
+            &cfg,
+            shape,
+            Phase::Forward,
+            SimOptions::ideal(),
+            PlanParams::HEURISTIC,
+            CancelToken::new(),
+        ));
+        let resp2 = svc.recv().unwrap();
+        assert_eq!(resp2.id, id2);
+        let sim = resp2.sim.expect("live token");
+        let direct = simulate_gemm_shape(&cfg, shape, Phase::Forward, &SimOptions::ideal());
+        assert_eq!(sim.cycles.to_bits(), direct.cycles.to_bits());
+        assert_eq!(sim.busy_macs, direct.busy_macs);
+        drop(sub);
+        let stats = svc.shutdown();
+        // The cancelled request inserted nothing: one miss, one insert.
+        assert_eq!(stats.cache_inserts, 1, "{stats:?}");
+        assert_eq!(stats.cache_hits, 0, "{stats:?}");
+    }
+
+    #[test]
+    fn deadline_tokens_expire_queued_requests() {
+        let cfg = Arc::new(preset("1G1C").unwrap());
+        // A deadline already in the past: equivalent to an expired queue
+        // wait, answered Err before any work starts.
+        let past = Instant::now() - Duration::from_millis(5);
+        let mut svc = SimService::start(1, BatchPolicy::default());
+        let sub = svc.submitter();
+        let id = sub.allocate();
+        assert!(sub.submit_allocated(
+            id,
+            &cfg,
+            GemmShape::new(64, 64, 64),
+            Phase::Forward,
+            SimOptions::ideal(),
+            PlanParams::HEURISTIC,
+            CancelToken::with_deadline(past),
+        ));
+        let r = svc.recv().unwrap();
+        assert_eq!(r.id, id);
+        assert!(matches!(r.sim, Err(Cancelled)));
+        drop(sub);
+        svc.shutdown();
+    }
+
+    #[test]
     fn store_backed_services_reuse_results_across_restarts() {
         use crate::session::SimStore;
         let dir = crate::proptest::scratch_dir("service-store");
@@ -909,7 +1037,7 @@ mod tests {
         // First service: cold disk — simulates once and persists.
         let first = SimService::start_with_session(1, BatchPolicy::default(), session_on(&dir));
         first.submit(&cfg, shape, Phase::Forward, SimOptions::ideal());
-        let direct = first.recv().unwrap().sim;
+        let direct = first.recv().unwrap().sim.expect("uncancelled");
         let stats = first.shutdown();
         assert_eq!(stats.cache_store_misses, 1, "{stats:?}");
         assert_eq!(stats.cache_store_writes, 1, "{stats:?}");
@@ -918,7 +1046,7 @@ mod tests {
         // without simulating, bit-identically.
         let second = SimService::start_with_session(1, BatchPolicy::default(), session_on(&dir));
         second.submit(&cfg, shape, Phase::Forward, SimOptions::ideal());
-        let replayed = second.recv().unwrap().sim;
+        let replayed = second.recv().unwrap().sim.expect("uncancelled");
         assert_eq!(replayed.cycles.to_bits(), direct.cycles.to_bits());
         assert_eq!(replayed.busy_macs, direct.busy_macs);
         let stats = second.shutdown();

@@ -1,0 +1,261 @@
+//! Named failpoints: a pure-std fault-injection harness (DESIGN.md §18).
+//!
+//! A *failpoint* is a named probe compiled into a failure-prone code path
+//! (persistent-store reads/writes, service submission, socket writes).
+//! Production builds compile the probes to a constant `false` — zero
+//! branches survive optimization — while tests and `--features
+//! failpoints` builds consult a process-wide registry that a test (or
+//! the `FLEXSA_FAILPOINTS` environment variable, read at daemon start)
+//! programs with a deterministic schedule:
+//!
+//! | spec       | behavior                                             |
+//! |------------|------------------------------------------------------|
+//! | `off`      | never fires                                          |
+//! | `err`      | fires on every call                                  |
+//! | `err:N`    | fires on the first `N` calls, then never again       |
+//! | `every:K`  | fires on every `K`-th call (the K-th, 2K-th, …)      |
+//! | `delay:MS` | sleeps `MS` milliseconds, then does **not** fire     |
+//!
+//! The env grammar is `name=spec` pairs separated by `;`, e.g.
+//! `FLEXSA_FAILPOINTS="store_read=every:3;socket_write=err:2"`. Every
+//! fire (and every delay) increments the `failpoint_hits` telemetry
+//! counter and the per-point hit count ([`hits`]), so a chaos test can
+//! assert its schedule actually executed.
+//!
+//! Deployed points: `store_read` (forced store miss — result-identical,
+//! the entry recomputes), `store_write` (forced write error — surfaces
+//! in [`crate::coordinator::DrainReport::store_writes_failed`]),
+//! `service_submit` (intake refusal — the serve layer answers a
+//! structured error), `socket_write` (reply write fails — the daemon
+//! treats the client as gone).
+
+#[cfg(any(test, feature = "failpoints"))]
+mod active {
+    use std::collections::HashMap;
+    use std::sync::{Mutex, OnceLock};
+
+    /// One parsed failpoint schedule (see the module table).
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    enum Spec {
+        Off,
+        Err { limit: Option<u64> },
+        Every { k: u64 },
+        Delay { ms: u64 },
+    }
+
+    #[derive(Debug, Default)]
+    struct Point {
+        spec: Option<Spec>,
+        calls: u64,
+        hits: u64,
+    }
+
+    fn registry() -> &'static Mutex<HashMap<String, Point>> {
+        static R: OnceLock<Mutex<HashMap<String, Point>>> = OnceLock::new();
+        R.get_or_init(|| Mutex::new(HashMap::new()))
+    }
+
+    fn parse_spec(spec: &str) -> Result<Spec, String> {
+        let (head, arg) = match spec.split_once(':') {
+            None => (spec, None),
+            Some((h, a)) => (h, Some(a)),
+        };
+        let num = |what: &str| -> Result<u64, String> {
+            arg.ok_or_else(|| format!("`{head}` needs `:{what}`"))?
+                .parse::<u64>()
+                .map_err(|_| format!("`{head}:{}` — {what} must be an integer", arg.unwrap()))
+        };
+        match head {
+            "off" if arg.is_none() => Ok(Spec::Off),
+            "err" if arg.is_none() => Ok(Spec::Err { limit: None }),
+            "err" => Ok(Spec::Err { limit: Some(num("N")?) }),
+            "every" => {
+                let k = num("K")?;
+                if k == 0 {
+                    return Err("`every:0` never fires; use `off`".into());
+                }
+                Ok(Spec::Every { k })
+            }
+            "delay" => Ok(Spec::Delay { ms: num("MS")?.min(60_000) }),
+            _ => Err(format!("unknown failpoint spec `{spec}` (off|err|err:N|every:K|delay:MS)")),
+        }
+    }
+
+    /// Program the named failpoint with a schedule (see the module-level
+    /// grammar). Resets the point's call/hit counters.
+    pub fn configure(name: &str, spec: &str) -> Result<(), String> {
+        let parsed = parse_spec(spec.trim())?;
+        let mut reg = registry().lock().unwrap();
+        reg.insert(name.trim().to_string(), Point { spec: Some(parsed), calls: 0, hits: 0 });
+        Ok(())
+    }
+
+    /// Parse `FLEXSA_FAILPOINTS` (`name=spec;name=spec;…`) into the
+    /// registry; returns how many points were configured. An unset or
+    /// empty variable configures nothing and is `Ok(0)`.
+    pub fn configure_from_env() -> Result<usize, String> {
+        let Ok(raw) = std::env::var("FLEXSA_FAILPOINTS") else { return Ok(0) };
+        let mut n = 0;
+        for pair in raw.split(';').map(str::trim).filter(|p| !p.is_empty()) {
+            let (name, spec) = pair
+                .split_once('=')
+                .ok_or_else(|| format!("failpoint `{pair}` is not `name=spec`"))?;
+            configure(name, spec)?;
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    /// Remove every configured failpoint (tests call this between cases).
+    pub fn clear_all() {
+        registry().lock().unwrap().clear();
+    }
+
+    /// Consult the named failpoint: true means the instrumented path must
+    /// fail now. Unconfigured points never fire and cost one map lookup.
+    pub fn should_fail(name: &str) -> bool {
+        let delay_ms;
+        {
+            let mut reg = registry().lock().unwrap();
+            let Some(point) = reg.get_mut(name) else { return false };
+            let Some(spec) = point.spec else { return false };
+            point.calls += 1;
+            let fire = match spec {
+                Spec::Off => false,
+                Spec::Err { limit: None } => true,
+                Spec::Err { limit: Some(n) } => point.calls <= n,
+                Spec::Every { k } => point.calls % k == 0,
+                Spec::Delay { .. } => false,
+            };
+            if fire {
+                point.hits += 1;
+                crate::telemetry::counter("failpoint_hits").inc();
+                return true;
+            }
+            match spec {
+                Spec::Delay { ms } => {
+                    point.hits += 1;
+                    crate::telemetry::counter("failpoint_hits").inc();
+                    delay_ms = ms;
+                }
+                _ => return false,
+            }
+        }
+        // Sleep outside the registry lock so a delayed path never blocks
+        // other failpoints.
+        std::thread::sleep(std::time::Duration::from_millis(delay_ms));
+        false
+    }
+
+    /// How many times the named failpoint has fired (incl. delays).
+    pub fn hits(name: &str) -> u64 {
+        registry().lock().unwrap().get(name).map_or(0, |p| p.hits)
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        // Names here are private to this module so concurrent unit tests
+        // exercising the real sites (store_read, …) never collide.
+
+        #[test]
+        fn err_limit_fires_n_times() {
+            configure("fp_unit_err3", "err:3").unwrap();
+            let fired: Vec<bool> = (0..5).map(|_| should_fail("fp_unit_err3")).collect();
+            assert_eq!(fired, [true, true, true, false, false]);
+            assert_eq!(hits("fp_unit_err3"), 3);
+        }
+
+        #[test]
+        fn every_k_is_periodic() {
+            configure("fp_unit_every2", "every:2").unwrap();
+            let fired: Vec<bool> = (0..6).map(|_| should_fail("fp_unit_every2")).collect();
+            assert_eq!(fired, [false, true, false, true, false, true]);
+        }
+
+        #[test]
+        fn unconfigured_and_off_never_fire() {
+            assert!(!should_fail("fp_unit_nonexistent"));
+            configure("fp_unit_off", "off").unwrap();
+            assert!(!should_fail("fp_unit_off"));
+            assert_eq!(hits("fp_unit_off"), 0);
+        }
+
+        #[test]
+        fn unconditional_err_fires_until_reconfigured() {
+            configure("fp_unit_err", "err").unwrap();
+            assert!(should_fail("fp_unit_err"));
+            assert!(should_fail("fp_unit_err"));
+            configure("fp_unit_err", "off").unwrap();
+            assert!(!should_fail("fp_unit_err"));
+        }
+
+        #[test]
+        fn delay_sleeps_without_firing() {
+            configure("fp_unit_delay", "delay:10").unwrap();
+            let t = std::time::Instant::now();
+            assert!(!should_fail("fp_unit_delay"));
+            assert!(t.elapsed() >= std::time::Duration::from_millis(10));
+            assert_eq!(hits("fp_unit_delay"), 1);
+        }
+
+        #[test]
+        fn bad_specs_are_rejected() {
+            for bad in ["", "nope", "err:x", "every:0", "every", "delay", "off:1"] {
+                assert!(configure("fp_unit_bad", bad).is_err(), "{bad}");
+            }
+        }
+
+        #[test]
+        fn env_grammar_parses_pairs() {
+            // Uses the parser directly (env vars are process-global and
+            // other tests run concurrently).
+            assert!(parse_spec("every:3").is_ok());
+            assert!(parse_spec("err:2").is_ok());
+            assert!(parse_spec("garbage:9").is_err());
+        }
+    }
+}
+
+#[cfg(any(test, feature = "failpoints"))]
+pub use active::{clear_all, configure, configure_from_env, hits, should_fail};
+
+#[cfg(not(any(test, feature = "failpoints")))]
+mod inert {
+    /// Inert probe: always false, inlined away in production builds.
+    #[inline(always)]
+    pub fn should_fail(_name: &str) -> bool {
+        false
+    }
+
+    /// Production builds carry no registry: configuring is an error so a
+    /// caller who meant to inject faults finds out immediately.
+    pub fn configure(_name: &str, _spec: &str) -> Result<(), String> {
+        Err("failpoints not compiled in (build with --features failpoints)".into())
+    }
+
+    /// Reads `FLEXSA_FAILPOINTS`: an error if it asks for injection this
+    /// build cannot honor, `Ok(0)` when unset/empty.
+    pub fn configure_from_env() -> Result<usize, String> {
+        match std::env::var("FLEXSA_FAILPOINTS") {
+            Ok(raw) if !raw.trim().is_empty() => {
+                Err("FLEXSA_FAILPOINTS set, but failpoints are not compiled in \
+                     (build with --features failpoints)"
+                    .into())
+            }
+            _ => Ok(0),
+        }
+    }
+
+    /// No registry, no hits.
+    pub fn hits(_name: &str) -> u64 {
+        0
+    }
+
+    /// Nothing to clear.
+    pub fn clear_all() {}
+}
+
+#[cfg(not(any(test, feature = "failpoints")))]
+pub use inert::{clear_all, configure, configure_from_env, hits, should_fail};

@@ -37,6 +37,7 @@ pub mod compiler;
 pub mod config;
 pub mod coordinator;
 pub mod energy;
+pub mod failpoint;
 pub mod gemm;
 pub mod isa;
 pub mod models;

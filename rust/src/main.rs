@@ -51,16 +51,29 @@ cache maintenance (ROADMAP store GC):
   cache gc [--max-mib N] [--cache-dir DIR]   evict oldest entries to fit
                                              the budget (default 512 MiB)
 
-serving (long-running daemon over the warm session; DESIGN.md §14):
+serving (long-running daemon over the warm session; DESIGN.md §14, §18):
   serve --socket PATH | --listen ADDR:PORT   newline-delimited JSON daemon
         [--read-timeout-ms N] [--max-frame N] (simulate/plan/report/stats/
-        [--quiet]                             metrics/ping/shutdown requests;
-                                             `metrics` returns a Prometheus
-                                             text exposition; no auth --
-                                             bind 127.0.0.1 unless the
+        [--max-conns N]                       metrics/ping/shutdown requests;
+        [--default-deadline-ms N] [--quiet]   `metrics` returns a Prometheus
+                                             text exposition; connections
+                                             past --max-conns get one
+                                             `overloaded` error envelope;
+                                             requests without a deadline_ms
+                                             of their own inherit
+                                             --default-deadline-ms; no auth
+                                             -- bind 127.0.0.1 unless the
                                              network is trusted)
   query --socket PATH | --connect ADDR:PORT  send request lines (args or
         [REQUEST_JSON ...]                    stdin), print response lines
+  bench-client --socket PATH | --connect A:P drive a running daemon with N
+        [--clients N] [--requests M] [M N K]  concurrent clients; retries
+        [--config NAME] [--deadline-ms N]     with jittered exponential
+        [--use-plans] [--seed S]              backoff on connect failures
+                                             and `overloaded` refusals;
+                                             prints reply counts and
+                                             p50/p90/p99 latency from the
+                                             envelopes' elapsed_us
 
 tools:
   configs                                    list presets
@@ -427,10 +440,23 @@ fn run_serve(args: &Args, threads: usize, session: &Arc<SimSession>) -> Result<(
     } else {
         return Err("serve: pass --socket PATH or --listen ADDR:PORT".into());
     };
+    // FLEXSA_FAILPOINTS is honored only by the daemon (the chaos smoke's
+    // entry point); a schedule this build cannot honor is a startup error,
+    // not a silently fault-free run.
+    match flexsa::failpoint::configure_from_env() {
+        Ok(0) => {}
+        Ok(n) => emit_census("serve", &format!("failpoints configured: {n}")),
+        Err(e) => return Err(format!("FLEXSA_FAILPOINTS: {e}")),
+    }
     let opts = ServeOptions {
         workers: threads,
         read_timeout: std::time::Duration::from_millis(args.get_u64("read-timeout-ms", 30_000)?),
         max_frame: args.get_usize("max-frame", flexsa::serve::protocol::DEFAULT_MAX_FRAME)?,
+        max_conns: args.get_usize("max-conns", flexsa::serve::default_max_conns())?,
+        default_deadline: match args.get_u64("default-deadline-ms", 0)? {
+            0 => None,
+            ms => Some(std::time::Duration::from_millis(ms)),
+        },
         quiet: args.has("quiet"),
         handle_signals: true,
         flush_throttle: None,
@@ -497,6 +523,251 @@ fn run_query(args: &Args) -> Result<(), String> {
     }
     if failures > 0 {
         return Err(format!("{failures} of {} request(s) failed", requests.len()));
+    }
+    Ok(())
+}
+
+/// Connection target for `bench-client` worker threads (clonable so each
+/// thread owns its copy; [`query_connect`] returns boxed halves instead,
+/// which cannot cross threads).
+#[derive(Clone)]
+enum BenchTarget {
+    Tcp(String),
+    #[cfg_attr(not(unix), allow(dead_code))]
+    Unix(String),
+}
+
+fn bench_connect(
+    target: &BenchTarget,
+) -> std::io::Result<(Box<dyn std::io::Write + Send>, Box<dyn std::io::Read + Send>)> {
+    match target {
+        BenchTarget::Tcp(addr) => {
+            let s = std::net::TcpStream::connect(addr)?;
+            let r = s.try_clone()?;
+            Ok((Box::new(s), Box::new(r)))
+        }
+        #[cfg(unix)]
+        BenchTarget::Unix(path) => {
+            let s = std::os::unix::net::UnixStream::connect(path)?;
+            let r = s.try_clone()?;
+            Ok((Box::new(s), Box::new(r)))
+        }
+        #[cfg(not(unix))]
+        BenchTarget::Unix(_) => Err(std::io::Error::new(
+            std::io::ErrorKind::Unsupported,
+            "unix sockets are unsupported on this platform",
+        )),
+    }
+}
+
+/// Per-thread tallies a `bench-client` worker brings home.
+#[derive(Default)]
+struct BenchStats {
+    ok: u64,
+    overloaded: u64,
+    deadline_exceeded: u64,
+    errors_other: u64,
+    /// Server-side `elapsed_us` of every successful reply (percentile
+    /// input; server-measured so Unix and TCP numbers are comparable).
+    latencies_us: Vec<u64>,
+}
+
+/// Jittered exponential backoff: 25ms * 2^attempt + up to 50% jitter,
+/// capped at 1.5s. The jitter de-synchronizes clients that were all
+/// refused by the same `overloaded` burst.
+fn bench_backoff(rng: &mut flexsa::util::Lcg64, attempt: &mut u32) {
+    let base = 25u64.saturating_mul(1u64 << (*attempt).min(5));
+    let jitter = rng.next_below(base / 2 + 1);
+    std::thread::sleep(std::time::Duration::from_millis((base + jitter).min(1500)));
+    *attempt = attempt.saturating_add(1);
+}
+
+/// One `bench-client` worker: issue `requests` simulate requests over a
+/// (re)connected stream, retrying with backoff on connect failure, socket
+/// errors, and `overloaded` refusals. Deadline-expired and other error
+/// envelopes count against their request (the daemon answered; retrying
+/// would double-count its admission decisions).
+#[allow(clippy::too_many_arguments)]
+fn bench_worker(
+    target: BenchTarget,
+    requests: usize,
+    corpus: Vec<GemmShape>,
+    config: String,
+    deadline_ms: Option<u64>,
+    use_plans: bool,
+    ideal: bool,
+    seed: u64,
+) -> BenchStats {
+    use flexsa::serve::protocol::{
+        encode_request, parse_envelope, ConfigRef, ErrorKind, Frame, Memory, ServeRequest,
+    };
+    use std::io::{BufRead, BufReader, Write};
+    // After this many consecutive failed tries the request is charged to
+    // `errors_other` and the worker moves on — a dead daemon must not hang
+    // the benchmark forever.
+    const MAX_TRIES: u32 = 8;
+    let mut rng = flexsa::util::Lcg64::new(seed);
+    let mut stats = BenchStats::default();
+    let mut conn: Option<(Box<dyn Write + Send>, BufReader<Box<dyn std::io::Read + Send>>)> = None;
+    let mut attempt = 0u32;
+    let mut i = 0usize;
+    while i < requests {
+        if attempt >= MAX_TRIES {
+            stats.errors_other += 1;
+            i += 1;
+            attempt = 0;
+            continue;
+        }
+        if conn.is_none() {
+            match bench_connect(&target) {
+                Ok((w, r)) => conn = Some((w, BufReader::new(r))),
+                Err(_) => {
+                    bench_backoff(&mut rng, &mut attempt);
+                    continue;
+                }
+            }
+        }
+        let (w, r) = conn.as_mut().expect("connected above");
+        let frame = Frame {
+            id: Some(i as u64),
+            req: ServeRequest::Simulate {
+                shape: corpus[i % corpus.len()],
+                phase: Phase::Forward,
+                memory: if ideal { Memory::Ideal } else { Memory::Hbm2 },
+                config: ConfigRef::Preset(config.clone()),
+                use_plans,
+                deadline_ms,
+            },
+        };
+        let line = encode_request(&frame);
+        let sent = w
+            .write_all(line.as_bytes())
+            .and_then(|()| w.write_all(b"\n"))
+            .and_then(|()| w.flush());
+        if sent.is_err() {
+            conn = None;
+            bench_backoff(&mut rng, &mut attempt);
+            continue;
+        }
+        let mut resp = String::new();
+        match r.read_line(&mut resp) {
+            Ok(n) if n > 0 => {}
+            // EOF or error: daemon restarted or dropped us mid-request.
+            _ => {
+                conn = None;
+                bench_backoff(&mut rng, &mut attempt);
+                continue;
+            }
+        }
+        match parse_envelope(resp.trim_end()) {
+            Ok(env) => match env.body {
+                Ok(_) => {
+                    stats.ok += 1;
+                    stats.latencies_us.push(env.elapsed_us);
+                    i += 1;
+                    attempt = 0;
+                }
+                Err(e) if e.kind == ErrorKind::Overloaded => {
+                    // The refusal envelope arrives instead of our reply and
+                    // the daemon closes the connection: back off, retry the
+                    // same request on a fresh one.
+                    stats.overloaded += 1;
+                    conn = None;
+                    bench_backoff(&mut rng, &mut attempt);
+                }
+                Err(e) if e.kind == ErrorKind::DeadlineExceeded => {
+                    stats.deadline_exceeded += 1;
+                    i += 1;
+                    attempt = 0;
+                }
+                Err(_) => {
+                    stats.errors_other += 1;
+                    i += 1;
+                    attempt = 0;
+                }
+            },
+            Err(_) => {
+                stats.errors_other += 1;
+                i += 1;
+                attempt = 0;
+            }
+        }
+    }
+    stats
+}
+
+/// `flexsa bench-client`: load a running daemon with `--clients`
+/// concurrent workers and print reply-kind counts plus latency
+/// percentiles. Exit status reflects transport health only — overloaded
+/// retries and deadline-expired replies are expected outcomes the smoke
+/// scripts grep for, not failures.
+fn run_bench_client(args: &Args) -> Result<(), String> {
+    let target = if let Some(addr) = args.get("connect") {
+        BenchTarget::Tcp(addr.to_string())
+    } else if let Some(path) = args.get("socket") {
+        BenchTarget::Unix(path.to_string())
+    } else {
+        return Err("bench-client: pass --socket PATH or --connect ADDR:PORT".into());
+    };
+    let clients = args.get_usize("clients", 4)?.max(1);
+    let requests = args.get_usize("requests", 16)?.max(1);
+    let config = args.get("config").unwrap_or("1G1C").to_string();
+    let deadline_ms = match args.get_u64("deadline-ms", 0)? {
+        0 => None,
+        ms => Some(ms),
+    };
+    let use_plans = args.has("use-plans");
+    let ideal = args.has("ideal");
+    let seed = args.get_u64("seed", 42)?;
+    let corpus: Vec<GemmShape> = if args.positional.len() == 3 {
+        vec![parse_mnk(args)?]
+    } else {
+        // Built-in corpus: small enough for a quick smoke, repeated enough
+        // (i % len) that the daemon's warm cache shows up in p50.
+        vec![
+            GemmShape::new(256, 256, 256),
+            GemmShape::new(512, 256, 128),
+            GemmShape::new(128, 512, 256),
+            GemmShape::new(384, 384, 192),
+        ]
+    };
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let target = target.clone();
+        let corpus = corpus.clone();
+        let config = config.clone();
+        // Distinct, deterministic per-thread seed.
+        let seed = seed ^ (c as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        handles.push(std::thread::spawn(move || {
+            bench_worker(target, requests, corpus, config, deadline_ms, use_plans, ideal, seed)
+        }));
+    }
+    let mut total = BenchStats::default();
+    for h in handles {
+        let s = h.join().map_err(|_| "bench-client: worker thread panicked".to_string())?;
+        total.ok += s.ok;
+        total.overloaded += s.overloaded;
+        total.deadline_exceeded += s.deadline_exceeded;
+        total.errors_other += s.errors_other;
+        total.latencies_us.extend(s.latencies_us);
+    }
+    // Stable one-line formats: the chaos smoke greps these.
+    println!(
+        "bench-client: clients={clients} requests={} ok={} overloaded={} \
+         deadline_exceeded={} errors_other={}",
+        clients * requests,
+        total.ok,
+        total.overloaded,
+        total.deadline_exceeded,
+        total.errors_other
+    );
+    if total.latencies_us.is_empty() {
+        println!("bench-client: no successful replies, no percentiles");
+    } else {
+        let mut l = total.latencies_us;
+        l.sort_unstable();
+        let pick = |q: usize| l[(l.len() - 1) * q / 100];
+        println!("bench-client: p50={}us p90={}us p99={}us", pick(50), pick(90), pick(99));
     }
     Ok(())
 }
@@ -713,6 +984,11 @@ fn run(args: &Args) -> Result<(), String> {
         }
         "query" => {
             run_query(args)?;
+        }
+        // Deliberately NOT in SIMULATING_COMMANDS: the client never
+        // simulates locally, so it must not open (or create) the cache dir.
+        "bench-client" => {
+            run_bench_client(args)?;
         }
         "cache" => {
             run_cache(args)?;

@@ -327,7 +327,10 @@ impl Planner {
         let mut by_id: HashMap<u64, (f64, u64)> = HashMap::with_capacity(ids.len());
         for _ in 0..ids.len() {
             let resp = self.service.recv().expect("planner service alive");
-            by_id.insert(resp.id, (resp.sim.cycles, resp.sim.traffic.dram()));
+            // The planner submits via `SimService::submit_plan`, which
+            // attaches the inert token: candidates are never cancelled.
+            let sim = resp.sim.expect("planner submits without deadlines");
+            by_id.insert(resp.id, (sim.cycles, sim.traffic.dram()));
         }
         plans
             .iter()

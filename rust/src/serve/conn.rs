@@ -1,29 +1,42 @@
 //! Per-connection handling: newline framing with size limits and timeout
-//! ticks, and the request/response loop over one client socket.
+//! ticks, plus the pipelined reader/writer pair serving one client socket.
 //!
-//! Robustness invariants (pinned by `tests/prop_serve.rs`):
+//! Robustness invariants (pinned by `tests/prop_serve.rs` and the chaos
+//! suite):
 //! - a malformed or schema-violating frame produces one `ok:false`
 //!   envelope and the connection keeps working;
 //! - a frame longer than the limit is skipped (never buffered whole) and
-//!   answered with an `oversized` error;
+//!   answered with an `oversized` error; a client that stalls mid-skip
+//!   accumulates idle ticks exactly like one that stalls mid-frame;
 //! - a client that stalls — or trickles bytes without ever completing a
 //!   frame — is disconnected after the idle timeout without disturbing
 //!   other connections: "idle" means time without a completed frame, so
-//!   one byte per tick cannot pin a connection thread open forever.
+//!   one byte per tick cannot pin a connection thread open forever;
+//! - requests pipeline: the reader keeps pulling frames (up to
+//!   [`MAX_PIPELINE`] in flight) while earlier simulations run, and the
+//!   writer flushes responses strictly in request order, enforcing each
+//!   request's deadline as its turn comes.
 
 use super::protocol::{
-    encode_envelope, parse_request, Envelope, ErrorKind, ServeRequest, StatsBlock, WireError,
+    encode_envelope, parse_request, Envelope, ErrorKind, PlanResult, ServeResponse, SimResult,
+    StatsBlock, WireError,
 };
-use super::Shared;
+use super::{Dispatch, Shared, Stream};
+use crate::sim::Cancelled;
 use std::io::{ErrorKind as IoKind, Read, Write};
-use std::sync::atomic::Ordering;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 /// Socket read-timeout tick: reads wake this often so the connection can
 /// notice daemon drain and accumulate idle time toward the configured
 /// read timeout.
 pub(crate) const READ_TICK: Duration = Duration::from_millis(100);
+
+/// Requests one client may have in flight before its reader stops
+/// pulling frames off the socket (per-connection backpressure: the
+/// queue to the writer blocks at this depth).
+pub(crate) const MAX_PIPELINE: usize = 64;
 
 /// One framing event from a [`FrameReader`].
 pub(crate) enum FrameEvent {
@@ -47,16 +60,15 @@ pub(crate) struct FrameReader<S> {
     stream: S,
     buf: Vec<u8>,
     max_frame: usize,
+    /// Mid-discard of an oversized line: the skip resumes on the next
+    /// [`FrameReader::next_frame`] call after a timeout tick, instead of
+    /// treating the stall as a dead client.
+    skipping: bool,
 }
 
 impl<S: Read> FrameReader<S> {
     pub(crate) fn new(stream: S, max_frame: usize) -> FrameReader<S> {
-        FrameReader { stream, buf: Vec::new(), max_frame }
-    }
-
-    /// The underlying stream, for writing responses between frames.
-    pub(crate) fn stream_mut(&mut self) -> &mut S {
-        &mut self.stream
+        FrameReader { stream, buf: Vec::new(), max_frame, skipping: false }
     }
 
     /// Read until the next framing event. Each call is bounded to roughly
@@ -67,6 +79,9 @@ impl<S: Read> FrameReader<S> {
     /// drain check still run against it.
     pub(crate) fn next_frame(&mut self) -> FrameEvent {
         let start = Instant::now();
+        if self.skipping {
+            return self.skip_to_newline(start);
+        }
         loop {
             if let Some(nl) = self.buf.iter().position(|&b| b == b'\n') {
                 let mut line: Vec<u8> = self.buf.drain(..=nl).collect();
@@ -83,6 +98,7 @@ impl<S: Read> FrameReader<S> {
             }
             if self.buf.len() > self.max_frame {
                 self.buf.clear();
+                self.skipping = true;
                 return self.skip_to_newline(start);
             }
             // Checked only after the buffer has been mined for a complete
@@ -108,13 +124,14 @@ impl<S: Read> FrameReader<S> {
     }
 
     /// Discard bytes until a newline; buffered follow-on bytes are kept.
-    /// `start` is when the enclosing `next_frame` call began: a client
-    /// that stalls or trickles mid-skip is treated as dead (the frame is
-    /// oversized garbage anyway) rather than allowed to pin this loop.
+    /// Bounded to one [`READ_TICK`] like `next_frame`: a stall or timeout
+    /// mid-skip yields a `TimedOut` tick — the skip resumes on the next
+    /// call — so a slow-but-live client accumulates idle time toward the
+    /// configured read timeout instead of being cut off at the first tick.
     fn skip_to_newline(&mut self, start: Instant) -> FrameEvent {
         loop {
             if start.elapsed() >= READ_TICK {
-                return FrameEvent::Eof;
+                return FrameEvent::TimedOut;
             }
             let mut chunk = [0u8; 4096];
             match self.stream.read(&mut chunk) {
@@ -122,12 +139,11 @@ impl<S: Read> FrameReader<S> {
                 Ok(n) => {
                     if let Some(nl) = chunk[..n].iter().position(|&b| b == b'\n') {
                         self.buf.extend_from_slice(&chunk[nl + 1..n]);
+                        self.skipping = false;
                         return FrameEvent::Oversized;
                     }
                 }
-                // A timeout during skip is a dead client: simplest policy
-                // that keeps the discard O(1) in both memory and state.
-                Err(e) if is_timeout(&e) => return FrameEvent::Eof,
+                Err(e) if is_timeout(&e) => return FrameEvent::TimedOut,
                 Err(e) if e.kind() == IoKind::Interrupted => {}
                 Err(e) => return FrameEvent::Err(e),
             }
@@ -146,14 +162,58 @@ struct ClientCounters {
     errors: u64,
 }
 
-/// Serve one accepted connection until EOF, idle timeout, error, or
+/// One queued request flowing from a connection's reader to its writer.
+struct WorkItem {
+    id: Option<u64>,
+    /// When the frame's bytes completed (the `elapsed_us` base).
+    started: Instant,
+    kind: Option<&'static str>,
+    /// Counter snapshots taken before dispatch (envelope `request` delta).
+    before: Option<(crate::session::SessionStats, crate::sim::FastpathSnapshot)>,
+    dispatch: Dispatch,
+}
+
+/// Serve one admitted connection until EOF, idle timeout, error, or
 /// daemon drain. Never panics on client input.
-pub(crate) fn handle_conn<S: Read + Write>(stream: S, shared: &Arc<Shared>) {
+///
+/// The connection splits into two handles to the same socket: this
+/// thread reads and dispatches frames (simulations and plans *submit*
+/// without blocking), while a writer thread resolves each request's
+/// outcome — enforcing its deadline — and flushes envelopes strictly in
+/// request order. Dropping the queue sender on exit lets the writer
+/// finish every in-flight request before the connection is torn down.
+pub(crate) fn handle_conn(stream: Stream, shared: &Arc<Shared>) {
+    let out = match stream.try_clone() {
+        Ok(s) => s,
+        Err(e) => {
+            shared.log(&format!("connection split error: {e}"));
+            return;
+        }
+    };
+    let (tx, rx) = mpsc::sync_channel(MAX_PIPELINE);
+    let writer_dead = Arc::new(AtomicBool::new(false));
+    let writer = {
+        let shared = Arc::clone(shared);
+        let dead = Arc::clone(&writer_dead);
+        std::thread::spawn(move || writer_loop(out, rx, &shared, &dead))
+    };
+    read_loop(stream, shared, &tx, &writer_dead);
+    drop(tx); // the writer drains queued work, then exits
+    let _ = writer.join();
+}
+
+/// Pull frames off the socket and queue them for the writer; exits on
+/// EOF, idle timeout, read error, daemon drain, or a dead writer.
+fn read_loop(
+    stream: Stream,
+    shared: &Arc<Shared>,
+    tx: &mpsc::SyncSender<WorkItem>,
+    writer_dead: &AtomicBool,
+) {
     let mut reader = FrameReader::new(stream, shared.opts.max_frame);
-    let mut client = ClientCounters::default();
     let mut idle = Duration::ZERO;
     loop {
-        if shared.draining() {
+        if shared.draining() || writer_dead.load(Ordering::SeqCst) {
             return;
         }
         match reader.next_frame() {
@@ -183,19 +243,14 @@ pub(crate) fn handle_conn<S: Read + Write>(stream: S, shared: &Arc<Shared>) {
                     ErrorKind::Oversized,
                     format!("frame exceeds {} bytes", shared.opts.max_frame),
                 );
-                if respond(
-                    &mut reader,
-                    shared,
-                    &mut client,
-                    None,
-                    Err(err),
-                    false,
-                    None,
+                let item = WorkItem {
+                    id: None,
                     started,
-                    None,
-                )
-                .is_err()
-                {
+                    kind: None,
+                    before: None,
+                    dispatch: Dispatch::Ready(Err(err)),
+                };
+                if tx.send(item).is_err() {
                     return;
                 }
             }
@@ -207,48 +262,153 @@ pub(crate) fn handle_conn<S: Read + Write>(stream: S, shared: &Arc<Shared>) {
                 if bytes.iter().all(|b| b.is_ascii_whitespace()) {
                     continue; // blank keep-alive line
                 }
-                if process_frame(bytes, started, &mut reader, shared, &mut client).is_err() {
-                    return; // client went away mid-response
+                if tx.send(build_item(bytes, started, shared)).is_err() {
+                    return;
                 }
             }
         }
     }
 }
 
-/// Parse, dispatch, and answer one frame. `Err` means the response could
-/// not be written (dead client) and the connection should be dropped.
-fn process_frame<S: Read + Write>(
-    bytes: Vec<u8>,
-    started: Instant,
-    reader: &mut FrameReader<S>,
-    shared: &Arc<Shared>,
-    client: &mut ClientCounters,
-) -> std::io::Result<()> {
+/// Parse and dispatch one frame. The heavy kinds (simulate, plan) only
+/// *submit* here, so the reader returns to the socket immediately; the
+/// request span covers parse + submission (resolution happens on the
+/// writer as its turn comes).
+fn build_item(bytes: Vec<u8>, started: Instant, shared: &Arc<Shared>) -> WorkItem {
     let mut span = crate::telemetry::span("request", "serve");
     let parsed = String::from_utf8(bytes)
         .map_err(|_| WireError::new(ErrorKind::Malformed, "frame is not valid UTF-8"))
         .and_then(|line| parse_request(&line));
-    let (id, outcome, holds_slot, before) = match parsed {
+    match parsed {
         Err(e) => {
             span.detail("error");
-            (None, Err(e), false, None)
+            WorkItem {
+                id: None,
+                started,
+                kind: None,
+                before: None,
+                dispatch: Dispatch::Ready(Err(e)),
+            }
         }
         Ok(frame) => {
             span.detail(frame.req.kind());
             // Counter snapshots before dispatch: the envelope's `request`
-            // block is the delta across this request's work. The fast-path
-            // counters are process-wide and never reset, so a snapshot
-            // delta is the only correct per-request attribution.
+            // block is the delta across this request's work. Under
+            // pipelining the window runs submit→flush, so the delta can
+            // include a neighbor's work — the same caveat as
+            // cross-connection concurrency (DESIGN.md §14).
             let before = (shared.session.stats(), crate::sim::fastpath_snapshot());
-            let (outcome, holds_slot) = shared.handle(&frame.req);
-            (frame.id, outcome, holds_slot, Some((before, frame.req.kind())))
+            let kind = frame.req.kind();
+            let dispatch = shared.dispatch(&frame.req, started);
+            WorkItem { id: frame.id, started, kind: Some(kind), before: Some(before), dispatch }
         }
-    };
-    let (before, kind) = match before {
-        Some((b, k)) => (Some(b), Some(k)),
-        None => (None, None),
-    };
-    respond(reader, shared, client, id, outcome, holds_slot, before, started, kind)
+    }
+}
+
+/// Resolve queued requests in order and flush their envelopes. Keeps
+/// settling outstanding-work slots even after the socket dies (writes
+/// are skipped, accounting is not), so a client that disconnects
+/// mid-flight can never leak drain accounting or a worker slot.
+fn writer_loop(
+    mut out: Stream,
+    rx: mpsc::Receiver<WorkItem>,
+    shared: &Arc<Shared>,
+    writer_dead: &AtomicBool,
+) {
+    let mut client = ClientCounters::default();
+    let mut dead = false;
+    while let Ok(item) = rx.recv() {
+        let (body, holds_slot) = resolve(item.dispatch, shared);
+        let res = respond(
+            &mut out,
+            shared,
+            &mut client,
+            item.id,
+            body,
+            holds_slot,
+            item.before,
+            item.started,
+            item.kind,
+            dead,
+        );
+        if res.is_err() && !dead {
+            dead = true;
+            writer_dead.store(true, Ordering::SeqCst);
+        }
+    }
+}
+
+/// Wait for a pending request's outcome, enforcing its deadline. The
+/// returned bool says whether the outcome still holds an `outstanding`
+/// slot the caller must settle after flushing.
+fn resolve(
+    dispatch: Dispatch,
+    shared: &Arc<Shared>,
+) -> (Result<ServeResponse, WireError>, bool) {
+    let expired =
+        || WireError::new(ErrorKind::DeadlineExceeded, "deadline expired before the result was ready");
+    let gone = || WireError::new(ErrorKind::ShuttingDown, "daemon is draining");
+    match dispatch {
+        Dispatch::Ready(body) => (body, false),
+        Dispatch::Sim { rx, deadline, cancel } => {
+            let outcome = match deadline {
+                None => rx.recv().ok(),
+                Some(d) => match rx.recv_timeout(d.saturating_duration_since(Instant::now())) {
+                    Ok(r) => Some(r),
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        // Deadline expired with the request still in the
+                        // service: trip the token so the worker abandons it
+                        // at the next group boundary, then wait for the
+                        // (now prompt) acknowledgement — the slot must be
+                        // settled by exactly one side, so the receiver is
+                        // never abandoned mid-flight.
+                        cancel.cancel();
+                        crate::telemetry::counter("serve_deadline_cancels").inc();
+                        match rx.recv() {
+                            // Whatever came back, the deadline already
+                            // passed; a completed result stays cached in
+                            // the session, so the work is not wasted.
+                            Ok(_) => Some(Err(Cancelled)),
+                            Err(_) => None,
+                        }
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => None,
+                },
+            };
+            match outcome {
+                Some(Ok(sim)) => (Ok(ServeResponse::Simulate(SimResult::from_sim(&sim))), true),
+                Some(Err(Cancelled)) => (Err(expired()), true),
+                None => {
+                    // Router exited with the request unanswered (service
+                    // died mid-drain): settle the slot here.
+                    shared.outstanding.fetch_sub(1, Ordering::SeqCst);
+                    (Err(gone()), false)
+                }
+            }
+        }
+        Dispatch::Plan { rx, deadline } => {
+            let outcome = match deadline {
+                None => rx.recv().ok(),
+                Some(d) => match rx.recv_timeout(d.saturating_duration_since(Instant::now())) {
+                    Ok(c) => Some(c),
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        // A running plan search is not abortable mid-search
+                        // (DESIGN.md §18): drop the receiver and answer;
+                        // the planner discards the reply when it finishes.
+                        crate::telemetry::counter("serve_deadline_cancels").inc();
+                        return (Err(expired()), false);
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => None,
+                },
+            };
+            match outcome {
+                Some(choice) => {
+                    (Ok(ServeResponse::Plan(PlanResult::from_choice(&choice))), false)
+                }
+                None => (Err(gone()), false),
+            }
+        }
+    }
 }
 
 /// Build the envelope (stats trailer included), flush it, and settle the
@@ -256,18 +416,22 @@ fn process_frame<S: Read + Write>(
 /// request's frame completed (or its oversize was detected): the elapsed
 /// wall time is stamped on the envelope and recorded into the per-kind
 /// latency histograms — error replies included, so the error taxonomy
-/// (`serve_error_*_us`) is timed exactly like the success path.
+/// (`serve_error_*_us`, with `deadline_exceeded` shortened to `deadline`)
+/// is timed exactly like the success path. With `skip_write` the socket
+/// is already dead: the write is skipped but every counter and slot is
+/// still settled.
 #[allow(clippy::too_many_arguments)]
-fn respond<S: Read + Write>(
-    reader: &mut FrameReader<S>,
+fn respond(
+    out: &mut Stream,
     shared: &Arc<Shared>,
     client: &mut ClientCounters,
     id: Option<u64>,
-    body: Result<super::protocol::ServeResponse, WireError>,
+    body: Result<ServeResponse, WireError>,
     holds_slot: bool,
     before: Option<(crate::session::SessionStats, crate::sim::FastpathSnapshot)>,
     started: Instant,
     kind: Option<&'static str>,
+    skip_write: bool,
 ) -> std::io::Result<()> {
     client.requests += 1;
     shared.requests.fetch_add(1, Ordering::Relaxed);
@@ -283,7 +447,7 @@ fn respond<S: Read + Write>(
             }
         }
         Err(e) => {
-            crate::telemetry::histogram(&format!("serve_error_{}_us", e.kind.name()))
+            crate::telemetry::histogram(&format!("serve_error_{}_us", e.kind.metric_suffix()))
                 .observe(elapsed_us);
         }
     }
@@ -314,18 +478,60 @@ fn respond<S: Read + Write>(
             std::thread::sleep(delay);
         }
     }
-    let line = encode_envelope(&env);
-    let out = reader.stream_mut();
-    let res = out.write_all(line.as_bytes()).and_then(|()| {
-        out.write_all(b"\n")?;
-        out.flush()
-    });
+    let res = if skip_write {
+        Ok(())
+    } else if crate::failpoint::should_fail("socket_write") {
+        Err(std::io::Error::new(IoKind::BrokenPipe, "injected socket_write failure"))
+    } else {
+        let line = encode_envelope(&env);
+        out.write_all(line.as_bytes()).and_then(|()| {
+            out.write_all(b"\n")?;
+            out.flush()
+        })
+    };
     if holds_slot {
         // The response is flushed (or the client is gone): either way this
         // in-flight slot is settled for the drain accounting.
         shared.outstanding.fetch_sub(1, Ordering::SeqCst);
     }
     res
+}
+
+/// Answer one over-cap connection with a single structured `overloaded`
+/// envelope and close it (admission control, DESIGN.md §18): a refused
+/// client always learns why instead of hanging against a silent queue.
+pub(crate) fn refuse_overloaded(mut stream: Stream, shared: &Arc<Shared>) {
+    let started = Instant::now();
+    shared.requests.fetch_add(1, Ordering::Relaxed);
+    shared.errors.fetch_add(1, Ordering::Relaxed);
+    let err = WireError::new(
+        ErrorKind::Overloaded,
+        format!(
+            "connection cap reached ({} active); retry with backoff",
+            shared.opts.max_conns.max(1)
+        ),
+    );
+    let elapsed_us = started.elapsed().as_micros() as u64;
+    crate::telemetry::histogram(&format!("serve_error_{}_us", err.kind.metric_suffix()))
+        .observe(elapsed_us);
+    let now = shared.session.stats();
+    let fp = crate::sim::fastpath_snapshot();
+    let env = Envelope {
+        id: None,
+        body: Err(err),
+        stats: super::protocol::EnvelopeStats {
+            client_requests: 1,
+            client_errors: 1,
+            global: StatsBlock::from_session(&now).with_fastpath(fp.fast, fp.fallback),
+            request: StatsBlock::default(),
+        },
+        elapsed_us,
+    };
+    let line = encode_envelope(&env);
+    let _ = stream.write_all(line.as_bytes()).and_then(|()| {
+        stream.write_all(b"\n")?;
+        stream.flush()
+    });
 }
 
 #[cfg(test)]
@@ -433,5 +639,45 @@ mod tests {
         assert!(!r.buf.is_empty(), "partial frame must stay buffered across ticks");
         // The next call ticks again rather than wedging.
         assert!(matches!(r.next_frame(), FrameEvent::TimedOut));
+    }
+
+    /// Script: an oversized burst with no newline, then a stall (timeout),
+    /// then the rest of the line plus a follow-on frame, then EOF.
+    struct StalledOversize {
+        step: usize,
+    }
+
+    impl std::io::Read for StalledOversize {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            self.step += 1;
+            match self.step {
+                1 => {
+                    let n = buf.len().min(100);
+                    buf[..n].fill(b'g');
+                    Ok(n)
+                }
+                2 => Err(std::io::Error::new(std::io::ErrorKind::WouldBlock, "stall")),
+                3 => {
+                    let tail = b"arbage\nok\n";
+                    buf[..tail.len()].copy_from_slice(tail);
+                    Ok(tail.len())
+                }
+                _ => Ok(0),
+            }
+        }
+    }
+
+    #[test]
+    fn timeout_mid_skip_ticks_and_resumes_instead_of_disconnecting() {
+        // Regression: a timeout while discarding an oversized line used to
+        // return Eof, disconnecting a slow-but-live client after a single
+        // tick. It must tick like any other stall — letting the caller
+        // accumulate idle time — and resume the skip on the next call.
+        let mut r = FrameReader::new(StalledOversize { step: 0 }, 64);
+        assert!(matches!(r.next_frame(), FrameEvent::TimedOut));
+        assert!(r.skipping, "skip state must persist across ticks");
+        assert!(matches!(r.next_frame(), FrameEvent::Oversized));
+        assert!(matches!(r.next_frame(), FrameEvent::Frame(f) if f == b"ok"));
+        assert!(matches!(r.next_frame(), FrameEvent::Eof));
     }
 }

@@ -1,20 +1,34 @@
 //! `flexsa serve` — a long-running simulation daemon over the warm
-//! session (DESIGN.md §14).
+//! session (DESIGN.md §14, §18).
 //!
 //! The daemon listens on a Unix socket (or TCP) and speaks the
-//! newline-delimited JSON protocol in [`protocol`]. Every connection gets
-//! its own thread; `simulate` requests are routed through one shared
-//! [`SimService`] — so concurrent clients batch against the leader's
-//! deadline and repeat queries are answered from the warm [`SimSession`]
-//! (and its persistent store) with `sims=0` — while `plan` requests run
-//! the search-based [`Planner`] over the same session. A single router
-//! thread fans service responses back out to the waiting connections.
+//! newline-delimited JSON protocol in [`protocol`]. Every admitted
+//! connection gets a reader/writer thread pair, so one client can
+//! pipeline requests: the reader parses and *submits* frames without
+//! blocking, the writer resolves each request — enforcing its deadline —
+//! and flushes envelopes strictly in request order. `simulate` requests
+//! are routed through one shared [`SimService`] — so concurrent clients
+//! batch against the leader's deadline and repeat queries are answered
+//! from the warm [`SimSession`] (and its persistent store) with `sims=0`
+//! — while `plan` requests queue to one long-lived [`Planner`] per search
+//! strategy over the same session. A single router thread fans service
+//! responses back out to the waiting connections.
+//!
+//! Overload safety (DESIGN.md §18): connections beyond
+//! [`ServeOptions::max_conns`] are answered with one structured
+//! `overloaded` envelope and closed — never silently queued or hung.
+//! Requests may carry a `deadline_ms`; once it expires the daemon
+//! replies `deadline_exceeded` and trips the request's [`CancelToken`]
+//! so the simulation worker abandons the work at its next group
+//! boundary.
 //!
 //! Shutdown (a `shutdown` request, SIGTERM, or SIGINT) is a graceful
 //! drain: in-flight simulations complete and their responses are flushed
 //! to clients, the store write-behind settles, and the final
 //! [`ServiceStats`] carries a [`DrainReport`] saying exactly what was
 //! flushed and whether any store writes failed.
+//!
+//! [`DrainReport`]: crate::coordinator::DrainReport
 
 pub mod protocol;
 
@@ -23,11 +37,11 @@ mod conn;
 use crate::compiler::PlanParams;
 use crate::config::{parse_config, preset, AcceleratorConfig};
 use crate::coordinator::{BatchPolicy, ServiceStats, SimService, Submitter};
-use crate::planner::Planner;
+use crate::planner::{PlanChoice, Planner};
 use crate::pruning::Strength;
 use crate::report::figures as fig;
 use crate::session::SimSession;
-use crate::sim::GemmSim;
+use crate::sim::{CancelToken, Cancelled, GemmSim};
 use protocol::{ConfigRef, ErrorKind, ServeRequest, ServeResponse, WireError, DEFAULT_MAX_FRAME};
 use std::collections::HashMap;
 use std::io::{self, Read, Write};
@@ -38,10 +52,21 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// How often the accept loop wakes to check the drain / signal flags.
 const ACCEPT_TICK: Duration = Duration::from_millis(25);
+
+/// How long a refusal write may block before the peer is abandoned.
+const REFUSE_WRITE_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Default admission cap: four connections per default worker thread,
+/// floor 8 — enough headroom that a healthy client fleet never sees
+/// `overloaded`, small enough that a connection flood cannot exhaust
+/// thread handles.
+pub fn default_max_conns() -> usize {
+    crate::coordinator::default_threads().saturating_mul(4).max(8)
+}
 
 /// Daemon tuning knobs.
 #[derive(Debug, Clone, Copy)]
@@ -54,6 +79,14 @@ pub struct ServeOptions {
     /// Per-frame size limit in bytes (larger frames are answered with an
     /// `oversized` error and skipped).
     pub max_frame: usize,
+    /// Admission cap: connections beyond this many simultaneously open
+    /// clients are answered with one `overloaded` envelope and closed
+    /// instead of queueing invisibly (DESIGN.md §18).
+    pub max_conns: usize,
+    /// Deadline applied to `simulate`/`plan` requests that carry no
+    /// `deadline_ms` of their own; `None` means such requests never
+    /// expire server-side.
+    pub default_deadline: Option<Duration>,
     /// Suppress per-connection stderr log lines.
     pub quiet: bool,
     /// Install SIGTERM/SIGINT handlers that begin a graceful drain (the
@@ -70,6 +103,8 @@ impl Default for ServeOptions {
             workers: crate::coordinator::default_threads(),
             read_timeout: Duration::from_secs(30),
             max_frame: DEFAULT_MAX_FRAME,
+            max_conns: default_max_conns(),
+            default_deadline: None,
             quiet: false,
             handle_signals: false,
             flush_throttle: None,
@@ -160,10 +195,31 @@ impl Drop for Listener {
 }
 
 /// One accepted client connection.
-enum Stream {
+pub(crate) enum Stream {
     #[cfg(unix)]
     Unix(std::os::unix::net::UnixStream),
     Tcp(std::net::TcpStream),
+}
+
+impl Stream {
+    /// A second handle to the same socket, so the connection can split
+    /// into a reader half and a writer half.
+    pub(crate) fn try_clone(&self) -> io::Result<Stream> {
+        match self {
+            #[cfg(unix)]
+            Stream::Unix(s) => s.try_clone().map(Stream::Unix),
+            Stream::Tcp(s) => s.try_clone().map(Stream::Tcp),
+        }
+    }
+
+    /// Bound how long a response write may block on a stalled peer.
+    pub(crate) fn set_write_timeout(&self, dur: Option<Duration>) -> io::Result<()> {
+        match self {
+            #[cfg(unix)]
+            Stream::Unix(s) => s.set_write_timeout(dur),
+            Stream::Tcp(s) => s.set_write_timeout(dur),
+        }
+    }
 }
 
 impl io::Read for Stream {
@@ -194,6 +250,59 @@ impl io::Write for Stream {
     }
 }
 
+/// One plan query queued to a strategy's long-lived planner thread.
+struct PlanJob {
+    cfg: Arc<AcceleratorConfig>,
+    shape: crate::gemm::GemmShape,
+    phase: crate::gemm::Phase,
+    opts: crate::sim::SimOptions,
+    reply: mpsc::Sender<PlanChoice>,
+}
+
+/// A lazily created planner service: one thread holding one [`Planner`]
+/// (and its worker pool) for one search strategy, fed over a channel.
+struct PlannerEntry {
+    tx: mpsc::Sender<PlanJob>,
+    thread: std::thread::JoinHandle<()>,
+}
+
+/// What the reader thread hands its writer for one request: either a
+/// response computed inline, or a pending receiver the writer resolves —
+/// under the request's deadline — when its turn in the response order
+/// comes.
+pub(crate) enum Dispatch {
+    /// The response is already known (cheap request kinds, refusals,
+    /// parse errors).
+    Ready(Result<ServeResponse, WireError>),
+    /// A simulation submitted to the shared service. The writer owns the
+    /// `outstanding` slot and must settle it exactly once.
+    Sim {
+        /// Yields the result, or `Err(Cancelled)` once the token trips.
+        rx: mpsc::Receiver<Result<Arc<GemmSim>, Cancelled>>,
+        /// Absolute expiry, if the request (or the server default) set one.
+        deadline: Option<Instant>,
+        /// Trip this to make the worker abandon the request.
+        cancel: CancelToken,
+    },
+    /// A plan query queued to the strategy's planner service.
+    Plan {
+        /// Yields the planner's choice; disconnect means the planner died.
+        rx: mpsc::Receiver<PlanChoice>,
+        /// Absolute expiry, if the request (or the server default) set one.
+        deadline: Option<Instant>,
+    },
+}
+
+/// Absolute deadline for a request that arrived at `started`: the
+/// request's own `deadline_ms` wins; otherwise the server default.
+fn request_deadline(
+    started: Instant,
+    deadline_ms: Option<u64>,
+    default: Option<Duration>,
+) -> Option<Instant> {
+    deadline_ms.map(Duration::from_millis).or(default).map(|d| started + d)
+}
+
 /// State shared between the accept loop, connection threads, and the
 /// response router.
 pub(crate) struct Shared {
@@ -201,8 +310,8 @@ pub(crate) struct Shared {
     /// Request intake; `None` once the drain has released it (new
     /// simulation requests are then refused with `shutting_down`).
     submitter: Mutex<Option<Submitter>>,
-    /// In-flight simulate requests: service id → the connection waiting.
-    waiters: Mutex<HashMap<u64, mpsc::Sender<Arc<GemmSim>>>>,
+    /// In-flight simulate requests: service id → the connection's writer.
+    waiters: Mutex<HashMap<u64, mpsc::Sender<Result<Arc<GemmSim>, Cancelled>>>>,
     /// Simulate responses submitted but not yet flushed to their client.
     pub(crate) outstanding: AtomicU64,
     draining: AtomicBool,
@@ -210,11 +319,20 @@ pub(crate) struct Shared {
     /// drain then flushes rather than drops).
     drain_inflight: AtomicU64,
     pub(crate) connections: AtomicU64,
+    /// Connections currently open; admission control compares this
+    /// against [`ServeOptions::max_conns`].
+    pub(crate) active_conns: AtomicU64,
+    /// Connections refused at admission with an `overloaded` envelope.
+    pub(crate) overloaded: AtomicU64,
     pub(crate) requests: AtomicU64,
     pub(crate) errors: AtomicU64,
     /// Preset configs already resolved, so repeat queries share one `Arc`
     /// (the service dispatcher dedups config digests by pointer).
     presets: Mutex<HashMap<String, Arc<AcceleratorConfig>>>,
+    /// One long-lived planner service per strategy byte, lazily created:
+    /// `plan` requests queue here instead of paying a throwaway
+    /// [`Planner`] (and its worker pool) per request.
+    planners: Mutex<HashMap<u8, PlannerEntry>>,
     pub(crate) opts: ServeOptions,
 }
 
@@ -276,6 +394,8 @@ impl Shared {
             ("session_plan_resolves", s.plan_resolves),
             ("session_plan_fallbacks", s.plan_fallbacks),
             ("serve_connections", self.connections.load(Ordering::Relaxed)),
+            ("serve_active_conns", self.active_conns.load(Ordering::SeqCst)),
+            ("serve_overloaded", self.overloaded.load(Ordering::Relaxed)),
             ("serve_requests", self.requests.load(Ordering::Relaxed)),
             ("serve_errors", self.errors.load(Ordering::Relaxed)),
             ("serve_outstanding", self.outstanding.load(Ordering::SeqCst)),
@@ -304,19 +424,21 @@ impl Shared {
         }
     }
 
-    /// Submit one GEMM through the shared service and wait for its result.
-    /// With `use_plans` the compilation plan is resolved from the warm
+    /// Submit one GEMM through the shared service without waiting. With
+    /// `use_plans` the compilation plan is resolved from the warm
     /// session's plan store first ([`SimSession::resolve_plan`]; a miss
-    /// falls back to the heuristic). On success the caller owns an
-    /// `outstanding` slot and must release it once the response is flushed.
-    fn simulate(
+    /// falls back to the heuristic). On `Ok` the caller owns an
+    /// `outstanding` slot and must settle it exactly once after
+    /// resolving the returned receiver.
+    fn submit_simulate(
         &self,
         cfg: &Arc<AcceleratorConfig>,
         shape: crate::gemm::GemmShape,
         phase: crate::gemm::Phase,
         opts: crate::sim::SimOptions,
         use_plans: bool,
-    ) -> Result<Arc<GemmSim>, WireError> {
+        cancel: &CancelToken,
+    ) -> Result<mpsc::Receiver<Result<Arc<GemmSim>, Cancelled>>, WireError> {
         let refused = || WireError::new(ErrorKind::ShuttingDown, "daemon is draining");
         let plan = if use_plans {
             let fp = SimSession::fingerprint_keyed(cfg.fingerprint(), shape, phase, &opts);
@@ -325,102 +447,148 @@ impl Shared {
             PlanParams::HEURISTIC
         };
         let (tx, rx) = mpsc::channel();
-        {
-            let guard = self.submitter.lock().unwrap();
-            let Some(sub) = guard.as_ref() else {
-                return Err(refused());
-            };
-            let id = sub.allocate();
-            self.waiters.lock().unwrap().insert(id, tx);
-            self.outstanding.fetch_add(1, Ordering::SeqCst);
-            if !sub.submit_allocated(id, cfg, shape, phase, opts, plan) {
-                self.waiters.lock().unwrap().remove(&id);
-                self.outstanding.fetch_sub(1, Ordering::SeqCst);
-                return Err(refused());
-            }
+        let guard = self.submitter.lock().unwrap();
+        let Some(sub) = guard.as_ref() else {
+            return Err(refused());
+        };
+        let id = sub.allocate();
+        self.waiters.lock().unwrap().insert(id, tx);
+        self.outstanding.fetch_add(1, Ordering::SeqCst);
+        if !sub.submit_allocated(id, cfg, shape, phase, opts, plan, cancel.clone()) {
+            self.waiters.lock().unwrap().remove(&id);
+            self.outstanding.fetch_sub(1, Ordering::SeqCst);
+            return Err(refused());
         }
-        match rx.recv() {
-            Ok(sim) => Ok(sim),
-            Err(_) => {
-                // Router exited with our request unanswered (service died
-                // mid-drain); settle the slot here.
-                self.outstanding.fetch_sub(1, Ordering::SeqCst);
-                Err(refused())
+        Ok(rx)
+    }
+
+    /// Queue one plan query to the strategy's long-lived planner service
+    /// (created on first use). The returned receiver yields the choice; a
+    /// disconnect means the planner died and maps to `shutting_down`.
+    fn submit_plan_job(
+        &self,
+        strategy: crate::planner::Strategy,
+        cfg: Arc<AcceleratorConfig>,
+        shape: crate::gemm::GemmShape,
+        phase: crate::gemm::Phase,
+        opts: crate::sim::SimOptions,
+    ) -> mpsc::Receiver<PlanChoice> {
+        let key = strategy.byte();
+        let (reply, rx) = mpsc::channel();
+        let mut job = PlanJob { cfg, shape, phase, opts, reply };
+        let mut planners = self.planners.lock().unwrap();
+        let mut attempts = 0;
+        loop {
+            let entry = planners.entry(key).or_insert_with(|| {
+                let session = Arc::clone(&self.session);
+                let workers = self.opts.workers;
+                let (tx, jobs) = mpsc::channel::<PlanJob>();
+                let thread = std::thread::spawn(move || {
+                    let planner = Planner::new(session, strategy, workers);
+                    while let Ok(job) = jobs.recv() {
+                        let choice = planner.plan_gemm(&job.cfg, job.shape, job.phase, &job.opts);
+                        let _ = job.reply.send(choice);
+                    }
+                });
+                PlannerEntry { tx, thread }
+            });
+            match entry.tx.send(job) {
+                Ok(()) => return rx,
+                Err(mpsc::SendError(j)) => {
+                    // The planner thread died (it can only panic); rebuild
+                    // the entry once and retry.
+                    planners.remove(&key);
+                    attempts += 1;
+                    if attempts >= 2 {
+                        // Dropping the job (and its reply sender) surfaces
+                        // as a disconnect → `shutting_down` downstream.
+                        return rx;
+                    }
+                    job = j;
+                }
             }
         }
     }
 
-    /// Dispatch one parsed request. The `bool` is true when the `Ok`
-    /// response holds an `outstanding` slot the connection must release
-    /// after flushing.
-    pub(crate) fn handle(&self, req: &ServeRequest) -> (Result<ServeResponse, WireError>, bool) {
+    /// Dispatch one parsed request. Heavy kinds (simulate, plan) only
+    /// *submit* here and hand back a pending receiver; the connection's
+    /// writer resolves it under the request's deadline.
+    pub(crate) fn dispatch(&self, req: &ServeRequest, started: Instant) -> Dispatch {
         match req {
-            ServeRequest::Ping => (Ok(ServeResponse::Pong), false),
-            ServeRequest::Stats => (
-                Ok(ServeResponse::Stats {
-                    global: {
-                        let (fast, fallback) = crate::sim::fastpath_counters();
-                        protocol::StatsBlock::from_session(&self.session.stats())
-                            .with_fastpath(fast, fallback)
-                    },
-                    connections: self.connections.load(Ordering::Relaxed),
-                    requests: self.requests.load(Ordering::Relaxed),
-                    errors: self.errors.load(Ordering::Relaxed),
-                    outstanding: self.outstanding.load(Ordering::SeqCst),
-                    latency: latency_rows(),
-                }),
-                false,
-            ),
+            ServeRequest::Ping => Dispatch::Ready(Ok(ServeResponse::Pong)),
+            ServeRequest::Stats => Dispatch::Ready(Ok(ServeResponse::Stats {
+                global: {
+                    let (fast, fallback) = crate::sim::fastpath_counters();
+                    protocol::StatsBlock::from_session(&self.session.stats())
+                        .with_fastpath(fast, fallback)
+                },
+                connections: self.connections.load(Ordering::Relaxed),
+                requests: self.requests.load(Ordering::Relaxed),
+                errors: self.errors.load(Ordering::Relaxed),
+                outstanding: self.outstanding.load(Ordering::SeqCst),
+                latency: latency_rows(),
+            })),
             ServeRequest::Metrics => {
                 self.publish_gauges();
-                (
-                    Ok(ServeResponse::Metrics { text: crate::telemetry::render_prometheus() }),
-                    false,
-                )
+                Dispatch::Ready(Ok(ServeResponse::Metrics {
+                    text: crate::telemetry::render_prometheus(),
+                }))
             }
             ServeRequest::Shutdown => {
                 let inflight = self.begin_drain();
                 self.log("shutdown requested; draining");
-                (Ok(ServeResponse::ShutdownAck { outstanding: inflight }), false)
+                Dispatch::Ready(Ok(ServeResponse::ShutdownAck { outstanding: inflight }))
             }
-            ServeRequest::Simulate { shape, phase, memory, config, use_plans } => {
+            ServeRequest::Simulate { shape, phase, memory, config, use_plans, deadline_ms } => {
                 if self.draining() {
-                    return (
-                        Err(WireError::new(ErrorKind::ShuttingDown, "daemon is draining")),
-                        false,
-                    );
+                    return Dispatch::Ready(Err(WireError::new(
+                        ErrorKind::ShuttingDown,
+                        "daemon is draining",
+                    )));
                 }
                 let cfg = match self.resolve_config(config) {
                     Ok(c) => c,
-                    Err(e) => return (Err(e), false),
+                    Err(e) => return Dispatch::Ready(Err(e)),
                 };
-                match self.simulate(&cfg, *shape, *phase, memory.options(), *use_plans) {
-                    Ok(sim) => {
-                        (Ok(ServeResponse::Simulate(protocol::SimResult::from_sim(&sim))), true)
-                    }
-                    Err(e) => (Err(e), false),
+                let deadline = request_deadline(started, *deadline_ms, self.opts.default_deadline);
+                let cancel = match deadline {
+                    Some(d) => CancelToken::with_deadline(d),
+                    None => CancelToken::NONE,
+                };
+                match self.submit_simulate(
+                    &cfg,
+                    *shape,
+                    *phase,
+                    memory.options(),
+                    *use_plans,
+                    &cancel,
+                ) {
+                    Ok(rx) => Dispatch::Sim { rx, deadline, cancel },
+                    Err(e) => Dispatch::Ready(Err(e)),
                 }
             }
-            ServeRequest::Plan { shape, phase, memory, config, strategy } => {
+            ServeRequest::Plan { shape, phase, memory, config, strategy, deadline_ms } => {
                 if self.draining() {
-                    return (
-                        Err(WireError::new(ErrorKind::ShuttingDown, "daemon is draining")),
-                        false,
-                    );
+                    return Dispatch::Ready(Err(WireError::new(
+                        ErrorKind::ShuttingDown,
+                        "daemon is draining",
+                    )));
                 }
                 let cfg = match self.resolve_config(config) {
                     Ok(c) => c,
-                    Err(e) => return (Err(e), false),
+                    Err(e) => return Dispatch::Ready(Err(e)),
                 };
-                let planner = Planner::new(
-                    Arc::clone(&self.session),
+                let deadline = request_deadline(started, *deadline_ms, self.opts.default_deadline);
+                let rx = self.submit_plan_job(
                     strategy.to_planner(),
-                    self.opts.workers,
+                    cfg,
+                    *shape,
+                    *phase,
+                    memory.options(),
                 );
-                let choice = planner.plan_gemm(&cfg, *shape, *phase, &memory.options());
-                (Ok(ServeResponse::Plan(protocol::PlanResult::from_choice(&choice))), false)
+                Dispatch::Plan { rx, deadline }
             }
-            ServeRequest::Report { figure } => (self.report(figure), false),
+            ServeRequest::Report { figure } => Dispatch::Ready(self.report(figure)),
         }
     }
 
@@ -478,8 +646,11 @@ pub struct ServeOutcome {
     /// Service + session counters at shutdown; `service.drain` is the
     /// drain report (responses flushed, store writes completed/failed).
     pub service: ServiceStats,
-    /// Connections accepted.
+    /// Connections accepted (admitted past the connection cap).
     pub connections: u64,
+    /// Connections refused at admission, each answered with one
+    /// `overloaded` envelope.
+    pub overloaded: u64,
     /// Requests answered (all kinds, error replies included).
     pub requests: u64,
     /// Error replies sent.
@@ -520,9 +691,12 @@ fn build(session: Arc<SimSession>, opts: ServeOptions) -> (Arc<Shared>, SimServi
         draining: AtomicBool::new(false),
         drain_inflight: AtomicU64::new(0),
         connections: AtomicU64::new(0),
+        active_conns: AtomicU64::new(0),
+        overloaded: AtomicU64::new(0),
         requests: AtomicU64::new(0),
         errors: AtomicU64::new(0),
         presets: Mutex::new(HashMap::new()),
+        planners: Mutex::new(HashMap::new()),
         opts,
     });
     (shared, svc)
@@ -571,7 +745,8 @@ fn router_loop(svc: SimService, shared: Arc<Shared>, stats_tx: mpsc::Sender<Serv
         }
     }
     // Any waiters left have no response coming; dropping their senders
-    // unblocks the connections with a `shutting_down` error.
+    // unblocks the connections with a `shutting_down` error (the writer
+    // settles the outstanding slot on that disconnect).
     shared.waiters.lock().unwrap().clear();
     let _ = stats_tx.send(svc.shutdown());
 }
@@ -583,9 +758,10 @@ fn run_daemon(
 ) -> Result<ServeOutcome, String> {
     let endpoint = listener.describe();
     shared.log(&format!(
-        "listening on {endpoint} ({} workers, {} byte frames)",
+        "listening on {endpoint} ({} workers, {} byte frames, {} connection cap)",
         shared.opts.workers.max(1),
-        shared.opts.max_frame
+        shared.opts.max_frame,
+        shared.opts.max_conns.max(1),
     ));
     match &listener {
         // Deliberately not gated on `quiet`: the protocol carries no
@@ -619,11 +795,35 @@ fn run_daemon(
         }
         match listener.accept() {
             Ok(Some(stream)) => {
-                shared.connections.fetch_add(1, Ordering::Relaxed);
-                let conn_shared = Arc::clone(&shared);
-                conns.push(std::thread::spawn(move || {
-                    conn::handle_conn(stream, &conn_shared);
-                }));
+                // Admission control: the accept loop is the only writer of
+                // `active_conns` increments, so check-then-increment here
+                // cannot race another admit.
+                let cap = shared.opts.max_conns.max(1) as u64;
+                if shared.active_conns.load(Ordering::SeqCst) >= cap {
+                    // At the cap: answer with one structured `overloaded`
+                    // envelope and close — never an invisible queue or a
+                    // hang. A short-lived thread does the write (under a
+                    // write timeout) so a stalled peer cannot wedge the
+                    // accept loop.
+                    shared.overloaded.fetch_add(1, Ordering::Relaxed);
+                    crate::telemetry::counter("serve_overloaded").inc();
+                    let _ = stream.set_write_timeout(Some(REFUSE_WRITE_TIMEOUT));
+                    let refuse_shared = Arc::clone(&shared);
+                    conns.push(std::thread::spawn(move || {
+                        conn::refuse_overloaded(stream, &refuse_shared);
+                    }));
+                } else {
+                    shared.connections.fetch_add(1, Ordering::Relaxed);
+                    shared.active_conns.fetch_add(1, Ordering::SeqCst);
+                    let _ = stream.set_write_timeout(Some(
+                        shared.opts.read_timeout.max(Duration::from_secs(1)),
+                    ));
+                    let conn_shared = Arc::clone(&shared);
+                    conns.push(std::thread::spawn(move || {
+                        conn::handle_conn(stream, &conn_shared);
+                        conn_shared.active_conns.fetch_sub(1, Ordering::SeqCst);
+                    }));
+                }
                 conns.retain(|h| !h.is_finished());
             }
             Ok(None) => std::thread::sleep(ACCEPT_TICK),
@@ -637,11 +837,18 @@ fn run_daemon(
     }
 
     // Drain: stop accepting, let every connection finish its in-flight
-    // request (responses flushed), then release the intake so the service
-    // leader runs down and reports.
+    // requests (responses flushed), then run down the planner services
+    // and release the intake so the service leader drains and reports.
     drop(listener);
     for h in conns {
         let _ = h.join();
+    }
+    // Connections are joined, so no new plan jobs can arrive; dropping
+    // the senders runs the planner threads down.
+    let planners = std::mem::take(&mut *shared.planners.lock().unwrap());
+    for (_, entry) in planners {
+        drop(entry.tx);
+        let _ = entry.thread.join();
     }
     *shared.submitter.lock().unwrap() = None;
     let mut service = stats_rx.recv().map_err(|_| "service router died".to_string())?;
@@ -656,14 +863,16 @@ fn run_daemon(
     let outcome = ServeOutcome {
         service,
         connections: shared.connections.load(Ordering::Relaxed),
+        overloaded: shared.overloaded.load(Ordering::Relaxed),
         requests: shared.requests.load(Ordering::Relaxed),
         errors: shared.errors.load(Ordering::Relaxed),
     };
     shared.log(&format!(
-        "drained: {} requests on {} connections ({} errors), {}",
+        "drained: {} requests on {} connections ({} errors, {} refused), {}",
         outcome.requests,
         outcome.connections,
         outcome.errors,
+        outcome.overloaded,
         outcome.service.drain.summary()
     ));
     Ok(outcome)

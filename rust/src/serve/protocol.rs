@@ -469,6 +469,14 @@ pub enum ErrorKind {
     Invalid,
     /// The daemon is draining: no new simulation work is accepted.
     ShuttingDown,
+    /// The daemon is at its connection cap (`--max-conns`); the client
+    /// should back off and retry. Appended variant: old clients that
+    /// don't know the name still see `ok:false` + `message`.
+    Overloaded,
+    /// The request's deadline (`deadline_ms`, or the daemon's
+    /// `--default-deadline-ms`) expired before a result was produced.
+    /// Appended variant, same compat story as `Overloaded`.
+    DeadlineExceeded,
 }
 
 impl ErrorKind {
@@ -479,6 +487,18 @@ impl ErrorKind {
             ErrorKind::Malformed => "malformed",
             ErrorKind::Invalid => "invalid",
             ErrorKind::ShuttingDown => "shutting_down",
+            ErrorKind::Overloaded => "overloaded",
+            ErrorKind::DeadlineExceeded => "deadline_exceeded",
+        }
+    }
+
+    /// Suffix used in the per-kind error-latency histogram
+    /// (`serve_error_<suffix>_us`). Same as [`ErrorKind::name`] except
+    /// `DeadlineExceeded`, which records `serve_error_deadline_us`.
+    pub fn metric_suffix(&self) -> &'static str {
+        match self {
+            ErrorKind::DeadlineExceeded => "deadline",
+            other => other.name(),
         }
     }
 
@@ -489,6 +509,8 @@ impl ErrorKind {
             "malformed" => ErrorKind::Malformed,
             "invalid" => ErrorKind::Invalid,
             "shutting_down" => ErrorKind::ShuttingDown,
+            "overloaded" => ErrorKind::Overloaded,
+            "deadline_exceeded" => ErrorKind::DeadlineExceeded,
             _ => return None,
         })
     }
@@ -596,6 +618,10 @@ pub enum ServeRequest {
         /// to the heuristic, so the answer is never worse than the plain
         /// request (DESIGN.md §16).
         use_plans: bool,
+        /// Per-request deadline in milliseconds (`deadline_ms`; optional).
+        /// Absent means the daemon default (`--default-deadline-ms`, or
+        /// none). Appended member: old frames without it still parse.
+        deadline_ms: Option<u64>,
     },
     /// Search the compilation-plan space for one GEMM.
     Plan {
@@ -610,6 +636,9 @@ pub enum ServeRequest {
         /// Search strategy (`strategy`: `exhaustive`/`beam` + `beam` width;
         /// default exhaustive).
         strategy: SearchStrategy,
+        /// Per-request deadline in milliseconds (`deadline_ms`; optional).
+        /// Same semantics as on `Simulate`.
+        deadline_ms: Option<u64>,
     },
     /// Render one figure/table over the warm session (`figure` field).
     Report {
@@ -679,7 +708,7 @@ pub fn encode_request(frame: &Frame) -> String {
         members.push(("id".into(), Json::UInt(id)));
     }
     match &frame.req {
-        ServeRequest::Simulate { shape, phase, memory, config, use_plans } => {
+        ServeRequest::Simulate { shape, phase, memory, config, use_plans, deadline_ms } => {
             shape_json(shape, &mut members);
             members.push(("phase".into(), Json::Str(phase.name().into())));
             members.push(("memory".into(), Json::Str(memory.name().into())));
@@ -688,8 +717,12 @@ pub fn encode_request(frame: &Frame) -> String {
             if *use_plans {
                 members.push(("use_plans".into(), Json::Bool(true)));
             }
+            // Same only-when-set rule: pre-deadline frames stay byte-identical.
+            if let Some(d) = deadline_ms {
+                members.push(("deadline_ms".into(), Json::UInt(*d)));
+            }
         }
-        ServeRequest::Plan { shape, phase, memory, config, strategy } => {
+        ServeRequest::Plan { shape, phase, memory, config, strategy, deadline_ms } => {
             shape_json(shape, &mut members);
             members.push(("phase".into(), Json::Str(phase.name().into())));
             members.push(("memory".into(), Json::Str(memory.name().into())));
@@ -702,6 +735,9 @@ pub fn encode_request(frame: &Frame) -> String {
                     members.push(("strategy".into(), Json::Str("beam".into())));
                     members.push(("beam".into(), Json::UInt(*w)));
                 }
+            }
+            if let Some(d) = deadline_ms {
+                members.push(("deadline_ms".into(), Json::UInt(*d)));
             }
         }
         ServeRequest::Report { figure } => {
@@ -788,6 +824,23 @@ fn parse_strategy_field(obj: &Json) -> Result<SearchStrategy, WireError> {
     }
 }
 
+/// Largest accepted `deadline_ms` (24 h): rejects absurd values while
+/// leaving every practical deadline representable.
+pub const MAX_DEADLINE_MS: u64 = 86_400_000;
+
+fn parse_deadline_field(obj: &Json) -> Result<Option<u64>, WireError> {
+    match obj.get("deadline_ms") {
+        None => Ok(None),
+        Some(v) => v
+            .as_u64()
+            .filter(|d| (1..=MAX_DEADLINE_MS).contains(d))
+            .map(Some)
+            .ok_or_else(|| {
+                WireError::invalid(format!("`deadline_ms` must be in 1..={MAX_DEADLINE_MS}"))
+            }),
+    }
+}
+
 /// Parse one request line. [`ErrorKind::Malformed`] for JSON syntax
 /// errors, [`ErrorKind::Invalid`] for schema violations; the caller turns
 /// either into an `ok:false` envelope on a still-healthy connection.
@@ -818,6 +871,7 @@ pub fn parse_request(line: &str) -> Result<Frame, WireError> {
                     .as_bool()
                     .ok_or_else(|| WireError::invalid("`use_plans` must be a boolean"))?,
             },
+            deadline_ms: parse_deadline_field(&v)?,
         },
         "plan" => ServeRequest::Plan {
             shape: parse_shape(&v)?,
@@ -825,6 +879,7 @@ pub fn parse_request(line: &str) -> Result<Frame, WireError> {
             memory: parse_memory_field(&v)?,
             config: parse_config_field(&v)?,
             strategy: parse_strategy_field(&v)?,
+            deadline_ms: parse_deadline_field(&v)?,
         },
         "report" => ServeRequest::Report {
             figure: v
@@ -1641,11 +1696,78 @@ mod tests {
 
     #[test]
     fn error_kind_names_round_trip() {
-        for k in
-            [ErrorKind::Oversized, ErrorKind::Malformed, ErrorKind::Invalid, ErrorKind::ShuttingDown]
-        {
+        for k in [
+            ErrorKind::Oversized,
+            ErrorKind::Malformed,
+            ErrorKind::Invalid,
+            ErrorKind::ShuttingDown,
+            ErrorKind::Overloaded,
+            ErrorKind::DeadlineExceeded,
+        ] {
             assert_eq!(ErrorKind::parse(k.name()), Some(k));
         }
         assert_eq!(ErrorKind::parse("nope"), None);
+        // The histogram suffix only diverges for DeadlineExceeded
+        // (serve_error_deadline_us, per the serve layer's metric names).
+        assert_eq!(ErrorKind::DeadlineExceeded.metric_suffix(), "deadline");
+        assert_eq!(ErrorKind::Overloaded.metric_suffix(), "overloaded");
+        assert_eq!(ErrorKind::Oversized.metric_suffix(), "oversized");
+    }
+
+    #[test]
+    fn overload_and_deadline_errors_round_trip_envelope() {
+        for (kind, msg) in [
+            (ErrorKind::Overloaded, "connection cap reached (2 active)"),
+            (ErrorKind::DeadlineExceeded, "deadline of 250ms expired"),
+        ] {
+            let env = Envelope {
+                id: Some(9),
+                body: Err(WireError::new(kind, msg)),
+                stats: EnvelopeStats::default(),
+                elapsed_us: 77,
+            };
+            let back = parse_envelope(&encode_envelope(&env)).unwrap();
+            assert_eq!(back, env);
+        }
+    }
+
+    #[test]
+    fn deadline_ms_parses_encodes_and_stays_optional() {
+        // Old frames without deadline_ms still parse, with None.
+        let f = parse_request(r#"{"type":"simulate","m":8,"n":8,"k":8,"config":"1G1C"}"#).unwrap();
+        match &f.req {
+            ServeRequest::Simulate { deadline_ms, .. } => assert_eq!(*deadline_ms, None),
+            other => panic!("{other:?}"),
+        }
+        // Absent deadline is absent on the wire (byte-identical re-encode
+        // rule for appended members).
+        assert!(!encode_request(&f).contains("deadline_ms"));
+
+        // Present deadline round-trips on both request kinds.
+        for line in [
+            r#"{"type":"simulate","m":8,"n":8,"k":8,"config":"1G1C","deadline_ms":250}"#,
+            r#"{"type":"plan","m":8,"n":8,"k":8,"config":"1G1C","deadline_ms":250}"#,
+        ] {
+            let f = parse_request(line).unwrap();
+            let d = match &f.req {
+                ServeRequest::Simulate { deadline_ms, .. } => *deadline_ms,
+                ServeRequest::Plan { deadline_ms, .. } => *deadline_ms,
+                other => panic!("{other:?}"),
+            };
+            assert_eq!(d, Some(250));
+            let f2 = parse_request(&encode_request(&f)).unwrap();
+            assert_eq!(f2, f);
+        }
+
+        // Out-of-range or ill-typed deadlines are Invalid, not accepted.
+        for bad in [
+            r#"{"type":"simulate","m":1,"n":1,"k":1,"config":"x","deadline_ms":0}"#,
+            r#"{"type":"simulate","m":1,"n":1,"k":1,"config":"x","deadline_ms":86400001}"#,
+            r#"{"type":"simulate","m":1,"n":1,"k":1,"config":"x","deadline_ms":"fast"}"#,
+            r#"{"type":"plan","m":1,"n":1,"k":1,"config":"x","deadline_ms":-5}"#,
+        ] {
+            let e = parse_request(bad).unwrap_err();
+            assert_eq!(e.kind, ErrorKind::Invalid, "{bad}");
+        }
     }
 }

@@ -55,8 +55,8 @@ use crate::compiler::{
 use crate::config::AcceleratorConfig;
 use crate::gemm::{GemmShape, Phase};
 use crate::sim::{
-    execute_group_spec, simulate_gemm_plan, simulate_gemm_shape, GemmFold, GemmSim, GroupSim,
-    SimOptions,
+    execute_group_spec, simulate_gemm_plan, simulate_gemm_plan_cancel, simulate_gemm_shape,
+    CancelToken, Cancelled, GemmFold, GemmSim, GroupSim, SimOptions,
 };
 use std::collections::{HashMap, VecDeque};
 use std::path::PathBuf;
@@ -643,6 +643,12 @@ impl SimSession {
     /// and fold ([`GemmFold`]). Bit-identical to [`simulate_gemm_plan`] by
     /// construction — both run the same `execute_group` + fold primitives
     /// in the same order (property-pinned by `tests/prop_session.rs`).
+    ///
+    /// The cancellation token is checked at the same group boundaries as
+    /// [`simulate_gemm_plan_cancel`](crate::sim::simulate_gemm_plan_cancel):
+    /// once before each partition group resolves. A cancelled composition
+    /// returns [`Err`] *before* any caching happens upstream, so partial
+    /// work is never persisted.
     fn compose_plan(
         &self,
         cfg: &AcceleratorConfig,
@@ -650,17 +656,21 @@ impl SimSession {
         phase: Phase,
         opts: &SimOptions,
         plan: &PlanParams,
-    ) -> GemmSim {
+        cancel: &CancelToken,
+    ) -> Result<GemmSim, Cancelled> {
         let (parts, k_parts) = partitions_with(cfg, shape, phase, &plan.partition);
         let k_partitioned = k_parts > 1;
         let geom_fp = GroupGeometry::of(cfg).fingerprint();
         let mut fold = GemmFold::new();
         for p in parts {
+            if cancel.is_cancelled() {
+                return Err(Cancelled);
+            }
             let g = self.simulate_group_keyed(geom_fp, cfg, p, k_partitioned, plan, opts);
             let dram = gbuf_blocking_with(cfg, p, phase, k_parts, &plan.blocking);
             fold.add(&g, &dram);
         }
-        fold.finish(cfg, opts)
+        Ok(fold.finish(cfg, opts))
     }
 
     /// Simulate one GEMM through the cache: returns the cached result on a
@@ -729,28 +739,51 @@ impl SimSession {
         opts: &SimOptions,
         plan: &PlanParams,
     ) -> Arc<GemmSim> {
+        self.simulate_plan_keyed_cancel(cfg_fp, cfg, shape, phase, opts, plan, &CancelToken::NONE)
+            .expect("NONE token never cancels")
+    }
+
+    /// [`Self::simulate_plan_keyed`] with cooperative cancellation
+    /// (DESIGN.md §18). Cache hits — memory or store — return [`Ok`] even
+    /// on a tripped token (the work is already paid for); a miss checks
+    /// the token at every group boundary of the composition and bails
+    /// with [`Err`]`(Cancelled)` **before** the insert/write-behind, so a
+    /// cancelled partial result is never cached in memory, never
+    /// persisted, and the next uncancelled request recomputes it cleanly.
+    #[allow(clippy::too_many_arguments)]
+    pub fn simulate_plan_keyed_cancel(
+        &self,
+        cfg_fp: u64,
+        cfg: &AcceleratorConfig,
+        shape: GemmShape,
+        phase: Phase,
+        opts: &SimOptions,
+        plan: &PlanParams,
+        cancel: &CancelToken,
+    ) -> Result<Arc<GemmSim>, Cancelled> {
         debug_assert_eq!(cfg_fp, cfg.fingerprint(), "stale config digest for {}", cfg.name);
         if !self.enabled {
             self.misses.fetch_add(1, Ordering::Relaxed);
-            return Arc::new(simulate_gemm_plan(cfg, shape, phase, opts, plan));
+            return Ok(Arc::new(simulate_gemm_plan_cancel(cfg, shape, phase, opts, plan, cancel)?));
         }
         let fp = Self::fingerprint_plan_keyed(cfg_fp, shape, phase, opts, plan);
         let shard = &self.shards[fp.0 as usize % SHARDS];
         let cached = shard.lock().unwrap().map.get(&fp.0).cloned();
         if let Some(hit) = cached {
             self.hits.fetch_add(1, Ordering::Relaxed);
-            return hit;
+            return Ok(hit);
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         // Second tier: read through the persistent store before paying for
         // a simulation. A disk hit is promoted into the memory map.
         if let Some(disk) = self.store.as_ref().and_then(|st| st.get(fp)) {
-            return self.insert_or_adopt(shard, fp.0, Arc::new(disk)).0;
+            return Ok(self.insert_or_adopt(shard, fp.0, Arc::new(disk)).0);
         }
         // Compose from the group tier, outside the lock (see the
         // type-level docs): each group partition resolves through its own
-        // memoized entry, so only the not-yet-seen groups execute.
-        let sim = Arc::new(self.compose_plan(cfg, shape, phase, opts, plan));
+        // memoized entry, so only the not-yet-seen groups execute. A
+        // cancelled composition propagates here, before any caching.
+        let sim = Arc::new(self.compose_plan(cfg, shape, phase, opts, plan, cancel)?);
         let (sim, inserted) = self.insert_or_adopt(shard, fp.0, sim);
         if inserted {
             // Write behind: only the in-memory insert winner persists the
@@ -759,7 +792,7 @@ impl SimSession {
                 st.put(fp, &sim);
             }
         }
-        sim
+        Ok(sim)
     }
 
     /// Insert `sim` under `fp` in the whole-GEMM tier, or adopt the

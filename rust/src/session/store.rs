@@ -534,6 +534,13 @@ impl SimStore {
     /// result.
     pub fn get(&self, fp: Fingerprint) -> Option<GemmSim> {
         let _span = crate::telemetry::span_with("store_read", "store", "sim");
+        // Failpoint: a forced miss is result-identical (the entry simply
+        // recomputes), which is what makes `store_read` safe to inject in
+        // the chaos soak without perturbing bit-identity assertions.
+        if crate::failpoint::should_fail("store_read") {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
         let found = std::fs::read(self.entry_path(fp))
             .ok()
             .and_then(|bytes| decode_gemm_sim(&bytes, self.version).ok());
@@ -555,6 +562,12 @@ impl SimStore {
     /// optimization, not a correctness requirement.
     pub fn put(&self, fp: Fingerprint, sim: &GemmSim) -> bool {
         let _span = crate::telemetry::span_with("store_write", "store", "sim");
+        // Failpoint: a forced write error counts like a real one, so it
+        // surfaces in `DrainReport::store_writes_failed`.
+        if crate::failpoint::should_fail("store_write") {
+            self.write_errors.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
         match self.write_atomic(&self.entry_path(fp), &encode_gemm_sim(sim, self.version)) {
             Ok(()) => {
                 self.writes.fetch_add(1, Ordering::Relaxed);
@@ -614,6 +627,10 @@ impl SimStore {
     /// version or strategy mismatch — is a clean miss.
     pub fn get_plan(&self, fp: Fingerprint, strategy: u8) -> Option<PlanRecord> {
         let _span = crate::telemetry::span_with("store_read", "store", "plan");
+        if crate::failpoint::should_fail("store_read") {
+            self.plan_misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
         let found = std::fs::read(self.plan_entry_path(fp, strategy))
             .ok()
             .and_then(|bytes| decode_plan_record(&bytes, PLAN_CODEC_VERSION).ok())
@@ -635,6 +652,10 @@ impl SimStore {
     /// Persist a plan record (atomic, best-effort; mirrors [`Self::put`]).
     pub fn put_plan(&self, fp: Fingerprint, r: &PlanRecord) -> bool {
         let _span = crate::telemetry::span_with("store_write", "store", "plan");
+        if crate::failpoint::should_fail("store_write") {
+            self.write_errors.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
         let path = self.plan_entry_path(fp, r.strategy);
         match self.write_atomic(&path, &encode_plan_record(r, PLAN_CODEC_VERSION)) {
             Ok(()) => {
@@ -671,6 +692,10 @@ impl SimStore {
     /// every failure mode is a clean miss.
     pub fn get_group(&self, fp: Fingerprint) -> Option<GroupSim> {
         let _span = crate::telemetry::span_with("store_read", "store", "group");
+        if crate::failpoint::should_fail("store_read") {
+            self.group_misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
         let found = std::fs::read(self.group_entry_path(fp))
             .ok()
             .and_then(|bytes| decode_group_sim(&bytes, self.version).ok());
@@ -690,6 +715,10 @@ impl SimStore {
     /// [`Self::put`]).
     pub fn put_group(&self, fp: Fingerprint, g: &GroupSim) -> bool {
         let _span = crate::telemetry::span_with("store_write", "store", "group");
+        if crate::failpoint::should_fail("store_write") {
+            self.write_errors.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
         let path = self.group_entry_path(fp);
         match self.write_atomic(&path, &encode_group_sim(g, self.version)) {
             Ok(()) => {

@@ -1,0 +1,124 @@
+//! Cooperative cancellation for long-running simulations.
+//!
+//! A [`CancelToken`] is a cheap, cloneable handle that a caller (the
+//! serve layer's deadline machinery, a test, an impatient driver) can
+//! trip while a simulation is in flight. The simulation side polls it
+//! at *group boundaries* only — between partition groups in the
+//! streaming path, and once before dispatch in the closed-form fast
+//! path — so a single enormous group still runs to completion
+//! (DESIGN.md §18 documents this granularity caveat). Polling at group
+//! boundaries keeps the hot instruction loops untouched, which is what
+//! keeps non-cancelled results bit-identical to the token-free paths.
+//!
+//! The default token ([`CancelToken::NONE`]) carries no state and its
+//! [`is_cancelled`](CancelToken::is_cancelled) check is a constant
+//! `false`, so every pre-existing call path pays one branch on a
+//! `None` discriminant and nothing else.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+#[derive(Debug)]
+struct Inner {
+    /// Manually tripped (disconnect, shutdown, test).
+    cancelled: AtomicBool,
+    /// Absolute wall-clock deadline, if the token carries one.
+    deadline: Option<Instant>,
+}
+
+/// A cloneable cancellation handle. All clones observe the same flag;
+/// the deadline (if any) is fixed at construction.
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken(Option<Arc<Inner>>);
+
+impl CancelToken {
+    /// The inert token: never cancelled, free to check. This is what
+    /// every legacy entry point passes.
+    pub const NONE: CancelToken = CancelToken(None);
+
+    /// A manual-only token: cancelled iff [`cancel`](Self::cancel) is
+    /// called on it (or a clone).
+    pub fn new() -> CancelToken {
+        CancelToken(Some(Arc::new(Inner {
+            cancelled: AtomicBool::new(false),
+            deadline: None,
+        })))
+    }
+
+    /// A token that additionally expires once `deadline` passes.
+    pub fn with_deadline(deadline: Instant) -> CancelToken {
+        CancelToken(Some(Arc::new(Inner {
+            cancelled: AtomicBool::new(false),
+            deadline: Some(deadline),
+        })))
+    }
+
+    /// Trip the token. Idempotent; a no-op on [`CancelToken::NONE`].
+    pub fn cancel(&self) {
+        if let Some(inner) = &self.0 {
+            inner.cancelled.store(true, Ordering::Release);
+        }
+    }
+
+    /// True once the token has been tripped or its deadline has passed.
+    /// Always false for [`CancelToken::NONE`].
+    pub fn is_cancelled(&self) -> bool {
+        match &self.0 {
+            None => false,
+            Some(inner) => {
+                inner.cancelled.load(Ordering::Acquire)
+                    || inner.deadline.is_some_and(|d| Instant::now() >= d)
+            }
+        }
+    }
+}
+
+/// The error a cancelled simulation returns. Carries no payload: the
+/// caller (who tripped the token or set the deadline) already knows why.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Cancelled;
+
+impl std::fmt::Display for Cancelled {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("simulation cancelled")
+    }
+}
+
+impl std::error::Error for Cancelled {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn none_never_cancels() {
+        let t = CancelToken::NONE;
+        assert!(!t.is_cancelled());
+        t.cancel(); // no-op, no panic
+        assert!(!t.is_cancelled());
+        assert!(!CancelToken::default().is_cancelled());
+    }
+
+    #[test]
+    fn manual_cancel_is_shared_across_clones() {
+        let t = CancelToken::new();
+        let c = t.clone();
+        assert!(!c.is_cancelled());
+        t.cancel();
+        assert!(c.is_cancelled());
+        assert!(t.is_cancelled());
+    }
+
+    #[test]
+    fn deadline_expiry_cancels() {
+        let past = Instant::now() - Duration::from_millis(1);
+        assert!(CancelToken::with_deadline(past).is_cancelled());
+        let far = Instant::now() + Duration::from_secs(3600);
+        let t = CancelToken::with_deadline(far);
+        assert!(!t.is_cancelled());
+        t.cancel(); // manual trip still works alongside a deadline
+        assert!(t.is_cancelled());
+    }
+}

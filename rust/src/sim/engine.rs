@@ -274,6 +274,28 @@ pub fn execute_group_spec(
     spec: &ModeSpec,
     opts: &SimOptions,
 ) -> GroupSim {
+    execute_group_spec_cancel(cfg, p, k_partitioned, spec, opts, &super::CancelToken::NONE)
+        .expect("NONE token never cancels")
+}
+
+/// [`execute_group_spec`] with cooperative cancellation: the token is
+/// checked once *before dispatch* — a group that starts executing runs
+/// to completion (the fast path is closed-form anyway, and the streaming
+/// executor's hot loops stay untouched to preserve bit-identity). With
+/// [`crate::sim::CancelToken::NONE`] this is exactly
+/// [`execute_group_spec`].
+pub fn execute_group_spec_cancel(
+    cfg: &AcceleratorConfig,
+    p: GemmShape,
+    k_partitioned: bool,
+    spec: &ModeSpec,
+    opts: &SimOptions,
+    cancel: &super::CancelToken,
+) -> Result<GroupSim, super::Cancelled> {
+    if cancel.is_cancelled() {
+        super::fastpath::count_cancelled();
+        return Err(super::Cancelled);
+    }
     // Span attribution mirrors the dispatch counters: `fast` covers the
     // closed-form path, `streaming` the per-instruction executor. Inert
     // (one relaxed load) unless `--trace-out` enabled tracing.
@@ -281,11 +303,11 @@ pub fn execute_group_spec(
     if let Some(g) = super::fastpath::execute_group_fast_spec(cfg, p, k_partitioned, spec, opts) {
         super::fastpath::count_fast();
         span.detail("fast");
-        return g;
+        return Ok(g);
     }
     super::fastpath::count_fallback();
     span.detail("streaming");
-    execute_group_streaming_spec(cfg, p, k_partitioned, spec, opts)
+    Ok(execute_group_streaming_spec(cfg, p, k_partitioned, spec, opts))
 }
 
 /// Execute one group partition's instruction stream (streamed straight out
@@ -405,6 +427,23 @@ pub fn simulate_gemm_plan(
     opts: &SimOptions,
     plan: &crate::compiler::PlanParams,
 ) -> GemmSim {
+    simulate_gemm_plan_cancel(cfg, shape, phase, opts, plan, &super::CancelToken::NONE)
+        .expect("NONE token never cancels")
+}
+
+/// [`simulate_gemm_plan`] with cooperative cancellation, checked at
+/// *group boundaries*: once before each partition group executes. A
+/// single enormous group still runs to completion (DESIGN.md §18's
+/// granularity caveat); the hot instruction loops never see the token,
+/// which is what keeps non-cancelled results bit-identical.
+pub fn simulate_gemm_plan_cancel(
+    cfg: &AcceleratorConfig,
+    shape: crate::gemm::GemmShape,
+    phase: crate::gemm::Phase,
+    opts: &SimOptions,
+    plan: &crate::compiler::PlanParams,
+    cancel: &super::CancelToken,
+) -> Result<GemmSim, super::Cancelled> {
     use crate::compiler::{gbuf_blocking_with, partitions_with};
     let (parts, k_parts) = partitions_with(cfg, shape, phase, &plan.partition);
     let k_partitioned = k_parts > 1;
@@ -419,7 +458,7 @@ pub fn simulate_gemm_plan(
         let g = match seen.iter().find(|(s, _)| *s == p) {
             Some((_, g)) => g.clone(),
             None => {
-                let g = execute_group_spec(cfg, p, k_partitioned, &spec, opts);
+                let g = execute_group_spec_cancel(cfg, p, k_partitioned, &spec, opts, cancel)?;
                 seen.push((p, g.clone()));
                 g
             }
@@ -427,7 +466,7 @@ pub fn simulate_gemm_plan(
         let dram = gbuf_blocking_with(cfg, p, phase, k_parts, &plan.blocking);
         fold.add(&g, &dram);
     }
-    fold.finish(cfg, opts)
+    Ok(fold.finish(cfg, opts))
 }
 
 fn finish_gemm(

@@ -106,12 +106,24 @@ pub fn snapshot() -> FastpathSnapshot {
     FastpathSnapshot { fast, fallback }
 }
 
+/// Registry handle for the CANCELLED dispatch counter
+/// (`fastpath_cancelled`): group executions skipped entirely because
+/// their [`crate::sim::CancelToken`] was already tripped at dispatch.
+fn cancelled_counter() -> &'static crate::telemetry::Counter {
+    static C: OnceLock<&'static crate::telemetry::Counter> = OnceLock::new();
+    C.get_or_init(|| crate::telemetry::counter("fastpath_cancelled"))
+}
+
 pub(crate) fn count_fast() {
     fast_counter().inc();
 }
 
 pub(crate) fn count_fallback() {
     fallback_counter().inc();
+}
+
+pub(crate) fn count_cancelled() {
+    cancelled_counter().inc();
 }
 
 /// `log₂ bw` when `bw` is a positive integral power of two, else `None`

@@ -21,14 +21,16 @@
 //! PE utilization here is the paper's metric: useful MACs over
 //! `total PEs × cycles`.
 
+mod cancel;
 mod engine;
 mod fastpath;
 mod iteration;
 
+pub use cancel::{CancelToken, Cancelled};
 pub use engine::{
-    execute_group, execute_group_spec, execute_group_streaming, execute_group_streaming_spec,
-    simulate_gemm, simulate_gemm_plan, simulate_gemm_shape, GemmFold, GemmSim, GroupExecutor,
-    GroupSim, Traffic,
+    execute_group, execute_group_spec, execute_group_spec_cancel, execute_group_streaming,
+    execute_group_streaming_spec, simulate_gemm, simulate_gemm_plan, simulate_gemm_plan_cancel,
+    simulate_gemm_shape, GemmFold, GemmSim, GroupExecutor, GroupSim, Traffic,
 };
 pub use fastpath::{
     counters as fastpath_counters, execute_group_fast, execute_group_fast_spec,

@@ -1,0 +1,509 @@
+//! Chaos soak for the overload-safe serve layer (ISSUE 10 tentpole).
+//!
+//! Runs only with `--features failpoints` (`cargo test --features
+//! failpoints --test chaos_soak`): integration tests compile the library
+//! without `cfg(test)`, so the failpoint registry is absent in the
+//! default build of this crate.
+//!
+//! The soak drives one small daemon (2 workers, connection cap 3) with a
+//! mix of well-behaved and hostile clients while `store_read`,
+//! `service_submit`, and `socket_write` faults are being injected, and
+//! asserts the ISSUE acceptance criteria: every client eventually gets a
+//! structured reply (no hangs, no panics), cancellation frees workers,
+//! admitted simulation results stay bit-identical to direct in-process
+//! runs, and shutdown drains clean.
+
+#![cfg(feature = "failpoints")]
+
+use flexsa::config::{parse_config, preset};
+use flexsa::failpoint;
+use flexsa::gemm::{GemmShape, Phase};
+use flexsa::proptest::scratch_dir;
+use flexsa::serve::protocol::{
+    encode_request, parse_envelope, ConfigRef, Envelope, ErrorKind, Frame, Memory, ServeRequest,
+    ServeResponse, SimResult,
+};
+use flexsa::serve::{self, ServeOptions};
+use flexsa::session::{SimSession, SimStore};
+use flexsa::sim::simulate_gemm_shape;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// The failpoint registry is process-global; the tests in this file must
+/// not interleave their schedules.
+static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn tcp_listener() -> (serve::Listener, SocketAddr) {
+    let l = serve::Listener::tcp("127.0.0.1:0").expect("bind");
+    let addr = match &l {
+        serve::Listener::Tcp { addr, .. } => *addr,
+        #[cfg(unix)]
+        _ => unreachable!(),
+    };
+    (l, addr)
+}
+
+/// A fault-tolerant protocol client: every method reports EOF / IO errors
+/// instead of panicking, because injected `socket_write` failures kill
+/// connections by design.
+struct Client {
+    w: TcpStream,
+    r: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Option<Client> {
+        let s = TcpStream::connect(addr).ok()?;
+        s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        let r = BufReader::new(s.try_clone().ok()?);
+        Some(Client { w: s, r })
+    }
+
+    fn send(&mut self, frame: &Frame) -> std::io::Result<()> {
+        self.w.write_all(encode_request(frame).as_bytes())?;
+        self.w.write_all(b"\n")?;
+        self.w.flush()
+    }
+
+    fn recv(&mut self) -> Option<Envelope> {
+        let mut line = String::new();
+        match self.r.read_line(&mut line) {
+            Ok(n) if n > 0 => Some(
+                parse_envelope(line.trim_end())
+                    .unwrap_or_else(|e| panic!("unparseable envelope {line:?}: {e:?}")),
+            ),
+            _ => None,
+        }
+    }
+
+    fn request(&mut self, frame: &Frame) -> Option<Envelope> {
+        self.send(frame).ok()?;
+        self.recv()
+    }
+}
+
+fn ping(id: u64) -> Frame {
+    Frame { id: Some(id), req: ServeRequest::Ping }
+}
+
+fn simulate(id: u64, shape: GemmShape, config: &str, deadline_ms: Option<u64>) -> Frame {
+    Frame {
+        id: Some(id),
+        req: ServeRequest::Simulate {
+            shape,
+            phase: Phase::Forward,
+            memory: Memory::Ideal,
+            config: ConfigRef::Preset(config.to_string()),
+            use_plans: false,
+            deadline_ms,
+        },
+    }
+}
+
+/// Non-power-of-two unit geometry: the closed-form fast path rejects it,
+/// so execution takes the streaming path whose group boundaries are where
+/// cooperative cancellation is observed (DESIGN.md §18).
+const SLOW_CONFIG: &str = "name = chaos-slow\nunit_rows = 96\nunit_cols = 96\n";
+
+/// The well-behaved clients' corpus (small, distinct, preset-backed so a
+/// direct daemon-free simulation can pin bit-identity).
+fn corpus() -> Vec<(GemmShape, &'static str)> {
+    vec![
+        (GemmShape::new(192, 96, 64), "1G1C"),
+        (GemmShape::new(128, 128, 128), "1G1F"),
+        (GemmShape::new(256, 64, 32), "4G1F"),
+        (GemmShape::new(96, 48, 80), "1G1C"),
+    ]
+}
+
+/// One well-behaved client: issues each corpus request until it gets its
+/// simulate result, retrying (with a fresh connection where needed) on
+/// overload refusals, injected submit refusals, and killed connections.
+/// Panics — failing the soak — if any request needs more than `MAX_TRIES`
+/// attempts: "every client eventually gets a structured reply".
+fn run_normal_client(addr: SocketAddr, tid: u64) -> (Vec<(usize, SimResult)>, u64) {
+    const MAX_TRIES: u32 = 200;
+    let corpus = corpus();
+    let mut results = Vec::new();
+    let mut refused = 0u64;
+    let mut conn: Option<Client> = None;
+    for round in 0..2 {
+        for (i, (shape, config)) in corpus.iter().enumerate() {
+            let id = tid * 1000 + round * 100 + i as u64;
+            let mut tries = 0u32;
+            loop {
+                tries += 1;
+                assert!(
+                    tries <= MAX_TRIES,
+                    "client {tid}: request {id} got no result after {MAX_TRIES} tries"
+                );
+                if conn.is_none() {
+                    match Client::connect(addr) {
+                        Some(c) => conn = Some(c),
+                        None => {
+                            std::thread::sleep(Duration::from_millis(20));
+                            continue;
+                        }
+                    }
+                }
+                let c = conn.as_mut().expect("connected above");
+                // A generous deadline: these requests are meant to finish.
+                let env = match c.request(&simulate(id, *shape, config, Some(30_000))) {
+                    Some(env) => env,
+                    None => {
+                        // EOF mid-request (refused at admission before our
+                        // frame was read, or an injected socket_write
+                        // killed the writer): reconnect and retry.
+                        conn = None;
+                        std::thread::sleep(Duration::from_millis(20));
+                        continue;
+                    }
+                };
+                match env.body {
+                    Ok(ServeResponse::Simulate(r)) => {
+                        assert_eq!(env.id, Some(id), "client {tid}: reply out of order");
+                        results.push((i, r));
+                        break;
+                    }
+                    Err(e) if e.kind == ErrorKind::Overloaded => {
+                        // Admission refusals close the connection after the
+                        // one envelope.
+                        refused += 1;
+                        conn = None;
+                        std::thread::sleep(Duration::from_millis(25));
+                    }
+                    Err(e) if e.kind == ErrorKind::ShuttingDown => {
+                        // The injected `service_submit` refusal maps here;
+                        // the connection itself stays usable.
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    other => panic!("client {tid}: unexpected reply {other:?}"),
+                }
+            }
+        }
+    }
+    (results, refused)
+}
+
+/// Hostile client: oversized frames chased by pings, tolerating killed
+/// connections and admission refusals. Returns how many structured
+/// `oversized` errors it saw.
+fn run_oversize_spammer(addr: SocketAddr) -> u64 {
+    let mut seen = 0u64;
+    for attempt in 0..40u64 {
+        if seen >= 2 {
+            break;
+        }
+        let Some(mut c) = Client::connect(addr) else {
+            std::thread::sleep(Duration::from_millis(25));
+            continue;
+        };
+        let big = "x".repeat(80 * 1024);
+        if c.w
+            .write_all(big.as_bytes())
+            .and_then(|()| c.w.write_all(b"\n"))
+            .and_then(|()| c.w.flush())
+            .is_err()
+        {
+            continue;
+        }
+        let _ = c.send(&ping(50_000 + attempt));
+        // Up to two replies: the oversize error, then the pong. EOF at any
+        // point (admission refusal, injected write failure) is fine — the
+        // soak only asserts structure, not delivery, for hostile traffic.
+        for _ in 0..2 {
+            match c.recv() {
+                Some(env) => {
+                    if matches!(&env.body, Err(e) if e.kind == ErrorKind::Oversized) {
+                        seen += 1;
+                    }
+                }
+                None => break,
+            }
+        }
+    }
+    seen
+}
+
+/// Hostile client: writes one valid frame a few bytes at a time, slower
+/// than the daemon's read timeout ticks but well inside its idle budget —
+/// the `skip_to_newline` fix means a slow-but-live client must NOT be
+/// disconnected mid-frame. Retries whole attempts because an injected
+/// `socket_write` (or an admission refusal) can kill any one of them.
+fn run_trickler(addr: SocketAddr) -> bool {
+    'attempt: for _ in 0..10 {
+        let Some(mut c) = Client::connect(addr) else {
+            std::thread::sleep(Duration::from_millis(30));
+            continue;
+        };
+        let line = format!("{}\n", encode_request(&ping(60_000)));
+        for chunk in line.as_bytes().chunks(8) {
+            if c.w.write_all(chunk).and_then(|()| c.w.flush()).is_err() {
+                continue 'attempt;
+            }
+            std::thread::sleep(Duration::from_millis(40));
+        }
+        if matches!(c.recv(), Some(env) if matches!(env.body, Ok(ServeResponse::Pong))) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Hostile client: submits work then vanishes without reading the reply.
+/// The daemon must settle the outstanding slot anyway (the writer resolves
+/// and discards it when the socket is gone).
+fn run_disconnector(addr: SocketAddr) {
+    for i in 0..5u64 {
+        if let Some(mut c) = Client::connect(addr) {
+            let _ = c.send(&simulate(70_000 + i, GemmShape::new(300, 60, 90), "1G1C", None));
+            // Drop without reading.
+        }
+        std::thread::sleep(Duration::from_millis(30));
+    }
+}
+
+/// Connect and prove admission with a ping round-trip, retrying while the
+/// daemon still counts recently-closed connections against the cap.
+fn connect_admitted(addr: SocketAddr, what: &str) -> Client {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        if let Some(mut c) = Client::connect(addr) {
+            if let Some(env) = c.request(&ping(999)) {
+                if matches!(env.body, Ok(ServeResponse::Pong)) {
+                    return c;
+                }
+            }
+        }
+        assert!(Instant::now() < deadline, "{what}: could not get admitted");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// Poll `stats` until `outstanding == 0` (cancellation and disconnects
+/// must free every worker slot) — panics after `timeout`.
+fn await_drained_outstanding(c: &mut Client, timeout: Duration) {
+    let deadline = Instant::now() + timeout;
+    loop {
+        let env = c
+            .request(&Frame { id: None, req: ServeRequest::Stats })
+            .expect("stats reply after the burst");
+        if let Ok(ServeResponse::Stats { outstanding, .. }) = env.body {
+            if outstanding == 0 {
+                return;
+            }
+        }
+        assert!(Instant::now() < deadline, "outstanding never drained to 0");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// The chaos soak itself: deterministic overload probe, deadline-buster,
+/// then the mixed-client burst under injected faults.
+#[test]
+fn chaos_soak_daemon_stays_responsive_under_faults_and_overload() {
+    let _guard = lock();
+    failpoint::clear_all();
+    let dir = scratch_dir("chaos-soak");
+    let store = SimStore::open(&dir).expect("open store");
+    let session = Arc::new(SimSession::with_store(store));
+    let (listener, addr) = tcp_listener();
+    let opts = ServeOptions {
+        workers: 2,
+        read_timeout: Duration::from_secs(5),
+        max_frame: flexsa::serve::protocol::DEFAULT_MAX_FRAME,
+        max_conns: 3,
+        default_deadline: Some(Duration::from_secs(20)),
+        quiet: true,
+        handle_signals: false,
+        flush_throttle: None,
+    };
+    let handle = serve::spawn(listener, Arc::clone(&session), opts);
+
+    // --- Phase 1: deterministic admission-control probe (no faults). ---
+    // Fill the cap with three live connections (the ping round-trip
+    // proves each was admitted, not merely queued in the accept backlog)…
+    let mut held: Vec<Client> = Vec::new();
+    for i in 0..3u64 {
+        let mut c = Client::connect(addr).expect("connect under cap");
+        let env = c.request(&ping(i)).expect("held connection answers");
+        assert!(matches!(env.body, Ok(ServeResponse::Pong)), "{env:?}");
+        held.push(c);
+    }
+    // …then the fourth connection must receive exactly one structured
+    // `overloaded` envelope — never a silent hang — followed by EOF.
+    let probe = TcpStream::connect(addr).expect("probe connect");
+    probe.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut pr = BufReader::new(probe);
+    let mut line = String::new();
+    assert!(pr.read_line(&mut line).expect("refusal envelope") > 0, "no refusal envelope");
+    let env = parse_envelope(line.trim_end()).expect("refusal parses");
+    match &env.body {
+        Err(e) => {
+            assert_eq!(e.kind, ErrorKind::Overloaded, "{env:?}");
+            assert!(e.message.contains("retry"), "refusal should tell clients to back off");
+        }
+        other => panic!("expected overloaded refusal, got {other:?}"),
+    }
+    line.clear();
+    assert_eq!(pr.read_line(&mut line).unwrap_or(0), 0, "refused conn must be closed");
+    drop(held);
+
+    // --- Phase 2: deadline-buster (no faults). ---
+    // A large GEMM on the streaming-only config with a 1ms deadline: the
+    // reply must be `deadline_exceeded`, and the worker must come back
+    // long before the full simulation could have finished.
+    let mut c = connect_admitted(addr, "deadline-buster");
+    let env = c
+        .request(&Frame {
+            id: Some(400),
+            req: ServeRequest::Simulate {
+                shape: GemmShape::new(2048, 2048, 512),
+                phase: Phase::Forward,
+                memory: Memory::Hbm2,
+                config: ConfigRef::Inline(SLOW_CONFIG.to_string()),
+                use_plans: false,
+                deadline_ms: Some(1),
+            },
+        })
+        .expect("deadline reply");
+    match &env.body {
+        Err(e) => assert_eq!(e.kind, ErrorKind::DeadlineExceeded, "{env:?}"),
+        other => panic!("expected deadline_exceeded, got {other:?}"),
+    }
+    // Cancellation freed the worker: a small request on the same
+    // connection completes normally.
+    let env = c.request(&simulate(401, GemmShape::new(64, 32, 16), "1G1C", None)).expect("follow-up");
+    assert!(matches!(env.body, Ok(ServeResponse::Simulate(_))), "{env:?}");
+    drop(c);
+
+    // --- Phase 3: mixed-client burst under injected faults. ---
+    // store_read: every 3rd persistent-store probe misses (recompute is
+    // result-identical); service_submit: the next 2 intakes are refused
+    // with a structured error; socket_write: every 9th reply write fails,
+    // killing that connection.
+    failpoint::configure("store_read", "every:3").unwrap();
+    failpoint::configure("service_submit", "err:2").unwrap();
+    failpoint::configure("socket_write", "every:9").unwrap();
+
+    let normals: Vec<_> =
+        (0..2u64).map(|t| std::thread::spawn(move || run_normal_client(addr, t))).collect();
+    let spammer = std::thread::spawn(move || run_oversize_spammer(addr));
+    let trickler = std::thread::spawn(move || run_trickler(addr));
+    let disconnector = std::thread::spawn(move || run_disconnector(addr));
+
+    let mut all_results: Vec<(usize, SimResult)> = Vec::new();
+    for h in normals {
+        let (results, _refused) = h.join().expect("normal client panicked");
+        assert_eq!(results.len(), 2 * corpus().len(), "normal client lost replies");
+        all_results.extend(results);
+    }
+    let oversized_seen = spammer.join().expect("spammer panicked");
+    assert!(oversized_seen > 0, "no oversized frame was answered with a structured error");
+    assert!(trickler.join().expect("trickler panicked"), "slow-but-live client was dropped");
+    disconnector.join().expect("disconnector panicked");
+    failpoint::clear_all();
+
+    // --- Phase 4: post-burst health, bit-identity, clean drain. ---
+    let mut c = connect_admitted(addr, "post-burst probe");
+    let env = c.request(&ping(9000)).expect("daemon still answers after the burst");
+    assert!(matches!(env.body, Ok(ServeResponse::Pong)), "{env:?}");
+    await_drained_outstanding(&mut c, Duration::from_secs(30));
+
+    // Non-cancelled results are bit-identical to direct daemon-free
+    // simulations, injected store misses notwithstanding.
+    for (i, (shape, config)) in corpus().iter().enumerate() {
+        let cfg = preset(config).unwrap();
+        let direct =
+            SimResult::from_sim(&simulate_gemm_shape(&cfg, *shape, Phase::Forward, &Memory::Ideal.options()));
+        for (j, got) in all_results.iter().filter(|(k, _)| *k == i).map(|(_, r)| r).enumerate() {
+            assert_eq!(
+                got.cycles.to_bits(),
+                direct.cycles.to_bits(),
+                "corpus {i} reply {j}: cycles drifted under fault injection"
+            );
+            assert_eq!(got, &direct, "corpus {i} reply {j}: result drifted");
+        }
+    }
+
+    // Injected faults actually fired.
+    assert!(failpoint::hits("store_read") > 0, "store_read never fired");
+    assert_eq!(failpoint::hits("service_submit"), 2, "service_submit must fire exactly err:2");
+    assert!(failpoint::hits("socket_write") > 0, "socket_write never fired");
+
+    let env = c.request(&Frame { id: None, req: ServeRequest::Shutdown }).expect("shutdown ack");
+    assert!(matches!(env.body, Ok(ServeResponse::ShutdownAck { .. })), "{env:?}");
+    let outcome = handle.join().expect("daemon exited cleanly");
+    assert!(outcome.overloaded >= 1, "the admission probe was refused: {outcome:?}");
+    assert!(outcome.errors > 0, "the burst produced structured error replies");
+    assert!(
+        outcome.requests >= 16,
+        "16 successful normal-client replies at minimum, got {}",
+        outcome.requests
+    );
+    // No store_write faults were injected here, so the drain must be
+    // clean: the store holds every write-behind record it should.
+    assert!(outcome.service.drain.is_clean(), "{}", outcome.service.drain.summary());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `store_write` faults must be *reported*, not swallowed: the drain
+/// report's `store_writes_failed` carries the injected count and
+/// `is_clean()` turns false, which `flexsa serve` escalates to a nonzero
+/// exit.
+#[test]
+fn store_write_faults_surface_in_drain_report() {
+    let _guard = lock();
+    failpoint::clear_all();
+    let dir = scratch_dir("chaos-store-write");
+    let store = SimStore::open(&dir).expect("open store");
+    let session = Arc::new(SimSession::with_store(store));
+    let (listener, addr) = tcp_listener();
+    let opts = ServeOptions {
+        workers: 2,
+        read_timeout: Duration::from_secs(30),
+        max_frame: flexsa::serve::protocol::DEFAULT_MAX_FRAME,
+        max_conns: 4,
+        default_deadline: None,
+        quiet: true,
+        handle_signals: false,
+        flush_throttle: None,
+    };
+    let handle = serve::spawn(listener, Arc::clone(&session), opts);
+    failpoint::configure("store_write", "err:2").unwrap();
+
+    let mut c = Client::connect(addr).expect("connect");
+    for i in 0..3u64 {
+        let shape = GemmShape::new(100 + i as usize, 40, 60);
+        let env = c.request(&simulate(i, shape, "1G1C", None)).expect("reply");
+        assert!(matches!(env.body, Ok(ServeResponse::Simulate(_))), "{env:?}");
+    }
+    let env = c.request(&Frame { id: None, req: ServeRequest::Shutdown }).expect("shutdown ack");
+    assert!(matches!(env.body, Ok(ServeResponse::ShutdownAck { .. })), "{env:?}");
+    let outcome = handle.join().expect("daemon exited");
+    failpoint::clear_all();
+
+    let drain = outcome.service.drain;
+    assert_eq!(drain.store_writes_failed, 2, "exactly the injected err:2 failures: {drain:?}");
+    assert!(!drain.is_clean(), "a lossy drain must not read as clean");
+    assert!(drain.summary().contains("2 failed"), "{}", drain.summary());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Sanity for the harness itself: parse the soak's inline config the same
+/// way the daemon does, and pin that its geometry rejects the closed-form
+/// fast path's power-of-two requirement (otherwise the deadline-buster
+/// would race a near-instant simulation).
+#[test]
+fn slow_config_is_streaming_only() {
+    let cfg = parse_config(SLOW_CONFIG).expect("inline config parses");
+    assert_eq!(cfg.unit.rows, 96);
+    assert_eq!(cfg.unit.cols, 96);
+    assert!(!cfg.unit.cols.is_power_of_two());
+}

@@ -9,7 +9,7 @@ use flexsa::proptest::{forall, Config};
 use flexsa::serve::protocol::{
     encode_envelope, encode_request, parse_envelope, parse_request, ConfigRef, Envelope,
     EnvelopeStats, ErrorKind, Frame, LatencyRow, Memory, PlanResult, SearchStrategy,
-    ServeRequest, ServeResponse, SimResult, StatsBlock, WireError, MAX_DIM,
+    ServeRequest, ServeResponse, SimResult, StatsBlock, WireError, MAX_DEADLINE_MS, MAX_DIM,
 };
 use flexsa::serve::{self, ServeOptions};
 use flexsa::session::SimSession;
@@ -78,6 +78,17 @@ fn gen_strategy(rng: &mut Lcg64) -> SearchStrategy {
     }
 }
 
+/// Optional per-request deadline. The schema accepts 1..=[`MAX_DEADLINE_MS`];
+/// stay in-range so the round trip is lossless, but hit both extremes.
+fn gen_deadline(rng: &mut Lcg64) -> Option<u64> {
+    match rng.next_below(4) {
+        0 => None,
+        1 => Some(1),
+        2 => Some(MAX_DEADLINE_MS),
+        _ => Some(1 + rng.next_below(MAX_DEADLINE_MS)),
+    }
+}
+
 fn gen_frame(rng: &mut Lcg64) -> Frame {
     let id = if rng.next_below(2) == 0 { Some(rng.next_u64()) } else { None };
     let req = match rng.next_below(7) {
@@ -87,6 +98,7 @@ fn gen_frame(rng: &mut Lcg64) -> Frame {
             memory: gen_memory(rng),
             config: gen_config(rng),
             use_plans: rng.next_below(2) == 0,
+            deadline_ms: gen_deadline(rng),
         },
         1 => ServeRequest::Plan {
             shape: gen_shape(rng),
@@ -94,6 +106,7 @@ fn gen_frame(rng: &mut Lcg64) -> Frame {
             memory: gen_memory(rng),
             config: gen_config(rng),
             strategy: gen_strategy(rng),
+            deadline_ms: gen_deadline(rng),
         },
         2 => ServeRequest::Report { figure: gen_string(rng) },
         3 => ServeRequest::Stats,
@@ -174,11 +187,14 @@ fn gen_latency_rows(rng: &mut Lcg64) -> Vec<LatencyRow> {
 }
 
 fn gen_error_kind(rng: &mut Lcg64) -> ErrorKind {
-    match rng.next_below(4) {
+    match rng.next_below(6) {
         0 => ErrorKind::Oversized,
         1 => ErrorKind::Malformed,
         2 => ErrorKind::Invalid,
-        _ => ErrorKind::ShuttingDown,
+        3 => ErrorKind::ShuttingDown,
+        // The ISSUE 10 appended variants round-trip the strict codec too.
+        4 => ErrorKind::Overloaded,
+        _ => ErrorKind::DeadlineExceeded,
     }
 }
 
@@ -320,6 +336,10 @@ fn base_lines() -> Vec<String> {
                 memory: Memory::Ideal,
                 config: ConfigRef::Preset("1G1C".into()),
                 use_plans: false,
+                // Present in the corpus so the byte mutator exercises the
+                // new field; generous enough that the un-mutated line never
+                // actually expires.
+                deadline_ms: Some(60_000),
             },
         }),
         encode_request(&Frame {
@@ -330,6 +350,7 @@ fn base_lines() -> Vec<String> {
                 memory: Memory::Ideal,
                 config: ConfigRef::Preset("1G1C".into()),
                 strategy: SearchStrategy::Beam(2),
+                deadline_ms: None,
             },
         }),
         encode_request(&Frame { id: Some(1), req: ServeRequest::Stats }),
@@ -408,6 +429,8 @@ fn fuzz_daemon_survives_malformed_truncated_oversized_frames() {
         workers: 2,
         read_timeout: Duration::from_secs(120),
         max_frame: FUZZ_MAX_FRAME,
+        max_conns: 8,
+        default_deadline: None,
         quiet: true,
         handle_signals: false,
         flush_throttle: None,
@@ -451,10 +474,16 @@ fn fuzz_daemon_survives_malformed_truncated_oversized_frames() {
                 Ok(_) => {} // the mutation happened to stay a valid request
                 Err(e) => {
                     error_replies += 1;
+                    // DeadlineExceeded is reachable: mutating the corpus's
+                    // `deadline_ms` digits can yield a tiny-but-valid
+                    // deadline that expires before the simulation lands.
                     assert!(
                         matches!(
                             e.kind,
-                            ErrorKind::Malformed | ErrorKind::Invalid | ErrorKind::Oversized
+                            ErrorKind::Malformed
+                                | ErrorKind::Invalid
+                                | ErrorKind::Oversized
+                                | ErrorKind::DeadlineExceeded
                         ),
                         "case {case}: unexpected error kind {:?}",
                         e.kind

@@ -9,8 +9,8 @@ use flexsa::gemm::{GemmShape, Phase};
 use flexsa::planner::{Planner, Strategy};
 use flexsa::proptest::scratch_dir;
 use flexsa::serve::protocol::{
-    encode_request, parse_envelope, ConfigRef, Envelope, Frame, Memory, SearchStrategy,
-    ServeRequest, ServeResponse, SimResult,
+    encode_request, parse_envelope, ConfigRef, Envelope, ErrorKind, Frame, Memory,
+    SearchStrategy, ServeRequest, ServeResponse, SimResult,
 };
 use flexsa::serve::{self, ServeOptions};
 use flexsa::session::{SimSession, SimStore};
@@ -35,6 +35,9 @@ fn opts(workers: usize) -> ServeOptions {
         workers,
         read_timeout: Duration::from_secs(120),
         max_frame: flexsa::serve::protocol::DEFAULT_MAX_FRAME,
+        // High enough that the 8-client concurrency test is never refused.
+        max_conns: 64,
+        default_deadline: None,
         quiet: true,
         handle_signals: false,
         flush_throttle: None,
@@ -88,6 +91,7 @@ fn simulate_frame(id: u64, key: &(GemmShape, Phase, Memory, &str)) -> Frame {
             memory: key.2,
             config: ConfigRef::Preset(key.3.to_string()),
             use_plans: false,
+            deadline_ms: None,
         },
     }
 }
@@ -147,6 +151,7 @@ fn eight_clients_get_bit_identical_results_and_warm_repeats() {
                                     memory: plan_key.2,
                                     config: ConfigRef::Preset(plan_key.3.to_string()),
                                     strategy: SearchStrategy::Beam(2),
+                                    deadline_ms: None,
                                 },
                             });
                             match env.body {
@@ -331,6 +336,142 @@ fn shutdown_drains_in_flight_responses_and_store_writes() {
     let disk = reopened.disk_stats();
     assert!(disk.sim_entries >= shapes, "store should hold the drained sims, got {disk:?}");
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// ISSUE 10 pipelining: one connection writes a whole burst of requests
+/// before reading any reply; the daemon answers all of them, strictly in
+/// request order, each bit-identical to a direct simulation.
+#[test]
+fn pipelined_requests_answer_in_request_order() {
+    let (listener, addr) = tcp_listener();
+    let handle = serve::spawn(listener, SimSession::shared(), opts(2));
+    let mut c = Client::connect(addr);
+    let keys = keys();
+    let mut expected = Vec::new();
+    for round in 0..2u64 {
+        for (i, key) in keys.iter().enumerate() {
+            let id = round * 100 + i as u64;
+            c.w.write_all(encode_request(&simulate_frame(id, key)).as_bytes()).unwrap();
+            c.w.write_all(b"\n").unwrap();
+            expected.push((id, *key));
+        }
+    }
+    c.w.flush().unwrap();
+    for (id, key) in expected {
+        let mut line = String::new();
+        assert!(c.r.read_line(&mut line).unwrap() > 0, "connection closed mid-pipeline");
+        let env = parse_envelope(line.trim_end()).unwrap();
+        assert_eq!(env.id, Some(id), "replies must arrive in request order");
+        let cfg = preset(key.3).unwrap();
+        let direct =
+            SimResult::from_sim(&simulate_gemm_shape(&cfg, key.0, key.1, &key.2.options()));
+        assert_sim_bits(expect_sim(&env), &direct, &format!("pipelined id {id}"));
+    }
+    let env = c.request(&Frame { id: None, req: ServeRequest::Shutdown });
+    assert!(matches!(env.body, Ok(ServeResponse::ShutdownAck { .. })));
+    handle.join().expect("clean exit");
+}
+
+/// ISSUE 10 admission control: past `max_conns` a new connection receives
+/// exactly one structured `overloaded` envelope (never a silent hang or
+/// bare reset) and is closed; once the held connection leaves, admission
+/// recovers.
+#[test]
+fn connection_cap_refuses_with_structured_envelope_then_recovers() {
+    let (listener, addr) = tcp_listener();
+    let mut o = opts(1);
+    o.max_conns = 1;
+    let handle = serve::spawn(listener, SimSession::shared(), o);
+
+    let mut first = Client::connect(addr);
+    let env = first.request(&Frame { id: Some(1), req: ServeRequest::Ping });
+    assert!(matches!(env.body, Ok(ServeResponse::Pong)));
+
+    let probe = TcpStream::connect(addr).expect("connect");
+    probe.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut r = BufReader::new(probe);
+    let mut line = String::new();
+    assert!(r.read_line(&mut line).unwrap() > 0, "no refusal envelope");
+    let env = parse_envelope(line.trim_end()).unwrap();
+    match &env.body {
+        Err(e) => assert_eq!(e.kind, ErrorKind::Overloaded, "{env:?}"),
+        other => panic!("expected overloaded, got {other:?}"),
+    }
+    assert_eq!(env.id, None, "refusals are unsolicited; there is no request id to echo");
+    line.clear();
+    assert_eq!(r.read_line(&mut line).unwrap_or(0), 0, "refused connection must close");
+
+    drop(first);
+    // The accept loop decrements the live count when the handler exits;
+    // poll until a fresh connection is admitted again, then shut down
+    // through it.
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        let s = TcpStream::connect(addr).expect("connect");
+        s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let mut w = s.try_clone().unwrap();
+        let mut r = BufReader::new(s);
+        w.write_all(encode_request(&Frame { id: Some(2), req: ServeRequest::Ping }).as_bytes())
+            .unwrap();
+        w.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        if r.read_line(&mut line).unwrap_or(0) > 0 {
+            let env = parse_envelope(line.trim_end()).unwrap();
+            if matches!(env.body, Ok(ServeResponse::Pong)) {
+                w.write_all(
+                    encode_request(&Frame { id: None, req: ServeRequest::Shutdown }).as_bytes(),
+                )
+                .unwrap();
+                w.write_all(b"\n").unwrap();
+                line.clear();
+                assert!(r.read_line(&mut line).unwrap() > 0, "no shutdown ack");
+                break;
+            }
+        }
+        assert!(Instant::now() < deadline, "admission never recovered after the cap freed up");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let outcome = handle.join().expect("clean exit");
+    assert!(outcome.overloaded >= 1, "{outcome:?}");
+}
+
+/// ISSUE 10 deadlines: an expired `deadline_ms` yields a structured
+/// `deadline_exceeded` envelope via cooperative cancellation, and — with a
+/// single worker — the cancelled simulation demonstrably frees that
+/// worker for the next request.
+#[test]
+fn expired_deadline_returns_structured_error_and_frees_the_worker() {
+    let (listener, addr) = tcp_listener();
+    let handle = serve::spawn(listener, SimSession::shared(), opts(1));
+    let mut c = Client::connect(addr);
+    // Non-power-of-two geometry rejects the closed-form fast path, so the
+    // streaming executor runs and observes the cancel at group boundaries
+    // (DESIGN.md §18 granularity).
+    let slow = "name = slow\nunit_rows = 96\nunit_cols = 96\n";
+    let env = c.request(&Frame {
+        id: Some(7),
+        req: ServeRequest::Simulate {
+            shape: GemmShape::new(2048, 2048, 512),
+            phase: Phase::Forward,
+            memory: Memory::Hbm2,
+            config: ConfigRef::Inline(slow.into()),
+            use_plans: false,
+            deadline_ms: Some(1),
+        },
+    });
+    match &env.body {
+        Err(e) => assert_eq!(e.kind, ErrorKind::DeadlineExceeded, "{env:?}"),
+        other => panic!("expected deadline_exceeded, got {other:?}"),
+    }
+    assert_eq!(env.id, Some(7), "error envelopes still echo the request id");
+    // workers == 1: if cancellation leaked the worker, this would hang
+    // (and the harness timeout would flag it); instead it completes.
+    let key = (GemmShape::new(64, 32, 16), Phase::Forward, Memory::Ideal, "1G1C");
+    let env = c.request(&simulate_frame(8, &key));
+    expect_sim(&env);
+    let env = c.request(&Frame { id: None, req: ServeRequest::Shutdown });
+    assert!(matches!(env.body, Ok(ServeResponse::ShutdownAck { .. })));
+    handle.join().expect("clean exit");
 }
 
 /// Unix-socket coverage: the daemon binds, answers, and unlinks its socket
